@@ -1,0 +1,188 @@
+//! END-TO-END DRIVER (DESIGN.md §Experiment-index): serve a ~100M-parameter
+//! skipless GQA transformer through the full stack — BPE tokenizer →
+//! request queue → continuous-batching coordinator → batched engine →
+//! paged KV cache → sampler — once with vanilla weights and once with the
+//! paper's Q/P-merged weights, on identical request streams.
+//!
+//! Reports per-variant throughput (tokens/s), TTFT and per-token latency,
+//! verifies the merged engine emits *identical text*, and prints the
+//! measured vanilla/merged speedup next to the paper's bandwidth-model
+//! prediction for this model. Optionally also boots the PJRT engine from
+//! `artifacts/e2e-100m/` to prove the AOT path composes (pass --pjrt).
+//!
+//! Run: `cargo run --release --example serving_e2e [-- --pjrt]`
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use skipless::bandwidth::{predicted_speedup, Hardware, F32_BYTES};
+use skipless::config::{ModelConfig, Variant};
+use skipless::coordinator::{Coordinator, CpuEngine, Request, SchedulerCfg};
+use skipless::model::ModelWeights;
+use skipless::runtime::PjrtEngine;
+use skipless::surgery::{transform, Options};
+use skipless::tokenizer::Bpe;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+const CORPUS: &str = "the quick brown fox jumps over the lazy dog. \
+    a transformer block without skip connections composes attention and \
+    feed forward maps directly. removing the query and projection weights \
+    keeps the function identical while streaming fewer bytes per token. \
+    the key and value projections are all you need for grouped query \
+    attention. memory bandwidth bounds batch one decoding on every \
+    accelerator we measured. the quick brown fox returns.";
+
+struct RunReport {
+    label: String,
+    tokens_out: Vec<Vec<u32>>,
+    wall: std::time::Duration,
+    decoded: u64,
+    ttft_p50_us: f64,
+    tpot_p50_us: f64,
+}
+
+fn drive(coordinator: &Coordinator, label: &str, prompts: &[Vec<u32>], max_new: usize) -> RunReport {
+    // warm-up (compile caches, page in weights) — excluded from timing
+    let _ = coordinator.generate(Request::greedy(u64::MAX, prompts[0].clone(), 2));
+    let t0 = Instant::now();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| coordinator.submit(Request::greedy(i as u64, p.clone(), max_new)))
+        .collect();
+    let mut tokens_out: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+    for rx in rxs {
+        let resp = rx.recv().expect("coordinator alive");
+        if (resp.id as usize) < tokens_out.len() {
+            tokens_out[resp.id as usize] = resp.tokens;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coordinator.metrics();
+    RunReport {
+        label: label.to_string(),
+        tokens_out,
+        wall,
+        decoded: m.tokens_decoded.load(Ordering::Relaxed),
+        ttft_p50_us: m.ttft.quantile(0.5).as_micros() as f64,
+        tpot_p50_us: m.tpot.quantile(0.5).as_micros() as f64,
+    }
+}
+
+fn print_report(r: &RunReport, total_tokens: usize) {
+    println!(
+        "  {:<16} wall {:>8.2?}  throughput {:>8.1} tok/s  ttft p50 {:>8.1}ms  tpot p50 {:>7.2}ms",
+        r.label,
+        r.wall,
+        total_tokens as f64 / r.wall.as_secs_f64(),
+        r.ttft_p50_us / 1e3,
+        r.tpot_p50_us / 1e3,
+    );
+}
+
+fn main() {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let cfg = ModelConfig::e2e_100m();
+    println!("== serving_e2e: {} ==", cfg.name);
+
+    // --- tokenizer: train a byte-BPE on the corpus up to the model vocab
+    let bpe = Bpe::train(CORPUS, (cfg.vocab_size).min(4096));
+    println!(
+        "tokenizer: byte-BPE, {} merges, vocab {}",
+        bpe.n_merges(),
+        bpe.vocab_size()
+    );
+
+    // --- request stream: natural-language prompts, batch-style workload
+    let raw_prompts = [
+        "the quick brown fox",
+        "a transformer block without",
+        "removing the query and projection",
+        "memory bandwidth bounds",
+        "the key and value projections",
+        "attention and feed forward",
+        "streaming fewer bytes per",
+        "grouped query attention",
+    ];
+    let max_new = 24;
+    let prompts: Vec<Vec<u32>> = raw_prompts.iter().map(|p| bpe.encode(p)).collect();
+    let total_tokens = prompts.len() * max_new;
+    println!("workload: {} requests × {} new tokens", prompts.len(), max_new);
+
+    // --- weights: vanilla + Table-1 merged (same function, fewer weights)
+    println!("\ninitializing + surgery...");
+    let vanilla = ModelWeights::init_vanilla(&cfg, 99);
+    let merged = transform(&vanilla, Variant::MergedQP, Options { skip_audit: true, ..Default::default() }).unwrap();
+    println!(
+        "  vanilla {:.1} MiB → merged {:.1} MiB (−{:.1}%)",
+        vanilla.stored_bytes() as f64 / (1 << 20) as f64,
+        merged.stored_bytes() as f64 / (1 << 20) as f64,
+        100.0 * (vanilla.stored_bytes() - merged.stored_bytes()) as f64
+            / vanilla.stored_bytes() as f64
+    );
+
+    // --- serve with the CPU engine, both variants, identical streams
+    println!("\n== CPU engine (batched decode, paged KV cache) ==");
+    let c_v = Coordinator::spawn(
+        CpuEngine::new(vanilla.clone(), 16, 512 << 20),
+        SchedulerCfg::default(),
+    );
+    let rep_v = drive(&c_v, "cpu/vanilla", &prompts, max_new);
+    c_v.shutdown();
+    let c_m = Coordinator::spawn(
+        CpuEngine::new(merged.clone(), 16, 512 << 20),
+        SchedulerCfg::default(),
+    );
+    let rep_m = drive(&c_m, "cpu/merged_qp", &prompts, max_new);
+    c_m.shutdown();
+    print_report(&rep_v, total_tokens);
+    print_report(&rep_m, total_tokens);
+
+    // merged must generate the SAME text
+    assert_eq!(rep_v.tokens_out, rep_m.tokens_out, "merged engine diverged!");
+    println!("  merged output identical to vanilla ✓");
+    println!("\n  sample completions:");
+    for (p, toks) in raw_prompts.iter().zip(&rep_m.tokens_out).take(3) {
+        let text = bpe.decode_lossy(toks);
+        let clean: String = text.chars().take(48).collect();
+        println!("    '{p}' → {:?}", clean);
+    }
+
+    let measured = rep_v.wall.as_secs_f64() / rep_m.wall.as_secs_f64();
+    let predicted = predicted_speedup(&cfg, Variant::MergedQP, &Hardware::cpu_like(), prompts.len(), 24, F32_BYTES);
+    let predicted_b1 = predicted_speedup(&cfg, Variant::MergedQP, &Hardware::cpu_like(), 1, 24, F32_BYTES);
+    println!(
+        "\n  measured wall-clock speedup (batch {}): {:.3}x   model-predicted: {:.3}x (batch-1 ideal: {:.3}x)",
+        prompts.len(),
+        measured,
+        predicted,
+        predicted_b1
+    );
+    println!("  (decoded counters: vanilla {} / merged {})", rep_v.decoded, rep_m.decoded);
+
+    // --- optional: the AOT/PJRT path end to end on the same model
+    if use_pjrt {
+        let dir = Path::new("artifacts/e2e-100m");
+        if dir.join("vanilla/manifest.json").exists() {
+            println!("\n== PJRT engine (AOT jax+pallas artifacts) ==");
+            for (label, w, sub) in [
+                ("pjrt/vanilla", vanilla.clone(), "vanilla"),
+                ("pjrt/merged_qp", merged.clone(), "merged_qp"),
+            ] {
+                let d = dir.join(sub);
+                let c = Coordinator::spawn_with(
+                    move || PjrtEngine::boot(&d, &w, 16).expect("pjrt boot"),
+                    SchedulerCfg::default(),
+                );
+                // shorter stream: PJRT CPU round-trips caches per step
+                let small: Vec<Vec<u32>> = prompts.iter().take(4).cloned().collect();
+                let rep = drive(&c, label, &small, 8);
+                print_report(&rep, small.len() * 8);
+                c.shutdown();
+            }
+        } else {
+            println!("\n(skipping PJRT: run `make artifacts` to build artifacts/e2e-100m)");
+        }
+    }
+    println!("\nserving_e2e complete.");
+}

@@ -1,0 +1,176 @@
+"""AOT lowering: JAX model → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact directory holds a `manifest.json` describing every lowered
+function's inputs/outputs (name, dtype, shape, role) in positional order —
+the Rust runtime consumes the manifest instead of hard-coding signatures.
+
+Usage:
+    python -m compile.aot --out ../artifacts \
+        --preset tiny-gqa --variants vanilla,merged_qp \
+        --prefill-buckets 8,32 --decode-batches 1,4
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import PRESETS, ModelConfig
+from .model import decode, flat_weight_specs, prefill, unflatten_weights
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_structs(cfg: ModelConfig, variant: str):
+    specs = flat_weight_specs(cfg, variant)
+    shape_structs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    manifest = [
+        {"name": n, "dtype": "f32", "shape": list(s), "role": "weight"}
+        for n, s in specs
+    ]
+    return shape_structs, manifest
+
+
+def lower_prefill(cfg: ModelConfig, variant: str, t: int):
+    """tokens(T,) + weights → (logits(T,V), k(L,S,e), v(L,S,e))."""
+    S = cfg.max_seq_len
+
+    def fn(tokens, *flat_w):
+        w = unflatten_weights(cfg, variant, list(flat_w))
+        return prefill(cfg, w, tokens, S, use_kernels=True)
+
+    w_structs, w_manifest = weight_structs(cfg, variant)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((t,), jnp.int32), *w_structs
+    )
+    manifest = {
+        "kind": "prefill",
+        "t": t,
+        "max_seq": S,
+        "inputs": [{"name": "tokens", "dtype": "s32", "shape": [t],
+                    "role": "tokens"}] + w_manifest,
+        "outputs": [
+            {"name": "logits", "dtype": "f32", "shape": [t, cfg.vocab_size]},
+            {"name": "k_cache", "dtype": "f32",
+             "shape": [cfg.n_layers, S, cfg.e]},
+            {"name": "v_cache", "dtype": "f32",
+             "shape": [cfg.n_layers, S, cfg.e]},
+        ],
+    }
+    return to_hlo_text(lowered), manifest
+
+
+def lower_decode(cfg: ModelConfig, variant: str, b: int):
+    """tokens(B,), pos(B,), k(L,B,S,e), v(L,B,S,e) + weights →
+    (logits(B,V), k', v')."""
+    S = cfg.max_seq_len
+    cache_shape = (cfg.n_layers, b, S, cfg.e)
+
+    def fn(tokens, pos, k_cache, v_cache, *flat_w):
+        w = unflatten_weights(cfg, variant, list(flat_w))
+        return decode(cfg, w, tokens, pos, k_cache, v_cache, use_kernels=True)
+
+    w_structs, w_manifest = weight_structs(cfg, variant)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        *w_structs,
+    )
+    manifest = {
+        "kind": "decode",
+        "batch": b,
+        "max_seq": S,
+        "inputs": [
+            {"name": "tokens", "dtype": "s32", "shape": [b], "role": "tokens"},
+            {"name": "pos", "dtype": "s32", "shape": [b], "role": "pos"},
+            {"name": "k_cache", "dtype": "f32", "shape": list(cache_shape),
+             "role": "k_cache"},
+            {"name": "v_cache", "dtype": "f32", "shape": list(cache_shape),
+             "role": "v_cache"},
+        ] + w_manifest,
+        "outputs": [
+            {"name": "logits", "dtype": "f32", "shape": [b, cfg.vocab_size]},
+            {"name": "k_cache", "dtype": "f32", "shape": list(cache_shape)},
+            {"name": "v_cache", "dtype": "f32", "shape": list(cache_shape)},
+        ],
+    }
+    return to_hlo_text(lowered), manifest
+
+
+def build(out_dir: str, preset: str, variants, prefill_buckets, decode_batches):
+    cfg = PRESETS[preset]
+    for variant in variants:
+        if not cfg.supports(variant):
+            print(f"skip {preset}/{variant}: unsupported (e != d)")
+            continue
+        vdir = os.path.join(out_dir, preset, variant)
+        os.makedirs(vdir, exist_ok=True)
+        functions = {}
+        for t in prefill_buckets:
+            name = f"prefill_t{t}"
+            text, manifest = lower_prefill(cfg, variant, t)
+            path = os.path.join(vdir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["file"] = f"{name}.hlo.txt"
+            functions[name] = manifest
+            print(f"  {preset}/{variant}/{name}: {len(text)//1024} KiB")
+        for b in decode_batches:
+            name = f"decode_b{b}"
+            text, manifest = lower_decode(cfg, variant, b)
+            path = os.path.join(vdir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["file"] = f"{name}.hlo.txt"
+            functions[name] = manifest
+            print(f"  {preset}/{variant}/{name}: {len(text)//1024} KiB")
+        manifest = {
+            "config": cfg.to_dict(),
+            "variant": variant,
+            "weights": [
+                {"name": n, "shape": list(s)}
+                for n, s in flat_weight_specs(cfg, variant)
+            ],
+            "functions": functions,
+        }
+        with open(os.path.join(vdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"wrote {vdir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="tiny-gqa")
+    ap.add_argument("--variants", default="vanilla,merged_qp")
+    ap.add_argument("--prefill-buckets", default="8,32")
+    ap.add_argument("--decode-batches", default="1,4")
+    args = ap.parse_args()
+    build(
+        args.out,
+        args.preset,
+        args.variants.split(","),
+        [int(x) for x in args.prefill_buckets.split(",") if x],
+        [int(x) for x in args.decode_batches.split(",") if x],
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Model configuration presets — kept in exact sync with rust/src/config.
+
+A pytest (test_configs.py) compares this table against the JSON the Rust CLI
+emits, so the two layers cannot drift silently.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    dim: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    hidden_dim: int
+    vocab_size: int
+    max_seq_len: int
+    attention: str  # mha | mqa | gqa
+    layout: str  # serial | parallel
+    ffn: str  # mlp | swiglu
+    tied_embeddings: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    @property
+    def e(self) -> int:
+        """Output dim of the K/V projections (paper §1)."""
+        return self.dim * self.n_kv_heads // self.n_heads
+
+    @property
+    def f_prime(self) -> int:
+        """Effective first-FFN-layer width (2f for GLU variants)."""
+        return 2 * self.hidden_dim if self.ffn == "swiglu" else self.hidden_dim
+
+    def supports(self, variant: str) -> bool:
+        """K/P and V/P removal require e == d (MHA only) — paper Fig. 1."""
+        if variant in ("vanilla", "merged_qp"):
+            return True
+        return self.e == self.dim
+
+    def to_dict(self):
+        return asdict(self)
+
+
+PRESETS = {
+    "pythia-6.9b": ModelConfig(
+        name="pythia-6.9b", dim=4096, n_layers=32, n_heads=32, n_kv_heads=32,
+        hidden_dim=16384, vocab_size=50400, max_seq_len=2048,
+        attention="mha", layout="parallel", ffn="mlp",
+    ),
+    "mistral-7b": ModelConfig(
+        name="mistral-7b", dim=4096, n_layers=32, n_heads=32, n_kv_heads=8,
+        hidden_dim=14336, vocab_size=32000, max_seq_len=4096,
+        attention="gqa", layout="serial", ffn="swiglu",
+    ),
+    "tiny-mha": ModelConfig(
+        name="tiny-mha", dim=64, n_layers=2, n_heads=4, n_kv_heads=4,
+        hidden_dim=128, vocab_size=256, max_seq_len=128,
+        attention="mha", layout="serial", ffn="mlp",
+    ),
+    "tiny-gqa": ModelConfig(
+        name="tiny-gqa", dim=64, n_layers=2, n_heads=8, n_kv_heads=2,
+        hidden_dim=112, vocab_size=256, max_seq_len=128,
+        attention="gqa", layout="serial", ffn="swiglu",
+    ),
+    "tiny-mqa": ModelConfig(
+        name="tiny-mqa", dim=64, n_layers=2, n_heads=4, n_kv_heads=1,
+        hidden_dim=128, vocab_size=256, max_seq_len=128,
+        attention="mqa", layout="serial", ffn="mlp",
+    ),
+    "tiny-parallel": ModelConfig(
+        name="tiny-parallel", dim=64, n_layers=2, n_heads=4, n_kv_heads=4,
+        hidden_dim=128, vocab_size=256, max_seq_len=128,
+        attention="mha", layout="parallel", ffn="mlp",
+    ),
+    # MLP (not SwiGLU): random-init deep skipless SwiGLU is scale-quadratic
+    # per block and numerically chaotic — see DESIGN.md §Signal-propagation.
+    "e2e-100m": ModelConfig(
+        name="e2e-100m", dim=640, n_layers=12, n_heads=10, n_kv_heads=2,
+        hidden_dim=2688, vocab_size=4096, max_seq_len=512,
+        attention="gqa", layout="serial", ffn="mlp",
+    ),
+}
+
+ROPE_BASE = 10000.0

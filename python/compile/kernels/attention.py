@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: fused causal attention (flash-attention style) with
+MHA/MQA/GQA head grouping — the paper's compute hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of a CUDA
+threadblock per (batch, head) with shared-memory K/V tiles, the grid is
+(head, q_block) and each program streams KV panels HBM→VMEM via BlockSpec,
+carrying an online-softmax accumulator (running max m, normalizer l) so the
+(t×s) score matrix never materializes. The q panel is bq×hd and KV panels
+bkv×hd — MXU-shaped at full size, shrunk for the tiny CPU test dims.
+
+GQA is expressed in the *index map*: query head h reads KV head
+h // (n_heads // n_kv_heads) — zero data duplication, matching the paged
+rust cache layout.
+
+The merged-QP variant needs no kernel change at all: queries are the block
+input itself (the paper's `Q* = 1`), which is exactly how the L2 model
+calls this kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bkv: int, q_pos0_plus):
+    """One (head, q-block) program: online softmax over KV panels.
+
+    q_ref: (bq, hd); k_ref/v_ref: (s, hd) for this program's KV head;
+    o_ref: (bq, hd). `q_pos0_plus(iq)` gives the absolute position of the
+    block's first query row (tracer-friendly callable).
+    """
+    bq, hd = q_ref.shape
+    s = k_ref.shape[0]
+    iq = pl.program_id(1)
+    qpos = q_pos0_plus(iq) + jax.lax.iota(jnp.int32, bq)  # (bq,)
+    scale = 1.0 / jnp.sqrt(float(hd))
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    m = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((bq,), dtype=jnp.float32)
+    acc = jnp.zeros((bq, hd), dtype=jnp.float32)
+
+    for ks in range(0, s, bkv):
+        k_panel = k_ref[ks : ks + bkv, :].astype(jnp.float32)  # (bkv, hd)
+        v_panel = v_ref[ks : ks + bkv, :].astype(jnp.float32)
+        scores = q @ k_panel.T  # (bq, bkv)
+        kpos = ks + jax.lax.iota(jnp.int32, bkv)
+        mask = kpos[None, :] <= qpos[:, None]  # causal
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        l = l * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v_panel
+        m = m_new
+    # rows with no valid key yet (can't happen causally, pos>=0) guard anyway
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_heads", "n_kv_heads", "bq", "bkv", "pos0")
+)
+def attention(q, k, v, n_heads: int, n_kv_heads: int, bq: int = 128,
+              bkv: int = 128, pos0: int = 0):
+    """Causal grouped attention.
+
+    q: (t, n_heads*hd); k, v: (s, n_kv_heads*hd), already RoPE-rotated.
+    Query row r has absolute position pos0 + r; key row j has position j
+    (so prefill uses pos0=0, t == s).
+    """
+    t, width = q.shape
+    s, kw = k.shape
+    hd = width // n_heads
+    assert kw == n_kv_heads * hd, f"k width {kw} != {n_kv_heads}*{hd}"
+    group = n_heads // n_kv_heads
+    bq = pick_block(t, bq)
+    bkv = pick_block(s, bkv)
+
+    q3 = q.reshape(t, n_heads, hd).transpose(1, 0, 2)  # (H, t, hd)
+    k3 = k.reshape(s, n_kv_heads, hd).transpose(1, 0, 2)  # (G, s, hd)
+    v3 = v.reshape(s, n_kv_heads, hd).transpose(1, 0, 2)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, bkv=bkv, q_pos0_plus=lambda iq: pos0 + iq * bq
+        ),
+        grid=(n_heads, t // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda h, iq: (h, iq, 0)),
+            pl.BlockSpec((None, s, hd), lambda h, iq: (h // group, 0, 0)),
+            pl.BlockSpec((None, s, hd), lambda h, iq: (h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda h, iq: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, t, hd), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q3, k3, v3)
+    return out.transpose(1, 0, 2).reshape(t, width)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "n_kv_heads"))
+def decode_attention(q, k_cache, v_cache, kv_len, n_heads: int, n_kv_heads: int):
+    """Single-position attention against a padded cache (decode hot path).
+
+    q: (1, n_heads*hd); caches: (S, n_kv_heads*hd) with valid rows
+    [0, kv_len) — kv_len a traced scalar so one artifact serves every
+    position. Masked-lane softmax in plain jnp (a t=1 flash kernel degenerates
+    to a masked matvec; XLA fuses this fine, and the pallas prefill kernel
+    covers the tiled case).
+    """
+    S, kw = k_cache.shape
+    hd = (q.shape[1]) // n_heads
+    group = n_heads // n_kv_heads
+    qh = q.reshape(n_heads, hd)
+    kh = jnp.repeat(k_cache.reshape(S, n_kv_heads, hd), group, axis=1)  # (S,H,hd)
+    vh = jnp.repeat(v_cache.reshape(S, n_kv_heads, hd), group, axis=1)
+    scores = jnp.einsum("hd,shd->hs", qh, kh.transpose(0, 1, 2)) / jnp.sqrt(float(hd))
+    mask = jnp.arange(S)[None, :] < kv_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hs,shd->hd", w, vh)
+    return out.reshape(1, n_heads * hd)

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: fused FFN first stage.
+
+For SwiGLU the kernel computes `silu(x@G) * (x@U)` in one pass over f-tiles:
+both matmuls read the same x panel from VMEM, and the gate/up products and
+the pointwise combine never round-trip to HBM — the fusion a CUDA version
+would do with a persistent threadblock. The merged-weights trick makes this
+the FFN's *first* matrix `M* = P·M`, so the post-attention projection also
+rides this kernel for free (that is the entire point of Fig. 2a).
+
+The second FFN matmul (·O) reuses the tiled matmul kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul, pick_block
+
+
+def _swiglu_kernel(x_ref, g_ref, u_ref, o_ref):
+    """One (token-block, f-block) tile: silu(x@G_tile) * (x@U_tile)."""
+    x = x_ref[...]
+    g = jnp.dot(x, g_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, u_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (g / (1.0 + jnp.exp(-g))) * u
+
+
+def _gelu_kernel(x_ref, m_ref, o_ref):
+    """One tile of gelu(x @ M) (tanh approximation — matches rust gelu)."""
+    h = jnp.dot(x_ref[...], m_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = 0.5 * h * (1.0 + jnp.tanh(0.7978845608 * (h + 0.044715 * h**3)))
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bf"))
+def swiglu_stage1(x, m, bt: int = 128, bf: int = 128):
+    """x: (t, d); m = [G ‖ U]: (d, 2f). Returns (t, f)."""
+    t, d = x.shape
+    f = m.shape[1] // 2
+    g, u = m[:, :f], m[:, f:]
+    bt, bf = pick_block(t, bt), pick_block(f, bf)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(t // bt, f // bf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, f), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, g, u)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bf"))
+def mlp_stage1(x, m, bt: int = 128, bf: int = 128):
+    """x: (t, d); m: (d, f). Returns gelu(x@m): (t, f)."""
+    t, d = x.shape
+    f = m.shape[1]
+    bt, bf = pick_block(t, bt), pick_block(f, bf)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(t // bt, f // bf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, f), jnp.float32),
+        interpret=True,
+    )(x, m)
+
+
+def ffn(x, m, o, kind: str):
+    """Full FFN: fused stage-1 kernel + tiled matmul with O."""
+    if kind == "swiglu":
+        return matmul(swiglu_stage1(x, m), o)
+    elif kind == "mlp":
+        return matmul(mlp_stage1(x, m), o)
+    raise ValueError(f"unknown ffn kind {kind!r}")

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: tiled matmul.
+
+The workhorse of every projection in the L2 model. Tiled for VMEM with an
+MXU-shaped inner dot: the grid walks (M/bm, N/bn) output tiles; each program
+streams the K dimension in bk-chunks so the working set is
+bm*bk + bk*bn + bm*bn floats — chosen ≤ ~48 KiB so three buffers
+double-buffer comfortably inside a 16 MiB VMEM at full size (see
+DESIGN.md §Hardware-Adaptation for the TPU sizing math; CPU runs use
+interpret=True and small test tiles).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, bk: int):
+    """One (bm, bn) output tile: accumulate over K in bk slabs."""
+    k_total = x_ref.shape[1]
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    # K is a static shape — unroll the slab loop at trace time.
+    for ks in range(0, k_total, bk):
+        xk = x_ref[:, ks : ks + bk]
+        yk = y_ref[ks : ks + bk, :]
+        acc = acc + jnp.dot(xk, yk, preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is ≤ target (block shapes must tile)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Pallas tiled matmul: (m,k) @ (k,n) -> (m,n), f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dim mismatch {k} vs {k2}"
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, bk=bk),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+signal. pytest sweeps shapes/dtypes (hypothesis) and asserts the kernels
+match these references to float32 tolerance."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain (m,k)@(k,n)."""
+    return jnp.matmul(a, b)
+
+
+def rope_ref(x, positions, head_dim, base=10000.0):
+    """Rotate-half RoPE applied per head.
+
+    x: (t, n_heads*head_dim); positions: (t,) int32.
+    Mirrors rust/src/model/rope.rs exactly.
+    """
+    t, width = x.shape
+    n_heads = width // head_dim
+    half = head_dim // 2
+    xh = x.reshape(t, n_heads, head_dim)
+    i = jnp.arange(half, dtype=jnp.float32)
+    theta = positions[:, None].astype(jnp.float32) / (base ** (2.0 * i / head_dim))
+    sin, cos = jnp.sin(theta)[:, None, :], jnp.cos(theta)[:, None, :]
+    a, b = xh[..., :half], xh[..., half:]
+    out = jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    return out.reshape(t, width)
+
+
+def attention_ref(q, k, v, n_heads, n_kv_heads, causal=True, kv_len=None):
+    """Causal grouped-query attention over already-rotated projections.
+
+    q: (t, n_heads*hd); k, v: (s, n_kv_heads*hd). `kv_len` masks cache slots
+    >= kv_len (padded decode). Query row r is position kv_len - t + r when
+    kv_len is given, else r.
+    """
+    t, width = q.shape
+    s = k.shape[0]
+    hd = width // n_heads
+    group = n_heads // n_kv_heads
+    qh = q.reshape(t, n_heads, hd).transpose(1, 0, 2)  # (H, t, hd)
+    kh = k.reshape(s, n_kv_heads, hd).transpose(1, 0, 2)  # (G, s, hd)
+    vh = v.reshape(s, n_kv_heads, hd).transpose(1, 0, 2)
+    kh = jnp.repeat(kh, group, axis=0)  # (H, s, hd)
+    vh = jnp.repeat(vh, group, axis=0)
+    scores = jnp.einsum("htd,hsd->hts", qh, kh) / jnp.sqrt(float(hd))
+    eff_len = s if kv_len is None else kv_len
+    qpos = eff_len - t + jnp.arange(t)  # absolute position of each query row
+    spos = jnp.arange(s)
+    mask = spos[None, :] <= qpos[:, None]
+    if kv_len is not None:
+        mask = mask & (spos[None, :] < kv_len)
+    if not causal:
+        mask = jnp.ones_like(mask)
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hts,hsd->htd", w, vh)  # (H, t, hd)
+    return out.transpose(1, 0, 2).reshape(t, width)
+
+
+def silu_ref(x):
+    return x / (1.0 + jnp.exp(-x))
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU — must match rust model::gelu."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x ** 3)))
+
+
+def swiglu_ref(x, m, o):
+    """SwiGLU FFN: m = [G ‖ U] (d, 2f); o: (f, d)."""
+    f = o.shape[0]
+    h = x @ m
+    return (silu_ref(h[:, :f]) * h[:, f:]) @ o
+
+
+def mlp_ref(x, m, o):
+    return gelu_ref(x @ m) @ o

@@ -1,0 +1,95 @@
+"""TPU sizing estimates for the Pallas kernels (perf deliverable).
+
+CPU interpret mode gives no TPU wallclock, so real-hardware behaviour is
+estimated *structurally* from the BlockSpecs: VMEM working set per program,
+whether double-buffering fits, MXU tile utilization, and arithmetic
+intensity (FLOP/byte vs the HBM roofline). pytest asserts every kernel's
+full-scale configuration fits VMEM with headroom; DESIGN.md §L1 quotes the
+numbers.
+"""
+
+from dataclasses import dataclass
+
+F32 = 4
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+MXU_TILE = 128                 # systolic array edge
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    mxu_m: int
+    mxu_n: int
+    mxu_k: int
+    hbm_bytes: int
+    flops: int
+
+    @property
+    def fits_double_buffered(self) -> bool:
+        return 2 * self.vmem_bytes <= VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of the 128x128 array the inner dot shapes keep busy."""
+        um = min(self.mxu_m, MXU_TILE) / MXU_TILE
+        un = min(self.mxu_n, MXU_TILE) / MXU_TILE
+        return um * un
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOP per HBM byte — compare against peak_flops/HBM_bw (~100 on
+        TPU v4-class hardware) to classify MXU- vs HBM-bound."""
+        return self.flops / max(self.hbm_bytes, 1)
+
+
+def attention_estimate(bq: int, bkv: int, head_dim: int, s: int) -> KernelEstimate:
+    """One (head, q-block) program of kernels/attention.py."""
+    vmem = F32 * (
+        bq * head_dim        # q panel
+        + 2 * bkv * head_dim  # k and v panels (streamed)
+        + bq * bkv           # score tile
+        + bq * head_dim      # accumulator
+        + 2 * bq             # m, l carries
+    )
+    n_panels = (s + bkv - 1) // bkv
+    hbm = F32 * (bq * head_dim + 2 * s * head_dim + bq * head_dim)
+    flops = 2 * 2 * bq * s * head_dim  # qk^T + pv
+    return KernelEstimate("attention", vmem, bq, bkv if n_panels else bkv,
+                          head_dim, hbm, flops)
+
+
+def matmul_estimate(bm: int, bn: int, k: int) -> KernelEstimate:
+    """One (i, j) program of kernels/matmul.py (full-K panels)."""
+    vmem = F32 * (bm * k + k * bn + bm * bn)
+    hbm = vmem  # each panel read/written once per program
+    flops = 2 * bm * bn * k
+    return KernelEstimate("matmul", vmem, bm, bn, min(k, MXU_TILE), hbm, flops)
+
+
+def swiglu_estimate(bt: int, bf: int, d: int) -> KernelEstimate:
+    """One (token-block, f-block) program of kernels/ffn.py — fused
+    gate/up: x is read once for BOTH matmuls."""
+    vmem = F32 * (bt * d + 2 * d * bf + bt * bf)
+    hbm = F32 * (bt * d + 2 * d * bf + bt * bf)
+    flops = 2 * 2 * bt * bf * d + 4 * bt * bf  # two matmuls + silu·mul
+    return KernelEstimate("swiglu", vmem, bt, bf, min(d, MXU_TILE), hbm, flops)
+
+
+def full_scale_report() -> list[KernelEstimate]:
+    """The configurations DESIGN.md §L1 quotes (Mistral-scale tiles)."""
+    return [
+        attention_estimate(bq=128, bkv=128, head_dim=128, s=4096),
+        matmul_estimate(bm=128, bn=128, k=4096),
+        swiglu_estimate(bt=128, bf=128, d=4096),
+    ]
+
+
+if __name__ == "__main__":
+    for e in full_scale_report():
+        print(
+            f"{e.name:>10}: VMEM/program {e.vmem_bytes/1024:.0f} KiB "
+            f"(double-buffered fits: {e.fits_double_buffered}), "
+            f"MXU util {e.mxu_utilization:.0%}, "
+            f"intensity {e.arithmetic_intensity:.1f} FLOP/B"
+        )

@@ -1,0 +1,216 @@
+"""L2: the skipless transformer in JAX, calling the L1 Pallas kernels.
+
+Mirrors rust/src/model exactly (same RoPE base, activations, head grouping,
+serial/parallel block semantics, and merged-variant identity-projections) so
+that the AOT artifacts and the Rust CPU engine agree to f32 tolerance on the
+same weights — verified end-to-end by `cargo test -- runtime`.
+
+Weights are **runtime inputs** to the lowered functions (never baked as
+constants): the Rust side owns initialization and surgery, streams the
+weight buffers to PJRT once, and reuses them every step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, ROPE_BASE
+from .kernels import ref
+from .kernels.attention import attention as attn_kernel, decode_attention
+from .kernels.ffn import ffn as ffn_kernel
+from .kernels.matmul import matmul as matmul_kernel
+
+
+# ---------------------------------------------------------------------------
+# weight pytree
+# ---------------------------------------------------------------------------
+
+def layer_weight_names(cfg: ModelConfig, variant: str) -> list[str]:
+    """Per-layer weight names in canonical order (must match rust
+    runtime/manifest exactly)."""
+    names = []
+    if variant not in ("merged_qp",):
+        names.append("q")
+    if variant != "merged_kp":
+        names.append("k")
+    if variant != "merged_vp":
+        names.append("v")
+    if variant == "vanilla":
+        names.append("p")
+    elif cfg.layout == "parallel":
+        names.append("c")  # carry-merged P·T_next (exact parallel form)
+    names += ["m", "o"]
+    return names
+
+
+def layer_weight_shapes(cfg: ModelConfig, variant: str) -> dict[str, tuple]:
+    d, e, fp, f = cfg.dim, cfg.e, cfg.f_prime, cfg.hidden_dim
+    return {
+        "q": (d, d), "k": (d, e), "v": (d, e), "p": (d, d), "c": (d, d),
+        "m": (d, fp), "o": (f, d),
+    }
+
+
+def flat_weight_specs(cfg: ModelConfig, variant: str) -> list[tuple[str, tuple]]:
+    """Flat (name, shape) list: embed, unembed, then layer.{i}.{w}."""
+    shapes = layer_weight_shapes(cfg, variant)
+    specs = [
+        ("embed", (cfg.vocab_size, cfg.dim)),
+        ("unembed", (cfg.dim, cfg.vocab_size)),
+    ]
+    for i in range(cfg.n_layers):
+        for n in layer_weight_names(cfg, variant):
+            specs.append((f"layer.{i}.{n}", shapes[n]))
+    return specs
+
+
+def unflatten_weights(cfg: ModelConfig, variant: str, flat: list):
+    """Flat array list (canonical order) → structured dict."""
+    specs = flat_weight_specs(cfg, variant)
+    assert len(flat) == len(specs), f"{len(flat)} arrays != {len(specs)} specs"
+    by_name = {}
+    for (name, shape), arr in zip(specs, flat):
+        assert tuple(arr.shape) == shape, f"{name}: {arr.shape} != {shape}"
+        by_name[name] = arr
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            n: by_name[f"layer.{i}.{n}"] for n in layer_weight_names(cfg, variant)
+        })
+    return {"embed": by_name["embed"], "unembed": by_name["unembed"],
+            "layers": layers}
+
+
+def init_weights(cfg: ModelConfig, key, variant: str = "vanilla"):
+    """Random init (pytest / train.py only; serving weights come from rust).
+    Matches the rust init scale: N(0, 1/√d_in)."""
+    ws = []
+    for name, shape in flat_weight_specs(cfg, variant):
+        key, sub = jax.random.split(key)
+        std = 1.0 if name == "embed" else 1.0 / jnp.sqrt(shape[0])
+        ws.append(jax.random.normal(sub, shape, dtype=jnp.float32) * std)
+    return unflatten_weights(cfg, variant, ws)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _proj(x, layer, name, use_kernels):
+    """Project through an optional matrix (absent = identity = eliminated)."""
+    w = layer.get(name)
+    if w is None:
+        return x
+    return matmul_kernel(x, w) if use_kernels else x @ w
+
+
+def _ffn(x, layer, cfg, use_kernels):
+    if use_kernels:
+        return ffn_kernel(x, layer["m"], layer["o"], cfg.ffn)
+    if cfg.ffn == "swiglu":
+        return ref.swiglu_ref(x, layer["m"], layer["o"])
+    return ref.mlp_ref(x, layer["m"], layer["o"])
+
+
+def _attend_full(x, layer, cfg, pos0, use_kernels):
+    """Projections + RoPE + causal attention for a full (t, d) sequence."""
+    t = x.shape[0]
+    positions = pos0 + jnp.arange(t)
+    q = _proj(x, layer, "q", use_kernels)
+    k = _proj(x, layer, "k", use_kernels)
+    v = _proj(x, layer, "v", use_kernels)
+    q = ref.rope_ref(q, positions, cfg.head_dim, ROPE_BASE)
+    k_rot = ref.rope_ref(k, positions, cfg.head_dim, ROPE_BASE)
+    if use_kernels:
+        a = attn_kernel(q, k_rot, v, cfg.n_heads, cfg.n_kv_heads, pos0=pos0)
+    else:
+        a = ref.attention_ref(q, k_rot, v, cfg.n_heads, cfg.n_kv_heads)
+    return a, k_rot, v
+
+
+def _block_post(x, a, layer, cfg, use_kernels):
+    """Post-attention projection + FFN, serial or parallel."""
+    if cfg.layout == "serial":
+        p = _proj(a, layer, "p" if "p" in layer else "_none", use_kernels)
+        return _ffn(p, layer, cfg, use_kernels)
+    post = "c" if "c" in layer else ("p" if "p" in layer else "_none")
+    attn_out = _proj(a, layer, post, use_kernels)
+    return attn_out + _ffn(x, layer, cfg, use_kernels)
+
+
+def prefill(cfg: ModelConfig, weights, tokens, max_seq: int,
+            use_kernels: bool = True):
+    """Whole-prompt forward for one sequence.
+
+    tokens: i32 (T,). Returns (logits (T, vocab), k_cache (L, S, e),
+    v_cache (L, S, e)) with rows [0, T) filled (rotated K, raw V).
+    """
+    T = tokens.shape[0]
+    e = cfg.e
+    x = weights["embed"][tokens]
+    k_cache = jnp.zeros((cfg.n_layers, max_seq, e), dtype=jnp.float32)
+    v_cache = jnp.zeros((cfg.n_layers, max_seq, e), dtype=jnp.float32)
+    for li, layer in enumerate(weights["layers"]):
+        a, k_rot, v = _attend_full(x, layer, cfg, 0, use_kernels)
+        k_cache = k_cache.at[li, :T].set(k_rot)
+        v_cache = v_cache.at[li, :T].set(v)
+        x = _block_post(x, a, layer, cfg, use_kernels)
+    logits = (matmul_kernel(x, weights["unembed"]) if use_kernels
+              else x @ weights["unembed"])
+    return logits, k_cache, v_cache
+
+
+def decode(cfg: ModelConfig, weights, tokens, pos, k_cache, v_cache,
+           use_kernels: bool = True):
+    """One decode step for a batch.
+
+    tokens: i32 (B,); pos: i32 (B,) current positions; caches
+    (L, B, S, e). Returns (logits (B, vocab), k_cache', v_cache').
+    """
+    B = tokens.shape[0]
+    x = weights["embed"][tokens]  # (B, d)
+    hd = cfg.head_dim
+
+    for li, layer in enumerate(weights["layers"]):
+        q = _proj(x, layer, "q", use_kernels)
+        k = _proj(x, layer, "k", use_kernels)
+        v = _proj(x, layer, "v", use_kernels)
+        # per-row RoPE at each sequence's own position
+        q = jax.vmap(lambda row, p: ref.rope_ref(row[None, :], p[None], hd,
+                                                 ROPE_BASE)[0])(q, pos)
+        k = jax.vmap(lambda row, p: ref.rope_ref(row[None, :], p[None], hd,
+                                                 ROPE_BASE)[0])(k, pos)
+        # write into the padded caches at each row's position
+        k_cache = k_cache.at[li].set(
+            jax.vmap(lambda c, p, r: jax.lax.dynamic_update_slice(
+                c, r[None, :], (p, 0)))(k_cache[li], pos, k))
+        v_cache = v_cache.at[li].set(
+            jax.vmap(lambda c, p, r: jax.lax.dynamic_update_slice(
+                c, r[None, :], (p, 0)))(v_cache[li], pos, v))
+        # attention against the cache (valid rows: [0, pos] inclusive)
+        a = jax.vmap(lambda qr, kc, vc, p: decode_attention(
+            qr[None, :], kc, vc, p + 1, cfg.n_heads, cfg.n_kv_heads)[0]
+        )(q, k_cache[li], v_cache[li], pos)
+        x = _block_post(x, a, layer, cfg, use_kernels)
+
+    logits = (matmul_kernel(x, weights["unembed"]) if use_kernels
+              else x @ weights["unembed"])
+    return logits, k_cache, v_cache
+
+
+def greedy_generate(cfg: ModelConfig, weights, prompt, n: int,
+                    use_kernels: bool = False):
+    """Reference generation loop (tests / train demo; not the serving path)."""
+    S = cfg.max_seq_len
+    logits, k1, v1 = prefill(cfg, weights, jnp.asarray(prompt, jnp.int32), S,
+                             use_kernels)
+    k = k1[:, None]  # (L, 1, S, e)
+    v = v1[:, None]
+    out = []
+    nxt = jnp.argmax(logits[len(prompt) - 1]).astype(jnp.int32)
+    pos = jnp.asarray([len(prompt)], jnp.int32)
+    for _ in range(n):
+        out.append(int(nxt))
+        logits, k, v = decode(cfg, weights, nxt[None], pos, k, v, use_kernels)
+        nxt = jnp.argmax(logits[0]).astype(jnp.int32)
+        pos = pos + 1
+    return out

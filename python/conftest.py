@@ -1,0 +1,8 @@
+"""Ensure `compile` is importable whether pytest runs from python/ or the
+repository root (the Makefile uses python/, the top-level capture command
+uses the root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

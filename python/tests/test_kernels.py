@@ -1,0 +1,188 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes — the CORE build-time correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention, decode_attention
+from compile.kernels.ffn import ffn, mlp_stage1, swiglu_stage1
+from compile.kernels.matmul import matmul, pick_block
+
+ATOL = 2e-4
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, m, k)
+    b = rand(seed + 1, k, n)
+    got = matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)
+
+
+def test_matmul_block_sweep():
+    """Different tilings must give identical results (the perf pass varies
+    these block shapes; correctness must not depend on them)."""
+    a, b = rand(1, 64, 80), rand(2, 80, 48)
+    want = ref.matmul_ref(a, b)
+    for bm, bn, bk in [(8, 8, 8), (16, 48, 80), (64, 16, 16), (128, 128, 128)]:
+        got = matmul(a, b, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 64, 100, 128, 1000]:
+        for target in [1, 8, 128]:
+            b = pick_block(dim, target)
+            assert dim % b == 0 and 1 <= b <= max(target, 1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 48),
+    heads=st.sampled_from([(4, 4), (4, 2), (4, 1), (8, 2)]),
+    hd=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(t, heads, hd, seed):
+    n_heads, n_kv = heads
+    q = rand(seed, t, n_heads * hd)
+    k = rand(seed + 1, t, n_kv * hd)
+    v = rand(seed + 2, t, n_kv * hd)
+    got = attention(q, k, v, n_heads, n_kv)
+    want = ref.attention_ref(q, k, v, n_heads, n_kv)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-3)
+
+
+def test_attention_block_sizes_equivalent():
+    q, k, v = rand(3, 32, 32), rand(4, 32, 16), rand(5, 32, 16)
+    want = ref.attention_ref(q, k, v, 4, 2)
+    for bq, bkv in [(1, 1), (4, 8), (8, 4), (32, 32), (16, 32)]:
+        got = attention(q, k, v, 4, 2, bq=bq, bkv=bkv)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-3)
+
+
+def test_attention_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    t = 16
+    q, k, v = rand(6, t, 32), rand(7, t, 32), rand(8, t, 32)
+    base = attention(q, k, v, 4, 4)
+    k2 = k.at[t - 1].add(100.0)
+    v2 = v.at[t - 1].add(-50.0)
+    pert = attention(q, k2, v2, 4, 4)
+    np.testing.assert_allclose(base[: t - 1], pert[: t - 1], atol=1e-5)
+    assert not np.allclose(base[t - 1], pert[t - 1])
+
+
+def test_decode_attention_matches_prefill_row():
+    """Padded-cache decode must reproduce the full-sequence row."""
+    t, S = 9, 32
+    n_heads, n_kv, hd = 4, 2, 8
+    q = rand(9, t, n_heads * hd)
+    k = rand(10, t, n_kv * hd)
+    v = rand(11, t, n_kv * hd)
+    full = ref.attention_ref(q, k, v, n_heads, n_kv)
+    k_pad = jnp.zeros((S, n_kv * hd)).at[:t].set(k)
+    v_pad = jnp.zeros((S, n_kv * hd)).at[:t].set(v)
+    # garbage beyond t must be masked out
+    k_pad = k_pad.at[t:].set(999.0)
+    v_pad = v_pad.at[t:].set(-999.0)
+    got = decode_attention(q[t - 1 : t], k_pad, v_pad, t, n_heads, n_kv)
+    np.testing.assert_allclose(got[0], full[t - 1], atol=ATOL, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ffn
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    d=st.sampled_from([8, 16, 48]),
+    f=st.sampled_from([8, 24, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_swiglu_matches_ref(t, d, f, seed):
+    x = rand(seed, t, d)
+    m = rand(seed + 1, d, 2 * f)
+    o = rand(seed + 2, f, d)
+    got = ffn(x, m, o, "swiglu")
+    want = ref.swiglu_ref(x, m, o)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    d=st.sampled_from([8, 16, 48]),
+    f=st.sampled_from([8, 24, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_mlp_matches_ref(t, d, f, seed):
+    x = rand(seed, t, d)
+    m = rand(seed + 1, d, f)
+    o = rand(seed + 2, f, d)
+    got = ffn(x, m, o, "mlp")
+    want = ref.mlp_ref(x, m, o)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-3)
+
+
+def test_swiglu_stage1_gate_semantics():
+    # zero gate half → zero output regardless of up half
+    x = jnp.ones((2, 4))
+    m = jnp.concatenate([jnp.zeros((4, 8)), 100 * jnp.ones((4, 8))], axis=1)
+    out = swiglu_stage1(x, m)
+    np.testing.assert_allclose(out, jnp.zeros((2, 8)), atol=1e-6)
+
+
+def test_mlp_stage1_matches_rust_gelu_constants():
+    # gelu(1.0) with the tanh approximation = 0.841192 (rust test value)
+    x = jnp.ones((1, 1))
+    m = jnp.ones((1, 1))
+    out = mlp_stage1(x, m)
+    assert abs(float(out[0, 0]) - 0.841192) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+def test_rope_position_zero_identity():
+    x = rand(20, 1, 16)
+    out = ref.rope_ref(x, jnp.array([0]), 8)
+    np.testing.assert_allclose(out, x, atol=1e-6)
+
+
+def test_rope_relative_dot_product():
+    q = rand(21, 1, 8)
+    k = rand(22, 1, 8)
+
+    def dot(m, n):
+        qr = ref.rope_ref(q, jnp.array([m]), 8)
+        kr = ref.rope_ref(k, jnp.array([n]), 8)
+        return float((qr @ kr.T)[0, 0])
+
+    assert abs(dot(3, 7) - dot(13, 17)) < 1e-4
+    assert abs(dot(3, 7) - dot(3, 8)) > 1e-4

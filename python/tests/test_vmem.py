@@ -1,0 +1,41 @@
+"""TPU sizing estimates: the full-scale kernel configurations must fit
+VMEM double-buffered with full MXU tiles (the L1 perf deliverable)."""
+
+from compile.kernels.vmem import (attention_estimate, full_scale_report,
+                                  matmul_estimate, swiglu_estimate, VMEM_BYTES)
+
+
+def test_full_scale_configs_fit_vmem():
+    for e in full_scale_report():
+        assert e.fits_double_buffered, (
+            f"{e.name}: {e.vmem_bytes} bytes won't double-buffer in {VMEM_BYTES}")
+        assert e.mxu_utilization == 1.0, f"{e.name}: partial MXU tiles"
+
+
+def test_attention_vmem_scales_with_blocks_not_seq():
+    # The flash-style kernel's VMEM must NOT grow with the full sequence
+    # length (that is the whole point of online softmax)... except the K/V
+    # panels it actually streams, which are bkv-sized.
+    short = attention_estimate(bq=128, bkv=128, head_dim=128, s=512)
+    long = attention_estimate(bq=128, bkv=128, head_dim=128, s=32768)
+    assert short.vmem_bytes == long.vmem_bytes
+    assert long.hbm_bytes > short.hbm_bytes  # HBM traffic does scale
+
+
+def test_matmul_intensity_mxu_bound_at_full_size():
+    e = matmul_estimate(bm=128, bn=128, k=4096)
+    # TPU-class machine balance is ~100 FLOP/byte; below that = HBM-bound
+    assert e.arithmetic_intensity > 30, e.arithmetic_intensity
+
+
+def test_swiglu_fusion_saves_x_reads():
+    fused = swiglu_estimate(bt=128, bf=128, d=4096)
+    # unfused = two separate matmuls, each reading the x panel
+    unfused_hbm = 2 * (128 * 4096 + 4096 * 128 + 128 * 128) * 4
+    assert fused.hbm_bytes < unfused_hbm
+
+
+def test_tiny_test_tiles_still_fit():
+    # the shapes the CPU tests actually run
+    e = attention_estimate(bq=8, bkv=8, head_dim=16, s=128)
+    assert e.fits_double_buffered

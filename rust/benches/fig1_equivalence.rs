@@ -1,0 +1,62 @@
+//! Bench for Figs. 1(b,c,d) & 2: the serial weight merges.
+//!
+//! Measures (a) the *numerical equivalence error* of each transform — the
+//! figure's claim is "mathematically identical", so the interesting series
+//! is max relative logits error across variants/attention kinds/model
+//! scales — and (b) the cost of surgery itself (LU solves dominate),
+//! which a practitioner pays once per checkpoint.
+
+use skipless::config::{ModelConfig, Variant};
+use skipless::model::{prefill, ModelWeights};
+use skipless::surgery::{transform, Options};
+use skipless::util::bench::{black_box, Bencher};
+
+fn equivalence_err(cfg: &ModelConfig, variant: Variant, seed: u64) -> f64 {
+    let vanilla = ModelWeights::init_vanilla(cfg, seed);
+    let merged = transform(&vanilla, variant, Options { skip_audit: true, ..Default::default() }).unwrap();
+    let toks = [5u32, 17, 3, 42, 8, 1, 99, 100];
+    let (l0, _) = prefill(&vanilla, &toks);
+    let (l1, _) = prefill(&merged, &toks);
+    l1.rel_fro_err(&l0)
+}
+
+fn main() {
+    println!("# fig1_equivalence — serial merges (paper Figs. 1-2, Table 1)");
+
+    eprintln!("\n{:<14} {:<11} {:>14}", "config", "variant", "rel logits err");
+    let mut worst = 0.0f64;
+    for (preset, variants) in [
+        ("tiny-mha", vec![Variant::MergedQP, Variant::MergedKP, Variant::MergedVP]),
+        ("tiny-gqa", vec![Variant::MergedQP]),
+        ("tiny-mqa", vec![Variant::MergedQP]),
+    ] {
+        let cfg = ModelConfig::preset(preset).unwrap();
+        for v in variants {
+            let err = equivalence_err(&cfg, v, 7777);
+            eprintln!("{:<14} {:<11} {:>14.3e}", preset, v.name(), err);
+            worst = worst.max(err);
+        }
+    }
+    // scale check: a deeper/wider model (100M) keeps roundoff-level error
+    let big = ModelConfig::e2e_100m();
+    let err_big = equivalence_err(&big, Variant::MergedQP, 31337);
+    eprintln!("{:<14} {:<11} {:>14.3e}", "e2e-100m", "merged_qp", err_big);
+    worst = worst.max(err_big);
+    assert!(worst < 1e-3, "equivalence violated: {worst}");
+    eprintln!("max rel err {worst:.3e} — within f32 roundoff ✓");
+
+    // surgery cost (d=64 tiny vs d=640 100M-scale)
+    let mut b = Bencher::new("fig1_equivalence");
+    let tiny = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 1);
+    b.case("surgery_qp(tiny-gqa d=64 L=2)", || {
+        black_box(transform(&tiny, Variant::MergedQP, Options { skip_audit: true, ..Default::default() }).unwrap());
+    });
+    let mid = ModelWeights::init_vanilla(&ModelConfig::e2e_100m(), 2);
+    b.case("surgery_qp(e2e-100m d=640 L=12)", || {
+        black_box(transform(&mid, Variant::MergedQP, Options { skip_audit: true, ..Default::default() }).unwrap());
+    });
+    b.case("surgery_with_audit(e2e-100m)", || {
+        black_box(transform(&mid, Variant::MergedQP, Options::default()).unwrap());
+    });
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! Bench for §5 / Fig. 4 (future work): transformers WITH normalization and
+//! skip connections, with Q and P removed as an architecture choice.
+//!
+//! Two questions, two instruments:
+//! * **Cost**: forward throughput of the residual block with vs without
+//!   Q/P — measured here (the inference benefit carries over: fewer
+//!   weights to stream, same token path).
+//! * **Quality**: does removing Q/P hurt trainability? That needs
+//!   autodiff → `make train-demo` (python/compile/train.py --fig4) trains
+//!   both at matched budgets; EXPERIMENTS.md §Fig4 records the loss
+//!   curves side by side.
+
+use skipless::config::ModelConfig;
+use skipless::model::residual::{init_residual_noqp, prefill_residual};
+use skipless::model::ModelWeights;
+use skipless::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("# fig4_ablation — residual (+norm, +skips) with/without Q and P");
+    let mut cfg = ModelConfig::tiny_mha();
+    cfg.n_layers = 8; // depth where skips/norm actually matter
+    let full = ModelWeights::init_vanilla(&cfg, 77);
+    let noqp = init_residual_noqp(&cfg, 77);
+    let saved = full.stored_weights() - noqp.stored_weights();
+    eprintln!(
+        "residual-noqp removes {} weights (−{:.1}%)",
+        saved,
+        100.0 * saved as f64 / full.stored_weights() as f64
+    );
+
+    let prompt: Vec<u32> = (0..32).map(|i| (i * 13 + 5) % 250).collect();
+    // sanity: both run, both finite, and they differ (not equivalent)
+    let lf = prefill_residual(&full, &prompt);
+    let ln = prefill_residual(&noqp, &prompt);
+    assert!(lf.all_finite() && ln.all_finite());
+    assert!(lf.max_abs_diff(&ln) > 1e-3, "no-QP must be a different function");
+    eprintln!("both forms stable over {} layers ✓ (function differs, as expected)", cfg.n_layers);
+
+    let mut b = Bencher::new("fig4_ablation");
+    b.case_items("residual_with_qp_32tok", Some(32.0), || {
+        black_box(prefill_residual(&full, &prompt));
+    });
+    b.case_items("residual_without_qp_32tok", Some(32.0), || {
+        black_box(prefill_residual(&noqp, &prompt));
+    });
+    let r = b.finish();
+    let t_full = r[0].median.as_secs_f64();
+    let t_noqp = r[1].median.as_secs_f64();
+    eprintln!(
+        "forward speedup without Q/P: {:.3}x (quality ablation: `make train-demo`)",
+        t_full / t_noqp
+    );
+}

@@ -1,0 +1,140 @@
+//! Whole-stack microbenchmarks — the instrument for the EXPERIMENTS.md
+//! §Perf pass. Covers every layer the serving hot path touches:
+//! GEMM (projection kernels), LU (surgery), attention decode, paged-cache
+//! ops, tokenizer, JSON codec, and the scheduler's per-step overhead.
+
+use skipless::config::ModelConfig;
+use skipless::coordinator::{CpuEngine, DecodeInput, Engine, Request, Scheduler, SchedulerCfg};
+use skipless::kvcache::KvCache;
+use skipless::linalg::{inverse, matmul, matmul_transb, matvec};
+use skipless::metrics::Metrics;
+use skipless::model::ModelWeights;
+use skipless::tensor::Mat;
+use skipless::tokenizer::Bpe;
+use skipless::util::bench::{black_box, Bencher};
+use skipless::util::json::Json;
+use skipless::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+fn main() {
+    println!("# microbench — per-layer hot-path instrumentation");
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut b = Bencher::new("microbench");
+
+    // ---- linalg: the projection GEMMs the decode path is made of
+    for &n in &[256usize, 512, 1024] {
+        let a = Mat::randn(n, n, 0.1, &mut rng);
+        let bm = Mat::randn(n, n, 0.1, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        let s = b.case_items(&format!("gemm_{n}x{n}"), Some(flops), || {
+            black_box(matmul(&a, &bm));
+        });
+        let gflops = s.items_per_sec().unwrap_or(0.0) / 1e9;
+        eprintln!("    -> {gflops:.2} GFLOP/s");
+    }
+    // batch-1 decode GEMV (the memory-bound shape the paper reasons about)
+    let w640 = Mat::randn(640, 640, 0.1, &mut rng);
+    let x640: Vec<f32> = (0..640).map(|i| (i as f32 * 0.01).sin()).collect();
+    b.case_items("gemv_640 (batch-1 projection)", Some(2.0 * 640.0 * 640.0), || {
+        black_box(matvec(&w640, &x640));
+    });
+    let q = Mat::randn(1, 64, 0.5, &mut rng);
+    let kcache = Mat::randn(256, 64, 0.5, &mut rng);
+    b.case("attention_scores_1x256ctx", || {
+        black_box(matmul_transb(&q, &kcache));
+    });
+    let m256 = Mat::randn(256, 256, 0.1, &mut rng);
+    b.case("lu_inverse_256 (surgery unit)", || {
+        black_box(inverse(&m256).unwrap());
+    });
+
+    // ---- paged KV cache ops
+    let cfg = ModelConfig::e2e_100m();
+    let mut cache = KvCache::new(&cfg, 16, 64 << 20);
+    let id = cache.alloc_seq(4).unwrap();
+    let krow = vec![0.5f32; cfg.e()];
+    for _ in 0..64 {
+        for l in 0..cfg.n_layers {
+            cache.append(id, l, &krow, &krow).unwrap();
+        }
+        cache.advance(id).unwrap();
+    }
+    let (mut kbuf, mut vbuf) = (Vec::new(), Vec::new());
+    b.case("kvcache_append_one_layer", || {
+        // append+rollback cycle is not possible; measure gather (dominant)
+        black_box(cache.gather(id, 0, &mut kbuf, &mut vbuf).unwrap());
+    });
+
+    // ---- tokenizer / codec
+    let corpus: String = "the quick brown fox jumps over the lazy dog. ".repeat(40);
+    let bpe = Bpe::train(&corpus, 512);
+    b.case_items("bpe_encode_1k_chars", Some(1000.0), || {
+        black_box(bpe.encode(&corpus[..1000]));
+    });
+    let json_src = r#"{"op":"generate","prompt":[1,2,3,4,5,6,7,8],"max_new_tokens":16,"temperature":0.7,"top_k":40,"top_p":0.95,"seed":42}"#;
+    b.case("json_parse_request", || {
+        black_box(Json::parse(json_src).unwrap());
+    });
+
+    // ---- engine decode step (tiny model → scheduler overhead visible)
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 3);
+    let mut eng = CpuEngine::new(w.clone(), 16, 32 << 20);
+    let (sid, _) = eng.prefill(&[1, 2, 3]).unwrap();
+    b.case("cpu_engine_decode_b1_tiny", || {
+        black_box(eng.decode_batch(&[DecodeInput { seq: sid, token: 5 }]).unwrap());
+    });
+
+    // ---- full scheduler step (admit + decode + retire) on tiny model
+    b.case("scheduler_full_request_tiny(8 new tokens)", || {
+        let mut s = Scheduler::new(
+            CpuEngine::new(w.clone(), 16, 32 << 20),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        );
+        s.submit(Request::greedy(1, vec![1, 2, 3], 8));
+        black_box(s.run_to_completion());
+    });
+
+    b.finish();
+
+    // ---- scheduler-policy ablation (DESIGN.md §Perf: batching policy) ----
+    // 16 requests × 8 tokens; sweep admission aggressiveness and the
+    // max-running cap; report wall, TTFT p95 and throughput. More admits
+    // per step raises throughput but lets prefills stall running decodes
+    // (TTFT/TPOT interference) — the classic continuous-batching tradeoff.
+    eprintln!("\n  scheduler ablation (16 req × 8 tok, tiny-gqa):");
+    eprintln!("  admits/step  max_running   wall        ttft p95     tok/s");
+    for (admits, max_running) in [(1usize, 2usize), (1, 8), (4, 8), (16, 16)] {
+        let metrics = Arc::new(Metrics::new());
+        let mut s = Scheduler::new(
+            CpuEngine::new(w.clone(), 16, 64 << 20),
+            SchedulerCfg {
+                max_running,
+                admits_per_step: admits,
+            },
+            Arc::clone(&metrics),
+        );
+        for i in 0..16u64 {
+            s.submit(Request::greedy(i, vec![(i % 7 + 1) as u32, 2, 3], 8));
+        }
+        let t0 = std::time::Instant::now();
+        let done = s.run_to_completion();
+        let wall = t0.elapsed();
+        assert_eq!(done.len(), 16);
+        let toks: usize = done.iter().map(|r| r.tokens.len()).sum();
+        eprintln!(
+            "  {:>11}  {:>11}   {:>9}   {:>9}   {:>7.0}",
+            admits,
+            max_running,
+            skipless::util::bench::fmt_dur(wall),
+            skipless::util::bench::fmt_dur(metrics.ttft.quantile(0.95)),
+            toks as f64 / wall.as_secs_f64()
+        );
+        println!(
+            "{{\"suite\":\"scheduler_ablation\",\"admits\":{admits},\"max_running\":{max_running},\"wall_us\":{:.1},\"ttft_p95_us\":{},\"tok_per_s\":{:.1}}}",
+            wall.as_secs_f64() * 1e6,
+            metrics.ttft.quantile(0.95).as_micros(),
+            toks as f64 / wall.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench for the paper's §3 table: regenerates every cell (weight counts,
+//! savings, batch-1 speedups) and times the analytic pipeline. The table
+//! rows are printed so EXPERIMENTS.md can quote them directly.
+
+use skipless::bandwidth::{predicted_speedup, Hardware};
+use skipless::config::{ModelConfig, Variant};
+use skipless::params::{batch1_speedup, count_weights, savings_fraction, table3_report};
+use skipless::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("# table3 — paper §3 reproduction");
+    for preset in ["pythia-6.9b", "mistral-7b"] {
+        let cfg = ModelConfig::preset(preset).unwrap();
+        eprintln!("{}", table3_report(&cfg));
+    }
+    // hard assertions: the paper's published cells
+    let py = ModelConfig::pythia_6_9b();
+    let mi = ModelConfig::mistral_7b();
+    assert_eq!(count_weights(&py, Variant::Vanilla).total(), 6_855_327_744);
+    assert_eq!(count_weights(&py, Variant::MergedQP).total(), 5_781_585_920);
+    assert_eq!(count_weights(&mi, Variant::Vanilla).total(), 7_241_465_856);
+    assert_eq!(count_weights(&mi, Variant::MergedQP).total(), 6_167_724_032);
+    assert!((savings_fraction(&py, Variant::MergedQP) - 0.16).abs() < 0.01);
+    assert!((savings_fraction(&mi, Variant::MergedQP) - 0.15).abs() < 0.01);
+    assert!((batch1_speedup(&py, Variant::MergedQP) - 1.19).abs() < 0.01);
+    assert!((batch1_speedup(&mi, Variant::MergedQP) - 1.17).abs() < 0.01);
+    eprintln!("all §3 cells match the paper ✓");
+
+    let mut b = Bencher::new("table3");
+    b.case("count_weights(mistral-7b)", || {
+        black_box(count_weights(&mi, Variant::MergedQP).total());
+    });
+    b.case("full_table_report(both models)", || {
+        black_box(table3_report(&py));
+        black_box(table3_report(&mi));
+    });
+    let hw = Hardware::a100_like();
+    b.case("bandwidth_model_sweep(6 batches x 2 ctx)", || {
+        for batch in [1usize, 4, 16, 64, 256, 1024] {
+            for ctx in [512usize, 4096] {
+                black_box(predicted_speedup(&mi, Variant::MergedQP, &hw, batch, ctx, 2.0));
+            }
+        }
+    });
+    b.finish();
+}

@@ -1,0 +1,542 @@
+//! Model configuration: dimensions, attention type, block layout, FFN type,
+//! and the named presets used throughout the paper's §3 table.
+//!
+//! The same presets exist in `python/compile/configs.py`; a pytest
+//! cross-checks the JSON emitted here against the python side so the two
+//! layers can never drift.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// Attention sharing scheme. Determines `e`, the K/V projection output dim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttentionKind {
+    /// Multi-head attention: every head has its own K/V (`e = d`).
+    Mha,
+    /// Multi-query attention: one shared KV head (`e = d / n_heads`).
+    Mqa,
+    /// Grouped-query attention (`e = d · n_kv_heads / n_heads`).
+    Gqa,
+}
+
+impl AttentionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AttentionKind::Mha => "mha",
+            AttentionKind::Mqa => "mqa",
+            AttentionKind::Gqa => "gqa",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mha" => Some(AttentionKind::Mha),
+            "mqa" => Some(AttentionKind::Mqa),
+            "gqa" => Some(AttentionKind::Gqa),
+            _ => None,
+        }
+    }
+}
+
+/// Attention/FFN arrangement within a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockLayout {
+    /// Attention feeds the FFN (vanilla; paper Fig. 1).
+    Serial,
+    /// Attention and FFN read the same input and their outputs add
+    /// (GPT-J / PaLM / Pythia style; paper Fig. 3).
+    Parallel,
+}
+
+impl BlockLayout {
+    pub fn name(self) -> &'static str {
+        match self {
+            BlockLayout::Serial => "serial",
+            BlockLayout::Parallel => "parallel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" => Some(BlockLayout::Serial),
+            "parallel" => Some(BlockLayout::Parallel),
+            _ => None,
+        }
+    }
+}
+
+/// FFN nonlinearity family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FfnKind {
+    /// Two matrices: `O · act(M x)`. Effective first-layer width `f' = f`.
+    Mlp,
+    /// GLU variant (SwiGLU): gate and up projections combined by pointwise
+    /// product — the first "layer" is two matrices, `f' = 2f` (paper §1).
+    SwiGlu,
+}
+
+impl FfnKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FfnKind::Mlp => "mlp",
+            FfnKind::SwiGlu => "swiglu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mlp" => Some(FfnKind::Mlp),
+            "swiglu" => Some(FfnKind::SwiGlu),
+            _ => None,
+        }
+    }
+}
+
+/// Which weight-merged architecture variant to run (paper Figs. 1 & 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Unmerged baseline (Fig. 1a): Q, K, V, P all present.
+    Vanilla,
+    /// Fig. 1(b): Q and P removed ("KV-weights are all you need").
+    /// Valid for MHA, MQA, and GQA.
+    MergedQP,
+    /// Fig. 1(c): K and P removed. Requires `e = d` (MHA only).
+    MergedKP,
+    /// Fig. 1(d): V and P removed. Requires `e = d` (MHA only);
+    /// parallel form is He & Hofmann's simplified block.
+    MergedVP,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Vanilla => "vanilla",
+            Variant::MergedQP => "merged_qp",
+            Variant::MergedKP => "merged_kp",
+            Variant::MergedVP => "merged_vp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "vanilla" => Some(Variant::Vanilla),
+            "merged_qp" | "qp" => Some(Variant::MergedQP),
+            "merged_kp" | "kp" => Some(Variant::MergedKP),
+            "merged_vp" | "vp" => Some(Variant::MergedVP),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Variant; 4] {
+        [
+            Variant::Vanilla,
+            Variant::MergedQP,
+            Variant::MergedKP,
+            Variant::MergedVP,
+        ]
+    }
+}
+
+/// Errors from config validation / parsing.
+#[derive(Debug, Clone)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Full model hyperparameters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Embedding dimension `d`.
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    /// FFN hidden dimension `f`.
+    pub hidden_dim: usize,
+    pub vocab_size: usize,
+    /// Maximum sequence length the KV cache provisions for.
+    pub max_seq_len: usize,
+    pub attention: AttentionKind,
+    pub layout: BlockLayout,
+    pub ffn: FfnKind,
+    /// Tie input and output embeddings? (paper counts them separately; all
+    /// presets here use untied, matching the §3 table's `2·d·vocab`.)
+    pub tied_embeddings: bool,
+}
+
+impl ModelConfig {
+    /// Head dimension `d / n_heads`.
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// `e`: output dimension of the K and V projections (paper §1).
+    /// MHA: `e = d`; MQA: `e = d/n_heads`; GQA: `e = d·n_kv_heads/n_heads`.
+    pub fn e(&self) -> usize {
+        self.dim * self.n_kv_heads / self.n_heads
+    }
+
+    /// Effective first-FFN-layer width `f'` (`2f` for GLU variants).
+    pub fn f_prime(&self) -> usize {
+        match self.ffn {
+            FfnKind::Mlp => self.hidden_dim,
+            FfnKind::SwiGlu => 2 * self.hidden_dim,
+        }
+    }
+
+    /// Number of query heads sharing each KV head.
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Is a merged variant mathematically valid for this config?
+    /// K/P and V/P removal require `e = d` (paper Fig. 1c/1d).
+    pub fn supports(&self, v: Variant) -> bool {
+        match v {
+            Variant::Vanilla | Variant::MergedQP => true,
+            Variant::MergedKP | Variant::MergedVP => self.e() == self.dim,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |m: String| Err(ConfigError(m));
+        if self.dim == 0 || self.n_layers == 0 || self.n_heads == 0 {
+            return err("dim, n_layers, n_heads must be positive".into());
+        }
+        if self.dim % self.n_heads != 0 {
+            return err(format!("dim {} not divisible by n_heads {}", self.dim, self.n_heads));
+        }
+        if self.n_kv_heads == 0 || self.n_heads % self.n_kv_heads != 0 {
+            return err(format!(
+                "n_heads {} not divisible by n_kv_heads {}",
+                self.n_heads, self.n_kv_heads
+            ));
+        }
+        match self.attention {
+            AttentionKind::Mha if self.n_kv_heads != self.n_heads => {
+                return err("MHA requires n_kv_heads == n_heads".into())
+            }
+            AttentionKind::Mqa if self.n_kv_heads != 1 => {
+                return err("MQA requires n_kv_heads == 1".into())
+            }
+            _ => {}
+        }
+        if self.vocab_size == 0 || self.hidden_dim == 0 || self.max_seq_len == 0 {
+            return err("vocab_size, hidden_dim, max_seq_len must be positive".into());
+        }
+        Ok(())
+    }
+
+    // ---- presets ----------------------------------------------------------
+
+    /// Pythia-6.9B (paper §3, column 1): parallel blocks, MHA, MLP FFN.
+    pub fn pythia_6_9b() -> Self {
+        Self {
+            name: "pythia-6.9b".into(),
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            hidden_dim: 16384,
+            vocab_size: 50400,
+            max_seq_len: 2048,
+            attention: AttentionKind::Mha,
+            layout: BlockLayout::Parallel,
+            ffn: FfnKind::Mlp,
+            tied_embeddings: false,
+        }
+    }
+
+    /// Mistral-7B (paper §3, column 2): serial blocks, GQA, SwiGLU FFN.
+    pub fn mistral_7b() -> Self {
+        Self {
+            name: "mistral-7b".into(),
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            hidden_dim: 14336,
+            vocab_size: 32000,
+            max_seq_len: 4096,
+            attention: AttentionKind::Gqa,
+            layout: BlockLayout::Serial,
+            ffn: FfnKind::SwiGlu,
+            tied_embeddings: false,
+        }
+    }
+
+    /// Tiny MHA model for CPU tests and the end-to-end example.
+    pub fn tiny_mha() -> Self {
+        Self {
+            name: "tiny-mha".into(),
+            dim: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 4,
+            hidden_dim: 128,
+            vocab_size: 256,
+            max_seq_len: 128,
+            attention: AttentionKind::Mha,
+            layout: BlockLayout::Serial,
+            ffn: FfnKind::Mlp,
+            tied_embeddings: false,
+        }
+    }
+
+    /// Tiny GQA model with SwiGLU — a Mistral-7B scale model shrunk to CPU
+    /// size (same head grouping ratio 32:8 → 4:1).
+    pub fn tiny_gqa() -> Self {
+        Self {
+            name: "tiny-gqa".into(),
+            dim: 64,
+            n_layers: 2,
+            n_heads: 8,
+            n_kv_heads: 2,
+            hidden_dim: 112,
+            vocab_size: 256,
+            max_seq_len: 128,
+            attention: AttentionKind::Gqa,
+            layout: BlockLayout::Serial,
+            ffn: FfnKind::SwiGlu,
+            tied_embeddings: false,
+        }
+    }
+
+    /// Tiny MQA model.
+    pub fn tiny_mqa() -> Self {
+        Self {
+            name: "tiny-mqa".into(),
+            dim: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 1,
+            hidden_dim: 128,
+            vocab_size: 256,
+            max_seq_len: 128,
+            attention: AttentionKind::Mqa,
+            layout: BlockLayout::Serial,
+            ffn: FfnKind::Mlp,
+            tied_embeddings: false,
+        }
+    }
+
+    /// Tiny parallel-block MHA model (Pythia shape shrunk; paper Fig. 3).
+    pub fn tiny_parallel() -> Self {
+        Self {
+            name: "tiny-parallel".into(),
+            dim: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 4,
+            hidden_dim: 128,
+            vocab_size: 256,
+            max_seq_len: 128,
+            attention: AttentionKind::Mha,
+            layout: BlockLayout::Parallel,
+            ffn: FfnKind::Mlp,
+            tied_embeddings: false,
+        }
+    }
+
+    /// ~100M-parameter GQA model used by the serving end-to-end example —
+    /// big enough that decode is genuinely weight-streaming-bound on CPU.
+    ///
+    /// Uses the MLP FFN rather than SwiGLU: a *random-init* deep skipless
+    /// SwiGLU stack is scale-quadratic per block and numerically chaotic
+    /// (DESIGN.md §Signal-propagation); GELU is degree-1 in scale and
+    /// stays stable at 12 layers. GQA is what matters for the paper's
+    /// claim (Q/P removal where K/P / V/P removal is impossible).
+    pub fn e2e_100m() -> Self {
+        Self {
+            name: "e2e-100m".into(),
+            dim: 640,
+            n_layers: 12,
+            n_heads: 10,
+            n_kv_heads: 2,
+            hidden_dim: 2688,
+            vocab_size: 4096,
+            max_seq_len: 512,
+            attention: AttentionKind::Gqa,
+            layout: BlockLayout::Serial,
+            ffn: FfnKind::Mlp,
+            tied_embeddings: false,
+        }
+    }
+
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "pythia-6.9b" => Some(Self::pythia_6_9b()),
+            "mistral-7b" => Some(Self::mistral_7b()),
+            "tiny-mha" => Some(Self::tiny_mha()),
+            "tiny-gqa" => Some(Self::tiny_gqa()),
+            "tiny-mqa" => Some(Self::tiny_mqa()),
+            "tiny-parallel" => Some(Self::tiny_parallel()),
+            "e2e-100m" => Some(Self::e2e_100m()),
+            _ => None,
+        }
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &[
+            "pythia-6.9b",
+            "mistral-7b",
+            "tiny-mha",
+            "tiny-gqa",
+            "tiny-mqa",
+            "tiny-parallel",
+            "e2e-100m",
+        ]
+    }
+
+    // ---- JSON round-trip --------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("dim", Json::num(self.dim as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("n_kv_heads", Json::num(self.n_kv_heads as f64)),
+            ("hidden_dim", Json::num(self.hidden_dim as f64)),
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("max_seq_len", Json::num(self.max_seq_len as f64)),
+            ("attention", Json::str(self.attention.name())),
+            ("layout", Json::str(self.layout.name())),
+            ("ffn", Json::str(self.ffn.name())),
+            ("tied_embeddings", Json::Bool(self.tied_embeddings)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let field = |k: &str| j.get(k).ok_or_else(|| ConfigError(format!("missing field '{k}'")));
+        let num = |k: &str| -> Result<usize, ConfigError> {
+            field(k)?
+                .as_usize()
+                .ok_or_else(|| ConfigError(format!("field '{k}' must be a non-negative integer")))
+        };
+        let s = |k: &str| -> Result<String, ConfigError> {
+            Ok(field(k)?
+                .as_str()
+                .ok_or_else(|| ConfigError(format!("field '{k}' must be a string")))?
+                .to_string())
+        };
+        let cfg = Self {
+            name: s("name")?,
+            dim: num("dim")?,
+            n_layers: num("n_layers")?,
+            n_heads: num("n_heads")?,
+            n_kv_heads: num("n_kv_heads")?,
+            hidden_dim: num("hidden_dim")?,
+            vocab_size: num("vocab_size")?,
+            max_seq_len: num("max_seq_len")?,
+            attention: AttentionKind::parse(&s("attention")?)
+                .ok_or_else(|| ConfigError("bad attention kind".into()))?,
+            layout: BlockLayout::parse(&s("layout")?)
+                .ok_or_else(|| ConfigError("bad layout".into()))?,
+            ffn: FfnKind::parse(&s("ffn")?).ok_or_else(|| ConfigError("bad ffn kind".into()))?,
+            tied_embeddings: j
+                .get("tied_embeddings")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file or a preset name.
+    pub fn load(spec: &str) -> Result<Self, ConfigError> {
+        if let Some(p) = Self::preset(spec) {
+            return Ok(p);
+        }
+        let text = std::fs::read_to_string(spec)
+            .map_err(|e| ConfigError(format!("cannot read '{spec}': {e} (and not a preset; presets: {:?})", Self::preset_names())))?;
+        let j = Json::parse(&text).map_err(|e| ConfigError(format!("{spec}: {e}")))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in ModelConfig::preset_names() {
+            let c = ModelConfig::preset(name).unwrap();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn e_matches_paper_table() {
+        // §3 table: Pythia e = 4096 (MHA), Mistral e = 1024 (GQA 32:8).
+        assert_eq!(ModelConfig::pythia_6_9b().e(), 4096);
+        assert_eq!(ModelConfig::mistral_7b().e(), 1024);
+        // MQA: e = d / n_heads
+        assert_eq!(ModelConfig::tiny_mqa().e(), 16);
+    }
+
+    #[test]
+    fn f_prime_glu_doubling() {
+        assert_eq!(ModelConfig::pythia_6_9b().f_prime(), 16384);
+        assert_eq!(ModelConfig::mistral_7b().f_prime(), 2 * 14336);
+    }
+
+    #[test]
+    fn variant_support_rules() {
+        let mha = ModelConfig::tiny_mha();
+        let gqa = ModelConfig::tiny_gqa();
+        let mqa = ModelConfig::tiny_mqa();
+        for v in Variant::all() {
+            assert!(mha.supports(v), "MHA supports all variants");
+        }
+        // the paper's novelty: only QP removal works beyond MHA
+        assert!(gqa.supports(Variant::MergedQP));
+        assert!(!gqa.supports(Variant::MergedKP));
+        assert!(!gqa.supports(Variant::MergedVP));
+        assert!(mqa.supports(Variant::MergedQP));
+        assert!(!mqa.supports(Variant::MergedVP));
+    }
+
+    #[test]
+    fn json_roundtrip_all_presets() {
+        for name in ModelConfig::preset_names() {
+            let c = ModelConfig::preset(name).unwrap();
+            let j = c.to_json().to_string_pretty();
+            let back = ModelConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(back, c, "{name}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_invalid() {
+        let mut c = ModelConfig::tiny_mha();
+        c.n_heads = 3; // dim 64 % 3 != 0
+        assert!(ModelConfig::from_json(&c.to_json()).is_err());
+        let missing = Json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(ModelConfig::from_json(&missing).is_err());
+    }
+
+    #[test]
+    fn validate_attention_consistency() {
+        let mut c = ModelConfig::tiny_mha();
+        c.attention = AttentionKind::Mqa; // but n_kv_heads == 4
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig::tiny_gqa();
+        c.n_kv_heads = 3; // 8 % 3 != 0
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn load_preset_and_missing_file() {
+        assert!(ModelConfig::load("mistral-7b").is_ok());
+        assert!(ModelConfig::load("/nonexistent/cfg.json").is_err());
+    }
+}

@@ -1,0 +1,407 @@
+//! Pure-Rust engine: the [`crate::model`] forward pass run against the
+//! paged [`crate::kvcache`], with **batched decode** — the projections and
+//! FFN of all running sequences execute as shared GEMMs `(B,d)·(d,·)`, so
+//! each weight matrix is streamed from memory once per step rather than
+//! once per sequence. That is precisely the weights-bandwidth economics the
+//! paper's §3 speedup model assumes, which makes this engine a faithful
+//! testbed for the vanilla-vs-merged decode benchmarks.
+
+use crate::config::{BlockLayout, ModelConfig, Variant};
+use crate::coordinator::engine::{DecodeInput, Engine, EngineError};
+use crate::kvcache::{KvCache, SeqId};
+use crate::linalg::matmul;
+use crate::model::attention::HeadLayout;
+use crate::model::ffn::ffn_forward;
+use crate::model::{rope, ModelWeights};
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+
+pub struct CpuEngine {
+    weights: ModelWeights,
+    cache: KvCache,
+    /// live sequence positions (mirrors cache state, for fast checks)
+    positions: BTreeMap<SeqId, usize>,
+    // gather scratch (reused across steps to keep the hot loop allocation-free)
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl CpuEngine {
+    /// `cache_budget_bytes` bounds the paged KV pool.
+    pub fn new(weights: ModelWeights, block_tokens: usize, cache_budget_bytes: usize) -> Self {
+        weights.check_shapes().expect("engine weights");
+        let cache = KvCache::new(&weights.cfg, block_tokens, cache_budget_bytes);
+        Self {
+            weights,
+            cache,
+            positions: BTreeMap::new(),
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+        }
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.weights.variant
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        &self.weights
+    }
+
+    fn head_layout(&self) -> HeadLayout {
+        HeadLayout {
+            n_heads: self.weights.cfg.n_heads,
+            n_kv_heads: self.weights.cfg.n_kv_heads,
+            head_dim: self.weights.cfg.head_dim(),
+        }
+    }
+
+    fn proj(x: &Mat, m: &Option<Mat>) -> Mat {
+        match m {
+            Some(m) => matmul(x, m),
+            None => x.clone(),
+        }
+    }
+
+    /// Attention for one sequence against its gathered cache; `q_rot` is the
+    /// already-rotated query row; the cache already contains the current
+    /// position. Writes the head-concat output into `out`.
+    fn attend_cached(&self, q_rot: &[f32], t: usize, out: &mut [f32]) {
+        let layout = self.head_layout();
+        let hd = layout.head_dim;
+        let e = layout.e();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0.0f32; t];
+        for h in 0..layout.n_heads {
+            let g = layout.kv_of(h);
+            let qh = &q_rot[h * hd..(h + 1) * hd];
+            for (r, s) in scores.iter_mut().enumerate() {
+                let krow = &self.scratch_k[r * e + g * hd..r * e + (g + 1) * hd];
+                let mut acc = 0.0f32;
+                for i in 0..hd {
+                    acc += qh[i] * krow[i];
+                }
+                *s = acc * scale;
+            }
+            let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut sum = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            let inv = 1.0 / sum;
+            let oh = &mut out[h * hd..(h + 1) * hd];
+            oh.fill(0.0);
+            for (r, &s) in scores.iter().enumerate() {
+                let w = s * inv;
+                let vrow = &self.scratch_v[r * e + g * hd..r * e + (g + 1) * hd];
+                for i in 0..hd {
+                    oh[i] += w * vrow[i];
+                }
+            }
+        }
+    }
+}
+
+impl Engine for CpuEngine {
+    fn cfg(&self) -> &ModelConfig {
+        &self.weights.cfg
+    }
+
+    fn describe(&self) -> String {
+        format!("cpu/{}", self.weights.variant.name())
+    }
+
+    fn can_admit(&self, prompt_len: usize) -> bool {
+        self.cache.can_admit(prompt_len)
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SeqId, Vec<f32>), EngineError> {
+        if tokens.is_empty() {
+            return Err(EngineError::BadSequence("empty prompt".into()));
+        }
+        let id = self
+            .cache
+            .alloc_seq(tokens.len())
+            .map_err(|e| EngineError::CapacityExhausted(e.to_string()))?;
+        let w = &self.weights;
+        let cfg = &w.cfg;
+        let hd = cfg.head_dim();
+        let mut x = w.embed_tokens(tokens);
+        // run all layers, collecting each layer's (rotated-K, V) to write
+        // into the paged cache position-major afterwards (the cache's
+        // append/advance protocol is per-position).
+        let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(w.blocks.len());
+        for b in w.blocks.iter() {
+            let k = Self::proj(&x, &b.k);
+            let v = Self::proj(&x, &b.v);
+            let mut k_rot = k.clone();
+            rope::apply(&mut k_rot, hd, 0, rope::BASE);
+            let q = Self::proj(&x, &b.q);
+            let a = crate::model::attention::causal_attention(&q, &k, &v, self.head_layout(), 0);
+            layer_kv.push((k_rot, v));
+            x = match cfg.layout {
+                BlockLayout::Serial => {
+                    let p = Self::proj(&a, &b.p);
+                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                }
+                BlockLayout::Parallel => {
+                    let post = if b.c.is_some() { &b.c } else { &b.p };
+                    let attn_out = Self::proj(&a, post);
+                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                }
+            };
+        }
+        for r in 0..tokens.len() {
+            for (li, (k_rot, v)) in layer_kv.iter().enumerate() {
+                self.cache
+                    .append(id, li, k_rot.row(r), v.row(r))
+                    .map_err(|e| EngineError::CapacityExhausted(e.to_string()))?;
+            }
+            self.cache
+                .advance(id)
+                .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+        }
+        self.positions.insert(id, tokens.len());
+        let logits = matmul(&x.row_slice(tokens.len() - 1, tokens.len()), &w.unembed);
+        Ok((id, logits.into_vec()))
+    }
+
+    fn decode_batch(&mut self, inputs: &[DecodeInput]) -> Result<Vec<Vec<f32>>, EngineError> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let bsz = inputs.len();
+        let cfg = self.weights.cfg.clone();
+        let hd = cfg.head_dim();
+        let layout_kind = cfg.layout;
+        // batched embedding lookup: (B, d)
+        let toks: Vec<u32> = inputs.iter().map(|i| i.token).collect();
+        let mut x = self.weights.embed_tokens(&toks);
+        // per-seq positions (checked up front)
+        let mut pos = Vec::with_capacity(bsz);
+        for i in inputs {
+            let p = *self
+                .positions
+                .get(&i.seq)
+                .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", i.seq)))?;
+            if p >= cfg.max_seq_len {
+                return Err(EngineError::CapacityExhausted(format!(
+                    "{:?} at max_seq_len {}",
+                    i.seq, cfg.max_seq_len
+                )));
+            }
+            pos.push(p);
+        }
+
+        let n_layers = self.weights.blocks.len();
+        for li in 0..n_layers {
+            let b = &self.weights.blocks[li];
+            // shared projections: each weight matrix streamed ONCE for the
+            // whole batch — the batching economics of the paper's model.
+            let mut q = Self::proj(&x, &b.q);
+            let mut k = Self::proj(&x, &b.k);
+            let v = Self::proj(&x, &b.v);
+            // per-row RoPE at each sequence's own position
+            for (r, &p) in pos.iter().enumerate() {
+                for h in 0..cfg.n_heads {
+                    rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+                }
+                for g in 0..cfg.n_kv_heads {
+                    rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                }
+            }
+            // append to paged cache + per-seq attention
+            let mut a = Mat::zeros(bsz, cfg.dim);
+            for (r, inp) in inputs.iter().enumerate() {
+                self.cache
+                    .append(inp.seq, li, k.row(r), v.row(r))
+                    .map_err(|e| EngineError::CapacityExhausted(e.to_string()))?;
+                let (mut sk, mut sv) = (
+                    std::mem::take(&mut self.scratch_k),
+                    std::mem::take(&mut self.scratch_v),
+                );
+                // gather includes the just-appended position only after
+                // advance; gather len is st.len (= pos[r]), so append first,
+                // then temporarily read pos+1 rows: gather uses st.len —
+                // advance below; include current row manually.
+                self.cache
+                    .gather(inp.seq, li, &mut sk, &mut sv)
+                    .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+                sk.extend_from_slice(k.row(r));
+                sv.extend_from_slice(v.row(r));
+                self.scratch_k = sk;
+                self.scratch_v = sv;
+                self.attend_cached(q.row(r), pos[r] + 1, a.row_mut(r));
+            }
+            // post-attention + FFN, batched
+            x = match layout_kind {
+                BlockLayout::Serial => {
+                    let p = Self::proj(&a, &b.p);
+                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                }
+                BlockLayout::Parallel => {
+                    let post = if b.c.is_some() { &b.c } else { &b.p };
+                    let attn_out = Self::proj(&a, post);
+                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                }
+            };
+        }
+        // one advance per sequence per token
+        for inp in inputs {
+            self.cache
+                .advance(inp.seq)
+                .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+            *self.positions.get_mut(&inp.seq).unwrap() += 1;
+        }
+        let logits = matmul(&x, &self.weights.unembed);
+        Ok((0..bsz).map(|r| logits.row(r).to_vec()).collect())
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        let _ = self.cache.free_seq(seq);
+        self.positions.remove(&seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{decode_step, prefill as model_prefill};
+    use crate::surgery::{transform, Options};
+
+    fn engine(name: &str, seed: u64) -> CpuEngine {
+        let cfg = ModelConfig::preset(name).unwrap();
+        let w = ModelWeights::init_vanilla(&cfg, seed);
+        CpuEngine::new(w, 8, 8 << 20)
+    }
+
+    /// The engine path (paged cache, batched decode) must agree with the
+    /// plain model path (DecodeState) exactly.
+    #[test]
+    fn engine_matches_model_forward() {
+        for name in ["tiny-mha", "tiny-gqa", "tiny-parallel"] {
+            let mut eng = engine(name, 50);
+            let w = eng.weights().clone();
+            let prompt = [4u32, 9, 2];
+            let (id, logits0) = eng.prefill(&prompt).unwrap();
+            let (ml, mut mstate) = model_prefill(&w, &prompt);
+            let want0 = ml.row(2);
+            let err0 = logits0
+                .iter()
+                .zip(want0)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err0 < 1e-4, "{name} prefill err {err0}");
+            // several decode steps
+            let mut tok = 7u32;
+            for step in 0..4 {
+                let got = eng
+                    .decode_batch(&[DecodeInput { seq: id, token: tok }])
+                    .unwrap();
+                let want = decode_step(&w, &mut mstate, tok);
+                let err = got[0]
+                    .iter()
+                    .zip(want.row(0))
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(err < 1e-3, "{name} step {step} err {err}");
+                tok = (tok + 3) % 250;
+            }
+        }
+    }
+
+    /// Batched decode must equal one-at-a-time decode (batch invariance).
+    #[test]
+    fn batched_equals_sequential() {
+        let mut eng_b = engine("tiny-gqa", 51);
+        let mut eng_s = engine("tiny-gqa", 51);
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8], &[5, 5, 5, 5]];
+        let ids_b: Vec<SeqId> = prompts.iter().map(|p| eng_b.prefill(p).unwrap().0).collect();
+        let ids_s: Vec<SeqId> = prompts.iter().map(|p| eng_s.prefill(p).unwrap().0).collect();
+        let toks = [11u32, 22, 33];
+        let batch: Vec<DecodeInput> = ids_b
+            .iter()
+            .zip(toks)
+            .map(|(&seq, token)| DecodeInput { seq, token })
+            .collect();
+        let got = eng_b.decode_batch(&batch).unwrap();
+        for (i, (&seq, token)) in ids_s.iter().zip(toks).enumerate() {
+            let want = eng_s.decode_batch(&[DecodeInput { seq, token }]).unwrap();
+            let err = got[i]
+                .iter()
+                .zip(&want[0])
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-4, "seq {i} err {err}");
+        }
+    }
+
+    /// Vanilla and surgically-merged engines must produce identical logits.
+    #[test]
+    fn merged_engine_equivalent() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 52);
+        let wm = transform(&w, Variant::MergedQP, Options::default()).unwrap();
+        let mut e1 = CpuEngine::new(w, 8, 8 << 20);
+        let mut e2 = CpuEngine::new(wm, 8, 8 << 20);
+        let (id1, l1) = e1.prefill(&[3, 1, 4]).unwrap();
+        let (id2, l2) = e2.prefill(&[3, 1, 4]).unwrap();
+        let err = l1
+            .iter()
+            .zip(&l2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-2, "prefill err {err}");
+        let g1 = e1.decode_batch(&[DecodeInput { seq: id1, token: 5 }]).unwrap();
+        let g2 = e2.decode_batch(&[DecodeInput { seq: id2, token: 5 }]).unwrap();
+        let err = g1[0]
+            .iter()
+            .zip(&g2[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-2, "decode err {err}");
+    }
+
+    #[test]
+    fn capacity_errors_surface() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 53);
+        // pool with ~1 block
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 8;
+        let mut eng = CpuEngine::new(w, 8, bytes_per_block);
+        let _ = eng.prefill(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        match eng.prefill(&[1, 2, 3]) {
+            Err(EngineError::CapacityExhausted(_)) => {}
+            other => panic!("expected capacity error, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn release_frees_capacity() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 54);
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 8;
+        let mut eng = CpuEngine::new(w, 8, bytes_per_block);
+        let (id, _) = eng.prefill(&[1, 2, 3]).unwrap();
+        assert!(!eng.can_admit(8));
+        eng.release(id);
+        assert!(eng.can_admit(8));
+    }
+
+    #[test]
+    fn decode_unknown_seq_rejected() {
+        let mut eng = engine("tiny-mha", 55);
+        assert!(matches!(
+            eng.decode_batch(&[DecodeInput {
+                seq: SeqId(42),
+                token: 1
+            }]),
+            Err(EngineError::BadSequence(_))
+        ));
+    }
+}

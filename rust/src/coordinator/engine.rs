@@ -1,0 +1,71 @@
+//! The engine abstraction the scheduler drives.
+//!
+//! An engine owns model weights and per-sequence KV state and exposes two
+//! operations: `prefill` (admit a prompt, return last-position logits) and
+//! `decode_batch` (advance a batch of sequences one token). The coordinator
+//! is engine-agnostic: [`super::cpu_engine::CpuEngine`] runs the pure-Rust
+//! model against the paged cache; [`crate::runtime::PjrtEngine`] runs the
+//! AOT-compiled JAX artifacts through PJRT.
+
+use crate::config::ModelConfig;
+use crate::kvcache::SeqId;
+use std::fmt;
+
+#[derive(Debug)]
+pub enum EngineError {
+    /// Not enough KV-cache capacity (caller should queue or preempt).
+    CapacityExhausted(String),
+    /// Sequence unknown or in a bad state.
+    BadSequence(String),
+    /// Backend failure (PJRT, artifact mismatch, ...).
+    Backend(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::CapacityExhausted(m) => write!(f, "capacity exhausted: {m}"),
+            EngineError::BadSequence(m) => write!(f, "bad sequence: {m}"),
+            EngineError::Backend(m) => write!(f, "engine backend error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// One sequence's decode input for a batched step.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeInput {
+    pub seq: SeqId,
+    /// The token sampled at the previous step (to be consumed now).
+    pub token: u32,
+}
+
+/// NB: not `Send`-bounded — PJRT client handles are `Rc`-based, so PJRT
+/// engines are built *on* the coordinator thread via
+/// [`crate::coordinator::Coordinator::spawn_with`].
+pub trait Engine {
+    fn cfg(&self) -> &ModelConfig;
+
+    /// Human-readable identity for logs/metrics ("cpu/vanilla",
+    /// "pjrt/merged_qp", ...).
+    fn describe(&self) -> String;
+
+    /// Can a prompt of this length be admitted right now?
+    fn can_admit(&self, prompt_len: usize) -> bool;
+
+    /// Max sequences a single decode batch may contain (PJRT engines are
+    /// limited by their compiled bucket sizes; CPU is unbounded).
+    fn max_batch(&self) -> usize;
+
+    /// Admit + prefill a prompt. Returns the sequence id and the logits of
+    /// the last prompt position (vocab-sized).
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SeqId, Vec<f32>), EngineError>;
+
+    /// Advance every sequence in `inputs` by one token. Returns one logits
+    /// row per input, in order.
+    fn decode_batch(&mut self, inputs: &[DecodeInput]) -> Result<Vec<Vec<f32>>, EngineError>;
+
+    /// Release a finished/cancelled sequence's resources.
+    fn release(&mut self, seq: SeqId);
+}

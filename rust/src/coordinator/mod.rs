@@ -1,0 +1,196 @@
+//! L3 coordinator: continuous-batching serving on top of an [`Engine`].
+//!
+//! [`Scheduler`] is the synchronous core (admit → batched decode →
+//! retire); [`Coordinator`] wraps it in a background thread with a
+//! channel-based submit/receive API for the TCP server and examples.
+
+pub mod cpu_engine;
+pub mod engine;
+pub mod scheduler;
+
+pub use cpu_engine::CpuEngine;
+pub use engine::{DecodeInput, Engine, EngineError};
+pub use scheduler::{FinishReason, Request, Response, Scheduler, SchedulerCfg};
+
+use crate::metrics::Metrics;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// Thread-hosted scheduler with a channel API.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Spawn the engine loop on a background thread (engines that are
+    /// `Send`, e.g. [`CpuEngine`]).
+    pub fn spawn<E: Engine + Send + 'static>(engine: E, cfg: SchedulerCfg) -> Self {
+        Self::spawn_with(move || engine, cfg)
+    }
+
+    /// Spawn with an engine *factory* executed on the coordinator thread —
+    /// required for [`crate::runtime::PjrtEngine`], whose PJRT handles are
+    /// `Rc`-based and must never cross threads.
+    pub fn spawn_with<E, F>(factory: F, cfg: SchedulerCfg) -> Self
+    where
+        E: Engine + 'static,
+        F: FnOnce() -> E + Send + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("skipless-coordinator".into())
+            .spawn(move || engine_loop(factory(), cfg, rx, m2))
+            .expect("spawn coordinator");
+        Self {
+            tx,
+            handle: Some(handle),
+            metrics,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: Request) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Submit(req, tx)).expect("coordinator alive");
+        rx
+    }
+
+    /// Submit and block for the response.
+    pub fn generate(&self, req: Request) -> Response {
+        self.submit(req).recv().expect("coordinator alive")
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_loop<E: Engine>(
+    engine: E,
+    cfg: SchedulerCfg,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) {
+    let mut sched = Scheduler::new(engine, cfg, metrics);
+    let mut reply_to: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
+    loop {
+        // Drain pending messages; block only when fully idle.
+        loop {
+            let msg = if sched.is_idle() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return, // all senders gone
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+                }
+            };
+            match msg {
+                Msg::Submit(req, tx) => {
+                    reply_to.insert(req.id, tx);
+                    sched.submit(req);
+                }
+                Msg::Shutdown => return,
+            }
+        }
+        sched.step();
+        for resp in sched.take_done() {
+            if let Some(tx) = reply_to.remove(&resp.id) {
+                let _ = tx.send(resp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::{greedy_generate, ModelWeights};
+
+    fn coordinator(seed: u64) -> (Coordinator, ModelWeights) {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, seed);
+        let c = Coordinator::spawn(
+            CpuEngine::new(w.clone(), 8, 16 << 20),
+            SchedulerCfg::default(),
+        );
+        (c, w)
+    }
+
+    #[test]
+    fn generate_blocking_roundtrip() {
+        let (c, w) = coordinator(70);
+        let want = greedy_generate(&w, &[1, 2, 3], 5);
+        let resp = c.generate(Request::greedy(1, vec![1, 2, 3], 5));
+        assert_eq!(resp.tokens, want);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let (c, w) = coordinator(71);
+        let c = Arc::new(c);
+        let handles: Vec<_> = (0..8u64)
+            .map(|i| {
+                let c = Arc::clone(&c);
+                let w = w.clone();
+                std::thread::spawn(move || {
+                    let prompt = vec![(i % 5 + 1) as u32, 2, 3];
+                    let want = greedy_generate(&w, &prompt, 4);
+                    let resp = c.generate(Request::greedy(i, prompt, 4));
+                    assert_eq!(resp.tokens, want, "request {i}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn metrics_visible_from_outside() {
+        let (c, _) = coordinator(72);
+        let _ = c.generate(Request::greedy(1, vec![4, 4], 3));
+        use std::sync::atomic::Ordering;
+        assert_eq!(c.metrics().requests_completed.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let (c, _) = coordinator(73);
+        let _ = c.generate(Request::greedy(1, vec![1], 2));
+        drop(c); // must not hang
+    }
+}

@@ -1,0 +1,439 @@
+//! Continuous-batching scheduler (Orca/vLLM-style, scaled to this testbed).
+//!
+//! Policy per engine step:
+//! 1. **Admit**: pop queued requests FIFO while the engine has KV capacity
+//!    and the running set is below `max_running`; each admit runs a full
+//!    prefill and samples the first token.
+//! 2. **Decode**: one batched `decode_batch` over every running sequence;
+//!    sample the next token for each; retire sequences that hit
+//!    `max_new_tokens` or an EOS token.
+//! 3. **Preempt**: a sequence whose decode hits `CapacityExhausted` is
+//!    released and pushed back to the queue head for full recomputation
+//!    (recompute-style preemption — simplest correct policy; swap-style is
+//!    future work, mirroring the paper's own future-work framing).
+
+use crate::coordinator::engine::{DecodeInput, Engine, EngineError};
+use crate::kvcache::SeqId;
+use crate::metrics::Metrics;
+use crate::sampler::{sample, SamplerCfg};
+use crate::util::rng::Xoshiro256;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampler: SamplerCfg,
+    /// Seed for this request's sampling stream (deterministic replay).
+    pub seed: u64,
+    /// Optional stop token.
+    pub eos: Option<u32>,
+}
+
+impl Request {
+    pub fn greedy(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            sampler: SamplerCfg::greedy(),
+            seed: id,
+            eos: None,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Length,
+    Eos,
+    /// Request was invalid (empty prompt, too long, ...).
+    Rejected,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Time to first token.
+    pub ttft: std::time::Duration,
+    /// Total request latency.
+    pub latency: std::time::Duration,
+}
+
+struct Running {
+    req: Request,
+    seq: SeqId,
+    generated: Vec<u32>,
+    next_token: u32,
+    rng: Xoshiro256,
+    admitted_at: Instant,
+    first_token_at: Instant,
+}
+
+/// Scheduler tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerCfg {
+    /// Upper bound on concurrently-running sequences.
+    pub max_running: usize,
+    /// Max admissions (prefills) per step — bounds TTFT jitter for the
+    /// already-running decodes (prefill/decode interference control).
+    pub admits_per_step: usize,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        Self {
+            max_running: 32,
+            admits_per_step: 4,
+        }
+    }
+}
+
+/// The scheduling core. Drives an [`Engine`] over a request queue.
+pub struct Scheduler<E: Engine> {
+    engine: E,
+    cfg: SchedulerCfg,
+    queue: VecDeque<Request>,
+    running: Vec<Running>,
+    done: Vec<Response>,
+    metrics: Arc<Metrics>,
+}
+
+impl<E: Engine> Scheduler<E> {
+    pub fn new(engine: E, cfg: SchedulerCfg, metrics: Arc<Metrics>) -> Self {
+        Self {
+            engine,
+            cfg,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            done: Vec::new(),
+            metrics,
+        }
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Drain finished responses accumulated so far.
+    pub fn take_done(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.done)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty()
+    }
+
+    /// One engine step (admit + decode). Returns the number of sequences
+    /// that made progress.
+    pub fn step(&mut self) -> usize {
+        self.admit();
+        self.decode()
+    }
+
+    /// Run until every submitted request has finished.
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        while !self.is_idle() {
+            self.step();
+        }
+        self.take_done()
+    }
+
+    fn admit(&mut self) {
+        let mut admitted = 0;
+        while admitted < self.cfg.admits_per_step
+            && self.running.len() < self.cfg.max_running.min(self.engine.max_batch())
+        {
+            let Some(req) = self.queue.front() else { break };
+            // reject malformed requests outright
+            if req.prompt.is_empty()
+                || req.prompt.len() + req.max_new_tokens > self.engine.cfg().max_seq_len
+                || req.sampler.validate().is_err()
+            {
+                let req = self.queue.pop_front().unwrap();
+                Metrics::inc(&self.metrics.requests_rejected);
+                self.done.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::Rejected,
+                    ttft: Default::default(),
+                    latency: Default::default(),
+                });
+                continue;
+            }
+            if !self.engine.can_admit(req.prompt.len()) {
+                break; // wait for capacity
+            }
+            let req = self.queue.pop_front().unwrap();
+            let t0 = Instant::now();
+            match self.engine.prefill(&req.prompt) {
+                Ok((seq, logits)) => {
+                    let mut rng = Xoshiro256::seed_from_u64(req.seed);
+                    let first = sample(&logits, &req.sampler, &mut rng);
+                    Metrics::inc(&self.metrics.requests_admitted);
+                    Metrics::add(&self.metrics.tokens_prefilled, req.prompt.len() as u64);
+                    let now = Instant::now();
+                    self.metrics.ttft.record(now - t0);
+                    self.running.push(Running {
+                        req,
+                        seq,
+                        generated: Vec::new(),
+                        next_token: first,
+                        rng,
+                        admitted_at: t0,
+                        first_token_at: now,
+                    });
+                    admitted += 1;
+                }
+                Err(EngineError::CapacityExhausted(_)) => {
+                    // put it back and stop admitting this step
+                    self.queue.push_front(req);
+                    break;
+                }
+                Err(_) => {
+                    Metrics::inc(&self.metrics.requests_rejected);
+                    self.done.push(Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        finish: FinishReason::Rejected,
+                        ttft: Default::default(),
+                        latency: Default::default(),
+                    });
+                }
+            }
+        }
+    }
+
+    fn decode(&mut self) -> usize {
+        if self.running.is_empty() {
+            return 0;
+        }
+        let t0 = Instant::now();
+        let inputs: Vec<DecodeInput> = self
+            .running
+            .iter()
+            .map(|r| DecodeInput {
+                seq: r.seq,
+                token: r.next_token,
+            })
+            .collect();
+        let logits = match self.engine.decode_batch(&inputs) {
+            Ok(l) => l,
+            Err(EngineError::CapacityExhausted(_)) => {
+                // Preempt the youngest (recompute policy) and retry next step.
+                if let Some(victim) = self.running.pop() {
+                    self.engine.release(victim.seq);
+                    Metrics::inc(&self.metrics.preemptions);
+                    // The generated tokens are re-derivable (deterministic
+                    // sampling), so recompute from the original prompt.
+                    self.queue.push_front(victim.req);
+                }
+                return 0;
+            }
+            Err(e) => {
+                // Fail every running request rather than wedging the loop.
+                crate::log_error!("decode_batch failed: {e}");
+                for r in self.running.drain(..) {
+                    self.engine.release(r.seq);
+                    self.done.push(Response {
+                        id: r.req.id,
+                        tokens: r.generated,
+                        finish: FinishReason::Rejected,
+                        ttft: r.first_token_at - r.admitted_at,
+                        latency: r.admitted_at.elapsed(),
+                    });
+                }
+                return 0;
+            }
+        };
+        Metrics::inc(&self.metrics.batches_run);
+        Metrics::add(&self.metrics.tokens_decoded, inputs.len() as u64);
+        let dt = t0.elapsed();
+        // amortized per-token time
+        self.metrics
+            .tpot
+            .record(dt / (inputs.len().max(1) as u32));
+
+        let n = self.running.len();
+        let mut finished = Vec::new();
+        for (i, row) in logits.into_iter().enumerate() {
+            let r = &mut self.running[i];
+            // the token we just consumed becomes output
+            r.generated.push(r.next_token);
+            let is_eos = r.req.eos == Some(r.next_token);
+            if is_eos || r.generated.len() >= r.req.max_new_tokens {
+                finished.push((i, if is_eos { FinishReason::Eos } else { FinishReason::Length }));
+            } else {
+                r.next_token = sample(&row, &r.req.sampler, &mut r.rng);
+            }
+        }
+        // retire back-to-front so indices stay valid
+        for (i, reason) in finished.into_iter().rev() {
+            let r = self.running.remove(i);
+            self.engine.release(r.seq);
+            Metrics::inc(&self.metrics.requests_completed);
+            let latency = r.admitted_at.elapsed();
+            self.metrics.e2e.record(latency);
+            self.done.push(Response {
+                id: r.req.id,
+                tokens: r.generated,
+                finish: reason,
+                ttft: r.first_token_at - r.admitted_at,
+                latency,
+            });
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::coordinator::cpu_engine::CpuEngine;
+    use crate::model::{greedy_generate, ModelWeights};
+
+    fn sched(name: &str, seed: u64, budget: usize) -> Scheduler<CpuEngine> {
+        let cfg = ModelConfig::preset(name).unwrap();
+        let w = ModelWeights::init_vanilla(&cfg, seed);
+        Scheduler::new(
+            CpuEngine::new(w, 8, budget),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    #[test]
+    fn single_request_matches_direct_generation() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 60);
+        let want = greedy_generate(&w, &[5, 6, 7], 6);
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, 8 << 20),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        );
+        s.submit(Request::greedy(1, vec![5, 6, 7], 6));
+        let done = s.run_to_completion();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens, want);
+        assert_eq!(done[0].finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn many_requests_all_complete_correctly() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 61);
+        // references computed sequentially
+        let prompts: Vec<Vec<u32>> = (0..10).map(|i| vec![i + 1, 2 * i + 3, 7]).collect();
+        let wants: Vec<Vec<u32>> = prompts.iter().map(|p| greedy_generate(&w, p, 5)).collect();
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, 16 << 20),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        );
+        for (i, p) in prompts.iter().enumerate() {
+            s.submit(Request::greedy(i as u64, p.clone(), 5));
+        }
+        let mut done = s.run_to_completion();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 10);
+        for (r, want) in done.iter().zip(&wants) {
+            assert_eq!(&r.tokens, want, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_requests() {
+        let mut s = sched("tiny-mha", 62, 8 << 20);
+        s.submit(Request::greedy(1, vec![], 5)); // empty
+        s.submit(Request::greedy(2, vec![1; 100], 100)); // 200 > max_seq 128
+        let done = s.run_to_completion();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|r| r.finish == FinishReason::Rejected));
+    }
+
+    #[test]
+    fn eos_stops_generation() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 63);
+        // find what greedy emits second, use it as EOS
+        let toks = greedy_generate(&w, &[1, 2], 3);
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, 8 << 20),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        );
+        let eos = toks[1];
+        let mut req = Request::greedy(1, vec![1, 2], 10);
+        req.eos = Some(eos);
+        s.submit(req);
+        let done = s.run_to_completion();
+        assert_eq!(done[0].finish, FinishReason::Eos);
+        // expected: everything up to and including the first eos occurrence
+        let cut = toks.iter().position(|&t| t == eos).unwrap();
+        assert_eq!(done[0].tokens, toks[..=cut].to_vec());
+    }
+
+    #[test]
+    fn capacity_pressure_queues_then_completes() {
+        // Pool sized for ~2 concurrent sequences; submit 6 — they must all
+        // finish via queueing/preemption without deadlock.
+        let cfg = ModelConfig::tiny_mha();
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 8;
+        let w = ModelWeights::init_vanilla(&cfg, 64);
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, 4 * bytes_per_block),
+            SchedulerCfg {
+                max_running: 8,
+                admits_per_step: 8,
+            },
+            Arc::new(Metrics::new()),
+        );
+        for i in 0..6 {
+            s.submit(Request::greedy(i, vec![1, 2, 3], 4));
+        }
+        let done = s.run_to_completion();
+        assert_eq!(done.len(), 6);
+        assert!(done.iter().all(|r| r.tokens.len() == 4));
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let metrics = Arc::new(Metrics::new());
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 65);
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, 8 << 20),
+            SchedulerCfg::default(),
+            Arc::clone(&metrics),
+        );
+        s.submit(Request::greedy(1, vec![1, 2, 3], 5));
+        s.run_to_completion();
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.requests_admitted.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.tokens_prefilled.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.tokens_decoded.load(Ordering::Relaxed), 5);
+        assert!(metrics.ttft.count() > 0);
+    }
+}

@@ -1,0 +1,375 @@
+//! Paged KV-cache manager (vLLM-style block allocator).
+//!
+//! The coordinator admits and schedules sequences against this pool: cache
+//! memory is carved into fixed-size blocks of `block_tokens` positions;
+//! each sequence owns a block table. GQA/MQA models allocate `e = d·n_kv/n`
+//! floats per position per layer per K/V — the same `e` the paper's weight
+//! table uses — so Mistral-like models hold 4× more sequences than MHA at
+//! equal memory, independent of the Q/P merge.
+//!
+//! The decode engine writes rotated keys / raw values through
+//! [`KvCache::append`] and reads per-sequence contiguous views via
+//! [`KvCache::gather`] (block-table indirection hidden from the attention
+//! kernel).
+
+use crate::config::ModelConfig;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Sequence handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SeqId(pub u64);
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheError {
+    /// Pool exhausted — caller should preempt or queue.
+    OutOfBlocks { needed: usize, free: usize },
+    UnknownSeq(SeqId),
+    /// Sequence grew past the model's max_seq_len.
+    SeqTooLong { len: usize, max: usize },
+}
+
+impl fmt::Display for CacheError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CacheError::OutOfBlocks { needed, free } => {
+                write!(f, "KV pool exhausted: need {needed} blocks, {free} free")
+            }
+            CacheError::UnknownSeq(id) => write!(f, "unknown sequence {id:?}"),
+            CacheError::SeqTooLong { len, max } => {
+                write!(f, "sequence length {len} exceeds max_seq_len {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+struct SeqState {
+    /// Physical block ids, one per `block_tokens` positions (layers stride
+    /// inside the block).
+    blocks: Vec<usize>,
+    len: usize,
+}
+
+/// The paged pool. One instance serves all layers of one model.
+pub struct KvCache {
+    /// floats per (position, layer): 2·e (K and V).
+    floats_per_pos_layer: usize,
+    n_layers: usize,
+    block_tokens: usize,
+    n_blocks: usize,
+    max_seq_len: usize,
+    /// backing store: `n_blocks × block_tokens × n_layers × 2e` floats.
+    data: Vec<f32>,
+    free: Vec<usize>,
+    seqs: BTreeMap<SeqId, SeqState>,
+    next_id: u64,
+    /// high-water mark of allocated blocks (for metrics).
+    peak_used: usize,
+}
+
+/// Configuration-derived sizing report (used by benches and DESIGN.md).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheSizing {
+    pub bytes_per_token: usize,
+    pub tokens_capacity: usize,
+    pub n_blocks: usize,
+}
+
+impl KvCache {
+    /// Build a pool with a total budget of `budget_bytes`.
+    pub fn new(cfg: &ModelConfig, block_tokens: usize, budget_bytes: usize) -> Self {
+        assert!(block_tokens > 0);
+        let e = cfg.e();
+        let floats_per_pos_layer = 2 * e;
+        let bytes_per_token = floats_per_pos_layer * cfg.n_layers * 4;
+        let block_bytes = bytes_per_token * block_tokens;
+        let n_blocks = (budget_bytes / block_bytes).max(1);
+        let total_floats = n_blocks * block_tokens * cfg.n_layers * floats_per_pos_layer;
+        Self {
+            floats_per_pos_layer,
+            n_layers: cfg.n_layers,
+            block_tokens,
+            n_blocks,
+            max_seq_len: cfg.max_seq_len,
+            data: vec![0.0; total_floats],
+            free: (0..n_blocks).rev().collect(),
+            seqs: BTreeMap::new(),
+            next_id: 0,
+            peak_used: 0,
+        }
+    }
+
+    pub fn sizing(&self) -> CacheSizing {
+        CacheSizing {
+            bytes_per_token: self.floats_per_pos_layer * self.n_layers * 4,
+            tokens_capacity: self.n_blocks * self.block_tokens,
+            n_blocks: self.n_blocks,
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// Blocks needed to hold `len` positions.
+    fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.block_tokens)
+    }
+
+    /// Can a new sequence of `prompt_len` be admitted right now?
+    pub fn can_admit(&self, prompt_len: usize) -> bool {
+        self.blocks_for(prompt_len.max(1)) <= self.free.len()
+    }
+
+    /// Register a new sequence and reserve blocks for its prompt.
+    pub fn alloc_seq(&mut self, prompt_len: usize) -> Result<SeqId, CacheError> {
+        if prompt_len > self.max_seq_len {
+            return Err(CacheError::SeqTooLong {
+                len: prompt_len,
+                max: self.max_seq_len,
+            });
+        }
+        let needed = self.blocks_for(prompt_len.max(1));
+        if needed > self.free.len() {
+            return Err(CacheError::OutOfBlocks {
+                needed,
+                free: self.free.len(),
+            });
+        }
+        let blocks: Vec<usize> = (0..needed).map(|_| self.free.pop().unwrap()).collect();
+        let id = SeqId(self.next_id);
+        self.next_id += 1;
+        self.seqs.insert(id, SeqState { blocks, len: 0 });
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(id)
+    }
+
+    /// Release a sequence's blocks back to the pool.
+    pub fn free_seq(&mut self, id: SeqId) -> Result<(), CacheError> {
+        let st = self.seqs.remove(&id).ok_or(CacheError::UnknownSeq(id))?;
+        self.free.extend(st.blocks);
+        Ok(())
+    }
+
+    /// Offset of (block, pos_in_block, layer) in `data`, start of the K half.
+    fn offset(&self, block: usize, pos_in_block: usize, layer: usize) -> usize {
+        ((block * self.block_tokens + pos_in_block) * self.n_layers + layer)
+            * self.floats_per_pos_layer
+    }
+
+    /// Append one position's K and V (each `e` floats) for `layer`.
+    /// All layers of a position must be appended before [`KvCache::advance`].
+    pub fn append(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), CacheError> {
+        let e = self.floats_per_pos_layer / 2;
+        assert_eq!(k.len(), e, "k width");
+        assert_eq!(v.len(), e, "v width");
+        assert!(layer < self.n_layers);
+        // compute geometry first (borrow rules)
+        let (needs_block, block, pib) = {
+            let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+            if st.len >= self.max_seq_len {
+                return Err(CacheError::SeqTooLong {
+                    len: st.len + 1,
+                    max: self.max_seq_len,
+                });
+            }
+            let needs = st.len / self.block_tokens >= st.blocks.len();
+            (needs, st.len / self.block_tokens, st.len % self.block_tokens)
+        };
+        if needs_block {
+            let nb = self.free.pop().ok_or(CacheError::OutOfBlocks {
+                needed: 1,
+                free: 0,
+            })?;
+            self.seqs.get_mut(&id).unwrap().blocks.push(nb);
+            self.peak_used = self.peak_used.max(self.n_blocks - self.free.len());
+        }
+        let phys = self.seqs[&id].blocks[block];
+        let off = self.offset(phys, pib, layer);
+        self.data[off..off + e].copy_from_slice(k);
+        self.data[off + e..off + 2 * e].copy_from_slice(v);
+        Ok(())
+    }
+
+    /// Mark one position complete (call once per position after all layers
+    /// appended).
+    pub fn advance(&mut self, id: SeqId) -> Result<usize, CacheError> {
+        let st = self.seqs.get_mut(&id).ok_or(CacheError::UnknownSeq(id))?;
+        st.len += 1;
+        Ok(st.len)
+    }
+
+    /// Copy the sequence's K and V for `layer` into contiguous buffers
+    /// (`len × e` each) for the attention kernel.
+    pub fn gather(
+        &self,
+        id: SeqId,
+        layer: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) -> Result<usize, CacheError> {
+        let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let e = self.floats_per_pos_layer / 2;
+        k_out.clear();
+        v_out.clear();
+        k_out.reserve(st.len * e);
+        v_out.reserve(st.len * e);
+        for pos in 0..st.len {
+            let phys = st.blocks[pos / self.block_tokens];
+            let off = self.offset(phys, pos % self.block_tokens, layer);
+            k_out.extend_from_slice(&self.data[off..off + e]);
+            v_out.extend_from_slice(&self.data[off + e..off + 2 * e]);
+        }
+        Ok(st.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn cache(budget_kb: usize) -> (ModelConfig, KvCache) {
+        let cfg = ModelConfig::tiny_gqa(); // e = 16, 2 layers
+        let c = KvCache::new(&cfg, 4, budget_kb * 1024);
+        (cfg, c)
+    }
+
+    #[test]
+    fn sizing_math() {
+        let (cfg, c) = cache(64);
+        let s = c.sizing();
+        // bytes/token = 2e · layers · 4
+        assert_eq!(s.bytes_per_token, 2 * cfg.e() * cfg.n_layers * 4);
+        assert_eq!(s.tokens_capacity, s.n_blocks * 4);
+        assert!(s.n_blocks >= 1);
+    }
+
+    #[test]
+    fn gqa_cache_smaller_than_mha() {
+        // Mistral-style GQA (e=d/4) holds 4x the tokens of MHA at equal
+        // budget — the memory-side benefit GQA brings independent of QP.
+        let gqa = KvCache::new(&ModelConfig::tiny_gqa(), 4, 1 << 20);
+        let mha = KvCache::new(&ModelConfig::tiny_mha(), 4, 1 << 20);
+        let r = gqa.sizing().tokens_capacity as f64 / mha.sizing().tokens_capacity as f64;
+        assert!((r - 4.0).abs() < 0.2, "ratio {r}");
+    }
+
+    #[test]
+    fn alloc_append_gather_roundtrip() {
+        let (cfg, mut c) = cache(64);
+        let e = cfg.e();
+        let id = c.alloc_seq(3).unwrap();
+        for pos in 0..3 {
+            for layer in 0..cfg.n_layers {
+                let k: Vec<f32> = (0..e).map(|i| (pos * 100 + layer * 10 + i) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.append(id, layer, &k, &v).unwrap();
+            }
+            c.advance(id).unwrap();
+        }
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        let len = c.gather(id, 1, &mut k, &mut v).unwrap();
+        assert_eq!(len, 3);
+        assert_eq!(k.len(), 3 * e);
+        // position 2, layer 1, element 5 = 2*100 + 10 + 5
+        assert_eq!(k[2 * e + 5], 215.0);
+        assert_eq!(v[2 * e + 5], -215.0);
+    }
+
+    #[test]
+    fn growth_allocates_blocks_on_demand() {
+        let (cfg, mut c) = cache(64);
+        let e = cfg.e();
+        let id = c.alloc_seq(1).unwrap(); // 1 block (4 tokens)
+        let used0 = c.used_blocks();
+        let k = vec![0.0f32; e];
+        for _ in 0..9 {
+            for layer in 0..cfg.n_layers {
+                c.append(id, layer, &k, &k).unwrap();
+            }
+            c.advance(id).unwrap();
+        }
+        // 9 tokens need ceil(9/4)=3 blocks
+        assert_eq!(c.used_blocks(), used0 + 2);
+        assert_eq!(c.seq_len(id), Some(9));
+    }
+
+    #[test]
+    fn exhaustion_and_free_cycle() {
+        let cfg = ModelConfig::tiny_gqa();
+        // tiny budget: exactly 2 blocks
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
+        let mut c = KvCache::new(&cfg, 4, 2 * bytes_per_block);
+        assert_eq!(c.sizing().n_blocks, 2);
+        let a = c.alloc_seq(4).unwrap();
+        let _b = c.alloc_seq(4).unwrap();
+        assert!(!c.can_admit(1));
+        match c.alloc_seq(1) {
+            Err(CacheError::OutOfBlocks { .. }) => {}
+            other => panic!("expected OutOfBlocks, got {other:?}"),
+        }
+        c.free_seq(a).unwrap();
+        assert!(c.can_admit(4));
+        assert_eq!(c.peak_used_blocks(), 2);
+    }
+
+    #[test]
+    fn unknown_and_too_long() {
+        let (cfg, mut c) = cache(64);
+        assert!(matches!(c.free_seq(SeqId(99)), Err(CacheError::UnknownSeq(_))));
+        assert!(matches!(
+            c.alloc_seq(cfg.max_seq_len + 1),
+            Err(CacheError::SeqTooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn many_sequences_interleaved() {
+        let (cfg, mut c) = cache(1024);
+        let e = cfg.e();
+        let ids: Vec<SeqId> = (0..8).map(|_| c.alloc_seq(2).unwrap()).collect();
+        for step in 0..6 {
+            for (si, &id) in ids.iter().enumerate() {
+                for layer in 0..cfg.n_layers {
+                    let k = vec![(si * 1000 + step) as f32; e];
+                    c.append(id, layer, &k, &k).unwrap();
+                }
+                c.advance(id).unwrap();
+            }
+        }
+        // verify isolation: each sequence sees only its own values
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for (si, &id) in ids.iter().enumerate() {
+            c.gather(id, 0, &mut k, &mut v).unwrap();
+            assert_eq!(k[0], (si * 1000) as f32);
+            assert_eq!(k[5 * e], (si * 1000 + 5) as f32);
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! # skipless — KV-weights are all you need for skipless transformers
+//!
+//! A production-shaped reproduction of *"Transformer tricks: Removing
+//! weights for skipless transformers"* (Graef, 2024): for transformers
+//! without skip connections and normalization, the **Q** (query) and **P**
+//! (post-attention projection) weight matrices can be merged into the
+//! neighbouring FFN linear layers with **no change in function**, removing
+//! `2d²` weights per block — ~15% of Mistral-7B — and proportionally
+//! speeding up memory-bandwidth-bound batch-1 decoding. Unlike earlier V/P
+//! removal (He & Hofmann 2023), Q/P removal works for MQA and GQA, i.e.
+//! after surgery only the K and V projections remain inside attention.
+//!
+//! The crate is organized as a three-layer stack:
+//! * **L1/L2 (build time, Python)** — Pallas kernels + a JAX model, AOT
+//!   lowered to HLO text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — a serving coordinator (continuous batching,
+//!   paged KV cache, sampling) whose engine either runs the AOT artifacts
+//!   through PJRT ([`runtime`]) or a pure-Rust reference model ([`model`]).
+//! * [`surgery`] implements the paper's Table 1 weight transforms on real
+//!   weights, and [`params`]/[`bandwidth`] reproduce the §3 table.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! measured reproduction of every table and figure.
+
+pub mod bandwidth;
+pub mod config;
+pub mod coordinator;
+pub mod kvcache;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod params;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod surgery;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;

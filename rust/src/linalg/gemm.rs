@@ -1,0 +1,343 @@
+//! Blocked, multi-threaded f32 GEMM.
+//!
+//! Strategy: pack nothing, iterate in `MC×KC` panels with an inner
+//! `4×NR`-ish microkernel expressed as plain indexed loops over row slices —
+//! LLVM auto-vectorizes the unit-stride inner loop well. Rows of `C` are
+//! distributed over the thread pool in contiguous chunks (disjoint output →
+//! no synchronization). This is not MKL, but it reaches a few tens of
+//! GFLOP/s which keeps the CPU decode path memory-bound, matching the
+//! regime the paper's speedup model assumes.
+
+use crate::tensor::Mat;
+use crate::util::threadpool;
+
+/// Cache-blocking parameters (f32 elements). L1-friendly K panel, L2-ish
+/// row block. Tuned in EXPERIMENTS.md §Perf.
+const KC: usize = 256;
+const MC: usize = 64;
+
+/// `out = a @ b`. Shapes: `(m,k) @ (k,n) -> (m,n)`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// `out = a @ b + bias_row` (bias broadcast over rows; pass `None` to skip).
+pub fn matmul_bias(a: &Mat, b: &Mat, bias: Option<&[f32]>) -> Mat {
+    let mut out = matmul(a, b);
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), out.cols(), "bias length mismatch");
+        for r in 0..out.rows() {
+            for (v, &bv) in out.row_mut(r).iter_mut().zip(bias) {
+                *v += bv;
+            }
+        }
+    }
+    out
+}
+
+/// Write `a @ b` into a preallocated `out` (zeroed first). The decode hot
+/// loop reuses buffers through this to avoid per-token allocation.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+    assert_eq!(out.shape(), (m, n), "matmul out shape mismatch");
+    out.as_mut_slice().fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+
+    // Parallelize over row blocks of C (tall output) or column blocks
+    // (skinny output — the batch-1 decode GEMV shape, where row-splitting
+    // would leave every core but one idle and token latency would be bound
+    // by one core's memory streaming rate). Chunks own disjoint output
+    // regions, so we hand out raw pointers; the pool joins before returning.
+    let a_ptr = AddrSend(a as *const Mat);
+    let b_ptr = AddrSend(b as *const Mat);
+    let out_ptr = AddrSendMut(out as *mut Mat);
+    // Threading pays off only when there is enough arithmetic per row.
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let n_threads = threadpool::global().n_threads();
+    if flops < 1.0e6 {
+        gemm_rows(a, b, out, 0, m);
+        return;
+    }
+    if m < n_threads && n >= 2 * n_threads {
+        // skinny path: split output columns (§Perf L3 iteration 4)
+        threadpool::global().scope_chunks(n, 64, move |c0, c1| {
+            let a = unsafe { &*a_ptr.get() };
+            let b = unsafe { &*b_ptr.get() };
+            let out = unsafe { &mut *out_ptr.get() };
+            gemm_cols(a, b, out, c0, c1);
+        });
+        return;
+    }
+    threadpool::global().scope_chunks(m, MC.min(8), move |r0, r1| {
+        // NB: call methods on the wrappers (not field access) so edition-2021
+        // disjoint capture moves the Send+Sync wrapper, not the raw pointer.
+        let a = unsafe { &*a_ptr.get() };
+        let b = unsafe { &*b_ptr.get() };
+        let out = unsafe { &mut *out_ptr.get() };
+        gemm_rows(a, b, out, r0, r1);
+    });
+}
+
+/// Serial kernel over columns `[c0, c1)` of the output (skinny-M path).
+fn gemm_cols(a: &Mat, b: &Mat, out: &mut Mat, c0: usize, c1: usize) {
+    let k = a.cols();
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        for r in 0..a.rows() {
+            let arow = &a.row(r)[kb..kend];
+            let orow = &mut out.row_mut(r)[c0..c1];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.row(kb + kk)[c0..c1];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        kb = kend;
+    }
+}
+
+struct AddrSend(*const Mat);
+struct AddrSendMut(*mut Mat);
+impl AddrSend {
+    fn get(&self) -> *const Mat {
+        self.0
+    }
+}
+impl AddrSendMut {
+    fn get(&self) -> *mut Mat {
+        self.0
+    }
+}
+// SAFETY: chunks write disjoint row ranges of `out` and only read `a`/`b`;
+// scope_chunks joins all work before matmul_into returns.
+unsafe impl Send for AddrSend {}
+unsafe impl Sync for AddrSend {}
+unsafe impl Send for AddrSendMut {}
+unsafe impl Sync for AddrSendMut {}
+
+/// Serial kernel over rows `[r0, r1)` of the output.
+///
+/// 4-row microkernel: each pass over a KC-slab of B feeds FOUR output rows,
+/// quartering B's memory traffic for tall inputs (prefill, batched decode)
+/// — §Perf L3 iteration. Single rows (batch-1 decode) take the saxpy tail,
+/// which is already DRAM-bound.
+fn gemm_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        let mut r = r0;
+        // 4-row blocks
+        while r + 4 <= r1 {
+            // SAFETY: disjoint rows of `out`.
+            let (o0, rest) = out.as_mut_slice()[r * n..].split_at_mut(n);
+            let (o1, rest) = rest.split_at_mut(n);
+            let (o2, rest) = rest.split_at_mut(n);
+            let o3 = &mut rest[..n];
+            for kk in kb..kend {
+                let a0 = a.at(r, kk);
+                let a1 = a.at(r + 1, kk);
+                let a2 = a.at(r + 2, kk);
+                let a3 = a.at(r + 3, kk);
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                for c in 0..n {
+                    let bv = brow[c];
+                    o0[c] += a0 * bv;
+                    o1[c] += a1 * bv;
+                    o2[c] += a2 * bv;
+                    o3[c] += a3 * bv;
+                }
+            }
+            r += 4;
+        }
+        // remainder rows: plain saxpy
+        while r < r1 {
+            let arow = &a.row(r)[kb..kend];
+            let orow = out.row_mut(r);
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kb + kk);
+                for c in 0..n {
+                    orow[c] += av * brow[c];
+                }
+            }
+            r += 1;
+        }
+        kb = kend;
+    }
+}
+
+/// `a @ b^T`. Shapes: `(m,k) @ (n,k)^T -> (m,n)`. Used for attention scores
+/// (`q @ k^T`) where `b`'s rows are the cached keys — unit stride on both
+/// operands without materializing a transpose.
+pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
+    let (m, k) = a.shape();
+    let (n, k2) = b.shape();
+    assert_eq!(k, k2, "matmul_transb inner-dim mismatch");
+    let mut out = Mat::zeros(m, n);
+    for r in 0..m {
+        let arow = a.row(r);
+        let orow = out.row_mut(r);
+        for c in 0..n {
+            let brow = b.row(c);
+            let mut acc = 0.0f32;
+            for i in 0..k {
+                acc += arow[i] * brow[i];
+            }
+            orow[c] = acc;
+        }
+    }
+    out
+}
+
+/// Matrix–vector product `m @ v` (decode-step fast path, no Mat wrapper).
+pub fn matvec(m: &Mat, v: &[f32]) -> Vec<f32> {
+    assert_eq!(m.cols(), v.len(), "matvec dim mismatch");
+    let mut out = vec![0.0f32; m.rows()];
+    for r in 0..m.rows() {
+        let row = m.row(r);
+        let mut acc = 0.0f32;
+        for i in 0..v.len() {
+            acc += row[i] * v[i];
+        }
+        out[r] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.cols());
+        for r in 0..a.rows() {
+            for c in 0..b.cols() {
+                let mut acc = 0.0f64;
+                for i in 0..a.cols() {
+                    acc += a.at(r, i) as f64 * b.at(i, c) as f64;
+                }
+                *out.at_mut(r, c) = acc as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matches_naive_random_rectangular() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (33, 65, 17), (128, 300, 64), (257, 31, 129)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            let err = got.rel_fro_err(&want);
+            assert!(err < 1e-5, "({m},{k},{n}) rel err {err}");
+        }
+    }
+
+    #[test]
+    fn threaded_path_matches_naive() {
+        // big enough to cross the flops threshold
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Mat::randn(200, 200, 1.0, &mut rng);
+        let b = Mat::randn(200, 200, 1.0, &mut rng);
+        let got = matmul(&a, &b);
+        let want = naive(&a, &b);
+        assert!(got.rel_fro_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn skinny_column_parallel_path_matches_naive() {
+        // (1,k)@(k,n) and (2,k)@(k,n) — the batch-1/2 decode shapes that
+        // take the column-split path.
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for &(m, k, n) in &[(1usize, 640, 640), (1, 640, 4096), (2, 512, 2688), (3, 700, 1000)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            assert!(got.rel_fro_err(&want) < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = Mat::randn(20, 20, 1.0, &mut rng);
+        let i = Mat::eye(20);
+        assert!(matmul(&a, &i).max_abs_diff(&a) == 0.0);
+        assert!(matmul(&i, &a).max_abs_diff(&a) == 0.0);
+    }
+
+    #[test]
+    fn transb_equals_explicit_transpose() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let a = Mat::randn(13, 21, 1.0, &mut rng);
+        let b = Mat::randn(9, 21, 1.0, &mut rng);
+        let got = matmul_transb(&a, &b);
+        let want = matmul(&a, &b.transpose());
+        assert!(got.rel_fro_err(&want) < 1e-6);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let m = Mat::randn(17, 29, 1.0, &mut rng);
+        let v = Mat::randn(29, 1, 1.0, &mut rng);
+        let got = matvec(&m, v.transpose().row(0));
+        let want = matmul(&m, &v);
+        for r in 0..17 {
+            assert!((got[r] - want.at(r, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let a = Mat::eye(2);
+        let b = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let out = matmul_bias(&a, &b, Some(&[10.0, 20.0]));
+        assert_eq!(out.as_slice(), &[11., 22., 13., 24.]);
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).shape(), (0, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "inner-dim mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = matmul(&a, &b);
+    }
+}

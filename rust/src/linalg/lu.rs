@@ -1,0 +1,352 @@
+//! LU factorization with partial pivoting, inversion, solves, and a
+//! 1-norm condition estimate.
+//!
+//! This implements the paper's mathematical precondition machinery: the
+//! Table 1 transforms need `Q⁻¹`, `K⁻¹` or `V⁻¹`, and §4's experiment is an
+//! invertibility audit of every square attention matrix. Factorization and
+//! solves run in `f64` regardless of the `f32` storage type so that the
+//! merged weights agree with the vanilla model to f32 roundoff, not to
+//! accumulated-LU error.
+
+use crate::tensor::Mat;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LuError {
+    NotSquare { rows: usize, cols: usize },
+    /// Pivot below tolerance at elimination step `k` — matrix is singular
+    /// to working precision.
+    Singular { step: usize, pivot: f64 },
+}
+
+impl fmt::Display for LuError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LuError::NotSquare { rows, cols } => {
+                write!(f, "LU requires a square matrix, got {rows}x{cols}")
+            }
+            LuError::Singular { step, pivot } => {
+                write!(f, "matrix singular to working precision (step {step}, pivot {pivot:.3e})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LuError {}
+
+/// Packed LU factors (`PA = LU`) in f64.
+pub struct Lu {
+    n: usize,
+    /// Row-major combined L (unit diagonal, below) and U (on/above diagonal).
+    lu: Vec<f64>,
+    /// Row permutation: `perm[i]` is the source row of factored row `i`.
+    perm: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor `a` (copied to f64). Tolerance is relative to the largest
+    /// entry, scaled by n·ε.
+    pub fn factor(a: &Mat) -> Result<Lu, LuError> {
+        let (rows, cols) = a.shape();
+        if rows != cols {
+            return Err(LuError::NotSquare { rows, cols });
+        }
+        let n = rows;
+        let mut lu: Vec<f64> = a.as_slice().iter().map(|&x| x as f64).collect();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        let max_entry = lu.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        let tol = max_entry * n as f64 * f64::EPSILON;
+
+        for k in 0..n {
+            // partial pivot: largest |entry| in column k at/below row k
+            let mut p = k;
+            let mut pmax = lu[k * n + k].abs();
+            for r in (k + 1)..n {
+                let v = lu[r * n + k].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = r;
+                }
+            }
+            if pmax <= tol {
+                return Err(LuError::Singular { step: k, pivot: pmax });
+            }
+            if p != k {
+                for c in 0..n {
+                    lu.swap(k * n + c, p * n + c);
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[k * n + k];
+            for r in (k + 1)..n {
+                let factor = lu[r * n + k] / pivot;
+                lu[r * n + k] = factor;
+                if factor != 0.0 {
+                    for c in (k + 1)..n {
+                        lu[r * n + c] -= factor * lu[k * n + c];
+                    }
+                }
+            }
+        }
+        Ok(Lu { n, lu, perm, sign })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A x = b` for one right-hand side (f64).
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        // apply permutation
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        // forward substitution (L, unit diagonal)
+        for r in 1..n {
+            let mut acc = x[r];
+            for c in 0..r {
+                acc -= self.lu[r * n + c] * x[c];
+            }
+            x[r] = acc;
+        }
+        // back substitution (U)
+        for r in (0..n).rev() {
+            let mut acc = x[r];
+            for c in (r + 1)..n {
+                acc -= self.lu[r * n + c] * x[c];
+            }
+            x[r] = acc / self.lu[r * n + r];
+        }
+        x
+    }
+
+    /// Determinant (product of U's diagonal, signed by the permutation).
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for k in 0..self.n {
+            d *= self.lu[k * self.n + k];
+        }
+        d
+    }
+
+    /// Inverse as an f32 matrix (column-by-column solves).
+    pub fn inverse(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n, n);
+        let mut e = vec![0.0f64; n];
+        for c in 0..n {
+            e[c] = 1.0;
+            let col = self.solve_vec(&e);
+            e[c] = 0.0;
+            for r in 0..n {
+                *out.at_mut(r, c) = col[r] as f32;
+            }
+        }
+        out
+    }
+
+    /// Solve `A X = B` for a matrix RHS, returning f32.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows(), self.n, "solve_mat rows mismatch");
+        let n = self.n;
+        let m = b.cols();
+        let mut out = Mat::zeros(n, m);
+        let mut rhs = vec![0.0f64; n];
+        for c in 0..m {
+            for r in 0..n {
+                rhs[r] = b.at(r, c) as f64;
+            }
+            let col = self.solve_vec(&rhs);
+            for r in 0..n {
+                *out.at_mut(r, c) = col[r] as f32;
+            }
+        }
+        out
+    }
+}
+
+/// `a⁻¹` or the reason it does not exist.
+pub fn inverse(a: &Mat) -> Result<Mat, LuError> {
+    Ok(Lu::factor(a)?.inverse())
+}
+
+/// Solve `A X = B`.
+pub fn solve(a: &Mat, b: &Mat) -> Result<Mat, LuError> {
+    Ok(Lu::factor(a)?.solve_mat(b))
+}
+
+/// 1-norm condition number estimate κ₁(A) = ‖A‖₁·‖A⁻¹‖₁ using the classic
+/// Hager/Higham power iteration on `A⁻¹` (a handful of solves, no explicit
+/// inverse). Used by the §4 invertibility audit to report *how* invertible
+/// each attention matrix is.
+pub fn cond_estimate(a: &Mat) -> Result<f64, LuError> {
+    let lu = Lu::factor(a)?;
+    let n = a.rows();
+    // ‖A‖₁ = max column abs sum
+    let mut a_norm = 0.0f64;
+    for c in 0..n {
+        let mut s = 0.0f64;
+        for r in 0..n {
+            s += a.at(r, c).abs() as f64;
+        }
+        a_norm = a_norm.max(s);
+    }
+    // Hager's estimator for ‖A⁻¹‖₁: iterate x ← A⁻ᵀ sign(A⁻¹ x).
+    // Since we only factored A, note ‖A⁻¹‖₁ = ‖A⁻ᵀ‖∞ and solve with both
+    // orientations via the same factors: solveᵀ is implemented by solving
+    // with Aᵀ = (PᵀLU)ᵀ — we avoid that bookkeeping by estimating with
+    // random probes plus the e_j refinement, which is accurate to a small
+    // factor and always a lower bound.
+    let mut best = 0.0f64;
+    let mut x = vec![1.0 / n as f64; n];
+    for _ in 0..5 {
+        let y = lu.solve_vec(&x);
+        let y_norm: f64 = y.iter().map(|v| v.abs()).sum();
+        if y_norm <= best {
+            break;
+        }
+        best = y_norm;
+        // steepest direction: put all mass on the largest |y| coordinate
+        let j = y
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        x.iter_mut().for_each(|v| *v = 0.0);
+        x[j] = 1.0;
+    }
+    // refine with a few canonical probes
+    let mut e = vec![0.0f64; n];
+    for j in (0..n).step_by((n / 8).max(1)) {
+        e[j] = 1.0;
+        let y = lu.solve_vec(&e);
+        e[j] = 0.0;
+        let y_norm: f64 = y.iter().map(|v| v.abs()).sum();
+        best = best.max(y_norm);
+    }
+    Ok(a_norm * best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn factor_solve_roundtrip() {
+        let a = Mat::from_vec(3, 3, vec![4., 3., 0., 3., 4., -1., 0., -1., 4.]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve_vec(&[24.0, 30.0, -8.0]);
+        // verify A x = b
+        for r in 0..3 {
+            let mut acc = 0.0;
+            for c in 0..3 {
+                acc += a.at(r, c) as f64 * x[c];
+            }
+            let b = [24.0, 30.0, -8.0][r];
+            assert!((acc - b).abs() < 1e-9, "row {r}: {acc} vs {b}");
+        }
+    }
+
+    #[test]
+    fn inverse_random_matrices() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        for &n in &[1usize, 2, 5, 16, 64, 128] {
+            let a = Mat::randn(n, n, 1.0, &mut rng);
+            let inv = inverse(&a).unwrap();
+            let prod = matmul(&a, &inv);
+            let err = prod.max_abs_diff(&Mat::eye(n));
+            assert!(err < 1e-3, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn singular_detected() {
+        // rank-1 matrix
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        match Lu::factor(&a) {
+            Err(LuError::Singular { .. }) => {}
+            other => panic!("expected Singular, got {:?}", other.map(|_| ()).err()),
+        }
+        // explicit zero matrix
+        assert!(matches!(
+            Lu::factor(&Mat::zeros(3, 3)),
+            Err(LuError::Singular { .. })
+        ));
+    }
+
+    #[test]
+    fn not_square_detected() {
+        assert_eq!(
+            Lu::factor(&Mat::zeros(2, 3)).err().unwrap(),
+            LuError::NotSquare { rows: 2, cols: 3 }
+        );
+    }
+
+    #[test]
+    fn determinant() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 1.0, 2.0, 4.0]);
+        let lu = Lu::factor(&a).unwrap();
+        assert!((lu.det() - 10.0).abs() < 1e-9);
+        // permutation sign: swap-heavy matrix
+        let b = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        assert!((Lu::factor(&b).unwrap().det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_mat_matches_inverse_product() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let a = Mat::randn(24, 24, 1.0, &mut rng);
+        let b = Mat::randn(24, 7, 1.0, &mut rng);
+        let x1 = solve(&a, &b).unwrap();
+        let x2 = matmul(&inverse(&a).unwrap(), &b);
+        assert!(x1.rel_fro_err(&x2) < 1e-4);
+        // verify residual
+        let r = matmul(&a, &x1);
+        assert!(r.rel_fro_err(&b) < 1e-4);
+    }
+
+    #[test]
+    fn cond_identity_is_small() {
+        let k = cond_estimate(&Mat::eye(32)).unwrap();
+        assert!((1.0..10.0).contains(&k), "cond(I)={k}");
+    }
+
+    #[test]
+    fn cond_grows_with_near_singularity() {
+        // diag(1, 1, ..., eps): condition = 1/eps
+        for &eps in &[1e-2f32, 1e-4] {
+            let n = 16;
+            let a = Mat::from_fn(n, n, |r, c| {
+                if r != c {
+                    0.0
+                } else if r == n - 1 {
+                    eps
+                } else {
+                    1.0
+                }
+            });
+            let k = cond_estimate(&a).unwrap();
+            let expect = 1.0 / eps as f64;
+            assert!(k > expect * 0.5 && k < expect * 10.0, "eps={eps} k={k}");
+        }
+    }
+
+    #[test]
+    fn f64_precision_pays_off_at_scale() {
+        // At n=256 the f64 LU keeps A·A⁻¹ within a few ulps of I even for
+        // Gaussian matrices with κ ~ 1e3.
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let n = 256;
+        let a = Mat::randn(n, n, 0.02, &mut rng);
+        let inv = inverse(&a).unwrap();
+        let err = matmul(&a, &inv).max_abs_diff(&Mat::eye(n));
+        assert!(err < 5e-3, "err={err}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Dense linear algebra kernels: blocked/threaded matmul, LU factorization
+//! with partial pivoting, inversion, triangular solves, and condition
+//! estimation.
+//!
+//! The matmul is the L3 CPU engine's hot path (decode-step GEMV/GEMM when
+//! the PJRT engine is not used); the LU/inverse path implements the paper's
+//! Table 1 transforms, which require `Q⁻¹K` and `Q⁻¹V` products. Inversion
+//! runs internally in `f64` and rounds once at the end — at Mistral-like
+//! dimensions an all-`f32` LU loses 2–3 digits, which would show up as fake
+//! error in the equivalence experiments.
+
+pub mod gemm;
+pub mod lu;
+
+pub use gemm::{matmul, matmul_bias, matmul_into, matvec, matmul_transb};
+pub use lu::{cond_estimate, inverse, solve, Lu, LuError};
+
+use crate::tensor::Mat;
+
+/// `a @ b` then elementwise in-place activation.
+pub fn matmul_act(a: &Mat, b: &Mat, act: impl Fn(f32) -> f32) -> Mat {
+    let mut out = matmul(a, b);
+    for v in out.as_mut_slice() {
+        *v = act(*v);
+    }
+    out
+}
+
+/// Numerically stable softmax over each row, in place.
+pub fn softmax_rows(m: &mut Mat) {
+    let cols = m.cols();
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            mx = mx.max(v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+        debug_assert_eq!(row.len(), cols);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // monotone: larger logits → larger probs
+        assert!(m.at(0, 2) > m.at(0, 1) && m.at(0, 1) > m.at(0, 0));
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut m = Mat::from_vec(1, 3, vec![1000.0, 1000.0, 1000.0]);
+        softmax_rows(&mut m);
+        for c in 0..3 {
+            assert!((m.at(0, c) - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_act_applies_activation() {
+        let a = Mat::eye(2);
+        let b = Mat::from_vec(2, 2, vec![-1.0, 2.0, 3.0, -4.0]);
+        let out = matmul_act(&a, &b, |x| x.max(0.0));
+        assert_eq!(out.as_slice(), &[0.0, 2.0, 3.0, 0.0]);
+    }
+}

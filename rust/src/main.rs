@@ -1,0 +1,302 @@
+//! `skipless` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! * `serve`    — boot coordinator + TCP JSON-lines server
+//! * `generate` — one-shot generation from the command line
+//! * `surgery`  — transform a vanilla weight file into a merged variant
+//! * `init`     — create + save randomly-initialized vanilla weights
+//! * `tables`   — print the paper's §3 table for any preset
+//! * `audit`    — §4 invertibility/conditioning audit of a weight file
+//! * `presets`  — list built-in model configs
+
+use skipless::bandwidth::{self, Hardware};
+use skipless::config::{ModelConfig, Variant};
+use skipless::coordinator::{Coordinator, CpuEngine, Request, SchedulerCfg};
+use skipless::model::{weights_io, ModelWeights};
+use skipless::params;
+use skipless::runtime::PjrtEngine;
+use skipless::sampler::SamplerCfg;
+use skipless::server::Server;
+use skipless::surgery;
+use skipless::util::cli::Command;
+use skipless::util::logging::{self, Level};
+use std::path::{Path, PathBuf};
+
+fn cli() -> Command {
+    Command::new("skipless", "KV-weights are all you need for skipless transformers")
+        .subcommand(
+            Command::new("serve", "serve a model over TCP (JSON lines)")
+                .opt_default("addr", "127.0.0.1:7070", "bind address")
+                .opt("weights", "weight file (.swt) — or use --preset for random init")
+                .opt_default("preset", "tiny-gqa", "config preset when no weights given")
+                .opt_default("variant", "vanilla", "vanilla|merged_qp|merged_kp|merged_vp")
+                .opt("artifacts", "artifact dir → use the PJRT engine (else CPU engine)")
+                .opt_default("seed", "1", "init seed when no weights given")
+                .opt_default("cache-mb", "256", "KV cache budget (MiB, CPU engine)")
+                .opt_default("max-running", "32", "max concurrent sequences")
+                .opt_default("log", "info", "log level"),
+        )
+        .subcommand(
+            Command::new("generate", "one-shot generation")
+                .opt("weights", "weight file (.swt)")
+                .opt_default("preset", "tiny-gqa", "config preset when no weights given")
+                .opt_default("variant", "vanilla", "architecture variant")
+                .opt_default("seed", "1", "init seed when no weights given")
+                .opt_default("prompt", "1,2,3", "comma-separated token ids")
+                .opt_default("max-new", "16", "tokens to generate")
+                .opt_default("temperature", "0", "sampling temperature (0 = greedy)"),
+        )
+        .subcommand(
+            Command::new("init", "write randomly-initialized vanilla weights")
+                .opt_default("preset", "tiny-gqa", "config preset")
+                .opt_default("seed", "1", "init seed")
+                .opt("out", "output path (.swt)"),
+        )
+        .subcommand(
+            Command::new("surgery", "paper Table 1: merge weights (removes Q+P etc.)")
+                .opt("weights", "input vanilla weight file (.swt)")
+                .opt_default("variant", "merged_qp", "merged_qp|merged_kp|merged_vp")
+                .opt("out", "output path (.swt)")
+                .opt_default("cond-limit", "1e7", "max pivot condition number")
+                .flag("verify", "run a logits-equivalence check after merging"),
+        )
+        .subcommand(
+            Command::new("tables", "print the paper's §3 table")
+                .opt("preset", "one preset (default: both paper models)"),
+        )
+        .subcommand(
+            Command::new("audit", "§4 invertibility audit of attention matrices")
+                .opt("weights", "weight file (.swt); default: random preset weights")
+                .opt_default("preset", "tiny-mha", "preset when no weights given")
+                .opt_default("variant", "vanilla", "architecture variant")
+                .opt_default("seed", "1", "init seed"),
+        )
+        .subcommand(Command::new("presets", "list built-in model configs"))
+}
+
+fn main() {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (path, args) = match cli().parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match path.first().copied() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("init") => cmd_init(&args),
+        Some("surgery") => cmd_surgery(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("audit") => cmd_audit(&args),
+        Some("presets") => {
+            for p in ModelConfig::preset_names() {
+                let c = ModelConfig::preset(p).unwrap();
+                println!(
+                    "{:<14} d={:<5} L={:<3} heads={}/{} f={:<6} vocab={:<6} {}/{}/{}",
+                    p, c.dim, c.n_layers, c.n_heads, c.n_kv_heads, c.hidden_dim,
+                    c.vocab_size, c.attention.name(), c.layout.name(), c.ffn.name()
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{}", cli().help_text());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+type AnyError = Box<dyn std::error::Error>;
+
+fn load_or_init(args: &skipless::util::cli::Args) -> Result<ModelWeights, AnyError> {
+    if let Some(path) = args.get("weights") {
+        let w = weights_io::load(Path::new(path))?;
+        log_summary(&w);
+        return Ok(w);
+    }
+    let preset = args.get_or("preset", "tiny-gqa");
+    let cfg = ModelConfig::load(preset)?;
+    let seed: u64 = args.num_or("seed", 1)?;
+    let variant = Variant::parse(args.get_or("variant", "vanilla"))
+        .ok_or_else(|| format!("bad variant '{}'", args.get_or("variant", "")))?;
+    let w = ModelWeights::init_vanilla(&cfg, seed);
+    let w = if variant == Variant::Vanilla {
+        w
+    } else {
+        surgery::transform(&w, variant, surgery::Options::default())?
+    };
+    log_summary(&w);
+    Ok(w)
+}
+
+fn log_summary(w: &ModelWeights) {
+    skipless::log_info!(
+        "model {} [{}]: {} weights ({:.1} MiB f32)",
+        w.cfg.name,
+        w.variant.name(),
+        w.stored_weights(),
+        w.stored_bytes() as f64 / (1 << 20) as f64
+    );
+}
+
+fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
+    if let Some(l) = Level::parse(args.get_or("log", "info")) {
+        logging::set_level(l);
+    }
+    let w = load_or_init(args)?;
+    let sched = SchedulerCfg {
+        max_running: args.num_or("max-running", 32)?,
+        admits_per_step: 4,
+    };
+    let coordinator = if let Some(dir) = args.get("artifacts") {
+        let dir = PathBuf::from(dir);
+        Coordinator::spawn_with(move || PjrtEngine::boot(&dir, &w, 64).expect("pjrt boot"), sched)
+    } else {
+        let cache_mb: usize = args.num_or("cache-mb", 256)?;
+        Coordinator::spawn(CpuEngine::new(w, 16, cache_mb << 20), sched)
+    };
+    let server = Server::bind(args.get_or("addr", "127.0.0.1:7070"), coordinator)?;
+    println!(
+        "listening on {} (JSON lines; op=generate|metrics|ping)",
+        server.local_addr()
+    );
+    server.serve()?;
+    Ok(())
+}
+
+fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
+    let w = load_or_init(args)?;
+    let prompt: Vec<u32> = args
+        .get_or("prompt", "1,2,3")
+        .split(',')
+        .map(|t| t.trim().parse::<u32>())
+        .collect::<Result<_, _>>()?;
+    let coordinator = Coordinator::spawn(CpuEngine::new(w, 16, 256 << 20), SchedulerCfg::default());
+    let req = Request {
+        id: 0,
+        prompt,
+        max_new_tokens: args.num_or("max-new", 16)?,
+        sampler: SamplerCfg {
+            temperature: args.num_or("temperature", 0.0f32)?,
+            top_k: 0,
+            top_p: 1.0,
+        },
+        seed: 0,
+        eos: None,
+    };
+    let resp = coordinator.generate(req);
+    println!(
+        "tokens: {:?}\nfinish: {:?}  ttft: {:?}  latency: {:?}",
+        resp.tokens, resp.finish, resp.ttft, resp.latency
+    );
+    coordinator.shutdown();
+    Ok(())
+}
+
+fn cmd_init(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
+    let preset = args.get_or("preset", "tiny-gqa");
+    let cfg = ModelConfig::load(preset)?;
+    let seed: u64 = args.num_or("seed", 1)?;
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{preset}.swt")));
+    let w = ModelWeights::init_vanilla(&cfg, seed);
+    weights_io::save(&w, &out)?;
+    println!(
+        "wrote {} ({} weights, {:.1} MiB)",
+        out.display(),
+        w.stored_weights(),
+        w.stored_bytes() as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}
+
+fn cmd_surgery(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
+    let input = args.get("weights").ok_or("--weights required")?;
+    let variant = Variant::parse(args.get_or("variant", "merged_qp")).ok_or("bad variant")?;
+    let w = weights_io::load(Path::new(input))?;
+    let opts = surgery::Options {
+        cond_limit: args.num_or("cond-limit", surgery::DEFAULT_COND_LIMIT)?,
+        skip_audit: false,
+    };
+    let t0 = std::time::Instant::now();
+    let merged = surgery::transform(&w, variant, opts)?;
+    let dt = t0.elapsed();
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(input.replace(".swt", &format!(".{}.swt", variant.name())))
+        });
+    weights_io::save(&merged, &out)?;
+    let saved = w.stored_weights() - merged.stored_weights();
+    println!(
+        "surgery [{}] in {:?}: {} → {} weights (−{}, −{:.1}%)\nwrote {}",
+        variant.name(),
+        dt,
+        w.stored_weights(),
+        merged.stored_weights(),
+        saved,
+        100.0 * saved as f64 / w.stored_weights() as f64,
+        out.display()
+    );
+    if args.flag("verify") {
+        let toks = [1u32, 2, 3, 4, 5];
+        let (l0, _) = skipless::model::prefill(&w, &toks);
+        let (l1, _) = skipless::model::prefill(&merged, &toks);
+        let rel = l1.rel_fro_err(&l0);
+        println!("verification: relative logits error = {rel:.3e}");
+        if rel > 1e-3 {
+            return Err(format!("verification FAILED: rel err {rel:.3e} > 1e-3").into());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
+    let presets: Vec<String> = match args.get("preset") {
+        Some(p) => vec![p.to_string()],
+        None => vec!["pythia-6.9b".into(), "mistral-7b".into()],
+    };
+    println!("== paper §3 table (weight counts & batch-1 bandwidth-bound speedup) ==\n");
+    for p in presets {
+        let cfg = ModelConfig::load(&p)?;
+        print!("{}", params::table3_report(&cfg));
+        let hw = Hardware::a100_like();
+        let cross = bandwidth::compute_bound_batch(&cfg, &hw, 2.0);
+        println!(
+            "  Roofline ({}, fp16)   : compute-bound above batch ≈ {}\n",
+            hw.name, cross
+        );
+    }
+    Ok(())
+}
+
+fn cmd_audit(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
+    let w = load_or_init(args)?;
+    let rows = surgery::audit(&w);
+    println!("layer  matrix  invertible  cond_estimate");
+    for r in &rows {
+        println!(
+            "{:>5}  {:>6}  {:>10}  {}",
+            r.layer,
+            r.which,
+            r.invertible,
+            r.cond.map(|c| format!("{c:.3e}")).unwrap_or_else(|| "-".into())
+        );
+    }
+    let (all, worst) = surgery::audit_summary(&rows);
+    println!(
+        "\nall invertible: {all}   worst κ₁ ≈ {worst:.3e}   ({} matrices)",
+        rows.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Serving metrics: counters, gauges, and latency histograms.
+//!
+//! Thread-safe via atomics; histograms use log-spaced buckets so p50/p95/p99
+//! stay accurate from microseconds to seconds without unbounded memory.
+//! The coordinator exposes a registry snapshot as JSON over the server's
+//! `metrics` endpoint.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency histogram: 1µs .. ~17min in 64 buckets (×1.5 steps).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 64;
+const GROWTH: f64 = 1.5;
+
+fn bucket_of(us: u64) -> usize {
+    if us <= 1 {
+        return 0;
+    }
+    let b = ((us as f64).ln() / GROWTH.ln()) as usize;
+    b.min(N_BUCKETS - 1)
+}
+
+/// Upper bound (µs) of bucket `i`.
+fn bucket_upper(i: usize) -> u64 {
+    GROWTH.powi(i as i32 + 1) as u64
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Quantile from the histogram (upper bound of the containing bucket).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let max_us = self.max_us.load(Ordering::Relaxed);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                // clamp the bucket's upper bound to the observed max so
+                // quantile(q) ≤ max() always holds
+                return Duration::from_micros(bucket_upper(i).min(max_us));
+            }
+        }
+        self.max()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_us", Json::num(self.mean().as_micros() as f64)),
+            ("p50_us", Json::num(self.quantile(0.50).as_micros() as f64)),
+            ("p95_us", Json::num(self.quantile(0.95).as_micros() as f64)),
+            ("p99_us", Json::num(self.quantile(0.99).as_micros() as f64)),
+            ("max_us", Json::num(self.max().as_micros() as f64)),
+        ])
+    }
+}
+
+/// All serving metrics, shared by reference across the coordinator.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_admitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub tokens_prefilled: AtomicU64,
+    pub tokens_decoded: AtomicU64,
+    pub batches_run: AtomicU64,
+    pub preemptions: AtomicU64,
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    pub e2e: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = |c: &AtomicU64| Json::num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("requests_admitted", g(&self.requests_admitted)),
+            ("requests_completed", g(&self.requests_completed)),
+            ("requests_rejected", g(&self.requests_rejected)),
+            ("tokens_prefilled", g(&self.tokens_prefilled)),
+            ("tokens_decoded", g(&self.tokens_decoded)),
+            ("batches_run", g(&self.batches_run)),
+            ("preemptions", g(&self.preemptions)),
+            ("ttft", self.ttft.to_json()),
+            ("tpot", self.tpot.to_json()),
+            ("e2e", self.e2e.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 30, 50, 100, 200, 500, 1000, 5000, 100000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        assert!(h.max() >= p99);
+    }
+
+    #[test]
+    fn histogram_bucket_accuracy_within_growth_factor() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(1000));
+        }
+        let p50 = h.quantile(0.5).as_micros() as f64;
+        assert!(p50 >= 1000.0 && p50 <= 1500.0 * 1.5, "p50={p50}");
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn metrics_json_snapshot() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests_admitted);
+        Metrics::add(&m.tokens_decoded, 42);
+        m.ttft.record(Duration::from_millis(3));
+        let j = m.to_json();
+        assert_eq!(j.get("requests_admitted").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("tokens_decoded").unwrap().as_u64(), Some(42));
+        assert_eq!(j.get("ttft").unwrap().get("count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        Metrics::inc(&m.tokens_decoded);
+                        m.tpot.record(Duration::from_micros(100));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.tokens_decoded.load(Ordering::Relaxed), 4000);
+        assert_eq!(m.tpot.count(), 4000);
+    }
+}

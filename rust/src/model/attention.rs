@@ -1,0 +1,284 @@
+//! Multi-head / multi-query / grouped-query causal attention over `Mat`
+//! activations, with RoPE, in both full-sequence (prefill) and single-token
+//! (decode, KV-cached) forms.
+//!
+//! The projections are *outside* this module: callers hand in already-
+//! projected `q: (t, d)`, `k: (t, e)`, `v: (t, e)`. That split is what makes
+//! the paper's merged variants drop in — an eliminated matrix simply means
+//! the caller passes the block input itself as `q` (or `k`/`v`).
+
+use crate::linalg::{matmul_transb, softmax_rows};
+use crate::model::rope;
+use crate::tensor::Mat;
+
+/// Head geometry for one attention call.
+#[derive(Clone, Copy, Debug)]
+pub struct HeadLayout {
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl HeadLayout {
+    pub fn d(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn e(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// KV head serving query head `h`.
+    pub fn kv_of(&self, h: usize) -> usize {
+        h / (self.n_heads / self.n_kv_heads)
+    }
+}
+
+/// Causal full-sequence attention (prefill).
+///
+/// `q: (t, d)`, `k/v: (t, e)`; rows are positions `pos0..pos0+t` (RoPE is
+/// applied inside, so pass *unrotated* projections). Returns `(t, d)`.
+pub fn causal_attention(q: &Mat, k: &Mat, v: &Mat, layout: HeadLayout, pos0: usize) -> Mat {
+    let t = q.rows();
+    assert_eq!(q.cols(), layout.d(), "q width");
+    assert_eq!(k.cols(), layout.e(), "k width");
+    assert_eq!(v.cols(), layout.e(), "v width");
+    assert_eq!(k.rows(), t, "k rows");
+    assert_eq!(v.rows(), t, "v rows");
+    let hd = layout.head_dim;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut q = q.clone();
+    let mut k = k.clone();
+    rope::apply(&mut q, hd, pos0, rope::BASE);
+    rope::apply(&mut k, hd, pos0, rope::BASE);
+
+    let mut out = Mat::zeros(t, layout.d());
+    for h in 0..layout.n_heads {
+        let g = layout.kv_of(h);
+        let qh = q.col_slice(h * hd, (h + 1) * hd);
+        let kh = k.col_slice(g * hd, (g + 1) * hd);
+        let vh = v.col_slice(g * hd, (g + 1) * hd);
+        // scores (t, t): q @ k^T, causal-masked
+        let mut scores = matmul_transb(&qh, &kh);
+        scores.scale(scale);
+        for r in 0..t {
+            let row = scores.row_mut(r);
+            for c in (r + 1)..t {
+                row[c] = f32::NEG_INFINITY;
+            }
+        }
+        softmax_rows(&mut scores);
+        let oh = crate::linalg::matmul(&scores, &vh);
+        for r in 0..t {
+            out.row_mut(r)[h * hd..(h + 1) * hd].copy_from_slice(oh.row(r));
+        }
+    }
+    out
+}
+
+/// One decode step against a KV cache.
+///
+/// `q: (1, d)` — the current token's (unrotated) query projection.
+/// `k_new`/`v_new: (1, e)` — the current token's (unrotated) K/V, appended
+/// to the per-layer cache by this call. `k_cache`/`v_cache` hold the
+/// *rotated* keys and raw values of positions `0..pos`. Returns `(1, d)`.
+pub fn decode_attention(
+    q: &Mat,
+    k_new: &Mat,
+    v_new: &Mat,
+    k_cache: &mut Vec<f32>,
+    v_cache: &mut Vec<f32>,
+    layout: HeadLayout,
+    pos: usize,
+) -> Mat {
+    let e = layout.e();
+    let hd = layout.head_dim;
+    assert_eq!(q.shape(), (1, layout.d()));
+    assert_eq!(k_new.shape(), (1, e));
+    assert_eq!(v_new.shape(), (1, e));
+    assert_eq!(k_cache.len(), pos * e, "k cache length");
+    assert_eq!(v_cache.len(), pos * e, "v cache length");
+
+    let mut q = q.clone();
+    let mut k_new = k_new.clone();
+    rope::apply(&mut q, hd, pos, rope::BASE);
+    rope::apply(&mut k_new, hd, pos, rope::BASE);
+    k_cache.extend_from_slice(k_new.row(0));
+    v_cache.extend_from_slice(v_new.row(0));
+    let t = pos + 1;
+
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Mat::zeros(1, layout.d());
+    let qrow = q.row(0);
+    // per query head: scores over t cached positions, softmax, weighted sum
+    let mut scores = vec![0.0f32; t];
+    for h in 0..layout.n_heads {
+        let g = layout.kv_of(h);
+        let qh = &qrow[h * hd..(h + 1) * hd];
+        for (r, s) in scores.iter_mut().enumerate() {
+            let krow = &k_cache[r * e + g * hd..r * e + (g + 1) * hd];
+            let mut acc = 0.0f32;
+            for i in 0..hd {
+                acc += qh[i] * krow[i];
+            }
+            *s = acc * scale;
+        }
+        // softmax over scores[0..t]
+        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        let oh = &mut out.row_mut(0)[h * hd..(h + 1) * hd];
+        for (r, &s) in scores.iter().enumerate() {
+            let w = s * inv;
+            let vrow = &v_cache[r * e + g * hd..r * e + (g + 1) * hd];
+            for i in 0..hd {
+                oh[i] += w * vrow[i];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn layout_mha() -> HeadLayout {
+        HeadLayout {
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 8,
+        }
+    }
+
+    fn layout_gqa() -> HeadLayout {
+        HeadLayout {
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 8,
+        }
+    }
+
+    #[test]
+    fn kv_head_mapping() {
+        let l = layout_gqa();
+        assert_eq!(l.kv_of(0), 0);
+        assert_eq!(l.kv_of(1), 0);
+        assert_eq!(l.kv_of(2), 1);
+        assert_eq!(l.kv_of(3), 1);
+        let m = HeadLayout {
+            n_heads: 4,
+            n_kv_heads: 1,
+            head_dim: 8,
+        };
+        for h in 0..4 {
+            assert_eq!(m.kv_of(h), 0);
+        }
+    }
+
+    #[test]
+    fn causality_first_row_ignores_future() {
+        // Changing later positions must not affect earlier outputs.
+        let l = layout_mha();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let q = Mat::randn(4, l.d(), 0.5, &mut rng);
+        let k = Mat::randn(4, l.e(), 0.5, &mut rng);
+        let v = Mat::randn(4, l.e(), 0.5, &mut rng);
+        let out1 = causal_attention(&q, &k, &v, l, 0);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..l.e() {
+            *k2.at_mut(3, c) += 5.0;
+            *v2.at_mut(3, c) -= 3.0;
+        }
+        let out2 = causal_attention(&q, &k2, &v2, l, 0);
+        for r in 0..3 {
+            assert_eq!(out1.row(r), out2.row(r), "row {r} changed");
+        }
+        assert_ne!(out1.row(3), out2.row(3));
+    }
+
+    #[test]
+    fn single_position_attends_to_itself() {
+        // t=1: softmax over one element → output = value row.
+        let l = layout_mha();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let q = Mat::randn(1, l.d(), 0.5, &mut rng);
+        let k = Mat::randn(1, l.e(), 0.5, &mut rng);
+        let v = Mat::randn(1, l.e(), 0.5, &mut rng);
+        let out = causal_attention(&q, &k, &v, l, 0);
+        assert_eq!(out.row(0), v.row(0)); // MHA: e = d, concat == v
+    }
+
+    #[test]
+    fn decode_matches_prefill_mha_and_gqa() {
+        for l in [layout_mha(), layout_gqa()] {
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            let t = 6;
+            let q = Mat::randn(t, l.d(), 0.5, &mut rng);
+            let k = Mat::randn(t, l.e(), 0.5, &mut rng);
+            let v = Mat::randn(t, l.e(), 0.5, &mut rng);
+            let full = causal_attention(&q, &k, &v, l, 0);
+            let mut kc = Vec::new();
+            let mut vc = Vec::new();
+            for pos in 0..t {
+                let out = decode_attention(
+                    &q.row_slice(pos, pos + 1),
+                    &k.row_slice(pos, pos + 1),
+                    &v.row_slice(pos, pos + 1),
+                    &mut kc,
+                    &mut vc,
+                    l,
+                    pos,
+                );
+                let err: f32 = out
+                    .row(0)
+                    .iter()
+                    .zip(full.row(pos))
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f32::max);
+                assert!(err < 1e-5, "pos {pos} err {err} ({l:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_shares_kv_heads() {
+        // If two query heads in the same group get identical q slices, their
+        // outputs must be identical (same keys/values).
+        let l = layout_gqa();
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut q = Mat::randn(3, l.d(), 0.5, &mut rng);
+        let hd = l.head_dim;
+        for r in 0..3 {
+            let h0: Vec<f32> = q.row(r)[0..hd].to_vec();
+            q.row_mut(r)[hd..2 * hd].copy_from_slice(&h0); // head 1 := head 0
+        }
+        let k = Mat::randn(3, l.e(), 0.5, &mut rng);
+        let v = Mat::randn(3, l.e(), 0.5, &mut rng);
+        let out = causal_attention(&q, &k, &v, l, 0);
+        for r in 0..3 {
+            assert_eq!(&out.row(r)[0..hd], &out.row(r)[hd..2 * hd], "row {r}");
+        }
+    }
+
+    #[test]
+    fn pos0_shifts_rope_only() {
+        // With pos0 > 0 the attention pattern changes only via rotation;
+        // outputs must still be finite and causal.
+        let l = layout_mha();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let q = Mat::randn(4, l.d(), 0.5, &mut rng);
+        let k = Mat::randn(4, l.e(), 0.5, &mut rng);
+        let v = Mat::randn(4, l.e(), 0.5, &mut rng);
+        let out = causal_attention(&q, &k, &v, l, 9);
+        assert!(out.all_finite());
+        assert_ne!(out.row(1), causal_attention(&q, &k, &v, l, 0).row(1));
+    }
+}

@@ -1,0 +1,104 @@
+//! Feed-forward networks: plain MLP (GELU) and SwiGLU.
+//!
+//! The merged variants do not change this module's code at all — surgery
+//! replaces the *contents* of `m` (with `M* = P·M`) and `o` (with
+//! `O* = O·Q_next`), which is the whole point of the paper: the merged
+//! model is the same program over fewer matrices.
+
+use crate::config::FfnKind;
+use crate::linalg::matmul;
+use crate::model::{gelu, silu};
+use crate::tensor::Mat;
+
+/// Apply the FFN: `x (t,d)` → `(t,d)`.
+///
+/// MLP: `gelu(x·M)·O` with `M: d×f`, `O: f×d`.
+/// SwiGLU: `M = [G ‖ U]: d×2f`; `(silu(x·G) ⊙ (x·U))·O`.
+pub fn ffn_forward(x: &Mat, m: &Mat, o: &Mat, kind: FfnKind) -> Mat {
+    match kind {
+        FfnKind::Mlp => {
+            let mut h = matmul(x, m);
+            for v in h.as_mut_slice() {
+                *v = gelu(*v);
+            }
+            matmul(&h, o)
+        }
+        FfnKind::SwiGlu => {
+            let f = o.rows();
+            assert_eq!(m.cols(), 2 * f, "SwiGLU M must be d×2f");
+            let h = matmul(x, m); // (t, 2f): gate ‖ up
+            let mut gated = Mat::zeros(x.rows(), f);
+            for r in 0..x.rows() {
+                let hrow = h.row(r);
+                let grow = gated.row_mut(r);
+                for c in 0..f {
+                    grow[c] = silu(hrow[c]) * hrow[f + c];
+                }
+            }
+            matmul(&gated, o)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn mlp_matches_manual() {
+        let x = Mat::from_vec(1, 2, vec![1.0, -1.0]);
+        let m = Mat::from_vec(2, 3, vec![1., 0., 2., 0., 1., -1.]);
+        let o = Mat::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let out = ffn_forward(&x, &m, &o, FfnKind::Mlp);
+        // h = [1, -1, 3] → gelu → [0.8412, -0.1588, 2.9960]
+        let h: Vec<f32> = [1.0f32, -1.0, 3.0].iter().map(|&v| gelu(v)).collect();
+        let want = [h[0] + h[2], h[1] + h[2]];
+        assert!((out.at(0, 0) - want[0]).abs() < 1e-5);
+        assert!((out.at(0, 1) - want[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn swiglu_matches_manual() {
+        // d=2, f=2: M = [G|U] is 2×4, O is 2×2
+        let x = Mat::from_vec(1, 2, vec![0.5, 2.0]);
+        let m = Mat::from_vec(2, 4, vec![1., 0., 1., 1., 0., 1., -1., 0.5]);
+        let o = Mat::eye(2);
+        let out = ffn_forward(&x, &m, &o, FfnKind::SwiGlu);
+        let g = [0.5f32, 2.0]; // x·G
+        let u = [0.5 - 2.0, 0.5 + 1.0]; // x·U
+        let want = [silu(g[0]) * u[0], silu(g[1]) * u[1]];
+        assert!((out.at(0, 0) - want[0]).abs() < 1e-5, "{out:?}");
+        assert!((out.at(0, 1) - want[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn swiglu_gate_zero_kills_output() {
+        // zero gate → silu(0)=0 → output 0 regardless of up-projection
+        let x = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let m = Mat::from_vec(2, 4, vec![0., 0., 5., -3., 0., 0., 7., 2.]);
+        let o = Mat::eye(2);
+        let out = ffn_forward(&x, &m, &o, FfnKind::SwiGlu);
+        assert_eq!(out.as_slice(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn shapes_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let x = Mat::randn(5, 8, 0.5, &mut rng);
+        let m_mlp = Mat::randn(8, 16, 0.5, &mut rng);
+        let o = Mat::randn(16, 8, 0.5, &mut rng);
+        assert_eq!(ffn_forward(&x, &m_mlp, &o, FfnKind::Mlp).shape(), (5, 8));
+        let m_glu = Mat::randn(8, 32, 0.5, &mut rng);
+        assert_eq!(ffn_forward(&x, &m_glu, &o, FfnKind::SwiGlu).shape(), (5, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "SwiGLU M must be d×2f")]
+    fn swiglu_rejects_odd_m() {
+        let x = Mat::zeros(1, 2);
+        let m = Mat::zeros(2, 3);
+        let o = Mat::zeros(2, 2);
+        let _ = ffn_forward(&x, &m, &o, FfnKind::SwiGlu);
+    }
+}

@@ -1,0 +1,256 @@
+//! Full-model forward passes: prefill (whole prompt) and KV-cached decode
+//! (one token), for serial and parallel skipless blocks in every variant.
+//!
+//! The same code path runs vanilla and merged weights: an eliminated matrix
+//! (`None`) is the identity, exactly the paper's `Q* = 1` notation. The
+//! equivalence experiments (Fig. 1/2/3) run both and compare logits.
+
+use crate::config::BlockLayout;
+use crate::linalg::matmul;
+use crate::model::attention::{causal_attention, decode_attention, HeadLayout};
+use crate::model::ffn::ffn_forward;
+use crate::model::{rope, BlockWeights, ModelWeights};
+use crate::tensor::Mat;
+
+/// Per-sequence KV cache + position for autoregressive decoding.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeState {
+    /// Per layer: (rotated keys, raw values), flattened `(pos, e)` row-major.
+    pub caches: Vec<(Vec<f32>, Vec<f32>)>,
+    pub pos: usize,
+}
+
+impl DecodeState {
+    pub fn new(n_layers: usize) -> Self {
+        Self {
+            caches: vec![(Vec::new(), Vec::new()); n_layers],
+            pos: 0,
+        }
+    }
+
+    /// Bytes currently held by the KV cache.
+    pub fn cache_bytes(&self) -> usize {
+        self.caches
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) * 4)
+            .sum()
+    }
+}
+
+fn head_layout(w: &ModelWeights) -> HeadLayout {
+    HeadLayout {
+        n_heads: w.cfg.n_heads,
+        n_kv_heads: w.cfg.n_kv_heads,
+        head_dim: w.cfg.head_dim(),
+    }
+}
+
+/// Project through an optional matrix (`None` = identity = eliminated).
+fn proj(x: &Mat, m: &Option<Mat>) -> Mat {
+    match m {
+        Some(m) => matmul(x, m),
+        None => x.clone(),
+    }
+}
+
+/// One serial block: `FFN(P(Attn(Q x, K x, V x)))` with eliminated
+/// matrices as identity (paper Fig. 1).
+fn serial_block(x: &Mat, b: &BlockWeights, w: &ModelWeights, pos0: usize) -> Mat {
+    let q = proj(x, &b.q);
+    let k = proj(x, &b.k);
+    let v = proj(x, &b.v);
+    let a = causal_attention(&q, &k, &v, head_layout(w), pos0);
+    let p = proj(&a, &b.p);
+    ffn_forward(&p, &b.m, &b.o, w.cfg.ffn)
+}
+
+/// One parallel block: `P(Attn(...)) + FFN(x)` (paper Fig. 3). The
+/// post-attention matrix is `p` (vanilla), `c` (carry-merged exact form,
+/// `C = P·Q_next`), or absent (native merged form).
+fn parallel_block(x: &Mat, b: &BlockWeights, w: &ModelWeights, pos0: usize) -> Mat {
+    let q = proj(x, &b.q);
+    let k = proj(x, &b.k);
+    let v = proj(x, &b.v);
+    let a = causal_attention(&q, &k, &v, head_layout(w), pos0);
+    let post = if b.c.is_some() { &b.c } else { &b.p };
+    let attn_out = proj(&a, post);
+    let ffn_out = ffn_forward(x, &b.m, &b.o, w.cfg.ffn);
+    attn_out.add(&ffn_out)
+}
+
+/// Crate-visible wrapper for init-time calibration ([`ModelWeights::calibrate`]).
+pub(crate) fn block_forward_pub(x: &Mat, b: &BlockWeights, w: &ModelWeights, pos0: usize) -> Mat {
+    block_forward(x, b, w, pos0)
+}
+
+fn block_forward(x: &Mat, b: &BlockWeights, w: &ModelWeights, pos0: usize) -> Mat {
+    match w.cfg.layout {
+        BlockLayout::Serial => serial_block(x, b, w, pos0),
+        BlockLayout::Parallel => parallel_block(x, b, w, pos0),
+    }
+}
+
+/// Run the whole prompt through the model.
+///
+/// Returns `(logits, state)`: `logits` is `(t, vocab)` (one row per
+/// position), `state` holds the filled KV caches for subsequent
+/// [`decode_step`] calls.
+pub fn prefill(w: &ModelWeights, tokens: &[u32]) -> (Mat, DecodeState) {
+    assert!(!tokens.is_empty(), "prefill needs at least one token");
+    let mut state = DecodeState::new(w.cfg.n_layers);
+    let mut x = w.embed_tokens(tokens);
+    let hd = w.cfg.head_dim();
+    for (li, b) in w.blocks.iter().enumerate() {
+        // Fill this layer's cache from the block *input* projections so
+        // decode can continue the sequence.
+        let k = proj(&x, &b.k);
+        let v = proj(&x, &b.v);
+        let mut k_rot = k.clone();
+        rope::apply(&mut k_rot, hd, 0, rope::BASE);
+        let (kc, vc) = &mut state.caches[li];
+        kc.extend_from_slice(k_rot.as_slice());
+        vc.extend_from_slice(v.as_slice());
+        x = block_forward(&x, b, w, 0);
+    }
+    state.pos = tokens.len();
+    let logits = matmul(&x, &w.unembed);
+    (logits, state)
+}
+
+/// Decode one token given the cached context. Returns `(1, vocab)` logits.
+pub fn decode_step(w: &ModelWeights, state: &mut DecodeState, token: u32) -> Mat {
+    let pos = state.pos;
+    assert!(
+        pos < w.cfg.max_seq_len,
+        "sequence length {} exceeds max_seq_len {}",
+        pos,
+        w.cfg.max_seq_len
+    );
+    let layout = head_layout(w);
+    let mut x = w.embed_tokens(&[token]);
+    for (li, b) in w.blocks.iter().enumerate() {
+        let q = proj(&x, &b.q);
+        let k = proj(&x, &b.k);
+        let v = proj(&x, &b.v);
+        let (kc, vc) = &mut state.caches[li];
+        let a = decode_attention(&q, &k, &v, kc, vc, layout, pos);
+        x = match w.cfg.layout {
+            BlockLayout::Serial => {
+                let p = proj(&a, &b.p);
+                ffn_forward(&p, &b.m, &b.o, w.cfg.ffn)
+            }
+            BlockLayout::Parallel => {
+                let post = if b.c.is_some() { &b.c } else { &b.p };
+                let attn_out = proj(&a, post);
+                let ffn_out = ffn_forward(&x, &b.m, &b.o, w.cfg.ffn);
+                attn_out.add(&ffn_out)
+            }
+        };
+    }
+    state.pos += 1;
+    matmul(&x, &w.unembed)
+}
+
+/// Greedy-generate `n` tokens after a prompt (convenience for tests and
+/// examples; sampling lives in [`crate::sampler`]).
+pub fn greedy_generate(w: &ModelWeights, prompt: &[u32], n: usize) -> Vec<u32> {
+    let (logits, mut state) = prefill(w, prompt);
+    let mut out = Vec::with_capacity(n);
+    let mut next = argmax(logits.row(logits.rows() - 1));
+    for _ in 0..n {
+        out.push(next);
+        let logits = decode_step(w, &mut state, next);
+        next = argmax(logits.row(0));
+    }
+    out
+}
+
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn prefill_shapes_and_finite() {
+        for name in ["tiny-mha", "tiny-gqa", "tiny-mqa", "tiny-parallel"] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let w = ModelWeights::init_vanilla(&cfg, 7);
+            let (logits, state) = prefill(&w, &[1, 2, 3, 4]);
+            assert_eq!(logits.shape(), (4, cfg.vocab_size), "{name}");
+            assert!(logits.all_finite(), "{name} logits not finite");
+            assert_eq!(state.pos, 4);
+            assert_eq!(state.caches.len(), cfg.n_layers);
+            assert_eq!(state.caches[0].0.len(), 4 * cfg.e());
+        }
+    }
+
+    #[test]
+    fn decode_consistent_with_prefill() {
+        // prefill(t1..t5) row r logits == prefill(t1..t_{r+1}) then decode.
+        for name in ["tiny-mha", "tiny-gqa", "tiny-parallel"] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let w = ModelWeights::init_vanilla(&cfg, 8);
+            let toks = [3u32, 1, 4, 1, 5];
+            let (full, _) = prefill(&w, &toks);
+            let (_first, mut state) = prefill(&w, &toks[..2]);
+            for i in 2..toks.len() {
+                let last = decode_step(&w, &mut state, toks[i]);
+                let err = last.max_abs_diff(&full.row_slice(i, i + 1));
+                assert!(err < 2e-4, "{name} pos {i} err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_position_limit_enforced() {
+        let mut cfg = ModelConfig::tiny_mha();
+        cfg.max_seq_len = 4;
+        let w = ModelWeights::init_vanilla(&cfg, 9);
+        let (_, mut state) = prefill(&w, &[1, 2, 3]);
+        let _ = decode_step(&w, &mut state, 4); // pos 3 → ok
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            decode_step(&w, &mut state, 5)
+        }));
+        assert!(r.is_err(), "should enforce max_seq_len");
+    }
+
+    #[test]
+    fn greedy_generation_deterministic() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 10);
+        let a = greedy_generate(&w, &[1, 2, 3], 8);
+        let b = greedy_generate(&w, &[1, 2, 3], 8);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn different_prompts_different_logits() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 11);
+        let (l1, _) = prefill(&w, &[1, 2]);
+        let (l2, _) = prefill(&w, &[1, 3]);
+        assert_eq!(l1.row(0), l2.row(0)); // causal: first position unaffected
+        assert_ne!(l1.row(1), l2.row(1));
+    }
+
+    #[test]
+    fn cache_bytes_accounting() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 12);
+        let (_, state) = prefill(&w, &[1, 2, 3]);
+        // per layer: k + v = 2 * t * e floats
+        let expect = cfg.n_layers * 2 * 3 * cfg.e() * 4;
+        assert_eq!(state.cache_bytes(), expect);
+    }
+}

@@ -1,0 +1,332 @@
+//! Pure-Rust reference implementation of the skipless transformer in every
+//! variant the paper discusses.
+//!
+//! This module is simultaneously:
+//! * the **oracle** for the paper's equivalence experiments (vanilla vs
+//!   merged must agree to f32 roundoff after [`crate::surgery`]),
+//! * the **CPU engine** behind the coordinator when PJRT artifacts are not
+//!   in use (prefill + KV-cached decode), and
+//! * the **baseline comparator** for the decode-speedup benches.
+//!
+//! Layout of a *serial skipless* block (paper Fig. 1a): the block is a pure
+//! composition `FFN(Attn(x))` — no skip connections, no normalization.
+//! A *parallel skipless* block (Fig. 3) is `AttnBranch(x) + FfnBranch(x)`.
+//! The merged variants store `None` for eliminated matrices; the forward
+//! pass treats a missing matrix as the identity, which is exactly the
+//! paper's `Q* = 1` notation in Table 1.
+
+pub mod attention;
+pub mod ffn;
+pub mod forward;
+pub mod residual;
+pub mod rope;
+pub mod weights_io;
+
+pub use forward::{decode_step, greedy_generate, prefill, DecodeState};
+
+use crate::config::{BlockLayout, FfnKind, ModelConfig, Variant};
+use crate::tensor::Mat;
+use crate::util::rng::Xoshiro256;
+
+/// Weights of one transformer block. `None` marks a matrix the paper's
+/// surgery eliminated (identity in the forward pass).
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    /// Query projection, `d×d`.
+    pub q: Option<Mat>,
+    /// Key projection, `d×e`.
+    pub k: Option<Mat>,
+    /// Value projection, `d×e`.
+    pub v: Option<Mat>,
+    /// Post-attention projection, `d×d`.
+    pub p: Option<Mat>,
+    /// Parallel carry-merged matrix `C_i = P_i·Q_{i+1}` (`d×d`) — only used
+    /// by the exactly-equivalent parallel merged form (DESIGN.md §Parallel).
+    pub c: Option<Mat>,
+    /// FFN input projection, `d×f'` (`f' = 2f` for SwiGLU: gate ‖ up).
+    pub m: Mat,
+    /// FFN output projection, `f×d`.
+    pub o: Mat,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub variant: Variant,
+    /// Token embedding, `vocab×d`.
+    pub embed: Mat,
+    /// Output head, `d×vocab`.
+    pub unembed: Mat,
+    pub blocks: Vec<BlockWeights>,
+}
+
+impl ModelWeights {
+    /// Random initialization of the **vanilla** architecture, with
+    /// init-time activation calibration.
+    ///
+    /// Skipless networks have no normalization to absorb scale, and the
+    /// SwiGLU product is *quadratic* in activation scale, so naive
+    /// N(0, 1/√d_in) init collapses doubly-exponentially with depth (a
+    /// 12-layer model underflows f32 to exactly 0). This is the signal-
+    /// propagation problem He et al. 2023 solve with shaped attention; for
+    /// inference-oriented experiments a cheaper fix suffices: after random
+    /// init, run a probe sequence block by block and rescale each block's
+    /// output matrix so activations stay at unit RMS ([`Self::calibrate`]).
+    /// Calibration only changes the (arbitrary) init, so every equivalence
+    /// property is preserved.
+    pub fn init_vanilla(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut w = Self::init_vanilla_uncalibrated(cfg, seed);
+        w.calibrate();
+        w
+    }
+
+    /// Plain N(0, 1/√d_in) init without calibration (exposed for tests and
+    /// the signal-propagation demo in `benches/fig4_ablation`).
+    pub fn init_vanilla_uncalibrated(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let d = cfg.dim;
+        let e = cfg.e();
+        let fp = cfg.f_prime();
+        let f = cfg.hidden_dim;
+        let gain = 1.0f32;
+        let blocks = (0..cfg.n_layers)
+            .map(|_| BlockWeights {
+                q: Some(Mat::randn(d, d, gain / (d as f32).sqrt(), &mut rng)),
+                k: Some(Mat::randn(d, e, gain / (d as f32).sqrt(), &mut rng)),
+                v: Some(Mat::randn(d, e, gain / (d as f32).sqrt(), &mut rng)),
+                p: Some(Mat::randn(d, d, gain / (d as f32).sqrt(), &mut rng)),
+                c: None,
+                m: Mat::randn(d, fp, gain / (d as f32).sqrt(), &mut rng),
+                o: Mat::randn(f, d, gain / (f as f32).sqrt(), &mut rng),
+            })
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            variant: Variant::Vanilla,
+            embed: Mat::randn(cfg.vocab_size, d, 1.0, &mut rng),
+            unembed: Mat::randn(d, cfg.vocab_size, 1.0 / (d as f32).sqrt(), &mut rng),
+            blocks,
+        }
+    }
+
+    /// Init-time activation calibration: forward a probe prompt block by
+    /// block and rescale each block's output path so the block output has
+    /// unit RMS. Serial blocks scale `o`; parallel blocks scale `o` and
+    /// `p` (both output paths) by the same factor — a linear rescaling, so
+    /// all Table-1 merge algebra still applies verbatim.
+    pub fn calibrate(&mut self) {
+        let t = 12.min(self.cfg.max_seq_len);
+        let probe: Vec<u32> = (0..t as u32)
+            .map(|i| (i * 37 + 5) % self.cfg.vocab_size as u32)
+            .collect();
+        // normalize every embedding row to unit RMS so any prompt enters
+        // block 0 at the calibrated scale (not just the probe)
+        let d = self.cfg.dim;
+        for r in 0..self.embed.rows() {
+            let row = self.embed.row_mut(r);
+            let rms = (row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+                / d as f64)
+                .sqrt() as f32;
+            if rms > 1e-20 {
+                let inv = 1.0 / rms;
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+        let mut x = self.embed_tokens(&probe);
+        for i in 0..self.blocks.len() {
+            let y = forward::block_forward_pub(&x, &self.blocks[i], self, 0);
+            let rms = (y.fro_norm() / (y.len() as f64).sqrt()) as f32;
+            let factor = if rms > 1e-20 { 1.0 / rms } else { 1.0 };
+            let b = &mut self.blocks[i];
+            b.o.scale(factor);
+            if self.cfg.layout == BlockLayout::Parallel {
+                if let Some(p) = b.p.as_mut() {
+                    p.scale(factor);
+                }
+                if let Some(c) = b.c.as_mut() {
+                    c.scale(factor);
+                }
+            }
+            let mut y = y;
+            y.scale(factor);
+            x = y;
+        }
+    }
+
+    /// Total number of scalar weights actually stored (cross-checked against
+    /// the analytic [`crate::params::count_weights`] in tests).
+    pub fn stored_weights(&self) -> u64 {
+        let mat = |m: &Option<Mat>| m.as_ref().map(|m| m.len() as u64).unwrap_or(0);
+        let mut total = self.embed.len() as u64 + self.unembed.len() as u64;
+        for b in &self.blocks {
+            total += mat(&b.q) + mat(&b.k) + mat(&b.v) + mat(&b.p) + mat(&b.c);
+            total += b.m.len() as u64 + b.o.len() as u64;
+        }
+        total
+    }
+
+    /// Bytes the weights occupy at f32.
+    pub fn stored_bytes(&self) -> u64 {
+        self.stored_weights() * 4
+    }
+
+    /// Embed a token sequence to a `(t, d)` activation matrix.
+    pub fn embed_tokens(&self, tokens: &[u32]) -> Mat {
+        let d = self.cfg.dim;
+        let mut x = Mat::zeros(tokens.len(), d);
+        for (r, &t) in tokens.iter().enumerate() {
+            assert!((t as usize) < self.cfg.vocab_size, "token {t} out of vocab");
+            x.row_mut(r).copy_from_slice(self.embed.row(t as usize));
+        }
+        x
+    }
+
+    /// Structural sanity check: shapes of every matrix against the config
+    /// and variant (used by tests and by the weight loader).
+    pub fn check_shapes(&self) -> Result<(), String> {
+        let cfg = &self.cfg;
+        let d = cfg.dim;
+        let e = cfg.e();
+        let fp = cfg.f_prime();
+        let f = cfg.hidden_dim;
+        if self.embed.shape() != (cfg.vocab_size, d) {
+            return Err(format!("embed shape {:?}", self.embed.shape()));
+        }
+        if self.unembed.shape() != (d, cfg.vocab_size) {
+            return Err(format!("unembed shape {:?}", self.unembed.shape()));
+        }
+        if self.blocks.len() != cfg.n_layers {
+            return Err(format!("{} blocks, config says {}", self.blocks.len(), cfg.n_layers));
+        }
+        for (i, b) in self.blocks.iter().enumerate() {
+            let expect = |name: &str, m: &Option<Mat>, shape: (usize, usize), present: bool| {
+                match (m, present) {
+                    (Some(m), true) if m.shape() == shape => Ok(()),
+                    (Some(m), true) => Err(format!("block {i} {name} shape {:?} != {:?}", m.shape(), shape)),
+                    (None, false) => Ok(()),
+                    (Some(_), false) => Err(format!("block {i}: {name} should be eliminated for {:?}", self.variant)),
+                    (None, true) => Err(format!("block {i}: {name} missing for {:?}", self.variant)),
+                }
+            };
+            let parallel_exact = cfg.layout == BlockLayout::Parallel && b.c.is_some();
+            match self.variant {
+                Variant::Vanilla => {
+                    expect("q", &b.q, (d, d), true)?;
+                    expect("k", &b.k, (d, e), true)?;
+                    expect("v", &b.v, (d, e), true)?;
+                    expect("p", &b.p, (d, d), true)?;
+                }
+                Variant::MergedQP => {
+                    expect("q", &b.q, (d, d), false)?;
+                    expect("k", &b.k, (d, e), true)?;
+                    expect("v", &b.v, (d, e), true)?;
+                    if parallel_exact {
+                        expect("c", &b.c, (d, d), true)?;
+                        expect("p", &b.p, (d, d), false)?;
+                    } else {
+                        expect("p", &b.p, (d, d), false)?;
+                    }
+                }
+                Variant::MergedKP => {
+                    expect("q", &b.q, (d, d), true)?;
+                    expect("k", &b.k, (d, e), false)?;
+                    expect("v", &b.v, (d, e), true)?;
+                    expect("p", &b.p, (d, d), false)?;
+                }
+                Variant::MergedVP => {
+                    expect("q", &b.q, (d, d), true)?;
+                    expect("k", &b.k, (d, e), true)?;
+                    expect("v", &b.v, (d, e), false)?;
+                    expect("p", &b.p, (d, d), false)?;
+                }
+            }
+            if b.m.shape() != (d, fp) {
+                return Err(format!("block {i} m shape {:?} != {:?}", b.m.shape(), (d, fp)));
+            }
+            if b.o.shape() != (f, d) {
+                return Err(format!("block {i} o shape {:?} != {:?}", b.o.shape(), (f, d)));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// SiLU (swish) activation used by SwiGLU.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// GELU (tanh approximation) used by the MLP FFN (Pythia-style).
+/// f32 tanh matches the JAX kernel (jnp is f32) and is ~2× faster than
+/// routing through f64 (§Perf L3 iteration 3).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608f32 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// The activation for a config's FFN kind (first-layer nonlinearity).
+pub fn ffn_activation(kind: FfnKind) -> fn(f32) -> f32 {
+    match kind {
+        FfnKind::Mlp => gelu,
+        FfnKind::SwiGlu => silu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::count_weights;
+
+    #[test]
+    fn init_shapes_valid_all_presets() {
+        for name in ["tiny-mha", "tiny-gqa", "tiny-mqa", "tiny-parallel"] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let w = ModelWeights::init_vanilla(&cfg, 1);
+            w.check_shapes().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn stored_matches_analytic_count() {
+        for name in ["tiny-mha", "tiny-gqa", "tiny-mqa"] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let w = ModelWeights::init_vanilla(&cfg, 2);
+            let analytic = count_weights(&cfg, Variant::Vanilla).total();
+            assert_eq!(w.stored_weights(), analytic, "{name}");
+        }
+    }
+
+    #[test]
+    fn embed_tokens_copies_rows() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 3);
+        let x = w.embed_tokens(&[5, 9, 5]);
+        assert_eq!(x.shape(), (3, cfg.dim));
+        assert_eq!(x.row(0), w.embed.row(5));
+        assert_eq!(x.row(0), x.row(2));
+        assert_ne!(x.row(0), x.row(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn embed_rejects_oov() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 3);
+        let _ = w.embed_tokens(&[9999]);
+    }
+
+    #[test]
+    fn activations_reference_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(1.0) - 0.731058).abs() < 1e-5);
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        // asymptotics
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+    }
+}

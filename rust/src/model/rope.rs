@@ -1,0 +1,111 @@
+//! Rotary position embeddings (RoPE), applied per head after the Q/K
+//! projections.
+//!
+//! RoPE is a per-head *linear* map on the projected vectors, so applying it
+//! identically in the vanilla and merged models preserves the paper's exact
+//! equivalence: the merged model's queries are `x̃ = x·Q` — the same vector
+//! the vanilla model rotates — so both rotate the same values. Uses the
+//! rotate-half convention (GPT-NeoX/Llama) with base 10000.
+
+/// Rotate one head vector `v` (length `head_dim`) in place for `pos`.
+pub fn rotate_head(v: &mut [f32], pos: usize, base: f32) {
+    let hd = v.len();
+    debug_assert!(hd % 2 == 0, "head_dim must be even for RoPE");
+    let half = hd / 2;
+    for i in 0..half {
+        let theta = pos as f32 / base.powf(2.0 * i as f32 / hd as f32);
+        let (sin, cos) = theta.sin_cos();
+        let a = v[i];
+        let b = v[i + half];
+        v[i] = a * cos - b * sin;
+        v[i + half] = a * sin + b * cos;
+    }
+}
+
+/// Apply RoPE to a `(t, n_heads*head_dim)` activation matrix where row `r`
+/// is sequence position `pos0 + r`. Rotates each `head_dim` slice.
+pub fn apply(x: &mut crate::tensor::Mat, head_dim: usize, pos0: usize, base: f32) {
+    let cols = x.cols();
+    assert_eq!(cols % head_dim, 0, "cols not a multiple of head_dim");
+    let n_heads = cols / head_dim;
+    for r in 0..x.rows() {
+        let pos = pos0 + r;
+        let row = x.row_mut(r);
+        for h in 0..n_heads {
+            rotate_head(&mut row[h * head_dim..(h + 1) * head_dim], pos, base);
+        }
+    }
+}
+
+/// Default RoPE base used across the crate (and in python/compile).
+pub const BASE: f32 = 10000.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        rotate_head(&mut v, 0, BASE);
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut v = vec![0.3, -1.2, 0.7, 2.1, -0.4, 0.9];
+        let norm0: f32 = v.iter().map(|x| x * x).sum();
+        rotate_head(&mut v, 17, BASE);
+        let norm1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((norm0 - norm1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn relative_property_dot_depends_on_distance() {
+        // <R_m q, R_n k> must equal <R_{m+s} q, R_{n+s} k> for any shift s.
+        let q = vec![0.5, -0.25, 1.0, 0.75];
+        let k = vec![-0.3, 0.6, 0.2, -0.9];
+        let dot = |m: usize, n: usize| {
+            let mut qq = q.clone();
+            let mut kk = k.clone();
+            rotate_head(&mut qq, m, BASE);
+            rotate_head(&mut kk, n, BASE);
+            qq.iter().zip(&kk).map(|(a, b)| a * b).sum::<f32>()
+        };
+        let d1 = dot(3, 7);
+        let d2 = dot(13, 17);
+        assert!((d1 - d2).abs() < 1e-4, "{d1} vs {d2}");
+        // and differs for a different distance
+        let d3 = dot(3, 8);
+        assert!((d1 - d3).abs() > 1e-4);
+    }
+
+    #[test]
+    fn apply_rotates_each_head_independently() {
+        let head_dim = 4;
+        let mut x = Mat::from_fn(2, 8, |r, c| (r * 8 + c) as f32 * 0.1);
+        let orig = x.clone();
+        apply(&mut x, head_dim, 5, BASE);
+        // manual: row 0 is pos 5, row 1 is pos 6
+        for r in 0..2 {
+            for h in 0..2 {
+                let mut manual: Vec<f32> = orig.row(r)[h * 4..(h + 1) * 4].to_vec();
+                rotate_head(&mut manual, 5 + r, BASE);
+                assert_eq!(&x.row(r)[h * 4..(h + 1) * 4], manual.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn pos0_offset_matches_full_sequence() {
+        // Rotating rows [2..4) with pos0=2 must equal rotating a 4-row
+        // matrix and slicing — the decode path relies on this.
+        let mut full = Mat::from_fn(4, 4, |r, c| ((r + 1) * (c + 2)) as f32 * 0.05);
+        let mut tail = full.row_slice(2, 4);
+        apply(&mut full, 4, 0, BASE);
+        apply(&mut tail, 4, 2, BASE);
+        assert_eq!(tail.row(0), full.row(2));
+        assert_eq!(tail.row(1), full.row(3));
+    }
+}

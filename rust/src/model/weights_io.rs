@@ -1,0 +1,275 @@
+//! Weight file format shared between Rust and the PJRT artifacts.
+//!
+//! `model.swt` = one JSON header line (config, variant, entry table with
+//! byte offsets) + `\n` + raw little-endian f32 payload. The entry order is
+//! the canonical flat order (`embed`, `unembed`, `layer.{i}.{name}`) that
+//! `python/compile/model.py::flat_weight_specs` defines — the same order
+//! the AOT manifests list and the PJRT engine uploads.
+
+use crate::config::{BlockLayout, ModelConfig, Variant};
+use crate::model::{BlockWeights, ModelWeights};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Canonical per-layer weight names for a (config, variant) pair.
+/// Must match `python/compile/model.py::layer_weight_names`.
+pub fn layer_weight_names(cfg: &ModelConfig, variant: Variant) -> Vec<&'static str> {
+    let mut names = Vec::new();
+    if variant != Variant::MergedQP {
+        names.push("q");
+    }
+    if variant != Variant::MergedKP {
+        names.push("k");
+    }
+    if variant != Variant::MergedVP {
+        names.push("v");
+    }
+    if variant == Variant::Vanilla {
+        names.push("p");
+    } else if cfg.layout == BlockLayout::Parallel {
+        names.push("c");
+    }
+    names.push("m");
+    names.push("o");
+    names
+}
+
+/// Flattened views of every matrix in canonical order.
+pub fn flat_entries<'a>(w: &'a ModelWeights) -> Vec<(String, &'a Mat)> {
+    let mut out: Vec<(String, &Mat)> = vec![
+        ("embed".to_string(), &w.embed),
+        ("unembed".to_string(), &w.unembed),
+    ];
+    for (i, b) in w.blocks.iter().enumerate() {
+        for name in layer_weight_names(&w.cfg, w.variant) {
+            let m: &Mat = match name {
+                "q" => b.q.as_ref().expect("q present"),
+                "k" => b.k.as_ref().expect("k present"),
+                "v" => b.v.as_ref().expect("v present"),
+                "p" => b.p.as_ref().expect("p present"),
+                "c" => b.c.as_ref().expect("c present"),
+                "m" => &b.m,
+                "o" => &b.o,
+                _ => unreachable!(),
+            };
+            out.push((format!("layer.{i}.{name}"), m));
+        }
+    }
+    out
+}
+
+/// Write `w` to `path` in the shared format.
+pub fn save(w: &ModelWeights, path: &Path) -> std::io::Result<()> {
+    let entries = flat_entries(w);
+    let mut offset = 0u64;
+    let table: Vec<Json> = entries
+        .iter()
+        .map(|(name, m)| {
+            let j = Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                (
+                    "shape",
+                    Json::Arr(vec![
+                        Json::num(m.rows() as f64),
+                        Json::num(m.cols() as f64),
+                    ]),
+                ),
+                ("offset", Json::num(offset as f64)),
+            ]);
+            offset += (m.len() * 4) as u64;
+            j
+        })
+        .collect();
+    let header = Json::obj(vec![
+        ("format", Json::str("skipless-weights-v1")),
+        ("config", w.cfg.to_json()),
+        ("variant", Json::str(w.variant.name())),
+        ("entries", Json::Arr(table)),
+        ("payload_bytes", Json::num(offset as f64)),
+    ]);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(header.to_string().as_bytes())?;
+    f.write_all(b"\n")?;
+    for (_, m) in &entries {
+        // SAFETY: plain f32 slice reinterpreted as bytes (LE hosts only,
+        // which is every supported target here).
+        let bytes = unsafe {
+            std::slice::from_raw_parts(m.as_slice().as_ptr() as *const u8, m.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+fn io_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Load a weight file written by [`save`].
+pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut header_line = Vec::new();
+    // read until newline
+    let mut byte = [0u8; 1];
+    loop {
+        f.read_exact(&mut byte)?;
+        if byte[0] == b'\n' {
+            break;
+        }
+        header_line.push(byte[0]);
+        if header_line.len() > 64 << 20 {
+            return Err(io_err("unreasonable header size".into()));
+        }
+    }
+    let header = Json::parse(std::str::from_utf8(&header_line).map_err(|e| io_err(e.to_string()))?)
+        .map_err(|e| io_err(e.to_string()))?;
+    if header.get("format").and_then(|v| v.as_str()) != Some("skipless-weights-v1") {
+        return Err(io_err("bad format marker".into()));
+    }
+    let cfg = ModelConfig::from_json(header.get("config").ok_or_else(|| io_err("no config".into()))?)
+        .map_err(|e| io_err(e.to_string()))?;
+    let variant = header
+        .get("variant")
+        .and_then(|v| v.as_str())
+        .and_then(Variant::parse)
+        .ok_or_else(|| io_err("bad variant".into()))?;
+    let entries = header
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| io_err("no entries".into()))?;
+
+    let mut mats: Vec<(String, Mat)> = Vec::with_capacity(entries.len());
+    for e in entries {
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| io_err("entry without name".into()))?
+            .to_string();
+        let shape = e
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| io_err("entry without shape".into()))?;
+        let rows = shape[0].as_usize().ok_or_else(|| io_err("bad shape".into()))?;
+        let cols = shape[1].as_usize().ok_or_else(|| io_err("bad shape".into()))?;
+        let mut buf = vec![0u8; rows * cols * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        mats.push((name, Mat::from_vec(rows, cols, data)));
+    }
+
+    // reassemble
+    let take = |mats: &mut Vec<(String, Mat)>, name: &str| -> std::io::Result<Mat> {
+        let idx = mats
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| io_err(format!("missing entry {name}")))?;
+        Ok(mats.remove(idx).1)
+    };
+    let mut mats = mats;
+    let embed = take(&mut mats, "embed")?;
+    let unembed = take(&mut mats, "unembed")?;
+    let names = layer_weight_names(&cfg, variant);
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let mut b = BlockWeights {
+            q: None,
+            k: None,
+            v: None,
+            p: None,
+            c: None,
+            m: Mat::zeros(0, 0),
+            o: Mat::zeros(0, 0),
+        };
+        for name in &names {
+            let m = take(&mut mats, &format!("layer.{i}.{name}"))?;
+            match *name {
+                "q" => b.q = Some(m),
+                "k" => b.k = Some(m),
+                "v" => b.v = Some(m),
+                "p" => b.p = Some(m),
+                "c" => b.c = Some(m),
+                "m" => b.m = m,
+                "o" => b.o = m,
+                _ => unreachable!(),
+            }
+        }
+        blocks.push(b);
+    }
+    let w = ModelWeights {
+        cfg,
+        variant,
+        embed,
+        unembed,
+        blocks,
+    };
+    w.check_shapes().map_err(io_err)?;
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::prefill;
+    use crate::surgery::{transform, Options};
+
+    #[test]
+    fn roundtrip_vanilla_and_merged() {
+        let dir = std::env::temp_dir().join("skipless_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (i, name) in ["tiny-mha", "tiny-gqa", "tiny-parallel"].iter().enumerate() {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let w = ModelWeights::init_vanilla(&cfg, 90 + i as u64);
+            let merged = transform(&w, Variant::MergedQP, Options::default()).unwrap();
+            for (tag, model) in [("v", &w), ("m", &merged)] {
+                let path = dir.join(format!("{name}-{tag}.swt"));
+                save(model, &path).unwrap();
+                let back = load(&path).unwrap();
+                assert_eq!(back.variant, model.variant);
+                assert_eq!(back.stored_weights(), model.stored_weights());
+                let (l0, _) = prefill(model, &[1, 2, 3]);
+                let (l1, _) = prefill(&back, &[1, 2, 3]);
+                assert_eq!(l0.max_abs_diff(&l1), 0.0, "{name}/{tag} not bit-exact");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_order_matches_python_convention() {
+        // vanilla serial: q,k,v,p,m,o ; merged_qp serial: k,v,m,o
+        let cfg = ModelConfig::tiny_gqa();
+        assert_eq!(
+            layer_weight_names(&cfg, Variant::Vanilla),
+            vec!["q", "k", "v", "p", "m", "o"]
+        );
+        assert_eq!(
+            layer_weight_names(&cfg, Variant::MergedQP),
+            vec!["k", "v", "m", "o"]
+        );
+        // parallel merged gets the carry matrix
+        let cfgp = ModelConfig::tiny_parallel();
+        assert_eq!(
+            layer_weight_names(&cfgp, Variant::MergedQP),
+            vec!["k", "v", "c", "m", "o"]
+        );
+        // entry count: 2 + layers * names
+        let w = ModelWeights::init_vanilla(&cfg, 1);
+        assert_eq!(flat_entries(&w).len(), 2 + cfg.n_layers * 6);
+    }
+
+    #[test]
+    fn corrupted_file_rejected() {
+        let dir = std::env::temp_dir().join("skipless_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.swt");
+        std::fs::write(&path, b"{\"format\":\"nope\"}\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, b"not json\n").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! Analytic parameter counting — reproduces the paper's §3 table exactly.
+//!
+//! Every row of the table ("Q+P weights per layer", "K+V weights per
+//! layer", "FFN weights per layer", "Input+output embed.", totals, savings,
+//! speedup) is a pure function of [`ModelConfig`] and [`Variant`]. The
+//! `table3` bench and `examples/paper_tables.rs` print these next to the
+//! paper's published numbers.
+
+use crate::config::{FfnKind, ModelConfig, Variant};
+
+/// Per-layer and total weight counts for one (config, variant) pair.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WeightCounts {
+    pub variant: Variant,
+    /// Q projection weights per layer (`d·d`, or 0 when merged away).
+    pub q_per_layer: u64,
+    /// K projection weights per layer (`d·e`).
+    pub k_per_layer: u64,
+    /// V projection weights per layer (`d·e`).
+    pub v_per_layer: u64,
+    /// Post-attention projection P per layer (`e·d`... see note).
+    pub p_per_layer: u64,
+    /// FFN weights per layer ((2 or 3)·d·f).
+    pub ffn_per_layer: u64,
+    /// Input + output embeddings.
+    pub embeddings: u64,
+    pub n_layers: u64,
+}
+
+impl WeightCounts {
+    /// All attention weights for one layer.
+    pub fn attn_per_layer(&self) -> u64 {
+        self.q_per_layer + self.k_per_layer + self.v_per_layer + self.p_per_layer
+    }
+
+    /// Q+P per layer — the quantity the paper's table headlines.
+    pub fn qp_per_layer(&self) -> u64 {
+        self.q_per_layer + self.p_per_layer
+    }
+
+    /// K+V per layer.
+    pub fn kv_per_layer(&self) -> u64 {
+        self.k_per_layer + self.v_per_layer
+    }
+
+    /// Total model weights.
+    pub fn total(&self) -> u64 {
+        self.n_layers * (self.attn_per_layer() + self.ffn_per_layer) + self.embeddings
+    }
+
+    /// Weights that must be streamed from memory to produce one token at
+    /// batch 1 (= all weights; every matrix is touched once per token).
+    /// The paper's speedup model divides these between variants.
+    pub fn bytes_per_token(&self, bytes_per_weight: u64) -> u64 {
+        self.total() * bytes_per_weight
+    }
+}
+
+/// Count weights for `cfg` under `variant`.
+///
+/// Counting rules (paper §3 "calculated from above parameters"):
+/// * Q: `d·d`            (removed by [`Variant::MergedQP`])
+/// * K: `d·e`            (removed by [`Variant::MergedKP`]; MHA only)
+/// * V: `d·e`            (removed by [`Variant::MergedVP`]; MHA only)
+/// * P: `d·d` — the attention output is the concat of `n_heads` head
+///   outputs of size `head_dim`, i.e. always `d` wide (GQA repeats each KV
+///   head across its query group), so P projects d→d and "Q+P per layer" is
+///   `2·dim·dim` for both Pythia and Mistral, as the table states.
+///   P is removed by every merged variant (`M* = P·M` absorbs it).
+/// * FFN: `2·d·f` for MLP, `3·d·f` for GLU variants
+/// * Embeddings: `2·d·vocab` (untied)
+///
+/// Note the merges do not change K/V/FFN/embedding counts: `O*₍ᵢ₋₁₎ = O·Q`
+/// and `K* = Q⁻¹K` etc. are same-shape replacements.
+pub fn count_weights(cfg: &ModelConfig, variant: Variant) -> WeightCounts {
+    assert!(
+        cfg.supports(variant),
+        "{} does not support {:?} (e={} != d={})",
+        cfg.name,
+        variant,
+        cfg.e(),
+        cfg.dim
+    );
+    let d = cfg.dim as u64;
+    let e = cfg.e() as u64;
+    let f = cfg.hidden_dim as u64;
+    let vocab = cfg.vocab_size as u64;
+    let ffn_mats = match cfg.ffn {
+        FfnKind::Mlp => 2,
+        FfnKind::SwiGlu => 3,
+    };
+    let (q, k, v, p) = match variant {
+        Variant::Vanilla => (d * d, d * e, d * e, d * d),
+        Variant::MergedQP => (0, d * e, d * e, 0),
+        Variant::MergedKP => (d * d, 0, d * e, 0),
+        Variant::MergedVP => (d * d, d * e, 0, 0),
+    };
+    let embeddings = if cfg.tied_embeddings {
+        d * vocab
+    } else {
+        2 * d * vocab
+    };
+    WeightCounts {
+        variant,
+        q_per_layer: q,
+        k_per_layer: k,
+        v_per_layer: v,
+        p_per_layer: p,
+        ffn_per_layer: ffn_mats * d * f,
+        embeddings,
+        n_layers: cfg.n_layers as u64,
+    }
+}
+
+/// Fraction of weights removed by `variant` relative to vanilla.
+pub fn savings_fraction(cfg: &ModelConfig, variant: Variant) -> f64 {
+    let base = count_weights(cfg, Variant::Vanilla).total() as f64;
+    let new = count_weights(cfg, variant).total() as f64;
+    (base - new) / base
+}
+
+/// The paper's batch-1 speedup model: autoregressive decoding at batch 1 is
+/// memory-bandwidth-bound, so token latency ∝ weights streamed per token →
+/// speedup = vanilla_weights / merged_weights.
+pub fn batch1_speedup(cfg: &ModelConfig, variant: Variant) -> f64 {
+    let base = count_weights(cfg, Variant::Vanilla).total() as f64;
+    let new = count_weights(cfg, variant).total() as f64;
+    base / new
+}
+
+/// One formatted row set of the §3 table for a config.
+pub fn table3_report(cfg: &ModelConfig) -> String {
+    let v = count_weights(cfg, Variant::Vanilla);
+    let m = count_weights(cfg, Variant::MergedQP);
+    let mut s = String::new();
+    s.push_str(&format!("## {}\n", cfg.name));
+    s.push_str(&format!(
+        "  layout={} attention={} d={} n_layers={} n_heads={} n_kv_heads={} e={} f={} vocab={}\n",
+        cfg.layout.name(),
+        cfg.attention.name(),
+        cfg.dim,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.e(),
+        cfg.hidden_dim,
+        cfg.vocab_size
+    ));
+    s.push_str(&format!("  Q+P weights per layer : {:>13}\n", v.qp_per_layer()));
+    s.push_str(&format!("  K+V weights per layer : {:>13}\n", v.kv_per_layer()));
+    s.push_str(&format!("  FFN weights per layer : {:>13}\n", v.ffn_per_layer));
+    s.push_str(&format!("  Input+output embed.   : {:>13}\n", v.embeddings));
+    s.push_str(&format!("  Total weights         : {:>13}  ({:.1}B)\n", v.total(), v.total() as f64 / 1e9));
+    s.push_str(&format!("  Total w/o Q+P weights : {:>13}  ({:.1}B)\n", m.total(), m.total() as f64 / 1e9));
+    s.push_str(&format!(
+        "  Weight savings        : {:>12.0}%\n",
+        100.0 * savings_fraction(cfg, Variant::MergedQP)
+    ));
+    s.push_str(&format!(
+        "  Possible speedup      : {:>12.2}x  (batch 1, bandwidth-bound)\n",
+        batch1_speedup(cfg, Variant::MergedQP)
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The §3 table, cell by cell.
+    #[test]
+    fn pythia_table_exact() {
+        let cfg = ModelConfig::pythia_6_9b();
+        let w = count_weights(&cfg, Variant::Vanilla);
+        assert_eq!(w.qp_per_layer(), 33_554_432); // 2 * 4096 * 4096
+        assert_eq!(w.kv_per_layer(), 33_554_432);
+        assert_eq!(w.ffn_per_layer, 134_217_728); // 2 * 4096 * 16384
+        assert_eq!(w.embeddings, 412_876_800); // 2 * 4096 * 50400
+        // paper: "6.9B" total, "5.8B" without Q+P
+        assert_eq!(w.total(), 6_855_327_744);
+        assert!((w.total() as f64 / 1e9 - 6.9).abs() < 0.05);
+        let m = count_weights(&cfg, Variant::MergedQP);
+        assert_eq!(m.total(), 5_781_585_920);
+        assert!((m.total() as f64 / 1e9 - 5.8).abs() < 0.05);
+    }
+
+    #[test]
+    fn mistral_table_exact() {
+        let cfg = ModelConfig::mistral_7b();
+        let w = count_weights(&cfg, Variant::Vanilla);
+        assert_eq!(w.qp_per_layer(), 33_554_432); // 2 * dim * dim (o_proj is d×d)
+        assert_eq!(w.kv_per_layer(), 8_388_608); // 2 * 4096 * 4096 / 32 * 8
+        assert_eq!(w.ffn_per_layer, 176_160_768); // 3 * 4096 * 14336
+        assert_eq!(w.embeddings, 262_144_000); // 2 * 4096 * 32000
+        // paper: "7.2B" total, "6.2B" without Q+P
+        assert_eq!(w.total(), 7_241_465_856);
+        assert!((w.total() as f64 / 1e9 - 7.2).abs() < 0.05);
+        let m = count_weights(&cfg, Variant::MergedQP);
+        assert_eq!(m.total(), 6_167_724_032);
+        assert!((m.total() as f64 / 1e9 - 6.2).abs() < 0.05);
+    }
+
+    #[test]
+    fn savings_match_paper() {
+        // Paper: Pythia 16%, speedup 1.19x; Mistral 15%, speedup 1.17x.
+        let py = ModelConfig::pythia_6_9b();
+        let mi = ModelConfig::mistral_7b();
+        let s_py = savings_fraction(&py, Variant::MergedQP);
+        let s_mi = savings_fraction(&mi, Variant::MergedQP);
+        assert!((s_py - 0.16).abs() < 0.01, "pythia savings {s_py}");
+        assert!((s_mi - 0.15).abs() < 0.01, "mistral savings {s_mi}");
+        let sp_py = batch1_speedup(&py, Variant::MergedQP);
+        let sp_mi = batch1_speedup(&mi, Variant::MergedQP);
+        assert!((sp_py - 1.19).abs() < 0.01, "pythia speedup {sp_py}");
+        assert!((sp_mi - 1.17).abs() < 0.01, "mistral speedup {sp_mi}");
+    }
+
+    #[test]
+    fn merged_variants_remove_exactly_expected() {
+        let cfg = ModelConfig::tiny_mha();
+        let d = cfg.dim as u64;
+        let v = count_weights(&cfg, Variant::Vanilla);
+        for variant in [Variant::MergedQP, Variant::MergedKP, Variant::MergedVP] {
+            let m = count_weights(&cfg, variant);
+            // MHA: each merged variant removes exactly 2d² per layer
+            assert_eq!(
+                v.total() - m.total(),
+                cfg.n_layers as u64 * 2 * d * d,
+                "{variant:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn gqa_qp_removal_amount() {
+        // QP removal drops 2d² per layer regardless of attention kind
+        // (Q is d×d, P is d×d).
+        let cfg = ModelConfig::mistral_7b();
+        let d = cfg.dim as u64;
+        let v = count_weights(&cfg, Variant::Vanilla);
+        let m = count_weights(&cfg, Variant::MergedQP);
+        assert_eq!(v.total() - m.total(), cfg.n_layers as u64 * 2 * d * d);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support")]
+    fn kp_removal_rejected_for_gqa() {
+        let _ = count_weights(&ModelConfig::mistral_7b(), Variant::MergedKP);
+    }
+
+    #[test]
+    fn report_contains_headline_numbers() {
+        let r = table3_report(&ModelConfig::mistral_7b());
+        assert!(r.contains("15%"), "{r}");
+        assert!(r.contains("1.17x"), "{r}");
+    }
+}

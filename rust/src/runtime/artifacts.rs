@@ -1,0 +1,212 @@
+//! Artifact manifest parsing (`artifacts/<preset>/<variant>/manifest.json`).
+
+use crate::config::{ModelConfig, Variant};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered function's signature.
+#[derive(Clone, Debug)]
+pub struct FunctionMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "prefill" | "decode"
+    pub kind: String,
+    /// prefill: padded prompt length; decode: 0.
+    pub t: usize,
+    /// decode: batch size; prefill: 1.
+    pub batch: usize,
+    pub max_seq: usize,
+    /// Positional input descriptors: (name, role, element count).
+    pub inputs: Vec<(String, String, usize)>,
+    /// Output element counts (logits, k_cache, v_cache).
+    pub outputs: Vec<(String, usize)>,
+}
+
+/// A parsed artifact directory for one (config, variant).
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub cfg: ModelConfig,
+    pub variant: Variant,
+    /// Weight entry (name, shape) in canonical upload order.
+    pub weights: Vec<(String, Vec<usize>)>,
+    pub functions: BTreeMap<String, FunctionMeta>,
+}
+
+fn io_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+impl Artifacts {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> std::io::Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)?;
+        let j = Json::parse(&text).map_err(|e| io_err(format!("{manifest_path:?}: {e}")))?;
+        let cfg = ModelConfig::from_json(
+            j.get("config").ok_or_else(|| io_err("manifest missing config".into()))?,
+        )
+        .map_err(|e| io_err(e.to_string()))?;
+        let variant = j
+            .get("variant")
+            .and_then(|v| v.as_str())
+            .and_then(Variant::parse)
+            .ok_or_else(|| io_err("manifest missing variant".into()))?;
+
+        let weights = j
+            .get("weights")
+            .and_then(|w| w.as_arr())
+            .ok_or_else(|| io_err("manifest missing weights".into()))?
+            .iter()
+            .map(|e| {
+                let name = e.get("name").and_then(|n| n.as_str()).unwrap_or("?").to_string();
+                let shape: Vec<usize> = e
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                    .unwrap_or_default();
+                (name, shape)
+            })
+            .collect();
+
+        let mut functions = BTreeMap::new();
+        let fobj = j
+            .get("functions")
+            .and_then(|f| f.as_obj())
+            .ok_or_else(|| io_err("manifest missing functions".into()))?;
+        for (name, meta) in fobj {
+            let get_n = |k: &str| meta.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            let inputs = meta
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| io_err(format!("{name}: no inputs")))?
+                .iter()
+                .map(|inp| {
+                    let n = inp.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                    let role = inp.get("role").and_then(|v| v.as_str()).unwrap_or("weight").to_string();
+                    let count: usize = inp
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|a| a.iter().filter_map(|v| v.as_usize()).product())
+                        .unwrap_or(0);
+                    (n, role, count)
+                })
+                .collect();
+            let outputs = meta
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .ok_or_else(|| io_err(format!("{name}: no outputs")))?
+                .iter()
+                .map(|out| {
+                    let n = out.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                    let count: usize = out
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|a| a.iter().filter_map(|v| v.as_usize()).product())
+                        .unwrap_or(0);
+                    (n, count)
+                })
+                .collect();
+            functions.insert(
+                name.clone(),
+                FunctionMeta {
+                    name: name.clone(),
+                    file: dir.join(
+                        meta.get("file")
+                            .and_then(|f| f.as_str())
+                            .ok_or_else(|| io_err(format!("{name}: no file")))?,
+                    ),
+                    kind: meta.get("kind").and_then(|k| k.as_str()).unwrap_or("?").to_string(),
+                    t: get_n("t"),
+                    batch: get_n("batch").max(1),
+                    max_seq: get_n("max_seq"),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            cfg,
+            variant,
+            weights,
+            functions,
+        })
+    }
+
+    /// Prefill buckets available, ascending.
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .functions
+            .values()
+            .filter(|f| f.kind == "prefill")
+            .map(|f| f.t)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Decode batch buckets available, ascending.
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .functions
+            .values()
+            .filter(|f| f.kind == "decode")
+            .map(|f| f.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn prefill_fn(&self, t: usize) -> Option<&FunctionMeta> {
+        self.functions.get(&format!("prefill_t{t}"))
+    }
+
+    pub fn decode_fn(&self, b: usize) -> Option<&FunctionMeta> {
+        self.functions.get(&format!("decode_b{b}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Parse a hand-written manifest (no python needed for this test).
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join("skipless_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "config": {"name":"tiny-mha","dim":64,"n_layers":2,"n_heads":4,
+            "n_kv_heads":4,"hidden_dim":128,"vocab_size":256,"max_seq_len":128,
+            "attention":"mha","layout":"serial","ffn":"mlp","tied_embeddings":false},
+          "variant": "merged_qp",
+          "weights": [{"name":"embed","shape":[256,64]}],
+          "functions": {
+            "prefill_t8": {"file":"prefill_t8.hlo.txt","kind":"prefill","t":8,
+              "max_seq":128,
+              "inputs":[{"name":"tokens","dtype":"s32","shape":[8],"role":"tokens"}],
+              "outputs":[{"name":"logits","dtype":"f32","shape":[8,256]}]},
+            "decode_b4": {"file":"decode_b4.hlo.txt","kind":"decode","batch":4,
+              "max_seq":128,
+              "inputs":[{"name":"tokens","dtype":"s32","shape":[4],"role":"tokens"}],
+              "outputs":[{"name":"logits","dtype":"f32","shape":[4,256]}]}
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.variant, crate::config::Variant::MergedQP);
+        assert_eq!(a.prefill_buckets(), vec![8]);
+        assert_eq!(a.decode_buckets(), vec![4]);
+        let f = a.prefill_fn(8).unwrap();
+        assert_eq!(f.inputs[0].1, "tokens");
+        assert_eq!(f.outputs[0].1, 8 * 256);
+        assert!(a.decode_fn(2).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_io_error() {
+        assert!(Artifacts::load(Path::new("/nonexistent/x")).is_err());
+    }
+}

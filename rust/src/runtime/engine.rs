@@ -1,0 +1,312 @@
+//! [`PjrtEngine`] — the AOT path: serve the JAX/Pallas-lowered artifacts
+//! through the PJRT CPU client behind the same [`Engine`] trait the CPU
+//! engine implements, so the coordinator cannot tell them apart.
+//!
+//! Weight buffers are uploaded once at boot; each step sends only tokens,
+//! positions and the padded per-sequence KV caches. PJRT returns tuple
+//! outputs as a single tuple buffer (probed; see DESIGN.md §Runtime), so
+//! each step does one `to_literal_sync` + `decompose_tuple` round-trip —
+//! fine on the CPU plugin where device memory *is* host memory.
+
+use crate::config::ModelConfig;
+use crate::coordinator::engine::{DecodeInput, Engine, EngineError};
+use crate::kvcache::SeqId;
+use crate::model::{weights_io, ModelWeights};
+use crate::runtime::artifacts::Artifacts;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+struct SeqCache {
+    /// (L, S, e) flattened, rotated keys.
+    k: Vec<f32>,
+    /// (L, S, e) flattened, raw values.
+    v: Vec<f32>,
+    pos: usize,
+}
+
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    seqs: BTreeMap<SeqId, SeqCache>,
+    next_id: u64,
+    max_seqs: usize,
+    cache_elems: usize, // L * S * e
+}
+
+fn backend(e: impl std::fmt::Display) -> EngineError {
+    EngineError::Backend(e.to_string())
+}
+
+impl PjrtEngine {
+    /// Compile every function in `artifact_dir` and upload `weights`.
+    ///
+    /// `weights` must match the manifest's (config, variant) — boot fails
+    /// loudly on any mismatch rather than silently serving garbage.
+    pub fn boot(artifact_dir: &Path, weights: &ModelWeights, max_seqs: usize) -> Result<Self, EngineError> {
+        let artifacts = Artifacts::load(artifact_dir).map_err(backend)?;
+        if artifacts.cfg != weights.cfg {
+            return Err(EngineError::Backend(format!(
+                "artifact config '{}' != weight config '{}'",
+                artifacts.cfg.name, weights.cfg.name
+            )));
+        }
+        if artifacts.variant != weights.variant {
+            return Err(EngineError::Backend(format!(
+                "artifact variant {:?} != weight variant {:?}",
+                artifacts.variant, weights.variant
+            )));
+        }
+        let client = xla::PjRtClient::cpu().map_err(backend)?;
+
+        // Upload weights in canonical order, cross-checking the manifest.
+        let entries = weights_io::flat_entries(weights);
+        if entries.len() != artifacts.weights.len() {
+            return Err(EngineError::Backend(format!(
+                "weight count mismatch: model {} vs manifest {}",
+                entries.len(),
+                artifacts.weights.len()
+            )));
+        }
+        let mut weight_bufs = Vec::with_capacity(entries.len());
+        for ((name, mat), (mname, mshape)) in entries.iter().zip(&artifacts.weights) {
+            if name != mname || mat.shape() != (mshape[0], mshape[1]) {
+                return Err(EngineError::Backend(format!(
+                    "weight order/shape mismatch: model has {name}{:?}, manifest expects {mname}{mshape:?}",
+                    mat.shape()
+                )));
+            }
+            let buf = client
+                .buffer_from_host_buffer(mat.as_slice(), &[mshape[0], mshape[1]], None)
+                .map_err(backend)?;
+            weight_bufs.push(buf);
+        }
+
+        // Compile all functions.
+        let mut prefill_exes = BTreeMap::new();
+        let mut decode_exes = BTreeMap::new();
+        for f in artifacts.functions.values() {
+            let proto = xla::HloModuleProto::from_text_file(
+                f.file.to_str().ok_or_else(|| EngineError::Backend("bad path".into()))?,
+            )
+            .map_err(backend)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(backend)?;
+            crate::log_info!("compiled {} ({})", f.name, f.kind);
+            match f.kind.as_str() {
+                "prefill" => {
+                    prefill_exes.insert(f.t, exe);
+                }
+                "decode" => {
+                    decode_exes.insert(f.batch, exe);
+                }
+                other => return Err(EngineError::Backend(format!("unknown fn kind {other}"))),
+            }
+        }
+        if prefill_exes.is_empty() || decode_exes.is_empty() {
+            return Err(EngineError::Backend(
+                "artifacts must provide at least one prefill and one decode function".into(),
+            ));
+        }
+        let cfg = &artifacts.cfg;
+        let cache_elems = cfg.n_layers * cfg.max_seq_len * cfg.e();
+        Ok(Self {
+            client,
+            artifacts,
+            weight_bufs,
+            prefill_exes,
+            decode_exes,
+            seqs: BTreeMap::new(),
+            next_id: 0,
+            max_seqs,
+            cache_elems,
+        })
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    /// Smallest prefill bucket ≥ len.
+    fn prefill_bucket(&self, len: usize) -> Option<usize> {
+        self.prefill_exes.keys().copied().find(|&t| t >= len)
+    }
+
+    /// Smallest decode bucket ≥ n.
+    fn decode_bucket(&self, n: usize) -> Option<usize> {
+        self.decode_exes.keys().copied().find(|&b| b >= n)
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>, EngineError> {
+        let out = exe.execute_b(args).map_err(backend)?;
+        let lit = out[0][0].to_literal_sync().map_err(backend)?;
+        lit.to_tuple().map_err(backend)
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn cfg(&self) -> &ModelConfig {
+        &self.artifacts.cfg
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt/{}", self.artifacts.variant.name())
+    }
+
+    fn can_admit(&self, prompt_len: usize) -> bool {
+        self.seqs.len() < self.max_seqs && self.prefill_bucket(prompt_len).is_some()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.decode_exes.keys().copied().max().unwrap_or(1)
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SeqId, Vec<f32>), EngineError> {
+        if tokens.is_empty() {
+            return Err(EngineError::BadSequence("empty prompt".into()));
+        }
+        if self.seqs.len() >= self.max_seqs {
+            return Err(EngineError::CapacityExhausted(format!(
+                "{} sequences live (max {})",
+                self.seqs.len(),
+                self.max_seqs
+            )));
+        }
+        let bucket = self.prefill_bucket(tokens.len()).ok_or_else(|| {
+            EngineError::CapacityExhausted(format!(
+                "prompt length {} exceeds largest prefill bucket {:?}",
+                tokens.len(),
+                self.prefill_exes.keys().next_back()
+            ))
+        })?;
+        // pad with token 0 — causal masking makes padded rows irrelevant to
+        // rows < len, and their cache slots get overwritten by decode.
+        let mut padded = vec![0i32; bucket];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&padded, &[bucket], None)
+            .map_err(backend)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_bufs.iter());
+        let exe = &self.prefill_exes[&bucket];
+        let outs = Self::run(exe, &args)?;
+        // outputs: logits (t, vocab), k (L, S, e), v (L, S, e)
+        let vocab = self.artifacts.cfg.vocab_size;
+        let logits_all = outs[0].to_vec::<f32>().map_err(backend)?;
+        let last = tokens.len() - 1;
+        let logits = logits_all[last * vocab..(last + 1) * vocab].to_vec();
+        let k = outs[1].to_vec::<f32>().map_err(backend)?;
+        let v = outs[2].to_vec::<f32>().map_err(backend)?;
+        debug_assert_eq!(k.len(), self.cache_elems);
+        let id = SeqId(self.next_id);
+        self.next_id += 1;
+        self.seqs.insert(
+            id,
+            SeqCache {
+                k,
+                v,
+                pos: tokens.len(),
+            },
+        );
+        Ok((id, logits))
+    }
+
+    fn decode_batch(&mut self, inputs: &[DecodeInput]) -> Result<Vec<Vec<f32>>, EngineError> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = inputs.len();
+        let bucket = self.decode_bucket(n).ok_or_else(|| {
+            EngineError::CapacityExhausted(format!(
+                "batch {n} exceeds largest decode bucket {}",
+                self.max_batch()
+            ))
+        })?;
+        let cfg = self.artifacts.cfg.clone();
+        let (ls, se, e) = (cfg.n_layers, cfg.max_seq_len * cfg.e(), cfg.e());
+        let _ = e;
+        // validate sequences and positions first
+        for inp in inputs {
+            let s = self
+                .seqs
+                .get(&inp.seq)
+                .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", inp.seq)))?;
+            if s.pos >= cfg.max_seq_len {
+                return Err(EngineError::CapacityExhausted(format!(
+                    "{:?} at max_seq_len",
+                    inp.seq
+                )));
+            }
+        }
+        // assemble (B,) tokens & pos, (L, B, S, e) caches; pad rows replicate
+        // sequence 0 (their outputs are discarded).
+        let pick = |i: usize| -> &SeqCache { &self.seqs[&inputs[i.min(n - 1)].seq] };
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for b in 0..bucket {
+            let inp = &inputs[b.min(n - 1)];
+            tokens[b] = inp.token as i32;
+            pos[b] = pick(b).pos as i32;
+        }
+        let mut kbig = vec![0f32; ls * bucket * se];
+        let mut vbig = vec![0f32; ls * bucket * se];
+        for l in 0..ls {
+            for b in 0..bucket {
+                let s = pick(b);
+                let dst = (l * bucket + b) * se;
+                kbig[dst..dst + se].copy_from_slice(&s.k[l * se..(l + 1) * se]);
+                vbig[dst..dst + se].copy_from_slice(&s.v[l * se..(l + 1) * se]);
+            }
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&tokens, &[bucket], None)
+            .map_err(backend)?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(&pos, &[bucket], None)
+            .map_err(backend)?;
+        let dims = [ls, bucket, cfg.max_seq_len, cfg.e()];
+        let k_buf = self
+            .client
+            .buffer_from_host_buffer(&kbig, &dims, None)
+            .map_err(backend)?;
+        let v_buf = self
+            .client
+            .buffer_from_host_buffer(&vbig, &dims, None)
+            .map_err(backend)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &pos_buf, &k_buf, &v_buf];
+        args.extend(self.weight_bufs.iter());
+        let outs = Self::run(&self.decode_exes[&bucket], &args)?;
+
+        let vocab = cfg.vocab_size;
+        let logits_all = outs[0].to_vec::<f32>().map_err(backend)?;
+        let k_new = outs[1].to_vec::<f32>().map_err(backend)?;
+        let v_new = outs[2].to_vec::<f32>().map_err(backend)?;
+        // scatter caches back + advance positions (real rows only)
+        for (b, inp) in inputs.iter().enumerate() {
+            let s = self.seqs.get_mut(&inp.seq).unwrap();
+            for l in 0..ls {
+                let src = (l * bucket + b) * se;
+                s.k[l * se..(l + 1) * se].copy_from_slice(&k_new[src..src + se]);
+                s.v[l * se..(l + 1) * se].copy_from_slice(&v_new[src..src + se]);
+            }
+            s.pos += 1;
+        }
+        Ok((0..n)
+            .map(|b| logits_all[b * vocab..(b + 1) * vocab].to_vec())
+            .collect())
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        self.seqs.remove(&seq);
+    }
+}

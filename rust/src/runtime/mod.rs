@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and serve them behind the [`Engine`] trait.
+//!
+//! Flow: `Artifacts::load` parses the per-variant `manifest.json`,
+//! [`PjrtEngine::boot`] compiles each lowered function on the PJRT CPU
+//! client and uploads the weight matrices **once** as device buffers (in
+//! the manifest's canonical flat order — the same order
+//! `model::weights_io` stores). Per step only the small tokens/pos arrays
+//! and the padded KV caches cross the host↔device boundary
+//! (`execute_b` with the persistent weight buffers).
+//!
+//! Python never runs at serving time: the rust binary + `artifacts/` are
+//! self-contained.
+//!
+//! [`Engine`]: crate::coordinator::Engine
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{Artifacts, FunctionMeta};
+pub use engine::PjrtEngine;

@@ -1,0 +1,235 @@
+//! Token sampling: greedy, temperature, top-k, top-p (nucleus).
+//!
+//! Deterministic given a seeded [`Xoshiro256`] stream — the serving e2e
+//! example replays identical requests against the vanilla and merged
+//! engines and requires identical outputs, which holds because surgery is
+//! function-preserving and sampling is seed-deterministic.
+
+use crate::util::rng::Xoshiro256;
+
+/// Sampling configuration for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplerCfg {
+    /// 0 → greedy argmax.
+    pub temperature: f32,
+    /// 0 → disabled.
+    pub top_k: usize,
+    /// 1.0 → disabled.
+    pub top_p: f32,
+}
+
+impl Default for SamplerCfg {
+    fn default() -> Self {
+        Self {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+        }
+    }
+}
+
+impl SamplerCfg {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.temperature < 0.0 || !self.temperature.is_finite() {
+            return Err(format!("temperature {} invalid", self.temperature));
+        }
+        if !(0.0..=1.0).contains(&self.top_p) {
+            return Err(format!("top_p {} not in [0,1]", self.top_p));
+        }
+        Ok(())
+    }
+}
+
+/// Sample one token id from a logits row.
+pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Xoshiro256) -> u32 {
+    debug_assert!(!logits.is_empty());
+    if cfg.temperature == 0.0 {
+        return argmax(logits);
+    }
+    // softmax with temperature over candidate set
+    let inv_t = 1.0 / cfg.temperature;
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    // top-k: keep k largest
+    if cfg.top_k > 0 && cfg.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+        });
+        idx.truncate(cfg.top_k);
+    } else if cfg.top_p < 1.0 {
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+        });
+    }
+    let mx = idx
+        .iter()
+        .map(|&i| logits[i as usize])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((logits[i as usize] - mx) * inv_t).exp())
+        .collect();
+    let sum: f32 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= sum;
+    }
+    // top-p: truncate the (sorted) tail once cumulative mass ≥ p
+    if cfg.top_p < 1.0 {
+        let mut cum = 0.0f32;
+        let mut cut = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= cfg.top_p {
+                cut = i + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+        idx.truncate(cut);
+        let s: f32 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= s;
+        }
+    }
+    // inverse-CDF draw
+    let u = rng.next_f32();
+    let mut cum = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        cum += p;
+        if u < cum {
+            return idx[i];
+        }
+    }
+    *idx.last().unwrap()
+}
+
+/// Argmax with lowest-index tie-break.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = [0.1, 3.0, -2.0, 2.9];
+        assert_eq!(sample(&logits, &SamplerCfg::greedy(), &mut Xoshiro256::seed_from_u64(1)), 1);
+    }
+
+    #[test]
+    fn greedy_tie_break_lowest_index() {
+        let logits = [5.0, 5.0, 1.0];
+        assert_eq!(argmax(&logits), 0);
+    }
+
+    #[test]
+    fn temperature_sampling_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..50).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cfg = SamplerCfg {
+            temperature: 1.0,
+            ..Default::default()
+        };
+        let mut r1 = Xoshiro256::seed_from_u64(7);
+        let mut r2 = Xoshiro256::seed_from_u64(7);
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, &cfg, &mut r1), sample(&logits, &cfg, &mut r2));
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [10.0, 9.0, 8.0, -50.0, -60.0];
+        let cfg = SamplerCfg {
+            temperature: 1.0,
+            top_k: 2,
+            top_p: 1.0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..200 {
+            let t = sample(&logits, &cfg, &mut rng);
+            assert!(t == 0 || t == 1, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        // one dominant token (p≈0.99) → top_p=0.5 must always pick it
+        let logits = [10.0, 1.0, 0.5, 0.1];
+        let cfg = SamplerCfg {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 0.5,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn high_temperature_flattens() {
+        // at T→∞ all tokens should appear
+        let logits = [2.0, 1.0, 0.0, -1.0];
+        let cfg = SamplerCfg {
+            temperature: 100.0,
+            top_k: 0,
+            top_p: 1.0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut seen = [false; 4];
+        for _ in 0..500 {
+            seen[sample(&logits, &cfg, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "seen {seen:?}");
+    }
+
+    #[test]
+    fn distribution_roughly_matches_softmax() {
+        let logits = [1.0f32, 0.0];
+        let cfg = SamplerCfg {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let n = 20_000;
+        let mut c0 = 0;
+        for _ in 0..n {
+            if sample(&logits, &cfg, &mut rng) == 0 {
+                c0 += 1;
+            }
+        }
+        let p0 = c0 as f64 / n as f64;
+        let want = (1.0f64).exp() / ((1.0f64).exp() + 1.0); // ≈ 0.731
+        assert!((p0 - want).abs() < 0.02, "p0={p0} want≈{want}");
+    }
+
+    #[test]
+    fn cfg_validation() {
+        assert!(SamplerCfg::greedy().validate().is_ok());
+        assert!(SamplerCfg {
+            temperature: -1.0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SamplerCfg {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.5
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! Minimal TCP JSON-lines serving front-end (no HTTP stack in the offline
+//! image; the protocol is one JSON object per line, trivially scriptable
+//! with `nc`).
+//!
+//! Request:  `{"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
+//!             "temperature":0.0,"top_k":0,"top_p":1.0,"seed":1}`
+//!           `{"op":"metrics"}`   `{"op":"ping"}`
+//! Response: `{"ok":true,"tokens":[...],"finish":"length",
+//!             "ttft_us":...,"latency_us":...}` (or `{"ok":false,"error":..}`)
+
+use crate::coordinator::{Coordinator, FinishReason, Request};
+use crate::sampler::SamplerCfg;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Serving front-end bound to a TCP port.
+pub struct Server {
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:7070"; port 0 picks a free port).
+    pub fn bind(addr: &str, coordinator: Coordinator) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self {
+            listener,
+            coordinator: Arc::new(coordinator),
+            next_id: AtomicU64::new(1),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound")
+    }
+
+    /// A handle that makes `serve` return after the in-flight connection.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop: one thread per connection, each connection handles a
+    /// stream of JSON lines.
+    pub fn serve(&self) -> std::io::Result<()> {
+        crate::log_info!("listening on {}", self.local_addr());
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let stream = conn?;
+            let coordinator = Arc::clone(&self.coordinator);
+            let next_id = self.next_id.fetch_add(1 << 20, Ordering::Relaxed);
+            std::thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, &coordinator, next_id) {
+                    crate::log_debug!("connection ended: {e}");
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coordinator: &Coordinator,
+    id_base: u64,
+) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    crate::log_debug!("connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut next = id_base;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(&line, coordinator, &mut next);
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, coordinator: &Coordinator, next_id: &mut u64) -> Json {
+    let err = |msg: String| {
+        Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+    };
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(|o| o.as_str()) {
+        Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        Some("metrics") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", coordinator.metrics().to_json()),
+        ]),
+        Some("generate") => {
+            let Some(prompt) = req.get("prompt").and_then(|p| p.as_arr()) else {
+                return err("missing 'prompt' array".into());
+            };
+            let mut toks = Vec::with_capacity(prompt.len());
+            for p in prompt {
+                match p.as_u64() {
+                    Some(t) if t <= u32::MAX as u64 => toks.push(t as u32),
+                    _ => return err("prompt tokens must be u32".into()),
+                }
+            }
+            let get_f = |k: &str, d: f32| {
+                req.get(k).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(d)
+            };
+            let id = *next_id;
+            *next_id += 1;
+            let request = Request {
+                id,
+                prompt: toks,
+                max_new_tokens: req
+                    .get("max_new_tokens")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(16),
+                sampler: SamplerCfg {
+                    temperature: get_f("temperature", 0.0),
+                    top_k: req.get("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
+                    top_p: get_f("top_p", 1.0),
+                },
+                seed: req.get("seed").and_then(|v| v.as_u64()).unwrap_or(id),
+                eos: req
+                    .get("eos")
+                    .and_then(|v| v.as_u64())
+                    .map(|v| v as u32),
+            };
+            let resp = coordinator.generate(request);
+            Json::obj(vec![
+                ("ok", Json::Bool(resp.finish != FinishReason::Rejected)),
+                (
+                    "tokens",
+                    Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                ),
+                (
+                    "finish",
+                    Json::str(match resp.finish {
+                        FinishReason::Length => "length",
+                        FinishReason::Eos => "eos",
+                        FinishReason::Rejected => "rejected",
+                    }),
+                ),
+                ("ttft_us", Json::num(resp.ttft.as_micros() as f64)),
+                ("latency_us", Json::num(resp.latency.as_micros() as f64)),
+            ])
+        }
+        _ => err("unknown op (expected generate|metrics|ping)".into()),
+    }
+}
+
+/// Blocking client for the JSON-lines protocol (used by examples/tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> std::io::Result<Vec<u32>> {
+        let req = Json::obj(vec![
+            ("op", Json::str("generate")),
+            (
+                "prompt",
+                Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("max_new_tokens", Json::num(max_new as f64)),
+        ]);
+        let resp = self.call(&req)?;
+        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("server error: {}", resp.to_string()),
+            ));
+        }
+        Ok(resp
+            .get("tokens")
+            .and_then(|t| t.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_u64().map(|t| t as u32)).collect())
+            .unwrap_or_default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::coordinator::{CpuEngine, SchedulerCfg};
+    use crate::model::{greedy_generate, ModelWeights};
+
+    fn boot() -> (std::net::SocketAddr, Arc<AtomicBool>, ModelWeights) {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 80);
+        let coord = Coordinator::spawn(
+            CpuEngine::new(w.clone(), 8, 16 << 20),
+            SchedulerCfg::default(),
+        );
+        let server = Server::bind("127.0.0.1:0", coord).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        std::thread::spawn(move || {
+            let _ = server.serve();
+        });
+        (addr, stop, w)
+    }
+
+    #[test]
+    fn ping_and_generate_over_tcp() {
+        let (addr, _stop, w) = boot();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let pong = c.call(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+        let want = greedy_generate(&w, &[1, 2, 3], 4);
+        let got = c.generate(&[1, 2, 3], 4).unwrap();
+        assert_eq!(got, want);
+        // metrics visible over the wire
+        let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+        assert_eq!(
+            m.get("metrics").unwrap().get("requests_completed").unwrap().as_u64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn malformed_requests_get_errors_not_disconnects() {
+        let (addr, _stop, _) = boot();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let r = c.call(&Json::parse(r#"{"op":"nope"}"#).unwrap()).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // connection still usable
+        let r2 = c.call(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        assert_eq!(r2.get("ok"), Some(&Json::Bool(true)));
+        // raw garbage line
+        c.writer.write_all(b"not json at all\n").unwrap();
+        let mut line = String::new();
+        c.reader.read_line(&mut line).unwrap();
+        let r3 = Json::parse(&line).unwrap();
+        assert_eq!(r3.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let (addr, _stop, w) = boot();
+        let want = greedy_generate(&w, &[9, 9], 3);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.to_string();
+                let want = want.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    assert_eq!(c.generate(&[9, 9], 3).unwrap(), want);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

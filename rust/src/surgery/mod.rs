@@ -1,0 +1,471 @@
+//! Weight surgery — the paper's Table 1, executed on real weights.
+//!
+//! Given a **vanilla** skipless model, produce the mathematically
+//! equivalent merged model:
+//!
+//! | matrix      | Fig 1(b) `MergedQP` | Fig 1(c) `MergedKP` | Fig 1(d) `MergedVP` |
+//! |-------------|---------------------|---------------------|---------------------|
+//! | `O*_{i-1}`  | `O_{i-1}·Q_i`       | `O_{i-1}·K_i`       | `O_{i-1}·V_i`       |
+//! | `Q*_i`      | 1 (eliminated)      | `K_i⁻¹·Q_i`         | `V_i⁻¹·Q_i`         |
+//! | `K*_i`      | `Q_i⁻¹·K_i`         | 1 (eliminated)      | `V_i⁻¹·K_i`         |
+//! | `V*_i`      | `Q_i⁻¹·V_i`         | `K_i⁻¹·V_i`         | 1 (eliminated)      |
+//! | `M*_i`      | `P_i·M_i`           | `P_i·M_i`           | `P_i·M_i`           |
+//!
+//! For the first block the input embedding stands in for `O_0`
+//! (`E* = E·T_1`). K/P and V/P removal require `e = d` (MHA); Q/P removal
+//! works for MHA, MQA and GQA — the paper's headline.
+//!
+//! Parallel-layout models use the carry-merged construction instead
+//! (`DESIGN.md §Parallel`): same pivot fold, plus `M* = T⁻¹M` (the FFN
+//! branch reads the transformed stream) and a combined `C_i = P_i·T_{i+1}`.
+//!
+//! All inverses run through [`crate::linalg::lu`] in f64; [`audit`] reports
+//! invertibility and conditioning of every pivot matrix first (§4's
+//! experiment), so surgery fails loudly instead of silently amplifying
+//! noise through an ill-conditioned `T⁻¹`.
+
+use crate::config::{BlockLayout, Variant};
+use crate::linalg::{cond_estimate, matmul, Lu, LuError};
+use crate::model::{BlockWeights, ModelWeights};
+use crate::tensor::Mat;
+use std::fmt;
+
+#[derive(Debug)]
+pub enum SurgeryError {
+    /// Input model must be vanilla.
+    NotVanilla(Variant),
+    /// Config cannot host this variant (e ≠ d for K/P–V/P removal).
+    Unsupported { variant: Variant, e: usize, d: usize },
+    /// A pivot matrix was singular to working precision.
+    SingularPivot { layer: usize, which: &'static str, source: LuError },
+    /// A pivot matrix is invertible but too ill-conditioned to fold safely.
+    IllConditioned { layer: usize, which: &'static str, cond: f64, limit: f64 },
+}
+
+impl fmt::Display for SurgeryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SurgeryError::NotVanilla(v) => write!(f, "surgery input must be vanilla, got {v:?}"),
+            SurgeryError::Unsupported { variant, e, d } => write!(
+                f,
+                "{variant:?} requires e = d (MHA); this config has e={e}, d={d} — only MergedQP works for MQA/GQA (the paper's point)"
+            ),
+            SurgeryError::SingularPivot { layer, which, source } => {
+                write!(f, "layer {layer}: pivot {which} not invertible: {source}")
+            }
+            SurgeryError::IllConditioned { layer, which, cond, limit } => write!(
+                f,
+                "layer {layer}: pivot {which} has condition estimate {cond:.3e} > limit {limit:.1e}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SurgeryError {}
+
+/// Conditioning limit above which surgery refuses to fold (configurable
+/// via [`Options`]). κ₁ ≈ 1e6 costs ~6 of the ~7 f32 digits.
+pub const DEFAULT_COND_LIMIT: f64 = 1e7;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    pub cond_limit: f64,
+    /// Skip the conditioning audit (faster; used by benches that audit
+    /// separately).
+    pub skip_audit: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            cond_limit: DEFAULT_COND_LIMIT,
+            skip_audit: false,
+        }
+    }
+}
+
+/// Which matrix is the fold pivot for a variant.
+fn pivot_name(variant: Variant) -> &'static str {
+    match variant {
+        Variant::MergedQP => "Q",
+        Variant::MergedKP => "K",
+        Variant::MergedVP => "V",
+        Variant::Vanilla => unreachable!(),
+    }
+}
+
+fn pivot_of<'a>(b: &'a BlockWeights, variant: Variant) -> &'a Mat {
+    match variant {
+        Variant::MergedQP => b.q.as_ref().expect("vanilla q"),
+        Variant::MergedKP => b.k.as_ref().expect("vanilla k"),
+        Variant::MergedVP => b.v.as_ref().expect("vanilla v"),
+        Variant::Vanilla => unreachable!(),
+    }
+}
+
+/// Transform a vanilla model into the requested merged variant.
+pub fn transform(w: &ModelWeights, variant: Variant, opts: Options) -> Result<ModelWeights, SurgeryError> {
+    if w.variant != Variant::Vanilla {
+        return Err(SurgeryError::NotVanilla(w.variant));
+    }
+    if variant == Variant::Vanilla {
+        return Ok(w.clone());
+    }
+    if !w.cfg.supports(variant) {
+        return Err(SurgeryError::Unsupported {
+            variant,
+            e: w.cfg.e(),
+            d: w.cfg.dim,
+        });
+    }
+
+    // Factor every pivot first (and audit conditioning) so we fail before
+    // touching any weights.
+    let mut pivots = Vec::with_capacity(w.blocks.len());
+    for (i, b) in w.blocks.iter().enumerate() {
+        let t = pivot_of(b, variant);
+        if !opts.skip_audit {
+            let cond = cond_estimate(t).map_err(|e| SurgeryError::SingularPivot {
+                layer: i,
+                which: pivot_name(variant),
+                source: e,
+            })?;
+            if cond > opts.cond_limit {
+                return Err(SurgeryError::IllConditioned {
+                    layer: i,
+                    which: pivot_name(variant),
+                    cond,
+                    limit: opts.cond_limit,
+                });
+            }
+        }
+        let lu = Lu::factor(t).map_err(|e| SurgeryError::SingularPivot {
+            layer: i,
+            which: pivot_name(variant),
+            source: e,
+        })?;
+        pivots.push(lu);
+    }
+
+    match w.cfg.layout {
+        BlockLayout::Serial => Ok(transform_serial(w, variant, &pivots)),
+        BlockLayout::Parallel => Ok(transform_parallel(w, variant, &pivots)),
+    }
+}
+
+/// Serial merge (paper Figs. 1–2, Table 1).
+fn transform_serial(w: &ModelWeights, variant: Variant, pivots: &[Lu]) -> ModelWeights {
+    let mut out = w.clone();
+    out.variant = variant;
+    let n = w.blocks.len();
+
+    // Fold T_1 into the embedding (paper: "for the first transformer block
+    // we use the input embedding instead of O_{i-1}").
+    out.embed = matmul(&w.embed, pivot_of(&w.blocks[0], variant));
+
+    for i in 0..n {
+        let b = &w.blocks[i];
+        let lu = &pivots[i];
+        let nb = &mut out.blocks[i];
+
+        // M*_i = P_i · M_i  (Fig. 2a; always, this removes P)
+        nb.m = matmul(b.p.as_ref().unwrap(), &b.m);
+        nb.p = None;
+
+        // Compensated projections: T⁻¹·X computed as a solve (one LU reused
+        // for all columns — cheaper and more accurate than forming T⁻¹).
+        match variant {
+            Variant::MergedQP => {
+                nb.q = None;
+                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
+                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+            }
+            Variant::MergedKP => {
+                nb.k = None;
+                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
+                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+            }
+            Variant::MergedVP => {
+                nb.v = None;
+                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
+                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
+            }
+            Variant::Vanilla => unreachable!(),
+        }
+
+        // O*_i = O_i · T_{i+1} (fold the *next* block's pivot into this
+        // block's FFN output; the last block keeps its O).
+        if i + 1 < n {
+            nb.o = matmul(&b.o, pivot_of(&w.blocks[i + 1], variant));
+        }
+    }
+    out
+}
+
+/// Parallel carry-merged construction (exactly equivalent; DESIGN.md
+/// §Parallel): the stream carries `x̃ = x·T`, the FFN input absorbs `T⁻¹`,
+/// and `C_i = P_i·T_{i+1}` is one matrix where vanilla had two.
+fn transform_parallel(w: &ModelWeights, variant: Variant, pivots: &[Lu]) -> ModelWeights {
+    let mut out = w.clone();
+    out.variant = variant;
+    let n = w.blocks.len();
+    out.embed = matmul(&w.embed, pivot_of(&w.blocks[0], variant));
+
+    for i in 0..n {
+        let b = &w.blocks[i];
+        let lu = &pivots[i];
+        let nb = &mut out.blocks[i];
+
+        // FFN branch reads the carried (transformed) stream: M* = T⁻¹·M.
+        nb.m = lu.solve_mat(&b.m);
+
+        match variant {
+            Variant::MergedQP => {
+                nb.q = None;
+                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
+                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+            }
+            Variant::MergedKP => {
+                nb.k = None;
+                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
+                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+            }
+            Variant::MergedVP => {
+                nb.v = None;
+                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
+                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
+            }
+            Variant::Vanilla => unreachable!(),
+        }
+
+        // Outputs carry the next block's pivot.
+        let p = b.p.as_ref().unwrap();
+        if i + 1 < n {
+            let t_next = pivot_of(&w.blocks[i + 1], variant);
+            nb.o = matmul(&b.o, t_next);
+            nb.c = Some(matmul(p, t_next));
+        } else {
+            nb.c = Some(p.clone());
+        }
+        nb.p = None;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// §4 invertibility audit
+// ---------------------------------------------------------------------------
+
+/// One square attention matrix's audit result.
+#[derive(Clone, Debug)]
+pub struct AuditRow {
+    pub layer: usize,
+    pub which: &'static str,
+    pub invertible: bool,
+    /// κ₁ estimate (None if singular).
+    pub cond: Option<f64>,
+}
+
+/// Audit every *square* attention matrix of a model (paper §4: "all square
+/// matrices of Mistral-7B are invertible"). For GQA/MQA only Q and P are
+/// square; for MHA K and V are audited too.
+pub fn audit(w: &ModelWeights) -> Vec<AuditRow> {
+    let mut rows = Vec::new();
+    let mut push = |layer: usize, which: &'static str, m: Option<&Mat>| {
+        if let Some(m) = m {
+            if m.rows() == m.cols() {
+                match cond_estimate(m) {
+                    Ok(c) => rows.push(AuditRow {
+                        layer,
+                        which,
+                        invertible: true,
+                        cond: Some(c),
+                    }),
+                    Err(_) => rows.push(AuditRow {
+                        layer,
+                        which,
+                        invertible: false,
+                        cond: None,
+                    }),
+                }
+            }
+        }
+    };
+    for (i, b) in w.blocks.iter().enumerate() {
+        push(i, "Q", b.q.as_ref());
+        push(i, "K", b.k.as_ref());
+        push(i, "V", b.v.as_ref());
+        push(i, "P", b.p.as_ref());
+    }
+    rows
+}
+
+/// Summary of an audit: all invertible? worst condition number?
+pub fn audit_summary(rows: &[AuditRow]) -> (bool, f64) {
+    let all_inv = rows.iter().all(|r| r.invertible);
+    let worst = rows
+        .iter()
+        .filter_map(|r| r.cond)
+        .fold(0.0f64, f64::max);
+    (all_inv, worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::{greedy_generate, prefill};
+    use crate::params::count_weights;
+
+    fn assert_equivalent(cfg: &ModelConfig, variant: Variant, seed: u64, tol: f32) {
+        let vanilla = ModelWeights::init_vanilla(cfg, seed);
+        let merged = transform(&vanilla, variant, Options::default()).unwrap();
+        merged.check_shapes().unwrap();
+        let toks = [5u32, 17, 3, 42, 8, 1];
+        let (l0, _) = prefill(&vanilla, &toks);
+        let (l1, _) = prefill(&merged, &toks);
+        let err = l1.rel_fro_err(&l0);
+        assert!(err < tol as f64, "{} {variant:?}: rel err {err}", cfg.name);
+    }
+
+    /// Fig. 1(b): Q/P removal is exact for MHA, MQA and GQA — the headline.
+    #[test]
+    fn qp_removal_equivalent_all_attention_kinds() {
+        for name in ["tiny-mha", "tiny-gqa", "tiny-mqa"] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            assert_equivalent(&cfg, Variant::MergedQP, 31, 1e-3);
+        }
+    }
+
+    /// Fig. 1(c)/(d): K/P and V/P removal are exact for MHA.
+    #[test]
+    fn kp_vp_removal_equivalent_mha() {
+        let cfg = ModelConfig::tiny_mha();
+        assert_equivalent(&cfg, Variant::MergedKP, 32, 1e-3);
+        assert_equivalent(&cfg, Variant::MergedVP, 33, 1e-3);
+    }
+
+    /// Fig. 3 carry-merged: parallel blocks, exact equivalence.
+    #[test]
+    fn parallel_qp_equivalent() {
+        let cfg = ModelConfig::tiny_parallel();
+        assert_equivalent(&cfg, Variant::MergedQP, 34, 1e-3);
+        assert_equivalent(&cfg, Variant::MergedKP, 35, 1e-3);
+        assert_equivalent(&cfg, Variant::MergedVP, 36, 1e-3);
+    }
+
+    /// The merged model must produce the *same generated text* greedily.
+    #[test]
+    fn greedy_generation_identical_after_surgery() {
+        let cfg = ModelConfig::tiny_gqa();
+        let vanilla = ModelWeights::init_vanilla(&cfg, 37);
+        let merged = transform(&vanilla, Variant::MergedQP, Options::default()).unwrap();
+        let a = greedy_generate(&vanilla, &[9, 2, 7], 12);
+        let b = greedy_generate(&merged, &[9, 2, 7], 12);
+        assert_eq!(a, b);
+    }
+
+    /// KP/VP on GQA/MQA must be rejected — the paper's central observation.
+    #[test]
+    fn kp_vp_rejected_for_gqa_mqa() {
+        for name in ["tiny-gqa", "tiny-mqa"] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let w = ModelWeights::init_vanilla(&cfg, 38);
+            for v in [Variant::MergedKP, Variant::MergedVP] {
+                match transform(&w, v, Options::default()) {
+                    Err(SurgeryError::Unsupported { .. }) => {}
+                    other => panic!("{name} {v:?}: expected Unsupported, got {:?}", other.map(|_| ())),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_counts_drop_as_claimed() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 39);
+        let m = transform(&w, Variant::MergedQP, Options::default()).unwrap();
+        assert_eq!(m.stored_weights(), count_weights(&cfg, Variant::MergedQP).total());
+        let d = cfg.dim as u64;
+        assert_eq!(w.stored_weights() - m.stored_weights(), cfg.n_layers as u64 * 2 * d * d);
+    }
+
+    #[test]
+    fn parallel_carry_merged_saves_d2_per_block() {
+        // DESIGN.md §Parallel: carry-merged removes d² per block (C replaces
+        // P and next-Q), not 2d².
+        let cfg = ModelConfig::tiny_parallel();
+        let w = ModelWeights::init_vanilla(&cfg, 40);
+        let m = transform(&w, Variant::MergedQP, Options::default()).unwrap();
+        let d = cfg.dim as u64;
+        assert_eq!(w.stored_weights() - m.stored_weights(), cfg.n_layers as u64 * d * d);
+    }
+
+    #[test]
+    fn singular_pivot_detected() {
+        let cfg = ModelConfig::tiny_mha();
+        let mut w = ModelWeights::init_vanilla(&cfg, 41);
+        // Make layer 1's Q rank-deficient.
+        let d = cfg.dim;
+        let q = w.blocks[1].q.as_mut().unwrap();
+        let row0: Vec<f32> = q.row(0).to_vec();
+        // exact linear dependence: last row = first row
+        q.row_mut(d - 1).copy_from_slice(&row0);
+        match transform(&w, Variant::MergedQP, Options::default()) {
+            Err(SurgeryError::SingularPivot { layer: 1, .. }) | Err(SurgeryError::IllConditioned { layer: 1, .. }) => {}
+            other => panic!("expected singular/ill-conditioned at layer 1, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn cond_limit_enforced() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 42);
+        let opts = Options {
+            cond_limit: 1.0, // absurdly strict — everything fails
+            skip_audit: false,
+        };
+        assert!(matches!(
+            transform(&w, Variant::MergedQP, opts),
+            Err(SurgeryError::IllConditioned { .. })
+        ));
+    }
+
+    #[test]
+    fn non_vanilla_input_rejected() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 43);
+        let m = transform(&w, Variant::MergedQP, Options::default()).unwrap();
+        assert!(matches!(
+            transform(&m, Variant::MergedVP, Options::default()),
+            Err(SurgeryError::NotVanilla(_))
+        ));
+    }
+
+    #[test]
+    fn audit_reports_all_square_matrices() {
+        // §4: random-init models are invertible with moderate conditioning.
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 44);
+        let rows = audit(&w);
+        // MHA: Q, K, V, P all square → 4 per layer
+        assert_eq!(rows.len(), 4 * cfg.n_layers);
+        let (all_inv, worst) = audit_summary(&rows);
+        assert!(all_inv);
+        assert!(worst > 1.0 && worst < 1e6, "worst κ {worst}");
+        // GQA: only Q and P are square
+        let wg = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 45);
+        assert_eq!(audit(&wg).len(), 2 * ModelConfig::tiny_gqa().n_layers);
+    }
+
+    #[test]
+    fn vanilla_transform_is_identity() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 46);
+        let same = transform(&w, Variant::Vanilla, Options::default()).unwrap();
+        assert_eq!(same.stored_weights(), w.stored_weights());
+        let (l0, _) = prefill(&w, &[1, 2, 3]);
+        let (l1, _) = prefill(&same, &[1, 2, 3]);
+        assert_eq!(l0.max_abs_diff(&l1), 0.0);
+    }
+}

@@ -1,0 +1,316 @@
+//! Host-side dense matrix/tensor types.
+//!
+//! The whole crate standardizes on **row-major `f32`** storage ([`Mat`]),
+//! matching both the JAX artifacts (jnp.float32, row-major) and the PJRT
+//! literal layout, so weights cross the FFI boundary without copies or
+//! transposes. Activations are `(tokens, d)` matrices; per-head views are
+//! taken with column offsets rather than a 4-D tensor type.
+
+use crate::util::rng::Xoshiro256;
+use std::fmt;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            data: vec![0.0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { data, rows, cols }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { data, rows, cols }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    /// N(0, std) initialization from a seeded stream.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Xoshiro256) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Explicit transpose (allocates).
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Copy of columns `[c0, c1)` as a new matrix.
+    pub fn col_slice(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols, "col_slice out of range");
+        let mut out = Mat::zeros(self.rows, c1 - c0);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Copy of rows `[r0, r1)` as a new matrix.
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows, "row_slice out of range");
+        Mat::from_vec(
+            r1 - r0,
+            self.cols,
+            self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        )
+    }
+
+    /// Horizontal concat: `[self | other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "hcat row mismatch");
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// Vertical concat: `[self ; other]`.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vcat col mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Elementwise map (allocates).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            data: self.data.iter().map(|&x| f(x)).collect(),
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
+    /// In-place elementwise addition.
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "add shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise `self + other` (allocates).
+    pub fn add(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Largest absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Largest |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape(), "diff shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Relative Frobenius error ‖a−b‖/‖b‖ (0 if both empty/zero).
+    pub fn rel_fro_err(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        let mut num = 0.0f64;
+        for (&a, &b) in self.data.iter().zip(&other.data) {
+            let d = (a - b) as f64;
+            num += d * d;
+        }
+        let den = other.fro_norm();
+        if den == 0.0 {
+            num.sqrt()
+        } else {
+            num.sqrt() / den
+        }
+    }
+
+    /// All entries finite?
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let i = Mat::eye(4);
+        assert_eq!(i.transpose(), i);
+        let m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.at(2, 1), m.at(1, 2));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn slicing_and_concat() {
+        let m = Mat::from_fn(3, 4, |r, c| (r * 4 + c) as f32);
+        let left = m.col_slice(0, 2);
+        let right = m.col_slice(2, 4);
+        assert_eq!(left.hcat(&right), m);
+        let top = m.row_slice(0, 1);
+        let bottom = m.row_slice(1, 3);
+        assert_eq!(top.vcat(&bottom), m);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![4.0, 3.0, 2.0, 1.0]);
+        let s = a.add(&b);
+        assert_eq!(s.as_slice(), &[5.0; 4]);
+        let mut c = a.clone();
+        c.scale(2.0);
+        assert_eq!(c.at(1, 1), 8.0);
+        assert_eq!(a.max_abs_diff(&b), 3.0);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        let b = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert_eq!(a.rel_fro_err(&b), 0.0);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = Mat::randn(100, 100, 0.5, &mut rng);
+        let mean: f32 = m.as_slice().iter().sum::<f32>() / 10_000.0;
+        let var: f32 =
+            m.as_slice().iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / 10_000.0;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 0.25).abs() < 0.02, "var {var}");
+        assert!(m.all_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Byte-level tokenizer with a trainable BPE layer.
+//!
+//! The examples need a real text→tokens path (the image ships no tokenizer
+//! crate). Base vocabulary is the 256 bytes; [`Bpe::train`] learns merges
+//! greedily from a corpus (classic BPE) so the e2e example can exercise the
+//! serving stack on actual text with a vocabulary matching the model's
+//! `vocab_size`.
+
+use std::collections::BTreeMap;
+
+/// Trained BPE tokenizer. Token ids: `0..256` are raw bytes; `256..` are
+/// merge products in creation order.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge list: (left, right) -> new id (= 256 + index).
+    merges: Vec<(u32, u32)>,
+    /// lookup for encode.
+    ranks: BTreeMap<(u32, u32), u32>,
+    vocab_size: usize,
+}
+
+impl Bpe {
+    /// Byte-only tokenizer (no merges).
+    pub fn bytes_only() -> Self {
+        Self {
+            merges: Vec::new(),
+            ranks: BTreeMap::new(),
+            vocab_size: 256,
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Learn merges from `corpus` until the vocabulary reaches
+    /// `target_vocab` (or no pair repeats).
+    pub fn train(corpus: &str, target_vocab: usize) -> Self {
+        assert!(target_vocab >= 256, "vocab must include all bytes");
+        let mut toks: Vec<u32> = corpus.bytes().map(|b| b as u32).collect();
+        let mut merges = Vec::new();
+        let mut ranks = BTreeMap::new();
+        let mut next_id = 256u32;
+        while (next_id as usize) < target_vocab {
+            // count adjacent pairs
+            let mut counts: BTreeMap<(u32, u32), u32> = BTreeMap::new();
+            for w in toks.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(_, &c)| c) else {
+                break;
+            };
+            if cnt < 2 {
+                break; // nothing repeats — no compression left
+            }
+            merges.push(pair);
+            ranks.insert(pair, next_id);
+            // apply the merge in one pass
+            let mut out = Vec::with_capacity(toks.len());
+            let mut i = 0;
+            while i < toks.len() {
+                if i + 1 < toks.len() && (toks[i], toks[i + 1]) == pair {
+                    out.push(next_id);
+                    i += 2;
+                } else {
+                    out.push(toks[i]);
+                    i += 1;
+                }
+            }
+            toks = out;
+            next_id += 1;
+        }
+        Self {
+            merges,
+            ranks,
+            vocab_size: next_id as usize,
+        }
+    }
+
+    /// Encode text to token ids (applies merges in rank order).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut toks: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        // Iteratively apply the lowest-rank applicable merge (standard BPE
+        // encode). For our corpus sizes a simple loop is plenty fast.
+        loop {
+            let mut best: Option<(usize, u32)> = None; // (position, new_id)
+            for i in 0..toks.len().saturating_sub(1) {
+                if let Some(&id) = self.ranks.get(&(toks[i], toks[i + 1])) {
+                    if best.map(|(_, b)| id < b).unwrap_or(true) {
+                        best = Some((i, id));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((i, id)) => {
+                    toks[i] = id;
+                    toks.remove(i + 1);
+                }
+            }
+        }
+        toks
+    }
+
+    /// Decode token ids back to bytes (lossless inverse of encode).
+    pub fn decode(&self, toks: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in toks {
+            self.expand(t, &mut out);
+        }
+        out
+    }
+
+    /// Decode to a string, replacing invalid UTF-8.
+    pub fn decode_lossy(&self, toks: &[u32]) -> String {
+        String::from_utf8_lossy(&self.decode(toks)).into_owned()
+    }
+
+    fn expand(&self, tok: u32, out: &mut Vec<u8>) {
+        if tok < 256 {
+            out.push(tok as u8);
+        } else if let Some(&(a, b)) = self.merges.get((tok - 256) as usize) {
+            self.expand(a, out);
+            self.expand(b, out);
+        } else {
+            // Out-of-vocab id (e.g. emitted by a model whose vocab_size
+            // exceeds the trained merges): decode as U+FFFD.
+            out.extend_from_slice("\u{FFFD}".as_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the theory of the thing is that the thesis these \
+                          theorems the theatre thereby them then the";
+
+    #[test]
+    fn bytes_only_roundtrip() {
+        let t = Bpe::bytes_only();
+        let toks = t.encode("héllo");
+        assert_eq!(t.decode(&toks), "héllo".as_bytes());
+        assert_eq!(toks.len(), "héllo".len()); // bytes, not chars
+    }
+
+    #[test]
+    fn training_learns_frequent_pairs() {
+        let t = Bpe::train(CORPUS, 300);
+        assert!(t.n_merges() > 0, "no merges learned");
+        // "the" appears constantly; encoding should compress it
+        let toks = t.encode("the the the");
+        assert!(toks.len() < "the the the".len(), "no compression: {toks:?}");
+    }
+
+    #[test]
+    fn roundtrip_exact_after_training() {
+        let t = Bpe::train(CORPUS, 320);
+        for text in [CORPUS, "completely unseen text!", "θ unicode ≠ ascii", ""] {
+            let toks = t.encode(text);
+            assert_eq!(t.decode(&toks), text.as_bytes(), "{text}");
+        }
+    }
+
+    #[test]
+    fn all_ids_within_vocab() {
+        let t = Bpe::train(CORPUS, 280);
+        let toks = t.encode(CORPUS);
+        for &tok in &toks {
+            assert!((tok as usize) < t.vocab_size());
+        }
+    }
+
+    #[test]
+    fn vocab_growth_bounded() {
+        let t = Bpe::train(CORPUS, 270);
+        assert!(t.vocab_size() <= 270);
+        assert!(t.vocab_size() > 256);
+        // tiny unique corpus: stops early
+        let t2 = Bpe::train("abcdefg", 1000);
+        assert_eq!(t2.n_merges(), 0);
+    }
+
+    #[test]
+    fn out_of_vocab_decodes_to_replacement() {
+        let t = Bpe::train(CORPUS, 300);
+        let s = t.decode_lossy(&[104, 105, 9999]);
+        assert!(s.starts_with("hi"));
+        assert!(s.contains('\u{FFFD}'));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Bpe::train(CORPUS, 300);
+        let b = Bpe::train(CORPUS, 300);
+        assert_eq!(a.encode(CORPUS), b.encode(CORPUS));
+    }
+}

@@ -1,0 +1,285 @@
+//! Tiny declarative CLI argument parser (the offline image ships no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands, with generated `--help` text. Only what the `skipless`
+//! binary and examples need — no derive macros, no colors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` → boolean flag (no value); `false` → takes a value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub values: BTreeMap<String, String>,
+    pub flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: cannot parse '{s}'"))),
+        }
+    }
+
+    pub fn num_or<T: std::str::FromStr + Copy>(&self, name: &str, default: T) -> Result<T, CliError> {
+        Ok(self.parse_num(name)?.unwrap_or(default))
+    }
+}
+
+/// A command with options and optional subcommands.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub subcommands: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt_default(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn subcommand(mut self, cmd: Command) -> Self {
+        self.subcommands.push(cmd);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            out.push_str(" <SUBCOMMAND>");
+        }
+        if !self.opts.is_empty() {
+            out.push_str(" [OPTIONS]");
+        }
+        out.push('\n');
+        if !self.subcommands.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for sc in &self.subcommands {
+                out.push_str(&format!("  {:<14} {}\n", sc.name, sc.about));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let arg = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let def = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                out.push_str(&format!("  {:<20} {}{}\n", arg, o.help, def));
+            }
+        }
+        out
+    }
+
+    /// Parse a raw argv slice (not including the binary name).
+    /// Returns `(subcommand_path, args)`. A `--help` anywhere returns
+    /// `Err(CliError(help_text))` so callers can print-and-exit.
+    pub fn parse(&self, argv: &[String]) -> Result<(Vec<&'static str>, Args), CliError> {
+        let mut path = Vec::new();
+        self.parse_into(argv, &mut path).map(|args| (path, args))
+    }
+
+    fn parse_into(&self, argv: &[String], path: &mut Vec<&'static str>) -> Result<Args, CliError> {
+        // Subcommand dispatch: first non-flag token that names a subcommand.
+        if let Some(first) = argv.first() {
+            if let Some(sc) = self.subcommands.iter().find(|s| s.name == first.as_str()) {
+                path.push(sc.name);
+                return sc.parse_into(&argv[1..], path);
+            }
+        }
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help_text())))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{name} takes no value")));
+                    }
+                    args.flags.insert(name.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    fn demo() -> Command {
+        Command::new("skipless", "test")
+            .subcommand(
+                Command::new("serve", "run server")
+                    .opt_default("port", "7070", "tcp port")
+                    .opt("model", "model preset")
+                    .flag("merged", "use merged weights"),
+            )
+            .subcommand(Command::new("tables", "print tables").flag("csv", "csv output"))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let (path, args) = demo()
+            .parse(&argv("serve --model mistral-7b --merged --port=9000"))
+            .unwrap();
+        assert_eq!(path, vec!["serve"]);
+        assert_eq!(args.get("model"), Some("mistral-7b"));
+        assert_eq!(args.get("port"), Some("9000"));
+        assert!(args.flag("merged"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let (_, args) = demo().parse(&argv("serve")).unwrap();
+        assert_eq!(args.get("port"), Some("7070"));
+        assert!(!args.flag("merged"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let (path, args) = demo().parse(&argv("tables extra1 extra2")).unwrap();
+        assert_eq!(path, vec!["tables"]);
+        assert_eq!(args.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(demo().parse(&argv("serve --nope 1")).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(demo().parse(&argv("serve --model")).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_text() {
+        let err = demo().parse(&argv("serve --help")).unwrap_err();
+        assert!(err.0.contains("tcp port"));
+    }
+
+    #[test]
+    fn numeric_parsing() {
+        let (_, args) = demo().parse(&argv("serve --port 1234")).unwrap();
+        assert_eq!(args.num_or::<u16>("port", 0).unwrap(), 1234);
+        let (_, args) = demo().parse(&argv("serve --port abc")).unwrap();
+        assert!(args.num_or::<u16>("port", 0).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-tree because the build is fully
+//! offline (no `clap`/`serde`/`rand`/`rayon`/`criterion` available): a CLI
+//! parser, a JSON codec, PRNGs, a leveled logger, a scoped thread pool, and
+//! a micro-benchmark harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,244 @@
+//! Small scoped thread pool (the offline image ships no `rayon`/`tokio`).
+//!
+//! Two primitives cover everything the crate needs:
+//! * [`ThreadPool::scope_chunks`] — data-parallel loop over index ranges,
+//!   used by the blocked matmul hot path.
+//! * [`ThreadPool::run_all`] — run a batch of closures to completion,
+//!   used by the coordinator's per-request work.
+//!
+//! Workers are long-lived; jobs are dispatched over an mpsc channel and a
+//! generation barrier joins each scope. Panics in jobs are caught and
+//! re-raised on the submitting thread so test failures stay visible.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    pending: AtomicUsize,
+    panicked: AtomicUsize,
+    done: Mutex<()>,
+    cv: Condvar,
+}
+
+/// Fixed-size pool of worker threads.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool sized to the machine (`available_parallelism`), capped at 16.
+    pub fn default_size() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(16))
+            .unwrap_or(4)
+    }
+
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            pending: AtomicUsize::new(0),
+            panicked: AtomicUsize::new(0),
+            done: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let workers = (0..n_threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("skipless-worker-{i}"))
+                    .spawn(move || worker_loop(rx, shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            shared,
+            n_threads,
+        }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    fn submit(&self, job: Job) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx.as_ref().unwrap().send(job).expect("pool alive");
+    }
+
+    fn wait_all(&self) {
+        let mut guard = self.shared.done.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.cv.wait(guard).unwrap();
+        }
+        drop(guard);
+        if self.shared.panicked.swap(0, Ordering::SeqCst) != 0 {
+            panic!("a threadpool job panicked");
+        }
+    }
+
+    /// Run all closures to completion (blocking the caller). Jobs may
+    /// borrow from the caller's stack: `wait_all` blocks until every job
+    /// finishes, so nothing outlives this call.
+    pub fn run_all<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        for job in jobs {
+            // SAFETY: the lifetime-erasing transmute is sound because
+            // wait_all() below joins all submitted jobs before returning.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(job)
+            };
+            self.submit(job);
+        }
+        self.wait_all();
+    }
+
+    /// Split `0..n` into contiguous chunks (one per worker, at least
+    /// `min_chunk` items each) and run `f(start, end)` on each in parallel.
+    /// Blocks until every chunk completes. `f` must be `Sync` — chunks are
+    /// disjoint so data races are the caller's responsibility via unsafe
+    /// interior APIs (the matmul uses raw split pointers).
+    pub fn scope_chunks<F>(&self, n: usize, min_chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunk = (n.div_ceil(self.n_threads)).max(min_chunk.max(1));
+        let n_chunks = n.div_ceil(chunk);
+        if n_chunks <= 1 {
+            f(0, n);
+            return;
+        }
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n_chunks)
+            .map(|c| {
+                let start = c * chunk;
+                let end = ((c + 1) * chunk).min(n);
+                let g: Box<dyn FnOnce() + Send + '_> = Box::new(move || f(start, end));
+                g
+            })
+            .collect();
+        self.run_all(jobs);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Err(_) => return, // channel closed — pool dropped
+            Ok(job) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    shared.panicked.fetch_add(1, Ordering::SeqCst);
+                }
+                if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = shared.done.lock().unwrap();
+                    shared.cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+/// Process-wide shared pool, lazily created.
+pub fn global() -> &'static ThreadPool {
+    use std::sync::OnceLock;
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(ThreadPool::default_size()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_all_executes_everything() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..100)
+            .map(|i| {
+                let c = &counter;
+                let g: Box<dyn FnOnce() + Send> = Box::new(move || {
+                    c.fetch_add(i, Ordering::SeqCst);
+                });
+                g
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), (0..100).sum::<u64>());
+    }
+
+    #[test]
+    fn scope_chunks_covers_range_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_chunks(1000, 1, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn scope_chunks_small_n_runs_inline() {
+        let pool = ThreadPool::new(8);
+        let c = AtomicU64::new(0);
+        pool.scope_chunks(1, 1, |s, e| {
+            c.fetch_add((e - s) as u64, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+        pool.scope_chunks(0, 1, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "threadpool job panicked")]
+    fn job_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        pool.scope_chunks(100, 1, |s, _| {
+            if s == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_reusable_across_scopes() {
+        let pool = ThreadPool::new(4);
+        for round in 0..10 {
+            let c = AtomicU64::new(0);
+            pool.scope_chunks(64, 1, |s, e| {
+                c.fetch_add((e - s) as u64, Ordering::SeqCst);
+            });
+            assert_eq!(c.load(Ordering::SeqCst), 64, "round {round}");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Cross-layer integration: the AOT-compiled JAX/Pallas artifacts (L1+L2)
+//! executed through the PJRT runtime must agree with the pure-Rust CPU
+//! engine (L3's reference) on the SAME weights — prefill, decode, batched
+//! decode, vanilla and merged — and compose with the coordinator + server.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI runs
+//! artifacts first).
+
+use skipless::config::{ModelConfig, Variant};
+use skipless::coordinator::{
+    Coordinator, CpuEngine, DecodeInput, Engine, Request, SchedulerCfg,
+};
+use skipless::model::ModelWeights;
+use skipless::runtime::PjrtEngine;
+use skipless::surgery::{transform, Options};
+use std::path::{Path, PathBuf};
+
+fn artifact_dir(variant: &str) -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/tiny-gqa")
+        .join(variant);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: {dir:?} missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn weights(variant: Variant) -> ModelWeights {
+    let cfg = ModelConfig::tiny_gqa();
+    let w = ModelWeights::init_vanilla(&cfg, 4242);
+    match variant {
+        Variant::Vanilla => w,
+        v => transform(&w, v, Options::default()).unwrap(),
+    }
+}
+
+fn max_err(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn pjrt_matches_cpu_engine_vanilla_and_merged() {
+    for (vname, variant) in [("vanilla", Variant::Vanilla), ("merged_qp", Variant::MergedQP)] {
+        let Some(dir) = artifact_dir(vname) else { return };
+        let w = weights(variant);
+        let mut pjrt = PjrtEngine::boot(&dir, &w, 8).expect("boot");
+        let mut cpu = CpuEngine::new(w, 8, 16 << 20);
+
+        // prefill agreement (prompt shorter than the bucket → padding path)
+        let prompt = [5u32, 17, 3, 42, 8];
+        let (pid, pl) = pjrt.prefill(&prompt).unwrap();
+        let (cid, cl) = cpu.prefill(&prompt).unwrap();
+        let err = max_err(&pl, &cl);
+        assert!(err < 2e-3, "{vname}: prefill logits err {err}");
+
+        // several decode steps
+        let mut tok = 7u32;
+        for step in 0..6 {
+            let pg = pjrt
+                .decode_batch(&[DecodeInput { seq: pid, token: tok }])
+                .unwrap();
+            let cg = cpu
+                .decode_batch(&[DecodeInput { seq: cid, token: tok }])
+                .unwrap();
+            let err = max_err(&pg[0], &cg[0]);
+            assert!(err < 2e-3, "{vname}: decode step {step} err {err}");
+            tok = (tok * 31 + 17) % 250;
+        }
+        pjrt.release(pid);
+    }
+}
+
+#[test]
+fn pjrt_batched_decode_matches_singles() {
+    let Some(dir) = artifact_dir("vanilla") else { return };
+    let w = weights(Variant::Vanilla);
+    let mut eng = PjrtEngine::boot(&dir, &w, 8).unwrap();
+    let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8], &[5, 5, 5, 5]];
+    let ids: Vec<_> = prompts.iter().map(|p| eng.prefill(p).unwrap().0).collect();
+    // batch of 3 → runs in the b4 bucket with one padded row
+    let batch: Vec<DecodeInput> = ids
+        .iter()
+        .zip([11u32, 22, 33])
+        .map(|(&seq, token)| DecodeInput { seq, token })
+        .collect();
+    let got = eng.decode_batch(&batch).unwrap();
+    // fresh engine, one-at-a-time (b1 bucket)
+    let mut eng2 = PjrtEngine::boot(&dir, &w, 8).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        let (id, _) = eng2.prefill(p).unwrap();
+        let want = eng2
+            .decode_batch(&[DecodeInput { seq: id, token: [11u32, 22, 33][i] }])
+            .unwrap();
+        let err = max_err(&got[i], &want[0]);
+        assert!(err < 2e-3, "row {i} err {err}");
+    }
+}
+
+#[test]
+fn pjrt_vanilla_and_merged_agree_end_to_end() {
+    // The paper's claim at the whole-system level: same tokens out.
+    let (Some(dv), Some(dm)) = (artifact_dir("vanilla"), artifact_dir("merged_qp")) else {
+        return;
+    };
+    let coord_v = Coordinator::spawn_with(
+        {
+            let w = weights(Variant::Vanilla);
+            move || PjrtEngine::boot(&dv, &w, 8).unwrap()
+        },
+        SchedulerCfg::default(),
+    );
+    let coord_m = Coordinator::spawn_with(
+        {
+            let w = weights(Variant::MergedQP);
+            move || PjrtEngine::boot(&dm, &w, 8).unwrap()
+        },
+        SchedulerCfg::default(),
+    );
+    for (i, prompt) in [vec![1u32, 2, 3], vec![100, 50], vec![7, 7, 7, 7, 7]]
+        .into_iter()
+        .enumerate()
+    {
+        let rv = coord_v.generate(Request::greedy(i as u64, prompt.clone(), 8));
+        let rm = coord_m.generate(Request::greedy(i as u64, prompt, 8));
+        assert_eq!(rv.tokens, rm.tokens, "prompt {i}: merged diverged");
+        assert_eq!(rv.tokens.len(), 8);
+    }
+    coord_v.shutdown();
+    coord_m.shutdown();
+}
+
+#[test]
+fn pjrt_capacity_and_errors() {
+    let Some(dir) = artifact_dir("vanilla") else { return };
+    let w = weights(Variant::Vanilla);
+    let mut eng = PjrtEngine::boot(&dir, &w, 2).unwrap();
+    assert!(eng.can_admit(5));
+    assert!(!eng.can_admit(100), "prompt larger than any bucket");
+    let (a, _) = eng.prefill(&[1, 2]).unwrap();
+    let (_b, _) = eng.prefill(&[3, 4]).unwrap();
+    assert!(!eng.can_admit(2), "max_seqs reached");
+    assert!(eng.prefill(&[5]).is_err());
+    eng.release(a);
+    assert!(eng.can_admit(2));
+    // wrong-variant weights rejected at boot
+    let wm = weights(Variant::MergedQP);
+    assert!(PjrtEngine::boot(&dir, &wm, 2).is_err());
+}

@@ -1,0 +1,284 @@
+//! Randomized property tests (proptest-style, driven by the in-tree
+//! Xoshiro PRNG since the offline image ships no proptest crate).
+//!
+//! Each property runs many randomized cases with the failing seed printed,
+//! so a failure is reproducible by fixing `CASE_SEED`.
+//!
+//! Invariants covered:
+//! * surgery: equivalence holds for EVERY seed/config/variant (not just
+//!   the unit tests' fixed seeds); weight deltas always match `params`.
+//! * scheduler/coordinator: conservation (every submitted request gets
+//!   exactly one response), ordering-independence of results, KV-cache
+//!   leak-freedom under random admission/finish/preemption churn.
+//! * kvcache: alloc/free conservation, no cross-sequence aliasing.
+//! * tokenizer: encode∘decode = identity for arbitrary byte strings.
+
+use skipless::config::{ModelConfig, Variant};
+use skipless::coordinator::{CpuEngine, Engine, Request, Scheduler, SchedulerCfg};
+use skipless::kvcache::KvCache;
+use skipless::metrics::Metrics;
+use skipless::model::{prefill, ModelWeights};
+use skipless::sampler::SamplerCfg;
+use skipless::surgery::{transform, Options};
+use skipless::tokenizer::Bpe;
+use skipless::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+const CASE_SEED: u64 = 0xC0FFEE;
+
+/// Property: Table-1 surgery preserves logits for random seeds × configs ×
+/// variants (20 random cases).
+#[test]
+fn prop_surgery_equivalence_random_cases() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED);
+    let presets = ["tiny-mha", "tiny-gqa", "tiny-mqa", "tiny-parallel"];
+    for case in 0..20 {
+        let preset = presets[rng.next_below(presets.len() as u64) as usize];
+        let cfg = ModelConfig::preset(preset).unwrap();
+        let seed = rng.next_u64();
+        let variants: Vec<Variant> = Variant::all()
+            .into_iter()
+            .filter(|&v| v != Variant::Vanilla && cfg.supports(v))
+            .collect();
+        let variant = variants[rng.next_below(variants.len() as u64) as usize];
+        let w = ModelWeights::init_vanilla(&cfg, seed);
+        let m = transform(&w, variant, Options { skip_audit: true, ..Default::default() })
+            .unwrap_or_else(|e| panic!("case {case} ({preset},{variant:?},seed {seed}): {e}"));
+        // random prompt
+        let len = 1 + rng.next_below(10) as usize;
+        let prompt: Vec<u32> = (0..len)
+            .map(|_| rng.next_below(cfg.vocab_size as u64) as u32)
+            .collect();
+        let (l0, _) = prefill(&w, &prompt);
+        let (l1, _) = prefill(&m, &prompt);
+        let err = l1.rel_fro_err(&l0);
+        assert!(
+            err < 1e-3,
+            "case {case}: {preset} {variant:?} seed {seed} prompt {prompt:?}: rel err {err}"
+        );
+        // weight-count delta always matches the analytic table
+        use skipless::params::count_weights;
+        if cfg.layout == skipless::config::BlockLayout::Serial {
+            assert_eq!(m.stored_weights(), count_weights(&cfg, variant).total());
+        }
+    }
+}
+
+/// Property: every submitted request produces exactly one response with
+/// ≤ max_new_tokens tokens, across random workloads and queue pressure.
+#[test]
+fn prop_scheduler_conservation() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 1);
+    for case in 0..8 {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, rng.next_u64());
+        // randomly tight or roomy cache
+        let budget = if rng.next_below(2) == 0 { 96 << 10 } else { 8 << 20 };
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, budget),
+            SchedulerCfg {
+                max_running: 1 + rng.next_below(6) as usize,
+                admits_per_step: 1 + rng.next_below(4) as usize,
+            },
+            Arc::new(Metrics::new()),
+        );
+        let n_reqs = 3 + rng.next_below(10) as usize;
+        let mut expected: Vec<u64> = Vec::new();
+        for i in 0..n_reqs {
+            let plen = 1 + rng.next_below(6) as usize;
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.next_below(250) as u32).collect();
+            let max_new = 1 + rng.next_below(6) as usize;
+            let mut req = Request::greedy(i as u64, prompt, max_new);
+            if rng.next_below(3) == 0 {
+                req.sampler = SamplerCfg {
+                    temperature: 0.8,
+                    top_k: 10,
+                    top_p: 0.95,
+                };
+                req.seed = rng.next_u64();
+            }
+            expected.push(req.id);
+            s.submit(req);
+        }
+        let mut done = s.run_to_completion();
+        done.sort_by_key(|r| r.id);
+        let got: Vec<u64> = done.iter().map(|r| r.id).collect();
+        assert_eq!(got, expected, "case {case}: lost or duplicated responses");
+        for r in &done {
+            assert!(
+                r.tokens.len() <= 6,
+                "case {case} req {}: {} tokens",
+                r.id,
+                r.tokens.len()
+            );
+        }
+    }
+}
+
+/// Property: results are independent of submission interleaving — a batch
+/// submitted all at once equals the same requests submitted one by one.
+#[test]
+fn prop_scheduler_order_independence() {
+    let cfg = ModelConfig::tiny_gqa();
+    let w = ModelWeights::init_vanilla(&cfg, 4711);
+    let prompts: Vec<Vec<u32>> = (0..6).map(|i| vec![(i * 31 + 7) as u32 % 250, 3, 9]).collect();
+
+    let run = |batched: bool| -> Vec<Vec<u32>> {
+        let mut s = Scheduler::new(
+            CpuEngine::new(w.clone(), 8, 8 << 20),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        );
+        let mut out = vec![Vec::new(); prompts.len()];
+        if batched {
+            for (i, p) in prompts.iter().enumerate() {
+                s.submit(Request::greedy(i as u64, p.clone(), 5));
+            }
+            for r in s.run_to_completion() {
+                out[r.id as usize] = r.tokens;
+            }
+        } else {
+            for (i, p) in prompts.iter().enumerate() {
+                s.submit(Request::greedy(i as u64, p.clone(), 5));
+                for r in s.run_to_completion() {
+                    out[r.id as usize] = r.tokens;
+                }
+            }
+        }
+        out
+    };
+    assert_eq!(run(true), run(false), "batching changed results");
+}
+
+/// Property: the engine never leaks KV blocks — after any random workload
+/// completes, the cache is back to fully free.
+#[test]
+fn prop_engine_no_cache_leak() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 2);
+    for case in 0..6 {
+        let cfg = ModelConfig::tiny_mqa();
+        let w = ModelWeights::init_vanilla(&cfg, rng.next_u64());
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 4, 256 << 10),
+            SchedulerCfg {
+                max_running: 4,
+                admits_per_step: 2,
+            },
+            Arc::new(Metrics::new()),
+        );
+        for i in 0..8u64 {
+            let plen = 1 + rng.next_below(5) as usize;
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.next_below(200) as u32).collect();
+            s.submit(Request::greedy(i, prompt, 1 + rng.next_below(5) as usize));
+        }
+        let done = s.run_to_completion();
+        assert_eq!(done.len(), 8, "case {case}");
+        // all sequences released ⇒ engine will admit a max-size prompt again
+        assert!(s.engine().can_admit(16), "case {case}: blocks leaked");
+    }
+}
+
+/// Property: paged cache conservation + isolation under random alloc/free
+/// churn with interleaved appends.
+#[test]
+fn prop_kvcache_conservation_and_isolation() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 3);
+    let cfg = ModelConfig::tiny_gqa();
+    let mut cache = KvCache::new(&cfg, 4, 512 << 10);
+    let total = cache.free_blocks();
+    let e = cfg.e();
+    let mut live: Vec<(skipless::kvcache::SeqId, u64, usize)> = Vec::new(); // (id, tag, len)
+    for _step in 0..300 {
+        match rng.next_below(3) {
+            0 if cache.can_admit(2) && live.len() < 12 => {
+                let id = cache.alloc_seq(2).unwrap();
+                live.push((id, rng.next_u64(), 0));
+            }
+            1 if !live.is_empty() => {
+                let idx = rng.next_below(live.len() as u64) as usize;
+                let (id, _, _) = live.remove(idx);
+                cache.free_seq(id).unwrap();
+            }
+            _ if !live.is_empty() => {
+                let idx = rng.next_below(live.len() as u64) as usize;
+                let (id, tag, ref mut len) = live[idx];
+                let val = (tag ^ *len as u64) as f32;
+                let row = vec![val; e];
+                let mut ok = true;
+                for l in 0..cfg.n_layers {
+                    if cache.append(id, l, &row, &row).is_err() {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    cache.advance(id).unwrap();
+                    *len += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    // isolation: each live sequence sees exactly its own tagged values
+    let (mut k, mut v) = (Vec::new(), Vec::new());
+    for &(id, tag, len) in &live {
+        let got = cache.gather(id, 0, &mut k, &mut v).unwrap();
+        assert_eq!(got, len);
+        for (pos, chunk) in k.chunks(e).enumerate() {
+            let want = (tag ^ pos as u64) as f32;
+            assert!(chunk.iter().all(|&x| x == want), "seq {id:?} pos {pos}");
+        }
+    }
+    // conservation: free everything → all blocks return
+    for (id, _, _) in live {
+        cache.free_seq(id).unwrap();
+    }
+    assert_eq!(cache.free_blocks(), total);
+}
+
+/// Property: BPE encode/decode is the identity on arbitrary byte strings.
+#[test]
+fn prop_tokenizer_roundtrip_random_bytes() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 4);
+    let bpe = Bpe::train(
+        "the quick brown fox jumps over the lazy dog again and again and again",
+        380,
+    );
+    for case in 0..200 {
+        let len = rng.next_below(120) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let toks = bpe.encode(&text);
+        assert_eq!(
+            bpe.decode(&toks),
+            text.as_bytes(),
+            "case {case}: roundtrip failed"
+        );
+        for &t in &toks {
+            assert!((t as usize) < bpe.vocab_size(), "case {case}: oov token");
+        }
+    }
+}
+
+/// Property: greedy generation through the scheduler equals direct model
+/// generation for random prompts (the serving stack adds nothing).
+#[test]
+fn prop_serving_matches_model() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 5);
+    let cfg = ModelConfig::tiny_gqa();
+    let w = ModelWeights::init_vanilla(&cfg, 31337);
+    for case in 0..10 {
+        let plen = 1 + rng.next_below(8) as usize;
+        let prompt: Vec<u32> = (0..plen).map(|_| rng.next_below(250) as u32).collect();
+        let n = 1 + rng.next_below(8) as usize;
+        let want = skipless::model::greedy_generate(&w, &prompt, n);
+        let mut s = Scheduler::new(
+            CpuEngine::new(w.clone(), 8, 8 << 20),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        );
+        s.submit(Request::greedy(0, prompt.clone(), n));
+        let done = s.run_to_completion();
+        assert_eq!(done[0].tokens, want, "case {case}: prompt {prompt:?}");
+    }
+}
