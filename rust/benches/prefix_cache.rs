@@ -1,0 +1,181 @@
+//! Prefix-cache + swap bench: how much prefill work does automatic prefix
+//! sharing save on a shared-system-prompt workload, and what does
+//! swap-style preemption cost/recover under KV-pool pressure?
+//!
+//! Emits `BENCH_prefix_cache.json` (schema in EXPERIMENTS.md) plus the
+//! usual JSON result lines on stdout. `SKIPLESS_BENCH_QUICK=1` shrinks the
+//! workload for CI.
+
+use skipless::config::ModelConfig;
+use skipless::coordinator::{CpuEngine, Request, Scheduler, SchedulerCfg};
+use skipless::kvcache::CacheOpts;
+use skipless::metrics::Metrics;
+use skipless::model::ModelWeights;
+use skipless::util::bench::fmt_dur;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct RunResult {
+    tokens: Vec<Vec<u32>>,
+    wall: Duration,
+    prefilled: u64,
+    saved: u64,
+    hit_rate: f64,
+    swap_outs: u64,
+    swap_ins: u64,
+    preemptions: u64,
+}
+
+fn run(
+    w: &ModelWeights,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    block_tokens: usize,
+    budget: usize,
+    opts: CacheOpts,
+) -> RunResult {
+    let metrics = Arc::new(Metrics::new());
+    let mut s = Scheduler::new(
+        CpuEngine::with_cache_opts(w.clone(), block_tokens, budget, opts),
+        SchedulerCfg {
+            max_running: 32,
+            admits_per_step: 4,
+        },
+        Arc::clone(&metrics),
+    );
+    for (i, p) in prompts.iter().enumerate() {
+        s.submit(Request::greedy(i as u64, p.clone(), max_new));
+    }
+    let t0 = Instant::now();
+    let mut done = s.run_to_completion();
+    let wall = t0.elapsed();
+    done.sort_by_key(|r| r.id);
+    RunResult {
+        tokens: done.into_iter().map(|r| r.tokens).collect(),
+        wall,
+        prefilled: metrics.tokens_prefilled.load(Ordering::Relaxed),
+        saved: metrics.kv_prefix_tokens_saved.load(Ordering::Relaxed),
+        hit_rate: metrics.prefix_hit_rate(),
+        swap_outs: metrics.kv_swap_outs.load(Ordering::Relaxed),
+        swap_ins: metrics.kv_swap_ins.load(Ordering::Relaxed),
+        preemptions: metrics.preemptions.load(Ordering::Relaxed),
+    }
+}
+
+fn main() {
+    println!("# prefix_cache — KV-block lifecycle: sharing + swap");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let cfg = ModelConfig::tiny_gqa();
+    let w = ModelWeights::init_vanilla(&cfg, 2026);
+
+    // Workload: N requests sharing a long system prompt + short unique
+    // suffix — the RAG/chat shape prefix caching exists for.
+    let n_requests = if quick { 8 } else { 24 };
+    let system_len = 64usize;
+    // keep max_new fixed so generation always crosses a block boundary in
+    // the tight-pool section (that's what forces preemption)
+    let max_new = 8;
+    let vocab = cfg.vocab_size as u32;
+    let system: Vec<u32> = (0..system_len as u32).map(|i| (i * 7 + 11) % vocab).collect();
+    let prompts: Vec<Vec<u32>> = (0..n_requests as u32)
+        .map(|i| {
+            let mut p = system.clone();
+            p.extend([(i * 13 + 1) % vocab, (i * 3 + 2) % vocab, (i + 5) % vocab]);
+            p
+        })
+        .collect();
+    let prompt_tokens: u64 = prompts.iter().map(|p| p.len() as u64).sum();
+
+    // -- sharing off vs on, roomy pool ---------------------------------
+    let off = run(
+        &w,
+        &prompts,
+        max_new,
+        16,
+        64 << 20,
+        CacheOpts { prefix_sharing: false, ..Default::default() },
+    );
+    let on = run(&w, &prompts, max_new, 16, 64 << 20, CacheOpts::default());
+    assert_eq!(on.tokens, off.tokens, "sharing changed outputs");
+    assert!(on.saved > 0, "no prefill tokens saved");
+    assert!(on.hit_rate > 0.0, "prefix-hit rate must be > 0");
+    assert_eq!(on.prefilled + on.saved, off.prefilled, "token accounting");
+
+    let speedup = off.wall.as_secs_f64() / on.wall.as_secs_f64();
+    eprintln!("  {} requests × {}+3-token prompts, {} prompt tokens total", n_requests, system_len, prompt_tokens);
+    eprintln!(
+        "  sharing off: prefilled {:>6} tokens   wall {}",
+        off.prefilled,
+        fmt_dur(off.wall)
+    );
+    eprintln!(
+        "  sharing on : prefilled {:>6} tokens   wall {}   saved {} ({:.1}% hit rate)   {:.2}x",
+        on.prefilled,
+        fmt_dur(on.wall),
+        on.saved,
+        on.hit_rate * 100.0,
+        speedup
+    );
+    println!(
+        "{{\"suite\":\"prefix_cache\",\"case\":\"sharing\",\"requests\":{n_requests},\"prefill_tokens_baseline\":{},\"prefill_tokens_shared\":{},\"prefill_tokens_saved\":{},\"prefix_hit_rate\":{:.4},\"baseline_us\":{:.1},\"shared_us\":{:.1},\"speedup_x\":{speedup:.4}}}",
+        off.prefilled,
+        on.prefilled,
+        on.saved,
+        on.hit_rate,
+        off.wall.as_secs_f64() * 1e6,
+        on.wall.as_secs_f64() * 1e6,
+    );
+
+    // -- swap-style preemption under a tight pool ----------------------
+    // pool ≈ 1/3 of what the workload wants at peak; preemption must kick
+    // in and the streams must still match the roomy run byte for byte.
+    let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 8;
+    let tight_blocks = n_requests + 4;
+    let tight = run(
+        &w,
+        &prompts,
+        max_new,
+        8,
+        tight_blocks * bytes_per_block,
+        CacheOpts::default(),
+    );
+    assert_eq!(tight.tokens, on.tokens, "pressure changed outputs");
+    assert!(
+        tight.preemptions > 0,
+        "tight pool never preempted — bench lost its bite"
+    );
+    eprintln!(
+        "  tight pool ({} blocks): wall {}   swap_outs {}   swap_ins {}   preemptions {}",
+        tight_blocks,
+        fmt_dur(tight.wall),
+        tight.swap_outs,
+        tight.swap_ins,
+        tight.preemptions
+    );
+    println!(
+        "{{\"suite\":\"prefix_cache\",\"case\":\"swap_pressure\",\"pool_blocks\":{tight_blocks},\"swap_outs\":{},\"swap_ins\":{},\"preemptions\":{},\"wall_us\":{:.1}}}",
+        tight.swap_outs,
+        tight.swap_ins,
+        tight.preemptions,
+        tight.wall.as_secs_f64() * 1e6,
+    );
+
+    // -- machine-readable artifact -------------------------------------
+    let json = format!(
+        "{{\n  \"suite\": \"prefix_cache\",\n  \"model\": \"{}\",\n  \"requests\": {n_requests},\n  \"system_prompt_tokens\": {system_len},\n  \"prompt_tokens_total\": {prompt_tokens},\n  \"max_new_tokens\": {max_new},\n  \"prefill_tokens_baseline\": {},\n  \"prefill_tokens_shared\": {},\n  \"prefill_tokens_saved\": {},\n  \"prefix_hit_rate\": {:.4},\n  \"baseline_wall_us\": {:.1},\n  \"shared_wall_us\": {:.1},\n  \"speedup_x\": {speedup:.4},\n  \"swap\": {{\n    \"pool_blocks\": {tight_blocks},\n    \"swap_outs\": {},\n    \"swap_ins\": {},\n    \"preemptions\": {},\n    \"wall_us\": {:.1},\n    \"outputs_byte_identical\": true\n  }}\n}}\n",
+        cfg.name,
+        off.prefilled,
+        on.prefilled,
+        on.saved,
+        on.hit_rate,
+        off.wall.as_secs_f64() * 1e6,
+        on.wall.as_secs_f64() * 1e6,
+        tight.swap_outs,
+        tight.swap_ins,
+        tight.preemptions,
+        tight.wall.as_secs_f64() * 1e6,
+    );
+    std::fs::write("BENCH_prefix_cache.json", &json).expect("write BENCH_prefix_cache.json");
+    eprintln!("  wrote BENCH_prefix_cache.json");
+}

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, and doc the rust crate.
+#
+#   rust/scripts/verify.sh          # full run
+#   QUICK=1 rust/scripts/verify.sh  # benches in quick mode if you add them
+#
+# `cargo doc` runs with the crate's own
+# `#![deny(rustdoc::broken_intra_doc_links)]`, so a dangling doc link is a
+# hard failure here, not a drive-by warning.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps =="
+cargo doc --no-deps --quiet
+
+echo "verify: OK"

@@ -8,8 +8,8 @@
 
 use crate::config::{BlockLayout, ModelConfig, Variant};
 use crate::coordinator::engine::{DecodeInput, Engine, EngineError};
-use crate::kvcache::{KvCache, SeqId};
-use crate::linalg::matmul;
+use crate::kvcache::{CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
+use crate::linalg::{matmul, matmul_transb, softmax_rows};
 use crate::model::attention::HeadLayout;
 use crate::model::ffn::ffn_forward;
 use crate::model::{rope, ModelWeights};
@@ -26,11 +26,68 @@ pub struct CpuEngine {
     scratch_v: Vec<f32>,
 }
 
+/// Attention of already-rotated suffix queries over the full key/value
+/// history (cached prefix ‖ in-register suffix). Row `r` of `q_rot` is
+/// absolute position `prefix + r` and may attend to positions
+/// `0..=prefix + r`. Column-width and per-element accumulation order match
+/// [`crate::model::attention::causal_attention`] exactly, so a prefill that
+/// reuses a cached prefix produces bit-identical suffix activations.
+fn attend_continuation(
+    q_rot: &Mat,
+    k_all_rot: &Mat,
+    v_all: &Mat,
+    layout: HeadLayout,
+    prefix: usize,
+) -> Mat {
+    let s = q_rot.rows();
+    let t = k_all_rot.rows();
+    assert_eq!(prefix + s, t, "prefix + suffix mismatch");
+    let hd = layout.head_dim;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Mat::zeros(s, layout.d());
+    for h in 0..layout.n_heads {
+        let g = layout.kv_of(h);
+        let qh = q_rot.col_slice(h * hd, (h + 1) * hd);
+        let kh = k_all_rot.col_slice(g * hd, (g + 1) * hd);
+        let vh = v_all.col_slice(g * hd, (g + 1) * hd);
+        let mut scores = matmul_transb(&qh, &kh);
+        scores.scale(scale);
+        for r in 0..s {
+            let row = scores.row_mut(r);
+            for c in (prefix + r + 1)..t {
+                row[c] = f32::NEG_INFINITY;
+            }
+        }
+        softmax_rows(&mut scores);
+        let oh = matmul(&scores, &vh);
+        for r in 0..s {
+            out.row_mut(r)[h * hd..(h + 1) * hd].copy_from_slice(oh.row(r));
+        }
+    }
+    out
+}
+
+fn capacity(e: CacheError) -> EngineError {
+    EngineError::CapacityExhausted(e.to_string())
+}
+
 impl CpuEngine {
-    /// `cache_budget_bytes` bounds the paged KV pool.
+    /// `cache_budget_bytes` bounds the paged KV pool; default lifecycle
+    /// options (prefix sharing on, swap budget = pool size).
     pub fn new(weights: ModelWeights, block_tokens: usize, cache_budget_bytes: usize) -> Self {
+        Self::with_cache_opts(weights, block_tokens, cache_budget_bytes, CacheOpts::default())
+    }
+
+    /// Like [`CpuEngine::new`] with explicit [`CacheOpts`] (benches and the
+    /// on/off-equivalence tests disable prefix sharing through this).
+    pub fn with_cache_opts(
+        weights: ModelWeights,
+        block_tokens: usize,
+        cache_budget_bytes: usize,
+        opts: CacheOpts,
+    ) -> Self {
         weights.check_shapes().expect("engine weights");
-        let cache = KvCache::new(&weights.cfg, block_tokens, cache_budget_bytes);
+        let cache = KvCache::with_opts(&weights.cfg, block_tokens, cache_budget_bytes, opts);
         Self {
             weights,
             cache,
@@ -38,6 +95,10 @@ impl CpuEngine {
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
         }
+    }
+
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
     }
 
     pub fn variant(&self) -> Variant {
@@ -61,6 +122,82 @@ impl CpuEngine {
             Some(m) => matmul(x, m),
             None => x.clone(),
         }
+    }
+
+    /// Run the forward pass for prompt positions `reused..` of a freshly
+    /// allocated sequence, appending their K/V to the paged cache, and
+    /// return the last prompt position's logits. With `reused == 0` this is
+    /// a plain full prefill; with `reused > 0` the leading positions'
+    /// K/V already sit in the cache (borrowed from the prefix index) and
+    /// only the suffix is computed — the chunked-prefill continuation.
+    fn prefill_into(
+        &mut self,
+        id: SeqId,
+        tokens: &[u32],
+        reused: usize,
+    ) -> Result<Vec<f32>, EngineError> {
+        debug_assert!(reused < tokens.len());
+        let layout = self.head_layout();
+        let w = &self.weights;
+        let cfg = &w.cfg;
+        let hd = cfg.head_dim();
+        let suffix = &tokens[reused..];
+        let mut x = w.embed_tokens(suffix);
+        // run all layers, collecting each layer's (rotated-K, V) to write
+        // into the paged cache position-major afterwards (the cache's
+        // append/advance protocol is per-position).
+        let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(w.blocks.len());
+        for (li, b) in w.blocks.iter().enumerate() {
+            let k = Self::proj(&x, &b.k);
+            let v = Self::proj(&x, &b.v);
+            let mut k_rot = k.clone();
+            rope::apply(&mut k_rot, hd, reused, rope::BASE);
+            let q = Self::proj(&x, &b.q);
+            let a = if reused == 0 {
+                crate::model::attention::causal_attention(&q, &k, &v, layout, 0)
+            } else {
+                // gather the shared prefix (rotated keys / raw values) into
+                // buffers the Mats then own outright — no re-copy;
+                // st.len == reused until the appends below
+                let (mut pk_buf, mut pv_buf) = (Vec::new(), Vec::new());
+                self.cache
+                    .gather(id, li, &mut pk_buf, &mut pv_buf)
+                    .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+                let e = layout.e();
+                let pk = Mat::from_vec(reused, e, pk_buf);
+                let pv = Mat::from_vec(reused, e, pv_buf);
+                let mut q_rot = q.clone();
+                rope::apply(&mut q_rot, hd, reused, rope::BASE);
+                attend_continuation(&q_rot, &pk.vcat(&k_rot), &pv.vcat(&v), layout, reused)
+            };
+            layer_kv.push((k_rot, v));
+            x = match cfg.layout {
+                BlockLayout::Serial => {
+                    let p = Self::proj(&a, &b.p);
+                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                }
+                BlockLayout::Parallel => {
+                    let post = if b.c.is_some() { &b.c } else { &b.p };
+                    let attn_out = Self::proj(&a, post);
+                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                }
+            };
+        }
+        for r in 0..suffix.len() {
+            for (li, (k_rot, v)) in layer_kv.iter().enumerate() {
+                self.cache
+                    .append(id, li, k_rot.row(r), v.row(r))
+                    .map_err(capacity)?;
+            }
+            self.cache
+                .advance(id)
+                .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+        }
+        let logits = matmul(
+            &x.row_slice(suffix.len() - 1, suffix.len()),
+            &self.weights.unembed,
+        );
+        Ok(logits.into_vec())
     }
 
     /// Attention for one sequence against its gathered cache; `q_rot` is the
@@ -124,51 +261,47 @@ impl Engine for CpuEngine {
         if tokens.is_empty() {
             return Err(EngineError::BadSequence("empty prompt".into()));
         }
-        let id = self
-            .cache
-            .alloc_seq(tokens.len())
-            .map_err(|e| EngineError::CapacityExhausted(e.to_string()))?;
-        let w = &self.weights;
-        let cfg = &w.cfg;
-        let hd = cfg.head_dim();
-        let mut x = w.embed_tokens(tokens);
-        // run all layers, collecting each layer's (rotated-K, V) to write
-        // into the paged cache position-major afterwards (the cache's
-        // append/advance protocol is per-position).
-        let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(w.blocks.len());
-        for b in w.blocks.iter() {
-            let k = Self::proj(&x, &b.k);
-            let v = Self::proj(&x, &b.v);
-            let mut k_rot = k.clone();
-            rope::apply(&mut k_rot, hd, 0, rope::BASE);
-            let q = Self::proj(&x, &b.q);
-            let a = crate::model::attention::causal_attention(&q, &k, &v, self.head_layout(), 0);
-            layer_kv.push((k_rot, v));
-            x = match cfg.layout {
-                BlockLayout::Serial => {
-                    let p = Self::proj(&a, &b.p);
-                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
-                }
-                BlockLayout::Parallel => {
-                    let post = if b.c.is_some() { &b.c } else { &b.p };
-                    let attn_out = Self::proj(&a, post);
-                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
-                }
-            };
-        }
-        for r in 0..tokens.len() {
-            for (li, (k_rot, v)) in layer_kv.iter().enumerate() {
-                self.cache
-                    .append(id, li, k_rot.row(r), v.row(r))
-                    .map_err(|e| EngineError::CapacityExhausted(e.to_string()))?;
-            }
-            self.cache
-                .advance(id)
-                .map_err(|e| EngineError::BadSequence(e.to_string()))?;
-        }
+        let id = self.cache.alloc_seq(tokens.len()).map_err(capacity)?;
+        let logits = self.prefill_into(id, tokens, 0)?;
         self.positions.insert(id, tokens.len());
-        let logits = matmul(&x.row_slice(tokens.len() - 1, tokens.len()), &w.unembed);
-        Ok((id, logits.into_vec()))
+        Ok((id, logits))
+    }
+
+    fn can_admit_tokens(&self, tokens: &[u32]) -> bool {
+        self.cache.can_admit_tokens(tokens)
+    }
+
+    fn prefill_shared(&mut self, tokens: &[u32]) -> Result<(SeqId, Vec<f32>, usize), EngineError> {
+        if tokens.is_empty() {
+            return Err(EngineError::BadSequence("empty prompt".into()));
+        }
+        let (id, reused) = self.cache.alloc_seq_shared(tokens).map_err(capacity)?;
+        let logits = self.prefill_into(id, tokens, reused)?;
+        self.positions.insert(id, tokens.len());
+        Ok((id, logits, reused))
+    }
+
+    fn swap_out(&mut self, seq: SeqId) -> Result<(), EngineError> {
+        // positions entry is kept: the sequence is still logically alive
+        self.cache.swap_out(seq).map(|_| ()).map_err(|e| match e {
+            CacheError::UnknownSeq(_) => EngineError::BadSequence(e.to_string()),
+            _ => capacity(e),
+        })
+    }
+
+    fn swap_in(&mut self, seq: SeqId) -> Result<(), EngineError> {
+        self.cache.swap_in(seq).map(|_| ()).map_err(|e| match e {
+            CacheError::UnknownSeq(_) => EngineError::BadSequence(e.to_string()),
+            _ => capacity(e),
+        })
+    }
+
+    fn can_swap_in(&self, seq: SeqId, headroom_blocks: usize) -> bool {
+        self.cache.can_swap_in(seq, headroom_blocks)
+    }
+
+    fn kv_snapshot(&self) -> Option<CacheSnapshot> {
+        Some(self.cache.snapshot())
     }
 
     fn decode_batch(&mut self, inputs: &[DecodeInput]) -> Result<Vec<Vec<f32>>, EngineError> {
@@ -403,5 +536,107 @@ mod tests {
             }]),
             Err(EngineError::BadSequence(_))
         ));
+    }
+
+    /// A warm prefill that borrows cached prefix blocks must produce the
+    /// same logits as a cold full prefill of the same prompt — the compute
+    /// it skips is exactly the compute whose results it reads back.
+    #[test]
+    fn prefill_shared_matches_cold_prefill() {
+        for name in ["tiny-mha", "tiny-gqa", "tiny-parallel"] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let w = ModelWeights::init_vanilla(&cfg, 56);
+            // block_tokens 4 so a 10-token prompt has shareable full blocks
+            let mut eng = CpuEngine::new(w, 4, 8 << 20);
+            let prompt: Vec<u32> = (0..10).map(|i| (i * 13 + 3) % 250).collect();
+            let (a, cold, r0) = eng.prefill_shared(&prompt).unwrap();
+            assert_eq!(r0, 0);
+            let (b, warm, r1) = eng.prefill_shared(&prompt).unwrap();
+            assert_eq!(r1, 8, "two full blocks reused");
+            let err = cold
+                .iter()
+                .zip(&warm)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-6, "{name}: warm prefill diverged by {err}");
+            // and both sequences decode identically afterwards
+            let g = eng
+                .decode_batch(&[
+                    DecodeInput { seq: a, token: 9 },
+                    DecodeInput { seq: b, token: 9 },
+                ])
+                .unwrap();
+            let err = g[0]
+                .iter()
+                .zip(&g[1])
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-6, "{name}: post-reuse decode diverged by {err}");
+        }
+    }
+
+    /// A partially-matching prompt reuses only the common full blocks and
+    /// still computes the right logits (vs an engine with sharing off).
+    #[test]
+    fn partial_prefix_reuse_correct() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 57);
+        let mut shared = CpuEngine::new(w.clone(), 4, 8 << 20);
+        let mut plain = CpuEngine::with_cache_opts(
+            w,
+            4,
+            8 << 20,
+            crate::kvcache::CacheOpts {
+                prefix_sharing: false,
+                ..Default::default()
+            },
+        );
+        let base: Vec<u32> = (0..12).map(|i| (i * 7 + 1) % 250).collect();
+        let mut variant = base.clone();
+        variant[9] = 200; // diverges inside the third block
+        let _ = shared.prefill_shared(&base).unwrap();
+        let (_, warm, reused) = shared.prefill_shared(&variant).unwrap();
+        assert_eq!(reused, 8, "first two blocks shared, third differs");
+        let (_, want, r) = plain.prefill_shared(&variant).unwrap();
+        assert_eq!(r, 0);
+        let err = warm
+            .iter()
+            .zip(&want)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-6, "partial reuse diverged by {err}");
+    }
+
+    /// Swap a sequence out under pressure and back in: decode must continue
+    /// exactly where it left off.
+    #[test]
+    fn swap_roundtrip_resumes_decode_exactly() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 58);
+        let mut eng = CpuEngine::new(w.clone(), 4, 8 << 20);
+        let mut ref_eng = CpuEngine::new(w, 4, 8 << 20);
+        let prompt = [3u32, 1, 4, 1, 5, 9];
+        let (id, _) = eng.prefill(&prompt).unwrap();
+        let (rid, _) = ref_eng.prefill(&prompt).unwrap();
+        let a = eng.decode_batch(&[DecodeInput { seq: id, token: 2 }]).unwrap();
+        let b = ref_eng.decode_batch(&[DecodeInput { seq: rid, token: 2 }]).unwrap();
+        assert_eq!(a[0], b[0]);
+        eng.swap_out(id).unwrap();
+        assert!(eng.can_swap_in(id, 0));
+        eng.swap_in(id).unwrap();
+        let a = eng.decode_batch(&[DecodeInput { seq: id, token: 6 }]).unwrap();
+        let b = ref_eng.decode_batch(&[DecodeInput { seq: rid, token: 6 }]).unwrap();
+        assert_eq!(a[0], b[0], "post-swap logits differ");
+    }
+
+    #[test]
+    fn snapshot_exposed_through_engine_trait() {
+        let mut eng = engine("tiny-gqa", 59);
+        let (id, _) = eng.prefill(&[1, 2, 3]).unwrap();
+        let snap = eng.kv_snapshot().unwrap();
+        assert!(snap.used_blocks > 0);
+        eng.release(id);
+        let snap = eng.kv_snapshot().unwrap();
+        assert_eq!(snap.used_blocks, 0);
     }
 }

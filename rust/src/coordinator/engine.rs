@@ -8,7 +8,7 @@
 //! AOT-compiled JAX artifacts through PJRT.
 
 use crate::config::ModelConfig;
-use crate::kvcache::SeqId;
+use crate::kvcache::{CacheSnapshot, SeqId};
 use std::fmt;
 
 #[derive(Debug)]
@@ -68,4 +68,42 @@ pub trait Engine {
 
     /// Release a finished/cancelled sequence's resources.
     fn release(&mut self, seq: SeqId);
+
+    // ---- KV-block lifecycle (optional; defaults preserve the plain
+    // prefill/recompute behavior for engines without a paged cache) -------
+
+    /// Like [`Engine::can_admit`], but engines with a prefix index may
+    /// credit blocks the concrete token prefix would reuse.
+    fn can_admit_tokens(&self, tokens: &[u32]) -> bool {
+        self.can_admit(tokens.len())
+    }
+
+    /// Prefill that may reuse already-cached prefix state. Returns the
+    /// sequence id, last-position logits, and the number of leading prompt
+    /// positions whose compute was skipped (0 for engines without sharing).
+    fn prefill_shared(&mut self, tokens: &[u32]) -> Result<(SeqId, Vec<f32>, usize), EngineError> {
+        self.prefill(tokens).map(|(seq, logits)| (seq, logits, 0))
+    }
+
+    /// Spill a running sequence's KV state so its blocks can serve others;
+    /// the scheduler falls back to recompute-preemption when unsupported.
+    fn swap_out(&mut self, _seq: SeqId) -> Result<(), EngineError> {
+        Err(EngineError::Backend("swap not supported by this engine".into()))
+    }
+
+    /// Restore a sequence spilled by [`Engine::swap_out`], byte-identically.
+    fn swap_in(&mut self, _seq: SeqId) -> Result<(), EngineError> {
+        Err(EngineError::Backend("swap not supported by this engine".into()))
+    }
+
+    /// Would [`Engine::swap_in`] succeed now and still leave
+    /// `headroom_blocks` KV blocks available?
+    fn can_swap_in(&self, _seq: SeqId, _headroom_blocks: usize) -> bool {
+        false
+    }
+
+    /// Paged-cache occupancy + lifecycle counters, if this engine has one.
+    fn kv_snapshot(&self) -> Option<CacheSnapshot> {
+        None
+    }
 }

@@ -1,8 +1,16 @@
 //! L3 coordinator: continuous-batching serving on top of an [`Engine`].
 //!
-//! [`Scheduler`] is the synchronous core (admit → batched decode →
-//! retire); [`Coordinator`] wraps it in a background thread with a
-//! channel-based submit/receive API for the TCP server and examples.
+//! [`Scheduler`] is the synchronous core (resume swapped → admit → batched
+//! decode → retire); [`Coordinator`] wraps it in a background thread with
+//! a channel-based submit/receive API for the TCP server and examples.
+//!
+//! Admission and preemption are KV-block-lifecycle aware: prompts sharing
+//! a cached prefix skip that part of prefill ([`Engine::prefill_shared`]),
+//! and capacity preemption swaps sequences out to the cache's spill buffer
+//! instead of discarding them ([`Engine::swap_out`]) — see DESIGN.md
+//! §KV-lifecycle. The scheduler mirrors cache occupancy into
+//! [`crate::metrics::Metrics`] every step, so `{"op":"metrics"}` reports
+//! prefix-hit rate and swap counts live.
 
 pub mod cpu_engine;
 pub mod engine;

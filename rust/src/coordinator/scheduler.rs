@@ -1,16 +1,24 @@
 //! Continuous-batching scheduler (Orca/vLLM-style, scaled to this testbed).
 //!
 //! Policy per engine step:
-//! 1. **Admit**: pop queued requests FIFO while the engine has KV capacity
-//!    and the running set is below `max_running`; each admit runs a full
-//!    prefill and samples the first token.
-//! 2. **Decode**: one batched `decode_batch` over every running sequence;
+//! 1. **Resume**: swap previously-preempted sequences back in (oldest
+//!    first) when the pool has room plus headroom; swapped sequences have
+//!    strict priority over new admissions for blocks.
+//! 2. **Admit**: pop queued requests FIFO while the engine has KV capacity
+//!    (prefix-index-aware via [`Engine::can_admit_tokens`]) and the running
+//!    set is below `max_running`; each admit prefills — skipping any
+//!    cached shared prefix — and samples the first token.
+//! 3. **Decode**: one batched `decode_batch` over every running sequence;
 //!    sample the next token for each; retire sequences that hit
 //!    `max_new_tokens` or an EOS token.
-//! 3. **Preempt**: a sequence whose decode hits `CapacityExhausted` is
-//!    released and pushed back to the queue head for full recomputation
-//!    (recompute-style preemption — simplest correct policy; swap-style is
-//!    future work, mirroring the paper's own future-work framing).
+//! 4. **Preempt**: when decode hits `CapacityExhausted`, the youngest
+//!    running sequence is **swapped out** — its KV blocks spill to the
+//!    cache's bounded host buffer and it resumes later byte-identically
+//!    (sampler state intact). If the engine cannot swap (no paged cache,
+//!    spill budget exhausted), it falls back to recompute-preemption:
+//!    release and requeue at the head, replaying deterministically from
+//!    the request seed. A lone running sequence that still exhausts the
+//!    pool can never finish — it is truncated (DESIGN.md §KV-lifecycle).
 
 use crate::coordinator::engine::{DecodeInput, Engine, EngineError};
 use crate::kvcache::SeqId;
@@ -102,6 +110,9 @@ pub struct Scheduler<E: Engine> {
     cfg: SchedulerCfg,
     queue: VecDeque<Request>,
     running: Vec<Running>,
+    /// Swap-preempted sequences awaiting resume, oldest first. Their KV
+    /// state lives in the engine's spill buffer; sampler state lives here.
+    swapped: VecDeque<Running>,
     done: Vec<Response>,
     metrics: Arc<Metrics>,
 }
@@ -113,6 +124,7 @@ impl<E: Engine> Scheduler<E> {
             cfg,
             queue: VecDeque::new(),
             running: Vec::new(),
+            swapped: VecDeque::new(),
             done: Vec::new(),
             metrics,
         }
@@ -134,20 +146,27 @@ impl<E: Engine> Scheduler<E> {
         self.running.len()
     }
 
+    pub fn n_swapped(&self) -> usize {
+        self.swapped.len()
+    }
+
     /// Drain finished responses accumulated so far.
     pub fn take_done(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.done)
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.running.is_empty()
+        self.queue.is_empty() && self.running.is_empty() && self.swapped.is_empty()
     }
 
-    /// One engine step (admit + decode). Returns the number of sequences
-    /// that made progress.
+    /// One engine step (resume + admit + decode). Returns the number of
+    /// sequences that made progress.
     pub fn step(&mut self) -> usize {
+        self.resume_swapped();
         self.admit();
-        self.decode()
+        let n = self.decode();
+        self.sync_cache_metrics();
+        n
     }
 
     /// Run until every submitted request has finished.
@@ -158,7 +177,78 @@ impl<E: Engine> Scheduler<E> {
         self.take_done()
     }
 
+    /// Swap preempted sequences back in, oldest first. The headroom demand
+    /// (one spare block per running sequence plus one) guarantees the next
+    /// decode step cannot immediately re-preempt what we just resumed —
+    /// without it, a resume → decode-fail → swap-out cycle could livelock.
+    fn resume_swapped(&mut self) {
+        let mut resumed_any = false;
+        while self.running.len() < self.cfg.max_running.min(self.engine.max_batch()) {
+            let Some(front) = self.swapped.front() else { break };
+            let headroom = if self.running.is_empty() && self.swapped.len() == 1 {
+                0 // a lone sequence cannot ping-pong with anyone
+            } else {
+                self.running.len() + 1
+            };
+            if !self.engine.can_swap_in(front.seq, headroom) {
+                break;
+            }
+            let r = self.swapped.pop_front().unwrap();
+            match self.engine.swap_in(r.seq) {
+                Ok(()) => {
+                    self.running.push(r);
+                    resumed_any = true;
+                }
+                Err(_) => {
+                    // can_swap_in raced nothing (single-threaded) — treat as
+                    // unsupported and fall back to recompute
+                    self.engine.release(r.seq);
+                    Metrics::inc(&self.metrics.preemptions);
+                    self.queue.push_front(r.req);
+                }
+            }
+        }
+        // Terminal safety valve: nothing is running, nothing resumed, and
+        // admission is gated on the swapped queue — force the front
+        // sequence back in, or truncate it if even an empty pool cannot
+        // hold it (it could never finish anyway).
+        if !resumed_any && self.running.is_empty() && !self.swapped.is_empty() {
+            let r = self.swapped.pop_front().unwrap();
+            match self.engine.swap_in(r.seq) {
+                Ok(()) => self.running.push(r),
+                Err(_) => self.truncate(r),
+            }
+        }
+    }
+
+    /// Finish a sequence early with whatever it generated: the KV pool
+    /// cannot hold it to completion (documented policy, DESIGN.md
+    /// §KV-lifecycle).
+    fn truncate(&mut self, r: Running) {
+        crate::log_error!(
+            "KV pool too small for request {}: truncating at {} generated tokens",
+            r.req.id,
+            r.generated.len()
+        );
+        self.engine.release(r.seq);
+        Metrics::inc(&self.metrics.requests_completed);
+        let latency = r.admitted_at.elapsed();
+        self.metrics.e2e.record(latency);
+        self.done.push(Response {
+            id: r.req.id,
+            tokens: r.generated,
+            finish: FinishReason::Length,
+            ttft: r.first_token_at - r.admitted_at,
+            latency,
+        });
+    }
+
     fn admit(&mut self) {
+        // Swapped sequences are older than anything queued and their blocks
+        // come from the same pool — don't admit past them (starvation gate).
+        if !self.swapped.is_empty() {
+            return;
+        }
         let mut admitted = 0;
         while admitted < self.cfg.admits_per_step
             && self.running.len() < self.cfg.max_running.min(self.engine.max_batch())
@@ -180,17 +270,21 @@ impl<E: Engine> Scheduler<E> {
                 });
                 continue;
             }
-            if !self.engine.can_admit(req.prompt.len()) {
+            if !self.engine.can_admit_tokens(&req.prompt) {
                 break; // wait for capacity
             }
             let req = self.queue.pop_front().unwrap();
             let t0 = Instant::now();
-            match self.engine.prefill(&req.prompt) {
-                Ok((seq, logits)) => {
+            match self.engine.prefill_shared(&req.prompt) {
+                Ok((seq, logits, reused)) => {
                     let mut rng = Xoshiro256::seed_from_u64(req.seed);
                     let first = sample(&logits, &req.sampler, &mut rng);
                     Metrics::inc(&self.metrics.requests_admitted);
-                    Metrics::add(&self.metrics.tokens_prefilled, req.prompt.len() as u64);
+                    // only positions actually computed count as prefilled
+                    Metrics::add(
+                        &self.metrics.tokens_prefilled,
+                        (req.prompt.len() - reused) as u64,
+                    );
                     let now = Instant::now();
                     self.metrics.ttft.record(now - t0);
                     self.running.push(Running {
@@ -239,20 +333,17 @@ impl<E: Engine> Scheduler<E> {
         let logits = match self.engine.decode_batch(&inputs) {
             Ok(l) => l,
             Err(EngineError::CapacityExhausted(_)) => {
-                // Preempt the youngest (recompute policy) and retry next step.
-                if let Some(victim) = self.running.pop() {
-                    self.engine.release(victim.seq);
-                    Metrics::inc(&self.metrics.preemptions);
-                    // The generated tokens are re-derivable (deterministic
-                    // sampling), so recompute from the original prompt.
-                    self.queue.push_front(victim.req);
-                }
+                self.preempt_one();
                 return 0;
             }
             Err(e) => {
                 // Fail every running request rather than wedging the loop.
                 crate::log_error!("decode_batch failed: {e}");
-                for r in self.running.drain(..) {
+                for r in self
+                    .running
+                    .drain(..)
+                    .chain(std::mem::take(&mut self.swapped))
+                {
                     self.engine.release(r.seq);
                     self.done.push(Response {
                         id: r.req.id,
@@ -302,6 +393,76 @@ impl<E: Engine> Scheduler<E> {
             });
         }
         n
+    }
+
+    /// Evict the youngest running sequence after a capacity failure.
+    /// Swap-out first (resume is byte-identical and cheap); recompute as
+    /// the fallback; truncation when preemption cannot help.
+    fn preempt_one(&mut self) {
+        // First blame sequences that genuinely cannot advance: one at the
+        // model's max_seq_len fails the whole batch every step, and evicting
+        // recency-victims would stall everyone until it stood alone.
+        // (Admission validation makes this unreachable for well-formed
+        // requests; engines with other limits still get sane behavior.)
+        let max_len = self.engine.cfg().max_seq_len;
+        let mut i = 0;
+        let mut truncated_any = false;
+        while i < self.running.len() {
+            let r = &self.running[i];
+            if r.req.prompt.len() + r.generated.len() >= max_len {
+                let r = self.running.remove(i);
+                self.truncate(r);
+                truncated_any = true;
+            } else {
+                i += 1;
+            }
+        }
+        if truncated_any {
+            return; // retry the (smaller) batch next step
+        }
+        // A lone sequence failing on capacity holds the entire pool
+        // (everything else is already swapped out, evicted or reclaimable,
+        // or it would not have run out) — swapped or queued work cannot
+        // change that, and it can never finish; truncate it. Unconditional
+        // on the swapped queue: swapping the lone runner out and resuming
+        // another pool-sized sequence would ping-pong forever when the
+        // spill budget exceeds the pool.
+        if self.running.len() == 1 {
+            let r = self.running.pop().unwrap();
+            self.truncate(r);
+            return;
+        }
+        let Some(victim) = self.running.pop() else { return };
+        Metrics::inc(&self.metrics.preemptions);
+        match self.engine.swap_out(victim.seq) {
+            Ok(()) => self.swapped.push_back(victim),
+            Err(_) => {
+                // No swap support or spill budget exhausted: release and
+                // requeue — generated tokens are re-derivable (deterministic
+                // sampling), so recompute from the original prompt.
+                self.engine.release(victim.seq);
+                self.queue.push_front(victim.req);
+            }
+        }
+    }
+
+    /// Mirror the engine's cache occupancy/lifecycle counters into the
+    /// shared atomic metrics (served by `{"op":"metrics"}`).
+    fn sync_cache_metrics(&self) {
+        let Some(s) = self.engine.kv_snapshot() else { return };
+        let m = &self.metrics;
+        Metrics::set(&m.kv_prefix_hit_blocks, s.stats.prefix_hit_blocks);
+        Metrics::set(&m.kv_prefix_tokens_saved, s.stats.prefix_tokens_saved);
+        Metrics::set(&m.kv_cow_copies, s.stats.cow_copies);
+        Metrics::set(&m.kv_evictions, s.stats.evictions);
+        Metrics::set(&m.kv_swap_outs, s.stats.swap_outs);
+        Metrics::set(&m.kv_swap_ins, s.stats.swap_ins);
+        Metrics::set(&m.kv_swap_blocks_reused, s.stats.swap_blocks_reused);
+        Metrics::set(&m.kv_blocks_used, s.used_blocks as u64);
+        Metrics::set(&m.kv_blocks_free, s.free_blocks as u64);
+        Metrics::set(&m.kv_blocks_cached, s.cached_blocks as u64);
+        Metrics::set(&m.kv_swapped_seqs, s.swapped_seqs as u64);
+        Metrics::set(&m.kv_swapped_blocks, s.swapped_blocks as u64);
     }
 }
 
@@ -415,6 +576,168 @@ mod tests {
         let done = s.run_to_completion();
         assert_eq!(done.len(), 6);
         assert!(done.iter().all(|r| r.tokens.len() == 4));
+    }
+
+    /// Swap-style preemption under a deliberately tiny pool: every request
+    /// must finish with tokens byte-identical to an unpressured run, and
+    /// swaps must actually have happened.
+    #[test]
+    fn swap_preemption_is_deterministic() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 66);
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|i| (0..6).map(|j| ((i * 50 + j * 7 + 1) % 250) as u32).collect())
+            .collect();
+        let run = |budget: usize| -> Vec<Vec<u32>> {
+            let mut s = Scheduler::new(
+                CpuEngine::new(w.clone(), 4, budget),
+                SchedulerCfg {
+                    max_running: 8,
+                    admits_per_step: 8,
+                },
+                Arc::new(Metrics::new()),
+            );
+            for (i, p) in prompts.iter().enumerate() {
+                s.submit(Request::greedy(i as u64, p.clone(), 8));
+            }
+            let mut done = s.run_to_completion();
+            done.sort_by_key(|r| r.id);
+            done.into_iter().map(|r| r.tokens).collect()
+        };
+        // 6 blocks of 4 tokens: 3 seqs × ceil(14/4)=4 blocks don't fit
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
+        let tight = run(6 * bytes_per_block);
+        let roomy = run(8 << 20);
+        assert_eq!(tight, roomy, "preemption changed generated tokens");
+        assert!(tight.iter().all(|t| t.len() == 8));
+
+        // confirm the tight run actually swapped (not just recomputed)
+        let metrics = Arc::new(Metrics::new());
+        let mut s = Scheduler::new(
+            CpuEngine::new(w.clone(), 4, 6 * bytes_per_block),
+            SchedulerCfg {
+                max_running: 8,
+                admits_per_step: 8,
+            },
+            Arc::clone(&metrics),
+        );
+        for (i, p) in prompts.iter().enumerate() {
+            s.submit(Request::greedy(i as u64, p.clone(), 8));
+        }
+        s.run_to_completion();
+        use std::sync::atomic::Ordering;
+        assert!(
+            metrics.kv_swap_outs.load(Ordering::Relaxed) > 0,
+            "tiny pool never triggered a swap"
+        );
+        assert_eq!(
+            metrics.kv_swap_outs.load(Ordering::Relaxed),
+            metrics.kv_swap_ins.load(Ordering::Relaxed),
+            "every swapped sequence resumed"
+        );
+    }
+
+    /// Prefix sharing on vs off must not change any generated token, and
+    /// the shared run must report saved prefill work.
+    #[test]
+    fn prefix_sharing_preserves_outputs() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 67);
+        let system_prompt: Vec<u32> = (0..20).map(|i| ((i * 11 + 2) % 250) as u32).collect();
+        let prompts: Vec<Vec<u32>> = (0..6)
+            .map(|i| {
+                let mut p = system_prompt.clone();
+                p.push((i * 3 + 1) as u32);
+                p
+            })
+            .collect();
+        let run = |sharing: bool| -> (Vec<Vec<u32>>, u64, u64) {
+            let metrics = Arc::new(Metrics::new());
+            let eng = CpuEngine::with_cache_opts(
+                w.clone(),
+                8,
+                8 << 20,
+                crate::kvcache::CacheOpts {
+                    prefix_sharing: sharing,
+                    ..Default::default()
+                },
+            );
+            let mut s = Scheduler::new(eng, SchedulerCfg::default(), Arc::clone(&metrics));
+            for (i, p) in prompts.iter().enumerate() {
+                s.submit(Request::greedy(i as u64, p.clone(), 5));
+            }
+            let mut done = s.run_to_completion();
+            done.sort_by_key(|r| r.id);
+            use std::sync::atomic::Ordering;
+            (
+                done.into_iter().map(|r| r.tokens).collect(),
+                metrics.tokens_prefilled.load(Ordering::Relaxed),
+                metrics.kv_prefix_tokens_saved.load(Ordering::Relaxed),
+            )
+        };
+        let (tok_on, prefilled_on, saved_on) = run(true);
+        let (tok_off, prefilled_off, saved_off) = run(false);
+        assert_eq!(tok_on, tok_off, "prefix sharing changed outputs");
+        assert_eq!(saved_off, 0);
+        assert!(saved_on > 0, "no prefill work was saved");
+        assert_eq!(
+            prefilled_on + saved_on,
+            prefilled_off,
+            "saved + computed must cover every prompt token"
+        );
+    }
+
+    #[test]
+    fn pool_smaller_than_request_truncates_instead_of_hanging() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 68);
+        // exactly 2 blocks of 4 → capacity 8 positions; request wants 3+10
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 4, 2 * bytes_per_block),
+            SchedulerCfg::default(),
+            Arc::new(Metrics::new()),
+        );
+        s.submit(Request::greedy(1, vec![1, 2, 3], 10));
+        let done = s.run_to_completion();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert!(
+            !done[0].tokens.is_empty() && done[0].tokens.len() < 10,
+            "expected a truncated stream, got {} tokens",
+            done[0].tokens.len()
+        );
+    }
+
+    /// Regression: two pool-sized sequences plus a spill budget larger than
+    /// the pool used to ping-pong forever through the forced-resume valve
+    /// (resume → instant capacity failure → swap out → resume the other).
+    /// Both must terminate as truncated responses instead.
+    #[test]
+    fn oversized_swap_budget_cannot_livelock() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 69);
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
+        let eng = CpuEngine::with_cache_opts(
+            w,
+            4,
+            2 * bytes_per_block, // 2-block pool: 8 positions
+            crate::kvcache::CacheOpts {
+                prefix_sharing: true,
+                swap_budget_blocks: Some(100), // far beyond the pool
+            },
+        );
+        let mut s = Scheduler::new(eng, SchedulerCfg::default(), Arc::new(Metrics::new()));
+        // each wants 13 positions — more than the whole pool
+        s.submit(Request::greedy(1, vec![1, 2, 3], 10));
+        s.submit(Request::greedy(2, vec![4, 5, 6], 10));
+        let mut done = s.run_to_completion(); // must terminate
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 2);
+        for r in &done {
+            assert_eq!(r.finish, FinishReason::Length);
+            assert!(!r.tokens.is_empty() && r.tokens.len() < 10, "req {}", r.id);
+        }
     }
 
     #[test]

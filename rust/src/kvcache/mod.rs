@@ -1,4 +1,4 @@
-//! Paged KV-cache manager (vLLM-style block allocator).
+//! Paged KV-cache **block lifecycle manager** (vLLM-style).
 //!
 //! The coordinator admits and schedules sequences against this pool: cache
 //! memory is carved into fixed-size blocks of `block_tokens` positions;
@@ -7,13 +7,32 @@
 //! table uses — so Mistral-like models hold 4× more sequences than MHA at
 //! equal memory, independent of the Q/P merge.
 //!
+//! Beyond plain paging, blocks are **refcounted** and move through a full
+//! lifecycle (DESIGN.md §KV-lifecycle):
+//!
+//! * **Prefix sharing** — full prompt blocks are registered in a
+//!   chain-hash index; [`KvCache::alloc_seq_shared`] lets a request whose
+//!   prompt starts with an already-cached prefix borrow those blocks
+//!   instead of recomputing them (vLLM-style automatic prefix caching).
+//! * **Copy-on-write** — [`KvCache::fork_seq`] clones a sequence in O(1)
+//!   by bumping refcounts; the first [`KvCache::append`] into a block that
+//!   is shared (`refcount > 1`) copies it first.
+//! * **Cached-free pool** — when a registered block's refcount drops to
+//!   zero it stays in the prefix index as *reclaimable*: future prompts can
+//!   still share it, and the allocator evicts it (oldest first) only when
+//!   the truly-free list runs dry.
+//! * **Swap** — [`KvCache::swap_out`] spills a preempted sequence's blocks
+//!   to a bounded host-side buffer and frees them; [`KvCache::swap_in`]
+//!   restores the sequence byte-identically (re-borrowing still-indexed
+//!   prefix blocks instead of copying where possible).
+//!
 //! The decode engine writes rotated keys / raw values through
 //! [`KvCache::append`] and reads per-sequence contiguous views via
 //! [`KvCache::gather`] (block-table indirection hidden from the attention
 //! kernel).
 
 use crate::config::ModelConfig;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::fmt;
 
 /// Sequence handle.
@@ -27,6 +46,8 @@ pub enum CacheError {
     UnknownSeq(SeqId),
     /// Sequence grew past the model's max_seq_len.
     SeqTooLong { len: usize, max: usize },
+    /// Swapping this sequence out would exceed the spill-buffer bound.
+    SwapBudgetExceeded { seq_blocks: usize, in_use: usize, limit: usize },
 }
 
 impl fmt::Display for CacheError {
@@ -39,20 +60,126 @@ impl fmt::Display for CacheError {
             CacheError::SeqTooLong { len, max } => {
                 write!(f, "sequence length {len} exceeds max_seq_len {max}")
             }
+            CacheError::SwapBudgetExceeded { seq_blocks, in_use, limit } => write!(
+                f,
+                "swap budget exhausted: sequence needs {seq_blocks} spill blocks, {in_use}/{limit} in use"
+            ),
         }
     }
 }
 
 impl std::error::Error for CacheError {}
 
+/// Lifecycle tunables (see DESIGN.md §KV-lifecycle).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheOpts {
+    /// Register full prompt blocks in the prefix index and let new prompts
+    /// borrow matching prefixes ([`KvCache::alloc_seq_shared`]).
+    pub prefix_sharing: bool,
+    /// Upper bound on blocks' worth of swapped-out data held in the spill
+    /// buffer at once. `None` → one pool's worth (`n_blocks`).
+    pub swap_budget_blocks: Option<usize>,
+}
+
+impl Default for CacheOpts {
+    fn default() -> Self {
+        Self {
+            prefix_sharing: true,
+            swap_budget_blocks: None,
+        }
+    }
+}
+
+/// Cumulative lifecycle counters (plain integers — the cache lives behind
+/// `&mut` on the engine thread; the scheduler mirrors these into the atomic
+/// [`crate::metrics::Metrics`] each step).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// `alloc_seq_shared` calls that probed the prefix index.
+    pub prefix_probes: u64,
+    /// Blocks borrowed from the prefix index at admission.
+    pub prefix_hit_blocks: u64,
+    /// Prompt positions whose prefill compute was skipped via sharing.
+    pub prefix_tokens_saved: u64,
+    /// Full prompt blocks registered in the prefix index.
+    pub blocks_registered: u64,
+    /// Copy-on-write block copies triggered by appends into shared blocks.
+    pub cow_copies: u64,
+    /// Reclaimable cached blocks evicted to satisfy allocations.
+    pub evictions: u64,
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    /// Blocks spilled across all swap-outs.
+    pub swap_blocks_out: u64,
+    /// Blocks re-borrowed from the prefix index at swap-in (not restored).
+    pub swap_blocks_reused: u64,
+}
+
+/// Point-in-time view of pool occupancy plus the cumulative [`CacheStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheSnapshot {
+    pub n_blocks: usize,
+    /// Blocks referenced by at least one live sequence.
+    pub used_blocks: usize,
+    /// Truly free blocks (no data).
+    pub free_blocks: usize,
+    /// Reclaimable blocks still holding indexed prefix data.
+    pub cached_blocks: usize,
+    pub swapped_seqs: usize,
+    pub swapped_blocks: usize,
+    pub stats: CacheStats,
+}
+
+#[derive(Clone, Copy, Default)]
+struct BlockMeta {
+    refcount: u32,
+    /// Chain hash this block is registered under in the prefix index
+    /// (`Some` iff `prefix_index[hash] == this block`).
+    hash: Option<u64>,
+    /// Physically present in the `cached_free` deque (entries can go stale
+    /// when a cached block is re-borrowed; stale entries are skipped on pop).
+    in_cached_free: bool,
+}
+
 struct SeqState {
     /// Physical block ids, one per `block_tokens` positions (layers stride
     /// inside the block).
     blocks: Vec<usize>,
     len: usize,
+    /// Chain hashes of this sequence's *full prompt* blocks, kept for
+    /// re-probing the prefix index at swap-in.
+    prompt_hashes: Vec<u64>,
+}
+
+struct SwappedSeq {
+    /// Full block contents, in block-table order.
+    data: Vec<f32>,
+    len: usize,
+    n_blocks: usize,
+    prompt_hashes: Vec<u64>,
 }
 
 /// The paged pool. One instance serves all layers of one model.
+///
+/// ```
+/// use skipless::config::ModelConfig;
+/// use skipless::kvcache::KvCache;
+///
+/// let cfg = ModelConfig::tiny_gqa();
+/// let mut cache = KvCache::new(&cfg, 4, 64 * 1024);
+/// let id = cache.alloc_seq(3).unwrap();
+/// let e = cfg.e();
+/// // one position = one (k, v) pair per layer, then `advance`
+/// for layer in 0..cfg.n_layers {
+///     cache.append(id, layer, &vec![1.0; e], &vec![2.0; e]).unwrap();
+/// }
+/// cache.advance(id).unwrap();
+/// assert_eq!(cache.seq_len(id), Some(1));
+/// let (mut k, mut v) = (Vec::new(), Vec::new());
+/// assert_eq!(cache.gather(id, 0, &mut k, &mut v).unwrap(), 1);
+/// assert_eq!(k[0], 1.0);
+/// cache.free_seq(id).unwrap();
+/// ```
 pub struct KvCache {
     /// floats per (position, layer): 2·e (K and V).
     floats_per_pos_layer: usize,
@@ -62,14 +189,30 @@ pub struct KvCache {
     max_seq_len: usize,
     /// backing store: `n_blocks × block_tokens × n_layers × 2e` floats.
     data: Vec<f32>,
+    blocks: Vec<BlockMeta>,
+    /// Truly free blocks (no hash, refcount 0).
     free: Vec<usize>,
+    /// Reclaimable blocks: refcount 0 but still registered in the prefix
+    /// index. FIFO ≈ oldest-freed-first eviction.
+    cached_free: VecDeque<usize>,
+    /// Accurate count of reclaimable blocks (the deque can hold stale
+    /// entries for re-borrowed blocks).
+    cached_free_count: usize,
+    /// chain-hash of a full prompt block → physical block holding it.
+    prefix_index: HashMap<u64, usize>,
+    prefix_sharing: bool,
     seqs: BTreeMap<SeqId, SeqState>,
+    swapped: BTreeMap<SeqId, SwappedSeq>,
+    swap_budget_blocks: usize,
+    swapped_blocks: usize,
     next_id: u64,
     /// high-water mark of allocated blocks (for metrics).
     peak_used: usize,
+    stats: CacheStats,
 }
 
-/// Configuration-derived sizing report (used by benches and DESIGN.md).
+/// Configuration-derived sizing report (used by benches and DESIGN.md
+/// §Paging).
 #[derive(Clone, Copy, Debug)]
 pub struct CacheSizing {
     pub bytes_per_token: usize,
@@ -77,9 +220,40 @@ pub struct CacheSizing {
     pub n_blocks: usize,
 }
 
+/// FNV-1a chained over the previous block's hash and this block's tokens —
+/// the identity of "this exact prompt prefix", position-dependent through
+/// the chaining.
+fn chain_hash(prev: u64, tokens: &[u32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &byte in prev.to_le_bytes().iter() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    for &t in tokens {
+        for &byte in t.to_le_bytes().iter() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
 impl KvCache {
-    /// Build a pool with a total budget of `budget_bytes`.
+    /// Build a pool with a total budget of `budget_bytes` and default
+    /// lifecycle options (prefix sharing on, spill bounded by pool size).
     pub fn new(cfg: &ModelConfig, block_tokens: usize, budget_bytes: usize) -> Self {
+        Self::with_opts(cfg, block_tokens, budget_bytes, CacheOpts::default())
+    }
+
+    /// Build a pool with explicit [`CacheOpts`].
+    pub fn with_opts(
+        cfg: &ModelConfig,
+        block_tokens: usize,
+        budget_bytes: usize,
+        opts: CacheOpts,
+    ) -> Self {
         assert!(block_tokens > 0);
         let e = cfg.e();
         let floats_per_pos_layer = 2 * e;
@@ -94,10 +268,19 @@ impl KvCache {
             n_blocks,
             max_seq_len: cfg.max_seq_len,
             data: vec![0.0; total_floats],
+            blocks: vec![BlockMeta::default(); n_blocks],
             free: (0..n_blocks).rev().collect(),
+            cached_free: VecDeque::new(),
+            cached_free_count: 0,
+            prefix_index: HashMap::new(),
+            prefix_sharing: opts.prefix_sharing,
             seqs: BTreeMap::new(),
+            swapped: BTreeMap::new(),
+            swap_budget_blocks: opts.swap_budget_blocks.unwrap_or(n_blocks),
+            swapped_blocks: 0,
             next_id: 0,
             peak_used: 0,
+            stats: CacheStats::default(),
         }
     }
 
@@ -109,12 +292,18 @@ impl KvCache {
         }
     }
 
-    pub fn free_blocks(&self) -> usize {
-        self.free.len()
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
     }
 
+    /// Blocks available to allocations: truly free plus reclaimable cached.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len() + self.cached_free_count
+    }
+
+    /// Blocks referenced by at least one live sequence.
     pub fn used_blocks(&self) -> usize {
-        self.n_blocks - self.free.len()
+        self.n_blocks - self.free_blocks()
     }
 
     pub fn peak_used_blocks(&self) -> usize {
@@ -125,8 +314,35 @@ impl KvCache {
         self.seqs.len()
     }
 
+    pub fn n_swapped(&self) -> usize {
+        self.swapped.len()
+    }
+
+    pub fn is_swapped(&self, id: SeqId) -> bool {
+        self.swapped.contains_key(&id)
+    }
+
     pub fn seq_len(&self, id: SeqId) -> Option<usize> {
-        self.seqs.get(&id).map(|s| s.len)
+        self.seqs
+            .get(&id)
+            .map(|s| s.len)
+            .or_else(|| self.swapped.get(&id).map(|s| s.len))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            n_blocks: self.n_blocks,
+            used_blocks: self.used_blocks(),
+            free_blocks: self.free.len(),
+            cached_blocks: self.cached_free_count,
+            swapped_seqs: self.swapped.len(),
+            swapped_blocks: self.swapped_blocks,
+            stats: self.stats,
+        }
     }
 
     /// Blocks needed to hold `len` positions.
@@ -134,13 +350,173 @@ impl KvCache {
         len.div_ceil(self.block_tokens)
     }
 
-    /// Can a new sequence of `prompt_len` be admitted right now?
+    fn block_floats(&self) -> usize {
+        self.block_tokens * self.n_layers * self.floats_per_pos_layer
+    }
+
+    /// Can a new sequence of `prompt_len` be admitted right now (ignoring
+    /// any prefix sharing)?
     pub fn can_admit(&self, prompt_len: usize) -> bool {
-        self.blocks_for(prompt_len.max(1)) <= self.free.len()
+        self.blocks_for(prompt_len.max(1)) <= self.free_blocks()
+    }
+
+    /// Like [`KvCache::can_admit`], but credits blocks the prompt would
+    /// borrow from the prefix index.
+    pub fn can_admit_tokens(&self, tokens: &[u32]) -> bool {
+        let needed = self.blocks_for(tokens.len().max(1));
+        let (hits, hits_reclaimable) = self.probe_counts(tokens);
+        // fresh blocks come out of the pool; reclaimable hits stop being
+        // "free" once borrowed, so they consume availability too
+        needed - hits + hits_reclaimable <= self.free_blocks()
+    }
+
+    /// Chain hashes of every full block of `tokens`.
+    fn full_block_hashes(&self, tokens: &[u32]) -> Vec<u64> {
+        let bt = self.block_tokens;
+        let n_full = tokens.len() / bt;
+        let mut hashes = Vec::with_capacity(n_full);
+        let mut prev = 0u64;
+        for i in 0..n_full {
+            prev = chain_hash(prev, &tokens[i * bt..(i + 1) * bt]);
+            hashes.push(prev);
+        }
+        hashes
+    }
+
+    /// Longest run of prefix-index hits for this prompt, capped so at least
+    /// one prompt position is always recomputed (the engine needs logits of
+    /// the last prompt position, which only prefill compute produces).
+    fn probe(&self, tokens: &[u32]) -> Vec<usize> {
+        if !self.prefix_sharing || tokens.is_empty() {
+            return Vec::new();
+        }
+        let cap = (tokens.len() - 1) / self.block_tokens;
+        let mut shared = Vec::new();
+        for h in self.full_block_hashes(tokens).iter().take(cap) {
+            match self.prefix_index.get(h) {
+                Some(&b) => shared.push(b),
+                None => break,
+            }
+        }
+        shared
+    }
+
+    /// (index hits, hits that currently sit in the reclaimable pool).
+    fn probe_counts(&self, tokens: &[u32]) -> (usize, usize) {
+        let shared = self.probe(tokens);
+        let reclaimable = shared.iter().filter(|&&b| self.blocks[b].refcount == 0).count();
+        (shared.len(), reclaimable)
+    }
+
+    /// Borrow a block: bump its refcount, removing it from the reclaimable
+    /// pool if it was free.
+    fn ref_block(&mut self, b: usize) {
+        let m = &mut self.blocks[b];
+        if m.refcount == 0 {
+            debug_assert!(m.hash.is_some(), "refcount-0 block outside cached pool");
+            self.cached_free_count -= 1;
+            // its deque entry goes stale; pop skips entries with refcount > 0
+        }
+        m.refcount += 1;
+    }
+
+    /// Return a reference: on refcount 0 the block becomes truly free, or
+    /// reclaimable if it is still registered in the prefix index.
+    fn unref_block(&mut self, b: usize) {
+        let m = &mut self.blocks[b];
+        debug_assert!(m.refcount > 0, "double free of block {b}");
+        m.refcount -= 1;
+        if m.refcount == 0 {
+            if m.hash.is_some() {
+                self.cached_free_count += 1;
+                if !m.in_cached_free {
+                    m.in_cached_free = true;
+                    self.cached_free.push_back(b);
+                }
+            } else {
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Pop a block for writing: truly-free first, else evict the oldest
+    /// reclaimable cached block (removing it from the prefix index).
+    fn pop_free_block(&mut self) -> Option<usize> {
+        if let Some(b) = self.free.pop() {
+            debug_assert_eq!(self.blocks[b].refcount, 0);
+            return Some(b);
+        }
+        while let Some(b) = self.cached_free.pop_front() {
+            self.blocks[b].in_cached_free = false;
+            if self.blocks[b].refcount > 0 {
+                continue; // stale entry: re-borrowed since being freed
+            }
+            if let Some(h) = self.blocks[b].hash.take() {
+                self.prefix_index.remove(&h);
+            }
+            self.cached_free_count -= 1;
+            self.stats.evictions += 1;
+            return Some(b);
+        }
+        None
+    }
+
+    /// Take `n` fresh blocks with refcount 1, or fail without side effects.
+    fn take_blocks(&mut self, n: usize) -> Result<Vec<usize>, CacheError> {
+        if n > self.free_blocks() {
+            return Err(CacheError::OutOfBlocks {
+                needed: n,
+                free: self.free_blocks(),
+            });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.pop_free_block().expect("free_blocks() said enough");
+            self.blocks[b].refcount = 1;
+            out.push(b);
+        }
+        Ok(out)
+    }
+
+    /// Register `seq`'s full prompt blocks in the prefix index (first
+    /// writer wins; duplicates are skipped).
+    fn register_prompt_blocks(&mut self, blocks: &[usize], hashes: &[u64]) {
+        if !self.prefix_sharing {
+            return;
+        }
+        for (i, &h) in hashes.iter().enumerate() {
+            if let std::collections::hash_map::Entry::Vacant(e) = self.prefix_index.entry(h) {
+                e.insert(blocks[i]);
+                debug_assert!(self.blocks[blocks[i]].hash.is_none());
+                self.blocks[blocks[i]].hash = Some(h);
+                self.stats.blocks_registered += 1;
+            }
+        }
     }
 
     /// Register a new sequence and reserve blocks for its prompt.
     pub fn alloc_seq(&mut self, prompt_len: usize) -> Result<SeqId, CacheError> {
+        self.alloc_inner(prompt_len, None).map(|(id, _)| id)
+    }
+
+    /// Register a new sequence for `tokens`, borrowing any full prompt
+    /// blocks already present in the prefix index. Returns the sequence id
+    /// and the number of leading positions whose K/V is already filled —
+    /// the engine's prefill only needs to compute positions from there on.
+    ///
+    /// The caller **must** fill the remaining prompt positions immediately
+    /// (the fresh full blocks are registered in the index for future
+    /// sharers; the single-threaded admit → prefill flow guarantees nobody
+    /// observes them unfilled).
+    pub fn alloc_seq_shared(&mut self, tokens: &[u32]) -> Result<(SeqId, usize), CacheError> {
+        self.alloc_inner(tokens.len(), Some(tokens))
+    }
+
+    fn alloc_inner(
+        &mut self,
+        prompt_len: usize,
+        tokens: Option<&[u32]>,
+    ) -> Result<(SeqId, usize), CacheError> {
         if prompt_len > self.max_seq_len {
             return Err(CacheError::SeqTooLong {
                 len: prompt_len,
@@ -148,25 +524,204 @@ impl KvCache {
             });
         }
         let needed = self.blocks_for(prompt_len.max(1));
-        if needed > self.free.len() {
-            return Err(CacheError::OutOfBlocks {
-                needed,
-                free: self.free.len(),
-            });
+        let (shared, hashes) = match tokens {
+            Some(t) if self.prefix_sharing => {
+                self.stats.prefix_probes += 1;
+                (self.probe(t), self.full_block_hashes(t))
+            }
+            Some(t) => (Vec::new(), self.full_block_hashes(t)),
+            None => (Vec::new(), Vec::new()),
+        };
+        // claim shared blocks first so taking fresh ones cannot evict them
+        for &b in &shared {
+            self.ref_block(b);
         }
-        let blocks: Vec<usize> = (0..needed).map(|_| self.free.pop().unwrap()).collect();
+        let fresh = match self.take_blocks(needed - shared.len()) {
+            Ok(f) => f,
+            Err(e) => {
+                for &b in &shared {
+                    self.unref_block(b);
+                }
+                return Err(e);
+            }
+        };
+        let shared_tokens = shared.len() * self.block_tokens;
+        self.stats.prefix_hit_blocks += shared.len() as u64;
+        self.stats.prefix_tokens_saved += shared_tokens as u64;
+        let mut blocks = shared;
+        blocks.extend(fresh);
+        if tokens.is_some() && self.prefix_sharing {
+            self.register_prompt_blocks(&blocks, &hashes);
+        }
         let id = SeqId(self.next_id);
         self.next_id += 1;
-        self.seqs.insert(id, SeqState { blocks, len: 0 });
+        self.seqs.insert(
+            id,
+            SeqState {
+                blocks,
+                len: shared_tokens,
+                prompt_hashes: hashes,
+            },
+        );
         self.peak_used = self.peak_used.max(self.used_blocks());
-        Ok(id)
+        Ok((id, shared_tokens))
     }
 
-    /// Release a sequence's blocks back to the pool.
+    /// O(1) clone of a live sequence: the fork shares every block
+    /// (refcounts bumped); divergence is handled by copy-on-write in
+    /// [`KvCache::append`]. Basis for parallel sampling / beam search.
+    pub fn fork_seq(&mut self, id: SeqId) -> Result<SeqId, CacheError> {
+        let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let blocks = st.blocks.clone();
+        let len = st.len;
+        let prompt_hashes = st.prompt_hashes.clone();
+        for &b in &blocks {
+            self.ref_block(b);
+        }
+        let nid = SeqId(self.next_id);
+        self.next_id += 1;
+        self.seqs.insert(
+            nid,
+            SeqState {
+                blocks,
+                len,
+                prompt_hashes,
+            },
+        );
+        Ok(nid)
+    }
+
+    /// Release a sequence's blocks (or spill buffer) back to the pool.
     pub fn free_seq(&mut self, id: SeqId) -> Result<(), CacheError> {
-        let st = self.seqs.remove(&id).ok_or(CacheError::UnknownSeq(id))?;
-        self.free.extend(st.blocks);
-        Ok(())
+        if let Some(st) = self.seqs.remove(&id) {
+            for b in st.blocks {
+                self.unref_block(b);
+            }
+            return Ok(());
+        }
+        if let Some(sw) = self.swapped.remove(&id) {
+            self.swapped_blocks -= sw.n_blocks;
+            return Ok(());
+        }
+        Err(CacheError::UnknownSeq(id))
+    }
+
+    /// Spill a live sequence's blocks to the bounded host buffer and free
+    /// them. Returns the number of blocks spilled. The sequence keeps its
+    /// id and can be restored byte-identically with [`KvCache::swap_in`].
+    pub fn swap_out(&mut self, id: SeqId) -> Result<usize, CacheError> {
+        let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let n = st.blocks.len();
+        if self.swapped_blocks + n > self.swap_budget_blocks {
+            return Err(CacheError::SwapBudgetExceeded {
+                seq_blocks: n,
+                in_use: self.swapped_blocks,
+                limit: self.swap_budget_blocks,
+            });
+        }
+        let bf = self.block_floats();
+        let mut data = Vec::with_capacity(n * bf);
+        for &b in &st.blocks {
+            data.extend_from_slice(&self.data[b * bf..(b + 1) * bf]);
+        }
+        let st = self.seqs.remove(&id).unwrap();
+        for &b in &st.blocks {
+            self.unref_block(b);
+        }
+        self.swapped.insert(
+            id,
+            SwappedSeq {
+                data,
+                len: st.len,
+                n_blocks: n,
+                prompt_hashes: st.prompt_hashes,
+            },
+        );
+        self.swapped_blocks += n;
+        self.stats.swap_outs += 1;
+        self.stats.swap_blocks_out += n as u64;
+        Ok(n)
+    }
+
+    /// Would [`KvCache::swap_in`] succeed right now, with `headroom_blocks`
+    /// blocks left over? The scheduler passes headroom to avoid resuming a
+    /// sequence straight into the same pressure that evicted it.
+    pub fn can_swap_in(&self, id: SeqId, headroom_blocks: usize) -> bool {
+        let Some(sw) = self.swapped.get(&id) else {
+            return false;
+        };
+        let (mut hits, mut hits_reclaimable) = (0usize, 0usize);
+        if self.prefix_sharing {
+            for h in &sw.prompt_hashes {
+                match self.prefix_index.get(h) {
+                    Some(&b) => {
+                        hits += 1;
+                        if self.blocks[b].refcount == 0 {
+                            hits_reclaimable += 1;
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        let consumed = sw.n_blocks - hits + hits_reclaimable;
+        consumed + headroom_blocks <= self.free_blocks()
+    }
+
+    /// Restore a swapped-out sequence. Prefix blocks still present in the
+    /// index are re-borrowed; everything else is copied back from the spill
+    /// buffer, byte-identically. Returns the number of re-borrowed blocks.
+    pub fn swap_in(&mut self, id: SeqId) -> Result<usize, CacheError> {
+        let (n, shared) = {
+            let sw = self.swapped.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+            let mut shared = Vec::new();
+            if self.prefix_sharing {
+                for h in &sw.prompt_hashes {
+                    match self.prefix_index.get(h) {
+                        Some(&b) => shared.push(b),
+                        None => break,
+                    }
+                }
+            }
+            (sw.n_blocks, shared)
+        };
+        for &b in &shared {
+            self.ref_block(b);
+        }
+        let fresh = match self.take_blocks(n - shared.len()) {
+            Ok(f) => f,
+            Err(e) => {
+                for &b in &shared {
+                    self.unref_block(b);
+                }
+                return Err(e);
+            }
+        };
+        let sw = self.swapped.remove(&id).unwrap();
+        let reused = shared.len();
+        let mut blocks = shared;
+        blocks.extend(fresh);
+        let bf = self.block_floats();
+        for (i, &b) in blocks.iter().enumerate().skip(reused) {
+            self.data[b * bf..(b + 1) * bf].copy_from_slice(&sw.data[i * bf..(i + 1) * bf]);
+        }
+        // restored full prompt blocks may have been evicted from the index
+        // since swap-out — re-register them for future sharers
+        let hashes = sw.prompt_hashes.clone();
+        self.register_prompt_blocks(&blocks, &hashes);
+        self.swapped_blocks -= n;
+        self.stats.swap_ins += 1;
+        self.stats.swap_blocks_reused += reused as u64;
+        self.seqs.insert(
+            id,
+            SeqState {
+                blocks,
+                len: sw.len,
+                prompt_hashes: sw.prompt_hashes,
+            },
+        );
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(reused)
     }
 
     /// Offset of (block, pos_in_block, layer) in `data`, start of the K half.
@@ -177,6 +732,10 @@ impl KvCache {
 
     /// Append one position's K and V (each `e` floats) for `layer`.
     /// All layers of a position must be appended before [`KvCache::advance`].
+    ///
+    /// Writing into a block shared with another sequence (refcount > 1)
+    /// triggers a copy-on-write: the block is duplicated and this sequence's
+    /// block table is repointed before the write.
     pub fn append(
         &mut self,
         id: SeqId,
@@ -201,14 +760,30 @@ impl KvCache {
             (needs, st.len / self.block_tokens, st.len % self.block_tokens)
         };
         if needs_block {
-            let nb = self.free.pop().ok_or(CacheError::OutOfBlocks {
+            let nb = self.pop_free_block().ok_or(CacheError::OutOfBlocks {
                 needed: 1,
                 free: 0,
             })?;
+            self.blocks[nb].refcount = 1;
             self.seqs.get_mut(&id).unwrap().blocks.push(nb);
-            self.peak_used = self.peak_used.max(self.n_blocks - self.free.len());
+            self.peak_used = self.peak_used.max(self.used_blocks());
         }
-        let phys = self.seqs[&id].blocks[block];
+        let mut phys = self.seqs[&id].blocks[block];
+        if self.blocks[phys].refcount > 1 {
+            // copy-on-write: another sequence still reads this block
+            let nb = self.pop_free_block().ok_or(CacheError::OutOfBlocks {
+                needed: 1,
+                free: 0,
+            })?;
+            self.blocks[nb].refcount = 1;
+            let bf = self.block_floats();
+            self.data.copy_within(phys * bf..(phys + 1) * bf, nb * bf);
+            self.unref_block(phys);
+            self.seqs.get_mut(&id).unwrap().blocks[block] = nb;
+            self.stats.cow_copies += 1;
+            self.peak_used = self.peak_used.max(self.used_blocks());
+            phys = nb;
+        }
         let off = self.offset(phys, pib, layer);
         self.data[off..off + e].copy_from_slice(k);
         self.data[off + e..off + 2 * e].copy_from_slice(v);
@@ -259,6 +834,21 @@ mod tests {
         (cfg, c)
     }
 
+    /// Fill `n` positions of `id` with per-(pos,layer) recognizable values.
+    fn fill(c: &mut KvCache, cfg: &ModelConfig, id: SeqId, start: usize, n: usize, tag: f32) {
+        let e = cfg.e();
+        for pos in start..start + n {
+            for layer in 0..cfg.n_layers {
+                let k: Vec<f32> = (0..e)
+                    .map(|i| tag + (pos * 100 + layer * 10 + i) as f32)
+                    .collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.append(id, layer, &k, &v).unwrap();
+            }
+            c.advance(id).unwrap();
+        }
+    }
+
     #[test]
     fn sizing_math() {
         let (cfg, c) = cache(64);
@@ -284,14 +874,7 @@ mod tests {
         let (cfg, mut c) = cache(64);
         let e = cfg.e();
         let id = c.alloc_seq(3).unwrap();
-        for pos in 0..3 {
-            for layer in 0..cfg.n_layers {
-                let k: Vec<f32> = (0..e).map(|i| (pos * 100 + layer * 10 + i) as f32).collect();
-                let v: Vec<f32> = k.iter().map(|x| -x).collect();
-                c.append(id, layer, &k, &v).unwrap();
-            }
-            c.advance(id).unwrap();
-        }
+        fill(&mut c, &cfg, id, 0, 3, 0.0);
         let mut k = Vec::new();
         let mut v = Vec::new();
         let len = c.gather(id, 1, &mut k, &mut v).unwrap();
@@ -371,5 +954,230 @@ mod tests {
             assert_eq!(k[0], (si * 1000) as f32);
             assert_eq!(k[5 * e], (si * 1000 + 5) as f32);
         }
+    }
+
+    // ---- lifecycle: prefix sharing ------------------------------------
+
+    #[test]
+    fn prefix_sharing_reuses_full_prompt_blocks() {
+        let (cfg, mut c) = cache(64);
+        let prompt: Vec<u32> = (0..9).collect(); // 2 full blocks + 1 tail
+        let (a, reused_a) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused_a, 0, "cold cache has nothing to share");
+        assert_eq!(c.seq_len(a), Some(0));
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        let used_after_a = c.used_blocks();
+
+        let (b, reused_b) = c.alloc_seq_shared(&prompt).unwrap();
+        // cap: (9-1)/4 = 2 full blocks = 8 positions already filled
+        assert_eq!(reused_b, 8);
+        assert_eq!(c.seq_len(b), Some(8));
+        // only the tail block is new
+        assert_eq!(c.used_blocks(), used_after_a + 1);
+        // b only fills its last position, then reads the shared prefix back
+        fill(&mut c, &cfg, b, 8, 1, 0.0);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        c.gather(b, 1, &mut k, &mut v).unwrap();
+        let e = cfg.e();
+        assert_eq!(k[5 * e], 510.0, "shared prefix bytes visible to b");
+        assert_eq!(c.stats().prefix_hit_blocks, 2);
+        assert_eq!(c.stats().prefix_tokens_saved, 8);
+    }
+
+    #[test]
+    fn different_prompts_do_not_share() {
+        let (cfg, mut c) = cache(64);
+        let p1: Vec<u32> = (0..9).collect();
+        let p2: Vec<u32> = (100..109).collect();
+        let (a, _) = c.alloc_seq_shared(&p1).unwrap();
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        let (_, reused) = c.alloc_seq_shared(&p2).unwrap();
+        assert_eq!(reused, 0);
+        // same first block, diverging second block → share exactly 1 block
+        let mut p3 = p1.clone();
+        p3[6] = 77;
+        let (_, reused3) = c.alloc_seq_shared(&p3).unwrap();
+        assert_eq!(reused3, 4);
+    }
+
+    #[test]
+    fn freed_prefix_blocks_remain_shareable_until_evicted() {
+        let (cfg, mut c) = cache(64);
+        let total = c.free_blocks();
+        let prompt: Vec<u32> = (0..9).collect();
+        let (a, _) = c.alloc_seq_shared(&prompt).unwrap();
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        c.free_seq(a).unwrap();
+        // conservation: everything is reclaimable again
+        assert_eq!(c.free_blocks(), total);
+        // but the prefix is still warm
+        let (b, reused) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused, 8);
+        c.free_seq(b).unwrap();
+        // exhaust the pool with unrelated sequences → cached blocks evicted
+        let n = c.free_blocks();
+        let ids: Vec<SeqId> = (0..n).map(|_| c.alloc_seq(4).unwrap()).collect();
+        assert_eq!(c.free_blocks(), 0);
+        assert!(c.stats().evictions > 0, "cached blocks were reclaimed");
+        for id in ids {
+            c.free_seq(id).unwrap();
+        }
+        // prefix gone from the index now
+        let (_, reused) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused, 0);
+    }
+
+    #[test]
+    fn prefix_sharing_can_be_disabled() {
+        let cfg = ModelConfig::tiny_gqa();
+        let mut c = KvCache::with_opts(
+            &cfg,
+            4,
+            64 * 1024,
+            CacheOpts {
+                prefix_sharing: false,
+                ..Default::default()
+            },
+        );
+        let prompt: Vec<u32> = (0..9).collect();
+        let (a, _) = c.alloc_seq_shared(&prompt).unwrap();
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        let (_, reused) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused, 0);
+        assert_eq!(c.stats().prefix_hit_blocks, 0);
+    }
+
+    // ---- lifecycle: copy-on-write ------------------------------------
+
+    #[test]
+    fn fork_and_cow_isolate_divergence() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(6).unwrap();
+        fill(&mut c, &cfg, id, 0, 6, 0.0);
+        let used = c.used_blocks();
+        let f = c.fork_seq(id).unwrap();
+        assert_eq!(c.used_blocks(), used, "fork allocates nothing");
+        assert_eq!(c.seq_len(f), Some(6));
+        // diverge: fork writes position 6 (inside the shared tail block)
+        fill(&mut c, &cfg, f, 6, 1, 5000.0);
+        assert!(c.stats().cow_copies > 0, "append into shared block copied");
+        // original writes its own position 6 with different content
+        fill(&mut c, &cfg, id, 6, 1, 9000.0);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        let e = cfg.e();
+        c.gather(f, 0, &mut k, &mut v).unwrap();
+        assert_eq!(k[6 * e], 5600.0); // 5000 + 600
+        c.gather(id, 0, &mut k, &mut v).unwrap();
+        assert_eq!(k[6 * e], 9600.0); // 9000 + 600
+        // shared prefix still identical
+        c.gather(f, 0, &mut k, &mut v).unwrap();
+        let kf = k.clone();
+        c.gather(id, 0, &mut k, &mut v).unwrap();
+        assert_eq!(&kf[..6 * e], &k[..6 * e]);
+    }
+
+    // ---- lifecycle: swap ----------------------------------------------
+
+    #[test]
+    fn swap_roundtrip_is_byte_identical() {
+        let (cfg, mut c) = cache(64);
+        let total = c.free_blocks();
+        let id = c.alloc_seq(6).unwrap();
+        fill(&mut c, &cfg, id, 0, 6, 0.0);
+        let (mut k0, mut v0) = (Vec::new(), Vec::new());
+        c.gather(id, 1, &mut k0, &mut v0).unwrap();
+
+        let spilled = c.swap_out(id).unwrap();
+        assert_eq!(spilled, 2);
+        assert_eq!(c.free_blocks(), total, "swapped blocks returned to pool");
+        assert!(c.is_swapped(id));
+        assert!(c.gather(id, 0, &mut Vec::new(), &mut Vec::new()).is_err());
+
+        // trash the pool with another sequence while id is out
+        let other = c.alloc_seq(8).unwrap();
+        fill(&mut c, &cfg, other, 0, 8, 777.0);
+        c.free_seq(other).unwrap();
+
+        assert!(c.can_swap_in(id, 0));
+        c.swap_in(id).unwrap();
+        assert!(!c.is_swapped(id));
+        assert_eq!(c.seq_len(id), Some(6));
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        c.gather(id, 1, &mut k1, &mut v1).unwrap();
+        assert_eq!(k0, k1, "keys changed across swap");
+        assert_eq!(v0, v1, "values changed across swap");
+        // and the sequence can keep growing
+        fill(&mut c, &cfg, id, 6, 3, 0.0);
+        assert_eq!(c.seq_len(id), Some(9));
+    }
+
+    #[test]
+    fn swap_budget_is_enforced() {
+        let cfg = ModelConfig::tiny_gqa();
+        let mut c = KvCache::with_opts(
+            &cfg,
+            4,
+            64 * 1024,
+            CacheOpts {
+                prefix_sharing: true,
+                swap_budget_blocks: Some(1),
+            },
+        );
+        let id = c.alloc_seq(8).unwrap(); // 2 blocks > budget 1
+        fill(&mut c, &cfg, id, 0, 8, 0.0);
+        match c.swap_out(id) {
+            Err(CacheError::SwapBudgetExceeded { seq_blocks: 2, limit: 1, .. }) => {}
+            other => panic!("expected SwapBudgetExceeded, got {other:?}"),
+        }
+        // sequence untouched by the failed swap
+        assert_eq!(c.seq_len(id), Some(8));
+    }
+
+    #[test]
+    fn swap_in_reborrows_shared_prefix() {
+        let (cfg, mut c) = cache(64);
+        let prompt: Vec<u32> = (0..9).collect();
+        let (a, _) = c.alloc_seq_shared(&prompt).unwrap();
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        // a second sequence keeps the prefix blocks alive in the index
+        let (b, reused) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused, 8);
+        fill(&mut c, &cfg, b, 8, 1, 0.0);
+
+        c.swap_out(a).unwrap();
+        let reborrowed = c.swap_in(a).unwrap();
+        assert_eq!(reborrowed, 2, "prefix blocks re-borrowed, not restored");
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        c.gather(a, 0, &mut k, &mut v).unwrap();
+        assert_eq!(k[5 * cfg.e()], 500.0);
+    }
+
+    #[test]
+    fn free_swapped_sequence_releases_spill() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(6).unwrap();
+        fill(&mut c, &cfg, id, 0, 6, 0.0);
+        c.swap_out(id).unwrap();
+        assert_eq!(c.n_swapped(), 1);
+        c.free_seq(id).unwrap();
+        assert_eq!(c.n_swapped(), 0);
+        assert!(c.swap_in(id).is_err());
+    }
+
+    #[test]
+    fn snapshot_reflects_lifecycle() {
+        let (cfg, mut c) = cache(64);
+        let prompt: Vec<u32> = (0..9).collect();
+        let (a, _) = c.alloc_seq_shared(&prompt).unwrap();
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        let (b, _) = c.alloc_seq_shared(&prompt).unwrap();
+        fill(&mut c, &cfg, b, 8, 1, 0.0);
+        c.swap_out(b).unwrap();
+        let s = c.snapshot();
+        assert_eq!(s.n_blocks, c.sizing().n_blocks);
+        assert_eq!(s.swapped_seqs, 1);
+        assert_eq!(s.swapped_blocks, 3);
+        assert_eq!(s.stats.prefix_tokens_saved, 8);
+        assert_eq!(s.used_blocks + s.free_blocks + s.cached_blocks, s.n_blocks);
     }
 }

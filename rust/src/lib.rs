@@ -19,8 +19,18 @@
 //! * [`surgery`] implements the paper's Table 1 weight transforms on real
 //!   weights, and [`params`]/[`bandwidth`] reproduce the §3 table.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
-//! measured reproduction of every table and figure.
+//! At serving time the KV **cache** is the scarce resource the paper's KV
+//! **weights** feed, so [`kvcache`] manages the full block lifecycle:
+//! refcounted paging with copy-on-write, hash-based automatic prefix
+//! sharing (requests with a common prompt prefix skip that part of
+//! prefill), and swap-style preemption with byte-identical resume. The
+//! [`coordinator`] scheduler drives all three; `benches/prefix_cache.rs`
+//! measures the saved prefill work.
+//!
+//! See `DESIGN.md` for the design notes and experiment index, and
+//! `EXPERIMENTS.md` for bench methodology and measured numbers.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bandwidth;
 pub mod config;

@@ -34,6 +34,7 @@ fn cli() -> Command {
                 .opt_default("seed", "1", "init seed when no weights given")
                 .opt_default("cache-mb", "256", "KV cache budget (MiB, CPU engine)")
                 .opt_default("max-running", "32", "max concurrent sequences")
+                .flag("no-prefix-cache", "disable automatic prefix sharing (CPU engine)")
                 .opt_default("log", "info", "log level"),
         )
         .subcommand(
@@ -160,7 +161,14 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
         Coordinator::spawn_with(move || PjrtEngine::boot(&dir, &w, 64).expect("pjrt boot"), sched)
     } else {
         let cache_mb: usize = args.num_or("cache-mb", 256)?;
-        Coordinator::spawn(CpuEngine::new(w, 16, cache_mb << 20), sched)
+        let opts = skipless::kvcache::CacheOpts {
+            prefix_sharing: !args.flag("no-prefix-cache"),
+            ..Default::default()
+        };
+        Coordinator::spawn(
+            CpuEngine::with_cache_opts(w, 16, cache_mb << 20, opts),
+            sched,
+        )
     };
     let server = Server::bind(args.get_or("addr", "127.0.0.1:7070"), coordinator)?;
     println!(

@@ -106,15 +106,37 @@ impl Histogram {
 }
 
 /// All serving metrics, shared by reference across the coordinator.
+///
+/// The `kv_*` family mirrors the engine's paged-cache lifecycle
+/// ([`crate::kvcache::CacheStats`] plus occupancy gauges): the scheduler
+/// refreshes them after every step, and the server publishes the whole
+/// registry — including a nested `kv_cache` object — under
+/// `{"op":"metrics"}`.
 #[derive(Default)]
 pub struct Metrics {
     pub requests_admitted: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Prompt positions actually computed by prefill (shared-prefix
+    /// positions are counted in [`Metrics::kv_prefix_tokens_saved`] instead).
     pub tokens_prefilled: AtomicU64,
     pub tokens_decoded: AtomicU64,
     pub batches_run: AtomicU64,
+    /// Preemption events of either kind (swap-out or recompute).
     pub preemptions: AtomicU64,
+    // -- KV-block lifecycle (mirrored from the engine's cache) -----------
+    pub kv_prefix_hit_blocks: AtomicU64,
+    pub kv_prefix_tokens_saved: AtomicU64,
+    pub kv_cow_copies: AtomicU64,
+    pub kv_evictions: AtomicU64,
+    pub kv_swap_outs: AtomicU64,
+    pub kv_swap_ins: AtomicU64,
+    pub kv_swap_blocks_reused: AtomicU64,
+    pub kv_blocks_used: AtomicU64,
+    pub kv_blocks_free: AtomicU64,
+    pub kv_blocks_cached: AtomicU64,
+    pub kv_swapped_seqs: AtomicU64,
+    pub kv_swapped_blocks: AtomicU64,
     pub ttft: Histogram,
     pub tpot: Histogram,
     pub e2e: Histogram,
@@ -133,6 +155,22 @@ impl Metrics {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Overwrite a gauge (used when mirroring engine-side counters).
+    pub fn set(gauge: &AtomicU64, v: u64) {
+        gauge.store(v, Ordering::Relaxed);
+    }
+
+    /// Fraction of prompt tokens served from the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let saved = self.kv_prefix_tokens_saved.load(Ordering::Relaxed) as f64;
+        let computed = self.tokens_prefilled.load(Ordering::Relaxed) as f64;
+        if saved + computed == 0.0 {
+            0.0
+        } else {
+            saved / (saved + computed)
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let g = |c: &AtomicU64| Json::num(c.load(Ordering::Relaxed) as f64);
         Json::obj(vec![
@@ -143,6 +181,24 @@ impl Metrics {
             ("tokens_decoded", g(&self.tokens_decoded)),
             ("batches_run", g(&self.batches_run)),
             ("preemptions", g(&self.preemptions)),
+            (
+                "kv_cache",
+                Json::obj(vec![
+                    ("prefix_hit_blocks", g(&self.kv_prefix_hit_blocks)),
+                    ("prefix_tokens_saved", g(&self.kv_prefix_tokens_saved)),
+                    ("prefix_hit_rate", Json::num(self.prefix_hit_rate())),
+                    ("cow_copies", g(&self.kv_cow_copies)),
+                    ("evictions", g(&self.kv_evictions)),
+                    ("swap_outs", g(&self.kv_swap_outs)),
+                    ("swap_ins", g(&self.kv_swap_ins)),
+                    ("swap_blocks_reused", g(&self.kv_swap_blocks_reused)),
+                    ("blocks_used", g(&self.kv_blocks_used)),
+                    ("blocks_free", g(&self.kv_blocks_free)),
+                    ("blocks_cached", g(&self.kv_blocks_cached)),
+                    ("swapped_seqs", g(&self.kv_swapped_seqs)),
+                    ("swapped_blocks", g(&self.kv_swapped_blocks)),
+                ]),
+            ),
             ("ttft", self.ttft.to_json()),
             ("tpot", self.tpot.to_json()),
             ("e2e", self.e2e.to_json()),
@@ -195,6 +251,25 @@ mod tests {
         assert_eq!(j.get("requests_admitted").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("tokens_decoded").unwrap().as_u64(), Some(42));
         assert_eq!(j.get("ttft").unwrap().get("count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn kv_cache_gauges_in_json() {
+        let m = Metrics::new();
+        Metrics::set(&m.kv_prefix_tokens_saved, 32);
+        Metrics::add(&m.tokens_prefilled, 96);
+        Metrics::set(&m.kv_swap_outs, 3);
+        Metrics::set(&m.kv_blocks_used, 7);
+        let j = m.to_json();
+        let kv = j.get("kv_cache").unwrap();
+        assert_eq!(kv.get("prefix_tokens_saved").unwrap().as_u64(), Some(32));
+        assert_eq!(kv.get("swap_outs").unwrap().as_u64(), Some(3));
+        assert_eq!(kv.get("blocks_used").unwrap().as_u64(), Some(7));
+        let rate = kv.get("prefix_hit_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 0.25).abs() < 1e-9, "rate {rate}");
+        // gauges overwrite rather than accumulate
+        Metrics::set(&m.kv_swap_outs, 2);
+        assert_eq!(m.kv_swap_outs.load(Ordering::Relaxed), 2);
     }
 
     #[test]

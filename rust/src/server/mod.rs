@@ -1,12 +1,17 @@
 //! Minimal TCP JSON-lines serving front-end (no HTTP stack in the offline
 //! image; the protocol is one JSON object per line, trivially scriptable
-//! with `nc`).
+//! with `nc` — see README.md for a worked example).
 //!
 //! Request:  `{"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
 //!             "temperature":0.0,"top_k":0,"top_p":1.0,"seed":1}`
 //!           `{"op":"metrics"}`   `{"op":"ping"}`
 //! Response: `{"ok":true,"tokens":[...],"finish":"length",
 //!             "ttft_us":...,"latency_us":...}` (or `{"ok":false,"error":..}`)
+//!
+//! `{"op":"metrics"}` returns the full registry, including the
+//! `kv_cache` object (prefix-hit rate, copy-on-write/eviction counts,
+//! swap-in/out totals, live block occupancy) the scheduler refreshes
+//! every step.
 
 use crate::coordinator::{Coordinator, FinishReason, Request};
 use crate::sampler::SamplerCfg;
@@ -247,6 +252,11 @@ mod tests {
             m.get("metrics").unwrap().get("requests_completed").unwrap().as_u64(),
             Some(1)
         );
+        // the KV-cache lifecycle stats ride along
+        let kv = m.get("metrics").unwrap().get("kv_cache").unwrap();
+        assert!(kv.get("prefix_hit_rate").is_some());
+        assert!(kv.get("swap_outs").is_some());
+        assert!(kv.get("blocks_used").is_some());
     }
 
     #[test]

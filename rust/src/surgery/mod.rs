@@ -104,6 +104,23 @@ fn pivot_of<'a>(b: &'a BlockWeights, variant: Variant) -> &'a Mat {
 }
 
 /// Transform a vanilla model into the requested merged variant.
+///
+/// The returned model stores fewer matrices (`None` for eliminated ones)
+/// yet computes the same function to f32 roundoff:
+///
+/// ```
+/// use skipless::config::{ModelConfig, Variant};
+/// use skipless::model::{prefill, ModelWeights};
+/// use skipless::surgery::{transform, Options};
+///
+/// let cfg = ModelConfig::tiny_gqa();
+/// let vanilla = ModelWeights::init_vanilla(&cfg, 1);
+/// let merged = transform(&vanilla, Variant::MergedQP, Options::default()).unwrap();
+/// assert!(merged.stored_weights() < vanilla.stored_weights());
+/// let (l0, _) = prefill(&vanilla, &[1, 2, 3]);
+/// let (l1, _) = prefill(&merged, &[1, 2, 3]);
+/// assert!(l1.rel_fro_err(&l0) < 1e-3);
+/// ```
 pub fn transform(w: &ModelWeights, variant: Variant, opts: Options) -> Result<ModelWeights, SurgeryError> {
     if w.variant != Variant::Vanilla {
         return Err(SurgeryError::NotVanilla(w.variant));

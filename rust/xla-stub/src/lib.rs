@@ -1,0 +1,92 @@
+//! Offline **stub** of the `xla` PJRT bindings.
+//!
+//! The serving stack's PJRT engine (`skipless::runtime`) is written against
+//! the real `xla` crate's API. This container image has no PJRT plugin and
+//! no crates.io access, so this path dependency provides the same surface
+//! with a single behavior: [`PjRtClient::cpu`] returns an error, which
+//! `PjrtEngine::boot` reports cleanly ("PJRT backend not available"). The
+//! CPU engine path — everything the tier-1 tests exercise — is unaffected.
+//!
+//! On a machine with the real bindings, point the `xla` dependency in
+//! `rust/Cargo.toml` at them; no source changes are needed.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT backend not available in this offline build (xla stub)".into(),
+    ))
+}
+
+pub struct PjRtClient;
+pub struct PjRtBuffer;
+pub struct PjRtLoadedExecutable;
+pub struct HloModuleProto;
+pub struct XlaComputation;
+pub struct Literal;
+/// One element of `execute_b`'s per-device output list.
+pub struct ExecOutput;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        unavailable()
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<ExecOutput>>, Error> {
+        unavailable()
+    }
+}
+
+impl ExecOutput {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
