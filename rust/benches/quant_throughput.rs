@@ -1,0 +1,195 @@
+//! INT8 serving bench: decode throughput and resident bytes, f32 vs int8
+//! weights (and f32 vs u8 KV blocks on the cache side).
+//!
+//! Batch-1 decode on CPU is weight-streaming-bound — the regime the paper's
+//! §3 model assumes — so shrinking the streamed bytes 4x is the whole
+//! game. Emits `BENCH_quant.json` (schema in EXPERIMENTS.md) plus the
+//! usual JSON result lines on stdout. `SKIPLESS_BENCH_QUICK=1` shrinks the
+//! model and token counts for CI.
+
+use skipless::config::{AttentionKind, BlockLayout, FfnKind, ModelConfig};
+use skipless::coordinator::{CpuEngine, DecodeInput, Engine};
+use skipless::kvcache::CacheOpts;
+use skipless::model::{quantize, ModelWeights};
+use skipless::util::bench::fmt_dur;
+use std::time::{Duration, Instant};
+
+/// Mid-size GQA model: big enough that decode is genuinely bound by
+/// streaming the block weights (embedding is a realistically small
+/// fraction, unlike the tiny presets), small enough to init in seconds.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        name: "quant-bench-85m".into(),
+        dim: 384,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 2,
+        hidden_dim: 1536,
+        vocab_size: 1024,
+        max_seq_len: 512,
+        attention: AttentionKind::Gqa,
+        layout: BlockLayout::Serial,
+        ffn: FfnKind::Mlp,
+        tied_embeddings: false,
+    }
+}
+
+struct DecodeRun {
+    tok_per_s: f64,
+    wall: Duration,
+    tokens: usize,
+}
+
+/// Prefill `batch` sequences, then decode `steps` tokens each through
+/// `decode_batch`, timing only the decode loop.
+fn run_decode(mut eng: CpuEngine, batch: usize, steps: usize) -> DecodeRun {
+    let vocab = eng.cfg().vocab_size as u32;
+    let ids: Vec<_> = (0..batch)
+        .map(|i| {
+            let prompt = [(i as u32 * 31 + 1) % vocab, 2, 3];
+            eng.prefill(&prompt).unwrap().0
+        })
+        .collect();
+    let mut inputs: Vec<DecodeInput> = ids
+        .iter()
+        .enumerate()
+        .map(|(i, &seq)| DecodeInput {
+            seq,
+            token: (i as u32 * 7 + 5) % vocab,
+        })
+        .collect();
+    let t0 = Instant::now();
+    for _step in 0..steps {
+        let logits = eng.decode_batch(&inputs).unwrap();
+        // feed the argmax back so the run is data-dependent end to end
+        for (inp, row) in inputs.iter_mut().zip(&logits) {
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            inp.token = best as u32;
+        }
+    }
+    let wall = t0.elapsed();
+    let tokens = batch * steps;
+    DecodeRun {
+        tok_per_s: tokens as f64 / wall.as_secs_f64(),
+        wall,
+        tokens,
+    }
+}
+
+fn main() {
+    println!("# quant_throughput — INT8 weights + u8 KV blocks vs f32");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let cfg = if quick { ModelConfig::tiny_gqa() } else { bench_config() };
+    let steps = if quick { 16 } else { 64 };
+
+    eprintln!("  initializing {} (this includes calibration)...", cfg.name);
+    let w = ModelWeights::init_vanilla(&cfg, 2026);
+    let q = quantize(&w);
+    let f32_bytes = w.resident_bytes();
+    let int8_bytes = q.resident_bytes();
+    let weight_ratio = f32_bytes as f64 / int8_bytes as f64;
+    eprintln!(
+        "  weights: {:.1} MiB f32 → {:.1} MiB int8 ({:.2}x smaller)",
+        f32_bytes as f64 / (1 << 20) as f64,
+        int8_bytes as f64 / (1 << 20) as f64,
+        weight_ratio
+    );
+    // the acceptance bar: ≥ 3x resident reduction on a realistically-
+    // proportioned model (the f32 embedding is the only thing not shrunk)
+    if !quick {
+        assert!(weight_ratio >= 3.0, "resident reduction only {weight_ratio:.2}x");
+    }
+
+    // -- KV pool capacity at equal budget ------------------------------
+    let budget = 64 << 20;
+    let kv_f32 = CpuEngine::new(w.clone(), 16, budget).cache().sizing();
+    let kv_u8 = CpuEngine::with_cache_opts(
+        w.clone(),
+        16,
+        budget,
+        CacheOpts {
+            quantized: true,
+            ..Default::default()
+        },
+    )
+    .cache()
+    .sizing();
+    let kv_ratio = kv_u8.tokens_capacity as f64 / kv_f32.tokens_capacity as f64;
+    eprintln!(
+        "  kv pool @ {} MiB: {} tokens f32 ({} B/tok) → {} tokens u8 ({} B/tok) ({:.2}x)",
+        budget >> 20,
+        kv_f32.tokens_capacity,
+        kv_f32.bytes_per_token,
+        kv_u8.tokens_capacity,
+        kv_u8.bytes_per_token,
+        kv_ratio
+    );
+
+    // -- decode throughput ----------------------------------------------
+    let mut rows = Vec::new();
+    for &batch in &[1usize, 8] {
+        let rf = run_decode(CpuEngine::new(w.clone(), 16, budget), batch, steps);
+        let rq = run_decode(
+            CpuEngine::with_cache_opts(
+                q.clone(),
+                16,
+                budget,
+                CacheOpts {
+                    quantized: true,
+                    ..Default::default()
+                },
+            ),
+            batch,
+            steps,
+        );
+        let speedup = rq.tok_per_s / rf.tok_per_s;
+        eprintln!(
+            "  batch {batch}: f32 {:>8.1} tok/s ({})   int8 {:>8.1} tok/s ({})   {:.2}x",
+            rf.tok_per_s,
+            fmt_dur(rf.wall),
+            rq.tok_per_s,
+            fmt_dur(rq.wall),
+            speedup
+        );
+        println!(
+            "{{\"suite\":\"quant_throughput\",\"case\":\"decode_b{batch}\",\"tokens\":{},\"f32_tok_per_s\":{:.1},\"int8_tok_per_s\":{:.1},\"speedup_x\":{speedup:.4}}}",
+            rf.tokens, rf.tok_per_s, rq.tok_per_s,
+        );
+        // Exact speedup is machine-dependent (see EXPERIMENTS.md), but a
+        // collapse below half of f32 means the i8 kernel lost its
+        // vectorization — fail the full-mode run rather than record it.
+        if !quick {
+            assert!(
+                speedup >= 0.5,
+                "catastrophic int8 decode regression at batch {batch}: {speedup:.2}x"
+            );
+        }
+        rows.push((batch, rf.tok_per_s, rq.tok_per_s, speedup));
+    }
+
+    // -- machine-readable artifact -------------------------------------
+    let decode_json: Vec<String> = rows
+        .iter()
+        .map(|(b, f, q, s)| {
+            format!(
+                "    {{\"batch\": {b}, \"f32_tok_per_s\": {f:.1}, \"int8_tok_per_s\": {q:.1}, \"speedup_x\": {s:.4}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"suite\": \"quant_throughput\",\n  \"model\": \"{}\",\n  \"decode_steps\": {steps},\n  \"weight_bytes_f32\": {f32_bytes},\n  \"weight_bytes_int8\": {int8_bytes},\n  \"weight_reduction_x\": {weight_ratio:.4},\n  \"kv_bytes_per_token_f32\": {},\n  \"kv_bytes_per_token_u8\": {},\n  \"kv_tokens_capacity_f32\": {},\n  \"kv_tokens_capacity_u8\": {},\n  \"kv_capacity_x\": {kv_ratio:.4},\n  \"decode\": [\n{}\n  ]\n}}\n",
+        cfg.name,
+        kv_f32.bytes_per_token,
+        kv_u8.bytes_per_token,
+        kv_f32.tokens_capacity,
+        kv_u8.tokens_capacity,
+        decode_json.join(",\n"),
+    );
+    std::fs::write("BENCH_quant.json", &json).expect("write BENCH_quant.json");
+    eprintln!("  wrote BENCH_quant.json");
+}

@@ -12,7 +12,7 @@ use crate::kvcache::{CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
 use crate::linalg::{matmul, matmul_transb, softmax_rows};
 use crate::model::attention::HeadLayout;
 use crate::model::ffn::ffn_forward;
-use crate::model::{rope, ModelWeights};
+use crate::model::{rope, ModelWeights, Weight};
 use crate::tensor::Mat;
 use std::collections::BTreeMap;
 
@@ -117,13 +117,6 @@ impl CpuEngine {
         }
     }
 
-    fn proj(x: &Mat, m: &Option<Mat>) -> Mat {
-        match m {
-            Some(m) => matmul(x, m),
-            None => x.clone(),
-        }
-    }
-
     /// Run the forward pass for prompt positions `reused..` of a freshly
     /// allocated sequence, appending their K/V to the paged cache, and
     /// return the last prompt position's logits. With `reused == 0` this is
@@ -148,11 +141,11 @@ impl CpuEngine {
         // append/advance protocol is per-position).
         let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(w.blocks.len());
         for (li, b) in w.blocks.iter().enumerate() {
-            let k = Self::proj(&x, &b.k);
-            let v = Self::proj(&x, &b.v);
+            let k = Weight::proj(&x, &b.k);
+            let v = Weight::proj(&x, &b.v);
             let mut k_rot = k.clone();
             rope::apply(&mut k_rot, hd, reused, rope::BASE);
-            let q = Self::proj(&x, &b.q);
+            let q = Weight::proj(&x, &b.q);
             let a = if reused == 0 {
                 crate::model::attention::causal_attention(&q, &k, &v, layout, 0)
             } else {
@@ -173,12 +166,12 @@ impl CpuEngine {
             layer_kv.push((k_rot, v));
             x = match cfg.layout {
                 BlockLayout::Serial => {
-                    let p = Self::proj(&a, &b.p);
+                    let p = Weight::proj(&a, &b.p);
                     ffn_forward(&p, &b.m, &b.o, cfg.ffn)
                 }
                 BlockLayout::Parallel => {
                     let post = if b.c.is_some() { &b.c } else { &b.p };
-                    let attn_out = Self::proj(&a, post);
+                    let attn_out = Weight::proj(&a, post);
                     attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
                 }
             };
@@ -193,10 +186,10 @@ impl CpuEngine {
                 .advance(id)
                 .map_err(|e| EngineError::BadSequence(e.to_string()))?;
         }
-        let logits = matmul(
-            &x.row_slice(suffix.len() - 1, suffix.len()),
-            &self.weights.unembed,
-        );
+        let logits = self
+            .weights
+            .unembed
+            .matmul(&x.row_slice(suffix.len() - 1, suffix.len()));
         Ok(logits.into_vec())
     }
 
@@ -246,7 +239,13 @@ impl Engine for CpuEngine {
     }
 
     fn describe(&self) -> String {
-        format!("cpu/{}", self.weights.variant.name())
+        let dtype = if self.weights.is_quantized() { "/int8" } else { "" };
+        let kv = if self.cache.quantized() { "+kv8" } else { "" };
+        format!("cpu/{}{dtype}{kv}", self.weights.variant.name())
+    }
+
+    fn weight_bytes(&self) -> (u64, u64) {
+        (self.weights.stored_bytes(), self.weights.resident_bytes())
     }
 
     fn can_admit(&self, prompt_len: usize) -> bool {
@@ -336,9 +335,9 @@ impl Engine for CpuEngine {
             let b = &self.weights.blocks[li];
             // shared projections: each weight matrix streamed ONCE for the
             // whole batch — the batching economics of the paper's model.
-            let mut q = Self::proj(&x, &b.q);
-            let mut k = Self::proj(&x, &b.k);
-            let v = Self::proj(&x, &b.v);
+            let mut q = Weight::proj(&x, &b.q);
+            let mut k = Weight::proj(&x, &b.k);
+            let v = Weight::proj(&x, &b.v);
             // per-row RoPE at each sequence's own position
             for (r, &p) in pos.iter().enumerate() {
                 for h in 0..cfg.n_heads {
@@ -374,12 +373,12 @@ impl Engine for CpuEngine {
             // post-attention + FFN, batched
             x = match layout_kind {
                 BlockLayout::Serial => {
-                    let p = Self::proj(&a, &b.p);
+                    let p = Weight::proj(&a, &b.p);
                     ffn_forward(&p, &b.m, &b.o, cfg.ffn)
                 }
                 BlockLayout::Parallel => {
                     let post = if b.c.is_some() { &b.c } else { &b.p };
-                    let attn_out = Self::proj(&a, post);
+                    let attn_out = Weight::proj(&a, post);
                     attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
                 }
             };
@@ -391,7 +390,7 @@ impl Engine for CpuEngine {
                 .map_err(|e| EngineError::BadSequence(e.to_string()))?;
             *self.positions.get_mut(&inp.seq).unwrap() += 1;
         }
-        let logits = matmul(&x, &self.weights.unembed);
+        let logits = self.weights.unembed.matmul(&x);
         Ok((0..bsz).map(|r| logits.row(r).to_vec()).collect())
     }
 
@@ -627,6 +626,101 @@ mod tests {
         let a = eng.decode_batch(&[DecodeInput { seq: id, token: 6 }]).unwrap();
         let b = ref_eng.decode_batch(&[DecodeInput { seq: rid, token: 6 }]).unwrap();
         assert_eq!(a[0], b[0], "post-swap logits differ");
+    }
+
+    /// INT8 weights: batched decode must STILL equal one-at-a-time decode
+    /// bit-exactly (qmatmul is row-independent), and logits must track the
+    /// f32 engine within quantization tolerance.
+    #[test]
+    fn int8_weights_batch_invariant_and_close_to_f32() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 70);
+        let q = crate::model::quantize(&w);
+        let mut eng_f = CpuEngine::new(w, 8, 8 << 20);
+        let mut eng_b = CpuEngine::new(q.clone(), 8, 8 << 20);
+        let mut eng_s = CpuEngine::new(q, 8, 8 << 20);
+        assert!(eng_b.describe().contains("int8"), "{}", eng_b.describe());
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8], &[5, 5, 5, 5]];
+        let ids_f: Vec<SeqId> = prompts.iter().map(|p| eng_f.prefill(p).unwrap().0).collect();
+        let ids_b: Vec<SeqId> = prompts.iter().map(|p| eng_b.prefill(p).unwrap().0).collect();
+        let ids_s: Vec<SeqId> = prompts.iter().map(|p| eng_s.prefill(p).unwrap().0).collect();
+        let toks = [11u32, 22, 33];
+        let batch: Vec<DecodeInput> = ids_b
+            .iter()
+            .zip(toks)
+            .map(|(&seq, token)| DecodeInput { seq, token })
+            .collect();
+        let got = eng_b.decode_batch(&batch).unwrap();
+        for (i, (&seq, token)) in ids_s.iter().zip(toks).enumerate() {
+            let solo = eng_s.decode_batch(&[DecodeInput { seq, token }]).unwrap();
+            assert_eq!(got[i], solo[0], "seq {i}: int8 decode not batch-invariant");
+        }
+        // and the int8 logits stay near the f32 engine's
+        for (i, (&seq, token)) in ids_f.iter().zip(toks).enumerate() {
+            let want = eng_f.decode_batch(&[DecodeInput { seq, token }]).unwrap();
+            let num: f64 = got[i]
+                .iter()
+                .zip(&want[0])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let den: f64 = want[0].iter().map(|&b| (b as f64).powi(2)).sum();
+            let rel = (num / den.max(1e-30)).sqrt();
+            assert!(rel < 5e-2, "seq {i}: int8 rel logit err {rel}");
+        }
+    }
+
+    /// u8 KV blocks: decode stays deterministic (batch-invariant, swap-
+    /// resumable) and close to the f32-cache engine.
+    #[test]
+    fn quantized_kv_cache_decode_close_and_deterministic() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 71);
+        let qopts = CacheOpts {
+            quantized: true,
+            ..Default::default()
+        };
+        let mut eng_f = CpuEngine::new(w.clone(), 4, 8 << 20);
+        let mut eng_q = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, qopts);
+        let mut eng_r = CpuEngine::with_cache_opts(w, 4, 8 << 20, qopts);
+        assert!(eng_q.describe().ends_with("+kv8"));
+        let prompt = [3u32, 1, 4, 1, 5, 9];
+        let (idf, lf) = eng_f.prefill(&prompt).unwrap();
+        let (idq, lq) = eng_q.prefill(&prompt).unwrap();
+        let (idr, _) = eng_r.prefill(&prompt).unwrap();
+        // prefill never reads the cache back — identical to the last bit
+        assert_eq!(lf, lq, "prefill must not depend on cache precision");
+        let mut tok = 7u32;
+        for step in 0..4 {
+            let gf = eng_f.decode_batch(&[DecodeInput { seq: idf, token: tok }]).unwrap();
+            let gq = eng_q.decode_batch(&[DecodeInput { seq: idq, token: tok }]).unwrap();
+            let gr = eng_r.decode_batch(&[DecodeInput { seq: idr, token: tok }]).unwrap();
+            assert_eq!(gq[0], gr[0], "step {step}: quantized decode not deterministic");
+            let num: f64 = gq[0]
+                .iter()
+                .zip(&gf[0])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let den: f64 = gf[0].iter().map(|&b| (b as f64).powi(2)).sum();
+            let rel = (num / den.max(1e-30)).sqrt();
+            assert!(rel < 0.1, "step {step}: kv8 drifted {rel} from f32 cache");
+            // swap the reference engine's sequence out and back: must not
+            // change another step's result (codes move verbatim)
+            eng_r.swap_out(idr).unwrap();
+            eng_r.swap_in(idr).unwrap();
+            tok = (tok + 3) % 250;
+        }
+    }
+
+    #[test]
+    fn weight_bytes_reported() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 72);
+        let f32_eng = CpuEngine::new(w.clone(), 8, 1 << 20);
+        let (a, b) = f32_eng.weight_bytes();
+        assert_eq!(a, b, "f32 engine: resident == f32-equivalent");
+        let q_eng = CpuEngine::new(crate::model::quantize(&w), 8, 1 << 20);
+        let (a, b) = q_eng.weight_bytes();
+        assert!(b * 2 < a, "quantized engine must report the shrink: {a} vs {b}");
     }
 
     #[test]

@@ -106,4 +106,10 @@ pub trait Engine {
     fn kv_snapshot(&self) -> Option<CacheSnapshot> {
         None
     }
+
+    /// `(f32_equivalent, resident)` weight bytes — differ when the engine
+    /// holds quantized weights. `(0, 0)` for engines that don't report.
+    fn weight_bytes(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }

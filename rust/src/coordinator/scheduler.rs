@@ -119,7 +119,7 @@ pub struct Scheduler<E: Engine> {
 
 impl<E: Engine> Scheduler<E> {
     pub fn new(engine: E, cfg: SchedulerCfg, metrics: Arc<Metrics>) -> Self {
-        Self {
+        let s = Self {
             engine,
             cfg,
             queue: VecDeque::new(),
@@ -127,7 +127,11 @@ impl<E: Engine> Scheduler<E> {
             swapped: VecDeque::new(),
             done: Vec::new(),
             metrics,
-        }
+        };
+        // publish the static gauges (weight bytes, cache geometry) before
+        // the first step so a freshly-booted server reports them
+        s.sync_cache_metrics();
+        s
     }
 
     pub fn engine(&self) -> &E {
@@ -449,8 +453,11 @@ impl<E: Engine> Scheduler<E> {
     /// Mirror the engine's cache occupancy/lifecycle counters into the
     /// shared atomic metrics (served by `{"op":"metrics"}`).
     fn sync_cache_metrics(&self) {
-        let Some(s) = self.engine.kv_snapshot() else { return };
         let m = &self.metrics;
+        let (wf32, wres) = self.engine.weight_bytes();
+        Metrics::set(&m.weight_bytes_f32, wf32);
+        Metrics::set(&m.weight_bytes_resident, wres);
+        let Some(s) = self.engine.kv_snapshot() else { return };
         Metrics::set(&m.kv_prefix_hit_blocks, s.stats.prefix_hit_blocks);
         Metrics::set(&m.kv_prefix_tokens_saved, s.stats.prefix_tokens_saved);
         Metrics::set(&m.kv_cow_copies, s.stats.cow_copies);
@@ -463,6 +470,11 @@ impl<E: Engine> Scheduler<E> {
         Metrics::set(&m.kv_blocks_cached, s.cached_blocks as u64);
         Metrics::set(&m.kv_swapped_seqs, s.swapped_seqs as u64);
         Metrics::set(&m.kv_swapped_blocks, s.swapped_blocks as u64);
+        Metrics::set(
+            &m.kv_quantized_blocks,
+            if s.quantized { s.used_blocks as u64 } else { 0 },
+        );
+        Metrics::set(&m.kv_bytes_per_token, s.bytes_per_token as u64);
     }
 }
 
@@ -725,6 +737,7 @@ mod tests {
             crate::kvcache::CacheOpts {
                 prefix_sharing: true,
                 swap_budget_blocks: Some(100), // far beyond the pool
+                ..Default::default()
             },
         );
         let mut s = Scheduler::new(eng, SchedulerCfg::default(), Arc::new(Metrics::new()));
@@ -738,6 +751,33 @@ mod tests {
             assert_eq!(r.finish, FinishReason::Length);
             assert!(!r.tokens.is_empty() && r.tokens.len() < 10, "req {}", r.id);
         }
+    }
+
+    /// Static gauges (weight bytes, cache geometry) must be visible from
+    /// the moment the scheduler exists, before any request runs — the
+    /// verify recipe polls metrics on a freshly booted server.
+    #[test]
+    fn static_gauges_published_at_boot() {
+        use std::sync::atomic::Ordering;
+        let metrics = Arc::new(Metrics::new());
+        let cfg = ModelConfig::tiny_gqa();
+        let w = crate::model::quantize(&ModelWeights::init_vanilla(&cfg, 74));
+        let resident = w.resident_bytes();
+        let f32_bytes = w.stored_bytes();
+        let eng = CpuEngine::with_cache_opts(
+            w,
+            8,
+            8 << 20,
+            crate::kvcache::CacheOpts {
+                quantized: true,
+                ..Default::default()
+            },
+        );
+        let _s = Scheduler::new(eng, SchedulerCfg::default(), Arc::clone(&metrics));
+        assert_eq!(metrics.weight_bytes_f32.load(Ordering::Relaxed), f32_bytes);
+        assert_eq!(metrics.weight_bytes_resident.load(Ordering::Relaxed), resident);
+        assert!(metrics.kv_bytes_per_token.load(Ordering::Relaxed) > 0);
+        assert!(metrics.kv_blocks_free.load(Ordering::Relaxed) > 0);
     }
 
     #[test]

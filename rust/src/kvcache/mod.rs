@@ -25,6 +25,13 @@
 //!   to a bounded host-side buffer and frees them; [`KvCache::swap_in`]
 //!   restores the sequence byte-identically (re-borrowing still-indexed
 //!   prefix blocks instead of copying where possible).
+//! * **u8 quantized blocks** — with [`CacheOpts::quantized`] the pool
+//!   stores u8 codes plus a per-(position, layer) scale/zero-point pair for
+//!   K and V instead of raw f32, so the same `budget_bytes` holds ~4x the
+//!   tokens (DESIGN.md §Quantization). [`KvCache::append`] quantizes,
+//!   [`KvCache::gather`] dequantizes — the engine API is unchanged, and
+//!   every lifecycle operation (sharing, CoW, swap) moves codes verbatim,
+//!   so resume and fork stay byte-identical.
 //!
 //! The decode engine writes rotated keys / raw values through
 //! [`KvCache::append`] and reads per-sequence contiguous views via
@@ -79,6 +86,9 @@ pub struct CacheOpts {
     /// Upper bound on blocks' worth of swapped-out data held in the spill
     /// buffer at once. `None` → one pool's worth (`n_blocks`).
     pub swap_budget_blocks: Option<usize>,
+    /// Store blocks as u8 codes + per-(position, layer) scale/zero-point
+    /// instead of f32 (~4x tokens per byte at realistic `e`).
+    pub quantized: bool,
 }
 
 impl Default for CacheOpts {
@@ -86,6 +96,7 @@ impl Default for CacheOpts {
         Self {
             prefix_sharing: true,
             swap_budget_blocks: None,
+            quantized: false,
         }
     }
 }
@@ -127,6 +138,10 @@ pub struct CacheSnapshot {
     pub cached_blocks: usize,
     pub swapped_seqs: usize,
     pub swapped_blocks: usize,
+    /// Is the pool storing u8 quantized blocks?
+    pub quantized: bool,
+    /// Bytes per cached token at the pool's precision.
+    pub bytes_per_token: usize,
     pub stats: CacheStats,
 }
 
@@ -151,12 +166,52 @@ struct SeqState {
     prompt_hashes: Vec<u64>,
 }
 
+/// Backing storage for block data — both the pool itself and each spilled
+/// sequence's copy ([`SwappedSeq`]) use this, so the swap paths stay a
+/// plain same-kind byte copy.
+///
+/// `U8` keeps one `[scale, zero]` f32 pair per (position, layer) for K and
+/// for V (`meta` layout: `[k_scale, k_zero, v_scale, v_zero]` per slot):
+/// rows quantize independently at append time, so a block never needs
+/// requantizing as it fills, and copying codes + meta verbatim preserves
+/// values bit-exactly across CoW, sharing, and swap.
+enum Store {
+    F32(Vec<f32>),
+    U8 { data: Vec<u8>, meta: Vec<f32> },
+}
+
 struct SwappedSeq {
-    /// Full block contents, in block-table order.
-    data: Vec<f32>,
+    /// Full block contents, in block-table order (same kind as the pool).
+    payload: Store,
     len: usize,
     n_blocks: usize,
     prompt_hashes: Vec<u64>,
+}
+
+/// Min-max quantize `src` into u8 codes; writes `[scale, zero]` into
+/// `meta`. A constant row gets scale 0 and dequantizes exactly to `zero`.
+fn quantize_row_u8(src: &[f32], dst: &mut [u8], meta: &mut [f32]) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in src {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let scale = if hi > lo { (hi - lo) / 255.0 } else { 0.0 };
+    meta[0] = scale;
+    meta[1] = lo;
+    if scale == 0.0 {
+        dst.fill(0);
+    } else {
+        let inv = 1.0 / scale;
+        for (d, &x) in dst.iter_mut().zip(src) {
+            *d = ((x - lo) * inv).round().clamp(0.0, 255.0) as u8;
+        }
+    }
+}
+
+fn dequantize_row_u8(codes: &[u8], scale: f32, zero: f32, out: &mut Vec<f32>) {
+    out.extend(codes.iter().map(|&q| zero + scale * q as f32));
 }
 
 /// The paged pool. One instance serves all layers of one model.
@@ -181,14 +236,17 @@ struct SwappedSeq {
 /// cache.free_seq(id).unwrap();
 /// ```
 pub struct KvCache {
-    /// floats per (position, layer): 2·e (K and V).
+    /// elements per (position, layer): 2·e (K and V), in either precision.
     floats_per_pos_layer: usize,
     n_layers: usize,
     block_tokens: usize,
     n_blocks: usize,
     max_seq_len: usize,
-    /// backing store: `n_blocks × block_tokens × n_layers × 2e` floats.
-    data: Vec<f32>,
+    /// Bytes per cached token at this pool's precision (sizing/metrics).
+    bytes_per_token: usize,
+    /// backing store: `n_blocks × block_tokens × n_layers × 2e` elements
+    /// (f32, or u8 codes + quantization meta).
+    store: Store,
     blocks: Vec<BlockMeta>,
     /// Truly free blocks (no hash, refcount 0).
     free: Vec<usize>,
@@ -257,17 +315,29 @@ impl KvCache {
         assert!(block_tokens > 0);
         let e = cfg.e();
         let floats_per_pos_layer = 2 * e;
-        let bytes_per_token = floats_per_pos_layer * cfg.n_layers * 4;
+        // u8 blocks: 1 byte per element + 4 f32 meta (K and V scale/zero)
+        // per (position, layer) slot.
+        let bytes_per_pos_layer = if opts.quantized { 2 * e + 16 } else { 2 * e * 4 };
+        let bytes_per_token = bytes_per_pos_layer * cfg.n_layers;
         let block_bytes = bytes_per_token * block_tokens;
         let n_blocks = (budget_bytes / block_bytes).max(1);
-        let total_floats = n_blocks * block_tokens * cfg.n_layers * floats_per_pos_layer;
+        let total_elems = n_blocks * block_tokens * cfg.n_layers * floats_per_pos_layer;
+        let store = if opts.quantized {
+            Store::U8 {
+                data: vec![0u8; total_elems],
+                meta: vec![0.0; n_blocks * block_tokens * cfg.n_layers * 4],
+            }
+        } else {
+            Store::F32(vec![0.0; total_elems])
+        };
         Self {
             floats_per_pos_layer,
             n_layers: cfg.n_layers,
             block_tokens,
             n_blocks,
             max_seq_len: cfg.max_seq_len,
-            data: vec![0.0; total_floats],
+            bytes_per_token,
+            store,
             blocks: vec![BlockMeta::default(); n_blocks],
             free: (0..n_blocks).rev().collect(),
             cached_free: VecDeque::new(),
@@ -286,10 +356,15 @@ impl KvCache {
 
     pub fn sizing(&self) -> CacheSizing {
         CacheSizing {
-            bytes_per_token: self.floats_per_pos_layer * self.n_layers * 4,
+            bytes_per_token: self.bytes_per_token,
             tokens_capacity: self.n_blocks * self.block_tokens,
             n_blocks: self.n_blocks,
         }
+    }
+
+    /// Is this pool storing u8 quantized blocks?
+    pub fn quantized(&self) -> bool {
+        matches!(self.store, Store::U8 { .. })
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -341,6 +416,8 @@ impl KvCache {
             cached_blocks: self.cached_free_count,
             swapped_seqs: self.swapped.len(),
             swapped_blocks: self.swapped_blocks,
+            quantized: self.quantized(),
+            bytes_per_token: self.bytes_per_token,
             stats: self.stats,
         }
     }
@@ -350,8 +427,19 @@ impl KvCache {
         len.div_ceil(self.block_tokens)
     }
 
-    fn block_floats(&self) -> usize {
+    /// Data elements per block (f32 values or u8 codes).
+    fn block_elems(&self) -> usize {
         self.block_tokens * self.n_layers * self.floats_per_pos_layer
+    }
+
+    /// Quantization-meta floats per block (u8 store only).
+    fn block_meta_floats(&self) -> usize {
+        self.block_tokens * self.n_layers * 4
+    }
+
+    /// Offset of (block, pos_in_block, layer) in the meta array.
+    fn meta_index(&self, block: usize, pos_in_block: usize, layer: usize) -> usize {
+        ((block * self.block_tokens + pos_in_block) * self.n_layers + layer) * 4
     }
 
     /// Can a new sequence of `prompt_len` be admitted right now (ignoring
@@ -619,11 +707,26 @@ impl KvCache {
                 limit: self.swap_budget_blocks,
             });
         }
-        let bf = self.block_floats();
-        let mut data = Vec::with_capacity(n * bf);
-        for &b in &st.blocks {
-            data.extend_from_slice(&self.data[b * bf..(b + 1) * bf]);
-        }
+        let bf = self.block_elems();
+        let bm = self.block_meta_floats();
+        let payload = match &self.store {
+            Store::F32(data) => {
+                let mut out = Vec::with_capacity(n * bf);
+                for &b in &st.blocks {
+                    out.extend_from_slice(&data[b * bf..(b + 1) * bf]);
+                }
+                Store::F32(out)
+            }
+            Store::U8 { data, meta } => {
+                let mut out = Vec::with_capacity(n * bf);
+                let mut mout = Vec::with_capacity(n * bm);
+                for &b in &st.blocks {
+                    out.extend_from_slice(&data[b * bf..(b + 1) * bf]);
+                    mout.extend_from_slice(&meta[b * bm..(b + 1) * bm]);
+                }
+                Store::U8 { data: out, meta: mout }
+            }
+        };
         let st = self.seqs.remove(&id).unwrap();
         for &b in &st.blocks {
             self.unref_block(b);
@@ -631,7 +734,7 @@ impl KvCache {
         self.swapped.insert(
             id,
             SwappedSeq {
-                data,
+                payload,
                 len: st.len,
                 n_blocks: n,
                 prompt_hashes: st.prompt_hashes,
@@ -701,9 +804,19 @@ impl KvCache {
         let reused = shared.len();
         let mut blocks = shared;
         blocks.extend(fresh);
-        let bf = self.block_floats();
+        let bf = self.block_elems();
+        let bm = self.block_meta_floats();
         for (i, &b) in blocks.iter().enumerate().skip(reused) {
-            self.data[b * bf..(b + 1) * bf].copy_from_slice(&sw.data[i * bf..(i + 1) * bf]);
+            match (&mut self.store, &sw.payload) {
+                (Store::F32(data), Store::F32(src)) => {
+                    data[b * bf..(b + 1) * bf].copy_from_slice(&src[i * bf..(i + 1) * bf]);
+                }
+                (Store::U8 { data, meta }, Store::U8 { data: sd, meta: sm }) => {
+                    data[b * bf..(b + 1) * bf].copy_from_slice(&sd[i * bf..(i + 1) * bf]);
+                    meta[b * bm..(b + 1) * bm].copy_from_slice(&sm[i * bm..(i + 1) * bm]);
+                }
+                _ => unreachable!("spill payload kind matches the pool store"),
+            }
         }
         // restored full prompt blocks may have been evicted from the index
         // since swap-out — re-register them for future sharers
@@ -776,8 +889,15 @@ impl KvCache {
                 free: 0,
             })?;
             self.blocks[nb].refcount = 1;
-            let bf = self.block_floats();
-            self.data.copy_within(phys * bf..(phys + 1) * bf, nb * bf);
+            let bf = self.block_elems();
+            let bm = self.block_meta_floats();
+            match &mut self.store {
+                Store::F32(data) => data.copy_within(phys * bf..(phys + 1) * bf, nb * bf),
+                Store::U8 { data, meta } => {
+                    data.copy_within(phys * bf..(phys + 1) * bf, nb * bf);
+                    meta.copy_within(phys * bm..(phys + 1) * bm, nb * bm);
+                }
+            }
             self.unref_block(phys);
             self.seqs.get_mut(&id).unwrap().blocks[block] = nb;
             self.stats.cow_copies += 1;
@@ -785,8 +905,17 @@ impl KvCache {
             phys = nb;
         }
         let off = self.offset(phys, pib, layer);
-        self.data[off..off + e].copy_from_slice(k);
-        self.data[off + e..off + 2 * e].copy_from_slice(v);
+        let mi = self.meta_index(phys, pib, layer);
+        match &mut self.store {
+            Store::F32(data) => {
+                data[off..off + e].copy_from_slice(k);
+                data[off + e..off + 2 * e].copy_from_slice(v);
+            }
+            Store::U8 { data, meta } => {
+                quantize_row_u8(k, &mut data[off..off + e], &mut meta[mi..mi + 2]);
+                quantize_row_u8(v, &mut data[off + e..off + 2 * e], &mut meta[mi + 2..mi + 4]);
+            }
+        }
         Ok(())
     }
 
@@ -816,8 +945,18 @@ impl KvCache {
         for pos in 0..st.len {
             let phys = st.blocks[pos / self.block_tokens];
             let off = self.offset(phys, pos % self.block_tokens, layer);
-            k_out.extend_from_slice(&self.data[off..off + e]);
-            v_out.extend_from_slice(&self.data[off + e..off + 2 * e]);
+            match &self.store {
+                Store::F32(data) => {
+                    k_out.extend_from_slice(&data[off..off + e]);
+                    v_out.extend_from_slice(&data[off + e..off + 2 * e]);
+                }
+                Store::U8 { data, meta } => {
+                    let mi = self.meta_index(phys, pos % self.block_tokens, layer);
+                    let (kc, vc) = data[off..off + 2 * e].split_at(e);
+                    dequantize_row_u8(kc, meta[mi], meta[mi + 1], k_out);
+                    dequantize_row_u8(vc, meta[mi + 2], meta[mi + 3], v_out);
+                }
+            }
         }
         Ok(st.len)
     }
@@ -1121,6 +1260,7 @@ mod tests {
             CacheOpts {
                 prefix_sharing: true,
                 swap_budget_blocks: Some(1),
+                ..Default::default()
             },
         );
         let id = c.alloc_seq(8).unwrap(); // 2 blocks > budget 1
@@ -1162,6 +1302,126 @@ mod tests {
         c.free_seq(id).unwrap();
         assert_eq!(c.n_swapped(), 0);
         assert!(c.swap_in(id).is_err());
+    }
+
+    // ---- lifecycle: u8 quantized blocks -------------------------------
+
+    fn qcache(budget_kb: usize) -> (ModelConfig, KvCache) {
+        let cfg = ModelConfig::tiny_gqa();
+        let c = KvCache::with_opts(
+            &cfg,
+            4,
+            budget_kb * 1024,
+            CacheOpts {
+                quantized: true,
+                ..Default::default()
+            },
+        );
+        (cfg, c)
+    }
+
+    #[test]
+    fn quantized_pool_holds_more_tokens() {
+        // e2e-100m geometry (e = 128): f32 = 1024 B per (pos, layer), u8 =
+        // 2·128 + 16 = 272 B → ≥ 3x the tokens at equal budget.
+        let cfg = ModelConfig::e2e_100m();
+        let f = KvCache::new(&cfg, 16, 8 << 20);
+        let q = KvCache::with_opts(
+            &cfg,
+            16,
+            8 << 20,
+            CacheOpts {
+                quantized: true,
+                ..Default::default()
+            },
+        );
+        assert!(q.quantized() && !f.quantized());
+        assert!(q.sizing().bytes_per_token * 3 <= f.sizing().bytes_per_token);
+        let r = q.sizing().tokens_capacity as f64 / f.sizing().tokens_capacity as f64;
+        assert!(r >= 3.0, "capacity ratio {r}");
+    }
+
+    #[test]
+    fn quantized_roundtrip_within_step_bound() {
+        let (cfg, mut c) = qcache(64);
+        let e = cfg.e();
+        let id = c.alloc_seq(3).unwrap();
+        fill(&mut c, &cfg, id, 0, 3, 0.0);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        let len = c.gather(id, 1, &mut k, &mut v).unwrap();
+        assert_eq!(len, 3);
+        // fill() writes rows spanning [base, base + e - 1]: the u8 step is
+        // (e-1)/255 ≈ 0.06, so every read-back lands within step/2 + f32
+        // roundoff of what was written.
+        for pos in 0..3 {
+            for i in 0..e {
+                let want = (pos * 100 + 10 + i) as f32;
+                let got = k[pos * e + i];
+                assert!((got - want).abs() < 0.05, "k[{pos},{i}]: {got} vs {want}");
+                assert!((v[pos * e + i] + want).abs() < 0.05, "v[{pos},{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_swap_roundtrip_is_code_identical() {
+        let (cfg, mut c) = qcache(64);
+        let id = c.alloc_seq(6).unwrap();
+        fill(&mut c, &cfg, id, 0, 6, 3000.0);
+        let (mut k0, mut v0) = (Vec::new(), Vec::new());
+        c.gather(id, 1, &mut k0, &mut v0).unwrap();
+        c.swap_out(id).unwrap();
+        // churn the pool while the sequence is out
+        let other = c.alloc_seq(8).unwrap();
+        fill(&mut c, &cfg, other, 0, 8, 777.0);
+        c.free_seq(other).unwrap();
+        c.swap_in(id).unwrap();
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        c.gather(id, 1, &mut k1, &mut v1).unwrap();
+        assert_eq!(k0, k1, "codes changed across swap");
+        assert_eq!(v0, v1);
+    }
+
+    #[test]
+    fn quantized_fork_cow_isolates_divergence() {
+        let (cfg, mut c) = qcache(64);
+        let id = c.alloc_seq(6).unwrap();
+        fill(&mut c, &cfg, id, 0, 6, 0.0);
+        let f = c.fork_seq(id).unwrap();
+        fill(&mut c, &cfg, f, 6, 1, 5000.0);
+        assert!(c.stats().cow_copies > 0);
+        fill(&mut c, &cfg, id, 6, 1, 9000.0);
+        let e = cfg.e();
+        let (mut kf, mut vf) = (Vec::new(), Vec::new());
+        let (mut ki, mut vi) = (Vec::new(), Vec::new());
+        c.gather(f, 0, &mut kf, &mut vf).unwrap();
+        c.gather(id, 0, &mut ki, &mut vi).unwrap();
+        // shared prefix decodes identically (same codes), divergent tail
+        // reflects each sequence's own writes
+        assert_eq!(&kf[..6 * e], &ki[..6 * e], "shared prefix diverged");
+        assert!((kf[6 * e] - 5600.0).abs() < 1.0);
+        assert!((ki[6 * e] - 9600.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantized_prefix_sharing_reuses_blocks() {
+        let (cfg, mut c) = qcache(64);
+        let prompt: Vec<u32> = (0..9).collect();
+        let (a, _) = c.alloc_seq_shared(&prompt).unwrap();
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        let (b, reused) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused, 8);
+        fill(&mut c, &cfg, b, 8, 1, 0.0);
+        // both sequences read identical codes for the shared prefix
+        let e = cfg.e();
+        let (mut ka, mut va) = (Vec::new(), Vec::new());
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        c.gather(a, 0, &mut ka, &mut va).unwrap();
+        c.gather(b, 0, &mut kb, &mut vb).unwrap();
+        assert_eq!(&ka[..8 * e], &kb[..8 * e]);
+        let snap = c.snapshot();
+        assert!(snap.quantized);
+        assert_eq!(snap.bytes_per_token, (2 * e + 16) * cfg.n_layers);
     }
 
     #[test]

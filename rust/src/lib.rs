@@ -27,6 +27,13 @@
 //! [`coordinator`] scheduler drives all three; `benches/prefix_cache.rs`
 //! measures the saved prefill work.
 //!
+//! Quantization compounds the paper's savings (DESIGN.md §Quantization):
+//! [`model::quantize`] converts the surviving GEMM weights to INT8
+//! ([`tensor::QMat`] codes driven by the [`linalg::qmatmul`] kernel), and
+//! [`kvcache::CacheOpts::quantized`] switches the paged pool to u8 blocks
+//! — the merged-then-quantized model streams ~4x fewer bytes per decoded
+//! token and holds ~4x more tokens per cache budget.
+//!
 //! See `DESIGN.md` for the design notes and experiment index, and
 //! `EXPERIMENTS.md` for bench methodology and measured numbers.
 

@@ -108,14 +108,17 @@ fn gemm_cols(a: &Mat, b: &Mat, out: &mut Mat, c0: usize, c1: usize) {
 }
 
 struct AddrSend(*const Mat);
-struct AddrSendMut(*mut Mat);
+/// Send+Sync raw-pointer wrapper for handing a `Mat` to `scope_chunks`
+/// workers that write **disjoint output regions** (shared with
+/// [`super::qgemm`], which uses the same pattern over output columns).
+pub(crate) struct AddrSendMut(pub(crate) *mut Mat);
 impl AddrSend {
     fn get(&self) -> *const Mat {
         self.0
     }
 }
 impl AddrSendMut {
-    fn get(&self) -> *mut Mat {
+    pub(crate) fn get(&self) -> *mut Mat {
         self.0
     }
 }

@@ -11,9 +11,11 @@
 
 pub mod gemm;
 pub mod lu;
+pub mod qgemm;
 
 pub use gemm::{matmul, matmul_bias, matmul_into, matvec, matmul_transb};
 pub use lu::{cond_estimate, inverse, solve, Lu, LuError};
+pub use qgemm::qmatmul;
 
 use crate::tensor::Mat;
 

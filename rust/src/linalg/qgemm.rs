@@ -1,0 +1,182 @@
+//! INT8 GEMM: `i8×i8→i32` dot products with an f32 rescale epilogue.
+//!
+//! The weight operand is a [`QMat`] stored transposed (`(n, k)` rows are
+//! output channels — see [`QMat::from_weight`]); activations are quantized
+//! on the fly, one symmetric scale per row ([`QMat::quantize_rows`]). Both
+//! operands are then read with unit stride (the `matmul_transb` trick), the
+//! i32 accumulator is exact (|code| ≤ 127 ⇒ any `k` below ~130k positions
+//! fits), and the per-row × per-channel scales factor out of the integer
+//! dot, so the only rounding beyond quantization itself is the final f32
+//! multiply: `out[r][c] = x_scale[r] · w_scale[c] · Σ xq[r]·wq[c]`.
+//!
+//! Row-wise independence makes the result **batch-invariant**: row `r` of
+//! the output depends only on row `r` of `x`, regardless of how many other
+//! rows ride in the same call — the property `decode_batch` tests rely on.
+//! Threading mirrors [`super::gemm`]: output columns are distributed over
+//! the global pool in disjoint chunks, which also keeps each element's
+//! accumulation order fixed.
+
+use super::gemm::AddrSendMut;
+use crate::tensor::{Mat, QMat};
+use crate::util::threadpool;
+
+/// `x (m,k) @ W (k,n) -> (m,n)` where `W` arrives pre-quantized and
+/// transposed as a `(n, k)` [`QMat`].
+pub fn qmatmul(x: &Mat, w: &QMat) -> Mat {
+    let (m, k) = x.shape();
+    assert_eq!(w.cols(), k, "qmatmul inner-dim mismatch: {} vs {}", k, w.cols());
+    let n = w.rows();
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let xq = QMat::quantize_rows(x);
+    // Threading pays off only with enough arithmetic (same policy as gemm).
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    if flops < 1.0e6 {
+        qgemm_cols(&xq, w, &mut out, 0, n);
+        return out;
+    }
+    let out_ptr = AddrSendMut(&mut out as *mut Mat);
+    let xq_ref = &xq;
+    threadpool::global().scope_chunks(n, 32, move |c0, c1| {
+        // SAFETY: chunks write disjoint column ranges of `out`;
+        // scope_chunks joins before this function returns.
+        let out = unsafe { &mut *out_ptr.get() };
+        qgemm_cols(xq_ref, w, out, c0, c1);
+    });
+    out
+}
+
+/// Serial kernel over output columns `[c0, c1)`.
+///
+/// 4-row blocks stream each weight row once for FOUR activation rows
+/// (prefill / batched decode); the tail handles the batch-1 GEMV shape,
+/// which is weight-streaming-bound anyway — exactly the regime where INT8's
+/// 4x-smaller weight rows pay off.
+fn qgemm_cols(x: &QMat, w: &QMat, out: &mut Mat, c0: usize, c1: usize) {
+    let k = x.cols();
+    let n = out.cols();
+    let mut r = 0;
+    while r + 4 <= x.rows() {
+        let (x0, x1, x2, x3) = (x.row(r), x.row(r + 1), x.row(r + 2), x.row(r + 3));
+        let (s0, s1, s2, s3) = (x.scale(r), x.scale(r + 1), x.scale(r + 2), x.scale(r + 3));
+        // SAFETY: disjoint rows of `out`.
+        let (o0, rest) = out.as_mut_slice()[r * n..].split_at_mut(n);
+        let (o1, rest) = rest.split_at_mut(n);
+        let (o2, rest) = rest.split_at_mut(n);
+        let o3 = &mut rest[..n];
+        for c in c0..c1 {
+            let wrow = w.row(c);
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for i in 0..k {
+                let wv = wrow[i] as i32;
+                a0 += x0[i] as i32 * wv;
+                a1 += x1[i] as i32 * wv;
+                a2 += x2[i] as i32 * wv;
+                a3 += x3[i] as i32 * wv;
+            }
+            let ws = w.scale(c);
+            o0[c] = a0 as f32 * s0 * ws;
+            o1[c] = a1 as f32 * s1 * ws;
+            o2[c] = a2 as f32 * s2 * ws;
+            o3[c] = a3 as f32 * s3 * ws;
+        }
+        r += 4;
+    }
+    while r < x.rows() {
+        let xrow = x.row(r);
+        let xs = x.scale(r);
+        let orow = out.row_mut(r);
+        for c in c0..c1 {
+            let wrow = w.row(c);
+            let mut acc = 0i32;
+            for i in 0..k {
+                acc += xrow[i] as i32 * wrow[i] as i32;
+            }
+            orow[c] = acc as f32 * xs * w.scale(c);
+        }
+        r += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Xoshiro256;
+
+    /// Entries in {-1, 0, 1} quantize exactly (scale = 1/127, codes
+    /// ±127/0), so qmatmul must agree with the f32 GEMM to roundoff.
+    #[test]
+    fn exact_on_ternary_inputs() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let tern = |rng: &mut Xoshiro256, r: usize, c: usize| {
+            Mat::from_fn(r, c, |_, _| (rng.next_below(3) as f32) - 1.0)
+        };
+        for &(m, k, n) in &[(1usize, 16, 8), (5, 33, 12), (9, 64, 64)] {
+            let a = tern(&mut rng, m, k);
+            let b = tern(&mut rng, k, n);
+            let got = qmatmul(&a, &QMat::from_weight(&b));
+            let want = matmul(&a, &b);
+            let err = got.max_abs_diff(&want);
+            assert!(err < 1e-3, "({m},{k},{n}) err {err}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_f32_gemm_random() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        for &(m, k, n) in &[(1usize, 64, 256), (3, 640, 640), (17, 128, 300), (257, 64, 96)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let got = qmatmul(&a, &QMat::from_weight(&b));
+            let want = matmul(&a, &b);
+            let err = got.rel_fro_err(&want);
+            assert!(err < 0.03, "({m},{k},{n}) rel err {err}");
+        }
+    }
+
+    /// Row-wise batch invariance, bit-exact: computing rows together or
+    /// one at a time must produce identical f32 output.
+    #[test]
+    fn batch_invariant_bit_exact() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let x = Mat::randn(6, 48, 1.0, &mut rng);
+        let w = QMat::from_weight(&Mat::randn(48, 32, 1.0, &mut rng));
+        let batched = qmatmul(&x, &w);
+        for r in 0..x.rows() {
+            let solo = qmatmul(&x.row_slice(r, r + 1), &w);
+            assert_eq!(solo.row(0), batched.row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn threaded_path_matches_serial() {
+        // big enough to cross the flops threshold and span many chunks
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let x = Mat::randn(8, 200, 1.0, &mut rng);
+        let wf = Mat::randn(200, 640, 1.0, &mut rng);
+        let w = QMat::from_weight(&wf);
+        let got = qmatmul(&x, &w);
+        let xq = QMat::quantize_rows(&x);
+        let mut want = Mat::zeros(8, 640);
+        qgemm_cols(&xq, &w, &mut want, 0, 640);
+        assert_eq!(got, want, "threading changed results");
+    }
+
+    #[test]
+    fn empty_dims() {
+        let x = Mat::zeros(0, 5);
+        let w = QMat::from_weight(&Mat::zeros(5, 3));
+        assert_eq!(qmatmul(&x, &w).shape(), (0, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "inner-dim mismatch")]
+    fn shape_mismatch_panics() {
+        let x = Mat::zeros(2, 3);
+        let w = QMat::from_weight(&Mat::zeros(4, 2));
+        let _ = qmatmul(&x, &w);
+    }
+}

@@ -35,6 +35,8 @@ fn cli() -> Command {
                 .opt_default("cache-mb", "256", "KV cache budget (MiB, CPU engine)")
                 .opt_default("max-running", "32", "max concurrent sequences")
                 .flag("no-prefix-cache", "disable automatic prefix sharing (CPU engine)")
+                .opt_default("quantize", "none", "weights: none|int8 (per-channel symmetric)")
+                .flag("quantize-kv", "u8 KV-cache blocks: ~4x tokens per budget (CPU engine)")
                 .opt_default("log", "info", "log level"),
         )
         .subcommand(
@@ -45,7 +47,9 @@ fn cli() -> Command {
                 .opt_default("seed", "1", "init seed when no weights given")
                 .opt_default("prompt", "1,2,3", "comma-separated token ids")
                 .opt_default("max-new", "16", "tokens to generate")
-                .opt_default("temperature", "0", "sampling temperature (0 = greedy)"),
+                .opt_default("temperature", "0", "sampling temperature (0 = greedy)")
+                .opt_default("quantize", "none", "weights: none|int8 (per-channel symmetric)")
+                .flag("quantize-kv", "u8 KV-cache blocks: ~4x tokens per budget"),
         )
         .subcommand(
             Command::new("init", "write randomly-initialized vanilla weights")
@@ -59,6 +63,7 @@ fn cli() -> Command {
                 .opt_default("variant", "merged_qp", "merged_qp|merged_kp|merged_vp")
                 .opt("out", "output path (.swt)")
                 .opt_default("cond-limit", "1e7", "max pivot condition number")
+                .opt_default("quantize", "none", "weights: none|int8 (applied after the merge)")
                 .flag("verify", "run a logits-equivalence check after merging"),
         )
         .subcommand(
@@ -139,30 +144,70 @@ fn load_or_init(args: &skipless::util::cli::Args) -> Result<ModelWeights, AnyErr
 
 fn log_summary(w: &ModelWeights) {
     skipless::log_info!(
-        "model {} [{}]: {} weights ({:.1} MiB f32)",
+        "model {} [{}{}]: {} weights ({:.1} MiB resident, {:.1} MiB at f32)",
         w.cfg.name,
         w.variant.name(),
+        if w.is_quantized() { "/int8" } else { "" },
         w.stored_weights(),
+        w.resident_bytes() as f64 / (1 << 20) as f64,
         w.stored_bytes() as f64 / (1 << 20) as f64
     );
+}
+
+/// Apply `--quantize` (after any surgery — the passes only compose that
+/// way; see DESIGN.md §Quantization).
+fn apply_quantize(
+    args: &skipless::util::cli::Args,
+    w: ModelWeights,
+) -> Result<ModelWeights, AnyError> {
+    match args.get_or("quantize", "none") {
+        "none" | "f32" => Ok(w),
+        "int8" => {
+            let q = skipless::model::quantize(&w);
+            log_summary(&q);
+            Ok(q)
+        }
+        other => Err(format!("bad --quantize '{other}' (expected none|int8)").into()),
+    }
 }
 
 fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
     if let Some(l) = Level::parse(args.get_or("log", "info")) {
         logging::set_level(l);
     }
-    let w = load_or_init(args)?;
+    // Fail before boot, not inside the coordinator thread: the PJRT
+    // artifacts are lowered for f32 weights and an f32 KV layout.
+    if args.get("artifacts").is_some()
+        && (!matches!(args.get_or("quantize", "none"), "none" | "f32") || args.flag("quantize-kv"))
+    {
+        return Err(
+            "the PJRT engine (--artifacts) is f32-only; drop --quantize/--quantize-kv \
+             or serve on the CPU engine"
+                .into(),
+        );
+    }
+    let w = apply_quantize(args, load_or_init(args)?)?;
     let sched = SchedulerCfg {
         max_running: args.num_or("max-running", 32)?,
         admits_per_step: 4,
     };
     let coordinator = if let Some(dir) = args.get("artifacts") {
+        // Also catches quantized .swt files loaded via --weights, which the
+        // flag guard above cannot see.
+        if w.is_quantized() {
+            return Err(
+                "the PJRT engine (--artifacts) is f32-only; these weights are int8 — \
+                 serve them on the CPU engine"
+                    .into(),
+            );
+        }
         let dir = PathBuf::from(dir);
         Coordinator::spawn_with(move || PjrtEngine::boot(&dir, &w, 64).expect("pjrt boot"), sched)
     } else {
         let cache_mb: usize = args.num_or("cache-mb", 256)?;
         let opts = skipless::kvcache::CacheOpts {
             prefix_sharing: !args.flag("no-prefix-cache"),
+            quantized: args.flag("quantize-kv"),
             ..Default::default()
         };
         Coordinator::spawn(
@@ -180,13 +225,20 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
 }
 
 fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
-    let w = load_or_init(args)?;
+    let w = apply_quantize(args, load_or_init(args)?)?;
     let prompt: Vec<u32> = args
         .get_or("prompt", "1,2,3")
         .split(',')
         .map(|t| t.trim().parse::<u32>())
         .collect::<Result<_, _>>()?;
-    let coordinator = Coordinator::spawn(CpuEngine::new(w, 16, 256 << 20), SchedulerCfg::default());
+    let opts = skipless::kvcache::CacheOpts {
+        quantized: args.flag("quantize-kv"),
+        ..Default::default()
+    };
+    let coordinator = Coordinator::spawn(
+        CpuEngine::with_cache_opts(w, 16, 256 << 20, opts),
+        SchedulerCfg::default(),
+    );
     let req = Request {
         id: 0,
         prompt,
@@ -238,24 +290,9 @@ fn cmd_surgery(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
     let t0 = std::time::Instant::now();
     let merged = surgery::transform(&w, variant, opts)?;
     let dt = t0.elapsed();
-    let out = args
-        .get("out")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| {
-            PathBuf::from(input.replace(".swt", &format!(".{}.swt", variant.name())))
-        });
-    weights_io::save(&merged, &out)?;
-    let saved = w.stored_weights() - merged.stored_weights();
-    println!(
-        "surgery [{}] in {:?}: {} → {} weights (−{}, −{:.1}%)\nwrote {}",
-        variant.name(),
-        dt,
-        w.stored_weights(),
-        merged.stored_weights(),
-        saved,
-        100.0 * saved as f64 / w.stored_weights() as f64,
-        out.display()
-    );
+    // The equivalence check verifies the exact f32 algebra, so it runs on
+    // the merged weights BEFORE any --quantize int8 (whose ~1% drift is a
+    // property of quantization, not of the merge).
     if args.flag("verify") {
         let toks = [1u32, 2, 3, 4, 5];
         let (l0, _) = skipless::model::prefill(&w, &toks);
@@ -266,6 +303,26 @@ fn cmd_surgery(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
             return Err(format!("verification FAILED: rel err {rel:.3e} > 1e-3").into());
         }
     }
+    let merged = apply_quantize(args, merged)?;
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(input.replace(".swt", &format!(".{}.swt", variant.name())))
+        });
+    weights_io::save(&merged, &out)?;
+    let saved = w.stored_weights() - merged.stored_weights();
+    println!(
+        "surgery [{}{}] in {:?}: {} → {} weights (−{}, −{:.1}%)\nwrote {}",
+        variant.name(),
+        if merged.is_quantized() { "/int8" } else { "" },
+        dt,
+        w.stored_weights(),
+        merged.stored_weights(),
+        saved,
+        100.0 * saved as f64 / w.stored_weights() as f64,
+        out.display()
+    );
     Ok(())
 }
 

@@ -137,6 +137,15 @@ pub struct Metrics {
     pub kv_blocks_cached: AtomicU64,
     pub kv_swapped_seqs: AtomicU64,
     pub kv_swapped_blocks: AtomicU64,
+    /// Live blocks held in u8 quantized form (0 on an f32 pool).
+    pub kv_quantized_blocks: AtomicU64,
+    /// Bytes per cached token at the pool's precision.
+    pub kv_bytes_per_token: AtomicU64,
+    // -- quantization (weights side) -------------------------------------
+    /// Bytes the weights would occupy at f32.
+    pub weight_bytes_f32: AtomicU64,
+    /// Bytes the weights actually occupy resident.
+    pub weight_bytes_resident: AtomicU64,
     pub ttft: Histogram,
     pub tpot: Histogram,
     pub e2e: Histogram,
@@ -197,6 +206,24 @@ impl Metrics {
                     ("blocks_cached", g(&self.kv_blocks_cached)),
                     ("swapped_seqs", g(&self.kv_swapped_seqs)),
                     ("swapped_blocks", g(&self.kv_swapped_blocks)),
+                    ("quantized_blocks", g(&self.kv_quantized_blocks)),
+                    ("bytes_per_token", g(&self.kv_bytes_per_token)),
+                ]),
+            ),
+            (
+                "quant",
+                Json::obj(vec![
+                    ("weight_bytes_f32", g(&self.weight_bytes_f32)),
+                    ("weight_bytes_resident", g(&self.weight_bytes_resident)),
+                    (
+                        "weight_bytes_saved",
+                        Json::num(
+                            self.weight_bytes_f32
+                                .load(Ordering::Relaxed)
+                                .saturating_sub(self.weight_bytes_resident.load(Ordering::Relaxed))
+                                as f64,
+                        ),
+                    ),
                 ]),
             ),
             ("ttft", self.ttft.to_json()),
@@ -270,6 +297,23 @@ mod tests {
         // gauges overwrite rather than accumulate
         Metrics::set(&m.kv_swap_outs, 2);
         assert_eq!(m.kv_swap_outs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn quant_gauges_in_json() {
+        let m = Metrics::new();
+        Metrics::set(&m.weight_bytes_f32, 4000);
+        Metrics::set(&m.weight_bytes_resident, 1100);
+        Metrics::set(&m.kv_quantized_blocks, 5);
+        Metrics::set(&m.kv_bytes_per_token, 96);
+        let j = m.to_json();
+        let q = j.get("quant").unwrap();
+        assert_eq!(q.get("weight_bytes_f32").unwrap().as_u64(), Some(4000));
+        assert_eq!(q.get("weight_bytes_resident").unwrap().as_u64(), Some(1100));
+        assert_eq!(q.get("weight_bytes_saved").unwrap().as_u64(), Some(2900));
+        let kv = j.get("kv_cache").unwrap();
+        assert_eq!(kv.get("quantized_blocks").unwrap().as_u64(), Some(5));
+        assert_eq!(kv.get("bytes_per_token").unwrap().as_u64(), Some(96));
     }
 
     #[test]

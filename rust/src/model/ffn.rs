@@ -6,27 +6,27 @@
 //! model is the same program over fewer matrices.
 
 use crate::config::FfnKind;
-use crate::linalg::matmul;
-use crate::model::{gelu, silu};
+use crate::model::{gelu, silu, Weight};
 use crate::tensor::Mat;
 
-/// Apply the FFN: `x (t,d)` → `(t,d)`.
+/// Apply the FFN: `x (t,d)` → `(t,d)`. Works in whatever precision the
+/// weights are stored ([`Weight::matmul`] dispatches f32 vs INT8).
 ///
 /// MLP: `gelu(x·M)·O` with `M: d×f`, `O: f×d`.
 /// SwiGLU: `M = [G ‖ U]: d×2f`; `(silu(x·G) ⊙ (x·U))·O`.
-pub fn ffn_forward(x: &Mat, m: &Mat, o: &Mat, kind: FfnKind) -> Mat {
+pub fn ffn_forward(x: &Mat, m: &Weight, o: &Weight, kind: FfnKind) -> Mat {
     match kind {
         FfnKind::Mlp => {
-            let mut h = matmul(x, m);
+            let mut h = m.matmul(x);
             for v in h.as_mut_slice() {
                 *v = gelu(*v);
             }
-            matmul(&h, o)
+            o.matmul(&h)
         }
         FfnKind::SwiGlu => {
             let f = o.rows();
             assert_eq!(m.cols(), 2 * f, "SwiGLU M must be d×2f");
-            let h = matmul(x, m); // (t, 2f): gate ‖ up
+            let h = m.matmul(x); // (t, 2f): gate ‖ up
             let mut gated = Mat::zeros(x.rows(), f);
             for r in 0..x.rows() {
                 let hrow = h.row(r);
@@ -35,7 +35,7 @@ pub fn ffn_forward(x: &Mat, m: &Mat, o: &Mat, kind: FfnKind) -> Mat {
                     grow[c] = silu(hrow[c]) * hrow[f + c];
                 }
             }
-            matmul(&gated, o)
+            o.matmul(&gated)
         }
     }
 }
@@ -45,11 +45,15 @@ mod tests {
     use super::*;
     use crate::util::rng::Xoshiro256;
 
+    fn w(m: Mat) -> Weight {
+        Weight::F32(m)
+    }
+
     #[test]
     fn mlp_matches_manual() {
         let x = Mat::from_vec(1, 2, vec![1.0, -1.0]);
-        let m = Mat::from_vec(2, 3, vec![1., 0., 2., 0., 1., -1.]);
-        let o = Mat::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let m = w(Mat::from_vec(2, 3, vec![1., 0., 2., 0., 1., -1.]));
+        let o = w(Mat::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]));
         let out = ffn_forward(&x, &m, &o, FfnKind::Mlp);
         // h = [1, -1, 3] → gelu → [0.8412, -0.1588, 2.9960]
         let h: Vec<f32> = [1.0f32, -1.0, 3.0].iter().map(|&v| gelu(v)).collect();
@@ -62,8 +66,8 @@ mod tests {
     fn swiglu_matches_manual() {
         // d=2, f=2: M = [G|U] is 2×4, O is 2×2
         let x = Mat::from_vec(1, 2, vec![0.5, 2.0]);
-        let m = Mat::from_vec(2, 4, vec![1., 0., 1., 1., 0., 1., -1., 0.5]);
-        let o = Mat::eye(2);
+        let m = w(Mat::from_vec(2, 4, vec![1., 0., 1., 1., 0., 1., -1., 0.5]));
+        let o = w(Mat::eye(2));
         let out = ffn_forward(&x, &m, &o, FfnKind::SwiGlu);
         let g = [0.5f32, 2.0]; // x·G
         let u = [0.5 - 2.0, 0.5 + 1.0]; // x·U
@@ -76,8 +80,8 @@ mod tests {
     fn swiglu_gate_zero_kills_output() {
         // zero gate → silu(0)=0 → output 0 regardless of up-projection
         let x = Mat::from_vec(1, 2, vec![1.0, 1.0]);
-        let m = Mat::from_vec(2, 4, vec![0., 0., 5., -3., 0., 0., 7., 2.]);
-        let o = Mat::eye(2);
+        let m = w(Mat::from_vec(2, 4, vec![0., 0., 5., -3., 0., 0., 7., 2.]));
+        let o = w(Mat::eye(2));
         let out = ffn_forward(&x, &m, &o, FfnKind::SwiGlu);
         assert_eq!(out.as_slice(), &[0.0, 0.0]);
     }
@@ -86,19 +90,37 @@ mod tests {
     fn shapes_roundtrip() {
         let mut rng = Xoshiro256::seed_from_u64(1);
         let x = Mat::randn(5, 8, 0.5, &mut rng);
-        let m_mlp = Mat::randn(8, 16, 0.5, &mut rng);
-        let o = Mat::randn(16, 8, 0.5, &mut rng);
+        let m_mlp = w(Mat::randn(8, 16, 0.5, &mut rng));
+        let o = w(Mat::randn(16, 8, 0.5, &mut rng));
         assert_eq!(ffn_forward(&x, &m_mlp, &o, FfnKind::Mlp).shape(), (5, 8));
-        let m_glu = Mat::randn(8, 32, 0.5, &mut rng);
+        let m_glu = w(Mat::randn(8, 32, 0.5, &mut rng));
         assert_eq!(ffn_forward(&x, &m_glu, &o, FfnKind::SwiGlu).shape(), (5, 8));
+    }
+
+    #[test]
+    fn int8_ffn_tracks_f32() {
+        use crate::tensor::QMat;
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x = Mat::randn(4, 16, 1.0, &mut rng);
+        let m = Mat::randn(16, 24, 0.5, &mut rng);
+        let o = Mat::randn(24, 16, 0.5, &mut rng);
+        let want = ffn_forward(&x, &w(m.clone()), &w(o.clone()), FfnKind::Mlp);
+        let got = ffn_forward(
+            &x,
+            &Weight::Int8(QMat::from_weight(&m)),
+            &Weight::Int8(QMat::from_weight(&o)),
+            FfnKind::Mlp,
+        );
+        let err = got.rel_fro_err(&want);
+        assert!(err < 0.05, "int8 FFN rel err {err}");
     }
 
     #[test]
     #[should_panic(expected = "SwiGLU M must be d×2f")]
     fn swiglu_rejects_odd_m() {
         let x = Mat::zeros(1, 2);
-        let m = Mat::zeros(2, 3);
-        let o = Mat::zeros(2, 2);
+        let m = w(Mat::zeros(2, 3));
+        let o = w(Mat::zeros(2, 2));
         let _ = ffn_forward(&x, &m, &o, FfnKind::SwiGlu);
     }
 }

@@ -6,10 +6,9 @@
 //! equivalence experiments (Fig. 1/2/3) run both and compare logits.
 
 use crate::config::BlockLayout;
-use crate::linalg::matmul;
 use crate::model::attention::{causal_attention, decode_attention, HeadLayout};
 use crate::model::ffn::ffn_forward;
-use crate::model::{rope, BlockWeights, ModelWeights};
+use crate::model::{rope, BlockWeights, ModelWeights, Weight};
 use crate::tensor::Mat;
 
 /// Per-sequence KV cache + position for autoregressive decoding.
@@ -45,22 +44,14 @@ fn head_layout(w: &ModelWeights) -> HeadLayout {
     }
 }
 
-/// Project through an optional matrix (`None` = identity = eliminated).
-fn proj(x: &Mat, m: &Option<Mat>) -> Mat {
-    match m {
-        Some(m) => matmul(x, m),
-        None => x.clone(),
-    }
-}
-
 /// One serial block: `FFN(P(Attn(Q x, K x, V x)))` with eliminated
 /// matrices as identity (paper Fig. 1).
 fn serial_block(x: &Mat, b: &BlockWeights, w: &ModelWeights, pos0: usize) -> Mat {
-    let q = proj(x, &b.q);
-    let k = proj(x, &b.k);
-    let v = proj(x, &b.v);
+    let q = Weight::proj(x, &b.q);
+    let k = Weight::proj(x, &b.k);
+    let v = Weight::proj(x, &b.v);
     let a = causal_attention(&q, &k, &v, head_layout(w), pos0);
-    let p = proj(&a, &b.p);
+    let p = Weight::proj(&a, &b.p);
     ffn_forward(&p, &b.m, &b.o, w.cfg.ffn)
 }
 
@@ -68,12 +59,12 @@ fn serial_block(x: &Mat, b: &BlockWeights, w: &ModelWeights, pos0: usize) -> Mat
 /// post-attention matrix is `p` (vanilla), `c` (carry-merged exact form,
 /// `C = P·Q_next`), or absent (native merged form).
 fn parallel_block(x: &Mat, b: &BlockWeights, w: &ModelWeights, pos0: usize) -> Mat {
-    let q = proj(x, &b.q);
-    let k = proj(x, &b.k);
-    let v = proj(x, &b.v);
+    let q = Weight::proj(x, &b.q);
+    let k = Weight::proj(x, &b.k);
+    let v = Weight::proj(x, &b.v);
     let a = causal_attention(&q, &k, &v, head_layout(w), pos0);
     let post = if b.c.is_some() { &b.c } else { &b.p };
-    let attn_out = proj(&a, post);
+    let attn_out = Weight::proj(&a, post);
     let ffn_out = ffn_forward(x, &b.m, &b.o, w.cfg.ffn);
     attn_out.add(&ffn_out)
 }
@@ -103,8 +94,8 @@ pub fn prefill(w: &ModelWeights, tokens: &[u32]) -> (Mat, DecodeState) {
     for (li, b) in w.blocks.iter().enumerate() {
         // Fill this layer's cache from the block *input* projections so
         // decode can continue the sequence.
-        let k = proj(&x, &b.k);
-        let v = proj(&x, &b.v);
+        let k = Weight::proj(&x, &b.k);
+        let v = Weight::proj(&x, &b.v);
         let mut k_rot = k.clone();
         rope::apply(&mut k_rot, hd, 0, rope::BASE);
         let (kc, vc) = &mut state.caches[li];
@@ -113,7 +104,7 @@ pub fn prefill(w: &ModelWeights, tokens: &[u32]) -> (Mat, DecodeState) {
         x = block_forward(&x, b, w, 0);
     }
     state.pos = tokens.len();
-    let logits = matmul(&x, &w.unembed);
+    let logits = w.unembed.matmul(&x);
     (logits, state)
 }
 
@@ -129,26 +120,26 @@ pub fn decode_step(w: &ModelWeights, state: &mut DecodeState, token: u32) -> Mat
     let layout = head_layout(w);
     let mut x = w.embed_tokens(&[token]);
     for (li, b) in w.blocks.iter().enumerate() {
-        let q = proj(&x, &b.q);
-        let k = proj(&x, &b.k);
-        let v = proj(&x, &b.v);
+        let q = Weight::proj(&x, &b.q);
+        let k = Weight::proj(&x, &b.k);
+        let v = Weight::proj(&x, &b.v);
         let (kc, vc) = &mut state.caches[li];
         let a = decode_attention(&q, &k, &v, kc, vc, layout, pos);
         x = match w.cfg.layout {
             BlockLayout::Serial => {
-                let p = proj(&a, &b.p);
+                let p = Weight::proj(&a, &b.p);
                 ffn_forward(&p, &b.m, &b.o, w.cfg.ffn)
             }
             BlockLayout::Parallel => {
                 let post = if b.c.is_some() { &b.c } else { &b.p };
-                let attn_out = proj(&a, post);
+                let attn_out = Weight::proj(&a, post);
                 let ffn_out = ffn_forward(&x, &b.m, &b.o, w.cfg.ffn);
                 attn_out.add(&ffn_out)
             }
         };
     }
     state.pos += 1;
-    matmul(&x, &w.unembed)
+    w.unembed.matmul(&x)
 }
 
 /// Greedy-generate `n` tokens after a prompt (convenience for tests and

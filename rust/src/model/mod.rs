@@ -18,35 +18,143 @@
 pub mod attention;
 pub mod ffn;
 pub mod forward;
+pub mod quant;
 pub mod residual;
 pub mod rope;
 pub mod weights_io;
 
 pub use forward::{decode_step, greedy_generate, prefill, DecodeState};
+pub use quant::quantize;
 
 use crate::config::{BlockLayout, FfnKind, ModelConfig, Variant};
-use crate::tensor::Mat;
+use crate::linalg;
+use crate::tensor::{Mat, QMat};
 use crate::util::rng::Xoshiro256;
+
+/// One weight matrix in either precision. The forward pass only ever
+/// multiplies activations *by* a weight, so [`Weight::matmul`] is the whole
+/// dispatch surface: `F32` routes to the blocked f32 GEMM, `Int8` to the
+/// `i8×i8→i32` kernel ([`crate::linalg::qmatmul`]). Everything that needs
+/// exact algebra (surgery, the PJRT upload) goes through [`Weight::as_f32`]
+/// and refuses quantized input.
+///
+/// All shape accessors report the **logical** `(d_in, d_out)` orientation;
+/// the `Int8` payload physically stores the transpose (see [`QMat`]).
+#[derive(Clone, Debug)]
+pub enum Weight {
+    F32(Mat),
+    Int8(QMat),
+}
+
+impl Weight {
+    /// Logical `(d_in, d_out)` shape.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Weight::F32(m) => m.shape(),
+            Weight::Int8(q) => (q.cols(), q.rows()),
+        }
+    }
+
+    /// Logical input dimension.
+    pub fn rows(&self) -> usize {
+        self.shape().0
+    }
+
+    /// Logical output dimension.
+    pub fn cols(&self) -> usize {
+        self.shape().1
+    }
+
+    /// Number of scalar weights.
+    pub fn len(&self) -> usize {
+        match self {
+            Weight::F32(m) => m.len(),
+            Weight::Int8(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Weight::Int8(_))
+    }
+
+    /// `x @ W` in whichever precision the weight is stored.
+    pub fn matmul(&self, x: &Mat) -> Mat {
+        match self {
+            Weight::F32(m) => linalg::matmul(x, m),
+            Weight::Int8(q) => linalg::qmatmul(x, q),
+        }
+    }
+
+    /// Project `x` through an optional weight: `None` is the identity —
+    /// an eliminated matrix, the paper's `Q* = 1` notation. The single
+    /// projection helper every forward path (model, engine, residual
+    /// ablation) shares.
+    pub fn proj(x: &Mat, m: &Option<Weight>) -> Mat {
+        match m {
+            Some(m) => m.matmul(x),
+            None => x.clone(),
+        }
+    }
+
+    /// Multiply every entry by `s`. Exact for both precisions (`Int8`
+    /// folds `s` into the f32 scales) — calibration relies on this.
+    pub fn scale(&mut self, s: f32) {
+        match self {
+            Weight::F32(m) => m.scale(s),
+            Weight::Int8(q) => q.scale_all(s),
+        }
+    }
+
+    /// The f32 matrix, if this weight is unquantized.
+    pub fn as_f32(&self) -> Option<&Mat> {
+        match self {
+            Weight::F32(m) => Some(m),
+            Weight::Int8(_) => None,
+        }
+    }
+
+    /// Materialize as f32 in the logical orientation (dequantizing if
+    /// needed).
+    pub fn to_f32(&self) -> Mat {
+        match self {
+            Weight::F32(m) => m.clone(),
+            Weight::Int8(q) => q.to_weight(),
+        }
+    }
+
+    /// Bytes occupied resident in memory (f32: 4/weight; int8: 1/weight
+    /// plus the per-channel scales).
+    pub fn resident_bytes(&self) -> u64 {
+        match self {
+            Weight::F32(m) => (m.len() * 4) as u64,
+            Weight::Int8(q) => q.resident_bytes() as u64,
+        }
+    }
+}
 
 /// Weights of one transformer block. `None` marks a matrix the paper's
 /// surgery eliminated (identity in the forward pass).
 #[derive(Clone, Debug)]
 pub struct BlockWeights {
     /// Query projection, `d×d`.
-    pub q: Option<Mat>,
+    pub q: Option<Weight>,
     /// Key projection, `d×e`.
-    pub k: Option<Mat>,
+    pub k: Option<Weight>,
     /// Value projection, `d×e`.
-    pub v: Option<Mat>,
+    pub v: Option<Weight>,
     /// Post-attention projection, `d×d`.
-    pub p: Option<Mat>,
+    pub p: Option<Weight>,
     /// Parallel carry-merged matrix `C_i = P_i·Q_{i+1}` (`d×d`) — only used
     /// by the exactly-equivalent parallel merged form (DESIGN.md §Parallel).
-    pub c: Option<Mat>,
+    pub c: Option<Weight>,
     /// FFN input projection, `d×f'` (`f' = 2f` for SwiGLU: gate ‖ up).
-    pub m: Mat,
+    pub m: Weight,
     /// FFN output projection, `f×d`.
-    pub o: Mat,
+    pub o: Weight,
 }
 
 /// Full model weights.
@@ -54,10 +162,12 @@ pub struct BlockWeights {
 pub struct ModelWeights {
     pub cfg: ModelConfig,
     pub variant: Variant,
-    /// Token embedding, `vocab×d`.
+    /// Token embedding, `vocab×d`. Always f32: it is a row-lookup table,
+    /// not a GEMM operand, so quantizing it saves nothing on the hot path
+    /// (see DESIGN.md §Quantization).
     pub embed: Mat,
     /// Output head, `d×vocab`.
-    pub unembed: Mat,
+    pub unembed: Weight,
     pub blocks: Vec<BlockWeights>,
 }
 
@@ -92,20 +202,20 @@ impl ModelWeights {
         let gain = 1.0f32;
         let blocks = (0..cfg.n_layers)
             .map(|_| BlockWeights {
-                q: Some(Mat::randn(d, d, gain / (d as f32).sqrt(), &mut rng)),
-                k: Some(Mat::randn(d, e, gain / (d as f32).sqrt(), &mut rng)),
-                v: Some(Mat::randn(d, e, gain / (d as f32).sqrt(), &mut rng)),
-                p: Some(Mat::randn(d, d, gain / (d as f32).sqrt(), &mut rng)),
+                q: Some(Weight::F32(Mat::randn(d, d, gain / (d as f32).sqrt(), &mut rng))),
+                k: Some(Weight::F32(Mat::randn(d, e, gain / (d as f32).sqrt(), &mut rng))),
+                v: Some(Weight::F32(Mat::randn(d, e, gain / (d as f32).sqrt(), &mut rng))),
+                p: Some(Weight::F32(Mat::randn(d, d, gain / (d as f32).sqrt(), &mut rng))),
                 c: None,
-                m: Mat::randn(d, fp, gain / (d as f32).sqrt(), &mut rng),
-                o: Mat::randn(f, d, gain / (f as f32).sqrt(), &mut rng),
+                m: Weight::F32(Mat::randn(d, fp, gain / (d as f32).sqrt(), &mut rng)),
+                o: Weight::F32(Mat::randn(f, d, gain / (f as f32).sqrt(), &mut rng)),
             })
             .collect();
         Self {
             cfg: cfg.clone(),
             variant: Variant::Vanilla,
             embed: Mat::randn(cfg.vocab_size, d, 1.0, &mut rng),
-            unembed: Mat::randn(d, cfg.vocab_size, 1.0 / (d as f32).sqrt(), &mut rng),
+            unembed: Weight::F32(Mat::randn(d, cfg.vocab_size, 1.0 / (d as f32).sqrt(), &mut rng)),
             blocks,
         }
     }
@@ -159,7 +269,7 @@ impl ModelWeights {
     /// Total number of scalar weights actually stored (cross-checked against
     /// the analytic [`crate::params::count_weights`] in tests).
     pub fn stored_weights(&self) -> u64 {
-        let mat = |m: &Option<Mat>| m.as_ref().map(|m| m.len() as u64).unwrap_or(0);
+        let mat = |m: &Option<Weight>| m.as_ref().map(|m| m.len() as u64).unwrap_or(0);
         let mut total = self.embed.len() as u64 + self.unembed.len() as u64;
         for b in &self.blocks {
             total += mat(&b.q) + mat(&b.k) + mat(&b.v) + mat(&b.p) + mat(&b.c);
@@ -168,9 +278,37 @@ impl ModelWeights {
         total
     }
 
-    /// Bytes the weights occupy at f32.
+    /// Bytes the weights would occupy at f32 (the paper's §3 accounting,
+    /// independent of the resident precision).
     pub fn stored_bytes(&self) -> u64 {
         self.stored_weights() * 4
+    }
+
+    /// Bytes the weights actually occupy resident, honoring per-matrix
+    /// precision (int8 matrices count 1 byte/weight plus their scales).
+    pub fn resident_bytes(&self) -> u64 {
+        let mat = |m: &Option<Weight>| m.as_ref().map(|m| m.resident_bytes()).unwrap_or(0);
+        let mut total = self.embed.len() as u64 * 4 + self.unembed.resident_bytes();
+        for b in &self.blocks {
+            total += mat(&b.q) + mat(&b.k) + mat(&b.v) + mat(&b.p) + mat(&b.c);
+            total += b.m.resident_bytes() + b.o.resident_bytes();
+        }
+        total
+    }
+
+    /// Is any matrix stored in INT8? (See [`quantize`].)
+    pub fn is_quantized(&self) -> bool {
+        let mat = |m: &Option<Weight>| m.as_ref().map(|m| m.is_quantized()).unwrap_or(false);
+        self.unembed.is_quantized()
+            || self.blocks.iter().any(|b| {
+                mat(&b.q)
+                    || mat(&b.k)
+                    || mat(&b.v)
+                    || mat(&b.p)
+                    || mat(&b.c)
+                    || b.m.is_quantized()
+                    || b.o.is_quantized()
+            })
     }
 
     /// Embed a token sequence to a `(t, d)` activation matrix.
@@ -202,7 +340,7 @@ impl ModelWeights {
             return Err(format!("{} blocks, config says {}", self.blocks.len(), cfg.n_layers));
         }
         for (i, b) in self.blocks.iter().enumerate() {
-            let expect = |name: &str, m: &Option<Mat>, shape: (usize, usize), present: bool| {
+            let expect = |name: &str, m: &Option<Weight>, shape: (usize, usize), present: bool| {
                 match (m, present) {
                     (Some(m), true) if m.shape() == shape => Ok(()),
                     (Some(m), true) => Err(format!("block {i} {name} shape {:?} != {:?}", m.shape(), shape)),

@@ -9,10 +9,9 @@
 //! does forward-only evaluation for serving).
 
 use crate::config::{BlockLayout, ModelConfig};
-use crate::linalg::matmul;
 use crate::model::attention::{causal_attention, HeadLayout};
 use crate::model::ffn::ffn_forward;
-use crate::model::ModelWeights;
+use crate::model::{ModelWeights, Weight};
 use crate::tensor::Mat;
 
 /// RMSNorm (no learned scale — the ablation keeps both arms identical in
@@ -39,12 +38,7 @@ pub fn prefill_residual(w: &ModelWeights, tokens: &[u32]) -> Mat {
         n_kv_heads: w.cfg.n_kv_heads,
         head_dim: w.cfg.head_dim(),
     };
-    let proj = |x: &Mat, m: &Option<Mat>| -> Mat {
-        match m {
-            Some(m) => matmul(x, m),
-            None => x.clone(),
-        }
-    };
+    let proj = Weight::proj;
     let mut x = w.embed_tokens(tokens);
     for b in &w.blocks {
         match w.cfg.layout {
@@ -64,7 +58,7 @@ pub fn prefill_residual(w: &ModelWeights, tokens: &[u32]) -> Mat {
             }
         }
     }
-    matmul(&rmsnorm(&x), &w.unembed)
+    w.unembed.matmul(&rmsnorm(&x))
 }
 
 /// Build the Fig-4 "without Q and P" architecture (residual, q/p absent).

@@ -1,14 +1,26 @@
 //! Weight file format shared between Rust and the PJRT artifacts.
 //!
 //! `model.swt` = one JSON header line (config, variant, entry table with
-//! byte offsets) + `\n` + raw little-endian f32 payload. The entry order is
+//! byte offsets) + `\n` + raw little-endian payload. The entry order is
 //! the canonical flat order (`embed`, `unembed`, `layer.{i}.{name}`) that
 //! `python/compile/model.py::flat_weight_specs` defines — the same order
 //! the AOT manifests list and the PJRT engine uploads.
+//!
+//! **Format v2** (`skipless-weights-v2`) adds a per-entry `dtype` tag:
+//! * `"f32"` — payload is `rows·cols` little-endian f32, `shape` is the
+//!   logical shape (exactly the v1 encoding; v1 files load as all-f32).
+//! * `"int8"` — payload is `rows·cols` i8 codes followed by `rows` f32
+//!   scales; `shape` is the **stored** (transposed, per-output-channel)
+//!   [`QMat`] shape. Quantized models round-trip bit-exactly: codes and
+//!   scales are copied, never re-derived.
+//!
+//! Pure-f32 models keep the `skipless-weights-v1` marker (their payload is
+//! unchanged, so pre-v2 readers stay compatible); only files containing an
+//! int8 entry are stamped v2.
 
 use crate::config::{BlockLayout, ModelConfig, Variant};
-use crate::model::{BlockWeights, ModelWeights};
-use crate::tensor::Mat;
+use crate::model::{BlockWeights, ModelWeights, Weight};
+use crate::tensor::{Mat, QMat};
 use crate::util::json::Json;
 use std::io::{Read, Write};
 use std::path::Path;
@@ -36,22 +48,59 @@ pub fn layer_weight_names(cfg: &ModelConfig, variant: Variant) -> Vec<&'static s
     names
 }
 
-/// Flattened views of every matrix in canonical order.
-pub fn flat_entries<'a>(w: &'a ModelWeights) -> Vec<(String, &'a Mat)> {
-    let mut out: Vec<(String, &Mat)> = vec![
-        ("embed".to_string(), &w.embed),
-        ("unembed".to_string(), &w.unembed),
+/// Borrowed view of one serializable matrix, in its stored precision.
+pub enum EntryRef<'a> {
+    F32(&'a Mat),
+    Int8(&'a QMat),
+}
+
+impl<'a> EntryRef<'a> {
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            EntryRef::F32(_) => "f32",
+            EntryRef::Int8(_) => "int8",
+        }
+    }
+
+    /// Stored shape: logical for f32, transposed for int8 (see [`QMat`]).
+    pub fn stored_shape(&self) -> (usize, usize) {
+        match self {
+            EntryRef::F32(m) => m.shape(),
+            EntryRef::Int8(q) => (q.rows(), q.cols()),
+        }
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            EntryRef::F32(m) => (m.len() * 4) as u64,
+            EntryRef::Int8(q) => (q.len() + q.rows() * 4) as u64,
+        }
+    }
+}
+
+fn view(w: &Weight) -> EntryRef<'_> {
+    match w {
+        Weight::F32(m) => EntryRef::F32(m),
+        Weight::Int8(q) => EntryRef::Int8(q),
+    }
+}
+
+/// Views of every matrix in canonical order.
+pub fn flat_entries<'a>(w: &'a ModelWeights) -> Vec<(String, EntryRef<'a>)> {
+    let mut out: Vec<(String, EntryRef)> = vec![
+        ("embed".to_string(), EntryRef::F32(&w.embed)),
+        ("unembed".to_string(), view(&w.unembed)),
     ];
     for (i, b) in w.blocks.iter().enumerate() {
         for name in layer_weight_names(&w.cfg, w.variant) {
-            let m: &Mat = match name {
-                "q" => b.q.as_ref().expect("q present"),
-                "k" => b.k.as_ref().expect("k present"),
-                "v" => b.v.as_ref().expect("v present"),
-                "p" => b.p.as_ref().expect("p present"),
-                "c" => b.c.as_ref().expect("c present"),
-                "m" => &b.m,
-                "o" => &b.o,
+            let m: EntryRef = match name {
+                "q" => view(b.q.as_ref().expect("q present")),
+                "k" => view(b.k.as_ref().expect("k present")),
+                "v" => view(b.v.as_ref().expect("v present")),
+                "p" => view(b.p.as_ref().expect("p present")),
+                "c" => view(b.c.as_ref().expect("c present")),
+                "m" => view(&b.m),
+                "o" => view(&b.o),
                 _ => unreachable!(),
             };
             out.push((format!("layer.{i}.{name}"), m));
@@ -60,30 +109,48 @@ pub fn flat_entries<'a>(w: &'a ModelWeights) -> Vec<(String, &'a Mat)> {
     out
 }
 
-/// Write `w` to `path` in the shared format.
+fn f32_bytes(data: &[f32]) -> &[u8] {
+    // SAFETY: plain f32 slice reinterpreted as bytes (LE hosts only,
+    // which is every supported target here).
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+fn i8_bytes(data: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 have identical layout.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) }
+}
+
+/// Write `w` to `path` in the shared format. Pure-f32 models keep the v1
+/// marker (their payload is byte-identical to v1, so older readers stay
+/// compatible; the per-entry `dtype` tags are ignored by v1 loaders);
+/// any int8 entry promotes the file to v2.
 pub fn save(w: &ModelWeights, path: &Path) -> std::io::Result<()> {
     let entries = flat_entries(w);
+    let format = if entries.iter().any(|(_, e)| matches!(e, EntryRef::Int8(_))) {
+        "skipless-weights-v2"
+    } else {
+        "skipless-weights-v1"
+    };
     let mut offset = 0u64;
     let table: Vec<Json> = entries
         .iter()
-        .map(|(name, m)| {
+        .map(|(name, e)| {
+            let (rows, cols) = e.stored_shape();
             let j = Json::obj(vec![
                 ("name", Json::str(name.clone())),
+                ("dtype", Json::str(e.dtype())),
                 (
                     "shape",
-                    Json::Arr(vec![
-                        Json::num(m.rows() as f64),
-                        Json::num(m.cols() as f64),
-                    ]),
+                    Json::Arr(vec![Json::num(rows as f64), Json::num(cols as f64)]),
                 ),
                 ("offset", Json::num(offset as f64)),
             ]);
-            offset += (m.len() * 4) as u64;
+            offset += e.payload_bytes();
             j
         })
         .collect();
     let header = Json::obj(vec![
-        ("format", Json::str("skipless-weights-v1")),
+        ("format", Json::str(format)),
         ("config", w.cfg.to_json()),
         ("variant", Json::str(w.variant.name())),
         ("entries", Json::Arr(table)),
@@ -92,13 +159,14 @@ pub fn save(w: &ModelWeights, path: &Path) -> std::io::Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(header.to_string().as_bytes())?;
     f.write_all(b"\n")?;
-    for (_, m) in &entries {
-        // SAFETY: plain f32 slice reinterpreted as bytes (LE hosts only,
-        // which is every supported target here).
-        let bytes = unsafe {
-            std::slice::from_raw_parts(m.as_slice().as_ptr() as *const u8, m.len() * 4)
-        };
-        f.write_all(bytes)?;
+    for (_, e) in &entries {
+        match e {
+            EntryRef::F32(m) => f.write_all(f32_bytes(m.as_slice()))?,
+            EntryRef::Int8(q) => {
+                f.write_all(i8_bytes(q.data()))?;
+                f.write_all(f32_bytes(q.scales()))?;
+            }
+        }
     }
     Ok(())
 }
@@ -107,7 +175,16 @@ fn io_err(msg: String) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
 }
 
-/// Load a weight file written by [`save`].
+fn read_f32s(f: &mut impl Read, n: usize) -> std::io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Load a weight file written by [`save`] (v1 or v2).
 pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut header_line = Vec::new();
@@ -125,8 +202,9 @@ pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
     }
     let header = Json::parse(std::str::from_utf8(&header_line).map_err(|e| io_err(e.to_string()))?)
         .map_err(|e| io_err(e.to_string()))?;
-    if header.get("format").and_then(|v| v.as_str()) != Some("skipless-weights-v1") {
-        return Err(io_err("bad format marker".into()));
+    match header.get("format").and_then(|v| v.as_str()) {
+        Some("skipless-weights-v1") | Some("skipless-weights-v2") => {}
+        _ => return Err(io_err("bad format marker".into())),
     }
     let cfg = ModelConfig::from_json(header.get("config").ok_or_else(|| io_err("no config".into()))?)
         .map_err(|e| io_err(e.to_string()))?;
@@ -140,7 +218,7 @@ pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
         .and_then(|e| e.as_arr())
         .ok_or_else(|| io_err("no entries".into()))?;
 
-    let mut mats: Vec<(String, Mat)> = Vec::with_capacity(entries.len());
+    let mut mats: Vec<(String, Weight)> = Vec::with_capacity(entries.len());
     for e in entries {
         let name = e
             .get("name")
@@ -151,19 +229,33 @@ pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
             .get("shape")
             .and_then(|s| s.as_arr())
             .ok_or_else(|| io_err("entry without shape".into()))?;
+        if shape.len() != 2 {
+            return Err(io_err("shape must have 2 dims".into()));
+        }
         let rows = shape[0].as_usize().ok_or_else(|| io_err("bad shape".into()))?;
         let cols = shape[1].as_usize().ok_or_else(|| io_err("bad shape".into()))?;
-        let mut buf = vec![0u8; rows * cols * 4];
-        f.read_exact(&mut buf)?;
-        let data: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        mats.push((name, Mat::from_vec(rows, cols, data)));
+        // v1 entries carry no dtype tag: they are all f32
+        let dtype = e.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32");
+        let w = match dtype {
+            "f32" => Weight::F32(Mat::from_vec(rows, cols, read_f32s(&mut f, rows * cols)?)),
+            "int8" => {
+                let mut codes = vec![0i8; rows * cols];
+                // SAFETY: i8 and u8 have identical layout (read in place,
+                // no second buffer).
+                let view = unsafe {
+                    std::slice::from_raw_parts_mut(codes.as_mut_ptr() as *mut u8, codes.len())
+                };
+                f.read_exact(view)?;
+                let scales = read_f32s(&mut f, rows)?;
+                Weight::Int8(QMat::from_raw(rows, cols, codes, scales))
+            }
+            other => return Err(io_err(format!("unknown dtype '{other}'"))),
+        };
+        mats.push((name, w));
     }
 
     // reassemble
-    let take = |mats: &mut Vec<(String, Mat)>, name: &str| -> std::io::Result<Mat> {
+    let take = |mats: &mut Vec<(String, Weight)>, name: &str| -> std::io::Result<Weight> {
         let idx = mats
             .iter()
             .position(|(n, _)| n == name)
@@ -171,7 +263,10 @@ pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
         Ok(mats.remove(idx).1)
     };
     let mut mats = mats;
-    let embed = take(&mut mats, "embed")?;
+    let embed = match take(&mut mats, "embed")? {
+        Weight::F32(m) => m,
+        Weight::Int8(_) => return Err(io_err("embed must be f32".into())),
+    };
     let unembed = take(&mut mats, "unembed")?;
     let names = layer_weight_names(&cfg, variant);
     let mut blocks = Vec::with_capacity(cfg.n_layers);
@@ -182,8 +277,8 @@ pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
             v: None,
             p: None,
             c: None,
-            m: Mat::zeros(0, 0),
-            o: Mat::zeros(0, 0),
+            m: Weight::F32(Mat::zeros(0, 0)),
+            o: Weight::F32(Mat::zeros(0, 0)),
         };
         for name in &names {
             let m = take(&mut mats, &format!("layer.{i}.{name}"))?;
@@ -215,7 +310,7 @@ pub fn load(path: &Path) -> std::io::Result<ModelWeights> {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
-    use crate::model::prefill;
+    use crate::model::{prefill, quantize};
     use crate::surgery::{transform, Options};
 
     #[test]
@@ -237,6 +332,23 @@ mod tests {
                 assert_eq!(l0.max_abs_diff(&l1), 0.0, "{name}/{tag} not bit-exact");
             }
         }
+    }
+
+    #[test]
+    fn roundtrip_quantized_bit_exact() {
+        let dir = std::env::temp_dir().join("skipless_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 94);
+        let q = quantize(&transform(&w, Variant::MergedQP, Options::default()).unwrap());
+        let path = dir.join("tiny-gqa-q.swt");
+        save(&q, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert!(back.is_quantized());
+        assert_eq!(back.resident_bytes(), q.resident_bytes());
+        let (l0, _) = prefill(&q, &[1, 2, 3]);
+        let (l1, _) = prefill(&back, &[1, 2, 3]);
+        assert_eq!(l0.max_abs_diff(&l1), 0.0, "int8 roundtrip not bit-exact");
     }
 
     #[test]

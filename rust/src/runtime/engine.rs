@@ -34,6 +34,8 @@ pub struct PjrtEngine {
     next_id: u64,
     max_seqs: usize,
     cache_elems: usize, // L * S * e
+    /// Total weight bytes uploaded at boot (always f32 — metrics only).
+    weight_bytes: u64,
 }
 
 fn backend(e: impl std::fmt::Display) -> EngineError {
@@ -71,7 +73,14 @@ impl PjrtEngine {
             )));
         }
         let mut weight_bufs = Vec::with_capacity(entries.len());
-        for ((name, mat), (mname, mshape)) in entries.iter().zip(&artifacts.weights) {
+        for ((name, entry), (mname, mshape)) in entries.iter().zip(&artifacts.weights) {
+            // The AOT artifacts were lowered for f32 operands; INT8 models
+            // are a CPU-engine feature for now.
+            let weights_io::EntryRef::F32(mat) = entry else {
+                return Err(EngineError::Backend(format!(
+                    "PJRT engine requires f32 weights; '{name}' is int8 — serve quantized models with the CPU engine"
+                )));
+            };
             if name != mname || mat.shape() != (mshape[0], mshape[1]) {
                 return Err(EngineError::Backend(format!(
                     "weight order/shape mismatch: model has {name}{:?}, manifest expects {mname}{mshape:?}",
@@ -122,6 +131,7 @@ impl PjrtEngine {
             next_id: 0,
             max_seqs,
             cache_elems,
+            weight_bytes: weights.stored_bytes(),
         })
     }
 
@@ -156,6 +166,11 @@ impl Engine for PjrtEngine {
 
     fn describe(&self) -> String {
         format!("pjrt/{}", self.artifacts.variant.name())
+    }
+
+    fn weight_bytes(&self) -> (u64, u64) {
+        // PJRT weights are always f32: resident == f32-equivalent
+        (self.weight_bytes, self.weight_bytes)
     }
 
     fn can_admit(&self, prompt_len: usize) -> bool {

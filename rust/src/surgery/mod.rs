@@ -26,7 +26,7 @@
 
 use crate::config::{BlockLayout, Variant};
 use crate::linalg::{cond_estimate, matmul, Lu, LuError};
-use crate::model::{BlockWeights, ModelWeights};
+use crate::model::{BlockWeights, ModelWeights, Weight};
 use crate::tensor::Mat;
 use std::fmt;
 
@@ -34,6 +34,9 @@ use std::fmt;
 pub enum SurgeryError {
     /// Input model must be vanilla.
     NotVanilla(Variant),
+    /// Input model must be f32 — surgery needs exact pivot algebra.
+    /// Quantize *after* merging ([`crate::model::quantize`]).
+    Quantized,
     /// Config cannot host this variant (e ≠ d for K/P–V/P removal).
     Unsupported { variant: Variant, e: usize, d: usize },
     /// A pivot matrix was singular to working precision.
@@ -46,6 +49,10 @@ impl fmt::Display for SurgeryError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SurgeryError::NotVanilla(v) => write!(f, "surgery input must be vanilla, got {v:?}"),
+            SurgeryError::Quantized => write!(
+                f,
+                "surgery requires f32 weights (LU solves of the pivots); run surgery first, then quantize"
+            ),
             SurgeryError::Unsupported { variant, e, d } => write!(
                 f,
                 "{variant:?} requires e = d (MHA); this config has e={e}, d={d} — only MergedQP works for MQA/GQA (the paper's point)"
@@ -94,11 +101,16 @@ fn pivot_name(variant: Variant) -> &'static str {
     }
 }
 
+/// Borrow a weight as f32 (transform's entry check guarantees this).
+fn f32_of(w: &Weight) -> &Mat {
+    w.as_f32().expect("surgery input checked to be f32")
+}
+
 fn pivot_of<'a>(b: &'a BlockWeights, variant: Variant) -> &'a Mat {
     match variant {
-        Variant::MergedQP => b.q.as_ref().expect("vanilla q"),
-        Variant::MergedKP => b.k.as_ref().expect("vanilla k"),
-        Variant::MergedVP => b.v.as_ref().expect("vanilla v"),
+        Variant::MergedQP => f32_of(b.q.as_ref().expect("vanilla q")),
+        Variant::MergedKP => f32_of(b.k.as_ref().expect("vanilla k")),
+        Variant::MergedVP => f32_of(b.v.as_ref().expect("vanilla v")),
         Variant::Vanilla => unreachable!(),
     }
 }
@@ -124,6 +136,9 @@ fn pivot_of<'a>(b: &'a BlockWeights, variant: Variant) -> &'a Mat {
 pub fn transform(w: &ModelWeights, variant: Variant, opts: Options) -> Result<ModelWeights, SurgeryError> {
     if w.variant != Variant::Vanilla {
         return Err(SurgeryError::NotVanilla(w.variant));
+    }
+    if w.is_quantized() {
+        return Err(SurgeryError::Quantized);
     }
     if variant == Variant::Vanilla {
         return Ok(w.clone());
@@ -186,26 +201,28 @@ fn transform_serial(w: &ModelWeights, variant: Variant, pivots: &[Lu]) -> ModelW
         let nb = &mut out.blocks[i];
 
         // M*_i = P_i · M_i  (Fig. 2a; always, this removes P)
-        nb.m = matmul(b.p.as_ref().unwrap(), &b.m);
+        nb.m = Weight::F32(matmul(f32_of(b.p.as_ref().unwrap()), f32_of(&b.m)));
         nb.p = None;
 
         // Compensated projections: T⁻¹·X computed as a solve (one LU reused
         // for all columns — cheaper and more accurate than forming T⁻¹).
+        let solve =
+            |m: &Option<Weight>| Some(Weight::F32(lu.solve_mat(f32_of(m.as_ref().unwrap()))));
         match variant {
             Variant::MergedQP => {
                 nb.q = None;
-                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
-                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+                nb.k = solve(&b.k);
+                nb.v = solve(&b.v);
             }
             Variant::MergedKP => {
                 nb.k = None;
-                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
-                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+                nb.q = solve(&b.q);
+                nb.v = solve(&b.v);
             }
             Variant::MergedVP => {
                 nb.v = None;
-                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
-                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
+                nb.q = solve(&b.q);
+                nb.k = solve(&b.k);
             }
             Variant::Vanilla => unreachable!(),
         }
@@ -213,7 +230,7 @@ fn transform_serial(w: &ModelWeights, variant: Variant, pivots: &[Lu]) -> ModelW
         // O*_i = O_i · T_{i+1} (fold the *next* block's pivot into this
         // block's FFN output; the last block keeps its O).
         if i + 1 < n {
-            nb.o = matmul(&b.o, pivot_of(&w.blocks[i + 1], variant));
+            nb.o = Weight::F32(matmul(f32_of(&b.o), pivot_of(&w.blocks[i + 1], variant)));
         }
     }
     out
@@ -234,35 +251,37 @@ fn transform_parallel(w: &ModelWeights, variant: Variant, pivots: &[Lu]) -> Mode
         let nb = &mut out.blocks[i];
 
         // FFN branch reads the carried (transformed) stream: M* = T⁻¹·M.
-        nb.m = lu.solve_mat(&b.m);
+        nb.m = Weight::F32(lu.solve_mat(f32_of(&b.m)));
 
+        let solve =
+            |m: &Option<Weight>| Some(Weight::F32(lu.solve_mat(f32_of(m.as_ref().unwrap()))));
         match variant {
             Variant::MergedQP => {
                 nb.q = None;
-                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
-                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+                nb.k = solve(&b.k);
+                nb.v = solve(&b.v);
             }
             Variant::MergedKP => {
                 nb.k = None;
-                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
-                nb.v = Some(lu.solve_mat(b.v.as_ref().unwrap()));
+                nb.q = solve(&b.q);
+                nb.v = solve(&b.v);
             }
             Variant::MergedVP => {
                 nb.v = None;
-                nb.q = Some(lu.solve_mat(b.q.as_ref().unwrap()));
-                nb.k = Some(lu.solve_mat(b.k.as_ref().unwrap()));
+                nb.q = solve(&b.q);
+                nb.k = solve(&b.k);
             }
             Variant::Vanilla => unreachable!(),
         }
 
         // Outputs carry the next block's pivot.
-        let p = b.p.as_ref().unwrap();
+        let p = f32_of(b.p.as_ref().unwrap());
         if i + 1 < n {
             let t_next = pivot_of(&w.blocks[i + 1], variant);
-            nb.o = matmul(&b.o, t_next);
-            nb.c = Some(matmul(p, t_next));
+            nb.o = Weight::F32(matmul(f32_of(&b.o), t_next));
+            nb.c = Some(Weight::F32(matmul(p, t_next)));
         } else {
-            nb.c = Some(p.clone());
+            nb.c = Some(Weight::F32(p.clone()));
         }
         nb.p = None;
     }
@@ -285,26 +304,39 @@ pub struct AuditRow {
 
 /// Audit every *square* attention matrix of a model (paper §4: "all square
 /// matrices of Mistral-7B are invertible"). For GQA/MQA only Q and P are
-/// square; for MHA K and V are audited too.
+/// square; for MHA K and V are audited too. INT8 matrices are audited on
+/// their dequantized values (conditioning is a property of the values the
+/// forward pass actually uses).
 pub fn audit(w: &ModelWeights) -> Vec<AuditRow> {
     let mut rows = Vec::new();
-    let mut push = |layer: usize, which: &'static str, m: Option<&Mat>| {
+    let mut push = |layer: usize, which: &'static str, m: Option<&Weight>| {
         if let Some(m) = m {
-            if m.rows() == m.cols() {
-                match cond_estimate(m) {
-                    Ok(c) => rows.push(AuditRow {
-                        layer,
-                        which,
-                        invertible: true,
-                        cond: Some(c),
-                    }),
-                    Err(_) => rows.push(AuditRow {
-                        layer,
-                        which,
-                        invertible: false,
-                        cond: None,
-                    }),
+            let (r, c) = m.shape();
+            if r != c {
+                return;
+            }
+            // borrow f32 weights; materialize only the Int8 case
+            let dequantized;
+            let m = match m.as_f32() {
+                Some(m) => m,
+                None => {
+                    dequantized = m.to_f32();
+                    &dequantized
                 }
+            };
+            match cond_estimate(m) {
+                Ok(c) => rows.push(AuditRow {
+                    layer,
+                    which,
+                    invertible: true,
+                    cond: Some(c),
+                }),
+                Err(_) => rows.push(AuditRow {
+                    layer,
+                    which,
+                    invertible: false,
+                    cond: None,
+                }),
             }
         }
     };
@@ -424,7 +456,9 @@ mod tests {
         let mut w = ModelWeights::init_vanilla(&cfg, 41);
         // Make layer 1's Q rank-deficient.
         let d = cfg.dim;
-        let q = w.blocks[1].q.as_mut().unwrap();
+        let Some(Weight::F32(q)) = w.blocks[1].q.as_mut() else {
+            panic!("vanilla init stores f32 q")
+        };
         let row0: Vec<f32> = q.row(0).to_vec();
         // exact linear dependence: last row = first row
         q.row_mut(d - 1).copy_from_slice(&row0);
@@ -445,6 +479,16 @@ mod tests {
         assert!(matches!(
             transform(&w, Variant::MergedQP, opts),
             Err(SurgeryError::IllConditioned { .. })
+        ));
+    }
+
+    #[test]
+    fn quantized_input_rejected() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = crate::model::quantize(&ModelWeights::init_vanilla(&cfg, 47));
+        assert!(matches!(
+            transform(&w, Variant::MergedQP, Options::default()),
+            Err(SurgeryError::Quantized)
         ));
     }
 

@@ -241,6 +241,143 @@ impl Mat {
     }
 }
 
+/// Per-row symmetric INT8 quantized matrix: `value[r][c] ≈ scales[r] * data[r][c]`.
+///
+/// Weight matrices are held **transposed** relative to their f32 form: a
+/// `(k, n)` weight becomes a `QMat` with `rows = n` output channels of
+/// length `k`, one scale per output channel ([`QMat::from_weight`]). That
+/// way the INT8 GEMM ([`crate::linalg::qmatmul`]) reads both operands with
+/// unit stride — the same trick as `matmul_transb` — and the per-row scale
+/// factors out of the integer dot product. Activations quantize in their
+/// natural orientation ([`QMat::quantize_rows`], one scale per token row).
+#[derive(Clone, PartialEq)]
+pub struct QMat {
+    data: Vec<i8>,
+    rows: usize,
+    cols: usize,
+    scales: Vec<f32>,
+}
+
+impl fmt::Debug for QMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "QMat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl QMat {
+    /// Quantize each row of `m` independently: `scale = max|row| / 127`,
+    /// codes in `[-127, 127]`. An all-zero row gets scale 0 and zero codes,
+    /// so it dequantizes exactly. Per-element round-trip error is bounded
+    /// by `scale / 2` ([`QMat::dequantize`]).
+    pub fn quantize_rows(m: &Mat) -> Self {
+        let (rows, cols) = m.shape();
+        let mut data = Vec::with_capacity(rows * cols);
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = m.row(r);
+            let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            if amax > 0.0 {
+                let scale = amax / 127.0;
+                scales.push(scale);
+                let inv = 1.0 / scale;
+                for &x in row {
+                    data.push((x * inv).round().clamp(-127.0, 127.0) as i8);
+                }
+            } else {
+                scales.push(0.0);
+                data.extend(std::iter::repeat(0i8).take(cols));
+            }
+        }
+        Self {
+            data,
+            rows,
+            cols,
+            scales,
+        }
+    }
+
+    /// Quantize a `(k, n)` weight into the transposed `(n, k)` layout with
+    /// one scale per **output channel**.
+    pub fn from_weight(w: &Mat) -> Self {
+        Self::quantize_rows(&w.transpose())
+    }
+
+    /// Rebuild from raw parts (the weight-file loader).
+    pub fn from_raw(rows: usize, cols: usize, data: Vec<i8>, scales: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "QMat shape/data mismatch");
+        assert_eq!(scales.len(), rows, "QMat shape/scales mismatch");
+        Self {
+            data,
+            rows,
+            cols,
+            scales,
+        }
+    }
+
+    /// Dequantize in the stored orientation.
+    pub fn dequantize(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| {
+            self.scales[r] * self.data[r * self.cols + c] as f32
+        })
+    }
+
+    /// Dequantize a [`QMat::from_weight`] matrix back to its logical
+    /// `(k, n)` orientation.
+    pub fn to_weight(&self) -> Mat {
+        self.dequantize().transpose()
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Multiply every row scale by `s` — an **exact** linear rescaling
+    /// (codes untouched), which is what init-time calibration needs.
+    pub fn scale_all(&mut self, s: f32) {
+        for v in &mut self.scales {
+            *v *= s;
+        }
+    }
+
+    /// Bytes this matrix occupies resident: one byte per code plus the
+    /// per-row f32 scales.
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,5 +449,70 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn bad_shape_panics() {
         let _ = Mat::from_vec(2, 2, vec![1.0]);
+    }
+
+    // ---- QMat ---------------------------------------------------------
+
+    #[test]
+    fn qmat_roundtrip_error_bounded_per_row() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let m = Mat::randn(17, 33, 2.5, &mut rng);
+        let q = QMat::quantize_rows(&m);
+        let back = q.dequantize();
+        for r in 0..m.rows() {
+            // half a step, plus scale-relative slack for the f32 rounding
+            // of x·(1/scale) near the .5 boundary
+            let bound = q.scale(r) * 0.5001 + 1e-6;
+            for c in 0..m.cols() {
+                let err = (m.at(r, c) - back.at(r, c)).abs();
+                assert!(err <= bound, "({r},{c}): err {err} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn qmat_zero_row_exact_and_extremes_saturate() {
+        let m = Mat::from_vec(2, 3, vec![0.0, 0.0, 0.0, -1.0, 0.5, 1.0]);
+        let q = QMat::quantize_rows(&m);
+        assert_eq!(q.scale(0), 0.0);
+        assert_eq!(q.row(0), &[0, 0, 0]);
+        // row max |1.0| → codes -127, 64 (rounded), 127
+        assert_eq!(q.row(1), &[-127, 64, 127]);
+        let back = q.dequantize();
+        assert_eq!(back.row(0), &[0.0, 0.0, 0.0]);
+        // (1/127)·127 is 1.0 only up to f32 rounding
+        assert!((back.at(1, 2) - 1.0).abs() < 1e-6);
+        assert!((back.at(1, 0) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn qmat_weight_transpose_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let w = Mat::randn(8, 5, 1.0, &mut rng);
+        let q = QMat::from_weight(&w);
+        assert_eq!((q.rows(), q.cols()), (5, 8), "stored transposed");
+        let back = q.to_weight();
+        assert_eq!(back.shape(), w.shape());
+        assert!(back.rel_fro_err(&w) < 0.01, "err {}", back.rel_fro_err(&w));
+    }
+
+    #[test]
+    fn qmat_scale_all_is_exact() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let m = Mat::randn(4, 6, 1.0, &mut rng);
+        let mut q = QMat::quantize_rows(&m);
+        let before = q.dequantize();
+        q.scale_all(0.5);
+        let mut want = before;
+        want.scale(0.5);
+        assert_eq!(q.dequantize(), want);
+    }
+
+    #[test]
+    fn qmat_resident_bytes_quarter_of_f32() {
+        let m = Mat::zeros(64, 64);
+        let q = QMat::quantize_rows(&m);
+        assert_eq!(q.resident_bytes(), 64 * 64 + 64 * 4);
+        assert!((q.resident_bytes() as f64) < (m.len() * 4) as f64 / 3.0);
     }
 }

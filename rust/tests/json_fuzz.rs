@@ -1,0 +1,181 @@
+//! Fuzz-style tests for the hand-rolled `util::json` parser.
+//!
+//! The parser sits on the serving wire (every TCP request line) and under
+//! the weight-file/config loaders, so its two contracts are load-bearing:
+//!
+//! 1. **parse ∘ serialize = identity** for every value the writer can
+//!    produce (compact and pretty).
+//! 2. **Malformed input must error, never panic** — a panicking parser is
+//!    a remote crash. Random byte strings, truncations, and single-byte
+//!    mutations of valid documents all have to come back as `Result`.
+//!
+//! Driven by the in-tree Xoshiro PRNG (no proptest in the offline image);
+//! failing cases reproduce by fixing `CASE_SEED`.
+
+use skipless::util::json::Json;
+use skipless::util::rng::Xoshiro256;
+use std::collections::BTreeMap;
+
+const CASE_SEED: u64 = 0xFADED;
+
+/// Random JSON value, depth-bounded. Numbers are drawn from integers,
+/// dyadic fractions, and scaled normals — all round-trip exactly through
+/// Rust's shortest-representation float printing.
+fn random_value(rng: &mut Xoshiro256, depth: usize) -> Json {
+    let pick = if depth == 0 { rng.next_below(4) } else { rng.next_below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_below(2) == 1),
+        2 => {
+            let n = match rng.next_below(3) {
+                0 => rng.next_below(1 << 53) as f64 - (1u64 << 52) as f64,
+                1 => rng.next_below(1 << 20) as f64 / 8.0,
+                _ => rng.next_normal() * 1e6,
+            };
+            Json::Num(n)
+        }
+        3 => Json::Str(random_string(rng)),
+        4 => {
+            let len = rng.next_below(5) as usize;
+            Json::Arr((0..len).map(|_| random_value(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.next_below(5) as usize;
+            let mut map = BTreeMap::new();
+            for _ in 0..len {
+                map.insert(random_string(rng), random_value(rng, depth - 1));
+            }
+            Json::Obj(map)
+        }
+    }
+}
+
+/// Strings mixing ASCII, escapes-in-waiting, and multibyte UTF-8.
+fn random_string(rng: &mut Xoshiro256) -> String {
+    const POOL: &[char] = &[
+        'a', 'b', 'z', '0', '9', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{0008}', '\u{000C}',
+        '\u{0001}', 'é', 'ß', '→', '中', '😀', '\u{10FFFF}',
+    ];
+    let len = rng.next_below(12) as usize;
+    (0..len)
+        .map(|_| POOL[rng.next_below(POOL.len() as u64) as usize])
+        .collect()
+}
+
+#[test]
+fn fuzz_parse_serialize_identity() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED);
+    for case in 0..500 {
+        let v = random_value(&mut rng, 4);
+        let compact = v.to_string();
+        let back = Json::parse(&compact)
+            .unwrap_or_else(|e| panic!("case {case}: rejected own output {compact:?}: {e}"));
+        assert_eq!(back, v, "case {case}: compact roundtrip changed the value");
+        let pretty = v.to_string_pretty();
+        let back = Json::parse(&pretty)
+            .unwrap_or_else(|e| panic!("case {case}: rejected pretty output: {e}"));
+        assert_eq!(back, v, "case {case}: pretty roundtrip changed the value");
+    }
+}
+
+#[test]
+fn fuzz_random_bytes_never_panic() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 1);
+    for _case in 0..2000 {
+        let len = rng.next_below(64) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+        let text = String::from_utf8_lossy(&bytes);
+        // must return Ok or Err — a panic fails this test
+        let _ = Json::parse(&text);
+    }
+}
+
+/// Bias the fuzz toward *almost*-valid input: JSON-ish byte soup drawn from
+/// structural characters, then mutations and truncations of genuinely
+/// valid documents — the inputs most likely to trip a hand-rolled parser.
+#[test]
+fn fuzz_jsonish_soup_and_mutations_never_panic() {
+    const SOUP: &[u8] = b"{}[]\",:0123456789.eE+-tfn\\u \n";
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 2);
+    for _case in 0..2000 {
+        let len = rng.next_below(48) as usize;
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| SOUP[rng.next_below(SOUP.len() as u64) as usize])
+            .collect();
+        let _ = Json::parse(&String::from_utf8_lossy(&bytes));
+    }
+    for case in 0..500 {
+        let v = random_value(&mut rng, 3);
+        let mut bytes = v.to_string().into_bytes();
+        if bytes.is_empty() {
+            continue;
+        }
+        match rng.next_below(3) {
+            0 => {
+                // single-byte mutation
+                let i = rng.next_below(bytes.len() as u64) as usize;
+                bytes[i] = rng.next_below(256) as u8;
+            }
+            1 => {
+                // truncation
+                bytes.truncate(rng.next_below(bytes.len() as u64) as usize);
+            }
+            _ => {
+                // duplication (unbalances the structure)
+                let extra = bytes.clone();
+                bytes.extend(extra);
+            }
+        }
+        let text = String::from_utf8_lossy(&bytes);
+        let _ = Json::parse(&text); // Ok or Err, never a panic
+        let _ = case;
+    }
+}
+
+#[test]
+fn malformed_corpus_errors_cleanly() {
+    // Every entry is invalid JSON; each must produce Err (not Ok, not a
+    // panic). Grown from bugs this grammar class historically attracts:
+    // unterminated containers/strings, bad escapes, lone surrogates,
+    // trailing garbage, truncated literals.
+    let corpus: &[&str] = &[
+        "",
+        "   ",
+        "{",
+        "}",
+        "[",
+        "]",
+        "[1,",
+        "[1 2]",
+        "[1,]",
+        "{\"a\"}",
+        "{\"a\" 1}",
+        "{\"a\":}",
+        "{\"a\":1,}",
+        "{a:1}",
+        "{\"a\":1 \"b\":2}",
+        "\"",
+        "\"abc",
+        "\"\\\"",
+        "\"\\x\"",
+        "\"\\u12\"",
+        "\"\\ud800\"",
+        "\"\\udc00\"",
+        "\"\\ud800\\u0041\"",
+        "tru",
+        "truex",
+        "nul",
+        "+1",
+        "--1",
+        "1 2",
+        "1,",
+        "{}{}",
+        "\u{0007}",
+    ];
+    for src in corpus {
+        assert!(
+            Json::parse(src).is_err(),
+            "parser accepted malformed input {src:?}"
+        );
+    }
+}

@@ -7,6 +7,10 @@
 //! Invariants covered:
 //! * surgery: equivalence holds for EVERY seed/config/variant (not just
 //!   the unit tests' fixed seeds); weight deltas always match `params`.
+//! * quantization: round-trip error bounded per row, `qgemm` tracks the
+//!   f32 GEMM on random shapes, INT8 logits track f32 across every tiny
+//!   preset × surgery variant, and batched INT8 decode stays bit-equal to
+//!   sequential decode.
 //! * scheduler/coordinator: conservation (every submitted request gets
 //!   exactly one response), ordering-independence of results, KV-cache
 //!   leak-freedom under random admission/finish/preemption churn.
@@ -14,12 +18,14 @@
 //! * tokenizer: encode∘decode = identity for arbitrary byte strings.
 
 use skipless::config::{ModelConfig, Variant};
-use skipless::coordinator::{CpuEngine, Engine, Request, Scheduler, SchedulerCfg};
+use skipless::coordinator::{CpuEngine, DecodeInput, Engine, Request, Scheduler, SchedulerCfg};
 use skipless::kvcache::KvCache;
+use skipless::linalg::{matmul, qmatmul};
 use skipless::metrics::Metrics;
-use skipless::model::{prefill, ModelWeights};
+use skipless::model::{prefill, quantize, ModelWeights};
 use skipless::sampler::SamplerCfg;
 use skipless::surgery::{transform, Options};
+use skipless::tensor::{Mat, QMat};
 use skipless::tokenizer::Bpe;
 use skipless::util::rng::Xoshiro256;
 use std::sync::Arc;
@@ -60,6 +66,114 @@ fn prop_surgery_equivalence_random_cases() {
         use skipless::params::count_weights;
         if cfg.layout == skipless::config::BlockLayout::Serial {
             assert_eq!(m.stored_weights(), count_weights(&cfg, variant).total());
+        }
+    }
+}
+
+/// Property: per-row symmetric quantization round-trips every element of
+/// every random matrix within half a quantization step (`scale/2`).
+#[test]
+fn prop_quant_roundtrip_bounded_per_row() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 10);
+    for case in 0..30 {
+        let rows = 1 + rng.next_below(40) as usize;
+        let cols = 1 + rng.next_below(120) as usize;
+        let std = 0.01 + rng.next_below(1000) as f32 / 100.0; // 0.01 .. 10
+        let m = Mat::randn(rows, cols, std, &mut rng);
+        let q = QMat::quantize_rows(&m);
+        let back = q.dequantize();
+        for r in 0..rows {
+            // half a step, plus scale-relative slack for f32 rounding of
+            // x·(1/scale) near the .5 boundary
+            let bound = q.scale(r) * 0.5001 + 1e-6;
+            for c in 0..cols {
+                let err = (m.at(r, c) - back.at(r, c)).abs();
+                assert!(
+                    err <= bound,
+                    "case {case} ({rows}x{cols}, std {std}): [{r},{c}] err {err} > {bound}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: the INT8 GEMM tracks the f32 GEMM on random shapes and seeds
+/// (per-channel weight scales + per-row activation scales keep the
+/// relative Frobenius error at the ~1% quantization floor).
+#[test]
+fn prop_qgemm_matches_f32_gemm() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 11);
+    for case in 0..20 {
+        let m = 1 + rng.next_below(32) as usize;
+        let k = 1 + rng.next_below(300) as usize;
+        let n = 1 + rng.next_below(400) as usize;
+        let x = Mat::randn(m, k, 1.0, &mut rng);
+        let w = Mat::randn(k, n, 1.0, &mut rng);
+        let got = qmatmul(&x, &QMat::from_weight(&w));
+        let want = matmul(&x, &w);
+        let err = got.rel_fro_err(&want);
+        assert!(err < 0.03, "case {case} ({m},{k},{n}): rel err {err}");
+    }
+}
+
+/// Property: INT8 logits track f32 logits within rel-Fro 5e-2 for EVERY
+/// tiny preset × supported surgery variant (the ISSUE-2 acceptance bar),
+/// on random prompts.
+#[test]
+fn prop_int8_logit_drift_all_presets_and_variants() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 12);
+    for preset in ["tiny-mha", "tiny-gqa", "tiny-mqa", "tiny-parallel"] {
+        let cfg = ModelConfig::preset(preset).unwrap();
+        let w = ModelWeights::init_vanilla(&cfg, rng.next_u64());
+        for variant in Variant::all() {
+            if !cfg.supports(variant) {
+                continue;
+            }
+            let merged = transform(&w, variant, Options { skip_audit: true, ..Default::default() })
+                .unwrap();
+            let q = quantize(&merged);
+            let len = 1 + rng.next_below(8) as usize;
+            let prompt: Vec<u32> = (0..len)
+                .map(|_| rng.next_below(cfg.vocab_size as u64) as u32)
+                .collect();
+            let (l0, _) = prefill(&merged, &prompt);
+            let (l1, _) = prefill(&q, &prompt);
+            let err = l1.rel_fro_err(&l0);
+            assert!(
+                err < 5e-2,
+                "{preset} {variant:?} prompt {prompt:?}: int8 rel err {err}"
+            );
+        }
+    }
+}
+
+/// Property: batched INT8 decode equals sequential INT8 decode bit-exactly
+/// (quantization is per-row, so batching cannot change any row's result).
+#[test]
+fn prop_int8_decode_batch_invariant() {
+    let mut rng = Xoshiro256::seed_from_u64(CASE_SEED + 13);
+    let cfg = ModelConfig::tiny_gqa();
+    let q = quantize(&ModelWeights::init_vanilla(&cfg, rng.next_u64()));
+    let mut eng_b = CpuEngine::new(q.clone(), 8, 8 << 20);
+    let mut eng_s = CpuEngine::new(q, 8, 8 << 20);
+    let prompts: Vec<Vec<u32>> = (0..5)
+        .map(|i| (0..(2 + i)).map(|j| ((i * 37 + j * 11 + 1) % 250) as u32).collect())
+        .collect();
+    let ids_b: Vec<_> = prompts.iter().map(|p| eng_b.prefill(p).unwrap().0).collect();
+    let ids_s: Vec<_> = prompts.iter().map(|p| eng_s.prefill(p).unwrap().0).collect();
+    for step in 0..3 {
+        let toks: Vec<u32> = (0..prompts.len())
+            .map(|i| ((step * 41 + i * 17 + 2) % 250) as u32)
+            .collect();
+        let batch: Vec<DecodeInput> = ids_b
+            .iter()
+            .zip(&toks)
+            .map(|(&seq, &token)| DecodeInput { seq, token })
+            .collect();
+        let got = eng_b.decode_batch(&batch).unwrap();
+        for (i, (&seq, &token)) in ids_s.iter().zip(&toks).enumerate() {
+            let solo = eng_s.decode_batch(&[DecodeInput { seq, token }]).unwrap();
+            assert_eq!(got[i], solo[0], "step {step} seq {i}: batch changed int8 logits");
         }
     }
 }

@@ -4,21 +4,26 @@
 
 use skipless::config::{ModelConfig, Variant};
 use skipless::coordinator::{Coordinator, CpuEngine, Request, SchedulerCfg};
-use skipless::model::{greedy_generate, weights_io, ModelWeights};
+use skipless::kvcache::CacheOpts;
+use skipless::model::{greedy_generate, quantize, weights_io, ModelWeights};
 use skipless::server::{Client, Server};
 use skipless::surgery::{transform, Options};
 use skipless::tokenizer::Bpe;
 use skipless::util::json::Json;
 use std::sync::Arc;
 
-fn boot_server(w: ModelWeights) -> std::net::SocketAddr {
-    let coord = Coordinator::spawn(CpuEngine::new(w, 8, 32 << 20), SchedulerCfg::default());
+fn boot_engine(eng: CpuEngine) -> std::net::SocketAddr {
+    let coord = Coordinator::spawn(eng, SchedulerCfg::default());
     let server = Server::bind("127.0.0.1:0", coord).unwrap();
     let addr = server.local_addr();
     std::thread::spawn(move || {
         let _ = server.serve();
     });
     addr
+}
+
+fn boot_server(w: ModelWeights) -> std::net::SocketAddr {
+    boot_engine(CpuEngine::new(w, 8, 32 << 20))
 }
 
 #[test]
@@ -98,6 +103,97 @@ fn surgery_file_roundtrip_serves_equivalently() {
     let want = greedy_generate(&w, &[3, 1, 4], 6);
     let got = greedy_generate(&served, &[3, 1, 4], 6);
     assert_eq!(got, want, "deployment roundtrip changed the function");
+}
+
+/// Regression: `{"op":"metrics"}` must expose the `kv_cache` lifecycle
+/// object AND the quantization counters, with values that reflect an INT8 +
+/// u8-KV engine actually doing work.
+#[test]
+fn metrics_expose_kv_and_quant_counters_over_the_wire() {
+    let cfg = ModelConfig::tiny_gqa();
+    let w = ModelWeights::init_vanilla(&cfg, 12);
+    let q = quantize(&w);
+    let f32_bytes = q.stored_bytes();
+    let resident = q.resident_bytes();
+    let addr = boot_engine(CpuEngine::with_cache_opts(
+        q,
+        8,
+        32 << 20,
+        CacheOpts {
+            quantized: true,
+            ..Default::default()
+        },
+    ));
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    // three identical long prompts: the 2nd and 3rd hit the prefix cache.
+    // The cold run attends over in-register f32 K/V while warm runs re-read
+    // u8 codes, so cold-vs-warm may differ by a quantization step — but the
+    // two warm runs read the very same codes and must agree byte for byte.
+    let prompt: Vec<u32> = (0..20).map(|i| (i * 7 + 3) % 250).collect();
+    let _cold = c.generate(&prompt, 4).unwrap();
+    let warm1 = c.generate(&prompt, 4).unwrap();
+    let warm2 = c.generate(&prompt, 4).unwrap();
+    assert_eq!(warm1, warm2, "warm int8 serving must stay deterministic");
+
+    let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    let metrics = m.get("metrics").unwrap();
+    let kv = metrics.get("kv_cache").unwrap();
+    // lifecycle counters present and live
+    assert!(kv.get("prefix_tokens_saved").unwrap().as_u64().unwrap() > 0);
+    assert!(kv.get("prefix_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+    for key in [
+        "cow_copies",
+        "evictions",
+        "swap_outs",
+        "swap_ins",
+        "blocks_used",
+        "blocks_free",
+        "blocks_cached",
+    ] {
+        assert!(kv.get(key).is_some(), "kv_cache.{key} missing");
+    }
+    // u8-KV pool: bytes/token shrinks and finished prompts stay cached
+    let bpt = kv.get("bytes_per_token").unwrap().as_u64().unwrap();
+    assert_eq!(bpt, ((2 * cfg.e() + 16) * cfg.n_layers) as u64);
+    // tiny-gqa has e = 16, where the per-row meta is a big fraction (2.7x);
+    // at realistic e the ratio approaches 4x (see kvcache unit tests)
+    assert!(bpt * 2 < (2 * cfg.e() * 4 * cfg.n_layers) as u64);
+    assert!(
+        kv.get("blocks_cached").unwrap().as_u64().unwrap() > 0,
+        "finished prompt blocks should sit in the reclaimable prefix cache"
+    );
+    // weight-side quant counters match the engine's model exactly
+    let quant = metrics.get("quant").unwrap();
+    assert_eq!(quant.get("weight_bytes_f32").unwrap().as_u64(), Some(f32_bytes));
+    assert_eq!(
+        quant.get("weight_bytes_resident").unwrap().as_u64(),
+        Some(resident)
+    );
+    assert_eq!(
+        quant.get("weight_bytes_saved").unwrap().as_u64(),
+        Some(f32_bytes - resident)
+    );
+}
+
+/// An f32 server must report zero quantization savings (the counters exist
+/// but read "nothing quantized here").
+#[test]
+fn f32_server_reports_no_quant_savings() {
+    let cfg = ModelConfig::tiny_mha();
+    let w = ModelWeights::init_vanilla(&cfg, 13);
+    let addr = boot_server(w);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let _ = c.generate(&[1, 2, 3], 2).unwrap();
+    let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+    let metrics = m.get("metrics").unwrap();
+    assert_eq!(
+        metrics.get("quant").unwrap().get("weight_bytes_saved").unwrap().as_u64(),
+        Some(0)
+    );
+    assert_eq!(
+        metrics.get("kv_cache").unwrap().get("quantized_blocks").unwrap().as_u64(),
+        Some(0)
+    );
 }
 
 #[test]
