@@ -111,6 +111,7 @@ fn main() {
             SchedulerCfg {
                 max_running,
                 admits_per_step: admits,
+                ..Default::default()
             },
             Arc::clone(&metrics),
         );

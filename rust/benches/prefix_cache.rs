@@ -41,6 +41,7 @@ fn run(
         SchedulerCfg {
             max_running: 32,
             admits_per_step: 4,
+            ..Default::default()
         },
         Arc::clone(&metrics),
     );

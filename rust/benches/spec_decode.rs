@@ -1,0 +1,171 @@
+//! Self-speculative decoding bench: INT8 draft → f32 verify, versus plain
+//! batched decode.
+//!
+//! The quantity that matters on weight-streaming-bound hardware is **target
+//! batched steps per generated token**: every plain step streams the full
+//! f32 weights once to commit one token per sequence, while a verify step
+//! streams them once to commit up to `k+1` tokens per sequence (the widened
+//! step batches the draft positions through the same GEMMs). Greedy
+//! acceptance keeps the output token-identical, so the comparison is pure
+//! bookkeeping — both runs produce the same streams, asserted here. Emits
+//! `BENCH_spec.json` (schema in EXPERIMENTS.md); `SKIPLESS_BENCH_QUICK=1`
+//! shrinks the model and token counts for CI.
+
+use skipless::config::{AttentionKind, BlockLayout, FfnKind, ModelConfig};
+use skipless::coordinator::{CpuEngine, Request, Scheduler, SchedulerCfg};
+use skipless::kvcache::CacheOpts;
+use skipless::metrics::Metrics;
+use skipless::model::{quantize, ModelWeights};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Same mid-size GQA model as `quant_throughput`: big enough that decode is
+/// genuinely weight-streaming-bound, small enough to init in seconds.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        name: "spec-bench-85m".into(),
+        dim: 384,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 2,
+        hidden_dim: 1536,
+        vocab_size: 1024,
+        max_seq_len: 512,
+        attention: AttentionKind::Gqa,
+        layout: BlockLayout::Serial,
+        ffn: FfnKind::Mlp,
+        tied_embeddings: false,
+    }
+}
+
+struct RunStats {
+    tokens: Vec<Vec<u32>>,
+    target_steps: u64,
+    tokens_decoded: u64,
+    drafted: u64,
+    accepted: u64,
+    draft_steps: u64,
+    wall_s: f64,
+}
+
+fn run(
+    w: &ModelWeights,
+    spec_k: usize,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    budget: usize,
+) -> RunStats {
+    let metrics = Arc::new(Metrics::new());
+    let cfg = SchedulerCfg {
+        spec_k,
+        ..Default::default()
+    };
+    let engine = CpuEngine::new(w.clone(), 16, budget);
+    let mut s = if spec_k > 0 {
+        // the draft: the same weights at int8, with a u8 KV pool — draft
+        // precision affects only the accept rate, never correctness
+        let draft = CpuEngine::with_cache_opts(
+            quantize(w),
+            16,
+            budget,
+            CacheOpts {
+                quantized: true,
+                ..Default::default()
+            },
+        );
+        Scheduler::with_draft(engine, Box::new(draft), cfg, Arc::clone(&metrics))
+    } else {
+        Scheduler::new(engine, cfg, Arc::clone(&metrics))
+    };
+    for (i, p) in prompts.iter().enumerate() {
+        s.submit(Request::greedy(i as u64, p.clone(), max_new));
+    }
+    let t0 = Instant::now();
+    let mut done = s.run_to_completion();
+    let wall_s = t0.elapsed().as_secs_f64();
+    done.sort_by_key(|r| r.id);
+    RunStats {
+        tokens: done.into_iter().map(|r| r.tokens).collect(),
+        target_steps: metrics.batches_run.load(Ordering::Relaxed),
+        tokens_decoded: metrics.tokens_decoded.load(Ordering::Relaxed),
+        drafted: metrics.spec_tokens_drafted.load(Ordering::Relaxed),
+        accepted: metrics.spec_tokens_accepted.load(Ordering::Relaxed),
+        draft_steps: metrics.spec_draft_steps.load(Ordering::Relaxed),
+        wall_s,
+    }
+}
+
+fn main() {
+    println!("# spec_decode — self-speculative decoding (int8 draft → f32 verify)");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let cfg = if quick { ModelConfig::tiny_gqa() } else { bench_config() };
+    let (n_req, max_new) = if quick { (4, 12) } else { (8, 32) };
+    let k = 4usize;
+    let budget = 64 << 20;
+
+    eprintln!("  initializing {} (this includes calibration)...", cfg.name);
+    let w = ModelWeights::init_vanilla(&cfg, 2026);
+    let vocab = cfg.vocab_size as u32;
+    let prompts: Vec<Vec<u32>> = (0..n_req)
+        .map(|i| (0..6).map(|j| ((i * 131 + j * 17 + 3) as u32) % vocab).collect())
+        .collect();
+
+    let plain = run(&w, 0, &prompts, max_new, budget);
+    let spec = run(&w, k, &prompts, max_new, budget);
+
+    // the headline guarantee: greedy speculative output is token-identical
+    assert_eq!(
+        plain.tokens, spec.tokens,
+        "speculative decode changed the greedy output stream"
+    );
+
+    let spt_plain = plain.target_steps as f64 / plain.tokens_decoded.max(1) as f64;
+    let spt_spec = spec.target_steps as f64 / spec.tokens_decoded.max(1) as f64;
+    let reduction = spt_plain / spt_spec;
+    let accept_rate = spec.accepted as f64 / spec.drafted.max(1) as f64;
+    let wall_x = plain.wall_s / spec.wall_s.max(1e-12);
+    eprintln!(
+        "  plain: {} target steps / {} tokens ({:.4} steps/tok, {:.2}s)",
+        plain.target_steps, plain.tokens_decoded, spt_plain, plain.wall_s
+    );
+    eprintln!(
+        "  spec (k={k}): {} target steps / {} tokens ({:.4} steps/tok, {:.2}s), \
+         accept {:.1}% ({}/{} drafts), {} draft steps",
+        spec.target_steps,
+        spec.tokens_decoded,
+        spt_spec,
+        spec.wall_s,
+        100.0 * accept_rate,
+        spec.accepted,
+        spec.drafted,
+        spec.draft_steps
+    );
+    eprintln!("  target-step reduction: {reduction:.2}x   wall-clock: {wall_x:.2}x");
+    println!(
+        "{{\"suite\":\"spec_decode\",\"case\":\"k{k}\",\"steps_per_token_plain\":{spt_plain:.4},\"steps_per_token_spec\":{spt_spec:.4},\"target_step_reduction_x\":{reduction:.4},\"accept_rate\":{accept_rate:.4}}}"
+    );
+    // acceptance bar (full mode): ≥ 1.5x fewer target-model batched steps
+    // per generated token at k=4
+    if !quick {
+        assert!(
+            reduction >= 1.5,
+            "target-step reduction only {reduction:.2}x at k={k}"
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"suite\": \"spec_decode\",\n  \"model\": \"{}\",\n  \"k\": {k},\n  \"requests\": {n_req},\n  \"max_new_tokens\": {max_new},\n  \"tokens_generated\": {},\n  \"identical_output\": true,\n  \"accept_rate\": {accept_rate:.4},\n  \"tokens_drafted\": {},\n  \"tokens_accepted\": {},\n  \"draft_steps\": {},\n  \"target_steps_plain\": {},\n  \"target_steps_spec\": {},\n  \"steps_per_token_plain\": {spt_plain:.4},\n  \"steps_per_token_spec\": {spt_spec:.4},\n  \"target_step_reduction_x\": {reduction:.4},\n  \"wall_plain_s\": {:.4},\n  \"wall_spec_s\": {:.4},\n  \"wall_speedup_x\": {wall_x:.4}\n}}\n",
+        cfg.name,
+        spec.tokens_decoded,
+        spec.drafted,
+        spec.accepted,
+        spec.draft_steps,
+        plain.target_steps,
+        spec.target_steps,
+        plain.wall_s,
+        spec.wall_s,
+    );
+    std::fs::write("BENCH_spec.json", &json).expect("write BENCH_spec.json");
+    eprintln!("  wrote BENCH_spec.json");
+}

@@ -7,7 +7,7 @@
 //! testbed for the vanilla-vs-merged decode benchmarks.
 
 use crate::config::{BlockLayout, ModelConfig, Variant};
-use crate::coordinator::engine::{DecodeInput, Engine, EngineError};
+use crate::coordinator::engine::{DecodeInput, Engine, EngineError, VerifyInput};
 use crate::kvcache::{CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
 use crate::linalg::{matmul, matmul_transb, softmax_rows};
 use crate::model::attention::HeadLayout;
@@ -69,6 +69,53 @@ fn attend_continuation(
 
 fn capacity(e: CacheError) -> EngineError {
     EngineError::CapacityExhausted(e.to_string())
+}
+
+/// Attention of one already-rotated query row over `t` gathered key/value
+/// rows (`t × e` each, contiguous). The scalar accumulation order here is
+/// the single source of truth for the decode path: `decode_batch` and
+/// `verify_batch` both route through it, which is what makes a widened
+/// verify step bit-identical to the same tokens decoded one at a time.
+fn attend_one(
+    layout: HeadLayout,
+    q_rot: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    t: usize,
+    out: &mut [f32],
+) {
+    let hd = layout.head_dim;
+    let e = layout.e();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; t];
+    for h in 0..layout.n_heads {
+        let g = layout.kv_of(h);
+        let qh = &q_rot[h * hd..(h + 1) * hd];
+        for (r, s) in scores.iter_mut().enumerate() {
+            let krow = &keys[r * e + g * hd..r * e + (g + 1) * hd];
+            let mut acc = 0.0f32;
+            for i in 0..hd {
+                acc += qh[i] * krow[i];
+            }
+            *s = acc * scale;
+        }
+        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        let oh = &mut out[h * hd..(h + 1) * hd];
+        oh.fill(0.0);
+        for (r, &s) in scores.iter().enumerate() {
+            let w = s * inv;
+            let vrow = &vals[r * e + g * hd..r * e + (g + 1) * hd];
+            for i in 0..hd {
+                oh[i] += w * vrow[i];
+            }
+        }
+    }
 }
 
 impl CpuEngine {
@@ -197,39 +244,7 @@ impl CpuEngine {
     /// already-rotated query row; the cache already contains the current
     /// position. Writes the head-concat output into `out`.
     fn attend_cached(&self, q_rot: &[f32], t: usize, out: &mut [f32]) {
-        let layout = self.head_layout();
-        let hd = layout.head_dim;
-        let e = layout.e();
-        let scale = 1.0 / (hd as f32).sqrt();
-        let mut scores = vec![0.0f32; t];
-        for h in 0..layout.n_heads {
-            let g = layout.kv_of(h);
-            let qh = &q_rot[h * hd..(h + 1) * hd];
-            for (r, s) in scores.iter_mut().enumerate() {
-                let krow = &self.scratch_k[r * e + g * hd..r * e + (g + 1) * hd];
-                let mut acc = 0.0f32;
-                for i in 0..hd {
-                    acc += qh[i] * krow[i];
-                }
-                *s = acc * scale;
-            }
-            let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-            let mut sum = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - mx).exp();
-                sum += *s;
-            }
-            let inv = 1.0 / sum;
-            let oh = &mut out[h * hd..(h + 1) * hd];
-            oh.fill(0.0);
-            for (r, &s) in scores.iter().enumerate() {
-                let w = s * inv;
-                let vrow = &self.scratch_v[r * e + g * hd..r * e + (g + 1) * hd];
-                for i in 0..hd {
-                    oh[i] += w * vrow[i];
-                }
-            }
-        }
+        attend_one(self.head_layout(), q_rot, &self.scratch_k, &self.scratch_v, t, out);
     }
 }
 
@@ -392,6 +407,163 @@ impl Engine for CpuEngine {
         }
         let logits = self.weights.unembed.matmul(&x);
         Ok((0..bsz).map(|r| logits.row(r).to_vec()).collect())
+    }
+
+    fn verify_batch(&mut self, inputs: &[VerifyInput]) -> Result<Vec<Vec<Vec<f32>>>, EngineError> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let cfg = self.weights.cfg.clone();
+        let hd = cfg.head_dim();
+        let layout = self.head_layout();
+        // Up-front validation + capacity reservation (counting worst-case
+        // CoW): fail before any state changes, so a rejected widened step
+        // needs no cleanup and the scheduler can simply fall back to plain
+        // decode.
+        let mut base = Vec::with_capacity(inputs.len());
+        let mut fresh_needed = 0usize;
+        for vi in inputs {
+            if vi.tokens.is_empty() {
+                return Err(EngineError::BadSequence("empty verify input".into()));
+            }
+            let p = *self
+                .positions
+                .get(&vi.seq)
+                .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", vi.seq)))?;
+            if p + vi.tokens.len() > cfg.max_seq_len {
+                return Err(EngineError::CapacityExhausted(format!(
+                    "{:?} would exceed max_seq_len {}",
+                    vi.seq, cfg.max_seq_len
+                )));
+            }
+            fresh_needed += self.cache.blocks_to_grow(vi.seq, vi.tokens.len());
+            base.push(p);
+        }
+        if fresh_needed > self.cache.free_blocks() {
+            return Err(EngineError::CapacityExhausted(format!(
+                "verify step needs {fresh_needed} blocks, {} free",
+                self.cache.free_blocks()
+            )));
+        }
+        let total_rows: usize = inputs.iter().map(|i| i.tokens.len()).sum();
+        let toks: Vec<u32> = inputs.iter().flat_map(|i| i.tokens.iter().copied()).collect();
+        let mut x = self.weights.embed_tokens(&toks);
+        // absolute position of every flattened row
+        let mut rowpos = Vec::with_capacity(total_rows);
+        for (vi, &p) in inputs.iter().zip(&base) {
+            for j in 0..vi.tokens.len() {
+                rowpos.push(p + j);
+            }
+        }
+        let ew = layout.e();
+        // roundtrip scratch for the u8-pool path (reused across all rows)
+        let (mut rt_codes, mut rt_vals) = (Vec::new(), Vec::new());
+        let n_layers = self.weights.blocks.len();
+        // every layer's (rotated-K, V) rows, written to the paged cache
+        // position-major after the layer loop (the cache's append/advance
+        // protocol is per-position)
+        let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let b = &self.weights.blocks[li];
+            // the widened step: each weight matrix is streamed ONCE for all
+            // (sequence × draft position) rows — k+1 tokens of target
+            // compute per sequence at one batched step's weight traffic
+            let mut q = Weight::proj(&x, &b.q);
+            let mut k = Weight::proj(&x, &b.k);
+            let v = Weight::proj(&x, &b.v);
+            for (r, &p) in rowpos.iter().enumerate() {
+                for h in 0..cfg.n_heads {
+                    rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+                }
+                for g in 0..cfg.n_kv_heads {
+                    rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                }
+            }
+            let mut a = Mat::zeros(total_rows, cfg.dim);
+            let mut r0 = 0usize;
+            for (vi, &p) in inputs.iter().zip(&base) {
+                let s = vi.tokens.len();
+                let (mut sk, mut sv) = (
+                    std::mem::take(&mut self.scratch_k),
+                    std::mem::take(&mut self.scratch_v),
+                );
+                self.cache
+                    .gather(vi.seq, li, &mut sk, &mut sv)
+                    .map_err(|err| EngineError::BadSequence(err.to_string()))?;
+                for j in 0..s {
+                    let r = r0 + j;
+                    // current row raw — exactly how decode_batch extends
+                    // its scratch; earlier draft rows were roundtripped
+                    // through the pool's quantizer below, so they match
+                    // what a sequential decode would have gathered back
+                    sk.extend_from_slice(k.row(r));
+                    sv.extend_from_slice(v.row(r));
+                    attend_one(layout, q.row(r), &sk, &sv, p + j + 1, a.row_mut(r));
+                    let last = sk.len() - ew;
+                    self.cache
+                        .quantize_roundtrip(&mut sk[last..], &mut rt_codes, &mut rt_vals);
+                    self.cache
+                        .quantize_roundtrip(&mut sv[last..], &mut rt_codes, &mut rt_vals);
+                }
+                self.scratch_k = sk;
+                self.scratch_v = sv;
+                r0 += s;
+            }
+            layer_kv.push((k, v));
+            x = match cfg.layout {
+                BlockLayout::Serial => {
+                    let p = Weight::proj(&a, &b.p);
+                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                }
+                BlockLayout::Parallel => {
+                    let post = if b.c.is_some() { &b.c } else { &b.p };
+                    let attn_out = Weight::proj(&a, post);
+                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                }
+            };
+        }
+        // position-major cache writes: all layers of a position, then advance
+        let mut r0 = 0usize;
+        for vi in inputs {
+            for j in 0..vi.tokens.len() {
+                for (li, (k, v)) in layer_kv.iter().enumerate() {
+                    self.cache
+                        .append(vi.seq, li, k.row(r0 + j), v.row(r0 + j))
+                        .map_err(capacity)?;
+                }
+                self.cache
+                    .advance(vi.seq)
+                    .map_err(|err| EngineError::BadSequence(err.to_string()))?;
+            }
+            *self.positions.get_mut(&vi.seq).unwrap() += vi.tokens.len();
+            r0 += vi.tokens.len();
+        }
+        let logits = self.weights.unembed.matmul(&x);
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut r0 = 0usize;
+        for vi in inputs {
+            let rows: Vec<Vec<f32>> = (r0..r0 + vi.tokens.len())
+                .map(|r| logits.row(r).to_vec())
+                .collect();
+            out.push(rows);
+            r0 += vi.tokens.len();
+        }
+        Ok(out)
+    }
+
+    fn truncate(&mut self, seq: SeqId, new_len: usize) -> Result<(), EngineError> {
+        self.cache
+            .truncate_seq(seq, new_len)
+            .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+        *self
+            .positions
+            .get_mut(&seq)
+            .ok_or_else(|| EngineError::BadSequence(format!("{seq:?} not live")))? = new_len;
+        Ok(())
+    }
+
+    fn supports_rollback(&self) -> bool {
+        true
     }
 
     fn release(&mut self, seq: SeqId) {
@@ -721,6 +893,142 @@ mod tests {
         let q_eng = CpuEngine::new(crate::model::quantize(&w), 8, 1 << 20);
         let (a, b) = q_eng.weight_bytes();
         assert!(b * 2 < a, "quantized engine must report the shrink: {a} vs {b}");
+    }
+
+    // ---- speculative verify + rollback ---------------------------------
+
+    /// The widened verify step must be BIT-identical to feeding the same
+    /// tokens one at a time through `decode_batch` — for f32 caches, u8
+    /// caches, and int8 weights. This is the property that makes greedy
+    /// speculative output token-identical to plain decoding.
+    #[test]
+    fn verify_batch_bit_identical_to_sequential_decode() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 90);
+        let cases: Vec<(ModelWeights, CacheOpts)> = vec![
+            (w.clone(), CacheOpts::default()),
+            (
+                w.clone(),
+                CacheOpts {
+                    quantized: true,
+                    ..Default::default()
+                },
+            ),
+            (crate::model::quantize(&w), CacheOpts::default()),
+        ];
+        for (wi, opts) in cases {
+            let dtype = if wi.is_quantized() { "int8" } else { "f32" };
+            let tag = format!("{dtype}/kv8={}", opts.quantized);
+            let mut ev = CpuEngine::with_cache_opts(wi.clone(), 4, 8 << 20, opts);
+            let mut es = CpuEngine::with_cache_opts(wi, 4, 8 << 20, opts);
+            let prompt = [3u32, 1, 4, 1, 5];
+            let (iv, _) = ev.prefill(&prompt).unwrap();
+            let (is_, _) = es.prefill(&prompt).unwrap();
+            let tokens = vec![9u32, 2, 6, 5];
+            let got = ev
+                .verify_batch(&[VerifyInput { seq: iv, tokens: tokens.clone() }])
+                .unwrap();
+            for (j, &t) in tokens.iter().enumerate() {
+                let want = es.decode_batch(&[DecodeInput { seq: is_, token: t }]).unwrap();
+                assert_eq!(got[0][j], want[0], "{tag}: row {j} not bit-identical");
+            }
+            // and the cache state afterwards is identical too: the next
+            // plain decode agrees bitwise
+            let a = ev.decode_batch(&[DecodeInput { seq: iv, token: 8 }]).unwrap();
+            let b = es.decode_batch(&[DecodeInput { seq: is_, token: 8 }]).unwrap();
+            assert_eq!(a[0], b[0], "{tag}: post-verify cache state diverged");
+        }
+    }
+
+    /// Multi-sequence verify with different draft lengths per sequence.
+    #[test]
+    fn verify_batch_mixed_lengths() {
+        let mut eng = engine("tiny-gqa", 91);
+        let mut ref_eng = engine("tiny-gqa", 91);
+        let (a, _) = eng.prefill(&[1, 2, 3]).unwrap();
+        let (b, _) = eng.prefill(&[9, 8]).unwrap();
+        let (ra, _) = ref_eng.prefill(&[1, 2, 3]).unwrap();
+        let (rb, _) = ref_eng.prefill(&[9, 8]).unwrap();
+        let got = eng
+            .verify_batch(&[
+                VerifyInput { seq: a, tokens: vec![5, 6, 7] },
+                VerifyInput { seq: b, tokens: vec![4] },
+            ])
+            .unwrap();
+        assert_eq!(got[0].len(), 3);
+        assert_eq!(got[1].len(), 1);
+        for (j, &t) in [5u32, 6, 7].iter().enumerate() {
+            let want = ref_eng.decode_batch(&[DecodeInput { seq: ra, token: t }]).unwrap();
+            assert_eq!(got[0][j], want[0], "seq a row {j}");
+        }
+        let want = ref_eng.decode_batch(&[DecodeInput { seq: rb, token: 4 }]).unwrap();
+        assert_eq!(got[1][0], want[0], "seq b row 0");
+    }
+
+    /// Rollback after verify: truncating the rejected positions must leave
+    /// the engine bit-identical to one that never speculated.
+    #[test]
+    fn truncate_after_verify_restores_exact_state() {
+        for quantized in [false, true] {
+            let cfg = ModelConfig::tiny_gqa();
+            let w = ModelWeights::init_vanilla(&cfg, 92);
+            let opts = CacheOpts { quantized, ..Default::default() };
+            let mut eng = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, opts);
+            let mut ref_eng = CpuEngine::with_cache_opts(w, 4, 8 << 20, opts);
+            let prompt = [2u32, 7, 1, 8];
+            let (id, _) = eng.prefill(&prompt).unwrap();
+            let (rid, _) = ref_eng.prefill(&prompt).unwrap();
+            // speculate 4 tokens, then reject the last 3
+            let _ = eng
+                .verify_batch(&[VerifyInput { seq: id, tokens: vec![5, 6, 7, 8] }])
+                .unwrap();
+            assert!(eng.supports_rollback());
+            eng.truncate(id, prompt.len() + 1).unwrap();
+            // reference consumes only the one accepted token
+            let _ = ref_eng.decode_batch(&[DecodeInput { seq: rid, token: 5 }]).unwrap();
+            for step in 0..3 {
+                let tok = 11 + step as u32;
+                let a = eng.decode_batch(&[DecodeInput { seq: id, token: tok }]).unwrap();
+                let b = ref_eng.decode_batch(&[DecodeInput { seq: rid, token: tok }]).unwrap();
+                assert_eq!(a[0], b[0], "kv8={quantized} step {step} diverged after rollback");
+            }
+        }
+    }
+
+    /// Capacity reservation: a verify step that cannot fit must fail
+    /// *before* touching any sequence state.
+    #[test]
+    fn verify_batch_capacity_failure_leaves_state_intact() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 93);
+        let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
+        // 2 blocks of 4 positions = room for the 5-position prompt + 3 more
+        let mut eng = CpuEngine::new(w, 4, 2 * bytes_per_block);
+        let (id, _) = eng.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        match eng.verify_batch(&[VerifyInput { seq: id, tokens: vec![1, 2, 3, 4] }]) {
+            Err(EngineError::CapacityExhausted(_)) => {}
+            other => panic!("expected capacity error, got {:?}", other.map(|_| ())),
+        }
+        // the failed verify must not have consumed anything: a 3-token
+        // verify still fits exactly
+        let got = eng
+            .verify_batch(&[VerifyInput { seq: id, tokens: vec![1, 2, 3] }])
+            .unwrap();
+        assert_eq!(got[0].len(), 3);
+    }
+
+    #[test]
+    fn verify_batch_rejects_bad_inputs() {
+        let mut eng = engine("tiny-mha", 94);
+        let (id, _) = eng.prefill(&[1, 2]).unwrap();
+        assert!(matches!(
+            eng.verify_batch(&[VerifyInput { seq: SeqId(99), tokens: vec![1] }]),
+            Err(EngineError::BadSequence(_))
+        ));
+        assert!(matches!(
+            eng.verify_batch(&[VerifyInput { seq: id, tokens: vec![] }]),
+            Err(EngineError::BadSequence(_))
+        ));
     }
 
     #[test]

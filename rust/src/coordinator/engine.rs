@@ -41,6 +41,17 @@ pub struct DecodeInput {
     pub token: u32,
 }
 
+/// One sequence's multi-position input for a widened verify step
+/// ([`Engine::verify_batch`]): consume `tokens[0]`, `tokens[1]`, ... at
+/// consecutive positions. In speculative decoding `tokens[0]` is the
+/// committed next token and `tokens[1..]` is the draft continuation, so the
+/// returned logits rows score every draft token plus one bonus position.
+#[derive(Clone, Debug)]
+pub struct VerifyInput {
+    pub seq: SeqId,
+    pub tokens: Vec<u32>,
+}
+
 /// NB: not `Send`-bounded — PJRT client handles are `Rc`-based, so PJRT
 /// engines are built *on* the coordinator thread via
 /// [`crate::coordinator::Coordinator::spawn_with`].
@@ -111,5 +122,45 @@ pub trait Engine {
     /// holds quantized weights. `(0, 0)` for engines that don't report.
     fn weight_bytes(&self) -> (u64, u64) {
         (0, 0)
+    }
+
+    // ---- speculative decoding (optional; defaults keep engines without
+    // multi-position support correct, just unaccelerated) ----------------
+
+    /// Advance each sequence by `tokens.len()` positions and return one
+    /// logits row **per consumed token**, in order — the widened batched
+    /// step of speculative decoding. Engines that override this must return
+    /// rows bit-identical to what the same tokens fed one at a time through
+    /// [`Engine::decode_batch`] would produce (greedy acceptance turns that
+    /// into token-identical speculative output), and should fail *before*
+    /// mutating any sequence state where possible — the scheduler
+    /// defensively truncates back to the committed length after a capacity
+    /// failure, but only rollback-capable engines can be repaired that way.
+    /// The default implementation decodes sequentially — correct, but with
+    /// no step-count reduction and no failure atomicity.
+    fn verify_batch(&mut self, inputs: &[VerifyInput]) -> Result<Vec<Vec<Vec<f32>>>, EngineError> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for vi in inputs {
+            let mut rows = Vec::with_capacity(vi.tokens.len());
+            for &token in &vi.tokens {
+                let r = self.decode_batch(&[DecodeInput { seq: vi.seq, token }])?;
+                rows.push(r.into_iter().next().expect("one row per input"));
+            }
+            out.push(rows);
+        }
+        Ok(out)
+    }
+
+    /// Roll a live sequence back to `new_len` positions, discarding the KV
+    /// state of rejected draft positions. The scheduler only speculates on
+    /// engines whose [`Engine::supports_rollback`] is true.
+    fn truncate(&mut self, _seq: SeqId, _new_len: usize) -> Result<(), EngineError> {
+        Err(EngineError::Backend("rollback not supported by this engine".into()))
+    }
+
+    /// Can this engine discard trailing positions ([`Engine::truncate`])?
+    /// Speculative decoding requires it to reject draft tokens.
+    fn supports_rollback(&self) -> bool {
+        false
     }
 }

@@ -17,7 +17,7 @@ pub mod engine;
 pub mod scheduler;
 
 pub use cpu_engine::CpuEngine;
-pub use engine::{DecodeInput, Engine, EngineError};
+pub use engine::{DecodeInput, Engine, EngineError, VerifyInput};
 pub use scheduler::{FinishReason, Request, Response, Scheduler, SchedulerCfg};
 
 use crate::metrics::Metrics;
@@ -67,6 +67,29 @@ impl Coordinator {
         }
     }
 
+    /// Spawn a self-speculating scheduler: `draft` (typically the INT8
+    /// copy of the target weights) proposes [`SchedulerCfg::spec_k`] tokens
+    /// per sequence per step, `engine` verifies them in one widened batched
+    /// step — token-identical greedy output (see [`Scheduler::with_draft`]).
+    pub fn spawn_speculative<E, D>(engine: E, draft: D, cfg: SchedulerCfg) -> Self
+    where
+        E: Engine + Send + 'static,
+        D: Engine + Send + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("skipless-coordinator".into())
+            .spawn(move || sched_loop(Scheduler::with_draft(engine, Box::new(draft), cfg, m2), rx))
+            .expect("spawn coordinator");
+        Self {
+            tx,
+            handle: Some(handle),
+            metrics,
+        }
+    }
+
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
     }
@@ -106,7 +129,10 @@ fn engine_loop<E: Engine>(
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
 ) {
-    let mut sched = Scheduler::new(engine, cfg, metrics);
+    sched_loop(Scheduler::new(engine, cfg, metrics), rx)
+}
+
+fn sched_loop<E: Engine>(mut sched: Scheduler<E>, rx: Receiver<Msg>) {
     let mut reply_to: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
     loop {
         // Drain pending messages; block only when fully idle.
@@ -200,5 +226,25 @@ mod tests {
         let (c, _) = coordinator(73);
         let _ = c.generate(Request::greedy(1, vec![1], 2));
         drop(c); // must not hang
+    }
+
+    #[test]
+    fn speculative_coordinator_matches_plain_generation() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 74);
+        let want = greedy_generate(&w, &[2, 7, 1], 8);
+        let c = Coordinator::spawn_speculative(
+            CpuEngine::new(w.clone(), 8, 16 << 20),
+            CpuEngine::new(crate::model::quantize(&w), 8, 16 << 20),
+            SchedulerCfg {
+                spec_k: 4,
+                ..Default::default()
+            },
+        );
+        let resp = c.generate(Request::greedy(1, vec![2, 7, 1], 8));
+        assert_eq!(resp.tokens, want);
+        use std::sync::atomic::Ordering;
+        assert!(c.metrics().spec_rounds.load(Ordering::Relaxed) > 0);
+        c.shutdown();
     }
 }

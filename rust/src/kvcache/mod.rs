@@ -55,6 +55,8 @@ pub enum CacheError {
     SeqTooLong { len: usize, max: usize },
     /// Swapping this sequence out would exceed the spill-buffer bound.
     SwapBudgetExceeded { seq_blocks: usize, in_use: usize, limit: usize },
+    /// [`KvCache::truncate_seq`] asked to *grow* a sequence.
+    BadTruncate { len: usize, new_len: usize },
 }
 
 impl fmt::Display for CacheError {
@@ -71,6 +73,9 @@ impl fmt::Display for CacheError {
                 f,
                 "swap budget exhausted: sequence needs {seq_blocks} spill blocks, {in_use}/{limit} in use"
             ),
+            CacheError::BadTruncate { len, new_len } => {
+                write!(f, "cannot truncate a {len}-position sequence to {new_len}")
+            }
         }
     }
 }
@@ -124,6 +129,11 @@ pub struct CacheStats {
     pub swap_blocks_out: u64,
     /// Blocks re-borrowed from the prefix index at swap-in (not restored).
     pub swap_blocks_reused: u64,
+    /// [`KvCache::truncate_seq`] calls that dropped at least one position
+    /// (speculative-decode rollbacks).
+    pub truncations: u64,
+    /// Positions dropped across all truncations.
+    pub truncated_positions: u64,
 }
 
 /// Point-in-time view of pool occupancy plus the cumulative [`CacheStats`].
@@ -837,6 +847,111 @@ impl KvCache {
         Ok(reused)
     }
 
+    /// Fresh blocks an append of `extra` more positions to `id` could
+    /// consume, counting a possible copy-on-write of the block the next
+    /// position lands in. The speculative verify path sums this over its
+    /// batch and reserves capacity **before** computing anything, so a
+    /// widened step either runs to completion or fails without touching any
+    /// sequence's state.
+    pub fn blocks_to_grow(&self, id: SeqId, extra: usize) -> usize {
+        let Some(st) = self.seqs.get(&id) else { return 0 };
+        let grow = self
+            .blocks_for(st.len + extra)
+            .saturating_sub(st.blocks.len());
+        // the first append lands in an existing block iff the table already
+        // covers position st.len; a shared block there copies-on-write
+        let bidx = st.len / self.block_tokens;
+        let cow = match st.blocks.get(bidx) {
+            Some(&b) if self.blocks[b].refcount > 1 => 1,
+            _ => 0,
+        };
+        grow + cow
+    }
+
+    /// Roll a live sequence back to `new_len` positions — the speculative-
+    /// decode rollback. Whole blocks past the kept range return to the pool
+    /// (registered full-prompt blocks stay shareable through the cached-free
+    /// pool, data intact). Inside the kept tail block, the dropped
+    /// positions' data — and, on a u8 pool, their scale/zero meta — is
+    /// zeroed so stale quantization state cannot outlive the rollback, and
+    /// a previously-registered block that the cut leaves partial is
+    /// deregistered from the prefix index (its tail will be rewritten).
+    /// Shared blocks (refcount > 1) are never written and never
+    /// deregistered: other holders keep reading their data, and this
+    /// sequence's next append into them copies-on-write first.
+    pub fn truncate_seq(&mut self, id: SeqId, new_len: usize) -> Result<(), CacheError> {
+        let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let old_len = st.len;
+        if new_len > old_len {
+            return Err(CacheError::BadTruncate { len: old_len, new_len });
+        }
+        if new_len == old_len {
+            return Ok(());
+        }
+        let keep = self.blocks_for(new_len);
+        let st = self.seqs.get_mut(&id).unwrap();
+        let dropped: Vec<usize> = st.blocks.split_off(keep);
+        st.len = new_len;
+        // hashes describe full *intact* prompt blocks only
+        let full_kept = new_len / self.block_tokens;
+        if st.prompt_hashes.len() > full_kept {
+            st.prompt_hashes.truncate(full_kept);
+        }
+        // tail-block hygiene: the partially-kept block (if any)
+        if new_len % self.block_tokens != 0 {
+            let bidx = new_len / self.block_tokens;
+            let phys = self.seqs[&id].blocks[bidx];
+            if self.blocks[phys].refcount == 1 {
+                if let Some(h) = self.blocks[phys].hash.take() {
+                    self.prefix_index.remove(&h);
+                }
+                let e = self.floats_per_pos_layer / 2;
+                let cut_end = old_len.min((bidx + 1) * self.block_tokens);
+                for pos in new_len..cut_end {
+                    for layer in 0..self.n_layers {
+                        let off = self.offset(phys, pos % self.block_tokens, layer);
+                        let mi = self.meta_index(phys, pos % self.block_tokens, layer);
+                        match &mut self.store {
+                            Store::F32(data) => data[off..off + 2 * e].fill(0.0),
+                            Store::U8 { data, meta } => {
+                                data[off..off + 2 * e].fill(0);
+                                meta[mi..mi + 4].fill(0.0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for b in dropped {
+            self.unref_block(b);
+        }
+        self.stats.truncations += 1;
+        self.stats.truncated_positions += (old_len - new_len) as u64;
+        Ok(())
+    }
+
+    /// Pass one K or V row (`e` floats) through this pool's quantizer and
+    /// back — a no-op on an f32 pool. The speculative verify path applies
+    /// this to the draft-position rows it holds in registers, so attention
+    /// over them reads, bit for bit, what a sequential decode would have
+    /// read back out of a u8 pool. Routes through the SAME
+    /// `quantize_row_u8` / `dequantize_row_u8` used by append/gather, so
+    /// the bit-identity cannot drift if the quantizer changes; `codes` and
+    /// `vals` are caller-owned scratch (cleared here) so the hot verify
+    /// loop stays allocation-free in steady state.
+    pub fn quantize_roundtrip(&self, row: &mut [f32], codes: &mut Vec<u8>, vals: &mut Vec<f32>) {
+        if !matches!(self.store, Store::U8 { .. }) {
+            return;
+        }
+        codes.clear();
+        codes.resize(row.len(), 0);
+        let mut meta = [0.0f32; 2];
+        quantize_row_u8(row, codes, &mut meta);
+        vals.clear();
+        dequantize_row_u8(codes, meta[0], meta[1], vals);
+        row.copy_from_slice(vals);
+    }
+
     /// Offset of (block, pos_in_block, layer) in `data`, start of the K half.
     fn offset(&self, block: usize, pos_in_block: usize, layer: usize) -> usize {
         ((block * self.block_tokens + pos_in_block) * self.n_layers + layer)
@@ -1422,6 +1537,178 @@ mod tests {
         let snap = c.snapshot();
         assert!(snap.quantized);
         assert_eq!(snap.bytes_per_token, (2 * e + 16) * cfg.n_layers);
+    }
+
+    // ---- lifecycle: truncate (speculative rollback) --------------------
+
+    #[test]
+    fn truncate_frees_blocks_and_allows_regrowth() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(9).unwrap();
+        fill(&mut c, &cfg, id, 0, 9, 0.0);
+        let used = c.used_blocks(); // 3 blocks of 4
+        c.truncate_seq(id, 5).unwrap();
+        assert_eq!(c.seq_len(id), Some(5));
+        assert_eq!(c.used_blocks(), used - 1, "dropped the third block");
+        assert_eq!(c.stats().truncations, 1);
+        assert_eq!(c.stats().truncated_positions, 4);
+        // regrow with different data: reads must see the new writes
+        fill(&mut c, &cfg, id, 5, 3, 7000.0);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        c.gather(id, 0, &mut k, &mut v).unwrap();
+        let e = cfg.e();
+        assert_eq!(k[4 * e], 400.0, "kept prefix intact");
+        assert_eq!(k[5 * e], 7500.0, "position 5 holds the regrown value");
+        assert_eq!(k[7 * e], 7700.0);
+    }
+
+    #[test]
+    fn truncate_validation() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(3).unwrap();
+        fill(&mut c, &cfg, id, 0, 3, 0.0);
+        assert!(matches!(
+            c.truncate_seq(SeqId(99), 1),
+            Err(CacheError::UnknownSeq(_))
+        ));
+        assert!(matches!(
+            c.truncate_seq(id, 4),
+            Err(CacheError::BadTruncate { len: 3, new_len: 4 })
+        ));
+        // no-op truncate is fine and free
+        c.truncate_seq(id, 3).unwrap();
+        assert_eq!(c.stats().truncations, 0);
+    }
+
+    /// Truncating inside a CoW-shared tail block must not disturb the other
+    /// holder: the fork keeps its bytes, and the truncated sequence's next
+    /// append copies-on-write before touching the shared data.
+    #[test]
+    fn truncate_into_shared_block_preserves_fork() {
+        for quantized in [false, true] {
+            let cfg = ModelConfig::tiny_gqa();
+            let mut c = KvCache::with_opts(
+                &cfg,
+                4,
+                64 * 1024,
+                CacheOpts {
+                    quantized,
+                    ..Default::default()
+                },
+            );
+            let id = c.alloc_seq(6).unwrap();
+            fill(&mut c, &cfg, id, 0, 6, 0.0);
+            let f = c.fork_seq(id).unwrap();
+            let (mut kf0, mut vf0) = (Vec::new(), Vec::new());
+            c.gather(f, 0, &mut kf0, &mut vf0).unwrap();
+            // original rolls back 1 speculated position INSIDE the shared
+            // tail block (refcount 2: no zeroing, no deregistration), then
+            // regrows with different data — which must copy-on-write
+            c.truncate_seq(id, 5).unwrap();
+            fill(&mut c, &cfg, id, 5, 1, 8000.0);
+            assert!(c.stats().cow_copies > 0, "kv8={quantized}: regrow must CoW");
+            // the fork's view is bit-identical to before
+            let (mut kf1, mut vf1) = (Vec::new(), Vec::new());
+            c.gather(f, 0, &mut kf1, &mut vf1).unwrap();
+            assert_eq!(kf0, kf1, "kv8={quantized}: fork keys changed");
+            assert_eq!(vf0, vf1, "kv8={quantized}: fork values changed");
+            // and the original sees the shared prefix plus its own tail
+            let (mut ki, mut vi) = (Vec::new(), Vec::new());
+            c.gather(id, 0, &mut ki, &mut vi).unwrap();
+            let e = cfg.e();
+            assert_eq!(&ki[..5 * e], &kf1[..5 * e], "shared prefix diverged");
+            assert!((ki[5 * e] - 8500.0).abs() < 1.0, "kv8={quantized}");
+        }
+    }
+
+    /// u8 pool: a truncate-then-regrow sequence must be code-identical to a
+    /// sequence that never speculated — stale scale/zero meta of the
+    /// rejected positions cannot leak into later reads.
+    #[test]
+    fn truncate_u8_meta_shrinks_consistently() {
+        let (cfg, mut spec) = qcache(64);
+        let (_, mut plain) = qcache(64);
+        let a = spec.alloc_seq(3).unwrap();
+        let b = plain.alloc_seq(3).unwrap();
+        fill(&mut spec, &cfg, a, 0, 3, 0.0);
+        fill(&mut plain, &cfg, b, 0, 3, 0.0);
+        // speculate 4 positions with draft data, then reject them all;
+        // afterwards both caches append an identical suffix
+        fill(&mut spec, &cfg, a, 3, 4, 5000.0);
+        spec.truncate_seq(a, 3).unwrap();
+        fill(&mut spec, &cfg, a, 3, 3, 300.0);
+        fill(&mut plain, &cfg, b, 3, 3, 300.0);
+        let (mut ka, mut va) = (Vec::new(), Vec::new());
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        spec.gather(a, 1, &mut ka, &mut va).unwrap();
+        plain.gather(b, 1, &mut kb, &mut vb).unwrap();
+        assert_eq!(ka, kb, "rollback left stale quantization state behind");
+        assert_eq!(va, vb);
+    }
+
+    /// Whole dropped blocks that were registered as shareable prompt prefix
+    /// stay shareable (data intact in the cached pool); a registered block
+    /// the cut leaves partial is deregistered — its tail will be rewritten.
+    #[test]
+    fn truncate_interacts_with_prefix_index() {
+        let (cfg, mut c) = cache(64);
+        let prompt: Vec<u32> = (0..9).collect(); // 2 full registered blocks
+        let (a, _) = c.alloc_seq_shared(&prompt).unwrap();
+        fill(&mut c, &cfg, a, 0, 9, 0.0);
+        // cut into the second block: it must drop out of the index
+        c.truncate_seq(a, 6).unwrap();
+        let (b, reused) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused, 4, "only the intact first block is shareable");
+        c.free_seq(b).unwrap();
+        // a's own remaining data is untouched
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        c.gather(a, 1, &mut k, &mut v).unwrap();
+        assert_eq!(k.len(), 6 * cfg.e());
+        assert_eq!(k[5 * cfg.e()], 510.0);
+    }
+
+    #[test]
+    fn truncate_swapped_out_sequence_is_rejected() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(6).unwrap();
+        fill(&mut c, &cfg, id, 0, 6, 0.0);
+        c.swap_out(id).unwrap();
+        assert!(matches!(
+            c.truncate_seq(id, 3),
+            Err(CacheError::UnknownSeq(_))
+        ));
+    }
+
+    #[test]
+    fn blocks_to_grow_accounts_for_tail_and_cow() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(6).unwrap(); // 2 blocks, 2 free slots in tail
+        fill(&mut c, &cfg, id, 0, 6, 0.0);
+        assert_eq!(c.blocks_to_grow(id, 2), 0, "tail slots are free");
+        assert_eq!(c.blocks_to_grow(id, 3), 1);
+        assert_eq!(c.blocks_to_grow(id, 7), 2);
+        // fork shares the tail block: the first append now also CoWs
+        let _f = c.fork_seq(id).unwrap();
+        assert_eq!(c.blocks_to_grow(id, 2), 1, "shared tail needs a CoW block");
+        assert_eq!(c.blocks_to_grow(id, 3), 2);
+        assert_eq!(c.blocks_to_grow(SeqId(99), 5), 0, "unknown seq grows nothing");
+    }
+
+    #[test]
+    fn quantize_roundtrip_matches_pool_precision() {
+        let (cfg, fc) = cache(64);
+        let (_, qc) = qcache(64);
+        let (mut codes, mut vals) = (Vec::new(), Vec::new());
+        let mut row: Vec<f32> = (0..cfg.e()).map(|i| (i as f32 * 0.37).sin()).collect();
+        let orig = row.clone();
+        fc.quantize_roundtrip(&mut row, &mut codes, &mut vals);
+        assert_eq!(row, orig, "f32 pool roundtrip must be the identity");
+        qc.quantize_roundtrip(&mut row, &mut codes, &mut vals);
+        assert_ne!(row, orig, "u8 roundtrip quantizes");
+        // and it matches what append + gather would produce
+        for (got, &want) in row.iter().zip(&orig) {
+            assert!((got - want).abs() < 0.02, "{got} vs {want}");
+        }
     }
 
     #[test]

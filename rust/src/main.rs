@@ -37,6 +37,11 @@ fn cli() -> Command {
                 .flag("no-prefix-cache", "disable automatic prefix sharing (CPU engine)")
                 .opt_default("quantize", "none", "weights: none|int8 (per-channel symmetric)")
                 .flag("quantize-kv", "u8 KV-cache blocks: ~4x tokens per budget (CPU engine)")
+                .opt_default(
+                    "speculate",
+                    "0",
+                    "self-speculative decode: int8 draft proposes k tokens/step (CPU engine)",
+                )
                 .opt_default("log", "info", "log level"),
         )
         .subcommand(
@@ -49,7 +54,12 @@ fn cli() -> Command {
                 .opt_default("max-new", "16", "tokens to generate")
                 .opt_default("temperature", "0", "sampling temperature (0 = greedy)")
                 .opt_default("quantize", "none", "weights: none|int8 (per-channel symmetric)")
-                .flag("quantize-kv", "u8 KV-cache blocks: ~4x tokens per budget"),
+                .flag("quantize-kv", "u8 KV-cache blocks: ~4x tokens per budget")
+                .opt_default(
+                    "speculate",
+                    "0",
+                    "self-speculative decode: int8 draft proposes k tokens/step (f32 weights)",
+                ),
         )
         .subcommand(
             Command::new("init", "write randomly-initialized vanilla weights")
@@ -186,10 +196,22 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
                 .into(),
         );
     }
+    let spec_k: usize = args.num_or("speculate", 0)?;
+    if spec_k > 0 && args.get("artifacts").is_some() {
+        return Err("--speculate requires the CPU engine (drop --artifacts)".into());
+    }
     let w = apply_quantize(args, load_or_init(args)?)?;
+    if spec_k > 0 && w.is_quantized() {
+        return Err(
+            "--speculate drafts with an int8 copy built from f32 target weights; \
+             drop --quantize (the draft is quantized automatically)"
+                .into(),
+        );
+    }
     let sched = SchedulerCfg {
         max_running: args.num_or("max-running", 32)?,
         admits_per_step: 4,
+        spec_k,
     };
     let coordinator = if let Some(dir) = args.get("artifacts") {
         // Also catches quantized .swt files loaded via --weights, which the
@@ -210,10 +232,29 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
             quantized: args.flag("quantize-kv"),
             ..Default::default()
         };
-        Coordinator::spawn(
-            CpuEngine::with_cache_opts(w, 16, cache_mb << 20, opts),
-            sched,
-        )
+        if spec_k > 0 {
+            // self-speculation: the int8 copy drafts, the f32 target
+            // verifies — token-identical greedy output (DESIGN.md
+            // §Speculative). The draft gets its own u8-KV pool: draft
+            // precision never affects correctness, only accept rate.
+            let draft_opts = skipless::kvcache::CacheOpts {
+                prefix_sharing: true,
+                quantized: true,
+                ..Default::default()
+            };
+            let dw = skipless::model::quantize(&w);
+            let draft = CpuEngine::with_cache_opts(dw, 16, cache_mb << 20, draft_opts);
+            Coordinator::spawn_speculative(
+                CpuEngine::with_cache_opts(w, 16, cache_mb << 20, opts),
+                draft,
+                sched,
+            )
+        } else {
+            Coordinator::spawn(
+                CpuEngine::with_cache_opts(w, 16, cache_mb << 20, opts),
+                sched,
+            )
+        }
     };
     let server = Server::bind(args.get_or("addr", "127.0.0.1:7070"), coordinator)?;
     println!(
@@ -226,6 +267,14 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
 
 fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
     let w = apply_quantize(args, load_or_init(args)?)?;
+    let spec_k: usize = args.num_or("speculate", 0)?;
+    if spec_k > 0 && w.is_quantized() {
+        return Err(
+            "--speculate drafts with an int8 copy built from f32 target weights; \
+             drop --quantize (the draft is quantized automatically)"
+                .into(),
+        );
+    }
     let prompt: Vec<u32> = args
         .get_or("prompt", "1,2,3")
         .split(',')
@@ -235,10 +284,25 @@ fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
         quantized: args.flag("quantize-kv"),
         ..Default::default()
     };
-    let coordinator = Coordinator::spawn(
-        CpuEngine::with_cache_opts(w, 16, 256 << 20, opts),
-        SchedulerCfg::default(),
-    );
+    let sched = SchedulerCfg {
+        spec_k,
+        ..Default::default()
+    };
+    let coordinator = if spec_k > 0 {
+        let draft_opts = skipless::kvcache::CacheOpts {
+            quantized: true,
+            ..Default::default()
+        };
+        let draft =
+            CpuEngine::with_cache_opts(skipless::model::quantize(&w), 16, 256 << 20, draft_opts);
+        Coordinator::spawn_speculative(
+            CpuEngine::with_cache_opts(w, 16, 256 << 20, opts),
+            draft,
+            sched,
+        )
+    } else {
+        Coordinator::spawn(CpuEngine::with_cache_opts(w, 16, 256 << 20, opts), sched)
+    };
     let req = Request {
         id: 0,
         prompt,
@@ -256,6 +320,17 @@ fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
         "tokens: {:?}\nfinish: {:?}  ttft: {:?}  latency: {:?}",
         resp.tokens, resp.finish, resp.ttft, resp.latency
     );
+    if spec_k > 0 {
+        use std::sync::atomic::Ordering;
+        let m = coordinator.metrics();
+        println!(
+            "speculative: {} rounds, {}/{} drafts accepted ({:.0}%)",
+            m.spec_rounds.load(Ordering::Relaxed),
+            m.spec_tokens_accepted.load(Ordering::Relaxed),
+            m.spec_tokens_drafted.load(Ordering::Relaxed),
+            100.0 * m.spec_accept_rate()
+        );
+    }
     coordinator.shutdown();
     Ok(())
 }

@@ -141,11 +141,28 @@ pub struct Metrics {
     pub kv_quantized_blocks: AtomicU64,
     /// Bytes per cached token at the pool's precision.
     pub kv_bytes_per_token: AtomicU64,
+    /// Positions rolled back by [`crate::kvcache::KvCache::truncate_seq`]
+    /// (rejected speculative draft positions).
+    pub kv_truncated_positions: AtomicU64,
     // -- quantization (weights side) -------------------------------------
     /// Bytes the weights would occupy at f32.
     pub weight_bytes_f32: AtomicU64,
     /// Bytes the weights actually occupy resident.
     pub weight_bytes_resident: AtomicU64,
+    // -- speculative decoding --------------------------------------------
+    /// Widened verify rounds, one per (sequence, verify-step) pair.
+    pub spec_rounds: AtomicU64,
+    /// Draft-engine batched decode steps spent producing drafts.
+    pub spec_draft_steps: AtomicU64,
+    /// Draft tokens proposed to the target.
+    pub spec_tokens_drafted: AtomicU64,
+    /// Draft tokens the target accepted (greedy rule).
+    pub spec_tokens_accepted: AtomicU64,
+    /// Spec-eligible rounds that fell back to plain decode (draft admission
+    /// or capacity trouble).
+    pub spec_fallbacks: AtomicU64,
+    /// Requests whose drafting was turned off for losing (adaptive policy).
+    pub spec_disabled: AtomicU64,
     pub ttft: Histogram,
     pub tpot: Histogram,
     pub e2e: Histogram,
@@ -167,6 +184,16 @@ impl Metrics {
     /// Overwrite a gauge (used when mirroring engine-side counters).
     pub fn set(gauge: &AtomicU64, v: u64) {
         gauge.store(v, Ordering::Relaxed);
+    }
+
+    /// Fraction of drafted tokens the target accepted.
+    pub fn spec_accept_rate(&self) -> f64 {
+        let drafted = self.spec_tokens_drafted.load(Ordering::Relaxed) as f64;
+        if drafted == 0.0 {
+            0.0
+        } else {
+            self.spec_tokens_accepted.load(Ordering::Relaxed) as f64 / drafted
+        }
     }
 
     /// Fraction of prompt tokens served from the prefix cache.
@@ -208,6 +235,19 @@ impl Metrics {
                     ("swapped_blocks", g(&self.kv_swapped_blocks)),
                     ("quantized_blocks", g(&self.kv_quantized_blocks)),
                     ("bytes_per_token", g(&self.kv_bytes_per_token)),
+                    ("truncated_positions", g(&self.kv_truncated_positions)),
+                ]),
+            ),
+            (
+                "speculative",
+                Json::obj(vec![
+                    ("rounds", g(&self.spec_rounds)),
+                    ("draft_steps", g(&self.spec_draft_steps)),
+                    ("tokens_drafted", g(&self.spec_tokens_drafted)),
+                    ("tokens_accepted", g(&self.spec_tokens_accepted)),
+                    ("accept_rate", Json::num(self.spec_accept_rate())),
+                    ("fallbacks", g(&self.spec_fallbacks)),
+                    ("disabled", g(&self.spec_disabled)),
                 ]),
             ),
             (
@@ -314,6 +354,25 @@ mod tests {
         let kv = j.get("kv_cache").unwrap();
         assert_eq!(kv.get("quantized_blocks").unwrap().as_u64(), Some(5));
         assert_eq!(kv.get("bytes_per_token").unwrap().as_u64(), Some(96));
+    }
+
+    #[test]
+    fn speculative_gauges_in_json() {
+        let m = Metrics::new();
+        Metrics::add(&m.spec_rounds, 10);
+        Metrics::add(&m.spec_tokens_drafted, 40);
+        Metrics::add(&m.spec_tokens_accepted, 30);
+        Metrics::inc(&m.spec_fallbacks);
+        let j = m.to_json();
+        let s = j.get("speculative").unwrap();
+        assert_eq!(s.get("rounds").unwrap().as_u64(), Some(10));
+        assert_eq!(s.get("tokens_drafted").unwrap().as_u64(), Some(40));
+        assert_eq!(s.get("tokens_accepted").unwrap().as_u64(), Some(30));
+        assert_eq!(s.get("fallbacks").unwrap().as_u64(), Some(1));
+        let rate = s.get("accept_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 0.75).abs() < 1e-9, "rate {rate}");
+        // empty drafting reports 0, not NaN
+        assert_eq!(Metrics::new().spec_accept_rate(), 0.0);
     }
 
     #[test]

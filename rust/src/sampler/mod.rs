@@ -33,6 +33,13 @@ impl SamplerCfg {
         Self::default()
     }
 
+    /// Pure argmax sampling — the regime in which the speculative
+    /// [`accept_greedy`] rule makes drafted output token-identical to plain
+    /// decoding. The scheduler only speculates on greedy requests.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.temperature < 0.0 || !self.temperature.is_finite() {
             return Err(format!("temperature {} invalid", self.temperature));
@@ -104,6 +111,31 @@ pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Xoshiro256) -> u32 {
         }
     }
     *idx.last().unwrap()
+}
+
+/// Greedy speculative acceptance (factored out so a stochastic
+/// rejection-sampling rule can slot in beside it later).
+///
+/// `rows` holds the target's verify logits: one row per consumed token for
+/// the input `[committed_next, drafts[0], ..., drafts[k-1]]`, so
+/// `rows.len() == drafts.len() + 1` and `rows[j]` scores the position that
+/// `drafts[j]` claimed. Returns `(n_accepted, next_token)`:
+/// `drafts[..n_accepted]` is the longest prefix the target agrees with, and
+/// `next_token` is the target's own argmax at the first disagreement — or
+/// the free bonus token when every draft was accepted. Because each
+/// committed token is exactly the target's argmax given the committed
+/// history, the output stream is token-identical to plain greedy decoding.
+pub fn accept_greedy(drafts: &[u32], rows: &[Vec<f32>]) -> (usize, u32) {
+    assert_eq!(
+        rows.len(),
+        drafts.len() + 1,
+        "verify returns one row per consumed token"
+    );
+    let mut a = 0;
+    while a < drafts.len() && argmax(&rows[a]) == drafts[a] {
+        a += 1;
+    }
+    (a, argmax(&rows[a]))
 }
 
 /// Argmax with lowest-index tie-break.
@@ -213,6 +245,51 @@ mod tests {
         let p0 = c0 as f64 / n as f64;
         let want = (1.0f64).exp() / ((1.0f64).exp() + 1.0); // ≈ 0.731
         assert!((p0 - want).abs() < 0.02, "p0={p0} want≈{want}");
+    }
+
+    fn one_hot(vocab: usize, hot: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; vocab];
+        v[hot] = 1.0;
+        v
+    }
+
+    #[test]
+    fn accept_greedy_full_acceptance_returns_bonus() {
+        // target agrees with both drafts; bonus token from the last row
+        let rows = vec![one_hot(8, 3), one_hot(8, 5), one_hot(8, 7)];
+        let (a, next) = accept_greedy(&[3, 5], &rows);
+        assert_eq!(a, 2);
+        assert_eq!(next, 7);
+    }
+
+    #[test]
+    fn accept_greedy_rejection_returns_correction() {
+        // target disagrees at the second draft: accept 1, correct to 6
+        let rows = vec![one_hot(8, 3), one_hot(8, 6), one_hot(8, 7)];
+        let (a, next) = accept_greedy(&[3, 5], &rows);
+        assert_eq!(a, 1);
+        assert_eq!(next, 6);
+    }
+
+    #[test]
+    fn accept_greedy_immediate_rejection() {
+        let rows = vec![one_hot(8, 2), one_hot(8, 4)];
+        let (a, next) = accept_greedy(&[3], &rows);
+        assert_eq!(a, 0);
+        assert_eq!(next, 2, "correction is the rejecting row's argmax");
+    }
+
+    #[test]
+    fn accept_greedy_zero_drafts_is_plain_decode() {
+        let rows = vec![one_hot(8, 4)];
+        let (a, next) = accept_greedy(&[], &rows);
+        assert_eq!((a, next), (0, 4));
+    }
+
+    #[test]
+    fn is_greedy_tracks_temperature() {
+        assert!(SamplerCfg::greedy().is_greedy());
+        assert!(!SamplerCfg { temperature: 0.7, ..Default::default() }.is_greedy());
     }
 
     #[test]

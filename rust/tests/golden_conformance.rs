@@ -1,0 +1,182 @@
+//! Golden decode conformance: a tiny seeded model decoded across
+//! {f32, int8} × {vanilla, surgeried} × {plain, speculative} engines.
+//!
+//! Two layers of protection:
+//!
+//! 1. **Structural invariants, always checked** — within every
+//!    (dtype, variant) configuration, the speculative greedy stream must be
+//!    token-identical to the plain one (the tentpole guarantee, enforced
+//!    without any golden file).
+//! 2. **Committed golden traces** — `tests/golden/decode_traces.json`
+//!    pins every configuration's token streams. A later change that shifts
+//!    any stream (a kernel reorder, a quantizer tweak, an accidental
+//!    nondeterminism) fails this test with a diff-able message. When the
+//!    file does not exist yet — or `SKIPLESS_REGEN_GOLDEN=1` — the test
+//!    writes it and passes; commit the generated file to pin the traces.
+
+use skipless::config::{ModelConfig, Variant};
+use skipless::coordinator::{CpuEngine, Request, Scheduler, SchedulerCfg};
+use skipless::metrics::Metrics;
+use skipless::model::{quantize, ModelWeights};
+use skipless::surgery::{transform, Options};
+use skipless::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const SEED: u64 = 2027;
+const MAX_NEW: usize = 10;
+
+fn prompts() -> Vec<Vec<u32>> {
+    vec![vec![3, 1, 4, 1, 5], vec![27, 18, 28], vec![100, 200, 1, 2, 3, 4]]
+}
+
+/// (name, weights) for every dtype × variant cell.
+fn configurations() -> Vec<(String, ModelWeights)> {
+    let cfg = ModelConfig::tiny_gqa();
+    let vanilla = ModelWeights::init_vanilla(&cfg, SEED);
+    let merged = transform(&vanilla, Variant::MergedQP, Options::default()).unwrap();
+    vec![
+        ("f32/vanilla".into(), vanilla.clone()),
+        ("f32/merged_qp".into(), merged.clone()),
+        ("int8/vanilla".into(), quantize(&vanilla)),
+        ("int8/merged_qp".into(), quantize(&merged)),
+    ]
+}
+
+/// Decode every prompt greedily through a scheduler, plain or speculative.
+fn traces(w: &ModelWeights, spec_k: usize) -> Vec<Vec<u32>> {
+    let engine = CpuEngine::new(w.clone(), 8, 16 << 20);
+    let mut s = if spec_k > 0 {
+        // self-speculation: the draft is the int8 form of the same weights
+        // (idempotent for already-int8 targets)
+        let draft = CpuEngine::new(quantize(w), 8, 16 << 20);
+        Scheduler::with_draft(
+            engine,
+            Box::new(draft),
+            SchedulerCfg {
+                spec_k,
+                ..Default::default()
+            },
+            Arc::new(Metrics::new()),
+        )
+    } else {
+        Scheduler::new(engine, SchedulerCfg::default(), Arc::new(Metrics::new()))
+    };
+    for (i, p) in prompts().into_iter().enumerate() {
+        s.submit(Request::greedy(i as u64, p, MAX_NEW));
+    }
+    let mut done = s.run_to_completion();
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done.len(), prompts().len());
+    done.into_iter().map(|r| r.tokens).collect()
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/decode_traces.json")
+}
+
+fn render(all: &[(String, Vec<Vec<u32>>, Vec<Vec<u32>>)]) -> String {
+    let arr = |t: &[Vec<u32>]| {
+        let rows: Vec<String> = t
+            .iter()
+            .map(|r| {
+                let xs: Vec<String> = r.iter().map(|t| t.to_string()).collect();
+                format!("[{}]", xs.join(", "))
+            })
+            .collect();
+        format!("[{}]", rows.join(", "))
+    };
+    let mut out = String::from("{\n");
+    out.push_str("  \"model\": \"tiny-gqa\",\n");
+    out.push_str(&format!("  \"seed\": {SEED},\n"));
+    out.push_str(&format!("  \"max_new_tokens\": {MAX_NEW},\n"));
+    out.push_str(&format!("  \"prompts\": {},\n", arr(&prompts())));
+    out.push_str("  \"traces\": {\n");
+    let cells: Vec<String> = all
+        .iter()
+        .flat_map(|(name, plain, spec)| {
+            [
+                format!("    \"{name}/plain\": {}", arr(plain)),
+                format!("    \"{name}/speculative\": {}", arr(spec)),
+            ]
+        })
+        .collect();
+    out.push_str(&cells.join(",\n"));
+    out.push_str("\n  }\n}\n");
+    out
+}
+
+fn parse_traces(j: &Json, key: &str) -> Vec<Vec<u32>> {
+    j.get("traces")
+        .and_then(|t| t.get(key))
+        .and_then(|a| a.as_arr())
+        .unwrap_or_else(|| panic!("golden file has no trace for '{key}'"))
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .expect("trace row is an array")
+                .iter()
+                .map(|t| t.as_u64().expect("token id") as u32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn golden_decode_conformance() {
+    // run every configuration both ways
+    let all: Vec<(String, Vec<Vec<u32>>, Vec<Vec<u32>>)> = configurations()
+        .into_iter()
+        .map(|(name, w)| {
+            let plain = traces(&w, 0);
+            let spec = traces(&w, 4);
+            (name, plain, spec)
+        })
+        .collect();
+
+    // invariant 1 (no golden file needed): speculative ≡ plain, per config
+    for (name, plain, spec) in &all {
+        assert_eq!(
+            plain, spec,
+            "{name}: speculative greedy decode diverged from plain decode"
+        );
+    }
+    // NB: no token-identity is asserted ACROSS variants or dtypes —
+    // surgery preserves the function up to f32 roundoff (~1e-2 on logits)
+    // and int8 shifts logits further, so their argmax streams may
+    // legitimately differ. Each cell's stream is pinned by the golden file
+    // below instead, which is what catches numeric drift over time.
+
+    // golden diff (or bootstrap)
+    let path = golden_path();
+    let regen = std::env::var("SKIPLESS_REGEN_GOLDEN").is_ok();
+    if regen || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, render(&all)).unwrap();
+        eprintln!(
+            "golden_conformance: wrote {} — commit it to pin the traces",
+            path.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("bad golden file: {e}"));
+    assert_eq!(
+        j.get("seed").and_then(|s| s.as_u64()),
+        Some(SEED),
+        "golden file was generated for a different seed — regenerate with \
+         SKIPLESS_REGEN_GOLDEN=1"
+    );
+    for (name, plain, spec) in &all {
+        let want_plain = parse_traces(&j, &format!("{name}/plain"));
+        let want_spec = parse_traces(&j, &format!("{name}/speculative"));
+        assert_eq!(
+            plain, &want_plain,
+            "{name}/plain drifted from the committed golden trace"
+        );
+        assert_eq!(
+            spec, &want_spec,
+            "{name}/speculative drifted from the committed golden trace"
+        );
+    }
+}

@@ -43,6 +43,7 @@ fn run_all(
         SchedulerCfg {
             max_running: 16,
             admits_per_step: 4,
+            ..Default::default()
         },
         Arc::clone(&metrics),
     );

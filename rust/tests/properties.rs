@@ -193,6 +193,7 @@ fn prop_scheduler_conservation() {
             SchedulerCfg {
                 max_running: 1 + rng.next_below(6) as usize,
                 admits_per_step: 1 + rng.next_below(4) as usize,
+                ..Default::default()
             },
             Arc::new(Metrics::new()),
         );
@@ -277,6 +278,7 @@ fn prop_engine_no_cache_leak() {
             SchedulerCfg {
                 max_running: 4,
                 admits_per_step: 2,
+                ..Default::default()
             },
             Arc::new(Metrics::new()),
         );

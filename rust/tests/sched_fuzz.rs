@@ -1,0 +1,164 @@
+//! Scheduler interleaving fuzz: seeded random schedules of submit / step —
+//! admission, capacity preemption, swap-out, and resume all arise from the
+//! deliberately tiny KV pools — with speculative decoding on or off. Every
+//! request's output must be byte-identical to a sequential single-request
+//! oracle, and no request may ever be dropped or spuriously rejected.
+//!
+//! `SKIPLESS_QUANTIZE=int8` (the CI matrix leg) runs the whole fuzz on
+//! INT8 engines: the target, the oracle, and the draft are all quantized,
+//! so streams are still compared within one numeric configuration.
+
+use skipless::config::ModelConfig;
+use skipless::coordinator::{CpuEngine, FinishReason, Request, Scheduler, SchedulerCfg};
+use skipless::kvcache::CacheOpts;
+use skipless::metrics::Metrics;
+use skipless::model::{quantize, ModelWeights};
+use skipless::sampler::SamplerCfg;
+use skipless::util::rng::Xoshiro256;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn maybe_quantize(w: ModelWeights) -> ModelWeights {
+    match std::env::var("SKIPLESS_QUANTIZE").as_deref() {
+        Ok("int8") => quantize(&w),
+        _ => w,
+    }
+}
+
+/// Random request mix: mostly greedy (speculation-eligible), some
+/// temperature-sampled (must be skipped by speculation), some with EOS.
+/// Sizes are bounded so even the tight pool can always hold one request to
+/// completion — truncation is a *documented* divergence from the oracle
+/// and belongs to other tests.
+fn requests(rng: &mut Xoshiro256, n: usize, vocab: u64) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let plen = 2 + rng.next_below(6) as usize;
+            let prompt = (0..plen).map(|_| rng.next_below(vocab) as u32).collect();
+            let max_new = 2 + rng.next_below(7) as usize;
+            let mut req = Request::greedy(i as u64, prompt, max_new);
+            match rng.next_below(5) {
+                0 => {
+                    req.sampler = SamplerCfg {
+                        temperature: 0.8,
+                        ..Default::default()
+                    }
+                }
+                1 => req.eos = Some(rng.next_below(vocab) as u32),
+                _ => {}
+            }
+            req
+        })
+        .collect()
+}
+
+/// Oracle: each request alone on a roomy, non-speculative scheduler.
+fn oracle(w: &ModelWeights, reqs: &[Request]) -> Vec<Vec<u32>> {
+    reqs.iter()
+        .map(|r| {
+            let mut s = Scheduler::new(
+                CpuEngine::new(w.clone(), 4, 8 << 20),
+                SchedulerCfg::default(),
+                Arc::new(Metrics::new()),
+            );
+            s.submit(r.clone());
+            let done = s.run_to_completion();
+            assert_eq!(done.len(), 1);
+            done.into_iter().next().unwrap().tokens
+        })
+        .collect()
+}
+
+/// One fuzzed run: random submit/step interleaving against a scheduler
+/// with the given speculation depth and pool size. Returns the total
+/// speculative verify rounds observed.
+fn fuzz_one(seed: u64, spec_k: usize, budget_blocks: Option<usize>) -> u64 {
+    let cfg = ModelConfig::tiny_mha();
+    let w = maybe_quantize(ModelWeights::init_vanilla(&cfg, 500 + seed));
+    let mut rng = Xoshiro256::seed_from_u64(seed * 7919 + 13);
+    let reqs = requests(&mut rng, 8, cfg.vocab_size as u64);
+    let want = oracle(&w, &reqs);
+
+    let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
+    let budget = budget_blocks.map(|b| b * bytes_per_block).unwrap_or(8 << 20);
+    let metrics = Arc::new(Metrics::new());
+    let sched_cfg = SchedulerCfg {
+        max_running: 1 + rng.next_below(6) as usize,
+        admits_per_step: 1 + rng.next_below(4) as usize,
+        spec_k,
+    };
+    let engine = CpuEngine::new(w.clone(), 4, budget);
+    let mut s = if spec_k > 0 {
+        let draft = CpuEngine::with_cache_opts(
+            quantize(&w),
+            4,
+            budget,
+            CacheOpts {
+                quantized: true,
+                ..Default::default()
+            },
+        );
+        Scheduler::with_draft(engine, Box::new(draft), sched_cfg, Arc::clone(&metrics))
+    } else {
+        Scheduler::new(engine, sched_cfg, Arc::clone(&metrics))
+    };
+
+    let mut pending: VecDeque<Request> = reqs.iter().cloned().collect();
+    let mut guard = 0u32;
+    while !pending.is_empty() || !s.is_idle() {
+        guard += 1;
+        assert!(guard < 100_000, "seed {seed}: fuzz run wedged");
+        if !pending.is_empty() && (s.is_idle() || rng.next_below(3) == 0) {
+            s.submit(pending.pop_front().unwrap());
+        } else {
+            s.step();
+        }
+    }
+    let mut done = s.take_done();
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done.len(), reqs.len(), "seed {seed}: request dropped");
+    for (r, want) in done.iter().zip(&want) {
+        assert_ne!(
+            r.finish,
+            FinishReason::Rejected,
+            "seed {seed}: request {} spuriously rejected",
+            r.id
+        );
+        assert_eq!(
+            &r.tokens, want,
+            "seed {seed}: request {} diverged from the sequential oracle",
+            r.id
+        );
+    }
+    metrics.spec_rounds.load(Ordering::Relaxed)
+}
+
+/// Tight pool (6 blocks of 4 positions: far less than 8 requests need),
+/// plain decode: preemption/swap/resume must not change one token.
+#[test]
+fn fuzz_plain_tight_pool() {
+    for seed in 0..4 {
+        fuzz_one(seed, 0, Some(6));
+    }
+}
+
+/// Tight pool with speculation: verify rollback, spec fall-backs, and
+/// preemption interleave; outputs stay oracle-identical.
+#[test]
+fn fuzz_speculative_tight_pool() {
+    for seed in 0..4 {
+        fuzz_one(seed, 3, Some(6));
+    }
+}
+
+/// Roomy pool with speculation: drafting actually runs (no permanent
+/// fall-back) and outputs stay oracle-identical.
+#[test]
+fn fuzz_speculative_roomy_pool() {
+    let mut rounds = 0;
+    for seed in 4..8 {
+        rounds += fuzz_one(seed, 3, None);
+    }
+    assert!(rounds > 0, "speculation never engaged across the roomy runs");
+}
