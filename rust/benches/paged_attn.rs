@@ -1,0 +1,230 @@
+//! Zero-copy paged attention bench: decode-step attention over block views
+//! (threaded (sequence × head) grid, no copies) versus the old
+//! gather-then-attend path (per-sequence memcpy of the full rotated-K/V
+//! history into scratch, serial scalar kernel) — at t ∈ {256, 2048}.
+//!
+//! Both paths produce BIT-identical outputs (asserted here; the property
+//! suite in `tests/paged_attn_equiv.rs` covers the full grid), so the
+//! comparison is pure data movement + parallelism. Also runs a steady-state
+//! engine decode and asserts, via the cache stats behind the new `attn.*`
+//! metrics, that the hot path performs ZERO gather copies. Emits
+//! `BENCH_paged_attn.json` (schema in EXPERIMENTS.md);
+//! `SKIPLESS_BENCH_QUICK=1` shrinks history lengths for CI.
+
+use skipless::config::{AttentionKind, BlockLayout, FfnKind, ModelConfig};
+use skipless::coordinator::{CpuEngine, DecodeInput, Engine};
+use skipless::kvcache::{BlockView, KvCache, SeqId};
+use skipless::model::attention::HeadLayout;
+use skipless::model::paged_attn::{attend_batch, attend_gathered, AttnItem, KvSegment};
+use skipless::model::ModelWeights;
+use skipless::tensor::Mat;
+use skipless::util::bench::{black_box, Bencher};
+use skipless::util::rng::Xoshiro256;
+
+/// Mistral-like head geometry scaled down: GQA 8q/2kv, hd=48 → e = 96.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        name: "paged-attn-bench".into(),
+        dim: 384,
+        n_layers: 2,
+        n_heads: 8,
+        n_kv_heads: 2,
+        hidden_dim: 768,
+        vocab_size: 256,
+        max_seq_len: 4096,
+        attention: AttentionKind::Gqa,
+        layout: BlockLayout::Serial,
+        ffn: FfnKind::Mlp,
+        tied_embeddings: false,
+    }
+}
+
+fn fill(c: &mut KvCache, cfg: &ModelConfig, id: SeqId, n: usize, rng: &mut Xoshiro256) {
+    let e = cfg.e();
+    for _ in 0..n {
+        for layer in 0..cfg.n_layers {
+            let k = Mat::randn(1, e, 0.7, rng);
+            let v = Mat::randn(1, e, 0.7, rng);
+            c.append(id, layer, k.row(0), v.row(0)).unwrap();
+        }
+        c.advance(id).unwrap();
+    }
+}
+
+struct Case {
+    t: usize,
+    rows_per_s_gather: f64,
+    rows_per_s_paged: f64,
+    speedup: f64,
+    gather_copy_bytes_per_step: u64,
+    paged_read_bytes_per_step: u64,
+}
+
+fn run_case(cfg: &ModelConfig, t: usize, batch: usize, b: &mut Bencher) -> Case {
+    let layout = HeadLayout {
+        n_heads: cfg.n_heads,
+        n_kv_heads: cfg.n_kv_heads,
+        head_dim: cfg.head_dim(),
+    };
+    let e = cfg.e();
+    let budget = (batch + 1) * t * cfg.n_layers * 2 * e * 4 * 2;
+    let mut cache = KvCache::new(cfg, 16, budget);
+    let mut rng = Xoshiro256::seed_from_u64(2027);
+    let ids: Vec<SeqId> = (0..batch)
+        .map(|_| {
+            let id = cache.alloc_seq(t).unwrap();
+            fill(&mut cache, cfg, id, t, &mut rng);
+            id
+        })
+        .collect();
+    let q = Mat::randn(batch, layout.d(), 0.5, &mut rng);
+    let cur = Mat::randn(batch, 2 * e, 0.5, &mut rng);
+
+    // --- old path: gather each sequence's history into scratch, attend
+    // serially (exactly the pre-change decode-step attention)
+    let mut out_g = Mat::zeros(batch, layout.d());
+    let (mut sk, mut sv) = (Vec::new(), Vec::new());
+    let g0 = cache.stats();
+    let sg = b.case_items(&format!("gather_attend_t{t}_b{batch}"), Some(batch as f64), || {
+        for (r, &id) in ids.iter().enumerate() {
+            cache.gather(id, 0, &mut sk, &mut sv).unwrap();
+            sk.extend_from_slice(&cur.row(r)[..e]);
+            sv.extend_from_slice(&cur.row(r)[e..]);
+            attend_gathered(layout, q.row(r), &sk, &sv, t + 1, out_g.row_mut(r));
+        }
+        black_box(out_g.at(0, 0));
+    });
+    let rows_per_s_gather = sg.items_per_sec().unwrap();
+    let gathers_run = (cache.stats().gathers - g0.gathers).max(1);
+    let gather_copy_bytes_per_step =
+        (cache.stats().gather_bytes - g0.gather_bytes) / gathers_run * batch as u64;
+
+    // --- paged path: zero-copy views, threaded (sequence × head) grid
+    let mut out_p = Mat::zeros(batch, layout.d());
+    let views: Vec<BlockView> = ids
+        .iter()
+        .flat_map(|&id| cache.seq_block_views(id, 0).unwrap().collect::<Vec<_>>())
+        .collect();
+    let blocks_per_seq = views.len() / batch;
+    let sp = b.case_items(&format!("paged_attend_t{t}_b{batch}"), Some(batch as f64), || {
+        let items: Vec<AttnItem> = (0..batch)
+            .map(|r| AttnItem {
+                q_rot: q.row(r),
+                views: &views[r * blocks_per_seq..(r + 1) * blocks_per_seq],
+                cache_len: t,
+                tails: [
+                    KvSegment::rows(&cur.row(r)[..e], &cur.row(r)[e..], e),
+                    KvSegment::empty(),
+                ],
+                t: t + 1,
+                out_row: r,
+            })
+            .collect();
+        attend_batch(layout, &items, &mut out_p);
+        black_box(out_p.at(0, 0));
+    });
+    let rows_per_s_paged = sp.items_per_sec().unwrap();
+
+    assert_eq!(
+        out_g.as_slice(),
+        out_p.as_slice(),
+        "t={t}: paged output diverged from the gather reference"
+    );
+    let paged_read_bytes_per_step = (batch * t * 2 * e * 4) as u64;
+    Case {
+        t,
+        rows_per_s_gather,
+        rows_per_s_paged,
+        speedup: rows_per_s_paged / rows_per_s_gather,
+        gather_copy_bytes_per_step,
+        paged_read_bytes_per_step,
+    }
+}
+
+/// Steady-state serving check: a real engine decoding a batch must read the
+/// cache exclusively through views — zero gather copies, counted by the
+/// same stats the `attn.*` serving metrics expose.
+fn assert_zero_gather_decode(cfg: &ModelConfig) -> u64 {
+    let w = ModelWeights::init_vanilla(cfg, 7);
+    let mut eng = CpuEngine::new(w, 16, 64 << 20);
+    let ids: Vec<SeqId> = (0..4)
+        .map(|i| eng.prefill(&[1 + i, 2, 3, 4, 5, 6]).unwrap().0)
+        .collect();
+    let before = eng.cache().stats();
+    for step in 0..8u32 {
+        let batch: Vec<DecodeInput> = ids
+            .iter()
+            .map(|&seq| DecodeInput { seq, token: 1 + step % 7 })
+            .collect();
+        eng.decode_batch(&batch).unwrap();
+    }
+    let after = eng.cache().stats();
+    assert_eq!(
+        after.gathers, before.gathers,
+        "steady-state decode must perform zero gather copies"
+    );
+    let paged = after.paged_reads_bytes - before.paged_reads_bytes;
+    assert!(paged > 0, "paged reads must be accounted");
+    paged
+}
+
+fn main() {
+    println!("# paged_attn — zero-copy paged attention vs gather+attend");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let cfg = bench_config();
+    let batch = 4usize;
+    let ts: &[usize] = if quick { &[64, 128] } else { &[256, 2048] };
+
+    let mut b = Bencher::new("paged_attn");
+    let cases: Vec<Case> = ts.iter().map(|&t| run_case(&cfg, t, batch, &mut b)).collect();
+    let steady_paged_bytes = assert_zero_gather_decode(&cfg);
+    b.finish();
+
+    for c in &cases {
+        eprintln!(
+            "  t={:>5}: gather {:>10.1} rows/s  paged {:>10.1} rows/s  ({:.2}x), \
+             {:.1} KiB copy avoided per step",
+            c.t,
+            c.rows_per_s_gather,
+            c.rows_per_s_paged,
+            c.speedup,
+            c.gather_copy_bytes_per_step as f64 / 1024.0
+        );
+    }
+    // acceptance bar (full mode): ≥ 1.5x decode attention throughput at
+    // t=2048, batch ≥ 4, on top of the zero-gather guarantee above
+    if !quick {
+        let long = cases.iter().find(|c| c.t == 2048).unwrap();
+        assert!(
+            long.speedup >= 1.5,
+            "paged attention only {:.2}x over gather at t=2048",
+            long.speedup
+        );
+    }
+
+    let case_json: Vec<String> = cases
+        .iter()
+        .map(|c| {
+            format!(
+                "    {{\"t\": {}, \"batch\": {batch}, \"rows_per_s_gather\": {:.1}, \
+                 \"rows_per_s_paged\": {:.1}, \"speedup_x\": {:.4}, \
+                 \"gather_copy_bytes_per_step\": {}, \"paged_read_bytes_per_step\": {}}}",
+                c.t,
+                c.rows_per_s_gather,
+                c.rows_per_s_paged,
+                c.speedup,
+                c.gather_copy_bytes_per_step,
+                c.paged_read_bytes_per_step
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"suite\": \"paged_attn\",\n  \"model\": \"{}\",\n  \"layout\": \"gqa 8q/2kv hd48\",\n  \
+         \"steady_state_gather_calls\": 0,\n  \"steady_state_paged_reads_bytes\": {steady_paged_bytes},\n  \
+         \"cases\": [\n{}\n  ]\n}}\n",
+        cfg.name,
+        case_json.join(",\n")
+    );
+    std::fs::write("BENCH_paged_attn.json", &json).expect("write BENCH_paged_attn.json");
+    eprintln!("  wrote BENCH_paged_attn.json");
+}

@@ -5,13 +5,22 @@
 //! once per sequence. That is precisely the weights-bandwidth economics the
 //! paper's §3 speedup model assumes, which makes this engine a faithful
 //! testbed for the vanilla-vs-merged decode benchmarks.
+//!
+//! Attention reads the KV history **in place**: every per-token step takes
+//! zero-copy [`BlockView`]s over the sequence's physical cache blocks and
+//! runs the fused paged kernel ([`crate::model::paged_attn`]) across the
+//! (sequence × query-head) grid — no gather memcpy anywhere on the decode,
+//! verify, or warm-prefill path (DESIGN.md §Paged attention). The kernel
+//! preserves the reference scalar accumulation order, so decode output is
+//! bit-identical to the old gather-then-attend path, and a widened verify
+//! step stays bit-identical to the same tokens decoded one at a time.
 
 use crate::config::{BlockLayout, ModelConfig, Variant};
 use crate::coordinator::engine::{DecodeInput, Engine, EngineError, VerifyInput};
-use crate::kvcache::{CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
-use crate::linalg::{matmul, matmul_transb, softmax_rows};
-use crate::model::attention::HeadLayout;
+use crate::kvcache::{BlockView, CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
+use crate::model::attention::{causal_attention_rot, HeadLayout};
 use crate::model::ffn::ffn_forward;
+use crate::model::paged_attn::{self, AttnItem, KvSegment};
 use crate::model::{rope, ModelWeights, Weight};
 use crate::tensor::Mat;
 use std::collections::BTreeMap;
@@ -21,101 +30,14 @@ pub struct CpuEngine {
     cache: KvCache,
     /// live sequence positions (mirrors cache state, for fast checks)
     positions: BTreeMap<SeqId, usize>,
-    // gather scratch (reused across steps to keep the hot loop allocation-free)
-    scratch_k: Vec<f32>,
-    scratch_v: Vec<f32>,
-}
-
-/// Attention of already-rotated suffix queries over the full key/value
-/// history (cached prefix ‖ in-register suffix). Row `r` of `q_rot` is
-/// absolute position `prefix + r` and may attend to positions
-/// `0..=prefix + r`. Column-width and per-element accumulation order match
-/// [`crate::model::attention::causal_attention`] exactly, so a prefill that
-/// reuses a cached prefix produces bit-identical suffix activations.
-fn attend_continuation(
-    q_rot: &Mat,
-    k_all_rot: &Mat,
-    v_all: &Mat,
-    layout: HeadLayout,
-    prefix: usize,
-) -> Mat {
-    let s = q_rot.rows();
-    let t = k_all_rot.rows();
-    assert_eq!(prefix + s, t, "prefix + suffix mismatch");
-    let hd = layout.head_dim;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = Mat::zeros(s, layout.d());
-    for h in 0..layout.n_heads {
-        let g = layout.kv_of(h);
-        let qh = q_rot.col_slice(h * hd, (h + 1) * hd);
-        let kh = k_all_rot.col_slice(g * hd, (g + 1) * hd);
-        let vh = v_all.col_slice(g * hd, (g + 1) * hd);
-        let mut scores = matmul_transb(&qh, &kh);
-        scores.scale(scale);
-        for r in 0..s {
-            let row = scores.row_mut(r);
-            for c in (prefix + r + 1)..t {
-                row[c] = f32::NEG_INFINITY;
-            }
-        }
-        softmax_rows(&mut scores);
-        let oh = matmul(&scores, &vh);
-        for r in 0..s {
-            out.row_mut(r)[h * hd..(h + 1) * hd].copy_from_slice(oh.row(r));
-        }
-    }
-    out
 }
 
 fn capacity(e: CacheError) -> EngineError {
     EngineError::CapacityExhausted(e.to_string())
 }
 
-/// Attention of one already-rotated query row over `t` gathered key/value
-/// rows (`t × e` each, contiguous). The scalar accumulation order here is
-/// the single source of truth for the decode path: `decode_batch` and
-/// `verify_batch` both route through it, which is what makes a widened
-/// verify step bit-identical to the same tokens decoded one at a time.
-fn attend_one(
-    layout: HeadLayout,
-    q_rot: &[f32],
-    keys: &[f32],
-    vals: &[f32],
-    t: usize,
-    out: &mut [f32],
-) {
-    let hd = layout.head_dim;
-    let e = layout.e();
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores = vec![0.0f32; t];
-    for h in 0..layout.n_heads {
-        let g = layout.kv_of(h);
-        let qh = &q_rot[h * hd..(h + 1) * hd];
-        for (r, s) in scores.iter_mut().enumerate() {
-            let krow = &keys[r * e + g * hd..r * e + (g + 1) * hd];
-            let mut acc = 0.0f32;
-            for i in 0..hd {
-                acc += qh[i] * krow[i];
-            }
-            *s = acc * scale;
-        }
-        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-        let mut sum = 0.0f32;
-        for s in scores.iter_mut() {
-            *s = (*s - mx).exp();
-            sum += *s;
-        }
-        let inv = 1.0 / sum;
-        let oh = &mut out[h * hd..(h + 1) * hd];
-        oh.fill(0.0);
-        for (r, &s) in scores.iter().enumerate() {
-            let w = s * inv;
-            let vrow = &vals[r * e + g * hd..r * e + (g + 1) * hd];
-            for i in 0..hd {
-                oh[i] += w * vrow[i];
-            }
-        }
-    }
+fn bad_seq(e: CacheError) -> EngineError {
+    EngineError::BadSequence(e.to_string())
 }
 
 impl CpuEngine {
@@ -139,8 +61,6 @@ impl CpuEngine {
             weights,
             cache,
             positions: BTreeMap::new(),
-            scratch_k: Vec::new(),
-            scratch_v: Vec::new(),
         }
     }
 
@@ -181,8 +101,11 @@ impl CpuEngine {
         let w = &self.weights;
         let cfg = &w.cfg;
         let hd = cfg.head_dim();
+        let e = layout.e();
         let suffix = &tokens[reused..];
+        let s = suffix.len();
         let mut x = w.embed_tokens(suffix);
+        let mut paged_reads = 0u64;
         // run all layers, collecting each layer's (rotated-K, V) to write
         // into the paged cache position-major afterwards (the cache's
         // append/advance protocol is per-position).
@@ -190,25 +113,44 @@ impl CpuEngine {
         for (li, b) in w.blocks.iter().enumerate() {
             let k = Weight::proj(&x, &b.k);
             let v = Weight::proj(&x, &b.v);
-            let mut k_rot = k.clone();
+            let mut k_rot = k;
             rope::apply(&mut k_rot, hd, reused, rope::BASE);
-            let q = Weight::proj(&x, &b.q);
+            let mut q_rot = Weight::proj(&x, &b.q);
+            rope::apply(&mut q_rot, hd, reused, rope::BASE);
             let a = if reused == 0 {
-                crate::model::attention::causal_attention(&q, &k, &v, layout, 0)
+                causal_attention_rot(&q_rot, &k_rot, &v, layout)
             } else {
-                // gather the shared prefix (rotated keys / raw values) into
-                // buffers the Mats then own outright — no re-copy;
-                // st.len == reused until the appends below
-                let (mut pk_buf, mut pv_buf) = (Vec::new(), Vec::new());
-                self.cache
-                    .gather(id, li, &mut pk_buf, &mut pv_buf)
-                    .map_err(|e| EngineError::BadSequence(e.to_string()))?;
-                let e = layout.e();
-                let pk = Mat::from_vec(reused, e, pk_buf);
-                let pv = Mat::from_vec(reused, e, pv_buf);
-                let mut q_rot = q.clone();
-                rope::apply(&mut q_rot, hd, reused, rope::BASE);
-                attend_continuation(&q_rot, &pk.vcat(&k_rot), &pv.vcat(&v), layout, reused)
+                // chunked-prefill continuation: each suffix row attends over
+                // the shared prefix IN PLACE (zero-copy block views;
+                // st.len == reused until the appends below) plus the
+                // in-register rotated suffix up to and including itself —
+                // causality by construction, no gather copy.
+                let views: Vec<BlockView> = self
+                    .cache
+                    .seq_block_views(id, li)
+                    .map_err(bad_seq)?
+                    .collect();
+                let mut a = Mat::zeros(s, layout.d());
+                let items: Vec<AttnItem> = (0..s)
+                    .map(|r| AttnItem {
+                        q_rot: q_rot.row(r),
+                        views: &views,
+                        cache_len: reused,
+                        tails: [
+                            KvSegment::rows(
+                                &k_rot.as_slice()[..(r + 1) * e],
+                                &v.as_slice()[..(r + 1) * e],
+                                e,
+                            ),
+                            KvSegment::empty(),
+                        ],
+                        t: reused + r + 1,
+                        out_row: r,
+                    })
+                    .collect();
+                paged_attn::attend_batch(layout, &items, &mut a);
+                paged_reads += (s * reused) as u64;
+                a
             };
             layer_kv.push((k_rot, v));
             x = match cfg.layout {
@@ -229,22 +171,16 @@ impl CpuEngine {
                     .append(id, li, k_rot.row(r), v.row(r))
                     .map_err(capacity)?;
             }
-            self.cache
-                .advance(id)
-                .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+            self.cache.advance(id).map_err(bad_seq)?;
+        }
+        if paged_reads > 0 {
+            self.cache.note_paged_attn(paged_reads);
         }
         let logits = self
             .weights
             .unembed
             .matmul(&x.row_slice(suffix.len() - 1, suffix.len()));
         Ok(logits.into_vec())
-    }
-
-    /// Attention for one sequence against its gathered cache; `q_rot` is the
-    /// already-rotated query row; the cache already contains the current
-    /// position. Writes the head-concat output into `out`.
-    fn attend_cached(&self, q_rot: &[f32], t: usize, out: &mut [f32]) {
-        attend_one(self.head_layout(), q_rot, &self.scratch_k, &self.scratch_v, t, out);
     }
 }
 
@@ -325,6 +261,8 @@ impl Engine for CpuEngine {
         let bsz = inputs.len();
         let cfg = self.weights.cfg.clone();
         let hd = cfg.head_dim();
+        let layout = self.head_layout();
+        let e = layout.e();
         let layout_kind = cfg.layout;
         // batched embedding lookup: (B, d)
         let toks: Vec<u32> = inputs.iter().map(|i| i.token).collect();
@@ -344,6 +282,13 @@ impl Engine for CpuEngine {
             }
             pos.push(p);
         }
+        let mut paged_reads = 0u64;
+        // view-table scratch: `ranges` is lifetime-free and reused across
+        // layers; `views`/`items` borrow the cache per layer but are
+        // pre-sized — O(blocks) bookkeeping, no O(t·e) buffers.
+        let bt = self.cache.block_tokens();
+        let n_views: usize = pos.iter().map(|&p| p.div_ceil(bt.max(1)).max(1)).sum();
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(bsz);
 
         let n_layers = self.weights.blocks.len();
         for li in 0..n_layers {
@@ -362,29 +307,39 @@ impl Engine for CpuEngine {
                     rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
                 }
             }
-            // append to paged cache + per-seq attention
-            let mut a = Mat::zeros(bsz, cfg.dim);
+            // write every sequence's new K/V first (CoW/growth happen here,
+            // against each sequence's OWN block table)...
             for (r, inp) in inputs.iter().enumerate() {
                 self.cache
                     .append(inp.seq, li, k.row(r), v.row(r))
-                    .map_err(|e| EngineError::CapacityExhausted(e.to_string()))?;
-                let (mut sk, mut sv) = (
-                    std::mem::take(&mut self.scratch_k),
-                    std::mem::take(&mut self.scratch_v),
-                );
-                // gather includes the just-appended position only after
-                // advance; gather len is st.len (= pos[r]), so append first,
-                // then temporarily read pos+1 rows: gather uses st.len —
-                // advance below; include current row manually.
-                self.cache
-                    .gather(inp.seq, li, &mut sk, &mut sv)
-                    .map_err(|e| EngineError::BadSequence(e.to_string()))?;
-                sk.extend_from_slice(k.row(r));
-                sv.extend_from_slice(v.row(r));
-                self.scratch_k = sk;
-                self.scratch_v = sv;
-                self.attend_cached(q.row(r), pos[r] + 1, a.row_mut(r));
+                    .map_err(capacity)?;
             }
+            // ...then attend over the histories IN PLACE: zero-copy block
+            // views (the cache length is still pos[r]; the just-written row
+            // rides along from registers as a tail segment, exactly what
+            // the old path spliced onto its gather scratch), fanned out
+            // over the (sequence × head) grid.
+            let mut views: Vec<BlockView> = Vec::with_capacity(n_views);
+            ranges.clear();
+            for inp in inputs {
+                let start = views.len();
+                views.extend(self.cache.seq_block_views(inp.seq, li).map_err(bad_seq)?);
+                ranges.push((start, views.len()));
+            }
+            let mut items: Vec<AttnItem> = Vec::with_capacity(bsz);
+            items.extend(inputs.iter().enumerate().map(|(r, _)| AttnItem {
+                q_rot: q.row(r),
+                views: &views[ranges[r].0..ranges[r].1],
+                cache_len: pos[r],
+                tails: [KvSegment::rows(k.row(r), v.row(r), e), KvSegment::empty()],
+                t: pos[r] + 1,
+                out_row: r,
+            }));
+            let mut a = Mat::zeros(bsz, cfg.dim);
+            paged_attn::attend_batch(layout, &items, &mut a);
+            drop(items);
+            drop(views);
+            paged_reads += pos.iter().map(|&p| p as u64).sum::<u64>();
             // post-attention + FFN, batched
             x = match layout_kind {
                 BlockLayout::Serial => {
@@ -398,11 +353,10 @@ impl Engine for CpuEngine {
                 }
             };
         }
+        self.cache.note_paged_attn(paged_reads);
         // one advance per sequence per token
         for inp in inputs {
-            self.cache
-                .advance(inp.seq)
-                .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+            self.cache.advance(inp.seq).map_err(bad_seq)?;
             *self.positions.get_mut(&inp.seq).unwrap() += 1;
         }
         let logits = self.weights.unembed.matmul(&x);
@@ -448,16 +402,31 @@ impl Engine for CpuEngine {
         let total_rows: usize = inputs.iter().map(|i| i.tokens.len()).sum();
         let toks: Vec<u32> = inputs.iter().flat_map(|i| i.tokens.iter().copied()).collect();
         let mut x = self.weights.embed_tokens(&toks);
-        // absolute position of every flattened row
+        // absolute position of every flattened row, and each sequence's
+        // first flattened row
         let mut rowpos = Vec::with_capacity(total_rows);
+        let mut row0 = Vec::with_capacity(inputs.len());
         for (vi, &p) in inputs.iter().zip(&base) {
+            row0.push(rowpos.len());
             for j in 0..vi.tokens.len() {
                 rowpos.push(p + j);
             }
         }
         let ew = layout.e();
+        let max_s = inputs.iter().map(|i| i.tokens.len()).max().unwrap_or(0);
         // roundtrip scratch for the u8-pool path (reused across all rows)
         let (mut rt_codes, mut rt_vals) = (Vec::new(), Vec::new());
+        // per-sequence draft tails: earlier draft rows of this layer,
+        // roundtripped through the pool's quantizer so attention over them
+        // reads, bit for bit, what a sequential decode would have gathered
+        // back out of the cache
+        let mut tails: Vec<(Vec<f32>, Vec<f32>)> =
+            inputs.iter().map(|_| (Vec::new(), Vec::new())).collect();
+        let mut paged_reads = 0u64;
+        // lifetime-free view-table scratch, reused across layers
+        let bt = self.cache.block_tokens();
+        let n_views: usize = base.iter().map(|&p| p.div_ceil(bt.max(1)).max(1)).sum();
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(inputs.len());
         let n_layers = self.weights.blocks.len();
         // every layer's (rotated-K, V) rows, written to the paged cache
         // position-major after the layer loop (the cache's append/advance
@@ -479,35 +448,66 @@ impl Engine for CpuEngine {
                     rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
                 }
             }
+            // zero-copy views over each sequence's cached history — stable
+            // for the whole layer (cache writes happen after the layer loop)
+            let mut views: Vec<BlockView> = Vec::with_capacity(n_views);
+            ranges.clear();
+            for vi in inputs {
+                let start = views.len();
+                views.extend(self.cache.seq_block_views(vi.seq, li).map_err(bad_seq)?);
+                ranges.push((start, views.len()));
+            }
+            for (tk, tv) in tails.iter_mut() {
+                tk.clear();
+                tv.clear();
+            }
             let mut a = Mat::zeros(total_rows, cfg.dim);
-            let mut r0 = 0usize;
-            for (vi, &p) in inputs.iter().zip(&base) {
-                let s = vi.tokens.len();
-                let (mut sk, mut sv) = (
-                    std::mem::take(&mut self.scratch_k),
-                    std::mem::take(&mut self.scratch_v),
+            // draft position j of every sequence runs as one parallel
+            // (sequence × head) wave; waves are sequential because row j+1
+            // must read row j's ROUNDTRIPPED K/V (sequential-decode
+            // semantics), which is written between waves.
+            for j in 0..max_s {
+                let mut items: Vec<AttnItem> = Vec::with_capacity(inputs.len());
+                items.extend(
+                    inputs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, vi)| vi.tokens.len() > j)
+                        .map(|(i, _)| {
+                            let r = row0[i] + j;
+                            AttnItem {
+                                q_rot: q.row(r),
+                                views: &views[ranges[i].0..ranges[i].1],
+                                cache_len: base[i],
+                                tails: [
+                                    KvSegment::rows(&tails[i].0, &tails[i].1, ew),
+                                    // current row raw from registers —
+                                    // exactly how decode_batch attends its
+                                    // own position
+                                    KvSegment::rows(k.row(r), v.row(r), ew),
+                                ],
+                                t: base[i] + j + 1,
+                                out_row: r,
+                            }
+                        }),
                 );
-                self.cache
-                    .gather(vi.seq, li, &mut sk, &mut sv)
-                    .map_err(|err| EngineError::BadSequence(err.to_string()))?;
-                for j in 0..s {
-                    let r = r0 + j;
-                    // current row raw — exactly how decode_batch extends
-                    // its scratch; earlier draft rows were roundtripped
-                    // through the pool's quantizer below, so they match
-                    // what a sequential decode would have gathered back
-                    sk.extend_from_slice(k.row(r));
-                    sv.extend_from_slice(v.row(r));
-                    attend_one(layout, q.row(r), &sk, &sv, p + j + 1, a.row_mut(r));
-                    let last = sk.len() - ew;
+                paged_attn::attend_batch(layout, &items, &mut a);
+                drop(items);
+                for (i, vi) in inputs.iter().enumerate() {
+                    if vi.tokens.len() <= j {
+                        continue;
+                    }
+                    paged_reads += base[i] as u64;
+                    let r = row0[i] + j;
+                    let (tk, tv) = &mut tails[i];
+                    tk.extend_from_slice(k.row(r));
+                    tv.extend_from_slice(v.row(r));
+                    let last = tk.len() - ew;
                     self.cache
-                        .quantize_roundtrip(&mut sk[last..], &mut rt_codes, &mut rt_vals);
+                        .quantize_roundtrip(&mut tk[last..], &mut rt_codes, &mut rt_vals);
                     self.cache
-                        .quantize_roundtrip(&mut sv[last..], &mut rt_codes, &mut rt_vals);
+                        .quantize_roundtrip(&mut tv[last..], &mut rt_codes, &mut rt_vals);
                 }
-                self.scratch_k = sk;
-                self.scratch_v = sv;
-                r0 += s;
             }
             layer_kv.push((k, v));
             x = match cfg.layout {
@@ -522,6 +522,7 @@ impl Engine for CpuEngine {
                 }
             };
         }
+        self.cache.note_paged_attn(paged_reads);
         // position-major cache writes: all layers of a position, then advance
         let mut r0 = 0usize;
         for vi in inputs {
@@ -531,9 +532,7 @@ impl Engine for CpuEngine {
                         .append(vi.seq, li, k.row(r0 + j), v.row(r0 + j))
                         .map_err(capacity)?;
                 }
-                self.cache
-                    .advance(vi.seq)
-                    .map_err(|err| EngineError::BadSequence(err.to_string()))?;
+                self.cache.advance(vi.seq).map_err(bad_seq)?;
             }
             *self.positions.get_mut(&vi.seq).unwrap() += vi.tokens.len();
             r0 += vi.tokens.len();

@@ -874,6 +874,9 @@ impl<E: Engine> Scheduler<E> {
         Metrics::set(&m.kv_swap_ins, s.stats.swap_ins);
         Metrics::set(&m.kv_swap_blocks_reused, s.stats.swap_blocks_reused);
         Metrics::set(&m.kv_truncated_positions, s.stats.truncated_positions);
+        Metrics::set(&m.attn_paged_reads_bytes, s.stats.paged_reads_bytes);
+        Metrics::set(&m.attn_gather_bytes_avoided, s.stats.gather_bytes_avoided);
+        Metrics::set(&m.attn_gather_calls, s.stats.gathers);
         Metrics::set(&m.kv_blocks_used, s.used_blocks as u64);
         Metrics::set(&m.kv_blocks_free, s.free_blocks as u64);
         Metrics::set(&m.kv_blocks_cached, s.cached_blocks as u64);

@@ -34,9 +34,12 @@
 //!   so resume and fork stay byte-identical.
 //!
 //! The decode engine writes rotated keys / raw values through
-//! [`KvCache::append`] and reads per-sequence contiguous views via
-//! [`KvCache::gather`] (block-table indirection hidden from the attention
-//! kernel).
+//! [`KvCache::append`] and reads the history back **in place** via
+//! [`KvCache::seq_block_views`]: zero-copy [`BlockView`]s over the physical
+//! blocks that the paged attention kernel
+//! ([`crate::model::paged_attn`]) consumes directly — no gather copy on the
+//! decode hot path. [`KvCache::gather`] (copy into contiguous scratch)
+//! remains as the reference/oracle read path and for offline tooling.
 
 use crate::config::ModelConfig;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -134,6 +137,17 @@ pub struct CacheStats {
     pub truncations: u64,
     /// Positions dropped across all truncations.
     pub truncated_positions: u64,
+    /// [`KvCache::gather`] calls — copies into contiguous scratch. The
+    /// steady-state decode path must keep this flat (it reads in place).
+    pub gathers: u64,
+    /// f32 bytes memcpy'd out of the pool by [`KvCache::gather`].
+    pub gather_bytes: u64,
+    /// Bytes of K/V the paged attention kernel read **in place** through
+    /// [`KvCache::seq_block_views`] (pool precision, incl. u8 meta).
+    pub paged_reads_bytes: u64,
+    /// f32 scratch bytes the old gather path would have memcpy'd for those
+    /// same reads — the copy traffic the zero-copy path avoided.
+    pub gather_bytes_avoided: u64,
 }
 
 /// Point-in-time view of pool occupancy plus the cumulative [`CacheStats`].
@@ -196,6 +210,53 @@ struct SwappedSeq {
     len: usize,
     n_blocks: usize,
     prompt_hashes: Vec<u64>,
+}
+
+/// Zero-copy view of one physical block's K/V rows for **one layer** of a
+/// sequence, in either pool precision ([`KvCache::seq_block_views`]).
+///
+/// Positions inside a block are layer-interleaved, so a view is a strided
+/// window rather than a dense matrix: the row pair for position `i`
+/// (`0 <= i < len`) lives at `data[i * stride .. i * stride + 2 * e]`, K in
+/// the first `e` elements and V in the second. On a `U8` pool the elements
+/// are codes and `meta[i * meta_stride .. + 4]` holds the position's
+/// `[k_scale, k_zero, v_scale, v_zero]`; a value dequantizes as
+/// `zero + scale * code as f32` — the exact formula [`KvCache::gather`]
+/// applies, which is what lets the paged kernel stay bit-identical to the
+/// gather-then-attend reference while never materializing the copy.
+#[derive(Clone, Copy, Debug)]
+pub enum BlockView<'a> {
+    F32 {
+        data: &'a [f32],
+        /// Valid positions in this block.
+        len: usize,
+        /// Elements between consecutive positions' row pairs.
+        stride: usize,
+        /// Floats per K (and per V) row.
+        e: usize,
+    },
+    U8 {
+        data: &'a [u8],
+        meta: &'a [f32],
+        len: usize,
+        stride: usize,
+        /// Floats between consecutive positions' meta quadruples.
+        meta_stride: usize,
+        e: usize,
+    },
+}
+
+impl BlockView<'_> {
+    /// Valid positions in this block.
+    pub fn len(&self) -> usize {
+        match self {
+            BlockView::F32 { len, .. } | BlockView::U8 { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// Min-max quantize `src` into u8 codes; writes `[scale, zero]` into
@@ -1043,21 +1104,26 @@ impl KvCache {
     }
 
     /// Copy the sequence's K and V for `layer` into contiguous buffers
-    /// (`len × e` each) for the attention kernel.
+    /// (`len × e` each). This is the **reference** read path (and the one
+    /// offline tooling uses): the decode hot loop reads in place through
+    /// [`KvCache::seq_block_views`] instead, and the [`CacheStats::gathers`]
+    /// counter this bumps is how benches and the serving metrics assert the
+    /// steady-state decode path performs zero gather copies.
     pub fn gather(
-        &self,
+        &mut self,
         id: SeqId,
         layer: usize,
         k_out: &mut Vec<f32>,
         v_out: &mut Vec<f32>,
     ) -> Result<usize, CacheError> {
         let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let len = st.len;
         let e = self.floats_per_pos_layer / 2;
         k_out.clear();
         v_out.clear();
-        k_out.reserve(st.len * e);
-        v_out.reserve(st.len * e);
-        for pos in 0..st.len {
+        k_out.reserve(len * e);
+        v_out.reserve(len * e);
+        for pos in 0..len {
             let phys = st.blocks[pos / self.block_tokens];
             let off = self.offset(phys, pos % self.block_tokens, layer);
             match &self.store {
@@ -1073,7 +1139,101 @@ impl KvCache {
                 }
             }
         }
-        Ok(st.len)
+        self.stats.gathers += 1;
+        self.stats.gather_bytes += (len * 2 * e * 4) as u64;
+        Ok(len)
+    }
+
+    /// Zero-copy, in-order [`BlockView`]s over the physical blocks holding
+    /// the first `seq_len` positions of `id` for `layer` — the paged
+    /// attention kernel's read path. No bytes move; the views borrow the
+    /// pool, so the borrow checker statically forbids appends (and thus
+    /// CoW/eviction) while any view is live, and every viewed block has
+    /// `refcount >= 1` through this sequence's own table.
+    ///
+    /// ```
+    /// use skipless::config::ModelConfig;
+    /// use skipless::kvcache::{BlockView, KvCache};
+    ///
+    /// let cfg = ModelConfig::tiny_gqa();
+    /// let mut cache = KvCache::new(&cfg, 4, 64 * 1024);
+    /// let id = cache.alloc_seq(1).unwrap();
+    /// let e = cfg.e();
+    /// for layer in 0..cfg.n_layers {
+    ///     cache.append(id, layer, &vec![1.0; e], &vec![2.0; e]).unwrap();
+    /// }
+    /// cache.advance(id).unwrap();
+    /// let views: Vec<BlockView> = cache.seq_block_views(id, 0).unwrap().collect();
+    /// assert_eq!(views.len(), 1);
+    /// match views[0] {
+    ///     BlockView::F32 { data, len, e: ve, .. } => {
+    ///         assert_eq!((len, ve), (1, e));
+    ///         assert_eq!(data[0], 1.0); // K half, in place
+    ///         assert_eq!(data[e], 2.0); // V half
+    ///     }
+    ///     _ => unreachable!("f32 pool"),
+    /// }
+    /// ```
+    pub fn seq_block_views(
+        &self,
+        id: SeqId,
+        layer: usize,
+    ) -> Result<impl Iterator<Item = BlockView<'_>> + '_, CacheError> {
+        assert!(layer < self.n_layers, "layer out of range");
+        let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let bt = self.block_tokens;
+        let len = st.len;
+        let n_used = len.div_ceil(bt);
+        Ok(st.blocks[..n_used]
+            .iter()
+            .enumerate()
+            .map(move |(bi, &phys)| self.block_view(phys, layer, (len - bi * bt).min(bt))))
+    }
+
+    /// One block's first `blen` positions for `layer`, as a strided window.
+    fn block_view(&self, phys: usize, layer: usize, blen: usize) -> BlockView<'_> {
+        debug_assert!(blen >= 1);
+        let e = self.floats_per_pos_layer / 2;
+        let stride = self.n_layers * self.floats_per_pos_layer;
+        let base = self.offset(phys, 0, layer);
+        let span = (blen - 1) * stride + 2 * e;
+        match &self.store {
+            Store::F32(data) => BlockView::F32 {
+                data: &data[base..base + span],
+                len: blen,
+                stride,
+                e,
+            },
+            Store::U8 { data, meta } => {
+                let meta_stride = self.n_layers * 4;
+                let mbase = self.meta_index(phys, 0, layer);
+                BlockView::U8 {
+                    data: &data[base..base + span],
+                    meta: &meta[mbase..mbase + (blen - 1) * meta_stride + 4],
+                    len: blen,
+                    stride,
+                    meta_stride,
+                    e,
+                }
+            }
+        }
+    }
+
+    /// Record that the paged attention kernel read `pos_layer_reads`
+    /// (position, layer) K/V slots in place. The engine accumulates the
+    /// count across a step's immutable view borrows and reports it here
+    /// once they drop; [`CacheStats::paged_reads_bytes`] tracks the bytes
+    /// actually touched at pool precision and
+    /// [`CacheStats::gather_bytes_avoided`] the f32 scratch copy the old
+    /// gather path would have made for the same reads.
+    pub fn note_paged_attn(&mut self, pos_layer_reads: u64) {
+        let e = (self.floats_per_pos_layer / 2) as u64;
+        let data_bytes = match &self.store {
+            Store::F32(_) => 2 * e * 4,
+            Store::U8 { .. } => 2 * e + 16,
+        };
+        self.stats.paged_reads_bytes += pos_layer_reads * data_bytes;
+        self.stats.gather_bytes_avoided += pos_layer_reads * 2 * e * 4;
     }
 }
 
@@ -1709,6 +1869,112 @@ mod tests {
         for (got, &want) in row.iter().zip(&orig) {
             assert!((got - want).abs() < 0.02, "{got} vs {want}");
         }
+    }
+
+    // ---- zero-copy block views ------------------------------------------
+
+    /// Dequantize-and-flatten a sequence's views exactly the way the paged
+    /// attention kernel reads them (same formula, same order).
+    fn read_views(c: &KvCache, id: SeqId, layer: usize) -> (Vec<f32>, Vec<f32>) {
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        for view in c.seq_block_views(id, layer).unwrap() {
+            match view {
+                BlockView::F32 { data, len, stride, e } => {
+                    for p in 0..len {
+                        k.extend_from_slice(&data[p * stride..p * stride + e]);
+                        v.extend_from_slice(&data[p * stride + e..p * stride + 2 * e]);
+                    }
+                }
+                BlockView::U8 { data, meta, len, stride, meta_stride, e } => {
+                    for p in 0..len {
+                        let m = &meta[p * meta_stride..p * meta_stride + 4];
+                        for &q in &data[p * stride..p * stride + e] {
+                            k.push(m[1] + m[0] * q as f32);
+                        }
+                        for &q in &data[p * stride + e..p * stride + 2 * e] {
+                            v.push(m[3] + m[2] * q as f32);
+                        }
+                    }
+                }
+            }
+        }
+        (k, v)
+    }
+
+    /// Views must cover exactly the positions gather copies, in order, for
+    /// both precisions — including a partial tail block.
+    #[test]
+    fn block_views_bit_equal_to_gather() {
+        for quantized in [false, true] {
+            let cfg = ModelConfig::tiny_gqa();
+            let mut c = KvCache::with_opts(
+                &cfg,
+                4,
+                64 * 1024,
+                CacheOpts { quantized, ..Default::default() },
+            );
+            let id = c.alloc_seq(9).unwrap(); // 2 full blocks + 1 tail position
+            fill(&mut c, &cfg, id, 0, 9, 0.25);
+            for layer in 0..cfg.n_layers {
+                let lens: Vec<usize> =
+                    c.seq_block_views(id, layer).unwrap().map(|b| b.len()).collect();
+                assert_eq!(lens, vec![4, 4, 1], "kv8={quantized} layer {layer}");
+                let (kv, vv) = read_views(&c, id, layer);
+                let (mut kg, mut vg) = (Vec::new(), Vec::new());
+                c.gather(id, layer, &mut kg, &mut vg).unwrap();
+                assert_eq!(kv, kg, "kv8={quantized} layer {layer}: keys differ");
+                assert_eq!(vv, vg, "kv8={quantized} layer {layer}: values differ");
+            }
+        }
+    }
+
+    /// Views must follow a sequence's own block table through CoW forks and
+    /// a swap-out/swap-in cycle (the lifecycle paths that repoint blocks).
+    #[test]
+    fn block_views_track_cow_and_swap() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(6).unwrap();
+        fill(&mut c, &cfg, id, 0, 6, 0.0);
+        let f = c.fork_seq(id).unwrap();
+        fill(&mut c, &cfg, f, 6, 1, 5000.0); // CoW in the shared tail block
+        fill(&mut c, &cfg, id, 6, 1, 9000.0);
+        for seq in [id, f] {
+            let (kv, _) = read_views(&c, seq, 0);
+            let (mut kg, mut vg) = (Vec::new(), Vec::new());
+            c.gather(seq, 0, &mut kg, &mut vg).unwrap();
+            assert_eq!(kv, kg, "{seq:?} diverged from gather after CoW");
+        }
+        c.swap_out(id).unwrap();
+        assert!(c.seq_block_views(id, 0).is_err(), "swapped seq has no views");
+        c.swap_in(id).unwrap();
+        let (kv, _) = read_views(&c, id, 1);
+        let (mut kg, mut vg) = (Vec::new(), Vec::new());
+        c.gather(id, 1, &mut kg, &mut vg).unwrap();
+        assert_eq!(kv, kg, "views diverged from gather after swap resume");
+    }
+
+    #[test]
+    fn gather_and_paged_read_stats_accumulate() {
+        let (cfg, mut c) = cache(64);
+        let e = cfg.e();
+        let id = c.alloc_seq(3).unwrap();
+        fill(&mut c, &cfg, id, 0, 3, 0.0);
+        assert_eq!(c.stats().gathers, 0);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        c.gather(id, 0, &mut k, &mut v).unwrap();
+        assert_eq!(c.stats().gathers, 1);
+        assert_eq!(c.stats().gather_bytes, (3 * 2 * e * 4) as u64);
+        // in-place reads: 3 (pos, layer) slots at f32 precision
+        c.note_paged_attn(3);
+        assert_eq!(c.stats().paged_reads_bytes, (3 * 2 * e * 4) as u64);
+        assert_eq!(c.stats().gather_bytes_avoided, (3 * 2 * e * 4) as u64);
+        // u8 pool: in-place bytes shrink, avoided f32 copy bytes do not
+        let (_, mut q) = qcache(64);
+        let qid = q.alloc_seq(2).unwrap();
+        fill(&mut q, &cfg, qid, 0, 2, 0.0);
+        q.note_paged_attn(2);
+        assert_eq!(q.stats().paged_reads_bytes, (2 * (2 * e + 16)) as u64);
+        assert_eq!(q.stats().gather_bytes_avoided, (2 * 2 * e * 4) as u64);
     }
 
     #[test]

@@ -190,15 +190,70 @@ fn gemm_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
 /// `a @ b^T`. Shapes: `(m,k) @ (n,k)^T -> (m,n)`. Used for attention scores
 /// (`q @ k^T`) where `b`'s rows are the cached keys — unit stride on both
 /// operands without materializing a transpose.
+///
+/// Rows of the output are distributed over the thread pool (disjoint →
+/// deterministic: every `out[r][c]` is one dot product computed by exactly
+/// one worker in fixed element order), with a 4-row microkernel so each
+/// pass over `b`'s rows feeds four score rows — the prefill `q @ k^T` path
+/// was a serial naive loop before this.
 pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
     let (m, k) = a.shape();
     let (n, k2) = b.shape();
     assert_eq!(k, k2, "matmul_transb inner-dim mismatch");
     let mut out = Mat::zeros(m, n);
-    for r in 0..m {
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    if flops < 1.0e6 || threadpool::global().n_threads() == 1 {
+        transb_rows(a, b, &mut out, 0, m);
+        return out;
+    }
+    let a_ptr = AddrSend(a as *const Mat);
+    let b_ptr = AddrSend(b as *const Mat);
+    let out_ptr = AddrSendMut(&mut out as *mut Mat);
+    threadpool::global().scope_chunks(m, 4, move |r0, r1| {
+        let a = unsafe { &*a_ptr.get() };
+        let b = unsafe { &*b_ptr.get() };
+        let out = unsafe { &mut *out_ptr.get() };
+        transb_rows(a, b, out, r0, r1);
+    });
+    out
+}
+
+/// Serial `a @ b^T` kernel over rows `[r0, r1)` of the output.
+///
+/// 4-row microkernel: four rows of `a` share each pass over `b`'s rows,
+/// quartering `b` traffic (same shape as [`gemm_rows`]); each dot still
+/// accumulates in ascending element order, so results are bit-identical to
+/// the single-row tail.
+fn transb_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
+    let k = a.cols();
+    let n_out = b.rows();
+    let mut r = r0;
+    while r + 4 <= r1 {
+        let (a0, a1, a2, a3) = (a.row(r), a.row(r + 1), a.row(r + 2), a.row(r + 3));
+        for c in 0..n_out {
+            let brow = b.row(c);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for i in 0..k {
+                let bv = brow[i];
+                s0 += a0[i] * bv;
+                s1 += a1[i] * bv;
+                s2 += a2[i] * bv;
+                s3 += a3[i] * bv;
+            }
+            *out.at_mut(r, c) = s0;
+            *out.at_mut(r + 1, c) = s1;
+            *out.at_mut(r + 2, c) = s2;
+            *out.at_mut(r + 3, c) = s3;
+        }
+        r += 4;
+    }
+    while r < r1 {
         let arow = a.row(r);
         let orow = out.row_mut(r);
-        for c in 0..n {
+        for c in 0..n_out {
             let brow = b.row(c);
             let mut acc = 0.0f32;
             for i in 0..k {
@@ -206,8 +261,8 @@ pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
             }
             orow[c] = acc;
         }
+        r += 1;
     }
-    out
 }
 
 /// Matrix–vector product `m @ v` (decode-step fast path, no Mat wrapper).
@@ -307,6 +362,24 @@ mod tests {
         let got = matmul_transb(&a, &b);
         let want = matmul(&a, &b.transpose());
         assert!(got.rel_fro_err(&want) < 1e-6);
+    }
+
+    #[test]
+    fn transb_threaded_path_matches_serial_kernel() {
+        // Big enough to cross the flops threshold; odd sizes exercise the
+        // 4-row microkernel remainder. The threaded split must be
+        // bit-identical to a serial pass (one dot per element either way).
+        let mut rng = Xoshiro256::seed_from_u64(22);
+        for &(m, k, n) in &[(130usize, 300, 70), (64, 256, 64), (7, 4096, 101)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(n, k, 1.0, &mut rng);
+            let got = matmul_transb(&a, &b);
+            let mut serial = Mat::zeros(m, n);
+            transb_rows(&a, &b, &mut serial, 0, m);
+            assert_eq!(got.as_slice(), serial.as_slice(), "({m},{k},{n})");
+            let want = matmul(&a, &b.transpose());
+            assert!(got.rel_fro_err(&want) < 1e-5, "({m},{k},{n})");
+        }
     }
 
     #[test]

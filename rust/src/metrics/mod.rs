@@ -144,6 +144,17 @@ pub struct Metrics {
     /// Positions rolled back by [`crate::kvcache::KvCache::truncate_seq`]
     /// (rejected speculative draft positions).
     pub kv_truncated_positions: AtomicU64,
+    // -- paged attention (zero-copy KV reads) ----------------------------
+    /// Bytes of K/V the attention kernel read **in place** from the paged
+    /// pool (pool precision, incl. u8 quantization meta).
+    pub attn_paged_reads_bytes: AtomicU64,
+    /// f32 scratch bytes the old gather path would have memcpy'd for those
+    /// same reads — copy traffic the zero-copy path avoided.
+    pub attn_gather_bytes_avoided: AtomicU64,
+    /// [`crate::kvcache::KvCache::gather`] calls. The steady-state decode
+    /// path reads in place, so serving keeps this at 0 — benches and the
+    /// serving regression test assert it.
+    pub attn_gather_calls: AtomicU64,
     // -- quantization (weights side) -------------------------------------
     /// Bytes the weights would occupy at f32.
     pub weight_bytes_f32: AtomicU64,
@@ -236,6 +247,14 @@ impl Metrics {
                     ("quantized_blocks", g(&self.kv_quantized_blocks)),
                     ("bytes_per_token", g(&self.kv_bytes_per_token)),
                     ("truncated_positions", g(&self.kv_truncated_positions)),
+                ]),
+            ),
+            (
+                "attn",
+                Json::obj(vec![
+                    ("paged_reads_bytes", g(&self.attn_paged_reads_bytes)),
+                    ("gather_bytes_avoided", g(&self.attn_gather_bytes_avoided)),
+                    ("gather_calls", g(&self.attn_gather_calls)),
                 ]),
             ),
             (
@@ -354,6 +373,18 @@ mod tests {
         let kv = j.get("kv_cache").unwrap();
         assert_eq!(kv.get("quantized_blocks").unwrap().as_u64(), Some(5));
         assert_eq!(kv.get("bytes_per_token").unwrap().as_u64(), Some(96));
+    }
+
+    #[test]
+    fn attn_gauges_in_json() {
+        let m = Metrics::new();
+        Metrics::set(&m.attn_paged_reads_bytes, 4096);
+        Metrics::set(&m.attn_gather_bytes_avoided, 8192);
+        let j = m.to_json();
+        let a = j.get("attn").unwrap();
+        assert_eq!(a.get("paged_reads_bytes").unwrap().as_u64(), Some(4096));
+        assert_eq!(a.get("gather_bytes_avoided").unwrap().as_u64(), Some(8192));
+        assert_eq!(a.get("gather_calls").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -39,19 +39,29 @@ impl HeadLayout {
 /// `q: (t, d)`, `k/v: (t, e)`; rows are positions `pos0..pos0+t` (RoPE is
 /// applied inside, so pass *unrotated* projections). Returns `(t, d)`.
 pub fn causal_attention(q: &Mat, k: &Mat, v: &Mat, layout: HeadLayout, pos0: usize) -> Mat {
-    let t = q.rows();
-    assert_eq!(q.cols(), layout.d(), "q width");
-    assert_eq!(k.cols(), layout.e(), "k width");
-    assert_eq!(v.cols(), layout.e(), "v width");
-    assert_eq!(k.rows(), t, "k rows");
-    assert_eq!(v.rows(), t, "v rows");
     let hd = layout.head_dim;
-    let scale = 1.0 / (hd as f32).sqrt();
-
     let mut q = q.clone();
     let mut k = k.clone();
     rope::apply(&mut q, hd, pos0, rope::BASE);
     rope::apply(&mut k, hd, pos0, rope::BASE);
+    causal_attention_rot(&q, &k, v, layout)
+}
+
+/// The allocation-free core of [`causal_attention`]: operates on
+/// **already-rotated** `q_rot`/`k_rot`, cloning nothing. The engine prefill
+/// goes straight here — it holds a rotated K anyway (the same rows it
+/// writes into the paged cache), so routing through the cloning wrapper
+/// would rotate K twice and copy both operands per layer.
+pub fn causal_attention_rot(q_rot: &Mat, k_rot: &Mat, v: &Mat, layout: HeadLayout) -> Mat {
+    let t = q_rot.rows();
+    assert_eq!(q_rot.cols(), layout.d(), "q width");
+    assert_eq!(k_rot.cols(), layout.e(), "k width");
+    assert_eq!(v.cols(), layout.e(), "v width");
+    assert_eq!(k_rot.rows(), t, "k rows");
+    assert_eq!(v.rows(), t, "v rows");
+    let hd = layout.head_dim;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (q, k) = (q_rot, k_rot);
 
     let mut out = Mat::zeros(t, layout.d());
     for h in 0..layout.n_heads {
@@ -265,6 +275,26 @@ mod tests {
         let out = causal_attention(&q, &k, &v, l, 0);
         for r in 0..3 {
             assert_eq!(&out.row(r)[0..hd], &out.row(r)[hd..2 * hd], "row {r}");
+        }
+    }
+
+    #[test]
+    fn rot_core_matches_cloning_wrapper() {
+        // Pre-rotating outside and calling the core must be bit-identical
+        // to the wrapper (the engine prefill relies on this).
+        let l = layout_gqa();
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let q = Mat::randn(5, l.d(), 0.5, &mut rng);
+        let k = Mat::randn(5, l.e(), 0.5, &mut rng);
+        let v = Mat::randn(5, l.e(), 0.5, &mut rng);
+        for pos0 in [0usize, 7] {
+            let want = causal_attention(&q, &k, &v, l, pos0);
+            let mut q_rot = q.clone();
+            let mut k_rot = k.clone();
+            rope::apply(&mut q_rot, l.head_dim, pos0, rope::BASE);
+            rope::apply(&mut k_rot, l.head_dim, pos0, rope::BASE);
+            let got = causal_attention_rot(&q_rot, &k_rot, &v, l);
+            assert_eq!(got.as_slice(), want.as_slice(), "pos0={pos0}");
         }
     }
 

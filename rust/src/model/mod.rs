@@ -18,6 +18,7 @@
 pub mod attention;
 pub mod ffn;
 pub mod forward;
+pub mod paged_attn;
 pub mod quant;
 pub mod residual;
 pub mod rope;

@@ -1,0 +1,466 @@
+//! Zero-copy paged attention: per-head scores → softmax → weighted-V
+//! computed **directly over the KV pool's block views**
+//! ([`crate::kvcache::BlockView`]), parallelized over the
+//! (sequence × query-head) grid.
+//!
+//! Two invariants make this the drop-in replacement for the old
+//! gather-then-[`attend_gathered`] decode path (DESIGN.md §Paged attention):
+//!
+//! 1. **Accumulation order.** For every (head, position) the kernel
+//!    executes the exact float-op sequence of [`attend_gathered`]: scaled
+//!    dot in element order, running max, exp + sum in position order, then
+//!    `out[i] += w * v[i]` in position order. Block boundaries only decide
+//!    *where* a row is read from, never *when* it is accumulated, and u8
+//!    rows dequantize in-register with the same `zero + scale * code`
+//!    expression `gather` uses — so outputs are **bit-identical** to the
+//!    gathered reference on both f32 and u8 pools.
+//! 2. **Disjoint outputs.** The parallel grid assigns each (item, head)
+//!    cell its own `out[row][h*hd..(h+1)*hd]` slice and shares no
+//!    accumulator, so results do not depend on thread count or schedule —
+//!    the same `AddrSendMut` discipline as the blocked GEMM.
+//!
+//! Inputs past the cached history (the current token's K/V, a verify
+//! step's earlier draft rows, a warm prefill's in-register suffix) ride
+//! along as [`KvSegment`] tails, appended logically after the views.
+
+use crate::kvcache::BlockView;
+use crate::linalg::gemm::AddrSendMut;
+use crate::model::attention::HeadLayout;
+use crate::tensor::Mat;
+use crate::util::threadpool;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread score scratch: one buffer per worker for the process
+    /// lifetime, so the decode hot loop allocates nothing per call.
+    static SCORES: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A run of in-register K/V rows (`n` rows of `e` floats each) attended
+/// after the cached history — raw, exactly as the old path extended its
+/// gather scratch from registers.
+#[derive(Clone, Copy)]
+pub struct KvSegment<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub n: usize,
+}
+
+impl<'a> KvSegment<'a> {
+    pub fn empty() -> Self {
+        Self { k: &[], v: &[], n: 0 }
+    }
+
+    /// Segment over `k.len() / e` rows of width `e`.
+    pub fn rows(k: &'a [f32], v: &'a [f32], e: usize) -> Self {
+        debug_assert_eq!(k.len() % e, 0, "k not row-aligned");
+        debug_assert_eq!(k.len(), v.len(), "k/v length mismatch");
+        Self { k, v, n: k.len() / e }
+    }
+}
+
+/// One query row's attention work: a rotated query, the sequence's cached
+/// history as block views, up to two in-register tail segments, and the
+/// output row it owns. `t` is the total position count
+/// (`cache_len + Σ tails.n`); items in one [`attend_batch`] call must have
+/// distinct `out_row`s (the parallel grid writes them concurrently).
+pub struct AttnItem<'a> {
+    pub q_rot: &'a [f32],
+    pub views: &'a [BlockView<'a>],
+    pub cache_len: usize,
+    pub tails: [KvSegment<'a>; 2],
+    pub t: usize,
+    pub out_row: usize,
+}
+
+/// The reference kernel: attention of one rotated query row over `t`
+/// gathered, contiguous K/V rows (`t × e` each). This is the old decode
+/// path's `attend_one`, kept verbatim as the bit-identity oracle for the
+/// paged kernel (property tests and benches diff against it) — production
+/// paths read in place via [`attend_paged`]/[`attend_batch`] instead.
+pub fn attend_gathered(
+    layout: HeadLayout,
+    q_rot: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    t: usize,
+    out: &mut [f32],
+) {
+    let hd = layout.head_dim;
+    let e = layout.e();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; t];
+    for h in 0..layout.n_heads {
+        let g = layout.kv_of(h);
+        let qh = &q_rot[h * hd..(h + 1) * hd];
+        for (r, s) in scores.iter_mut().enumerate() {
+            let krow = &keys[r * e + g * hd..r * e + (g + 1) * hd];
+            let mut acc = 0.0f32;
+            for i in 0..hd {
+                acc += qh[i] * krow[i];
+            }
+            *s = acc * scale;
+        }
+        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        let oh = &mut out[h * hd..(h + 1) * hd];
+        oh.fill(0.0);
+        for (r, &s) in scores.iter().enumerate() {
+            let w = s * inv;
+            let vrow = &vals[r * e + g * hd..r * e + (g + 1) * hd];
+            for i in 0..hd {
+                oh[i] += w * vrow[i];
+            }
+        }
+    }
+}
+
+/// One (item, head) cell of the paged kernel. Reads K/V in place from
+/// `views` then `tails`, writing the head's `hd` output floats. See the
+/// module docs for the order-preservation argument.
+fn attend_head(
+    layout: HeadLayout,
+    h: usize,
+    q_rot: &[f32],
+    views: &[BlockView<'_>],
+    tails: &[KvSegment<'_>; 2],
+    t: usize,
+    scores: &mut Vec<f32>,
+    out_head: &mut [f32],
+) {
+    let hd = layout.head_dim;
+    let e = layout.e();
+    let g = layout.kv_of(h);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let qh = &q_rot[h * hd..(h + 1) * hd];
+    scores.clear();
+    scores.resize(t, 0.0);
+    // pass 1: scaled dots, positions ascending across blocks then tails
+    let mut r = 0usize;
+    for view in views {
+        match *view {
+            BlockView::F32 { data, len, stride, e: ve } => {
+                debug_assert_eq!(ve, e);
+                for p in 0..len {
+                    let krow = &data[p * stride + g * hd..p * stride + (g + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for i in 0..hd {
+                        acc += qh[i] * krow[i];
+                    }
+                    scores[r] = acc * scale;
+                    r += 1;
+                }
+            }
+            BlockView::U8 { data, meta, len, stride, meta_stride, e: ve } => {
+                debug_assert_eq!(ve, e);
+                for p in 0..len {
+                    let kc = &data[p * stride + g * hd..p * stride + (g + 1) * hd];
+                    let m = &meta[p * meta_stride..p * meta_stride + 4];
+                    let (ks, kz) = (m[0], m[1]);
+                    let mut acc = 0.0f32;
+                    for i in 0..hd {
+                        // in-register dequant: same expression as gather
+                        acc += qh[i] * (kz + ks * kc[i] as f32);
+                    }
+                    scores[r] = acc * scale;
+                    r += 1;
+                }
+            }
+        }
+    }
+    for seg in tails {
+        for p in 0..seg.n {
+            let krow = &seg.k[p * e + g * hd..p * e + (g + 1) * hd];
+            let mut acc = 0.0f32;
+            for i in 0..hd {
+                acc += qh[i] * krow[i];
+            }
+            scores[r] = acc * scale;
+            r += 1;
+        }
+    }
+    debug_assert_eq!(r, t, "views + tails must cover t positions");
+    // pass 2: softmax, same op order as the gathered reference
+    let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - mx).exp();
+        sum += *s;
+    }
+    let inv = 1.0 / sum;
+    // pass 3: weighted V, positions ascending again
+    out_head.fill(0.0);
+    let mut r = 0usize;
+    for view in views {
+        match *view {
+            BlockView::F32 { data, len, stride, .. } => {
+                for p in 0..len {
+                    let w = scores[r] * inv;
+                    let vrow = &data[p * stride + e + g * hd..p * stride + e + (g + 1) * hd];
+                    for i in 0..hd {
+                        out_head[i] += w * vrow[i];
+                    }
+                    r += 1;
+                }
+            }
+            BlockView::U8 { data, meta, len, stride, meta_stride, .. } => {
+                for p in 0..len {
+                    let w = scores[r] * inv;
+                    let vc = &data[p * stride + e + g * hd..p * stride + e + (g + 1) * hd];
+                    let m = &meta[p * meta_stride..p * meta_stride + 4];
+                    let (vs, vz) = (m[2], m[3]);
+                    for i in 0..hd {
+                        out_head[i] += w * (vz + vs * vc[i] as f32);
+                    }
+                    r += 1;
+                }
+            }
+        }
+    }
+    for seg in tails {
+        for p in 0..seg.n {
+            let w = scores[r] * inv;
+            let vrow = &seg.v[p * e + g * hd..p * e + (g + 1) * hd];
+            for i in 0..hd {
+                out_head[i] += w * vrow[i];
+            }
+            r += 1;
+        }
+    }
+}
+
+/// Serial paged attention for one query row: all heads of one
+/// [`AttnItem`]'s work, into an output row of width `d`. `scores` is
+/// caller-owned scratch (cleared and resized here).
+pub fn attend_paged(
+    layout: HeadLayout,
+    q_rot: &[f32],
+    views: &[BlockView<'_>],
+    tails: &[KvSegment<'_>; 2],
+    t: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let hd = layout.head_dim;
+    debug_assert_eq!(out.len(), layout.d());
+    debug_assert_eq!(
+        views.iter().map(|b| b.len()).sum::<usize>() + tails.iter().map(|s| s.n).sum::<usize>(),
+        t
+    );
+    for h in 0..layout.n_heads {
+        attend_head(layout, h, q_rot, views, tails, t, scores, &mut out[h * hd..(h + 1) * hd]);
+    }
+}
+
+/// The batch driver: every `(item, head)` cell runs independently on the
+/// global thread pool (disjoint output slices, no shared accumulators —
+/// bit-identical to the serial order for any thread count). Small batches
+/// run inline: the grid dispatch costs more than the math below ~16k
+/// multiply-adds.
+pub fn attend_batch(layout: HeadLayout, items: &[AttnItem<'_>], out: &mut Mat) {
+    if items.is_empty() {
+        return;
+    }
+    let hd = layout.head_dim;
+    debug_assert_eq!(out.cols(), layout.d());
+    for it in items {
+        debug_assert_eq!(
+            it.views.iter().map(|b| b.len()).sum::<usize>(),
+            it.cache_len,
+            "views must cover exactly the cached history"
+        );
+        debug_assert_eq!(it.cache_len + it.tails.iter().map(|s| s.n).sum::<usize>(), it.t);
+    }
+    let n_heads = layout.n_heads;
+    let grid = items.len() * n_heads;
+    let work: usize = items.iter().map(|it| it.t).sum::<usize>() * n_heads * hd;
+    if grid == 1 || work < (1 << 14) || threadpool::global().n_threads() == 1 {
+        SCORES.with(|s| {
+            let scores = &mut *s.borrow_mut();
+            for it in items {
+                let row = out.row_mut(it.out_row);
+                attend_paged(layout, it.q_rot, it.views, &it.tails, it.t, scores, row);
+            }
+        });
+        return;
+    }
+    let out_ptr = AddrSendMut(out as *mut Mat);
+    threadpool::global().scope_chunks(grid, 1, move |g0, g1| {
+        // SAFETY: each grid cell owns the disjoint output slice
+        // (out_row, h*hd..(h+1)*hd); items have distinct out_rows and the
+        // pool joins before attend_batch returns (gemm's AddrSendMut rules).
+        let out = unsafe { &mut *out_ptr.get() };
+        SCORES.with(|s| {
+            let scores = &mut *s.borrow_mut();
+            for cell in g0..g1 {
+                let it = &items[cell / n_heads];
+                let h = cell % n_heads;
+                let out_head = &mut out.row_mut(it.out_row)[h * hd..(h + 1) * hd];
+                attend_head(layout, h, it.q_rot, it.views, &it.tails, it.t, scores, out_head);
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::kvcache::{CacheOpts, KvCache, SeqId};
+    use crate::util::rng::Xoshiro256;
+
+    fn layout_of(cfg: &ModelConfig) -> HeadLayout {
+        HeadLayout {
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim(),
+        }
+    }
+
+    fn fill_random(
+        c: &mut KvCache,
+        cfg: &ModelConfig,
+        id: SeqId,
+        n: usize,
+        rng: &mut Xoshiro256,
+    ) {
+        let e = cfg.e();
+        for _ in 0..n {
+            for layer in 0..cfg.n_layers {
+                let k = Mat::randn(1, e, 0.7, rng);
+                let v = Mat::randn(1, e, 0.7, rng);
+                c.append(id, layer, k.row(0), v.row(0)).unwrap();
+            }
+            c.advance(id).unwrap();
+        }
+    }
+
+    fn bits(x: &[f32]) -> Vec<u32> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Core property: paged output is BIT-identical to gather + reference,
+    /// across head layouts, precisions, block sizes, and history lengths
+    /// (partial and full tail blocks), with and without tail segments.
+    #[test]
+    fn paged_bit_identical_to_gathered_reference() {
+        for name in ["tiny-mha", "tiny-gqa", "tiny-mqa"] {
+            for quantized in [false, true] {
+                for bt in [1usize, 3, 16] {
+                    let cfg = ModelConfig::preset(name).unwrap();
+                    let layout = layout_of(&cfg);
+                    let e = cfg.e();
+                    let mut c = KvCache::with_opts(
+                        &cfg,
+                        bt,
+                        256 * 1024,
+                        CacheOpts { quantized, ..Default::default() },
+                    );
+                    let mut rng = Xoshiro256::seed_from_u64(7 + bt as u64);
+                    for t_cache in [1usize, 2, 5, 17] {
+                        let id = c.alloc_seq(t_cache).unwrap();
+                        fill_random(&mut c, &cfg, id, t_cache, &mut rng);
+                        let q = Mat::randn(1, layout.d(), 0.5, &mut rng);
+                        let tail = Mat::randn(2, 2 * e, 0.5, &mut rng);
+                        for n_tail in [0usize, 1, 2] {
+                            let t = t_cache + n_tail;
+                            let (tk, tv) = (
+                                &tail.as_slice()[..n_tail * e],
+                                &tail.as_slice()[e * 2..e * 2 + n_tail * e],
+                            );
+                            // reference: gather + extend + attend_gathered
+                            let (mut kg, mut vg) = (Vec::new(), Vec::new());
+                            c.gather(id, 0, &mut kg, &mut vg).unwrap();
+                            kg.extend_from_slice(tk);
+                            vg.extend_from_slice(tv);
+                            let mut want = vec![0.0f32; layout.d()];
+                            attend_gathered(layout, q.row(0), &kg, &vg, t, &mut want);
+                            // paged: views + tails, in place
+                            let views: Vec<_> =
+                                c.seq_block_views(id, 0).unwrap().collect();
+                            let tails =
+                                [KvSegment::rows(tk, tv, e), KvSegment::empty()];
+                            let mut got = vec![0.0f32; layout.d()];
+                            let mut scores = Vec::new();
+                            attend_paged(
+                                layout, q.row(0), &views, &tails, t, &mut scores, &mut got,
+                            );
+                            assert_eq!(
+                                bits(&got),
+                                bits(&want),
+                                "{name} kv8={quantized} bt={bt} t={t_cache}+{n_tail}"
+                            );
+                        }
+                        c.free_seq(id).unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    /// The threaded batch driver must agree bit-for-bit with the serial
+    /// kernel and be deterministic across runs (disjoint outputs, no shared
+    /// accumulators).
+    #[test]
+    fn batch_driver_matches_serial_and_is_deterministic() {
+        let cfg = ModelConfig::tiny_gqa();
+        let layout = layout_of(&cfg);
+        let e = cfg.e();
+        let mut c = KvCache::new(&cfg, 4, 256 * 1024);
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        // enough history that attend_batch takes the threaded path
+        // (tiny-gqa: Σt · n_heads · hd = 344 · 64 > the 1<<14 cutoff)
+        let lens = [80usize, 96, 64, 100];
+        let ids: Vec<SeqId> = lens
+            .iter()
+            .map(|&n| {
+                let id = c.alloc_seq(n).unwrap();
+                fill_random(&mut c, &cfg, id, n, &mut rng);
+                id
+            })
+            .collect();
+        let q = Mat::randn(lens.len(), layout.d(), 0.5, &mut rng);
+        let cur = Mat::randn(lens.len(), 2 * e, 0.5, &mut rng);
+        let mut views: Vec<BlockView> = Vec::new();
+        let mut ranges = Vec::new();
+        for &id in &ids {
+            let start = views.len();
+            views.extend(c.seq_block_views(id, 1).unwrap());
+            ranges.push((start, views.len()));
+        }
+        let items: Vec<AttnItem> = ids
+            .iter()
+            .enumerate()
+            .map(|(r, _)| AttnItem {
+                q_rot: q.row(r),
+                views: &views[ranges[r].0..ranges[r].1],
+                cache_len: lens[r],
+                tails: [
+                    KvSegment::rows(&cur.row(r)[..e], &cur.row(r)[e..], e),
+                    KvSegment::empty(),
+                ],
+                t: lens[r] + 1,
+                out_row: r,
+            })
+            .collect();
+        let mut serial = Mat::zeros(lens.len(), layout.d());
+        let mut scores = Vec::new();
+        for it in &items {
+            attend_paged(
+                layout, it.q_rot, it.views, &it.tails, it.t, &mut scores,
+                serial.row_mut(it.out_row),
+            );
+        }
+        let mut par1 = Mat::zeros(lens.len(), layout.d());
+        attend_batch(layout, &items, &mut par1);
+        let mut par2 = Mat::zeros(lens.len(), layout.d());
+        attend_batch(layout, &items, &mut par2);
+        assert_eq!(bits(par1.as_slice()), bits(serial.as_slice()));
+        assert_eq!(bits(par1.as_slice()), bits(par2.as_slice()));
+    }
+}

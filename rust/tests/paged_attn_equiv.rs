@@ -1,0 +1,252 @@
+//! Paged-vs-gathered bit-identity property suite.
+//!
+//! The zero-copy paged attention kernel must produce BYTE-equal output to
+//! the old gather-then-attend reference (`paged_attn::attend_gathered`,
+//! the pre-change decode kernel kept as the oracle) over:
+//!
+//!   {f32, u8 KV} × {MHA, GQA, MQA} × block_tokens ∈ {1, 3, 16}
+//!   × sequences spanning partial / CoW-forked / swap-resumed blocks,
+//!
+//! plus in-register tail segments (the current decode row, and a verify
+//! step's split roundtripped-tail + raw-row shape). Seeded pseudo-random
+//! contents throughout — failures reproduce.
+
+use skipless::config::ModelConfig;
+use skipless::kvcache::{BlockView, CacheOpts, KvCache, SeqId};
+use skipless::model::attention::HeadLayout;
+use skipless::model::paged_attn::{attend_batch, attend_gathered, attend_paged, AttnItem, KvSegment};
+use skipless::tensor::Mat;
+use skipless::util::rng::Xoshiro256;
+
+fn layout_of(cfg: &ModelConfig) -> HeadLayout {
+    HeadLayout {
+        n_heads: cfg.n_heads,
+        n_kv_heads: cfg.n_kv_heads,
+        head_dim: cfg.head_dim(),
+    }
+}
+
+fn fill_random(c: &mut KvCache, cfg: &ModelConfig, id: SeqId, n: usize, rng: &mut Xoshiro256) {
+    let e = cfg.e();
+    for _ in 0..n {
+        for layer in 0..cfg.n_layers {
+            let k = Mat::randn(1, e, 0.8, rng);
+            let v = Mat::randn(1, e, 0.8, rng);
+            c.append(id, layer, k.row(0), v.row(0)).unwrap();
+        }
+        c.advance(id).unwrap();
+    }
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Assert paged output over `id`'s views + `tails` is byte-equal to the
+/// gather + reference path on `layer`, for a fresh random query.
+fn assert_bit_identical(
+    c: &mut KvCache,
+    layout: HeadLayout,
+    id: SeqId,
+    layer: usize,
+    tails: &[KvSegment<'_>; 2],
+    rng: &mut Xoshiro256,
+    tag: &str,
+) {
+    let q = Mat::randn(1, layout.d(), 0.5, rng);
+    let n_tail: usize = tails.iter().map(|s| s.n).sum();
+    // reference: copy the history out, splice the tails on, attend
+    let (mut kg, mut vg) = (Vec::new(), Vec::new());
+    let t_cache = c.gather(id, layer, &mut kg, &mut vg).unwrap();
+    for seg in tails {
+        kg.extend_from_slice(seg.k);
+        vg.extend_from_slice(seg.v);
+    }
+    let t = t_cache + n_tail;
+    let mut want = vec![0.0f32; layout.d()];
+    attend_gathered(layout, q.row(0), &kg, &vg, t, &mut want);
+    // paged: same query, zero-copy views
+    let views: Vec<BlockView> = c.seq_block_views(id, layer).unwrap().collect();
+    let mut got = vec![0.0f32; layout.d()];
+    let mut scores = Vec::new();
+    attend_paged(layout, q.row(0), &views, tails, t, &mut scores, &mut got);
+    assert_eq!(bits(&got), bits(&want), "{tag}: paged != gathered");
+}
+
+/// The headline grid: layouts × precisions × block sizes × history lengths
+/// (full and partial tail blocks) × tail shapes.
+#[test]
+fn paged_matches_gathered_across_layouts_precisions_block_sizes() {
+    for name in ["tiny-mha", "tiny-gqa", "tiny-mqa"] {
+        for quantized in [false, true] {
+            for bt in [1usize, 3, 16] {
+                let cfg = ModelConfig::preset(name).unwrap();
+                let layout = layout_of(&cfg);
+                let e = cfg.e();
+                let mut c = KvCache::with_opts(
+                    &cfg,
+                    bt,
+                    512 * 1024,
+                    CacheOpts { quantized, ..Default::default() },
+                );
+                let mut rng = Xoshiro256::seed_from_u64(40 + bt as u64);
+                for t_cache in [1usize, 3, 8, 19, 32] {
+                    let id = c.alloc_seq(t_cache).unwrap();
+                    fill_random(&mut c, &cfg, id, t_cache, &mut rng);
+                    let tail = Mat::randn(4, e, 0.5, &mut rng);
+                    for layer in 0..cfg.n_layers {
+                        let tag =
+                            format!("{name} kv8={quantized} bt={bt} t={t_cache} layer={layer}");
+                        // bare history (no tail)
+                        assert_bit_identical(
+                            &mut c, layout, id, layer,
+                            &[KvSegment::empty(), KvSegment::empty()],
+                            &mut rng, &tag,
+                        );
+                        // decode shape: one raw in-register row
+                        assert_bit_identical(
+                            &mut c, layout, id, layer,
+                            &[
+                                KvSegment::rows(tail.row(0), tail.row(1), e),
+                                KvSegment::empty(),
+                            ],
+                            &mut rng, &tag,
+                        );
+                        // verify shape: roundtripped tail + raw current row
+                        assert_bit_identical(
+                            &mut c, layout, id, layer,
+                            &[
+                                KvSegment::rows(tail.row(0), tail.row(1), e),
+                                KvSegment::rows(tail.row(2), tail.row(3), e),
+                            ],
+                            &mut rng, &tag,
+                        );
+                    }
+                    c.free_seq(id).unwrap();
+                }
+            }
+        }
+    }
+}
+
+/// CoW-forked sequences: after a fork diverges inside a shared tail block,
+/// both the fork and the original must stay bit-identical to their own
+/// gathered reference (views follow each sequence's own block table).
+#[test]
+fn paged_matches_gathered_across_cow_forks() {
+    for quantized in [false, true] {
+        let cfg = ModelConfig::tiny_gqa();
+        let layout = layout_of(&cfg);
+        let mut c = KvCache::with_opts(
+            &cfg,
+            4,
+            512 * 1024,
+            CacheOpts { quantized, ..Default::default() },
+        );
+        let mut rng = Xoshiro256::seed_from_u64(50);
+        let id = c.alloc_seq(6).unwrap();
+        fill_random(&mut c, &cfg, id, 6, &mut rng);
+        let f = c.fork_seq(id).unwrap();
+        fill_random(&mut c, &cfg, f, 1, &mut rng); // CoW in shared tail block
+        fill_random(&mut c, &cfg, id, 2, &mut rng); // original diverges too
+        for seq in [id, f] {
+            for layer in 0..cfg.n_layers {
+                assert_bit_identical(
+                    &mut c, layout, seq, layer,
+                    &[KvSegment::empty(), KvSegment::empty()],
+                    &mut rng,
+                    &format!("kv8={quantized} cow seq={seq:?} layer={layer}"),
+                );
+            }
+        }
+    }
+}
+
+/// Swap-resumed sequences: a swap-out/swap-in cycle (blocks restored into
+/// different physical slots, prefix blocks possibly re-borrowed) must not
+/// perturb the paged read path.
+#[test]
+fn paged_matches_gathered_after_swap_resume() {
+    for quantized in [false, true] {
+        let cfg = ModelConfig::tiny_gqa();
+        let layout = layout_of(&cfg);
+        let mut c = KvCache::with_opts(
+            &cfg,
+            4,
+            512 * 1024,
+            CacheOpts { quantized, ..Default::default() },
+        );
+        let mut rng = Xoshiro256::seed_from_u64(60);
+        let id = c.alloc_seq(7).unwrap();
+        fill_random(&mut c, &cfg, id, 7, &mut rng);
+        c.swap_out(id).unwrap();
+        // churn the pool so restored blocks land elsewhere
+        let other = c.alloc_seq(8).unwrap();
+        fill_random(&mut c, &cfg, other, 8, &mut rng);
+        c.free_seq(other).unwrap();
+        c.swap_in(id).unwrap();
+        for layer in 0..cfg.n_layers {
+            assert_bit_identical(
+                &mut c, layout, id, layer,
+                &[KvSegment::empty(), KvSegment::empty()],
+                &mut rng,
+                &format!("kv8={quantized} swap layer={layer}"),
+            );
+        }
+    }
+}
+
+/// The threaded (sequence × head) batch driver must agree bit-for-bit with
+/// per-item serial evaluation over a mixed-length batch.
+#[test]
+fn batch_grid_bit_identical_to_serial() {
+    let cfg = ModelConfig::tiny_gqa();
+    let layout = layout_of(&cfg);
+    let e = cfg.e();
+    let mut c = KvCache::new(&cfg, 4, 512 * 1024);
+    let mut rng = Xoshiro256::seed_from_u64(70);
+    let lens = [33usize, 64, 47, 80, 5, 71];
+    let ids: Vec<SeqId> = lens
+        .iter()
+        .map(|&n| {
+            let id = c.alloc_seq(n).unwrap();
+            fill_random(&mut c, &cfg, id, n, &mut rng);
+            id
+        })
+        .collect();
+    let q = Mat::randn(lens.len(), layout.d(), 0.5, &mut rng);
+    let cur = Mat::randn(lens.len(), 2 * e, 0.5, &mut rng);
+    let mut views: Vec<BlockView> = Vec::new();
+    let mut ranges = Vec::new();
+    for &id in &ids {
+        let start = views.len();
+        views.extend(c.seq_block_views(id, 0).unwrap());
+        ranges.push((start, views.len()));
+    }
+    let items: Vec<AttnItem> = ids
+        .iter()
+        .enumerate()
+        .map(|(r, _)| AttnItem {
+            q_rot: q.row(r),
+            views: &views[ranges[r].0..ranges[r].1],
+            cache_len: lens[r],
+            tails: [
+                KvSegment::rows(&cur.row(r)[..e], &cur.row(r)[e..], e),
+                KvSegment::empty(),
+            ],
+            t: lens[r] + 1,
+            out_row: r,
+        })
+        .collect();
+    let mut serial = Mat::zeros(lens.len(), layout.d());
+    let mut scores = Vec::new();
+    for it in &items {
+        attend_paged(
+            layout, it.q_rot, it.views, &it.tails, it.t, &mut scores,
+            serial.row_mut(it.out_row),
+        );
+    }
+    let mut parallel = Mat::zeros(lens.len(), layout.d());
+    attend_batch(layout, &items, &mut parallel);
+    assert_eq!(bits(parallel.as_slice()), bits(serial.as_slice()));
+}

@@ -162,6 +162,23 @@ fn metrics_expose_kv_and_quant_counters_over_the_wire() {
         kv.get("blocks_cached").unwrap().as_u64().unwrap() > 0,
         "finished prompt blocks should sit in the reclaimable prefix cache"
     );
+    // paged attention: decode/warm-prefill attention read the u8 pool in
+    // place — live byte counters, and NOT ONE gather copy on the hot path
+    let attn = metrics.get("attn").unwrap();
+    assert!(
+        attn.get("paged_reads_bytes").unwrap().as_u64().unwrap() > 0,
+        "decode must read the paged pool in place"
+    );
+    assert!(
+        attn.get("gather_bytes_avoided").unwrap().as_u64().unwrap()
+            > attn.get("paged_reads_bytes").unwrap().as_u64().unwrap(),
+        "u8 pool: in-place bytes must undercut the avoided f32 copy"
+    );
+    assert_eq!(
+        attn.get("gather_calls").unwrap().as_u64(),
+        Some(0),
+        "the serving path must never gather-copy KV"
+    );
     // weight-side quant counters match the engine's model exactly
     let quant = metrics.get("quant").unwrap();
     assert_eq!(quant.get("weight_bytes_f32").unwrap().as_u64(), Some(f32_bytes));
