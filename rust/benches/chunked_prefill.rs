@@ -1,0 +1,207 @@
+//! Chunked-prefill bench: mixed interactive + long-prompt serving, chunked
+//! (token-budgeted) versus full-prompt admission.
+//!
+//! The quantity that matters for a mixed workload is **interactive TTFT
+//! under long-prompt interference**: with full-prompt admission, one long
+//! prompt's prefill monopolizes an entire step, and every short request
+//! that arrived behind it eats that wall time before its own (tiny)
+//! prefill can run. With a token budget, the long prompt advances a chunk
+//! per step while short requests admit, prefill, and decode alongside —
+//! TTFT stays flat and decode throughput is preserved because chunk rows
+//! share the fused step's weight traffic with the decode rows. Both modes
+//! must produce byte-identical streams (chunked prefill is bit-identical
+//! to monolithic; asserted here). Emits `BENCH_chunked_prefill.json`
+//! (schema in EXPERIMENTS.md); `SKIPLESS_BENCH_QUICK=1` shrinks the model
+//! and token counts for CI.
+
+use skipless::config::{AttentionKind, BlockLayout, FfnKind, ModelConfig};
+use skipless::coordinator::{CpuEngine, Request, Scheduler, SchedulerCfg};
+use skipless::metrics::Metrics;
+use skipless::model::ModelWeights;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Mid-size GQA model with room for a genuinely long prompt.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        name: "chunked-bench-30m".into(),
+        dim: 256,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 2,
+        hidden_dim: 1024,
+        vocab_size: 512,
+        max_seq_len: 1536,
+        attention: AttentionKind::Gqa,
+        layout: BlockLayout::Serial,
+        ffn: FfnKind::Mlp,
+        tied_embeddings: false,
+    }
+}
+
+struct Workload {
+    shorts_a: Vec<Request>,
+    long_req: Request,
+    shorts_b: Vec<Request>,
+}
+
+fn workload(cfg: &ModelConfig, quick: bool) -> Workload {
+    let vocab = cfg.vocab_size as u32;
+    let (n_short, short_new, long_len, long_new) =
+        if quick { (3usize, 8usize, 96usize, 4usize) } else { (3, 64, 768, 8) };
+    let mk_short = |id: u64| {
+        let prompt: Vec<u32> = (0..8).map(|j| (id as u32 * 37 + j * 11 + 1) % vocab).collect();
+        Request::greedy(id, prompt, short_new)
+    };
+    Workload {
+        shorts_a: (0..n_short as u64).map(mk_short).collect(),
+        long_req: Request::greedy(
+            100,
+            (0..long_len).map(|j| (j as u32 * 13 + 7) % vocab).collect(),
+            long_new,
+        ),
+        shorts_b: (n_short as u64..2 * n_short as u64).map(mk_short).collect(),
+    }
+}
+
+struct RunStats {
+    tokens: Vec<(u64, Vec<u32>)>,
+    /// TTFT (from submission) of the interactive short requests, µs.
+    short_ttft_us: Vec<u64>,
+    decode_tok_per_s: f64,
+    wall_s: f64,
+    chunks: u64,
+}
+
+fn run(w: &ModelWeights, sched: SchedulerCfg, wl: &Workload, budget: usize) -> RunStats {
+    let metrics = Arc::new(Metrics::new());
+    let mut s = Scheduler::new(CpuEngine::new(w.clone(), 16, budget), sched, Arc::clone(&metrics));
+    let t0 = Instant::now();
+    // phase 1: interactive requests settle into steady decode
+    for r in &wl.shorts_a {
+        s.submit(r.clone());
+    }
+    s.step(); // admit + prefill
+    s.step(); // first decode
+    // phase 2: the long prompt lands with more interactive requests right
+    // behind it — the head-of-line-blocking trap. Under full-prompt
+    // admission the next step prefills all 768 long-prompt tokens before
+    // any of these shorts can produce a token; under a token budget the
+    // shorts admit and finish their tiny prefills alongside the first
+    // chunk.
+    s.submit(wl.long_req.clone());
+    for r in &wl.shorts_b {
+        s.submit(r.clone());
+    }
+    let mut done = s.run_to_completion();
+    let wall_s = t0.elapsed().as_secs_f64();
+    done.sort_by_key(|r| r.id);
+    let short_ids: Vec<u64> = wl
+        .shorts_a
+        .iter()
+        .chain(&wl.shorts_b)
+        .map(|r| r.id)
+        .collect();
+    let short_ttft_us = done
+        .iter()
+        .filter(|r| short_ids.contains(&r.id))
+        .map(|r| r.ttft.as_micros() as u64)
+        .collect();
+    let decoded = metrics.tokens_decoded.load(Ordering::Relaxed);
+    RunStats {
+        tokens: done.into_iter().map(|r| (r.id, r.tokens)).collect(),
+        short_ttft_us,
+        decode_tok_per_s: decoded as f64 / wall_s,
+        wall_s,
+        chunks: metrics.prefill_chunks.load(Ordering::Relaxed),
+    }
+}
+
+fn p95(xs: &[u64]) -> u64 {
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v[((v.len() as f64 * 0.95).ceil() as usize - 1).min(v.len() - 1)]
+}
+
+fn main() {
+    println!("# chunked_prefill — token-budgeted continuous batching vs full-prompt admission");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let cfg = if quick { ModelConfig::tiny_gqa() } else { bench_config() };
+    eprintln!("  initializing {}...", cfg.name);
+    let w = ModelWeights::init_vanilla(&cfg, 2027);
+    let wl = workload(&cfg, quick);
+    let pool = 256 << 20;
+
+    let (tb, ct) = if quick { (24, 16) } else { (192, 128) };
+    let chunked = run(
+        &w,
+        SchedulerCfg {
+            token_budget_per_step: tb,
+            chunk_tokens: ct,
+            ..Default::default()
+        },
+        &wl,
+        pool,
+    );
+    // "full" mode: budget and chunk far beyond any prompt — every
+    // admission prefills its entire prompt inside one step
+    let full = run(
+        &w,
+        SchedulerCfg {
+            token_budget_per_step: usize::MAX / 2,
+            chunk_tokens: usize::MAX / 2,
+            ..Default::default()
+        },
+        &wl,
+        pool,
+    );
+
+    // the correctness headline: budgeting changes WHEN work runs, never
+    // what it computes
+    assert_eq!(chunked.tokens, full.tokens, "chunking changed the generated streams");
+    assert!(chunked.chunks > full.chunks, "budgeted run never actually chunked");
+
+    let p95_chunked = p95(&chunked.short_ttft_us).max(1);
+    let p95_full = p95(&full.short_ttft_us).max(1);
+    let ttft_x = p95_full as f64 / p95_chunked as f64;
+    let decode_ratio = chunked.decode_tok_per_s / full.decode_tok_per_s.max(1e-12);
+    eprintln!(
+        "  full    : short-TTFT p95 {:>9}µs   decode {:>8.1} tok/s   wall {:.2}s   {} chunks",
+        p95_full, full.decode_tok_per_s, full.wall_s, full.chunks
+    );
+    eprintln!(
+        "  chunked : short-TTFT p95 {:>9}µs   decode {:>8.1} tok/s   wall {:.2}s   {} chunks",
+        p95_chunked, chunked.decode_tok_per_s, chunked.wall_s, chunked.chunks
+    );
+    eprintln!("  interactive p95 TTFT improvement: {ttft_x:.2}x   decode-throughput ratio: {decode_ratio:.2}");
+    println!(
+        "{{\"suite\":\"chunked_prefill\",\"case\":\"mixed\",\"ttft_p95_improvement_x\":{ttft_x:.4},\"decode_throughput_ratio\":{decode_ratio:.4}}}"
+    );
+    // acceptance bar (full mode): ≥2x interactive p95 TTFT improvement
+    // with no decode-throughput regression
+    if !quick {
+        assert!(
+            ttft_x >= 2.0,
+            "p95 TTFT improved only {ttft_x:.2}x under the long-prompt mix"
+        );
+        assert!(
+            decode_ratio >= 0.9,
+            "chunking regressed decode throughput to {decode_ratio:.2}x"
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"suite\": \"chunked_prefill\",\n  \"model\": \"{}\",\n  \"token_budget_per_step\": {tb},\n  \"chunk_tokens\": {ct},\n  \"long_prompt_tokens\": {},\n  \"interactive_requests\": {},\n  \"identical_output\": true,\n  \"prefill_chunks\": {},\n  \"ttft_p95_short_chunked_us\": {p95_chunked},\n  \"ttft_p95_short_full_us\": {p95_full},\n  \"ttft_p95_improvement_x\": {ttft_x:.4},\n  \"decode_tok_per_s_chunked\": {:.2},\n  \"decode_tok_per_s_full\": {:.2},\n  \"decode_throughput_ratio\": {decode_ratio:.4},\n  \"wall_chunked_s\": {:.4},\n  \"wall_full_s\": {:.4}\n}}\n",
+        cfg.name,
+        wl.long_req.prompt.len(),
+        wl.shorts_a.len() + wl.shorts_b.len(),
+        chunked.chunks,
+        chunked.decode_tok_per_s,
+        full.decode_tok_per_s,
+        chunked.wall_s,
+        full.wall_s,
+    );
+    std::fs::write("BENCH_chunked_prefill.json", &json).expect("write BENCH_chunked_prefill.json");
+    eprintln!("  wrote BENCH_chunked_prefill.json");
+}

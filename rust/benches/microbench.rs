@@ -98,19 +98,20 @@ fn main() {
     b.finish();
 
     // ---- scheduler-policy ablation (DESIGN.md §Perf: batching policy) ----
-    // 16 requests × 8 tokens; sweep admission aggressiveness and the
-    // max-running cap; report wall, TTFT p95 and throughput. More admits
-    // per step raises throughput but lets prefills stall running decodes
+    // 16 requests × 8 tokens; sweep the per-step token budget and the
+    // max-running cap; report wall, TTFT p95 and throughput. A bigger
+    // budget admits/prefills more aggressively per step, raising
+    // throughput but letting prompt work crowd running decodes
     // (TTFT/TPOT interference) — the classic continuous-batching tradeoff.
     eprintln!("\n  scheduler ablation (16 req × 8 tok, tiny-gqa):");
-    eprintln!("  admits/step  max_running   wall        ttft p95     tok/s");
-    for (admits, max_running) in [(1usize, 2usize), (1, 8), (4, 8), (16, 16)] {
+    eprintln!("  budget/step  max_running   wall        ttft p95     tok/s");
+    for (budget, max_running) in [(32usize, 2usize), (32, 8), (128, 8), (512, 16)] {
         let metrics = Arc::new(Metrics::new());
         let mut s = Scheduler::new(
             CpuEngine::new(w.clone(), 16, 64 << 20),
             SchedulerCfg {
                 max_running,
-                admits_per_step: admits,
+                token_budget_per_step: budget,
                 ..Default::default()
             },
             Arc::clone(&metrics),
@@ -125,14 +126,14 @@ fn main() {
         let toks: usize = done.iter().map(|r| r.tokens.len()).sum();
         eprintln!(
             "  {:>11}  {:>11}   {:>9}   {:>9}   {:>7.0}",
-            admits,
+            budget,
             max_running,
             skipless::util::bench::fmt_dur(wall),
             skipless::util::bench::fmt_dur(metrics.ttft.quantile(0.95)),
             toks as f64 / wall.as_secs_f64()
         );
         println!(
-            "{{\"suite\":\"scheduler_ablation\",\"admits\":{admits},\"max_running\":{max_running},\"wall_us\":{:.1},\"ttft_p95_us\":{},\"tok_per_s\":{:.1}}}",
+            "{{\"suite\":\"scheduler_ablation\",\"token_budget\":{budget},\"max_running\":{max_running},\"wall_us\":{:.1},\"ttft_p95_us\":{},\"tok_per_s\":{:.1}}}",
             wall.as_secs_f64() * 1e6,
             metrics.ttft.quantile(0.95).as_micros(),
             toks as f64 / wall.as_secs_f64()

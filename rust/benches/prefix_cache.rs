@@ -40,7 +40,6 @@ fn run(
         CpuEngine::with_cache_opts(w.clone(), block_tokens, budget, opts),
         SchedulerCfg {
             max_running: 32,
-            admits_per_step: 4,
             ..Default::default()
         },
         Arc::clone(&metrics),

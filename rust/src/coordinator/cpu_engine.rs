@@ -1,10 +1,13 @@
 //! Pure-Rust engine: the [`crate::model`] forward pass run against the
-//! paged [`crate::kvcache`], with **batched decode** — the projections and
-//! FFN of all running sequences execute as shared GEMMs `(B,d)·(d,·)`, so
-//! each weight matrix is streamed from memory once per step rather than
-//! once per sequence. That is precisely the weights-bandwidth economics the
+//! paged [`crate::kvcache`], with a **fused continuous-batching step** —
+//! the projections and FFN of all running sequences, decode rows and
+//! prefill-chunk rows alike, execute as shared GEMMs `(rows,d)·(d,·)`, so
+//! each weight matrix is streamed from memory once per step regardless of
+//! the phase mix. That is precisely the weights-bandwidth economics the
 //! paper's §3 speedup model assumes, which makes this engine a faithful
-//! testbed for the vanilla-vs-merged decode benchmarks.
+//! testbed for the vanilla-vs-merged decode benchmarks — and what makes
+//! chunked prefill nearly free here: a prompt chunk rides the GEMMs the
+//! step was already running for its decode rows.
 //!
 //! Attention reads the KV history **in place**: every per-token step takes
 //! zero-copy [`BlockView`]s over the sequence's physical cache blocks and
@@ -16,7 +19,9 @@
 //! step stays bit-identical to the same tokens decoded one at a time.
 
 use crate::config::{BlockLayout, ModelConfig, Variant};
-use crate::coordinator::engine::{DecodeInput, Engine, EngineError, VerifyInput};
+use crate::coordinator::engine::{
+    ChunkInput, DecodeInput, Engine, EngineError, StepOutput, VerifyInput,
+};
 use crate::kvcache::{BlockView, CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
 use crate::model::attention::{causal_attention_rot, HeadLayout};
 use crate::model::ffn::ffn_forward;
@@ -25,11 +30,39 @@ use crate::model::{rope, ModelWeights, Weight};
 use crate::tensor::Mat;
 use std::collections::BTreeMap;
 
+/// In-flight chunked prefill bookkeeping for one sequence
+/// ([`Engine::prefill_begin`] .. the chunk that completes the prompt).
+struct ChunkState {
+    /// The full prompt; the prefill completes when `filled == prompt.len()`.
+    prompt: Vec<u32>,
+    /// Prefix positions borrowed from the prefix index at admission.
+    /// Attention reads them through block views (pool precision) — exactly
+    /// what a monolithic warm prefill does.
+    reused: usize,
+    /// Prompt positions whose K/V sit in the cache (`>= reused`).
+    filled: usize,
+    /// Prompt positions registered in the prefix index (a multiple of
+    /// `block_tokens`, advanced at chunk boundaries as blocks fill), so a
+    /// still-prefilling prompt shares exactly its finished blocks.
+    registered: usize,
+    /// u8 pools only: the raw rotated-K / raw-V rows of positions
+    /// `reused..filled`, per layer. A monolithic prefill attends its own
+    /// computed positions from registers (raw f32); reading them back from
+    /// a quantized pool would break bit-identity with that path, so the
+    /// chunked continuation carries them across steps. Freed when the
+    /// prefill completes; a monolithic prefill holds the same rows live in
+    /// `layer_kv` for its whole (longer) step, so peak memory is no worse.
+    raw: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
 pub struct CpuEngine {
     weights: ModelWeights,
     cache: KvCache,
     /// live sequence positions (mirrors cache state, for fast checks)
     positions: BTreeMap<SeqId, usize>,
+    /// sequences admitted via [`Engine::prefill_begin`] whose prompt is not
+    /// yet fully prefilled; such sequences cannot decode or verify
+    chunking: BTreeMap<SeqId, ChunkState>,
 }
 
 fn capacity(e: CacheError) -> EngineError {
@@ -61,6 +94,7 @@ impl CpuEngine {
             weights,
             cache,
             positions: BTreeMap::new(),
+            chunking: BTreeMap::new(),
         }
     }
 
@@ -232,6 +266,21 @@ impl Engine for CpuEngine {
     }
 
     fn swap_out(&mut self, seq: SeqId) -> Result<(), EngineError> {
+        // A mid-prefill sequence on a u8 pool carries raw f32 tails
+        // (ChunkState::raw) ~4x the size of the u8 blocks a swap would
+        // spill — swapping it "out" would keep the larger shadow resident
+        // outside every budget. Refuse; the scheduler's recompute
+        // preemption (release + deterministic replay) actually frees the
+        // memory. f32 pools carry no tails and swap mid-prefill freely.
+        if let Some(st) = self.chunking.get(&seq) {
+            if !st.raw.is_empty() && st.filled > st.reused {
+                return Err(EngineError::Backend(
+                    "mid-prefill swap on a quantized pool would keep raw f32 tails \
+                     resident; recompute-preempt instead"
+                        .into(),
+                ));
+            }
+        }
         // positions entry is kept: the sequence is still logically alive
         self.cache.swap_out(seq).map(|_| ()).map_err(|e| match e {
             CacheError::UnknownSeq(_) => EngineError::BadSequence(e.to_string()),
@@ -255,21 +304,105 @@ impl Engine for CpuEngine {
     }
 
     fn decode_batch(&mut self, inputs: &[DecodeInput]) -> Result<Vec<Vec<f32>>, EngineError> {
-        if inputs.is_empty() {
-            return Ok(Vec::new());
+        // one implementation: a fused step with zero chunk rows
+        Ok(self.step_batch(inputs, &[])?.decode_logits)
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_begin(&mut self, tokens: &[u32]) -> Result<(SeqId, usize), EngineError> {
+        if tokens.is_empty() {
+            return Err(EngineError::BadSequence("empty prompt".into()));
         }
-        let bsz = inputs.len();
+        let (id, reused) = self.cache.alloc_seq_prefix(tokens).map_err(capacity)?;
+        self.positions.insert(id, reused);
+        let raw = if self.cache.quantized() {
+            vec![(Vec::new(), Vec::new()); self.weights.blocks.len()]
+        } else {
+            Vec::new()
+        };
+        self.chunking.insert(
+            id,
+            ChunkState {
+                prompt: tokens.to_vec(),
+                reused,
+                filled: reused,
+                registered: reused,
+                raw,
+            },
+        );
+        Ok((id, reused))
+    }
+
+    fn prefill_pending_prefix(&self, tokens: &[u32]) -> bool {
+        if !self.cache.prefix_sharing_enabled() {
+            return false; // nothing will ever register — deferring would only stall
+        }
+        let bt = self.cache.block_tokens();
+        if tokens.len() <= bt {
+            return false; // nothing shareable: the last position always recomputes
+        }
+        self.chunking.values().any(|st| {
+            // full-block prefix this prompt could eventually borrow from
+            // the in-flight prefill (the engine always recomputes the last
+            // prompt position, hence the len-1 cap, mirroring the index
+            // probe)
+            let common = tokens
+                .iter()
+                .zip(&st.prompt)
+                .take_while(|(a, b)| a == b)
+                .count();
+            let share_cap = (common.min(tokens.len() - 1) / bt) * bt;
+            share_cap > st.registered
+        })
+    }
+
+    /// The fused continuous-batching step (see the trait docs): decode rows
+    /// and prefill-chunk rows flatten into ONE `(rows, d)` activation
+    /// matrix, so the per-layer projections, FFN, and the paged-attention
+    /// grid each run once for the whole phase mix — every weight matrix is
+    /// streamed from memory once per step.
+    ///
+    /// Bit-identity, per row kind:
+    /// * decode rows execute the exact op sequence of the old standalone
+    ///   `decode_batch` (row-independent GEMMs, per-item attention);
+    /// * chunk rows reproduce the monolithic prefill: a leading chunk with
+    ///   no history runs the same `causal_attention_rot` kernel, and
+    ///   continuation chunks attend cached history in place + their own
+    ///   rows from registers — the same segment layout the warm-prefill
+    ///   continuation has always used. On a u8 pool the positions this
+    ///   prefill computed in *earlier* chunks are re-read from raw f32
+    ///   tails carried in [`ChunkState`], never from the quantized pool,
+    ///   because that is what a monolithic prefill (which holds them in
+    ///   registers) would see.
+    fn step_batch(
+        &mut self,
+        decodes: &[DecodeInput],
+        chunks: &[ChunkInput],
+    ) -> Result<StepOutput, EngineError> {
+        if decodes.is_empty() && chunks.is_empty() {
+            return Ok(StepOutput::default());
+        }
         let cfg = self.weights.cfg.clone();
         let hd = cfg.head_dim();
         let layout = self.head_layout();
         let e = layout.e();
         let layout_kind = cfg.layout;
-        // batched embedding lookup: (B, d)
-        let toks: Vec<u32> = inputs.iter().map(|i| i.token).collect();
-        let mut x = self.weights.embed_tokens(&toks);
-        // per-seq positions (checked up front)
-        let mut pos = Vec::with_capacity(bsz);
-        for i in inputs {
+        let quantized_pool = self.cache.quantized();
+
+        // ---- validate + reserve up front (fail before any state change) -
+        let nd = decodes.len();
+        let mut dec_pos = Vec::with_capacity(nd);
+        let mut fresh_needed = 0usize;
+        for i in decodes {
+            if self.chunking.contains_key(&i.seq) {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?} is still prefilling",
+                    i.seq
+                )));
+            }
             let p = *self
                 .positions
                 .get(&i.seq)
@@ -280,26 +413,104 @@ impl Engine for CpuEngine {
                     i.seq, cfg.max_seq_len
                 )));
             }
-            pos.push(p);
+            fresh_needed += self.cache.blocks_to_grow(i.seq, 1);
+            dec_pos.push(p);
         }
+        // (start, reused) per chunk; the chunk's own blocks were all
+        // reserved at prefill_begin, so chunks never need fresh blocks
+        let mut chunk_meta = Vec::with_capacity(chunks.len());
+        for (ci, c) in chunks.iter().enumerate() {
+            if chunks[..ci].iter().any(|o| o.seq == c.seq) {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?} appears twice in one fused step",
+                    c.seq
+                )));
+            }
+            let st = self.chunking.get(&c.seq).ok_or_else(|| {
+                EngineError::BadSequence(format!("{:?} has no chunked prefill in flight", c.seq))
+            })?;
+            if c.tokens.is_empty() {
+                return Err(EngineError::BadSequence("empty prefill chunk".into()));
+            }
+            if st.filled + c.tokens.len() > st.prompt.len() {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?}: chunk overruns the prompt",
+                    c.seq
+                )));
+            }
+            // integrity-critical: the prefix index will hash st.prompt's
+            // tokens over the blocks these rows fill, so a mismatch would
+            // poison the shared cache for unrelated requests
+            if c.tokens[..] != st.prompt[st.filled..st.filled + c.tokens.len()] {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?}: chunk tokens do not continue the admitted prompt",
+                    c.seq
+                )));
+            }
+            chunk_meta.push((st.filled, st.reused));
+        }
+        if fresh_needed > self.cache.free_blocks() {
+            return Err(EngineError::CapacityExhausted(format!(
+                "fused step needs {fresh_needed} blocks, {} free",
+                self.cache.free_blocks()
+            )));
+        }
+
+        // ---- flattened row layout: decode rows first, then chunk rows ---
+        let mut toks: Vec<u32> = decodes.iter().map(|i| i.token).collect();
+        let mut chunk_row0 = Vec::with_capacity(chunks.len());
+        for c in chunks {
+            chunk_row0.push(toks.len());
+            toks.extend_from_slice(&c.tokens);
+        }
+        let total_rows = toks.len();
+        let mut x = self.weights.embed_tokens(&toks);
+        // absolute position of every flattened row
+        let mut rowpos: Vec<usize> = dec_pos.clone();
+        for (c, &(start, _)) in chunks.iter().zip(&chunk_meta) {
+            rowpos.extend((0..c.tokens.len()).map(|j| start + j));
+        }
+
         let mut paged_reads = 0u64;
         // view-table scratch: `ranges` is lifetime-free and reused across
         // layers; `views`/`items` borrow the cache per layer but are
         // pre-sized — O(blocks) bookkeeping, no O(t·e) buffers.
-        let bt = self.cache.block_tokens();
-        let n_views: usize = pos.iter().map(|&p| p.div_ceil(bt.max(1)).max(1)).sum();
-        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(bsz);
-
+        let bt = self.cache.block_tokens().max(1);
+        let view_upto = |&(start, reused): &(usize, usize)| -> usize {
+            // a u8 pool's views stop at the shared-prefix boundary (later
+            // positions re-read raw from ChunkState); f32 pools store
+            // verbatim, so reading every filled position in place is
+            // bit-identical to the register copy and needs no tails
+            if quantized_pool {
+                reused
+            } else {
+                start
+            }
+        };
+        let n_views: usize = dec_pos
+            .iter()
+            .map(|&p| p.div_ceil(bt).max(1))
+            .sum::<usize>()
+            + chunk_meta
+                .iter()
+                .map(|m| view_upto(m).div_ceil(bt).max(1))
+                .sum::<usize>();
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nd + chunks.len());
         let n_layers = self.weights.blocks.len();
+        // every layer's (rotated-K, V) rows — kept so chunk rows can be
+        // written to the paged cache position-major after the layer loop
+        // (the cache's append/advance protocol is per-position)
+        let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(n_layers);
         for li in 0..n_layers {
             let b = &self.weights.blocks[li];
-            // shared projections: each weight matrix streamed ONCE for the
-            // whole batch — the batching economics of the paper's model.
+            // shared projections: each weight matrix streamed ONCE for
+            // every decode row AND prefill-chunk row — the fused step's
+            // whole point on weight-bandwidth-bound hardware
             let mut q = Weight::proj(&x, &b.q);
             let mut k = Weight::proj(&x, &b.k);
             let v = Weight::proj(&x, &b.v);
-            // per-row RoPE at each sequence's own position
-            for (r, &p) in pos.iter().enumerate() {
+            // per-row RoPE at each row's own absolute position
+            for (r, &p) in rowpos.iter().enumerate() {
                 for h in 0..cfg.n_heads {
                     rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
                 }
@@ -307,40 +518,117 @@ impl Engine for CpuEngine {
                     rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
                 }
             }
-            // write every sequence's new K/V first (CoW/growth happen here,
-            // against each sequence's OWN block table)...
-            for (r, inp) in inputs.iter().enumerate() {
+            // decode rows write their K/V first (growth/CoW against each
+            // sequence's OWN block table; chunk sequences get no writes
+            // inside the layer loop, so every view below stays stable)...
+            for (r, inp) in decodes.iter().enumerate() {
                 self.cache
                     .append(inp.seq, li, k.row(r), v.row(r))
                     .map_err(capacity)?;
             }
-            // ...then attend over the histories IN PLACE: zero-copy block
-            // views (the cache length is still pos[r]; the just-written row
-            // rides along from registers as a tail segment, exactly what
-            // the old path spliced onto its gather scratch), fanned out
-            // over the (sequence × head) grid.
+            // ...then ALL attention rows — decode and chunk alike — run as
+            // one (row × head) grid over zero-copy views plus register
+            // tails.
             let mut views: Vec<BlockView> = Vec::with_capacity(n_views);
             ranges.clear();
-            for inp in inputs {
+            for inp in decodes {
                 let start = views.len();
                 views.extend(self.cache.seq_block_views(inp.seq, li).map_err(bad_seq)?);
                 ranges.push((start, views.len()));
             }
-            let mut items: Vec<AttnItem> = Vec::with_capacity(bsz);
-            items.extend(inputs.iter().enumerate().map(|(r, _)| AttnItem {
+            for (c, m) in chunks.iter().zip(&chunk_meta) {
+                let start = views.len();
+                views.extend(
+                    self.cache
+                        .seq_block_views_upto(c.seq, li, view_upto(m))
+                        .map_err(bad_seq)?,
+                );
+                ranges.push((start, views.len()));
+            }
+            let mut items: Vec<AttnItem> = Vec::with_capacity(total_rows);
+            items.extend(decodes.iter().enumerate().map(|(r, _)| AttnItem {
                 q_rot: q.row(r),
                 views: &views[ranges[r].0..ranges[r].1],
-                cache_len: pos[r],
+                cache_len: dec_pos[r],
                 tails: [KvSegment::rows(k.row(r), v.row(r), e), KvSegment::empty()],
-                t: pos[r] + 1,
+                t: dec_pos[r] + 1,
                 out_row: r,
             }));
-            let mut a = Mat::zeros(bsz, cfg.dim);
+            for (ci, c) in chunks.iter().enumerate() {
+                let (cstart, reused) = chunk_meta[ci];
+                if cstart == 0 {
+                    continue; // leading chunk: causal kernel, below
+                }
+                let r0 = chunk_row0[ci];
+                let s = c.tokens.len();
+                let range = ranges[nd + ci];
+                // the chunk's own rows sit contiguously in k/v
+                let k_chunk = &k.as_slice()[r0 * e..(r0 + s) * e];
+                let v_chunk = &v.as_slice()[r0 * e..(r0 + s) * e];
+                if quantized_pool {
+                    let (rk, rv) = &self.chunking[&c.seq].raw[li];
+                    items.extend((0..s).map(|j| AttnItem {
+                        q_rot: q.row(r0 + j),
+                        views: &views[range.0..range.1],
+                        cache_len: reused,
+                        tails: [
+                            // earlier chunks' rows, raw — what a monolithic
+                            // prefill would hold in registers
+                            KvSegment::rows(rk, rv, e),
+                            KvSegment::rows(&k_chunk[..(j + 1) * e], &v_chunk[..(j + 1) * e], e),
+                        ],
+                        t: cstart + j + 1,
+                        out_row: r0 + j,
+                    }));
+                } else {
+                    items.extend((0..s).map(|j| AttnItem {
+                        q_rot: q.row(r0 + j),
+                        views: &views[range.0..range.1],
+                        cache_len: cstart,
+                        tails: [
+                            KvSegment::rows(&k_chunk[..(j + 1) * e], &v_chunk[..(j + 1) * e], e),
+                            KvSegment::empty(),
+                        ],
+                        t: cstart + j + 1,
+                        out_row: r0 + j,
+                    }));
+                }
+            }
+            let mut a = Mat::zeros(total_rows, cfg.dim);
             paged_attn::attend_batch(layout, &items, &mut a);
             drop(items);
             drop(views);
-            paged_reads += pos.iter().map(|&p| p as u64).sum::<u64>();
-            // post-attention + FFN, batched
+            // leading chunks (no cached history at all) run the monolithic
+            // prefill kernel over their own rows — the exact code path
+            // `prefill_shared` takes for a cold prompt
+            for (ci, c) in chunks.iter().enumerate() {
+                if chunk_meta[ci].0 != 0 {
+                    continue;
+                }
+                let r0 = chunk_row0[ci];
+                let s = c.tokens.len();
+                let a_sub = causal_attention_rot(
+                    &q.row_slice(r0, r0 + s),
+                    &k.row_slice(r0, r0 + s),
+                    &v.row_slice(r0, r0 + s),
+                    layout,
+                );
+                for j in 0..s {
+                    a.row_mut(r0 + j).copy_from_slice(a_sub.row(j));
+                }
+            }
+            paged_reads += dec_pos.iter().map(|&p| p as u64).sum::<u64>();
+            for (c, m) in chunks.iter().zip(&chunk_meta) {
+                paged_reads += (c.tokens.len() * view_upto(m)) as u64;
+            }
+            if !chunks.is_empty() {
+                // retain only the chunk rows (contiguous tail): the
+                // post-loop commit never reads decode rows, and keeping the
+                // full matrices would scale transient memory with the
+                // decode batch instead of the chunk sizes
+                layer_kv.push((k.row_slice(nd, total_rows), v.row_slice(nd, total_rows)));
+            }
+            // post-attention + FFN, batched over the whole phase mix
             x = match layout_kind {
                 BlockLayout::Serial => {
                     let p = Weight::proj(&a, &b.p);
@@ -354,13 +642,94 @@ impl Engine for CpuEngine {
             };
         }
         self.cache.note_paged_attn(paged_reads);
-        // one advance per sequence per token
-        for inp in inputs {
+
+        // ---- commit chunk rows: position-major cache writes, raw-tail and
+        // prefix-registration bookkeeping, completion detection ----------
+        let bt = self.cache.block_tokens();
+        let mut chunk_done = vec![false; chunks.len()];
+        for (ci, c) in chunks.iter().enumerate() {
+            // layer_kv rows are the chunk rows only, so indices shift by nd
+            let r0 = chunk_row0[ci] - nd;
+            let s = c.tokens.len();
+            let (cstart, _) = chunk_meta[ci];
+            for j in 0..s {
+                for (li, (lk, lv)) in layer_kv.iter().enumerate() {
+                    if let Err(err) = self.cache.append(c.seq, li, lk.row(r0 + j), lv.row(r0 + j))
+                    {
+                        // unreachable: the chunk's blocks were reserved at
+                        // prefill_begin. Restore the pre-step length so a
+                        // retry is clean, then surface the failure.
+                        let _ = self.cache.truncate_seq(c.seq, cstart);
+                        return Err(capacity(err));
+                    }
+                }
+                self.cache.advance(c.seq).map_err(bad_seq)?;
+            }
+            let st = self.chunking.get_mut(&c.seq).expect("validated above");
+            st.filled += s;
+            *self.positions.get_mut(&c.seq).expect("live") = st.filled;
+            if quantized_pool {
+                for (li, (lk, lv)) in layer_kv.iter().enumerate() {
+                    let (rk, rv) = &mut st.raw[li];
+                    rk.extend_from_slice(&lk.as_slice()[r0 * e..(r0 + s) * e]);
+                    rv.extend_from_slice(&lv.as_slice()[r0 * e..(r0 + s) * e]);
+                }
+            }
+            // register every prompt block this chunk finished, so prompts
+            // admitted between chunks can already share them
+            while st.registered + bt <= st.filled {
+                let block = &st.prompt[st.registered..st.registered + bt];
+                self.cache
+                    .register_prompt_block(c.seq, block)
+                    .map_err(bad_seq)?;
+                st.registered += bt;
+            }
+            if st.filled == st.prompt.len() {
+                chunk_done[ci] = true;
+                self.chunking.remove(&c.seq);
+            }
+        }
+        // decode rows: one advance per sequence per token
+        for inp in decodes {
             self.cache.advance(inp.seq).map_err(bad_seq)?;
             *self.positions.get_mut(&inp.seq).unwrap() += 1;
         }
-        let logits = self.weights.unembed.matmul(&x);
-        Ok((0..bsz).map(|r| logits.row(r).to_vec()).collect())
+
+        // ---- unembed only the rows that need logits: every decode row,
+        // plus the last row of each chunk that completed its prompt (a
+        // monolithic prefill unembeds only the last position too) ---------
+        let mut sel: Vec<usize> = (0..nd).collect();
+        for (ci, c) in chunks.iter().enumerate() {
+            if chunk_done[ci] {
+                sel.push(chunk_row0[ci] + c.tokens.len() - 1);
+            }
+        }
+        if sel.is_empty() {
+            return Ok(StepOutput {
+                decode_logits: Vec::new(),
+                chunk_logits: vec![None; chunks.len()],
+            });
+        }
+        let mut sub = Mat::zeros(sel.len(), cfg.dim);
+        for (i, &r) in sel.iter().enumerate() {
+            sub.row_mut(i).copy_from_slice(x.row(r));
+        }
+        let logits = self.weights.unembed.matmul(&sub);
+        let decode_logits = (0..nd).map(|r| logits.row(r).to_vec()).collect();
+        let mut chunk_logits = Vec::with_capacity(chunks.len());
+        let mut next = nd;
+        for done in &chunk_done {
+            if *done {
+                chunk_logits.push(Some(logits.row(next).to_vec()));
+                next += 1;
+            } else {
+                chunk_logits.push(None);
+            }
+        }
+        Ok(StepOutput {
+            decode_logits,
+            chunk_logits,
+        })
     }
 
     fn verify_batch(&mut self, inputs: &[VerifyInput]) -> Result<Vec<Vec<Vec<f32>>>, EngineError> {
@@ -379,6 +748,12 @@ impl Engine for CpuEngine {
         for vi in inputs {
             if vi.tokens.is_empty() {
                 return Err(EngineError::BadSequence("empty verify input".into()));
+            }
+            if self.chunking.contains_key(&vi.seq) {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?} is still prefilling",
+                    vi.seq
+                )));
             }
             let p = *self
                 .positions
@@ -568,6 +943,7 @@ impl Engine for CpuEngine {
     fn release(&mut self, seq: SeqId) {
         let _ = self.cache.free_seq(seq);
         self.positions.remove(&seq);
+        self.chunking.remove(&seq);
     }
 }
 
@@ -1028,6 +1404,231 @@ mod tests {
             eng.verify_batch(&[VerifyInput { seq: id, tokens: vec![] }]),
             Err(EngineError::BadSequence(_))
         ));
+    }
+
+    // ---- chunked prefill -----------------------------------------------
+
+    /// Drive a chunked prefill to completion with the given chunk sizes
+    /// and return the final-position logits.
+    fn run_chunks(eng: &mut CpuEngine, prompt: &[u32], sizes: &[usize]) -> (SeqId, Vec<f32>) {
+        let (id, reused) = eng.prefill_begin(prompt).unwrap();
+        let mut done = reused;
+        let mut last = None;
+        for &s in sizes {
+            let take = s.min(prompt.len() - done);
+            if take == 0 {
+                break;
+            }
+            let out = eng.prefill_chunk(id, &prompt[done..done + take]).unwrap();
+            done += take;
+            if done == prompt.len() {
+                last = Some(out.expect("final chunk must produce logits"));
+            } else {
+                assert!(out.is_none(), "mid-prompt chunk produced logits");
+            }
+        }
+        (id, last.expect("prompt fully chunked"))
+    }
+
+    /// THE acceptance property: chunked prefill logits are byte-identical
+    /// to monolithic `prefill_shared`, across {f32, u8 KV} × {MHA, GQA,
+    /// MQA} × chunk splits that straddle block boundaries — and so is the
+    /// cache state left behind (the next decode agrees bitwise too).
+    #[test]
+    fn chunked_prefill_bit_identical_to_monolithic() {
+        let prompt: Vec<u32> = (0..11).map(|i| (i * 13 + 3) % 250).collect();
+        let splits: [&[usize]; 4] = [&[11], &[3, 5, 3], &[4, 4, 3], &[1, 2, 1, 3, 2, 1, 1]];
+        for name in ["tiny-mha", "tiny-gqa", "tiny-mqa"] {
+            for quantized in [false, true] {
+                let cfg = ModelConfig::preset(name).unwrap();
+                let w = ModelWeights::init_vanilla(&cfg, 120);
+                let opts = CacheOpts { quantized, ..Default::default() };
+                let mut mono = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, opts);
+                let (_mid, want, r) = mono.prefill_shared(&prompt).unwrap();
+                assert_eq!(r, 0);
+                for split in splits {
+                    let tag = format!("{name} kv8={quantized} split={split:?}");
+                    let mut eng = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, opts);
+                    let (cid, got) = run_chunks(&mut eng, &prompt, split);
+                    assert_eq!(got, want, "{tag}: chunked prefill logits diverged");
+                    // identical cache state: the next decodes agree bitwise
+                    let mut mref = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, opts);
+                    let (rid, _, _) = mref.prefill_shared(&prompt).unwrap();
+                    for step in 0..3 {
+                        let tok = 7 + 3 * step as u32;
+                        let a = eng
+                            .decode_batch(&[DecodeInput { seq: cid, token: tok }])
+                            .unwrap();
+                        let b = mref
+                            .decode_batch(&[DecodeInput { seq: rid, token: tok }])
+                            .unwrap();
+                        assert_eq!(a[0], b[0], "{tag}: post-prefill decode step {step}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Chunked prefill on a warm prefix must borrow it exactly like the
+    /// monolithic warm path and stay bit-identical to it.
+    #[test]
+    fn chunked_prefill_with_warm_prefix_matches_monolithic() {
+        for quantized in [false, true] {
+            let cfg = ModelConfig::tiny_gqa();
+            let w = ModelWeights::init_vanilla(&cfg, 121);
+            let opts = CacheOpts { quantized, ..Default::default() };
+            let base: Vec<u32> = (0..10).map(|i| (i * 7 + 1) % 250).collect();
+            let mut ext = base.clone();
+            ext.extend([9, 42, 17, 3, 88]);
+            let mut mono = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, opts);
+            let mut chnk = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, opts);
+            let (_, _, r0) = mono.prefill_shared(&base).unwrap();
+            let (_, _, r1) = chnk.prefill_shared(&base).unwrap();
+            assert_eq!((r0, r1), (0, 0));
+            let (_, want, reused) = mono.prefill_shared(&ext).unwrap();
+            assert_eq!(reused, 8, "two full blocks warm");
+            let (id, r) = chnk.prefill_begin(&ext).unwrap();
+            assert_eq!(r, 8, "chunked admission borrows the same prefix");
+            let mut done = r;
+            let mut got = None;
+            for s in [3usize, 2, 2] {
+                got = chnk.prefill_chunk(id, &ext[done..done + s]).unwrap();
+                done += s;
+            }
+            assert_eq!(
+                got.expect("complete"),
+                want,
+                "kv8={quantized}: warm chunked prefill diverged"
+            );
+        }
+    }
+
+    /// A still-prefilling prompt's finished blocks must already be
+    /// shareable: admissions between chunks borrow them.
+    #[test]
+    fn chunk_boundaries_register_for_sharing() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 122);
+        let mut eng = CpuEngine::new(w, 4, 8 << 20);
+        let prompt: Vec<u32> = (0..12).map(|i| (i * 3 + 5) % 250).collect();
+        let (id, _) = eng.prefill_begin(&prompt).unwrap();
+        let _ = eng.prefill_chunk(id, &prompt[..8]).unwrap();
+        // 8 positions filled = 2 registered blocks, prompt still in flight
+        let (other, _, reused) = eng.prefill_shared(&prompt).unwrap();
+        assert_eq!(reused, 8, "mid-prefill blocks not shared");
+        eng.release(other);
+        // and the original still completes correctly
+        let out = eng.prefill_chunk(id, &prompt[8..]).unwrap();
+        assert!(out.is_some());
+    }
+
+    /// One fused step (decode rows + a chunk row batch) must produce
+    /// exactly what the separate paths produce.
+    #[test]
+    fn fused_step_matches_separate_paths() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 123);
+        let prompt_a = [3u32, 1, 4, 1, 5];
+        let prompt_b: Vec<u32> = (0..9).map(|i| (i * 11 + 2) % 250).collect();
+        // fused engine: A decodes while B chunk-prefills
+        let mut eng = CpuEngine::new(w.clone(), 4, 8 << 20);
+        let (a, la) = eng.prefill(&prompt_a).unwrap();
+        let (b, _) = eng.prefill_begin(&prompt_b).unwrap();
+        let _ = eng
+            .step_batch(&[], &[ChunkInput { seq: b, tokens: prompt_b[..4].to_vec() }])
+            .unwrap();
+        let out = eng
+            .step_batch(
+                &[DecodeInput { seq: a, token: 9 }],
+                &[ChunkInput { seq: b, tokens: prompt_b[4..].to_vec() }],
+            )
+            .unwrap();
+        // reference: the same work through the separate engines/paths
+        let mut ref_d = CpuEngine::new(w.clone(), 4, 8 << 20);
+        let (ra, rla) = ref_d.prefill(&prompt_a).unwrap();
+        assert_eq!(la, rla);
+        let want_dec = ref_d.decode_batch(&[DecodeInput { seq: ra, token: 9 }]).unwrap();
+        let mut ref_p = CpuEngine::new(w, 4, 8 << 20);
+        let (_, want_pre, _) = ref_p.prefill_shared(&prompt_b).unwrap();
+        assert_eq!(out.decode_logits[0], want_dec[0], "fused decode row diverged");
+        assert_eq!(
+            out.chunk_logits[0].as_ref().expect("chunk completed"),
+            &want_pre,
+            "fused chunk row diverged"
+        );
+    }
+
+    /// Decode/verify on a mid-prefill sequence must be rejected, and a
+    /// released mid-prefill sequence must clean up fully.
+    #[test]
+    fn prefilling_sequences_cannot_decode_or_verify() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 124);
+        let mut eng = CpuEngine::new(w, 4, 8 << 20);
+        let prompt: Vec<u32> = (0..9).collect();
+        let (id, _) = eng.prefill_begin(&prompt).unwrap();
+        let _ = eng.prefill_chunk(id, &prompt[..4]).unwrap();
+        assert!(matches!(
+            eng.decode_batch(&[DecodeInput { seq: id, token: 1 }]),
+            Err(EngineError::BadSequence(_))
+        ));
+        assert!(matches!(
+            eng.verify_batch(&[VerifyInput { seq: id, tokens: vec![1] }]),
+            Err(EngineError::BadSequence(_))
+        ));
+        eng.release(id);
+        let snap = eng.kv_snapshot().unwrap();
+        assert_eq!(snap.used_blocks, 0, "mid-prefill release leaked blocks");
+    }
+
+    /// Mid-prefill swap-out / swap-in on an f32 pool must not change a
+    /// single bit of the finished prefill. A u8 pool refuses the swap (the
+    /// raw tails would stay resident, defeating the point of spilling) —
+    /// the scheduler recompute-preempts instead, which replays
+    /// byte-identically.
+    #[test]
+    fn chunked_prefill_survives_swap_roundtrip() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 125);
+        let prompt: Vec<u32> = (0..11).map(|i| (i * 17 + 4) % 250).collect();
+        let mut mono = CpuEngine::new(w.clone(), 4, 8 << 20);
+        let (_, want, _) = mono.prefill_shared(&prompt).unwrap();
+        let mut eng = CpuEngine::new(w.clone(), 4, 8 << 20);
+        let (id, _) = eng.prefill_begin(&prompt).unwrap();
+        let _ = eng.prefill_chunk(id, &prompt[..5]).unwrap();
+        eng.swap_out(id).unwrap();
+        eng.swap_in(id).unwrap();
+        let _ = eng.prefill_chunk(id, &prompt[5..9]).unwrap();
+        let got = eng.prefill_chunk(id, &prompt[9..]).unwrap();
+        assert_eq!(got.expect("complete"), want, "swap mid-prefill changed the logits");
+
+        // u8 pool: the swap is refused once any chunk has computed rows,
+        // and a cold recompute (release + re-prefill) lands on the same
+        // bits. The first attempt stops short of a block boundary so it
+        // registers nothing — a replay after registration resumes WARM
+        // and, like any warm u8 prefill, may differ from a cold run by a
+        // quantization step (documented u8 semantics, not tested here).
+        let opts = CacheOpts { quantized: true, ..Default::default() };
+        let mut mono = CpuEngine::with_cache_opts(w.clone(), 4, 8 << 20, opts);
+        let (_, want_q, _) = mono.prefill_shared(&prompt).unwrap();
+        let mut eng = CpuEngine::with_cache_opts(w, 4, 8 << 20, opts);
+        let (id, _) = eng.prefill_begin(&prompt).unwrap();
+        let _ = eng.prefill_chunk(id, &prompt[..3]).unwrap();
+        assert!(
+            matches!(eng.swap_out(id), Err(EngineError::Backend(_))),
+            "u8 mid-prefill swap must be refused"
+        );
+        eng.release(id);
+        let (id, reused) = eng.prefill_begin(&prompt).unwrap();
+        assert_eq!(reused, 0, "nothing was registered, so the replay is cold");
+        let _ = eng.prefill_chunk(id, &prompt[..4]).unwrap();
+        let _ = eng.prefill_chunk(id, &prompt[4..8]).unwrap();
+        let got = eng.prefill_chunk(id, &prompt[8..]).unwrap();
+        assert_eq!(
+            got.expect("complete"),
+            want_q,
+            "u8 cold recompute after a refused swap changed the logits"
+        );
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! The engine abstraction the scheduler drives.
 //!
-//! An engine owns model weights and per-sequence KV state and exposes two
-//! operations: `prefill` (admit a prompt, return last-position logits) and
-//! `decode_batch` (advance a batch of sequences one token). The coordinator
-//! is engine-agnostic: [`super::cpu_engine::CpuEngine`] runs the pure-Rust
-//! model against the paged cache; [`crate::runtime::PjrtEngine`] runs the
-//! AOT-compiled JAX artifacts through PJRT.
+//! An engine owns model weights and per-sequence KV state. The serving hot
+//! loop drives ONE operation — [`Engine::step_batch`], the fused
+//! continuous-batching step that advances decode rows and prefill-chunk
+//! rows together — with `prefill`/`prefill_shared` (monolithic admission)
+//! and `decode_batch` as the building blocks engines without chunked
+//! support fall back to. The coordinator is engine-agnostic:
+//! [`super::cpu_engine::CpuEngine`] runs the pure-Rust model against the
+//! paged cache; [`crate::runtime::PjrtEngine`] runs the AOT-compiled JAX
+//! artifacts through PJRT.
 
 use crate::config::ModelConfig;
 use crate::kvcache::{CacheSnapshot, SeqId};
@@ -39,6 +42,27 @@ pub struct DecodeInput {
     pub seq: SeqId,
     /// The token sampled at the previous step (to be consumed now).
     pub token: u32,
+}
+
+/// One mid-prefill sequence's next prompt chunk for a fused
+/// [`Engine::step_batch`]: consume `tokens` at the sequence's next prompt
+/// positions. The scheduler sizes chunks from its per-step token budget;
+/// the engine tracks how much of the prompt is already filled (from
+/// [`Engine::prefill_begin`]).
+#[derive(Clone, Debug)]
+pub struct ChunkInput {
+    pub seq: SeqId,
+    pub tokens: Vec<u32>,
+}
+
+/// Result of one fused [`Engine::step_batch`].
+#[derive(Debug, Default)]
+pub struct StepOutput {
+    /// One logits row per decode input, in order.
+    pub decode_logits: Vec<Vec<f32>>,
+    /// One entry per chunk input, in order: `Some(last-position logits)`
+    /// exactly when that chunk completed its sequence's prompt.
+    pub chunk_logits: Vec<Option<Vec<f32>>>,
 }
 
 /// One sequence's multi-position input for a widened verify step
@@ -122,6 +146,87 @@ pub trait Engine {
     /// holds quantized weights. `(0, 0)` for engines that don't report.
     fn weight_bytes(&self) -> (u64, u64) {
         (0, 0)
+    }
+
+    // ---- chunked prefill / continuous batching (optional; engines
+    // without support keep the monolithic admit-time prefill) -------------
+
+    /// Can this engine run prefill in token-budgeted chunks
+    /// ([`Engine::prefill_begin`] + [`Engine::step_batch`])? The scheduler
+    /// falls back to monolithic [`Engine::prefill_shared`] admission when
+    /// false.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Would this prompt reuse MORE cached prefix if admission waited for
+    /// an in-flight chunked prefill to register further blocks? The
+    /// scheduler defers such admissions one or more steps so that
+    /// same-prefix prompts arriving together still share (with monolithic
+    /// admission the earlier prefill completed inside `admit`, so later
+    /// admissions probed a warm index for free — chunked admission has to
+    /// ask).
+    fn prefill_pending_prefix(&self, _tokens: &[u32]) -> bool {
+        false
+    }
+
+    /// Begin a chunked admission: allocate a sequence for `tokens`
+    /// (borrowing any cached shared prefix) **without computing anything**.
+    /// Returns the sequence id and the number of leading prompt positions
+    /// already filled from the prefix cache; the remaining positions are
+    /// fed through [`Engine::step_batch`] chunk rows (or
+    /// [`Engine::prefill_chunk`]) over subsequent steps. The engine reserves
+    /// the prompt's KV blocks here, so admission capacity is identical to
+    /// the monolithic path.
+    fn prefill_begin(&mut self, _tokens: &[u32]) -> Result<(SeqId, usize), EngineError> {
+        Err(EngineError::Backend(
+            "chunked prefill not supported by this engine".into(),
+        ))
+    }
+
+    /// Advance one mid-prefill sequence by one chunk of prompt tokens.
+    /// Returns `Some(last-position logits)` exactly when this chunk
+    /// completes the prompt. Chunked prefill must be **bit-identical** to a
+    /// monolithic [`Engine::prefill_shared`] of the same prompt, for any
+    /// chunk split. Default: one single-chunk fused step.
+    fn prefill_chunk(
+        &mut self,
+        seq: SeqId,
+        tokens: &[u32],
+    ) -> Result<Option<Vec<f32>>, EngineError> {
+        let out = self.step_batch(
+            &[],
+            &[ChunkInput {
+                seq,
+                tokens: tokens.to_vec(),
+            }],
+        )?;
+        Ok(out.chunk_logits.into_iter().next().flatten())
+    }
+
+    /// THE fused continuous-batching step: advance every decode row by one
+    /// token and every chunk row by its prompt chunk **through the same
+    /// batched GEMMs and the same paged-attention grid**, so each weight
+    /// matrix is streamed from memory once per step regardless of the
+    /// phase mix. Decode rows must be bit-identical to
+    /// [`Engine::decode_batch`] over the same inputs, and chunk rows
+    /// bit-identical to a monolithic prefill (see
+    /// [`Engine::prefill_chunk`]). Engines that cannot fuse keep the
+    /// default, which handles pure-decode steps and rejects chunk rows.
+    fn step_batch(
+        &mut self,
+        decodes: &[DecodeInput],
+        chunks: &[ChunkInput],
+    ) -> Result<StepOutput, EngineError> {
+        if !chunks.is_empty() {
+            return Err(EngineError::Backend(
+                "chunked prefill not supported by this engine".into(),
+            ));
+        }
+        Ok(StepOutput {
+            decode_logits: self.decode_batch(decodes)?,
+            chunk_logits: Vec::new(),
+        })
     }
 
     // ---- speculative decoding (optional; defaults keep engines without

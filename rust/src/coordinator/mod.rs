@@ -1,8 +1,9 @@
 //! L3 coordinator: continuous-batching serving on top of an [`Engine`].
 //!
-//! [`Scheduler`] is the synchronous core (resume swapped → admit → batched
-//! decode → retire); [`Coordinator`] wraps it in a background thread with
-//! a channel-based submit/receive API for the TCP server and examples.
+//! [`Scheduler`] is the synchronous core (resume swapped → token-budget
+//! plan/admit → one fused decode+prefill-chunk step → retire);
+//! [`Coordinator`] wraps it in a background thread with a channel-based
+//! submit/receive API for the TCP server and examples.
 //!
 //! Admission and preemption are KV-block-lifecycle aware: prompts sharing
 //! a cached prefix skip that part of prefill ([`Engine::prefill_shared`]),
@@ -17,7 +18,7 @@ pub mod engine;
 pub mod scheduler;
 
 pub use cpu_engine::CpuEngine;
-pub use engine::{DecodeInput, Engine, EngineError, VerifyInput};
+pub use engine::{ChunkInput, DecodeInput, Engine, EngineError, StepOutput, VerifyInput};
 pub use scheduler::{FinishReason, Request, Response, Scheduler, SchedulerCfg};
 
 use crate::metrics::Metrics;
@@ -28,6 +29,7 @@ use std::thread::JoinHandle;
 
 enum Msg {
     Submit(Request, Sender<Response>),
+    Cancel(u64, Sender<bool>),
     Shutdown,
 }
 
@@ -101,9 +103,26 @@ impl Coordinator {
         rx
     }
 
-    /// Submit and block for the response.
+    /// Submit and block for the response. A request whose reply channel is
+    /// lost (coordinator shutdown mid-request) comes back Rejected rather
+    /// than panicking the caller's thread.
     pub fn generate(&self, req: Request) -> Response {
-        self.submit(req).recv().expect("coordinator alive")
+        let id = req.id;
+        self.submit(req)
+            .recv()
+            .unwrap_or_else(|_| Response::empty(id, FinishReason::Rejected))
+    }
+
+    /// Cancel an in-flight request by id ([`Scheduler::cancel`]): resources
+    /// release immediately and the submitter receives a
+    /// [`crate::coordinator::FinishReason::Cancelled`] response. Returns
+    /// false when the request already finished (or was never submitted).
+    pub fn cancel(&self, id: u64) -> bool {
+        let (tx, rx) = channel();
+        if self.tx.send(Msg::Cancel(id, tx)).is_err() {
+            return false;
+        }
+        rx.recv().unwrap_or(false)
     }
 
     pub fn shutdown(mut self) {
@@ -137,6 +156,14 @@ fn sched_loop<E: Engine>(mut sched: Scheduler<E>, rx: Receiver<Msg>) {
     loop {
         // Drain pending messages; block only when fully idle.
         loop {
+            // deliver anything already finished BEFORE potentially
+            // blocking — a cancel can retire the last in-flight request
+            // without a step ever running again
+            for resp in sched.take_done() {
+                if let Some(tx) = reply_to.remove(&resp.id) {
+                    let _ = tx.send(resp);
+                }
+            }
             let msg = if sched.is_idle() {
                 match rx.recv() {
                     Ok(m) => m,
@@ -151,8 +178,20 @@ fn sched_loop<E: Engine>(mut sched: Scheduler<E>, rx: Receiver<Msg>) {
             };
             match msg {
                 Msg::Submit(req, tx) => {
-                    reply_to.insert(req.id, tx);
-                    sched.submit(req);
+                    // first wins: a duplicate in-flight id is rejected
+                    // outright rather than hijacking the earlier
+                    // submitter's reply channel
+                    if reply_to.contains_key(&req.id) {
+                        let _ = tx.send(Response::empty(req.id, FinishReason::Rejected));
+                    } else {
+                        reply_to.insert(req.id, tx);
+                        sched.submit(req);
+                    }
+                }
+                Msg::Cancel(id, tx) => {
+                    // the Cancelled response reaches the submitter through
+                    // the normal take_done → reply_to delivery below
+                    let _ = tx.send(sched.cancel(id));
                 }
                 Msg::Shutdown => return,
             }
@@ -218,6 +257,26 @@ mod tests {
         let _ = c.generate(Request::greedy(1, vec![4, 4], 3));
         use std::sync::atomic::Ordering;
         assert_eq!(c.metrics().requests_completed.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn cancel_reaches_the_scheduler() {
+        use crate::coordinator::scheduler::FinishReason;
+        let (c, _) = coordinator(75);
+        // a long request we try to cancel mid-flight; the race with natural
+        // completion is inherent, so accept either outcome consistently
+        let rx = c.submit(Request::greedy(42, vec![1, 2, 3], 64));
+        let cancelled = c.cancel(42);
+        let resp = rx.recv().expect("response still delivered");
+        if cancelled {
+            assert_eq!(resp.finish, FinishReason::Cancelled);
+            assert!(resp.tokens.len() < 64);
+        } else {
+            assert_eq!(resp.finish, FinishReason::Length);
+        }
+        // cancelling something unknown is a clean false
+        assert!(!c.cancel(4242));
         c.shutdown();
     }
 

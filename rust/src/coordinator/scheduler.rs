@@ -1,24 +1,39 @@
-//! Continuous-batching scheduler (Orca/vLLM-style, scaled to this testbed).
+//! Continuous-batching scheduler with **token-budgeted chunked prefill**
+//! (Orca/vLLM-style, scaled to this testbed).
 //!
 //! Policy per engine step:
 //! 1. **Resume**: swap previously-preempted sequences back in (oldest
 //!    first) when the pool has room plus headroom; swapped sequences have
 //!    strict priority over new admissions for blocks.
-//! 2. **Admit**: pop queued requests FIFO while the engine has KV capacity
-//!    (prefix-index-aware via [`Engine::can_admit_tokens`]) and the running
-//!    set is below `max_running`; each admit prefills — skipping any
-//!    cached shared prefix — and samples the first token.
-//! 3. **Decode**: one batched `decode_batch` over every running sequence;
-//!    sample the next token for each; retire sequences that hit
+//! 2. **Plan + admit**: build the step's token budget
+//!    ([`SchedulerCfg::token_budget_per_step`]). Decode rows come first —
+//!    every fully-prefilled running sequence advances one token every step,
+//!    so a long prompt can never head-of-line-block the decodes. The
+//!    remaining budget is filled with **prefill chunks** (capped per
+//!    sequence at [`SchedulerCfg::chunk_tokens`]): first for sequences
+//!    already mid-prefill (oldest first), then for new admissions popped
+//!    FIFO while the engine has KV capacity (prefix-index-aware via
+//!    [`Engine::can_admit_tokens`]) and the running set is below
+//!    `max_running`. Chunked admission ([`Engine::prefill_begin`]) reserves
+//!    the prompt's blocks but computes nothing; engines without chunked
+//!    support fall back to the old monolithic admit-time prefill.
+//! 3. **Fused step**: ONE [`Engine::step_batch`] advances every decode row
+//!    by a token and every planned prefill chunk by its tokens through the
+//!    same batched GEMMs and paged-attention grid — the weights stream
+//!    from memory once per step regardless of the phase mix. A chunk that
+//!    completes its prompt yields last-position logits; the first token is
+//!    sampled and the sequence flips to decoding (that instant is its
+//!    TTFT, measured from submission). Retire sequences that hit
 //!    `max_new_tokens` or an EOS token.
-//! 4. **Preempt**: when decode hits `CapacityExhausted`, the youngest
-//!    running sequence is **swapped out** — its KV blocks spill to the
-//!    cache's bounded host buffer and it resumes later byte-identically
-//!    (sampler state intact). If the engine cannot swap (no paged cache,
-//!    spill budget exhausted), it falls back to recompute-preemption:
-//!    release and requeue at the head, replaying deterministically from
-//!    the request seed. A lone running sequence that still exhausts the
-//!    pool can never finish — it is truncated (DESIGN.md §KV-lifecycle).
+//! 4. **Preempt**: when the step hits `CapacityExhausted`, the youngest
+//!    running sequence — possibly one still mid-prefill — is **swapped
+//!    out**: its KV blocks spill to the cache's bounded host buffer and it
+//!    resumes later byte-identically (sampler state and prefill progress
+//!    intact). If the engine cannot swap (no paged cache, spill budget
+//!    exhausted), it falls back to recompute-preemption: release and
+//!    requeue at the head, replaying deterministically from the request
+//!    seed. A lone running sequence that still exhausts the pool can never
+//!    finish — it is truncated (DESIGN.md §KV-lifecycle).
 //!
 //! With [`SchedulerCfg::spec_k`] > 0 and a draft engine
 //! ([`Scheduler::with_draft`]), step 3 splits into a **speculative**
@@ -31,7 +46,7 @@
 //! (DESIGN.md §Speculative); requests whose drafts keep losing fall back
 //! to plain decode permanently.
 
-use crate::coordinator::engine::{DecodeInput, Engine, EngineError, VerifyInput};
+use crate::coordinator::engine::{ChunkInput, DecodeInput, Engine, EngineError, VerifyInput};
 use crate::kvcache::SeqId;
 use crate::metrics::Metrics;
 use crate::sampler::{accept_greedy, argmax, sample, SamplerCfg};
@@ -72,6 +87,9 @@ pub enum FinishReason {
     Eos,
     /// Request was invalid (empty prompt, too long, ...).
     Rejected,
+    /// Request was cancelled by the client ([`Scheduler::cancel`]); the
+    /// response carries whatever was generated before the cancel landed.
+    Cancelled,
 }
 
 /// A finished generation.
@@ -80,10 +98,37 @@ pub struct Response {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub finish: FinishReason,
-    /// Time to first token.
+    /// Time to first token, measured from submission (queueing, admission,
+    /// and — under chunked prefill — every prefill chunk all count).
     pub ttft: std::time::Duration,
-    /// Total request latency.
+    /// Total request latency, measured from submission.
     pub latency: std::time::Duration,
+}
+
+impl Response {
+    /// A token-less response for a request that never produced output
+    /// (rejected, or cancelled before admission).
+    pub fn empty(id: u64, finish: FinishReason) -> Self {
+        Self {
+            id,
+            tokens: Vec::new(),
+            finish,
+            ttft: Default::default(),
+            latency: Default::default(),
+        }
+    }
+}
+
+/// Where a running sequence is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// `done` prompt positions sit in the KV cache (shared-prefix reuse
+    /// plus finished chunks); `prompt[done..]` still needs compute. The
+    /// sequence has produced no token yet and cannot decode, but it CAN be
+    /// swap-preempted and resumed mid-prefill.
+    Prefilling { done: usize },
+    /// Prompt fully prefilled; `next_token` is pending consumption.
+    Decoding,
 }
 
 struct Running {
@@ -92,7 +137,8 @@ struct Running {
     generated: Vec<u32>,
     next_token: u32,
     rng: Xoshiro256,
-    admitted_at: Instant,
+    phase: Phase,
+    submitted_at: Instant,
     first_token_at: Instant,
     /// Draft-engine sequence mirroring this request's committed history
     /// (speculative decoding); lazily admitted, dropped whenever the
@@ -105,17 +151,44 @@ struct Running {
     spec_off: bool,
 }
 
+impl Running {
+    fn finished(self, finish: FinishReason) -> Response {
+        // a sequence retired while still prefilling never produced a token
+        // — report a zero TTFT rather than a fabricated one
+        let ttft = match self.phase {
+            Phase::Prefilling { .. } => Default::default(),
+            Phase::Decoding => self.first_token_at - self.submitted_at,
+        };
+        Response {
+            id: self.req.id,
+            tokens: self.generated,
+            finish,
+            ttft,
+            latency: self.submitted_at.elapsed(),
+        }
+    }
+}
+
 /// Scheduler tunables.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerCfg {
     /// Upper bound on concurrently-running sequences.
     pub max_running: usize,
-    /// Max admissions (prefills) per step — bounds TTFT jitter for the
-    /// already-running decodes (prefill/decode interference control).
-    pub admits_per_step: usize,
+    /// Per-step token budget for the fused engine step. Every running
+    /// decode row costs one token; the remaining budget is filled with
+    /// prefill-chunk tokens (running prefills first, then new admissions).
+    /// This bounds prefill/decode interference — a long prompt can consume
+    /// at most this many prompt tokens per step while decodes run — and
+    /// thereby TTFT/ITL jitter. Engines without chunked-prefill support
+    /// still admit monolithically, debiting the whole prompt against the
+    /// budget (at least one admission per step stays possible).
+    pub token_budget_per_step: usize,
+    /// Per-sequence cap on prompt tokens consumed per step (chunk size).
+    pub chunk_tokens: usize,
     /// Speculative decoding: draft this many tokens per sequence per step
     /// through the draft engine and verify them in one widened target step
-    /// (0 = plain decode; ignored without [`Scheduler::with_draft`]).
+    /// (0 = plain decode; ignored without [`Scheduler::with_draft`]). The
+    /// speculative sub-step only serves fully-prefilled sequences.
     pub spec_k: usize,
 }
 
@@ -123,7 +196,8 @@ impl Default for SchedulerCfg {
     fn default() -> Self {
         Self {
             max_running: 32,
-            admits_per_step: 4,
+            token_budget_per_step: 2048,
+            chunk_tokens: 256,
             spec_k: 0,
         }
     }
@@ -133,7 +207,8 @@ impl Default for SchedulerCfg {
 pub struct Scheduler<E: Engine> {
     engine: E,
     cfg: SchedulerCfg,
-    queue: VecDeque<Request>,
+    /// FIFO of (request, submission time) — TTFT/latency count from here.
+    queue: VecDeque<(Request, Instant)>,
     running: Vec<Running>,
     /// Swap-preempted sequences awaiting resume, oldest first. Their KV
     /// state lives in the engine's spill buffer; sampler state lives here.
@@ -198,7 +273,44 @@ impl<E: Engine> Scheduler<E> {
     }
 
     pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    /// Cancel a request wherever it lives — queued, running (possibly
+    /// mid-prefill), or swapped out. Its resources release immediately and
+    /// a [`FinishReason::Cancelled`] response carrying whatever was
+    /// generated so far is emitted. Returns false when no such request is
+    /// in flight (already finished, or never submitted).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(qi) = self.queue.iter().position(|(req, _)| req.id == id) {
+            let (req, submitted_at) = self.queue.remove(qi).unwrap();
+            Metrics::inc(&self.metrics.requests_cancelled);
+            self.metrics.e2e.record(submitted_at.elapsed());
+            self.done.push(Response {
+                latency: submitted_at.elapsed(),
+                ..Response::empty(req.id, FinishReason::Cancelled)
+            });
+            return true;
+        }
+        if let Some(i) = self.running.iter().position(|r| r.req.id == id) {
+            let mut r = self.running.remove(i);
+            self.drop_draft(&mut r);
+            self.engine.release(r.seq);
+            Metrics::inc(&self.metrics.requests_cancelled);
+            self.metrics.e2e.record(r.submitted_at.elapsed());
+            self.done.push(r.finished(FinishReason::Cancelled));
+            return true;
+        }
+        if let Some(i) = self.swapped.iter().position(|r| r.req.id == id) {
+            let mut r = self.swapped.remove(i).unwrap();
+            self.drop_draft(&mut r);
+            self.engine.release(r.seq);
+            Metrics::inc(&self.metrics.requests_cancelled);
+            self.metrics.e2e.record(r.submitted_at.elapsed());
+            self.done.push(r.finished(FinishReason::Cancelled));
+            return true;
+        }
+        false
     }
 
     pub fn n_queued(&self) -> usize {
@@ -222,12 +334,12 @@ impl<E: Engine> Scheduler<E> {
         self.queue.is_empty() && self.running.is_empty() && self.swapped.is_empty()
     }
 
-    /// One engine step (resume + admit + decode). Returns the number of
-    /// sequences that made progress.
+    /// One engine step (resume + plan/admit + fused decode/prefill).
+    /// Returns the number of sequences that made progress.
     pub fn step(&mut self) -> usize {
         self.resume_swapped();
-        self.admit();
-        let n = self.decode();
+        let plan = self.admit_and_plan();
+        let n = self.decode(&plan);
         self.sync_cache_metrics();
         n
     }
@@ -269,7 +381,7 @@ impl<E: Engine> Scheduler<E> {
                     self.drop_draft(&mut r);
                     self.engine.release(r.seq);
                     Metrics::inc(&self.metrics.preemptions);
-                    self.queue.push_front(r.req);
+                    self.queue.push_front((r.req, r.submitted_at));
                 }
             }
         }
@@ -312,108 +424,191 @@ impl<E: Engine> Scheduler<E> {
         self.drop_draft(&mut r);
         self.engine.release(r.seq);
         Metrics::inc(&self.metrics.requests_completed);
-        let latency = r.admitted_at.elapsed();
+        let latency = r.submitted_at.elapsed();
         self.metrics.e2e.record(latency);
-        self.done.push(Response {
-            id: r.req.id,
-            tokens: r.generated,
-            finish: FinishReason::Length,
-            ttft: r.first_token_at - r.admitted_at,
-            latency,
-        });
+        self.done.push(r.finished(FinishReason::Length));
     }
 
-    fn admit(&mut self) {
+    /// Build this step's token-budget plan and admit new work into it.
+    /// Decode rows are debited first — every fully-prefilled running
+    /// sequence WILL advance this step — then the remaining budget is
+    /// handed to prefill chunks: running prefills in admission order, then
+    /// new admissions. Returns the planned `(sequence, chunk tokens)`
+    /// list; the budget gauges are refreshed as a side effect.
+    fn admit_and_plan(&mut self) -> Vec<(SeqId, usize)> {
+        let budget = self.cfg.token_budget_per_step.max(1);
+        let chunk_cap = self.cfg.chunk_tokens.max(1);
+        // a decode row costs one token — except a sequence the speculative
+        // sub-step will serve, which consumes up to 1 + spec_k widened
+        // target positions this step and is debited as such
+        let spec_on =
+            self.cfg.spec_k > 0 && self.draft.is_some() && self.engine.supports_rollback();
+        let mut used = self
+            .running
+            .iter()
+            .filter(|r| r.phase == Phase::Decoding)
+            .map(|r| {
+                if spec_on && !r.spec_off && r.req.sampler.is_greedy() {
+                    1 + self.cfg.spec_k
+                } else {
+                    1
+                }
+            })
+            .sum::<usize>();
+        let mut plan: Vec<(SeqId, usize)> = Vec::new();
+        for r in &self.running {
+            let Phase::Prefilling { done } = r.phase else {
+                continue;
+            };
+            if used >= budget {
+                break;
+            }
+            let n = (r.req.prompt.len() - done).min(chunk_cap).min(budget - used);
+            if n > 0 {
+                used += n;
+                plan.push((r.seq, n));
+            }
+        }
+        self.admit(budget, chunk_cap, &mut used, &mut plan);
+        Metrics::set(&self.metrics.budget_token_limit, budget as u64);
+        Metrics::set(&self.metrics.budget_tokens_planned, used as u64);
+        plan
+    }
+
+    fn admit(
+        &mut self,
+        budget: usize,
+        chunk_cap: usize,
+        used: &mut usize,
+        plan: &mut Vec<(SeqId, usize)>,
+    ) {
         // Swapped sequences are older than anything queued and their blocks
         // come from the same pool — don't admit past them (starvation gate).
         if !self.swapped.is_empty() {
             return;
         }
-        let mut admitted = 0;
-        while admitted < self.cfg.admits_per_step
+        let chunked = self.engine.supports_chunked_prefill();
+        while *used < budget
             && self.running.len() < self.cfg.max_running.min(self.engine.max_batch())
         {
-            let Some(req) = self.queue.front() else { break };
+            let Some((req, _)) = self.queue.front() else { break };
             // reject malformed requests outright
             if req.prompt.is_empty()
                 || req.prompt.len() + req.max_new_tokens > self.engine.cfg().max_seq_len
                 || req.sampler.validate().is_err()
             {
-                let req = self.queue.pop_front().unwrap();
+                let (req, _) = self.queue.pop_front().unwrap();
                 Metrics::inc(&self.metrics.requests_rejected);
-                self.done.push(Response {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    finish: FinishReason::Rejected,
-                    ttft: Default::default(),
-                    latency: Default::default(),
-                });
+                self.done.push(Response::empty(req.id, FinishReason::Rejected));
                 continue;
             }
             if !self.engine.can_admit_tokens(&req.prompt) {
                 break; // wait for capacity
             }
-            let req = self.queue.pop_front().unwrap();
-            let t0 = Instant::now();
+            if chunked && self.engine.prefill_pending_prefix(&req.prompt) {
+                // an in-flight chunked prefill will register blocks this
+                // prompt can borrow — admitting now would recompute them
+                break;
+            }
+            let (req, submitted_at) = self.queue.pop_front().unwrap();
+            let now = Instant::now();
+            if chunked {
+                // chunked admission: reserve blocks + borrow the shared
+                // prefix, compute nothing — the prompt runs as budgeted
+                // chunk rows of the fused steps from here on
+                match self.engine.prefill_begin(&req.prompt) {
+                    Ok((seq, reused)) => {
+                        Metrics::inc(&self.metrics.requests_admitted);
+                        let rng = Xoshiro256::seed_from_u64(req.seed);
+                        self.running.push(Running {
+                            req,
+                            seq,
+                            generated: Vec::new(),
+                            next_token: 0,
+                            rng,
+                            phase: Phase::Prefilling { done: reused },
+                            submitted_at,
+                            first_token_at: now,
+                            draft_seq: None,
+                            spec_rounds: 0,
+                            spec_accepted: 0,
+                            spec_off: false,
+                        });
+                        let r = self.running.last().expect("just pushed");
+                        let n = (r.req.prompt.len() - reused)
+                            .min(chunk_cap)
+                            .min(budget - *used);
+                        if n > 0 {
+                            *used += n;
+                            plan.push((seq, n));
+                        }
+                    }
+                    Err(EngineError::CapacityExhausted(_)) => {
+                        self.queue.push_front((req, submitted_at));
+                        break;
+                    }
+                    Err(_) => {
+                        Metrics::inc(&self.metrics.requests_rejected);
+                        self.done.push(Response::empty(req.id, FinishReason::Rejected));
+                    }
+                }
+                continue;
+            }
+            // monolithic admission (engines without chunked support): the
+            // whole prompt prefills here and debits the budget in one go
             match self.engine.prefill_shared(&req.prompt) {
                 Ok((seq, logits, reused)) => {
                     let mut rng = Xoshiro256::seed_from_u64(req.seed);
                     let first = sample(&logits, &req.sampler, &mut rng);
                     Metrics::inc(&self.metrics.requests_admitted);
                     // only positions actually computed count as prefilled
-                    Metrics::add(
-                        &self.metrics.tokens_prefilled,
-                        (req.prompt.len() - reused) as u64,
-                    );
+                    let computed = req.prompt.len() - reused;
+                    Metrics::add(&self.metrics.tokens_prefilled, computed as u64);
+                    *used += computed.max(1);
                     let now = Instant::now();
-                    self.metrics.ttft.record(now - t0);
+                    self.metrics.ttft.record(now - submitted_at);
                     self.running.push(Running {
                         req,
                         seq,
                         generated: Vec::new(),
                         next_token: first,
                         rng,
-                        admitted_at: t0,
+                        phase: Phase::Decoding,
+                        submitted_at,
                         first_token_at: now,
                         draft_seq: None,
                         spec_rounds: 0,
                         spec_accepted: 0,
                         spec_off: false,
                     });
-                    admitted += 1;
                 }
                 Err(EngineError::CapacityExhausted(_)) => {
                     // put it back and stop admitting this step
-                    self.queue.push_front(req);
+                    self.queue.push_front((req, submitted_at));
                     break;
                 }
                 Err(_) => {
                     Metrics::inc(&self.metrics.requests_rejected);
-                    self.done.push(Response {
-                        id: req.id,
-                        tokens: Vec::new(),
-                        finish: FinishReason::Rejected,
-                        ttft: Default::default(),
-                        latency: Default::default(),
-                    });
+                    self.done.push(Response::empty(req.id, FinishReason::Rejected));
                 }
             }
         }
     }
 
-    fn decode(&mut self) -> usize {
+    fn decode(&mut self, plan: &[(SeqId, usize)]) -> usize {
         if self.running.is_empty() {
             return 0;
         }
-        // Speculative sub-step first: sequences it serves are excluded from
-        // the plain sub-step; sequences it could not serve (draft capacity,
-        // verify capacity) fall through and still decode one token.
+        // Speculative sub-step first (fully-prefilled sequences only):
+        // sequences it serves are excluded from the fused sub-step;
+        // sequences it could not serve (draft capacity, verify capacity)
+        // fall through and still decode one token there.
         let mut ran_spec: Vec<SeqId> = Vec::new();
         let mut progressed = 0;
         if self.cfg.spec_k > 0 && self.draft.is_some() && self.engine.supports_rollback() {
             progressed += self.spec_substep(&mut ran_spec);
         }
-        progressed + self.plain_substep(&ran_spec)
+        progressed + self.fused_substep(&ran_spec, plan)
     }
 
     /// Ensure `running[i]` has a live draft sequence mirroring its committed
@@ -470,7 +665,7 @@ impl<E: Engine> Scheduler<E> {
         // context budgets
         let mut cand: Vec<(usize, usize)> = Vec::new();
         for (i, r) in self.running.iter().enumerate() {
-            if r.spec_off || !r.req.sampler.is_greedy() {
+            if r.spec_off || !r.req.sampler.is_greedy() || r.phase != Phase::Decoding {
                 continue;
             }
             let len = r.req.prompt.len() + r.generated.len();
@@ -578,13 +773,7 @@ impl<E: Engine> Scheduler<E> {
                     self.drop_draft(&mut r);
                     self.engine.release(r.seq);
                     ran_spec.push(r.seq);
-                    self.done.push(Response {
-                        id: r.req.id,
-                        tokens: r.generated,
-                        finish: FinishReason::Rejected,
-                        ttft: r.first_token_at - r.admitted_at,
-                        latency: r.admitted_at.elapsed(),
-                    });
+                    self.done.push(r.finished(FinishReason::Rejected));
                 }
                 return 0;
             }
@@ -695,30 +884,49 @@ impl<E: Engine> Scheduler<E> {
             self.drop_draft(&mut r);
             self.engine.release(r.seq);
             Metrics::inc(&self.metrics.requests_completed);
-            let latency = r.admitted_at.elapsed();
+            let latency = r.submitted_at.elapsed();
             self.metrics.e2e.record(latency);
-            self.done.push(Response {
-                id: r.req.id,
-                tokens: r.generated,
-                finish: reason,
-                ttft: r.first_token_at - r.admitted_at,
-                latency,
-            });
+            self.done.push(r.finished(reason));
         }
         vcand.len()
     }
 
-    /// One plain batched decode step over every running sequence not served
-    /// by the speculative sub-step this round.
-    fn plain_substep(&mut self, ran_spec: &[SeqId]) -> usize {
+    /// THE fused sub-step: one [`Engine::step_batch`] over every decoding
+    /// sequence not served by the speculative sub-step this round PLUS
+    /// every planned prefill chunk — decode rows and prompt rows share the
+    /// step's weight traffic. Chunk completions sample their first token
+    /// here (TTFT); decode rows advance exactly as the old plain sub-step.
+    fn fused_substep(&mut self, ran_spec: &[SeqId], plan: &[(SeqId, usize)]) -> usize {
         let idx: Vec<usize> = self
             .running
             .iter()
             .enumerate()
-            .filter(|(_, r)| !ran_spec.contains(&r.seq))
+            .filter(|(_, r)| r.phase == Phase::Decoding && !ran_spec.contains(&r.seq))
             .map(|(i, _)| i)
             .collect();
-        if idx.is_empty() {
+        // Resolve the chunk plan against the current running set — the
+        // speculative sub-step may have retired sequences since planning.
+        let mut chunk_idx: Vec<usize> = Vec::new();
+        let mut chunks: Vec<ChunkInput> = Vec::new();
+        for &(seq, n) in plan {
+            let Some(i) = self.running.iter().position(|r| r.seq == seq) else {
+                continue;
+            };
+            let Phase::Prefilling { done } = self.running[i].phase else {
+                continue;
+            };
+            let r = &self.running[i];
+            let n = n.min(r.req.prompt.len() - done);
+            if n == 0 {
+                continue;
+            }
+            chunk_idx.push(i);
+            chunks.push(ChunkInput {
+                seq,
+                tokens: r.req.prompt[done..done + n].to_vec(),
+            });
+        }
+        if idx.is_empty() && chunks.is_empty() {
             return 0;
         }
         let t0 = Instant::now();
@@ -732,15 +940,15 @@ impl<E: Engine> Scheduler<E> {
                 }
             })
             .collect();
-        let logits = match self.engine.decode_batch(&inputs) {
-            Ok(l) => l,
+        let out = match self.engine.step_batch(&inputs, &chunks) {
+            Ok(o) => o,
             Err(EngineError::CapacityExhausted(_)) => {
                 self.preempt_one();
                 return 0;
             }
             Err(e) => {
                 // Fail every running request rather than wedging the loop.
-                crate::log_error!("decode_batch failed: {e}");
+                crate::log_error!("step_batch failed: {e}");
                 for mut r in self
                     .running
                     .drain(..)
@@ -750,28 +958,49 @@ impl<E: Engine> Scheduler<E> {
                         draft.release(ds);
                     }
                     self.engine.release(r.seq);
-                    self.done.push(Response {
-                        id: r.req.id,
-                        tokens: r.generated,
-                        finish: FinishReason::Rejected,
-                        ttft: r.first_token_at - r.admitted_at,
-                        latency: r.admitted_at.elapsed(),
-                    });
+                    self.done.push(r.finished(FinishReason::Rejected));
                 }
                 return 0;
             }
         };
         Metrics::inc(&self.metrics.batches_run);
-        Metrics::add(&self.metrics.tokens_decoded, inputs.len() as u64);
-        let dt = t0.elapsed();
-        // amortized per-token time
-        self.metrics
-            .tpot
-            .record(dt / (inputs.len().max(1) as u32));
 
-        let n = idx.len();
+        // ---- prefill-chunk bookkeeping --------------------------------
+        debug_assert_eq!(out.chunk_logits.len(), chunks.len());
+        for ((&i, c), logits) in chunk_idx.iter().zip(&chunks).zip(out.chunk_logits) {
+            let n = c.tokens.len();
+            Metrics::inc(&self.metrics.prefill_chunks);
+            Metrics::add(&self.metrics.prefill_chunk_tokens, n as u64);
+            Metrics::add(&self.metrics.tokens_prefilled, n as u64);
+            let r = &mut self.running[i];
+            let Phase::Prefilling { done } = r.phase else {
+                unreachable!("chunk ran for a decoding sequence");
+            };
+            r.phase = Phase::Prefilling { done: done + n };
+            if let Some(row) = logits {
+                // the chunk completed the prompt: first token, flip phase
+                debug_assert_eq!(done + n, r.req.prompt.len());
+                r.next_token = sample(&row, &r.req.sampler, &mut r.rng);
+                r.phase = Phase::Decoding;
+                let now = Instant::now();
+                r.first_token_at = now;
+                self.metrics.ttft.record(now - r.submitted_at);
+            }
+        }
+
+        // ---- decode rows ----------------------------------------------
+        if !inputs.is_empty() {
+            Metrics::add(&self.metrics.tokens_decoded, inputs.len() as u64);
+            // amortized per-token time — only meaningful when the step ran
+            // no prefill chunks (a fused step's wall time covers the chunk
+            // rows too, which would inflate TPOT by orders of magnitude)
+            if chunks.is_empty() {
+                let dt = t0.elapsed();
+                self.metrics.tpot.record(dt / (inputs.len() as u32));
+            }
+        }
         let mut finished = Vec::new();
-        for (pos, row) in logits.into_iter().enumerate() {
+        for (pos, row) in out.decode_logits.into_iter().enumerate() {
             let i = idx[pos];
             // advancing outside the speculative path invalidates any draft
             // sequence (its cache no longer mirrors the committed history)
@@ -791,17 +1020,11 @@ impl<E: Engine> Scheduler<E> {
             let r = self.running.remove(i);
             self.engine.release(r.seq);
             Metrics::inc(&self.metrics.requests_completed);
-            let latency = r.admitted_at.elapsed();
+            let latency = r.submitted_at.elapsed();
             self.metrics.e2e.record(latency);
-            self.done.push(Response {
-                id: r.req.id,
-                tokens: r.generated,
-                finish: reason,
-                ttft: r.first_token_at - r.admitted_at,
-                latency,
-            });
+            self.done.push(r.finished(reason));
         }
-        n
+        idx.len() + chunks.len()
     }
 
     /// Evict the youngest running sequence after a capacity failure.
@@ -853,7 +1076,7 @@ impl<E: Engine> Scheduler<E> {
                 // sampling), so recompute from the original prompt.
                 self.drop_draft(&mut victim);
                 self.engine.release(victim.seq);
-                self.queue.push_front(victim.req);
+                self.queue.push_front((victim.req, victim.submitted_at));
             }
         }
     }
@@ -990,7 +1213,6 @@ mod tests {
             CpuEngine::new(w, 8, 4 * bytes_per_block),
             SchedulerCfg {
                 max_running: 8,
-                admits_per_step: 8,
                 ..Default::default()
             },
             Arc::new(Metrics::new()),
@@ -1018,7 +1240,6 @@ mod tests {
                 CpuEngine::new(w.clone(), 4, budget),
                 SchedulerCfg {
                     max_running: 8,
-                    admits_per_step: 8,
                     ..Default::default()
                 },
                 Arc::new(Metrics::new()),
@@ -1043,7 +1264,6 @@ mod tests {
             CpuEngine::new(w.clone(), 4, 6 * bytes_per_block),
             SchedulerCfg {
                 max_running: 8,
-                admits_per_step: 8,
                 ..Default::default()
             },
             Arc::clone(&metrics),
@@ -1166,6 +1386,131 @@ mod tests {
             assert_eq!(r.finish, FinishReason::Length);
             assert!(!r.tokens.is_empty() && r.tokens.len() < 10, "req {}", r.id);
         }
+    }
+
+    /// Acceptance gate: while a decode is running, a long-prompt admission
+    /// must never run more than `token_budget_per_step` prompt tokens in
+    /// one step, the decode must keep producing a token EVERY step (no
+    /// head-of-line blocking), and the final streams must be byte-identical
+    /// to an unbudgeted run.
+    #[test]
+    fn budget_caps_prompt_tokens_per_step_under_load() {
+        use std::sync::atomic::Ordering;
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 86);
+        let long_prompt: Vec<u32> = (0..64).map(|i| (i * 19 + 3) % 250).collect();
+        let reference: Vec<Vec<u32>> = {
+            let mut s = Scheduler::new(
+                CpuEngine::new(w.clone(), 8, 8 << 20),
+                SchedulerCfg::default(),
+                Arc::new(Metrics::new()),
+            );
+            s.submit(Request::greedy(1, vec![1, 2, 3], 40));
+            s.submit(Request::greedy(2, long_prompt.clone(), 4));
+            let mut done = s.run_to_completion();
+            done.sort_by_key(|r| r.id);
+            done.into_iter().map(|r| r.tokens).collect()
+        };
+
+        let metrics = Arc::new(Metrics::new());
+        let budget = 9; // 1 decode row + up to 8 prompt tokens per step
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, 8 << 20),
+            SchedulerCfg {
+                token_budget_per_step: budget,
+                chunk_tokens: 8,
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        );
+        s.submit(Request::greedy(1, vec![1, 2, 3], 40));
+        s.step(); // short request prefills and samples its first token
+        s.submit(Request::greedy(2, long_prompt, 4));
+        let mut all_done = Vec::new();
+        let mut prev_pre = metrics.tokens_prefilled.load(Ordering::Relaxed);
+        let mut prev_dec = metrics.tokens_decoded.load(Ordering::Relaxed);
+        let mut guard = 0;
+        while !s.is_idle() {
+            guard += 1;
+            assert!(guard < 1000, "budgeted run wedged");
+            s.step();
+            let pre = metrics.tokens_prefilled.load(Ordering::Relaxed);
+            let dec = metrics.tokens_decoded.load(Ordering::Relaxed);
+            assert!(
+                pre - prev_pre <= budget as u64,
+                "one step ran {} prompt tokens (budget {budget})",
+                pre - prev_pre
+            );
+            let short_done = all_done.iter().any(|r: &Response| r.id == 1);
+            if !short_done {
+                assert!(
+                    dec > prev_dec,
+                    "the running decode was starved by the long prefill"
+                );
+            }
+            prev_pre = pre;
+            prev_dec = dec;
+            all_done.extend(s.take_done());
+        }
+        all_done.sort_by_key(|r| r.id);
+        let got: Vec<Vec<u32>> = all_done.into_iter().map(|r| r.tokens).collect();
+        assert_eq!(got, reference, "budgeting changed the generated tokens");
+        assert!(
+            metrics.prefill_chunks.load(Ordering::Relaxed) >= 8,
+            "the long prompt should have run as several chunks"
+        );
+    }
+
+    /// Cancellation in all three homes — queued, mid-prefill, decoding —
+    /// releases resources and never perturbs surviving requests.
+    #[test]
+    fn cancel_queued_mid_prefill_and_decoding() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 87);
+        let want = greedy_generate(&w, &[5, 6, 7], 6);
+        let metrics = Arc::new(Metrics::new());
+        let mut s = Scheduler::new(
+            CpuEngine::new(w, 8, 8 << 20),
+            SchedulerCfg {
+                token_budget_per_step: 8,
+                chunk_tokens: 4,
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        );
+        // queued: cancelled before any step ever sees it
+        s.submit(Request::greedy(1, vec![1, 2], 5));
+        assert!(s.cancel(1));
+        // mid-prefill: one chunk in, still Prefilling
+        let long: Vec<u32> = (0..20).map(|i| (i * 7 + 1) % 250).collect();
+        s.submit(Request::greedy(2, long, 5));
+        s.step();
+        assert_eq!(s.n_running(), 1);
+        assert!(s.cancel(2));
+        assert_eq!(s.n_running(), 0);
+        // decoding: survivors must stay byte-identical
+        s.submit(Request::greedy(3, vec![5, 6, 7], 6));
+        s.submit(Request::greedy(4, vec![9, 9, 1], 50));
+        s.step(); // both prefill
+        s.step(); // both decode one token
+        assert!(s.cancel(4));
+        assert!(!s.cancel(99), "unknown id must report not-found");
+        let mut done = s.run_to_completion();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 4);
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(done[1].finish, FinishReason::Cancelled);
+        assert!(done[1].tokens.is_empty(), "mid-prefill cancel has no tokens");
+        assert_eq!(done[2].finish, FinishReason::Length);
+        assert_eq!(done[2].tokens, want, "survivor diverged after cancels");
+        assert_eq!(done[3].finish, FinishReason::Cancelled);
+        assert!(!done[3].tokens.is_empty() && done[3].tokens.len() < 50);
+        // every cancelled sequence's blocks came back, and the registry
+        // conserves terminations
+        let snap = s.engine().kv_snapshot().unwrap();
+        assert_eq!(snap.used_blocks, 0, "cancel leaked KV blocks");
+        assert_eq!(metrics.requests_cancelled.load(Ordering::Relaxed), 3);
     }
 
     // ---- speculative decoding ------------------------------------------

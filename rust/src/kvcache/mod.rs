@@ -21,6 +21,12 @@
 //!   zero it stays in the prefix index as *reclaimable*: future prompts can
 //!   still share it, and the allocator evicts it (oldest first) only when
 //!   the truly-free list runs dry.
+//! * **Chunked-prefill registration** — [`KvCache::alloc_seq_prefix`]
+//!   reserves a prompt's blocks without indexing them; the engine fills
+//!   them chunk by chunk across scheduler steps and registers each full
+//!   block as it completes ([`KvCache::register_prompt_block`]), so a
+//!   still-prefilling prompt shares exactly its finished blocks and a
+//!   concurrent admission can never borrow unfilled data.
 //! * **Swap** — [`KvCache::swap_out`] spills a preempted sequence's blocks
 //!   to a bounded host-side buffer and frees them; [`KvCache::swap_in`]
 //!   restores the sequence byte-identically (re-borrowing still-indexed
@@ -205,10 +211,17 @@ enum Store {
 }
 
 struct SwappedSeq {
-    /// Full block contents, in block-table order (same kind as the pool).
+    /// Contents of the first `n_spilled` blocks, in block-table order
+    /// (same kind as the pool). Blocks past the filled length — a
+    /// mid-prefill sequence reserves its whole prompt up front — hold no
+    /// data and are neither copied nor counted against the spill budget.
     payload: Store,
     len: usize,
-    n_blocks: usize,
+    /// Blocks actually spilled: `blocks_for(len)`.
+    n_spilled: usize,
+    /// Blocks the sequence had reserved (>= `n_spilled`); swap-in restores
+    /// the full reservation.
+    n_reserved: usize,
     prompt_hashes: Vec<u64>,
 }
 
@@ -438,6 +451,11 @@ impl KvCache {
         matches!(self.store, Store::U8 { .. })
     }
 
+    /// Is automatic prefix sharing on ([`CacheOpts::prefix_sharing`])?
+    pub fn prefix_sharing_enabled(&self) -> bool {
+        self.prefix_sharing
+    }
+
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
     }
@@ -655,7 +673,7 @@ impl KvCache {
 
     /// Register a new sequence and reserve blocks for its prompt.
     pub fn alloc_seq(&mut self, prompt_len: usize) -> Result<SeqId, CacheError> {
-        self.alloc_inner(prompt_len, None).map(|(id, _)| id)
+        self.alloc_inner(prompt_len, None, true).map(|(id, _)| id)
     }
 
     /// Register a new sequence for `tokens`, borrowing any full prompt
@@ -668,13 +686,30 @@ impl KvCache {
     /// sharers; the single-threaded admit → prefill flow guarantees nobody
     /// observes them unfilled).
     pub fn alloc_seq_shared(&mut self, tokens: &[u32]) -> Result<(SeqId, usize), CacheError> {
-        self.alloc_inner(tokens.len(), Some(tokens))
+        self.alloc_inner(tokens.len(), Some(tokens), true)
+    }
+
+    /// Like [`KvCache::alloc_seq_shared`], but for **chunked prefill**: all
+    /// of the prompt's blocks are reserved up front (admission capacity is
+    /// identical to the monolithic path) while only the borrowed shared
+    /// prefix counts as filled. Crucially, the fresh full prompt blocks are
+    /// NOT registered in the prefix index here — a chunked prefill fills
+    /// them across several scheduler steps with other admissions
+    /// interleaved between chunks, so registering at alloc time would let a
+    /// concurrent prompt borrow unfilled garbage. The engine registers each
+    /// block as its chunk completes instead
+    /// ([`KvCache::register_prompt_block`]), which is what lets a
+    /// partially-prefilled prompt participate in sharing and CoW exactly up
+    /// to its filled blocks.
+    pub fn alloc_seq_prefix(&mut self, tokens: &[u32]) -> Result<(SeqId, usize), CacheError> {
+        self.alloc_inner(tokens.len(), Some(tokens), false)
     }
 
     fn alloc_inner(
         &mut self,
         prompt_len: usize,
         tokens: Option<&[u32]>,
+        register_now: bool,
     ) -> Result<(SeqId, usize), CacheError> {
         if prompt_len > self.max_seq_len {
             return Err(CacheError::SeqTooLong {
@@ -704,14 +739,23 @@ impl KvCache {
                 return Err(e);
             }
         };
-        let shared_tokens = shared.len() * self.block_tokens;
-        self.stats.prefix_hit_blocks += shared.len() as u64;
+        let n_shared = shared.len();
+        let shared_tokens = n_shared * self.block_tokens;
+        self.stats.prefix_hit_blocks += n_shared as u64;
         self.stats.prefix_tokens_saved += shared_tokens as u64;
         let mut blocks = shared;
         blocks.extend(fresh);
-        if tokens.is_some() && self.prefix_sharing {
+        if tokens.is_some() && self.prefix_sharing && register_now {
             self.register_prompt_blocks(&blocks, &hashes);
         }
+        // Deferred registration: only the borrowed prefix blocks are filled
+        // (and already indexed); the rest of the hash chain grows block by
+        // block through `register_prompt_block`.
+        let prompt_hashes = if register_now {
+            hashes
+        } else {
+            hashes[..n_shared].to_vec()
+        };
         let id = SeqId(self.next_id);
         self.next_id += 1;
         self.seqs.insert(
@@ -719,11 +763,35 @@ impl KvCache {
             SeqState {
                 blocks,
                 len: shared_tokens,
-                prompt_hashes: hashes,
+                prompt_hashes,
             },
         );
         self.peak_used = self.peak_used.max(self.used_blocks());
         Ok((id, shared_tokens))
+    }
+
+    /// Register the next full prompt block of a chunked prefill in the
+    /// prefix index, now that its positions are actually filled. `tokens`
+    /// are the `block_tokens` prompt tokens the block holds; blocks must be
+    /// registered strictly in order (the chain hash extends the previous
+    /// block's). The engine calls this at chunk boundaries, so future
+    /// prompts can borrow a still-prefilling sequence's finished blocks.
+    /// When prefix sharing is off the hash chain still advances (swap-in
+    /// bookkeeping) but nothing is indexed.
+    pub fn register_prompt_block(&mut self, id: SeqId, tokens: &[u32]) -> Result<(), CacheError> {
+        assert_eq!(tokens.len(), self.block_tokens, "register one full block");
+        let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        let bi = st.prompt_hashes.len();
+        debug_assert!(
+            st.len >= (bi + 1) * self.block_tokens,
+            "registering a block whose positions are not filled yet"
+        );
+        let prev = st.prompt_hashes.last().copied().unwrap_or(0);
+        let h = chain_hash(prev, tokens);
+        let phys = st.blocks[bi];
+        self.seqs.get_mut(&id).unwrap().prompt_hashes.push(h);
+        self.register_prompt_blocks(&[phys], &[h]);
+        Ok(())
     }
 
     /// O(1) clone of a live sequence: the fork shares every block
@@ -759,7 +827,7 @@ impl KvCache {
             return Ok(());
         }
         if let Some(sw) = self.swapped.remove(&id) {
-            self.swapped_blocks -= sw.n_blocks;
+            self.swapped_blocks -= sw.n_spilled;
             return Ok(());
         }
         Err(CacheError::UnknownSeq(id))
@@ -770,7 +838,11 @@ impl KvCache {
     /// id and can be restored byte-identically with [`KvCache::swap_in`].
     pub fn swap_out(&mut self, id: SeqId) -> Result<usize, CacheError> {
         let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
-        let n = st.blocks.len();
+        let n_reserved = st.blocks.len();
+        // only blocks holding actual positions spill; a mid-prefill
+        // sequence's reserved-but-unfilled tail blocks carry no data and
+        // must not consume the bounded spill budget
+        let n = self.blocks_for(st.len);
         if self.swapped_blocks + n > self.swap_budget_blocks {
             return Err(CacheError::SwapBudgetExceeded {
                 seq_blocks: n,
@@ -780,10 +852,11 @@ impl KvCache {
         }
         let bf = self.block_elems();
         let bm = self.block_meta_floats();
+        let spilled = &st.blocks[..n];
         let payload = match &self.store {
             Store::F32(data) => {
                 let mut out = Vec::with_capacity(n * bf);
-                for &b in &st.blocks {
+                for &b in spilled {
                     out.extend_from_slice(&data[b * bf..(b + 1) * bf]);
                 }
                 Store::F32(out)
@@ -791,7 +864,7 @@ impl KvCache {
             Store::U8 { data, meta } => {
                 let mut out = Vec::with_capacity(n * bf);
                 let mut mout = Vec::with_capacity(n * bm);
-                for &b in &st.blocks {
+                for &b in spilled {
                     out.extend_from_slice(&data[b * bf..(b + 1) * bf]);
                     mout.extend_from_slice(&meta[b * bm..(b + 1) * bm]);
                 }
@@ -807,7 +880,8 @@ impl KvCache {
             SwappedSeq {
                 payload,
                 len: st.len,
-                n_blocks: n,
+                n_spilled: n,
+                n_reserved,
                 prompt_hashes: st.prompt_hashes,
             },
         );
@@ -838,15 +912,16 @@ impl KvCache {
                 }
             }
         }
-        let consumed = sw.n_blocks - hits + hits_reclaimable;
+        let consumed = sw.n_reserved - hits + hits_reclaimable;
         consumed + headroom_blocks <= self.free_blocks()
     }
 
     /// Restore a swapped-out sequence. Prefix blocks still present in the
-    /// index are re-borrowed; everything else is copied back from the spill
-    /// buffer, byte-identically. Returns the number of re-borrowed blocks.
+    /// index are re-borrowed, spilled data is copied back byte-identically,
+    /// and any reserved-but-unfilled tail blocks (mid-prefill sequences)
+    /// are re-reserved fresh. Returns the number of re-borrowed blocks.
     pub fn swap_in(&mut self, id: SeqId) -> Result<usize, CacheError> {
-        let (n, shared) = {
+        let (n_reserved, n_spilled, shared) = {
             let sw = self.swapped.get(&id).ok_or(CacheError::UnknownSeq(id))?;
             let mut shared = Vec::new();
             if self.prefix_sharing {
@@ -857,12 +932,12 @@ impl KvCache {
                     }
                 }
             }
-            (sw.n_blocks, shared)
+            (sw.n_reserved, sw.n_spilled, shared)
         };
         for &b in &shared {
             self.ref_block(b);
         }
-        let fresh = match self.take_blocks(n - shared.len()) {
+        let fresh = match self.take_blocks(n_reserved - shared.len()) {
             Ok(f) => f,
             Err(e) => {
                 for &b in &shared {
@@ -877,7 +952,7 @@ impl KvCache {
         blocks.extend(fresh);
         let bf = self.block_elems();
         let bm = self.block_meta_floats();
-        for (i, &b) in blocks.iter().enumerate().skip(reused) {
+        for (i, &b) in blocks.iter().enumerate().take(n_spilled).skip(reused) {
             match (&mut self.store, &sw.payload) {
                 (Store::F32(data), Store::F32(src)) => {
                     data[b * bf..(b + 1) * bf].copy_from_slice(&src[i * bf..(i + 1) * bf]);
@@ -893,7 +968,7 @@ impl KvCache {
         // since swap-out — re-register them for future sharers
         let hashes = sw.prompt_hashes.clone();
         self.register_prompt_blocks(&blocks, &hashes);
-        self.swapped_blocks -= n;
+        self.swapped_blocks -= n_spilled;
         self.stats.swap_ins += 1;
         self.stats.swap_blocks_reused += reused as u64;
         self.seqs.insert(
@@ -1179,15 +1254,32 @@ impl KvCache {
         id: SeqId,
         layer: usize,
     ) -> Result<impl Iterator<Item = BlockView<'_>> + '_, CacheError> {
+        let len = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?.len;
+        self.seq_block_views_upto(id, layer, len)
+    }
+
+    /// Like [`KvCache::seq_block_views`], but over only the first `upto`
+    /// positions (`upto <= seq_len`). The chunked-prefill continuation on a
+    /// quantized pool attends the shared-prefix positions through views
+    /// (pool precision, as a monolithic warm prefill would) and its own
+    /// already-computed chunk positions from raw in-register tails, so its
+    /// views must stop at the prefix boundary rather than the filled
+    /// length.
+    pub fn seq_block_views_upto(
+        &self,
+        id: SeqId,
+        layer: usize,
+        upto: usize,
+    ) -> Result<impl Iterator<Item = BlockView<'_>> + '_, CacheError> {
         assert!(layer < self.n_layers, "layer out of range");
         let st = self.seqs.get(&id).ok_or(CacheError::UnknownSeq(id))?;
+        assert!(upto <= st.len, "views past the filled length");
         let bt = self.block_tokens;
-        let len = st.len;
-        let n_used = len.div_ceil(bt);
+        let n_used = upto.div_ceil(bt);
         Ok(st.blocks[..n_used]
             .iter()
             .enumerate()
-            .map(move |(bi, &phys)| self.block_view(phys, layer, (len - bi * bt).min(bt))))
+            .map(move |(bi, &phys)| self.block_view(phys, layer, (upto - bi * bt).min(bt))))
     }
 
     /// One block's first `blen` positions for `layer`, as a strided window.
@@ -1459,6 +1551,129 @@ mod tests {
         let (_, reused) = c.alloc_seq_shared(&prompt).unwrap();
         assert_eq!(reused, 0);
         assert_eq!(c.stats().prefix_hit_blocks, 0);
+    }
+
+    // ---- lifecycle: chunked prefill (deferred registration) -----------
+
+    /// `alloc_seq_prefix` must reserve every prompt block up front (same
+    /// admission capacity as the monolithic path) while registering nothing
+    /// — a concurrent prompt must not be able to borrow unfilled blocks.
+    #[test]
+    fn alloc_seq_prefix_defers_registration() {
+        let (cfg, mut c) = cache(64);
+        let prompt: Vec<u32> = (0..9).collect(); // 2 full blocks + 1 tail
+        let (a, reused) = c.alloc_seq_prefix(&prompt).unwrap();
+        assert_eq!(reused, 0);
+        assert_eq!(c.seq_len(a), Some(0), "nothing filled yet");
+        assert_eq!(c.used_blocks(), 3, "all prompt blocks reserved");
+        // nothing registered: an identical prompt shares zero blocks
+        // (probe with alloc_seq_prefix, which registers nothing itself)
+        let (b, reused_b) = c.alloc_seq_prefix(&prompt).unwrap();
+        assert_eq!(reused_b, 0, "unfilled chunk blocks must not be shared");
+        c.free_seq(b).unwrap();
+
+        // fill + register the first block; now exactly it is shareable
+        fill(&mut c, &cfg, a, 0, 4, 0.0);
+        c.register_prompt_block(a, &prompt[..4]).unwrap();
+        let (b, reused_b) = c.alloc_seq_prefix(&prompt).unwrap();
+        assert_eq!(reused_b, 4, "registered chunk boundary is shareable");
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        c.gather(b, 0, &mut k, &mut v).unwrap();
+        let e = cfg.e();
+        assert_eq!(k[2 * e], 200.0, "borrowed bytes are the filled ones");
+        c.free_seq(b).unwrap();
+
+        // fill + register the second block; sharing extends to 8 positions
+        fill(&mut c, &cfg, a, 4, 4, 0.0);
+        c.register_prompt_block(a, &prompt[4..8]).unwrap();
+        let (b, reused_b) = c.alloc_seq_prefix(&prompt).unwrap();
+        assert_eq!(reused_b, 8);
+        c.free_seq(b).unwrap();
+        c.free_seq(a).unwrap();
+    }
+
+    /// A chunked admission that starts on a warm prefix borrows it exactly
+    /// like the monolithic path, and its hash chain continues from the
+    /// borrowed blocks.
+    #[test]
+    fn alloc_seq_prefix_borrows_warm_prefix() {
+        let (cfg, mut c) = cache(64);
+        let prompt: Vec<u32> = (0..12).collect();
+        // warm only the first two blocks (8-token seed prompt)
+        let (a, _) = c.alloc_seq_shared(&prompt[..8]).unwrap();
+        fill(&mut c, &cfg, a, 0, 8, 0.0);
+        let (b, reused) = c.alloc_seq_prefix(&prompt).unwrap();
+        assert_eq!(reused, 8, "both warm full blocks borrowed");
+        assert_eq!(c.seq_len(b), Some(8));
+        // fill the third block and register it: the chain hash must line up
+        // with what a monolithic registration would have produced, i.e. a
+        // longer prompt's probe now walks through b's block too
+        fill(&mut c, &cfg, b, 8, 4, 0.0);
+        c.register_prompt_block(b, &prompt[8..12]).unwrap();
+        let mut longer = prompt.clone();
+        longer.push(99);
+        let (d, reused_d) = c.alloc_seq_prefix(&longer).unwrap();
+        assert_eq!(reused_d, 12, "chunk-registered block extends the chain");
+        c.free_seq(d).unwrap();
+        c.free_seq(b).unwrap();
+        c.free_seq(a).unwrap();
+    }
+
+    /// A mid-prefill sequence (some blocks filled, some merely reserved)
+    /// must swap out and back byte-identically, with only its *filled*
+    /// hash chain re-probed.
+    #[test]
+    fn mid_prefill_swap_roundtrip() {
+        let (cfg, mut c) = cache(64);
+        let prompt: Vec<u32> = (0..9).collect();
+        let (a, _) = c.alloc_seq_prefix(&prompt).unwrap();
+        fill(&mut c, &cfg, a, 0, 6, 0.0);
+        c.register_prompt_block(a, &prompt[..4]).unwrap();
+        let (mut k0, mut v0) = (Vec::new(), Vec::new());
+        c.gather(a, 1, &mut k0, &mut v0).unwrap();
+        c.swap_out(a).unwrap();
+        // only the 2 filled blocks spill; the reserved-but-empty third
+        // block must not consume spill budget
+        assert_eq!(c.snapshot().swapped_blocks, 2);
+        assert!(c.can_swap_in(a, 0));
+        c.swap_in(a).unwrap();
+        assert_eq!(c.seq_len(a), Some(6), "filled length survives the swap");
+        assert_eq!(c.used_blocks(), 3, "full reservation restored");
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        c.gather(a, 1, &mut k1, &mut v1).unwrap();
+        assert_eq!(k0, k1, "swap changed filled K bytes");
+        assert_eq!(v0, v1, "swap changed filled V bytes");
+        // and the prefill can continue where it stopped
+        fill(&mut c, &cfg, a, 6, 3, 0.0);
+        assert_eq!(c.seq_len(a), Some(9));
+        c.free_seq(a).unwrap();
+    }
+
+    /// `seq_block_views_upto` must expose exactly the requested prefix of
+    /// positions, agreeing with the full-view path on the overlap.
+    #[test]
+    fn views_upto_stop_at_the_prefix_boundary() {
+        let (cfg, mut c) = cache(64);
+        let id = c.alloc_seq(9).unwrap();
+        fill(&mut c, &cfg, id, 0, 9, 0.0);
+        let lens = |views: Vec<BlockView>| -> Vec<usize> {
+            views.iter().map(|b| b.len()).collect::<Vec<_>>()
+        };
+        let full: Vec<BlockView> = c.seq_block_views(id, 0).unwrap().collect();
+        assert_eq!(lens(full), vec![4, 4, 1]);
+        let part: Vec<BlockView> = c.seq_block_views_upto(id, 0, 6).unwrap().collect();
+        assert_eq!(lens(part), vec![4, 2]);
+        let none: Vec<BlockView> = c.seq_block_views_upto(id, 0, 0).unwrap().collect();
+        assert!(none.is_empty());
+        // the overlapping positions read the same bytes either way
+        let first = |vs: &[BlockView]| match vs[0] {
+            BlockView::F32 { data, .. } => data[0],
+            _ => unreachable!("f32 pool"),
+        };
+        let full: Vec<BlockView> = c.seq_block_views(id, 0).unwrap().collect();
+        let part: Vec<BlockView> = c.seq_block_views_upto(id, 0, 6).unwrap().collect();
+        assert_eq!(first(&full), first(&part));
+        c.free_seq(id).unwrap();
     }
 
     // ---- lifecycle: copy-on-write ------------------------------------

@@ -34,6 +34,16 @@ fn cli() -> Command {
                 .opt_default("seed", "1", "init seed when no weights given")
                 .opt_default("cache-mb", "256", "KV cache budget (MiB, CPU engine)")
                 .opt_default("max-running", "32", "max concurrent sequences")
+                .opt_default(
+                    "token-budget",
+                    "2048",
+                    "per-step token budget: decode rows first, rest fills prefill chunks",
+                )
+                .opt_default(
+                    "chunk-tokens",
+                    "256",
+                    "max prompt tokens one sequence prefills per step (chunked prefill)",
+                )
                 .flag("no-prefix-cache", "disable automatic prefix sharing (CPU engine)")
                 .opt_default("quantize", "none", "weights: none|int8 (per-channel symmetric)")
                 .flag("quantize-kv", "u8 KV-cache blocks: ~4x tokens per budget (CPU engine)")
@@ -53,6 +63,11 @@ fn cli() -> Command {
                 .opt_default("prompt", "1,2,3", "comma-separated token ids")
                 .opt_default("max-new", "16", "tokens to generate")
                 .opt_default("temperature", "0", "sampling temperature (0 = greedy)")
+                .opt_default(
+                    "chunk-tokens",
+                    "256",
+                    "max prompt tokens prefilled per step (chunked prefill)",
+                )
                 .opt_default("quantize", "none", "weights: none|int8 (per-channel symmetric)")
                 .flag("quantize-kv", "u8 KV-cache blocks: ~4x tokens per budget")
                 .opt_default(
@@ -210,7 +225,8 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
     }
     let sched = SchedulerCfg {
         max_running: args.num_or("max-running", 32)?,
-        admits_per_step: 4,
+        token_budget_per_step: args.num_or("token-budget", 2048)?,
+        chunk_tokens: args.num_or("chunk-tokens", 256)?,
         spec_k,
     };
     let coordinator = if let Some(dir) = args.get("artifacts") {
@@ -286,6 +302,7 @@ fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
     };
     let sched = SchedulerCfg {
         spec_k,
+        chunk_tokens: args.num_or("chunk-tokens", 256)?,
         ..Default::default()
     };
     let coordinator = if spec_k > 0 {

@@ -117,6 +117,9 @@ pub struct Metrics {
     pub requests_admitted: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Requests retired by [`crate::coordinator::Scheduler::cancel`] —
+    /// admitted + cancelled + completed + rejected stays conserved.
+    pub requests_cancelled: AtomicU64,
     /// Prompt positions actually computed by prefill (shared-prefix
     /// positions are counted in [`Metrics::kv_prefix_tokens_saved`] instead).
     pub tokens_prefilled: AtomicU64,
@@ -124,6 +127,18 @@ pub struct Metrics {
     pub batches_run: AtomicU64,
     /// Preemption events of either kind (swap-out or recompute).
     pub preemptions: AtomicU64,
+    // -- continuous batching / chunked prefill ---------------------------
+    /// Prefill chunks executed through the fused step.
+    pub prefill_chunks: AtomicU64,
+    /// Prompt tokens computed via prefill chunks (a subset of
+    /// [`Metrics::tokens_prefilled`], which also counts monolithic
+    /// admissions on engines without chunked support).
+    pub prefill_chunk_tokens: AtomicU64,
+    /// The scheduler's per-step token budget (gauge).
+    pub budget_token_limit: AtomicU64,
+    /// Tokens planned into the most recent step — decode rows plus prompt
+    /// chunk tokens (gauge; utilization = planned / limit).
+    pub budget_tokens_planned: AtomicU64,
     // -- KV-block lifecycle (mirrored from the engine's cache) -----------
     pub kv_prefix_hit_blocks: AtomicU64,
     pub kv_prefix_tokens_saved: AtomicU64,
@@ -207,6 +222,16 @@ impl Metrics {
         }
     }
 
+    /// Fraction of the last step's token budget actually planned.
+    pub fn budget_utilization(&self) -> f64 {
+        let limit = self.budget_token_limit.load(Ordering::Relaxed) as f64;
+        if limit == 0.0 {
+            0.0
+        } else {
+            self.budget_tokens_planned.load(Ordering::Relaxed) as f64 / limit
+        }
+    }
+
     /// Fraction of prompt tokens served from the prefix cache.
     pub fn prefix_hit_rate(&self) -> f64 {
         let saved = self.kv_prefix_tokens_saved.load(Ordering::Relaxed) as f64;
@@ -224,10 +249,26 @@ impl Metrics {
             ("requests_admitted", g(&self.requests_admitted)),
             ("requests_completed", g(&self.requests_completed)),
             ("requests_rejected", g(&self.requests_rejected)),
+            ("requests_cancelled", g(&self.requests_cancelled)),
             ("tokens_prefilled", g(&self.tokens_prefilled)),
             ("tokens_decoded", g(&self.tokens_decoded)),
             ("batches_run", g(&self.batches_run)),
             ("preemptions", g(&self.preemptions)),
+            (
+                "prefill",
+                Json::obj(vec![
+                    ("chunks", g(&self.prefill_chunks)),
+                    ("chunk_tokens", g(&self.prefill_chunk_tokens)),
+                ]),
+            ),
+            (
+                "budget",
+                Json::obj(vec![
+                    ("token_limit", g(&self.budget_token_limit)),
+                    ("tokens_planned", g(&self.budget_tokens_planned)),
+                    ("utilization", Json::num(self.budget_utilization())),
+                ]),
+            ),
             (
                 "kv_cache",
                 Json::obj(vec![
@@ -404,6 +445,26 @@ mod tests {
         assert!((rate - 0.75).abs() < 1e-9, "rate {rate}");
         // empty drafting reports 0, not NaN
         assert_eq!(Metrics::new().spec_accept_rate(), 0.0);
+    }
+
+    #[test]
+    fn prefill_and_budget_gauges_in_json() {
+        let m = Metrics::new();
+        Metrics::add(&m.prefill_chunks, 5);
+        Metrics::add(&m.prefill_chunk_tokens, 1280);
+        Metrics::set(&m.budget_token_limit, 2048);
+        Metrics::set(&m.budget_tokens_planned, 512);
+        let j = m.to_json();
+        let p = j.get("prefill").unwrap();
+        assert_eq!(p.get("chunks").unwrap().as_u64(), Some(5));
+        assert_eq!(p.get("chunk_tokens").unwrap().as_u64(), Some(1280));
+        let b = j.get("budget").unwrap();
+        assert_eq!(b.get("token_limit").unwrap().as_u64(), Some(2048));
+        assert_eq!(b.get("tokens_planned").unwrap().as_u64(), Some(512));
+        let u = b.get("utilization").unwrap().as_f64().unwrap();
+        assert!((u - 0.25).abs() < 1e-9, "utilization {u}");
+        // an idle scheduler reports 0, not NaN
+        assert_eq!(Metrics::new().budget_utilization(), 0.0);
     }
 
     #[test]

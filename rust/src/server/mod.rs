@@ -3,10 +3,19 @@
 //! with `nc` — see README.md for a worked example).
 //!
 //! Request:  `{"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
-//!             "temperature":0.0,"top_k":0,"top_p":1.0,"seed":1}`
-//!           `{"op":"metrics"}`   `{"op":"ping"}`
-//! Response: `{"ok":true,"tokens":[...],"finish":"length",
+//!             "temperature":0.0,"top_k":0,"top_p":1.0,"seed":1,"id":7}`
+//!           `{"op":"cancel","id":7}`   `{"op":"metrics"}`   `{"op":"ping"}`
+//! Response: `{"ok":true,"id":7,"tokens":[...],"finish":"length",
 //!             "ttft_us":...,"latency_us":...}` (or `{"ok":false,"error":..}`)
+//!
+//! `generate` normally auto-assigns ids; a client that wants to be able to
+//! cancel from another connection passes its own `"id"` (namespaced apart
+//! from the auto ids server-side, so it can never collide with another
+//! connection's auto-assigned request; uniqueness among cooperating
+//! clients is their responsibility, and a duplicate in-flight id is
+//! rejected, never hijacked) and sends `{"op":"cancel","id":N}` there —
+//! the generate call then returns `"finish":"cancelled"` with whatever
+//! tokens were produced before the cancel landed.
 //!
 //! `{"op":"metrics"}` returns the full registry, including the
 //! `kv_cache` object (prefix-hit rate, copy-on-write/eviction counts,
@@ -15,6 +24,10 @@
 
 use crate::coordinator::{Coordinator, FinishReason, Request};
 use crate::sampler::SamplerCfg;
+
+/// Client-chosen request ids live in their own namespace so they can never
+/// collide with (or cancel) another connection's auto-assigned ids.
+const CLIENT_ID_BIT: u64 = 1 << 63;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -81,12 +94,15 @@ fn handle_conn(
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     let mut next = id_base;
+    // each connection owns a 2^20 auto-id block; crossing it would bleed
+    // into a later connection's range, so the connection errors out first
+    let id_end = id_base + (1 << 20);
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(&line, coordinator, &mut next);
+        let reply = handle_line(&line, coordinator, &mut next, id_end);
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -94,7 +110,7 @@ fn handle_conn(
     Ok(())
 }
 
-fn handle_line(line: &str, coordinator: &Coordinator, next_id: &mut u64) -> Json {
+fn handle_line(line: &str, coordinator: &Coordinator, next_id: &mut u64, id_end: u64) -> Json {
     let err = |msg: String| {
         Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
     };
@@ -122,8 +138,23 @@ fn handle_line(line: &str, coordinator: &Coordinator, next_id: &mut u64) -> Json
             let get_f = |k: &str, d: f32| {
                 req.get(k).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(d)
             };
-            let id = *next_id;
-            *next_id += 1;
+            // auto-assigned per-connection id unless the client picks one
+            // (required for cross-connection {"op":"cancel"})
+            let id = match req.get("id").and_then(|v| v.as_u64()) {
+                Some(id) => CLIENT_ID_BIT | id,
+                None => {
+                    if *next_id >= id_end {
+                        return err(
+                            "connection auto-id space exhausted (2^20 requests); \
+                             reconnect or pass explicit ids"
+                                .into(),
+                        );
+                    }
+                    let id = *next_id;
+                    *next_id += 1;
+                    id
+                }
+            };
             let request = Request {
                 id,
                 prompt: toks,
@@ -145,6 +176,7 @@ fn handle_line(line: &str, coordinator: &Coordinator, next_id: &mut u64) -> Json
             let resp = coordinator.generate(request);
             Json::obj(vec![
                 ("ok", Json::Bool(resp.finish != FinishReason::Rejected)),
+                ("id", Json::num((resp.id & !CLIENT_ID_BIT) as f64)),
                 (
                     "tokens",
                     Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
@@ -155,13 +187,26 @@ fn handle_line(line: &str, coordinator: &Coordinator, next_id: &mut u64) -> Json
                         FinishReason::Length => "length",
                         FinishReason::Eos => "eos",
                         FinishReason::Rejected => "rejected",
+                        FinishReason::Cancelled => "cancelled",
                     }),
                 ),
                 ("ttft_us", Json::num(resp.ttft.as_micros() as f64)),
                 ("latency_us", Json::num(resp.latency.as_micros() as f64)),
             ])
         }
-        _ => err("unknown op (expected generate|metrics|ping)".into()),
+        Some("cancel") => {
+            let Some(id) = req.get("id").and_then(|v| v.as_u64()) else {
+                return err("cancel needs a numeric 'id'".into());
+            };
+            // only client-chosen ids are cancellable (same namespacing as
+            // generate), so no one can cancel another connection's
+            // auto-assigned request
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cancelled", Json::Bool(coordinator.cancel(CLIENT_ID_BIT | id))),
+            ])
+        }
+        _ => err("unknown op (expected generate|cancel|metrics|ping)".into()),
     }
 }
 

@@ -1,12 +1,14 @@
 //! Golden decode conformance: a tiny seeded model decoded across
-//! {f32, int8} × {vanilla, surgeried} × {plain, speculative} engines.
+//! {f32, int8} × {vanilla, surgeried} × {plain, speculative, chunked}
+//! engines.
 //!
 //! Two layers of protection:
 //!
 //! 1. **Structural invariants, always checked** — within every
-//!    (dtype, variant) configuration, the speculative greedy stream must be
-//!    token-identical to the plain one (the tentpole guarantee, enforced
-//!    without any golden file).
+//!    (dtype, variant) configuration, the speculative greedy stream AND
+//!    the chunked-prefill stream (tiny token budget, multi-chunk prompts)
+//!    must be token-identical to the plain one (the tentpole guarantees,
+//!    enforced without any golden file).
 //! 2. **Committed golden traces** — `tests/golden/decode_traces.json`
 //!    pins every configuration's token streams. A later change that shifts
 //!    any stream (a kernel reorder, a quantizer tweak, an accidental
@@ -43,24 +45,32 @@ fn configurations() -> Vec<(String, ModelWeights)> {
     ]
 }
 
-/// Decode every prompt greedily through a scheduler, plain or speculative.
-fn traces(w: &ModelWeights, spec_k: usize) -> Vec<Vec<u32>> {
-    let engine = CpuEngine::new(w.clone(), 8, 16 << 20);
+/// Decode every prompt greedily through a scheduler — plain, speculative,
+/// or with chunked prefill forced into multiple tiny chunks.
+fn traces(w: &ModelWeights, spec_k: usize, chunked: bool) -> Vec<Vec<u32>> {
+    let engine = CpuEngine::new(w.clone(), 4, 16 << 20);
+    let cfg = if chunked {
+        // budget smaller than the longest prompt and chunks that straddle
+        // the 4-token block boundary: every admission genuinely chunks
+        SchedulerCfg {
+            token_budget_per_step: 5,
+            chunk_tokens: 3,
+            spec_k,
+            ..Default::default()
+        }
+    } else {
+        SchedulerCfg {
+            spec_k,
+            ..Default::default()
+        }
+    };
     let mut s = if spec_k > 0 {
         // self-speculation: the draft is the int8 form of the same weights
         // (idempotent for already-int8 targets)
-        let draft = CpuEngine::new(quantize(w), 8, 16 << 20);
-        Scheduler::with_draft(
-            engine,
-            Box::new(draft),
-            SchedulerCfg {
-                spec_k,
-                ..Default::default()
-            },
-            Arc::new(Metrics::new()),
-        )
+        let draft = CpuEngine::new(quantize(w), 4, 16 << 20);
+        Scheduler::with_draft(engine, Box::new(draft), cfg, Arc::new(Metrics::new()))
     } else {
-        Scheduler::new(engine, SchedulerCfg::default(), Arc::new(Metrics::new()))
+        Scheduler::new(engine, cfg, Arc::new(Metrics::new()))
     };
     for (i, p) in prompts().into_iter().enumerate() {
         s.submit(Request::greedy(i as u64, p, MAX_NEW));
@@ -75,7 +85,7 @@ fn golden_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/decode_traces.json")
 }
 
-fn render(all: &[(String, Vec<Vec<u32>>, Vec<Vec<u32>>)]) -> String {
+fn render(all: &[(String, Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<Vec<u32>>)]) -> String {
     let arr = |t: &[Vec<u32>]| {
         let rows: Vec<String> = t
             .iter()
@@ -94,10 +104,11 @@ fn render(all: &[(String, Vec<Vec<u32>>, Vec<Vec<u32>>)]) -> String {
     out.push_str("  \"traces\": {\n");
     let cells: Vec<String> = all
         .iter()
-        .flat_map(|(name, plain, spec)| {
+        .flat_map(|(name, plain, spec, chunked)| {
             [
                 format!("    \"{name}/plain\": {}", arr(plain)),
                 format!("    \"{name}/speculative\": {}", arr(spec)),
+                format!("    \"{name}/chunked\": {}", arr(chunked)),
             ]
         })
         .collect();
@@ -124,21 +135,27 @@ fn parse_traces(j: &Json, key: &str) -> Vec<Vec<u32>> {
 
 #[test]
 fn golden_decode_conformance() {
-    // run every configuration both ways
-    let all: Vec<(String, Vec<Vec<u32>>, Vec<Vec<u32>>)> = configurations()
+    // run every configuration all three ways
+    let all: Vec<(String, Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<Vec<u32>>)> = configurations()
         .into_iter()
         .map(|(name, w)| {
-            let plain = traces(&w, 0);
-            let spec = traces(&w, 4);
-            (name, plain, spec)
+            let plain = traces(&w, 0, false);
+            let spec = traces(&w, 4, false);
+            let chunked = traces(&w, 0, true);
+            (name, plain, spec, chunked)
         })
         .collect();
 
-    // invariant 1 (no golden file needed): speculative ≡ plain, per config
-    for (name, plain, spec) in &all {
+    // invariant 1 (no golden file needed): chunked ≡ monolithic ≡ spec,
+    // per configuration
+    for (name, plain, spec, chunked) in &all {
         assert_eq!(
             plain, spec,
             "{name}: speculative greedy decode diverged from plain decode"
+        );
+        assert_eq!(
+            plain, chunked,
+            "{name}: chunked prefill diverged from monolithic decode"
         );
     }
     // NB: no token-identity is asserted ACROSS variants or dtypes —
@@ -167,9 +184,10 @@ fn golden_decode_conformance() {
         "golden file was generated for a different seed — regenerate with \
          SKIPLESS_REGEN_GOLDEN=1"
     );
-    for (name, plain, spec) in &all {
+    for (name, plain, spec, chunked) in &all {
         let want_plain = parse_traces(&j, &format!("{name}/plain"));
         let want_spec = parse_traces(&j, &format!("{name}/speculative"));
+        let want_chunked = parse_traces(&j, &format!("{name}/chunked"));
         assert_eq!(
             plain, &want_plain,
             "{name}/plain drifted from the committed golden trace"
@@ -177,6 +195,10 @@ fn golden_decode_conformance() {
         assert_eq!(
             spec, &want_spec,
             "{name}/speculative drifted from the committed golden trace"
+        );
+        assert_eq!(
+            chunked, &want_chunked,
+            "{name}/chunked drifted from the committed golden trace"
         );
     }
 }

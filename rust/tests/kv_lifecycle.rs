@@ -42,7 +42,6 @@ fn run_all(
         CpuEngine::with_cache_opts(w.clone(), block_tokens, budget, opts),
         SchedulerCfg {
             max_running: 16,
-            admits_per_step: 4,
             ..Default::default()
         },
         Arc::clone(&metrics),

@@ -192,7 +192,7 @@ fn prop_scheduler_conservation() {
             CpuEngine::new(w, 8, budget),
             SchedulerCfg {
                 max_running: 1 + rng.next_below(6) as usize,
-                admits_per_step: 1 + rng.next_below(4) as usize,
+                token_budget_per_step: 4 + rng.next_below(60) as usize,
                 ..Default::default()
             },
             Arc::new(Metrics::new()),
@@ -277,7 +277,6 @@ fn prop_engine_no_cache_leak() {
             CpuEngine::new(w, 4, 256 << 10),
             SchedulerCfg {
                 max_running: 4,
-                admits_per_step: 2,
                 ..Default::default()
             },
             Arc::new(Metrics::new()),

@@ -1,8 +1,11 @@
-//! Scheduler interleaving fuzz: seeded random schedules of submit / step —
-//! admission, capacity preemption, swap-out, and resume all arise from the
+//! Scheduler interleaving fuzz: seeded random schedules of submit / step /
+//! cancel — admission, chunked prefill under tight token budgets, capacity
+//! preemption, mid-prefill swap-out, and resume all arise from the
 //! deliberately tiny KV pools — with speculative decoding on or off. Every
-//! request's output must be byte-identical to a sequential single-request
-//! oracle, and no request may ever be dropped or spuriously rejected.
+//! surviving request's output must be byte-identical to a sequential
+//! single-request oracle (a cancelled request may only ever deliver a
+//! prefix of its oracle stream), and no request may ever be dropped or
+//! spuriously rejected.
 //!
 //! `SKIPLESS_QUANTIZE=int8` (the CI matrix leg) runs the whole fuzz on
 //! INT8 engines: the target, the oracle, and the draft are all quantized,
@@ -15,7 +18,7 @@ use skipless::metrics::Metrics;
 use skipless::model::{quantize, ModelWeights};
 use skipless::sampler::SamplerCfg;
 use skipless::util::rng::Xoshiro256;
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
@@ -28,13 +31,19 @@ fn maybe_quantize(w: ModelWeights) -> ModelWeights {
 
 /// Random request mix: mostly greedy (speculation-eligible), some
 /// temperature-sampled (must be skipped by speculation), some with EOS.
-/// Sizes are bounded so even the tight pool can always hold one request to
-/// completion — truncation is a *documented* divergence from the oracle
-/// and belongs to other tests.
-fn requests(rng: &mut Xoshiro256, n: usize, vocab: u64) -> Vec<Request> {
+/// `long_prompts` stretches prompts across several KV blocks so tight
+/// token budgets force genuinely multi-chunk prefills. Sizes are bounded
+/// so even the tight pool can always hold one request to completion —
+/// truncation is a *documented* divergence from the oracle and belongs to
+/// other tests.
+fn requests(rng: &mut Xoshiro256, n: usize, vocab: u64, long_prompts: bool) -> Vec<Request> {
     (0..n)
         .map(|i| {
-            let plen = 2 + rng.next_below(6) as usize;
+            let plen = if long_prompts {
+                8 + rng.next_below(14) as usize
+            } else {
+                2 + rng.next_below(6) as usize
+            };
             let prompt = (0..plen).map(|_| rng.next_below(vocab) as u32).collect();
             let max_new = 2 + rng.next_below(7) as usize;
             let mut req = Request::greedy(i as u64, prompt, max_new);
@@ -70,14 +79,26 @@ fn oracle(w: &ModelWeights, reqs: &[Request]) -> Vec<Vec<u32>> {
         .collect()
 }
 
-/// One fuzzed run: random submit/step interleaving against a scheduler
-/// with the given speculation depth and pool size. Returns the total
-/// speculative verify rounds observed.
-fn fuzz_one(seed: u64, spec_k: usize, budget_blocks: Option<usize>) -> u64 {
+struct FuzzCase {
+    seed: u64,
+    spec_k: usize,
+    /// Pool size in blocks (None = roomy).
+    budget_blocks: Option<usize>,
+    /// Stretch prompts over several blocks (multi-chunk prefills).
+    long_prompts: bool,
+    /// Randomly cancel requests mid-flight.
+    cancels: bool,
+}
+
+/// One fuzzed run: a random submit/step/cancel interleaving against a
+/// scheduler with a random tight token budget and chunk size. Returns the
+/// total speculative verify rounds observed.
+fn fuzz_one(case: FuzzCase) -> u64 {
+    let FuzzCase { seed, spec_k, budget_blocks, long_prompts, cancels } = case;
     let cfg = ModelConfig::tiny_mha();
     let w = maybe_quantize(ModelWeights::init_vanilla(&cfg, 500 + seed));
     let mut rng = Xoshiro256::seed_from_u64(seed * 7919 + 13);
-    let reqs = requests(&mut rng, 8, cfg.vocab_size as u64);
+    let reqs = requests(&mut rng, 8, cfg.vocab_size as u64, long_prompts);
     let want = oracle(&w, &reqs);
 
     let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
@@ -85,7 +106,10 @@ fn fuzz_one(seed: u64, spec_k: usize, budget_blocks: Option<usize>) -> u64 {
     let metrics = Arc::new(Metrics::new());
     let sched_cfg = SchedulerCfg {
         max_running: 1 + rng.next_below(6) as usize,
-        admits_per_step: 1 + rng.next_below(4) as usize,
+        // tight: often smaller than one prompt, so prefills chunk across
+        // steps and interleave with decodes, preemption, and swaps
+        token_budget_per_step: 2 + rng.next_below(14) as usize,
+        chunk_tokens: 1 + rng.next_below(6) as usize,
         spec_k,
     };
     let engine = CpuEngine::new(w.clone(), 4, budget);
@@ -105,10 +129,19 @@ fn fuzz_one(seed: u64, spec_k: usize, budget_blocks: Option<usize>) -> u64 {
     };
 
     let mut pending: VecDeque<Request> = reqs.iter().cloned().collect();
+    let mut cancelled: HashSet<u64> = HashSet::new();
     let mut guard = 0u32;
     while !pending.is_empty() || !s.is_idle() {
         guard += 1;
         assert!(guard < 100_000, "seed {seed}: fuzz run wedged");
+        if cancels && rng.next_below(11) == 0 {
+            // cancel a random request wherever it currently lives; a false
+            // return means it already finished (or was never submitted)
+            let id = rng.next_below(reqs.len() as u64);
+            if s.cancel(id) {
+                cancelled.insert(id);
+            }
+        }
         if !pending.is_empty() && (s.is_idle() || rng.next_below(3) == 0) {
             s.submit(pending.pop_front().unwrap());
         } else {
@@ -125,11 +158,23 @@ fn fuzz_one(seed: u64, spec_k: usize, budget_blocks: Option<usize>) -> u64 {
             "seed {seed}: request {} spuriously rejected",
             r.id
         );
-        assert_eq!(
-            &r.tokens, want,
-            "seed {seed}: request {} diverged from the sequential oracle",
-            r.id
-        );
+        if cancelled.contains(&r.id) {
+            // sampling is seeded and replay-deterministic, so even a
+            // request cancelled mid-prefill or mid-decode may only ever
+            // have produced a prefix of its oracle stream
+            assert_eq!(r.finish, FinishReason::Cancelled, "seed {seed}: request {}", r.id);
+            assert!(
+                r.tokens.len() <= want.len() && r.tokens[..] == want[..r.tokens.len()],
+                "seed {seed}: cancelled request {} diverged from its oracle prefix",
+                r.id
+            );
+        } else {
+            assert_eq!(
+                &r.tokens, want,
+                "seed {seed}: request {} diverged from the sequential oracle",
+                r.id
+            );
+        }
     }
     metrics.spec_rounds.load(Ordering::Relaxed)
 }
@@ -139,7 +184,13 @@ fn fuzz_one(seed: u64, spec_k: usize, budget_blocks: Option<usize>) -> u64 {
 #[test]
 fn fuzz_plain_tight_pool() {
     for seed in 0..4 {
-        fuzz_one(seed, 0, Some(6));
+        fuzz_one(FuzzCase {
+            seed,
+            spec_k: 0,
+            budget_blocks: Some(6),
+            long_prompts: false,
+            cancels: false,
+        });
     }
 }
 
@@ -148,7 +199,13 @@ fn fuzz_plain_tight_pool() {
 #[test]
 fn fuzz_speculative_tight_pool() {
     for seed in 0..4 {
-        fuzz_one(seed, 3, Some(6));
+        fuzz_one(FuzzCase {
+            seed,
+            spec_k: 3,
+            budget_blocks: Some(6),
+            long_prompts: false,
+            cancels: false,
+        });
     }
 }
 
@@ -158,7 +215,73 @@ fn fuzz_speculative_tight_pool() {
 fn fuzz_speculative_roomy_pool() {
     let mut rounds = 0;
     for seed in 4..8 {
-        rounds += fuzz_one(seed, 3, None);
+        rounds += fuzz_one(FuzzCase {
+            seed,
+            spec_k: 3,
+            budget_blocks: None,
+            long_prompts: false,
+            cancels: false,
+        });
     }
     assert!(rounds > 0, "speculation never engaged across the roomy runs");
+}
+
+/// Chunked-prefill stress: multi-block prompts under token budgets smaller
+/// than one prompt and a pool smaller than the working set, so mid-prefill
+/// preemption, swap/resume, and cancel all interleave with decodes — with
+/// speculation both off and on. Byte-identical to the oracle, none
+/// dropped.
+#[test]
+fn fuzz_chunked_mid_prefill_preempt_swap_cancel() {
+    for seed in 8..12 {
+        fuzz_one(FuzzCase {
+            seed,
+            spec_k: 0,
+            budget_blocks: Some(10),
+            long_prompts: true,
+            cancels: true,
+        });
+        fuzz_one(FuzzCase {
+            seed: seed + 100,
+            spec_k: 3,
+            budget_blocks: Some(10),
+            long_prompts: true,
+            cancels: true,
+        });
+    }
+}
+
+/// Chunked prefills must actually have happened in the stress runs (the
+/// harness would silently lose coverage if budgets stopped chunking).
+#[test]
+fn fuzz_chunked_runs_really_chunk() {
+    let cfg = ModelConfig::tiny_mha();
+    let w = maybe_quantize(ModelWeights::init_vanilla(&cfg, 777));
+    let mut rng = Xoshiro256::seed_from_u64(777);
+    let reqs = requests(&mut rng, 6, cfg.vocab_size as u64, true);
+    let want = oracle(&w, &reqs);
+    let metrics = Arc::new(Metrics::new());
+    let mut s = Scheduler::new(
+        CpuEngine::new(w, 4, 8 << 20),
+        SchedulerCfg {
+            token_budget_per_step: 6,
+            chunk_tokens: 3,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+    );
+    for r in &reqs {
+        s.submit(r.clone());
+    }
+    let mut done = s.run_to_completion();
+    done.sort_by_key(|r| r.id);
+    for (r, want) in done.iter().zip(&want) {
+        assert_eq!(&r.tokens, want, "request {} diverged", r.id);
+    }
+    let chunks = metrics.prefill_chunks.load(Ordering::Relaxed);
+    let longest = reqs.iter().map(|r| r.prompt.len()).max().unwrap() as u64;
+    assert!(
+        chunks >= longest / 3,
+        "expected multi-chunk prefills, saw {chunks} chunks"
+    );
 }

@@ -60,6 +60,35 @@ fn merged_server_serves_identical_text() {
     }
 }
 
+/// `{"op":"cancel"}` is wired through to the scheduler: unknown ids report
+/// a clean false, a client-chosen id echoes back on generate, and a
+/// finished request can no longer be cancelled.
+#[test]
+fn cancel_op_over_the_wire() {
+    let cfg = ModelConfig::tiny_gqa();
+    let addr = boot_server(ModelWeights::init_vanilla(&cfg, 14));
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c
+        .call(&Json::parse(r#"{"op":"cancel","id":777}"#).unwrap())
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("cancelled").unwrap().as_bool(), Some(false));
+    // client-chosen id round-trips through generate...
+    let g = c
+        .call(
+            &Json::parse(r#"{"op":"generate","prompt":[1,2,3],"max_new_tokens":3,"id":777}"#)
+                .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(g.get("id").unwrap().as_u64(), Some(777));
+    assert_eq!(g.get("finish").unwrap().as_str(), Some("length"));
+    // ...and once finished it cannot be cancelled anymore
+    let r = c
+        .call(&Json::parse(r#"{"op":"cancel","id":777}"#).unwrap())
+        .unwrap();
+    assert_eq!(r.get("cancelled").unwrap().as_bool(), Some(false));
+}
+
 #[test]
 fn sampling_requests_over_the_wire_are_seed_deterministic() {
     let cfg = ModelConfig::tiny_mha();
@@ -179,6 +208,17 @@ fn metrics_expose_kv_and_quant_counters_over_the_wire() {
         Some(0),
         "the serving path must never gather-copy KV"
     );
+    // continuous batching: admissions ran as budgeted prefill chunks and
+    // the planner gauges are live
+    let prefill = metrics.get("prefill").unwrap();
+    assert!(
+        prefill.get("chunks").unwrap().as_u64().unwrap() >= 3,
+        "every admission should have run as at least one prefill chunk"
+    );
+    assert!(prefill.get("chunk_tokens").unwrap().as_u64().unwrap() > 0);
+    let budget = metrics.get("budget").unwrap();
+    assert_eq!(budget.get("token_limit").unwrap().as_u64(), Some(2048));
+    assert!(budget.get("utilization").unwrap().as_f64().is_some());
     // weight-side quant counters match the engine's model exactly
     let quant = metrics.get("quant").unwrap();
     assert_eq!(quant.get("weight_bytes_f32").unwrap().as_u64(), Some(f32_bytes));
