@@ -5,19 +5,40 @@
 
 use skipless::config::ModelConfig;
 use skipless::coordinator::{CpuEngine, DecodeInput, Engine, Request, Scheduler, SchedulerCfg};
-use skipless::kvcache::KvCache;
+use skipless::kvcache::{BlockView, KvCache};
+use skipless::linalg::gemm::{matmul_into_with, matmul_transb_with, matvec_with};
+use skipless::linalg::qgemm::qmatmul_with;
+use skipless::linalg::simd::{self, SimdLevel};
 use skipless::linalg::{inverse, matmul, matmul_transb, matvec};
 use skipless::metrics::Metrics;
+use skipless::model::attention::HeadLayout;
+use skipless::model::paged_attn::{attend_gathered, attend_paged, KvSegment};
 use skipless::model::ModelWeights;
-use skipless::tensor::Mat;
+use skipless::tensor::{Mat, QMat};
 use skipless::tokenizer::Bpe;
 use skipless::util::bench::{black_box, Bencher};
 use skipless::util::json::Json;
 use skipless::util::rng::Xoshiro256;
 use std::sync::Arc;
 
+/// One before/after row for `BENCH_kernels.json`.
+struct KernelRow {
+    kernel: &'static str,
+    shape: String,
+    scalar_us: f64,
+    dispatched_us: f64,
+    bit_identical: bool,
+}
+
+impl KernelRow {
+    fn speedup(&self) -> f64 {
+        self.scalar_us / self.dispatched_us
+    }
+}
+
 fn main() {
     println!("# microbench — per-layer hot-path instrumentation");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
     let mut rng = Xoshiro256::seed_from_u64(1);
     let mut b = Bencher::new("microbench");
 
@@ -65,6 +86,155 @@ fn main() {
         black_box(cache.gather(id, 0, &mut kbuf, &mut vbuf).unwrap());
     });
 
+    // ---- kernel dispatch before/after (ISSUE 6): the forced-scalar oracle
+    // vs whatever simd::level() picked, at serving shapes, with byte
+    // identity asserted on every pair before timing. Rows land in
+    // BENCH_kernels.json; in full mode on a SIMD host the qmatmul and
+    // matmul_transb speedups are asserted (>=2x / >=1.5x).
+    let lvl = simd::level();
+    let mut krows: Vec<KernelRow> = Vec::new();
+    eprintln!("  kernel dispatch: {} (scalar-vs-dispatched rows follow)", simd::level_name());
+
+    // chunked-prefill projection GEMM: (64,640) x (640,640)
+    {
+        let (m, n, k) = (64usize, 640usize, 640usize);
+        let a = Mat::randn(m, k, 0.1, &mut rng);
+        let w = Mat::randn(k, n, 0.1, &mut rng);
+        let mut out_s = Mat::zeros(m, n);
+        let mut out_d = Mat::zeros(m, n);
+        matmul_into_with(SimdLevel::Scalar, &a, &w, &mut out_s);
+        matmul_into_with(lvl, &a, &w, &mut out_d);
+        let bit = out_s.as_slice().iter().zip(out_d.as_slice()).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(bit, "matmul scalar vs dispatched diverged");
+        let flops = 2.0 * (m * n * k) as f64;
+        let s = b.case_items("matmul_64x640x640[scalar]", Some(flops), || {
+            matmul_into_with(SimdLevel::Scalar, &a, &w, &mut out_s);
+            black_box(&out_s);
+        }).clone();
+        let d = b.case_items("matmul_64x640x640[dispatched]", Some(flops), || {
+            matmul_into_with(lvl, &a, &w, &mut out_d);
+            black_box(&out_d);
+        }).clone();
+        krows.push(KernelRow {
+            kernel: "matmul",
+            shape: format!("{m}x{k}x{n}"),
+            scalar_us: s.median.as_secs_f64() * 1e6,
+            dispatched_us: d.median.as_secs_f64() * 1e6,
+            bit_identical: bit,
+        });
+    }
+
+    // attention-score GEMM at a serving shape: (256,64) @ (256,64)^T
+    {
+        let (m, n, k) = (256usize, 256usize, 64usize);
+        let a = Mat::randn(m, k, 0.5, &mut rng);
+        let bt = Mat::randn(n, k, 0.5, &mut rng);
+        let out_s = matmul_transb_with(SimdLevel::Scalar, &a, &bt);
+        let out_d = matmul_transb_with(lvl, &a, &bt);
+        let bit = out_s.as_slice().iter().zip(out_d.as_slice()).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(bit, "matmul_transb scalar vs dispatched diverged");
+        let flops = 2.0 * (m * n * k) as f64;
+        let s = b.case_items("matmul_transb_256x64[scalar]", Some(flops), || {
+            black_box(matmul_transb_with(SimdLevel::Scalar, &a, &bt));
+        }).clone();
+        let d = b.case_items("matmul_transb_256x64[dispatched]", Some(flops), || {
+            black_box(matmul_transb_with(lvl, &a, &bt));
+        }).clone();
+        krows.push(KernelRow {
+            kernel: "matmul_transb",
+            shape: format!("{m}x{k}@{n}x{k}T"),
+            scalar_us: s.median.as_secs_f64() * 1e6,
+            dispatched_us: d.median.as_secs_f64() * 1e6,
+            bit_identical: bit,
+        });
+    }
+
+    // batch-1 decode GEMV: (640,640) x 640
+    {
+        let w = Mat::randn(640, 640, 0.1, &mut rng);
+        let x: Vec<f32> = (0..640).map(|i| (i as f32 * 0.013).sin()).collect();
+        let out_s = matvec_with(SimdLevel::Scalar, &w, &x);
+        let out_d = matvec_with(lvl, &w, &x);
+        let bit = out_s.iter().zip(&out_d).all(|(a, c)| a.to_bits() == c.to_bits());
+        assert!(bit, "matvec scalar vs dispatched diverged");
+        let flops = 2.0 * 640.0 * 640.0;
+        let s = b.case_items("matvec_640[scalar]", Some(flops), || {
+            black_box(matvec_with(SimdLevel::Scalar, &w, &x));
+        }).clone();
+        let d = b.case_items("matvec_640[dispatched]", Some(flops), || {
+            black_box(matvec_with(lvl, &w, &x));
+        }).clone();
+        krows.push(KernelRow {
+            kernel: "matvec",
+            shape: "640x640".into(),
+            scalar_us: s.median.as_secs_f64() * 1e6,
+            dispatched_us: d.median.as_secs_f64() * 1e6,
+            bit_identical: bit,
+        });
+    }
+
+    // INT8 projection qGEMM at the serving decode shape: (4,640) x (640,640)
+    {
+        let (m, n, k) = (4usize, 640usize, 640usize);
+        let x = Mat::randn(m, k, 0.5, &mut rng);
+        let w = QMat::quantize_rows(&Mat::randn(n, k, 0.05, &mut rng));
+        let out_s = qmatmul_with(SimdLevel::Scalar, &x, &w);
+        let out_d = qmatmul_with(lvl, &x, &w);
+        let bit = out_s.as_slice().iter().zip(out_d.as_slice()).all(|(a, c)| a.to_bits() == c.to_bits());
+        assert!(bit, "qmatmul scalar vs dispatched diverged");
+        let flops = 2.0 * (m * n * k) as f64;
+        let s = b.case_items("qmatmul_4x640x640[scalar]", Some(flops), || {
+            black_box(qmatmul_with(SimdLevel::Scalar, &x, &w));
+        }).clone();
+        let d = b.case_items("qmatmul_4x640x640[dispatched]", Some(flops), || {
+            black_box(qmatmul_with(lvl, &x, &w));
+        }).clone();
+        krows.push(KernelRow {
+            kernel: "qmatmul",
+            shape: format!("{m}x{k}x{n}"),
+            scalar_us: s.median.as_secs_f64() * 1e6,
+            dispatched_us: d.median.as_secs_f64() * 1e6,
+            bit_identical: bit,
+        });
+    }
+
+    // fused paged-attention decode over the 64-token history built above:
+    // scalar oracle (attend_gathered on pre-gathered rows, zero copy cost
+    // in the timed region) vs the dispatched zero-copy kernel.
+    {
+        let layout = HeadLayout {
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim(),
+        };
+        let t = cache.gather(id, 0, &mut kbuf, &mut vbuf).unwrap();
+        let views: Vec<BlockView> = cache.seq_block_views(id, 0).unwrap().collect();
+        let tails = [KvSegment::empty(), KvSegment::empty()];
+        let q_attn = Mat::randn(1, layout.d(), 0.5, &mut rng);
+        let mut out_s = vec![0.0f32; layout.d()];
+        let mut out_d = vec![0.0f32; layout.d()];
+        let mut scores = Vec::new();
+        attend_gathered(layout, q_attn.row(0), &kbuf, &vbuf, t, &mut out_s);
+        attend_paged(layout, q_attn.row(0), &views, &tails, t, &mut scores, &mut out_d);
+        let bit = out_s.iter().zip(&out_d).all(|(a, c)| a.to_bits() == c.to_bits());
+        assert!(bit, "attend scalar oracle vs dispatched diverged");
+        let s = b.case(&format!("attend_1x{t}ctx[scalar]"), || {
+            attend_gathered(layout, q_attn.row(0), &kbuf, &vbuf, t, &mut out_s);
+            black_box(&out_s);
+        }).clone();
+        let d = b.case(&format!("attend_1x{t}ctx[dispatched]"), || {
+            attend_paged(layout, q_attn.row(0), &views, &tails, t, &mut scores, &mut out_d);
+            black_box(&out_d);
+        }).clone();
+        krows.push(KernelRow {
+            kernel: "attend_paged",
+            shape: format!("1x{t}ctx e={}", cfg.e()),
+            scalar_us: s.median.as_secs_f64() * 1e6,
+            dispatched_us: d.median.as_secs_f64() * 1e6,
+            bit_identical: bit,
+        });
+    }
+
     // ---- tokenizer / codec
     let corpus: String = "the quick brown fox jumps over the lazy dog. ".repeat(40);
     let bpe = Bpe::train(&corpus, 512);
@@ -96,6 +266,43 @@ fn main() {
     });
 
     b.finish();
+
+    // ---- BENCH_kernels.json: before/after dispatch rows ----
+    eprintln!("\n  kernel before/after ({}):", simd::level_name());
+    for r in &krows {
+        eprintln!(
+            "  {:<14} {:<18} scalar {:>9.1}µs  dispatched {:>9.1}µs  {:>5.2}x  bits={}",
+            r.kernel, r.shape, r.scalar_us, r.dispatched_us, r.speedup(), r.bit_identical
+        );
+        assert!(r.bit_identical, "{}: SIMD output not byte-equal to scalar", r.kernel);
+    }
+    let rows_json: Vec<String> = krows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"kernel\": \"{}\", \"shape\": \"{}\", \"scalar_us\": {:.3}, \
+                 \"dispatched_us\": {:.3}, \"speedup\": {:.3}, \"bit_identical\": {}}}",
+                r.kernel, r.shape, r.scalar_us, r.dispatched_us, r.speedup(), r.bit_identical
+            )
+        })
+        .collect();
+    let kjson = format!(
+        "{{\n  \"suite\": \"kernels\",\n  \"dispatch\": \"{}\",\n  \"quick\": {},\n  \
+         \"cases\": [\n{}\n  ]\n}}\n",
+        simd::level_name(),
+        quick,
+        rows_json.join(",\n")
+    );
+    std::fs::write("BENCH_kernels.json", &kjson).expect("write BENCH_kernels.json");
+    eprintln!("  wrote BENCH_kernels.json");
+    // Speedup gates (full mode on a SIMD host only: quick mode's handful of
+    // reps is too noisy to gate on, and forced-scalar runs have no "after").
+    if !quick && lvl != SimdLevel::Scalar {
+        let get = |k: &str| krows.iter().find(|r| r.kernel == k).unwrap().speedup();
+        let (sq, st) = (get("qmatmul"), get("matmul_transb"));
+        assert!(sq >= 2.0, "qmatmul speedup {sq:.2}x < 2.0x at serving shape");
+        assert!(st >= 1.5, "matmul_transb speedup {st:.2}x < 1.5x at serving shape");
+    }
 
     // ---- scheduler-policy ablation (DESIGN.md §Perf: batching policy) ----
     // 16 requests × 8 tokens; sweep the per-step token budget and the

@@ -89,6 +89,8 @@ impl CpuEngine {
         opts: CacheOpts,
     ) -> Self {
         weights.check_shapes().expect("engine weights");
+        // log the kernel dispatch (avx2/neon/scalar) once per process
+        crate::linalg::simd::announce();
         let cache = KvCache::with_opts(&weights.cfg, block_tokens, cache_budget_bytes, opts);
         Self {
             weights,

@@ -1,20 +1,35 @@
-//! Blocked, multi-threaded f32 GEMM.
+//! Blocked, multi-threaded f32 GEMM over the [`super::simd`] primitives.
 //!
-//! Strategy: pack nothing, iterate in `MC×KC` panels with an inner
-//! `4×NR`-ish microkernel expressed as plain indexed loops over row slices —
-//! LLVM auto-vectorizes the unit-stride inner loop well. Rows of `C` are
+//! Strategy: pack nothing, iterate in `KC×NC` panels (K-slab L1-resident,
+//! column panel keeps the 4-row output micro-tile plus the B slab L2-hot)
+//! with a 4-row microkernel built from [`simd::axpy4`]. Rows of `C` are
 //! distributed over the thread pool in contiguous chunks (disjoint output →
-//! no synchronization). This is not MKL, but it reaches a few tens of
-//! GFLOP/s which keeps the CPU decode path memory-bound, matching the
-//! regime the paper's speedup model assumes.
+//! no synchronization). This is not MKL, but with the AVX2/NEON backends it
+//! keeps the CPU decode path memory-bound, matching the regime the paper's
+//! speedup model assumes.
+//!
+//! Determinism contract (DESIGN.md §Perf): `matmul` accumulates each
+//! `out[r][c]` elementwise over `k` ascending — axpy has no cross-element
+//! reduction, so SIMD width never changes bits. `matmul_transb` and
+//! `matvec` are dot-product shaped and use the fixed virtual-lane order;
+//! the `*_ref` kernels here re-derive that order with independent inline
+//! loops so the equivalence tests don't share code with the thing they
+//! check. Zero-skips are bit-neutral: an accumulator that starts at `+0.0`
+//! can only stay `+0.0` under added `±0.0` terms (round-to-nearest never
+//! produces `-0.0` from `+0.0 + x`), so skipping a zero `a[r][k]` — masked
+//! causal weights are mostly zeros — changes nothing.
 
+use crate::linalg::simd::{self, SimdLevel};
 use crate::tensor::Mat;
 use crate::util::threadpool;
 
 /// Cache-blocking parameters (f32 elements). L1-friendly K panel, L2-ish
-/// row block. Tuned in EXPERIMENTS.md §Perf.
+/// row block, and a column panel sized so one `KC×NC` slab of B (128 KB)
+/// stays L2-resident while four `NC`-wide output rows stay in L1. Tuned in
+/// EXPERIMENTS.md §Perf.
 const KC: usize = 256;
 const MC: usize = 64;
+const NC: usize = 128;
 
 /// `out = a @ b`. Shapes: `(m,k) @ (k,n) -> (m,n)`.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -40,6 +55,12 @@ pub fn matmul_bias(a: &Mat, b: &Mat, bias: Option<&[f32]>) -> Mat {
 /// Write `a @ b` into a preallocated `out` (zeroed first). The decode hot
 /// loop reuses buffers through this to avoid per-token allocation.
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    matmul_into_with(simd::level(), a, b, out);
+}
+
+/// [`matmul_into`] at an explicit dispatch level (benches and the
+/// kernel-equivalence suite pin `Scalar` vs auto with identical threading).
+pub fn matmul_into_with(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat) {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
@@ -61,7 +82,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     let n_threads = threadpool::global().n_threads();
     if flops < 1.0e6 {
-        gemm_rows(a, b, out, 0, m);
+        gemm_rows(lvl, a, b, out, 0, m);
         return;
     }
     if m < n_threads && n >= 2 * n_threads {
@@ -70,7 +91,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
             let a = unsafe { &*a_ptr.get() };
             let b = unsafe { &*b_ptr.get() };
             let out = unsafe { &mut *out_ptr.get() };
-            gemm_cols(a, b, out, c0, c1);
+            gemm_cols(lvl, a, b, out, c0, c1);
         });
         return;
     }
@@ -80,12 +101,14 @@ pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
         let a = unsafe { &*a_ptr.get() };
         let b = unsafe { &*b_ptr.get() };
         let out = unsafe { &mut *out_ptr.get() };
-        gemm_rows(a, b, out, r0, r1);
+        gemm_rows(lvl, a, b, out, r0, r1);
     });
 }
 
 /// Serial kernel over columns `[c0, c1)` of the output (skinny-M path).
-fn gemm_cols(a: &Mat, b: &Mat, out: &mut Mat, c0: usize, c1: usize) {
+/// The thread chunk is the effective column panel here, so only K is
+/// blocked explicitly.
+fn gemm_cols(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat, c0: usize, c1: usize) {
     let k = a.cols();
     let mut kb = 0;
     while kb < k {
@@ -97,10 +120,7 @@ fn gemm_cols(a: &Mat, b: &Mat, out: &mut Mat, c0: usize, c1: usize) {
                 if av == 0.0 {
                     continue;
                 }
-                let brow = &b.row(kb + kk)[c0..c1];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+                simd::axpy(lvl, orow, av, &b.row(kb + kk)[c0..c1]);
             }
         }
         kb = kend;
@@ -131,57 +151,56 @@ unsafe impl Sync for AddrSendMut {}
 
 /// Serial kernel over rows `[r0, r1)` of the output.
 ///
-/// 4-row microkernel: each pass over a KC-slab of B feeds FOUR output rows,
-/// quartering B's memory traffic for tall inputs (prefill, batched decode)
-/// — §Perf L3 iteration. Single rows (batch-1 decode) take the saxpy tail,
-/// which is already DRAM-bound.
-fn gemm_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
+/// 4-row microkernel: each pass over a `KC×NC` slab of B feeds FOUR output
+/// rows through [`simd::axpy4`], quartering B's memory traffic for tall
+/// inputs (prefill, batched decode) — §Perf L3 iteration. Single rows
+/// (batch-1 decode) take the saxpy tail, which is already DRAM-bound.
+/// Each `out[r][c]` still accumulates over `kb` slabs then `kk` ascending
+/// (the column panel never reorders a fixed element's k-walk), so the
+/// tiling is bit-transparent.
+fn gemm_rows(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
     let k = a.cols();
     let n = b.cols();
     let mut kb = 0;
     while kb < k {
         let kend = (kb + KC).min(k);
-        let mut r = r0;
-        // 4-row blocks
-        while r + 4 <= r1 {
-            // SAFETY: disjoint rows of `out`.
-            let (o0, rest) = out.as_mut_slice()[r * n..].split_at_mut(n);
-            let (o1, rest) = rest.split_at_mut(n);
-            let (o2, rest) = rest.split_at_mut(n);
-            let o3 = &mut rest[..n];
-            for kk in kb..kend {
-                let a0 = a.at(r, kk);
-                let a1 = a.at(r + 1, kk);
-                let a2 = a.at(r + 2, kk);
-                let a3 = a.at(r + 3, kk);
-                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                    continue;
+        let mut cb = 0;
+        while cb < n {
+            let cend = (cb + NC).min(n);
+            let mut r = r0;
+            // 4-row blocks
+            while r + 4 <= r1 {
+                // SAFETY: disjoint rows of `out`.
+                let (o0, rest) = out.as_mut_slice()[r * n..].split_at_mut(n);
+                let (o1, rest) = rest.split_at_mut(n);
+                let (o2, rest) = rest.split_at_mut(n);
+                let o3 = &mut rest[..n];
+                let o0 = &mut o0[cb..cend];
+                let o1 = &mut o1[cb..cend];
+                let o2 = &mut o2[cb..cend];
+                let o3 = &mut o3[cb..cend];
+                for kk in kb..kend {
+                    let av = [a.at(r, kk), a.at(r + 1, kk), a.at(r + 2, kk), a.at(r + 3, kk)];
+                    if av == [0.0; 4] {
+                        continue;
+                    }
+                    simd::axpy4(lvl, o0, o1, o2, o3, av, &b.row(kk)[cb..cend]);
                 }
-                let brow = b.row(kk);
-                for c in 0..n {
-                    let bv = brow[c];
-                    o0[c] += a0 * bv;
-                    o1[c] += a1 * bv;
-                    o2[c] += a2 * bv;
-                    o3[c] += a3 * bv;
-                }
+                r += 4;
             }
-            r += 4;
-        }
-        // remainder rows: plain saxpy
-        while r < r1 {
-            let arow = &a.row(r)[kb..kend];
-            let orow = out.row_mut(r);
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
+            // remainder rows: plain saxpy
+            while r < r1 {
+                let arow = &a.row(r)[kb..kend];
+                let orow = &mut out.row_mut(r)[cb..cend];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    simd::axpy(lvl, orow, av, &b.row(kb + kk)[cb..cend]);
                 }
-                let brow = b.row(kb + kk);
-                for c in 0..n {
-                    orow[c] += av * brow[c];
-                }
+                r += 1;
             }
-            r += 1;
+            cb = cend;
         }
         kb = kend;
     }
@@ -192,11 +211,16 @@ fn gemm_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
 /// operands without materializing a transpose.
 ///
 /// Rows of the output are distributed over the thread pool (disjoint →
-/// deterministic: every `out[r][c]` is one dot product computed by exactly
-/// one worker in fixed element order), with a 4-row microkernel so each
-/// pass over `b`'s rows feeds four score rows — the prefill `q @ k^T` path
-/// was a serial naive loop before this.
+/// deterministic: every `out[r][c]` is one lane-strided dot computed by
+/// exactly one worker), with a 4-row microkernel so each pass over `b`'s
+/// rows feeds four score rows. `k` here is a head dimension (≤ a few
+/// hundred), so no K-blocking: each dot's operands are L1-resident.
 pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
+    matmul_transb_with(simd::level(), a, b)
+}
+
+/// [`matmul_transb`] at an explicit dispatch level.
+pub fn matmul_transb_with(lvl: SimdLevel, a: &Mat, b: &Mat) -> Mat {
     let (m, k) = a.shape();
     let (n, k2) = b.shape();
     assert_eq!(k, k2, "matmul_transb inner-dim mismatch");
@@ -206,7 +230,7 @@ pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
     }
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     if flops < 1.0e6 || threadpool::global().n_threads() == 1 {
-        transb_rows(a, b, &mut out, 0, m);
+        transb_rows(lvl, a, b, &mut out, 0, m);
         return out;
     }
     let a_ptr = AddrSend(a as *const Mat);
@@ -216,37 +240,28 @@ pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
         let a = unsafe { &*a_ptr.get() };
         let b = unsafe { &*b_ptr.get() };
         let out = unsafe { &mut *out_ptr.get() };
-        transb_rows(a, b, out, r0, r1);
+        transb_rows(lvl, a, b, out, r0, r1);
     });
     out
 }
 
 /// Serial `a @ b^T` kernel over rows `[r0, r1)` of the output.
 ///
-/// 4-row microkernel: four rows of `a` share each pass over `b`'s rows,
-/// quartering `b` traffic (same shape as [`gemm_rows`]); each dot still
-/// accumulates in ascending element order, so results are bit-identical to
-/// the single-row tail.
-fn transb_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
-    let k = a.cols();
+/// 4-row microkernel: four rows of `a` share each pass over `b`'s rows
+/// through [`simd::dot4`], quartering `b` traffic (same shape as
+/// [`gemm_rows`]); every dot uses the fixed virtual-lane order, so results
+/// are bit-identical to the single-row tail and to the scalar reference.
+fn transb_rows(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
     let n_out = b.rows();
     let mut r = r0;
     while r + 4 <= r1 {
         let (a0, a1, a2, a3) = (a.row(r), a.row(r + 1), a.row(r + 2), a.row(r + 3));
         for c in 0..n_out {
-            let brow = b.row(c);
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for i in 0..k {
-                let bv = brow[i];
-                s0 += a0[i] * bv;
-                s1 += a1[i] * bv;
-                s2 += a2[i] * bv;
-                s3 += a3[i] * bv;
-            }
-            *out.at_mut(r, c) = s0;
-            *out.at_mut(r + 1, c) = s1;
-            *out.at_mut(r + 2, c) = s2;
-            *out.at_mut(r + 3, c) = s3;
+            let s = simd::dot4(lvl, a0, a1, a2, a3, b.row(c));
+            *out.at_mut(r, c) = s[0];
+            *out.at_mut(r + 1, c) = s[1];
+            *out.at_mut(r + 2, c) = s[2];
+            *out.at_mut(r + 3, c) = s[3];
         }
         r += 4;
     }
@@ -254,12 +269,7 @@ fn transb_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
         let arow = a.row(r);
         let orow = out.row_mut(r);
         for c in 0..n_out {
-            let brow = b.row(c);
-            let mut acc = 0.0f32;
-            for i in 0..k {
-                acc += arow[i] * brow[i];
-            }
-            orow[c] = acc;
+            orow[c] = simd::dot(lvl, arow, b.row(c));
         }
         r += 1;
     }
@@ -267,15 +277,75 @@ fn transb_rows(a: &Mat, b: &Mat, out: &mut Mat, r0: usize, r1: usize) {
 
 /// Matrix–vector product `m @ v` (decode-step fast path, no Mat wrapper).
 pub fn matvec(m: &Mat, v: &[f32]) -> Vec<f32> {
+    matvec_with(simd::level(), m, v)
+}
+
+/// [`matvec`] at an explicit dispatch level.
+pub fn matvec_with(lvl: SimdLevel, m: &Mat, v: &[f32]) -> Vec<f32> {
     assert_eq!(m.cols(), v.len(), "matvec dim mismatch");
     let mut out = vec![0.0f32; m.rows()];
     for r in 0..m.rows() {
-        let row = m.row(r);
-        let mut acc = 0.0f32;
-        for i in 0..v.len() {
-            acc += row[i] * v[i];
+        out[r] = simd::dot(lvl, m.row(r), v);
+    }
+    out
+}
+
+// ---- restructured scalar oracles (kernel-equivalence suite) ------------
+//
+// Independent spellings of the determinism contract: no shared code with
+// the dispatched kernels or with `simd::*_ref`, no blocking, no threading,
+// no zero-skips. Byte-equality against these validates the tiling order,
+// the skip-neutrality argument, and the lane order all at once.
+
+/// Naive serial `a @ b`, accumulating each element over `k` ascending with
+/// no skips — the elementwise-order oracle for [`matmul_into`].
+pub fn matmul_ref(a: &Mat, b: &Mat) -> Mat {
+    let (m, k) = a.shape();
+    let (_, n) = b.shape();
+    let mut out = Mat::zeros(m, n);
+    for r in 0..m {
+        for kk in 0..k {
+            let av = a.at(r, kk);
+            let brow = b.row(kk);
+            let orow = out.row_mut(r);
+            for c in 0..n {
+                orow[c] += av * brow[c];
+            }
         }
-        out[r] = acc;
+    }
+    out
+}
+
+/// Serial `a @ b^T` with the virtual-lane dot spelled out inline — the
+/// lane-order oracle for [`matmul_transb`].
+pub fn matmul_transb_ref(a: &Mat, b: &Mat) -> Mat {
+    let (m, k) = a.shape();
+    let (n, _) = b.shape();
+    let mut out = Mat::zeros(m, n);
+    for r in 0..m {
+        let arow = a.row(r);
+        for c in 0..n {
+            let brow = b.row(c);
+            let mut lanes = [0.0f32; simd::LANES];
+            for i in 0..k {
+                lanes[i % simd::LANES] += arow[i] * brow[i];
+            }
+            *out.at_mut(r, c) = simd::reduce_add(&lanes);
+        }
+    }
+    out
+}
+
+/// Serial `m @ v` with the inline lane-strided dot — oracle for [`matvec`].
+pub fn matvec_ref(m: &Mat, v: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.rows()];
+    for r in 0..m.rows() {
+        let row = m.row(r);
+        let mut lanes = [0.0f32; simd::LANES];
+        for i in 0..v.len() {
+            lanes[i % simd::LANES] += row[i] * v[i];
+        }
+        out[r] = simd::reduce_add(&lanes);
     }
     out
 }
@@ -346,6 +416,51 @@ mod tests {
     }
 
     #[test]
+    fn matmul_bitwise_matches_elementwise_oracle() {
+        // tiling, threading, zero-skips, and SIMD must all be invisible at
+        // the bit level: matmul accumulates elementwise over ascending k.
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        for &(m, k, n) in &[
+            (1usize, 1, 1),
+            (3, 9, 5),
+            (7, 257, 129),
+            (64, 256, 128),
+            (65, 300, 131),
+            (1, 640, 640),
+            (2, 512, 2688),
+            (130, 300, 70),
+        ] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let got = matmul(&a, &b);
+            let want = matmul_ref(&a, &b);
+            assert_eq!(
+                bits(got.as_slice()),
+                bits(want.as_slice()),
+                "({m},{k},{n}) diverged from the elementwise oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_skip_is_bit_neutral() {
+        // sparse A (many exact zeros, mixed ±0.0) takes the skip branches;
+        // the oracle never skips. Bits must still agree.
+        let mut rng = Xoshiro256::seed_from_u64(32);
+        let mut a = Mat::randn(9, 40, 1.0, &mut rng);
+        for (i, v) in a.as_mut_slice().iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+            if i % 7 == 0 {
+                *v = -0.0;
+            }
+        }
+        let b = Mat::randn(40, 33, 1.0, &mut rng);
+        assert_eq!(bits(matmul(&a, &b).as_slice()), bits(matmul_ref(&a, &b).as_slice()));
+    }
+
+    #[test]
     fn identity_is_neutral() {
         let mut rng = Xoshiro256::seed_from_u64(3);
         let a = Mat::randn(20, 20, 1.0, &mut rng);
@@ -365,17 +480,29 @@ mod tests {
     }
 
     #[test]
+    fn transb_bitwise_matches_lane_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(22);
+        for &(m, k, n) in &[(130usize, 300, 70), (64, 256, 64), (7, 4096, 101), (3, 9, 5)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(n, k, 1.0, &mut rng);
+            let got = matmul_transb(&a, &b);
+            let want = matmul_transb_ref(&a, &b);
+            assert_eq!(bits(got.as_slice()), bits(want.as_slice()), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
     fn transb_threaded_path_matches_serial_kernel() {
         // Big enough to cross the flops threshold; odd sizes exercise the
         // 4-row microkernel remainder. The threaded split must be
         // bit-identical to a serial pass (one dot per element either way).
-        let mut rng = Xoshiro256::seed_from_u64(22);
+        let mut rng = Xoshiro256::seed_from_u64(23);
         for &(m, k, n) in &[(130usize, 300, 70), (64, 256, 64), (7, 4096, 101)] {
             let a = Mat::randn(m, k, 1.0, &mut rng);
             let b = Mat::randn(n, k, 1.0, &mut rng);
             let got = matmul_transb(&a, &b);
             let mut serial = Mat::zeros(m, n);
-            transb_rows(&a, &b, &mut serial, 0, m);
+            transb_rows(crate::linalg::simd::level(), &a, &b, &mut serial, 0, m);
             assert_eq!(got.as_slice(), serial.as_slice(), "({m},{k},{n})");
             let want = matmul(&a, &b.transpose());
             assert!(got.rel_fro_err(&want) < 1e-5, "({m},{k},{n})");
@@ -391,6 +518,18 @@ mod tests {
         let want = matmul(&m, &v);
         for r in 0..17 {
             assert!((got[r] - want.at(r, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_bitwise_matches_lane_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(24);
+        for &(m, k) in &[(1usize, 1), (17, 29), (64, 640), (101, 2688)] {
+            let mat = Mat::randn(m, k, 1.0, &mut rng);
+            let v = Mat::randn(1, k, 1.0, &mut rng);
+            let got = matvec(&mat, v.row(0));
+            let want = matvec_ref(&mat, v.row(0));
+            assert_eq!(bits(&got), bits(&want), "({m},{k})");
         }
     }
 
@@ -415,5 +554,9 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(4, 2);
         let _ = matmul(&a, &b);
+    }
+
+    fn bits(x: &[f32]) -> Vec<u32> {
+        x.iter().map(|v| v.to_bits()).collect()
     }
 }

@@ -12,6 +12,7 @@
 pub mod gemm;
 pub mod lu;
 pub mod qgemm;
+pub mod simd;
 
 pub use gemm::{matmul, matmul_bias, matmul_into, matvec, matmul_transb};
 pub use lu::{cond_estimate, inverse, solve, Lu, LuError};
@@ -29,24 +30,24 @@ pub fn matmul_act(a: &Mat, b: &Mat, act: impl Fn(f32) -> f32) -> Mat {
 }
 
 /// Numerically stable softmax over each row, in place.
+///
+/// Max and sum are the lane-strided [`simd`] reductions; the `exp` pass
+/// stays scalar (libm `exp` has no bit-identical vector form). This is the
+/// same max → exp → sum → scale order the paged-attention kernels use, so
+/// a masked row here and the equivalent shorter paged row produce the same
+/// bits (DESIGN.md §Perf).
 pub fn softmax_rows(m: &mut Mat) {
-    let cols = m.cols();
+    let lvl = simd::level();
     for r in 0..m.rows() {
         let row = m.row_mut(r);
-        let mut mx = f32::NEG_INFINITY;
-        for &v in row.iter() {
-            mx = mx.max(v);
-        }
-        let mut sum = 0.0f32;
+        let mx = simd::vmax(lvl, row);
         for v in row.iter_mut() {
             *v = (*v - mx).exp();
-            sum += *v;
         }
-        let inv = 1.0 / sum;
+        let inv = 1.0 / simd::vsum(lvl, row);
         for v in row.iter_mut() {
             *v *= inv;
         }
-        debug_assert_eq!(row.len(), cols);
     }
 }
 

@@ -9,6 +9,12 @@
 //! dot, so the only rounding beyond quantization itself is the final f32
 //! multiply: `out[r][c] = x_scale[r] · w_scale[c] · Σ xq[r]·wq[c]`.
 //!
+//! Because the integer dot is exact in **any** association, the SIMD
+//! widening-multiply paths ([`simd::dot_i8`]) and the `KC_Q` k-slab loop
+//! below are bit-transparent for free; the epilogue keeps the historical
+//! left-associated `acc as f32 * xs * ws` expression, so qmatmul's output
+//! bits are unchanged from the pre-SIMD kernel.
+//!
 //! Row-wise independence makes the result **batch-invariant**: row `r` of
 //! the output depends only on row `r` of `x`, regardless of how many other
 //! rows ride in the same call — the property `decode_batch` tests rely on.
@@ -17,12 +23,24 @@
 //! accumulation order fixed.
 
 use super::gemm::AddrSendMut;
+use crate::linalg::simd::{self, SimdLevel};
 use crate::tensor::{Mat, QMat};
 use crate::util::threadpool;
+
+/// i8 k-slab: 2 KB per operand row keeps the active x/w slabs L1-resident
+/// while the i32 accumulators stay in registers across slabs (exact, so
+/// slabbing never changes bits). Serving k ≤ 2688 spans at most two slabs.
+const KC_Q: usize = 2048;
 
 /// `x (m,k) @ W (k,n) -> (m,n)` where `W` arrives pre-quantized and
 /// transposed as a `(n, k)` [`QMat`].
 pub fn qmatmul(x: &Mat, w: &QMat) -> Mat {
+    qmatmul_with(simd::level(), x, w)
+}
+
+/// [`qmatmul`] at an explicit dispatch level (benches and the
+/// kernel-equivalence suite pin `Scalar` vs auto with identical threading).
+pub fn qmatmul_with(lvl: SimdLevel, x: &Mat, w: &QMat) -> Mat {
     let (m, k) = x.shape();
     assert_eq!(w.cols(), k, "qmatmul inner-dim mismatch: {} vs {}", k, w.cols());
     let n = w.rows();
@@ -34,7 +52,7 @@ pub fn qmatmul(x: &Mat, w: &QMat) -> Mat {
     // Threading pays off only with enough arithmetic (same policy as gemm).
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     if flops < 1.0e6 {
-        qgemm_cols(&xq, w, &mut out, 0, n);
+        qgemm_cols(lvl, &xq, w, &mut out, 0, n);
         return out;
     }
     let out_ptr = AddrSendMut(&mut out as *mut Mat);
@@ -43,7 +61,7 @@ pub fn qmatmul(x: &Mat, w: &QMat) -> Mat {
         // SAFETY: chunks write disjoint column ranges of `out`;
         // scope_chunks joins before this function returns.
         let out = unsafe { &mut *out_ptr.get() };
-        qgemm_cols(xq_ref, w, out, c0, c1);
+        qgemm_cols(lvl, xq_ref, w, out, c0, c1);
     });
     out
 }
@@ -51,10 +69,11 @@ pub fn qmatmul(x: &Mat, w: &QMat) -> Mat {
 /// Serial kernel over output columns `[c0, c1)`.
 ///
 /// 4-row blocks stream each weight row once for FOUR activation rows
-/// (prefill / batched decode); the tail handles the batch-1 GEMV shape,
-/// which is weight-streaming-bound anyway — exactly the regime where INT8's
-/// 4x-smaller weight rows pay off.
-fn qgemm_cols(x: &QMat, w: &QMat, out: &mut Mat, c0: usize, c1: usize) {
+/// through [`simd::dot4_i8`] (prefill / batched decode); the tail handles
+/// the batch-1 GEMV shape, which is weight-streaming-bound anyway — exactly
+/// the regime where INT8's 4x-smaller weight rows pay off. The k loop walks
+/// `KC_Q` slabs with register-carried i32 accumulators.
+fn qgemm_cols(lvl: SimdLevel, x: &QMat, w: &QMat, out: &mut Mat, c0: usize, c1: usize) {
     let k = x.cols();
     let n = out.cols();
     let mut r = 0;
@@ -68,19 +87,28 @@ fn qgemm_cols(x: &QMat, w: &QMat, out: &mut Mat, c0: usize, c1: usize) {
         let o3 = &mut rest[..n];
         for c in c0..c1 {
             let wrow = w.row(c);
-            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
-            for i in 0..k {
-                let wv = wrow[i] as i32;
-                a0 += x0[i] as i32 * wv;
-                a1 += x1[i] as i32 * wv;
-                a2 += x2[i] as i32 * wv;
-                a3 += x3[i] as i32 * wv;
+            let mut acc = [0i32; 4];
+            let mut kb = 0;
+            while kb < k {
+                let ke = (kb + KC_Q).min(k);
+                let s = simd::dot4_i8(
+                    lvl,
+                    &x0[kb..ke],
+                    &x1[kb..ke],
+                    &x2[kb..ke],
+                    &x3[kb..ke],
+                    &wrow[kb..ke],
+                );
+                for (a, sv) in acc.iter_mut().zip(s) {
+                    *a += sv;
+                }
+                kb = ke;
             }
             let ws = w.scale(c);
-            o0[c] = a0 as f32 * s0 * ws;
-            o1[c] = a1 as f32 * s1 * ws;
-            o2[c] = a2 as f32 * s2 * ws;
-            o3[c] = a3 as f32 * s3 * ws;
+            o0[c] = acc[0] as f32 * s0 * ws;
+            o1[c] = acc[1] as f32 * s1 * ws;
+            o2[c] = acc[2] as f32 * s2 * ws;
+            o3[c] = acc[3] as f32 * s3 * ws;
         }
         r += 4;
     }
@@ -91,13 +119,44 @@ fn qgemm_cols(x: &QMat, w: &QMat, out: &mut Mat, c0: usize, c1: usize) {
         for c in c0..c1 {
             let wrow = w.row(c);
             let mut acc = 0i32;
-            for i in 0..k {
-                acc += xrow[i] as i32 * wrow[i] as i32;
+            let mut kb = 0;
+            while kb < k {
+                let ke = (kb + KC_Q).min(k);
+                acc += simd::dot_i8(lvl, &xrow[kb..ke], &wrow[kb..ke]);
+                kb = ke;
             }
             orow[c] = acc as f32 * xs * w.scale(c);
         }
         r += 1;
     }
+}
+
+/// Restructured scalar oracle: plain sequential i32 dot per element, no
+/// slabs, no microkernel, no threading — then the identical epilogue. The
+/// kernel-equivalence suite asserts [`qmatmul`] matches this byte-for-byte.
+pub fn qmatmul_ref(x: &Mat, w: &QMat) -> Mat {
+    let (m, k) = x.shape();
+    assert_eq!(w.cols(), k, "qmatmul inner-dim mismatch: {} vs {}", k, w.cols());
+    let n = w.rows();
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let xq = QMat::quantize_rows(x);
+    for r in 0..m {
+        let xrow = xq.row(r);
+        let xs = xq.scale(r);
+        let orow = out.row_mut(r);
+        for c in 0..n {
+            let wrow = w.row(c);
+            let mut acc = 0i32;
+            for i in 0..k {
+                acc += xrow[i] as i32 * wrow[i] as i32;
+            }
+            orow[c] = acc as f32 * xs * w.scale(c);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -137,6 +196,29 @@ mod tests {
         }
     }
 
+    /// SIMD, the 4-row microkernel, k-slabs, and threading must all be
+    /// invisible: byte-equal to the sequential-dot oracle. `k` values
+    /// straddle the KC_Q slab boundary.
+    #[test]
+    fn bitwise_matches_sequential_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        for &(m, k, n) in &[
+            (1usize, 1, 1),
+            (3, 17, 9),
+            (6, 640, 33),
+            (8, 200, 640),
+            (5, 2047, 16),
+            (5, 2048, 16),
+            (5, 2049, 16),
+        ] {
+            let x = Mat::randn(m, k, 1.0, &mut rng);
+            let w = QMat::from_weight(&Mat::randn(k, n, 1.0, &mut rng));
+            let got = qmatmul(&x, &w);
+            let want = qmatmul_ref(&x, &w);
+            assert_eq!(got, want, "({m},{k},{n}) diverged from the sequential oracle");
+        }
+    }
+
     /// Row-wise batch invariance, bit-exact: computing rows together or
     /// one at a time must produce identical f32 output.
     #[test]
@@ -161,7 +243,7 @@ mod tests {
         let got = qmatmul(&x, &w);
         let xq = QMat::quantize_rows(&x);
         let mut want = Mat::zeros(8, 640);
-        qgemm_cols(&xq, &w, &mut want, 0, 640);
+        qgemm_cols(simd::level(), &xq, &w, &mut want, 0, 640);
         assert_eq!(got, want, "threading changed results");
     }
 

@@ -1,0 +1,1050 @@
+//! Explicit SIMD primitives with a scalar reference implementation that is
+//! **byte-equal by construction** (DESIGN.md §Perf: lane-order determinism).
+//!
+//! Every f32 reduction in this module — dot products, softmax max/sum —
+//! uses one fixed *virtual-lane* accumulation order, independent of the
+//! instruction set actually executing it:
+//!
+//! - element `i` accumulates into lane `i % LANES` (LANES = 8), lanes
+//!   initialized to the reduction identity;
+//! - the 8 lanes collapse through one fixed pairwise tree,
+//!   `((l0⊕l1) ⊕ (l2⊕l3)) ⊕ ((l4⊕l5) ⊕ (l6⊕l7))` ([`reduce_add`] /
+//!   [`reduce_max`]).
+//!
+//! The scalar reference (`*_ref`) walks elements in order striding lanes;
+//! AVX2 holds the 8 lanes in one `__m256`, NEON in two `float32x4_t`
+//! (lanes 0–3 / 4–7) — all three execute the *same* per-lane IEEE op
+//! sequence, then store the lanes and call the same scalar reduce tree. No
+//! FMA is ever used (`mul` then `add`, two roundings, exactly like the
+//! scalar `lanes[j] += a*b`), so scalar ≡ AVX2 ≡ NEON bit-for-bit.
+//! Elementwise ops ([`axpy`], dequant-axpy) have no cross-element order at
+//! all and vectorize bit-identically for free. Integer i8×i8→i32 dots are
+//! exact in any association (|code| ≤ 127 keeps any serving-sized `k` well
+//! inside i32), so the widening-multiply paths need no lane discipline.
+//!
+//! Preconditions: callers pass finite inputs (NaN propagation differs
+//! between `f32::max` and vector max instructions) and the default
+//! round-to-nearest-even mode, which nothing in this crate changes. When a
+//! row's maximum is a signed zero, [`vmax`] backends may disagree on the
+//! *sign* of the returned zero; softmax is insensitive to this
+//! (`exp(±0.0) == 1.0` and `s − ±0.0` differ only at `s == −0.0`, where
+//! both subtractions exp to exactly 1.0), so attention outputs stay
+//! byte-equal regardless.
+//!
+//! The active level is chosen once per process ([`level`]): the
+//! `SKIPLESS_SIMD` env var (`off`/`scalar`/`0` forces the reference
+//! kernels — the CI dispatch axis) and otherwise runtime feature detection
+//! (AVX2 on x86_64, NEON on aarch64).
+
+use std::sync::OnceLock;
+
+/// Virtual accumulation width (f32 lanes). Fixed at 8 on every backend so
+/// results never depend on the ISA: one `__m256`, two `float32x4_t`, or a
+/// scalar `[f32; 8]`.
+pub const LANES: usize = 8;
+
+/// Instruction set selected for the lifetime of the process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Reference kernels (also the forced `SKIPLESS_SIMD=off` mode).
+    Scalar,
+    /// x86_64 with runtime-detected AVX2.
+    Avx2,
+    /// aarch64 NEON.
+    Neon,
+}
+
+fn detect() -> SimdLevel {
+    match std::env::var("SKIPLESS_SIMD").as_deref() {
+        Ok("off") | Ok("scalar") | Ok("0") => return SimdLevel::Scalar,
+        _ => {}
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdLevel::Neon;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// The process-wide dispatch level, detected once on first use.
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+pub fn name_of(lvl: SimdLevel) -> &'static str {
+    match lvl {
+        SimdLevel::Scalar => "scalar",
+        SimdLevel::Avx2 => "avx2",
+        SimdLevel::Neon => "neon",
+    }
+}
+
+/// Name of the active level (`scalar` / `avx2` / `neon`) — logged at
+/// engine startup and exposed as the `simd_dispatch` metrics gauge.
+pub fn level_name() -> &'static str {
+    name_of(level())
+}
+
+/// Log the chosen dispatch once per process (engine constructors call this;
+/// repeat calls are free).
+pub fn announce() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        crate::log_info!("kernel dispatch: {} (SKIPLESS_SIMD to override)", level_name());
+    });
+}
+
+/// The fixed pairwise tree that collapses the 8 virtual lanes of a sum.
+#[inline(always)]
+pub fn reduce_add(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// The same tree for max reductions.
+#[inline(always)]
+pub fn reduce_max(l: &[f32; LANES]) -> f32 {
+    (l[0].max(l[1]).max(l[2].max(l[3]))).max(l[4].max(l[5]).max(l[6].max(l[7])))
+}
+
+// ---- scalar reference kernels (the oracle; also the Scalar dispatch) ----
+
+/// Lane-strided dot product: `Σ a[i]·b[i]` in virtual-lane order.
+#[inline]
+pub fn dot_ref(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let n = a.len();
+    let whole = n - n % LANES;
+    for (ca, cb) in a[..whole].chunks_exact(LANES).zip(b[..whole].chunks_exact(LANES)) {
+        for j in 0..LANES {
+            lanes[j] += ca[j] * cb[j];
+        }
+    }
+    for j in 0..n - whole {
+        lanes[j] += a[whole + j] * b[whole + j];
+    }
+    reduce_add(&lanes)
+}
+
+/// Four dots sharing one `b` pass: exactly `[dot_ref(a0,b), …]`.
+#[inline]
+pub fn dot4_ref(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    [dot_ref(a0, b), dot_ref(a1, b), dot_ref(a2, b), dot_ref(a3, b)]
+}
+
+/// `y[i] += a · x[i]` — elementwise, no cross-element order.
+#[inline]
+pub fn axpy_ref(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// Lane-strided max, lanes initialized to `-∞`.
+#[inline]
+pub fn vmax_ref(x: &[f32]) -> f32 {
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    let n = x.len();
+    let whole = n - n % LANES;
+    for c in x[..whole].chunks_exact(LANES) {
+        for j in 0..LANES {
+            lanes[j] = lanes[j].max(c[j]);
+        }
+    }
+    for j in 0..n - whole {
+        lanes[j] = lanes[j].max(x[whole + j]);
+    }
+    reduce_max(&lanes)
+}
+
+/// Lane-strided sum, lanes initialized to `+0.0`.
+#[inline]
+pub fn vsum_ref(x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let n = x.len();
+    let whole = n - n % LANES;
+    for c in x[..whole].chunks_exact(LANES) {
+        for j in 0..LANES {
+            lanes[j] += c[j];
+        }
+    }
+    for j in 0..n - whole {
+        lanes[j] += x[whole + j];
+    }
+    reduce_add(&lanes)
+}
+
+/// Lane-strided `max |x[i]|`, lanes initialized to `+0.0` (activation-quant
+/// scale pass; equals the sequential fold exactly — abs and max are exact).
+#[inline]
+pub fn absmax_ref(x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let n = x.len();
+    let whole = n - n % LANES;
+    for c in x[..whole].chunks_exact(LANES) {
+        for j in 0..LANES {
+            lanes[j] = lanes[j].max(c[j].abs());
+        }
+    }
+    for j in 0..n - whole {
+        lanes[j] = lanes[j].max(x[whole + j].abs());
+    }
+    reduce_max(&lanes)
+}
+
+/// Lane-strided dot against a u8-quantized row dequantized in-register:
+/// `Σ q[i] · (zero + scale·codes[i])` — the exact per-element expression
+/// the KV-cache gather path uses.
+#[inline]
+pub fn dot_dequant_ref(q: &[f32], codes: &[u8], scale: f32, zero: f32) -> f32 {
+    debug_assert_eq!(q.len(), codes.len());
+    let mut lanes = [0.0f32; LANES];
+    let n = q.len();
+    let whole = n - n % LANES;
+    for (cq, cc) in q[..whole].chunks_exact(LANES).zip(codes[..whole].chunks_exact(LANES)) {
+        for j in 0..LANES {
+            lanes[j] += cq[j] * (zero + scale * cc[j] as f32);
+        }
+    }
+    for j in 0..n - whole {
+        lanes[j] += q[whole + j] * (zero + scale * codes[whole + j] as f32);
+    }
+    reduce_add(&lanes)
+}
+
+/// `y[i] += w · (zero + scale·codes[i])` — elementwise dequant-axpy.
+#[inline]
+pub fn axpy_dequant_ref(y: &mut [f32], w: f32, codes: &[u8], scale: f32, zero: f32) {
+    debug_assert_eq!(y.len(), codes.len());
+    for (yv, &c) in y.iter_mut().zip(codes) {
+        *yv += w * (zero + scale * c as f32);
+    }
+}
+
+/// Exact integer dot: `Σ a[i]·b[i]` in i32 (|code| ≤ 127 keeps any
+/// `k < ~130k` inside i32, so association is irrelevant).
+#[inline]
+pub fn dot_i8_ref(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&av, &bv) in a.iter().zip(b) {
+        acc += av as i32 * bv as i32;
+    }
+    acc
+}
+
+/// Four integer dots sharing one `b` pass.
+#[inline]
+pub fn dot4_i8_ref(a0: &[i8], a1: &[i8], a2: &[i8], a3: &[i8], b: &[i8]) -> [i32; 4] {
+    [dot_i8_ref(a0, b), dot_i8_ref(a1, b), dot_i8_ref(a2, b), dot_i8_ref(a3, b)]
+}
+
+// ---- dispatched entry points -------------------------------------------
+//
+// Kernels fetch `level()` once per call and pass it down, hoisting the
+// dispatch branch out of their inner loops; the match below then predicts
+// perfectly. SAFETY on every intrinsic arm: the level is only ever the
+// detected one ([`detect`]), so the required target feature is present.
+
+pub fn dot(lvl: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::dot(a, b) },
+        _ => dot_ref(a, b),
+    }
+}
+
+pub fn dot4(lvl: SimdLevel, a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot4(a0, a1, a2, a3, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::dot4(a0, a1, a2, a3, b) },
+        _ => dot4_ref(a0, a1, a2, a3, b),
+    }
+}
+
+pub fn axpy(lvl: SimdLevel, y: &mut [f32], a: f32, x: &[f32]) {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy(y, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::axpy(y, a, x) },
+        _ => axpy_ref(y, a, x),
+    }
+}
+
+/// Four axpys sharing one `x` pass (the 4-row GEMM microkernel body).
+pub fn axpy4(
+    lvl: SimdLevel,
+    y0: &mut [f32],
+    y1: &mut [f32],
+    y2: &mut [f32],
+    y3: &mut [f32],
+    a: [f32; 4],
+    x: &[f32],
+) {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy4(y0, y1, y2, y3, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::axpy4(y0, y1, y2, y3, a, x) },
+        _ => {
+            axpy_ref(y0, a[0], x);
+            axpy_ref(y1, a[1], x);
+            axpy_ref(y2, a[2], x);
+            axpy_ref(y3, a[3], x);
+        }
+    }
+}
+
+pub fn vmax(lvl: SimdLevel, x: &[f32]) -> f32 {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::vmax(x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::vmax(x) },
+        _ => vmax_ref(x),
+    }
+}
+
+pub fn vsum(lvl: SimdLevel, x: &[f32]) -> f32 {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::vsum(x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::vsum(x) },
+        _ => vsum_ref(x),
+    }
+}
+
+pub fn absmax(lvl: SimdLevel, x: &[f32]) -> f32 {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::absmax(x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::absmax(x) },
+        _ => absmax_ref(x),
+    }
+}
+
+pub fn dot_dequant(lvl: SimdLevel, q: &[f32], codes: &[u8], scale: f32, zero: f32) -> f32 {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot_dequant(q, codes, scale, zero) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::dot_dequant(q, codes, scale, zero) },
+        _ => dot_dequant_ref(q, codes, scale, zero),
+    }
+}
+
+pub fn axpy_dequant(lvl: SimdLevel, y: &mut [f32], w: f32, codes: &[u8], scale: f32, zero: f32) {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy_dequant(y, w, codes, scale, zero) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::axpy_dequant(y, w, codes, scale, zero) },
+        _ => axpy_dequant_ref(y, w, codes, scale, zero),
+    }
+}
+
+pub fn dot_i8(lvl: SimdLevel, a: &[i8], b: &[i8]) -> i32 {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot_i8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::dot_i8(a, b) },
+        _ => dot_i8_ref(a, b),
+    }
+}
+
+pub fn dot4_i8(
+    lvl: SimdLevel,
+    a0: &[i8],
+    a1: &[i8],
+    a2: &[i8],
+    a3: &[i8],
+    b: &[i8],
+) -> [i32; 4] {
+    match lvl {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot4_i8(a0, a1, a2, a3, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::dot4_i8(a0, a1, a2, a3, b) },
+        _ => dot4_i8_ref(a0, a1, a2, a3, b),
+    }
+}
+
+// ---- AVX2 backend ------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! One `__m256` carries the 8 virtual lanes. Every arithmetic step is
+    //! the vector form of the scalar reference's per-lane op — `mul` then
+    //! `add` (never FMA) — and reductions store the lanes and reuse the
+    //! scalar tree, so equality with `*_ref` is structural, not numeric
+    //! luck. Tails (< 8 elements) run the reference's own tail loop.
+
+    use super::{reduce_add, reduce_max, LANES};
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let whole = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i < whole {
+            let va = _mm256_loadu_ps(ap.add(i));
+            let vb = _mm256_loadu_ps(bp.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in 0..n - whole {
+            lanes[j] += a[whole + j] * b[whole + j];
+        }
+        reduce_add(&lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+        let n = b.len();
+        debug_assert!(a0.len() == n && a1.len() == n && a2.len() == n && a3.len() == n);
+        let whole = n - n % LANES;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < whole {
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(a0.as_ptr().add(i)), vb));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(a1.as_ptr().add(i)), vb));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_loadu_ps(a2.as_ptr().add(i)), vb));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_loadu_ps(a3.as_ptr().add(i)), vb));
+            i += LANES;
+        }
+        let accs = [acc0, acc1, acc2, acc3];
+        let rows = [a0, a1, a2, a3];
+        let mut out = [0.0f32; 4];
+        for r in 0..4 {
+            let mut lanes = [0.0f32; LANES];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), accs[r]);
+            for j in 0..n - whole {
+                lanes[j] += rows[r][whole + j] * b[whole + j];
+            }
+            out[r] = reduce_add(&lanes);
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let whole = n - n % LANES;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < whole {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            i += LANES;
+        }
+        for j in whole..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy4(
+        y0: &mut [f32],
+        y1: &mut [f32],
+        y2: &mut [f32],
+        y3: &mut [f32],
+        a: [f32; 4],
+        x: &[f32],
+    ) {
+        let n = x.len();
+        debug_assert!(y0.len() == n && y1.len() == n && y2.len() == n && y3.len() == n);
+        let whole = n - n % LANES;
+        let va0 = _mm256_set1_ps(a[0]);
+        let va1 = _mm256_set1_ps(a[1]);
+        let va2 = _mm256_set1_ps(a[2]);
+        let va3 = _mm256_set1_ps(a[3]);
+        let mut i = 0;
+        while i < whole {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let p0 = _mm256_add_ps(_mm256_loadu_ps(y0.as_ptr().add(i)), _mm256_mul_ps(va0, vx));
+            let p1 = _mm256_add_ps(_mm256_loadu_ps(y1.as_ptr().add(i)), _mm256_mul_ps(va1, vx));
+            let p2 = _mm256_add_ps(_mm256_loadu_ps(y2.as_ptr().add(i)), _mm256_mul_ps(va2, vx));
+            let p3 = _mm256_add_ps(_mm256_loadu_ps(y3.as_ptr().add(i)), _mm256_mul_ps(va3, vx));
+            _mm256_storeu_ps(y0.as_mut_ptr().add(i), p0);
+            _mm256_storeu_ps(y1.as_mut_ptr().add(i), p1);
+            _mm256_storeu_ps(y2.as_mut_ptr().add(i), p2);
+            _mm256_storeu_ps(y3.as_mut_ptr().add(i), p3);
+            i += LANES;
+        }
+        for j in whole..n {
+            let xv = x[j];
+            y0[j] += a[0] * xv;
+            y1[j] += a[1] * xv;
+            y2[j] += a[2] * xv;
+            y3[j] += a[3] * xv;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn vmax(x: &[f32]) -> f32 {
+        let n = x.len();
+        let whole = n - n % LANES;
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i < whole {
+            acc = _mm256_max_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in 0..n - whole {
+            lanes[j] = lanes[j].max(x[whole + j]);
+        }
+        reduce_max(&lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn vsum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let whole = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < whole {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in 0..n - whole {
+            lanes[j] += x[whole + j];
+        }
+        reduce_add(&lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn absmax(x: &[f32]) -> f32 {
+        let n = x.len();
+        let whole = n - n % LANES;
+        // clear the sign bit: |x| = x & !(-0.0)
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < whole {
+            let v = _mm256_andnot_ps(sign, _mm256_loadu_ps(x.as_ptr().add(i)));
+            acc = _mm256_max_ps(acc, v);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in 0..n - whole {
+            lanes[j] = lanes[j].max(x[whole + j].abs());
+        }
+        reduce_max(&lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_dequant(q: &[f32], codes: &[u8], scale: f32, zero: f32) -> f32 {
+        debug_assert_eq!(q.len(), codes.len());
+        let n = q.len();
+        let whole = n - n % LANES;
+        let vs = _mm256_set1_ps(scale);
+        let vz = _mm256_set1_ps(zero);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < whole {
+            // widen 8 u8 codes to f32, then the gather expression
+            // `zero + scale·code` per lane (mul, add — two roundings,
+            // matching the scalar expression exactly)
+            let raw = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+            let cf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(raw));
+            let d = _mm256_add_ps(vz, _mm256_mul_ps(vs, cf));
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vq, d));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for j in 0..n - whole {
+            lanes[j] += q[whole + j] * (zero + scale * codes[whole + j] as f32);
+        }
+        reduce_add(&lanes)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_dequant(y: &mut [f32], w: f32, codes: &[u8], scale: f32, zero: f32) {
+        debug_assert_eq!(y.len(), codes.len());
+        let n = y.len();
+        let whole = n - n % LANES;
+        let vs = _mm256_set1_ps(scale);
+        let vz = _mm256_set1_ps(zero);
+        let vw = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i < whole {
+            let raw = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+            let cf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(raw));
+            let d = _mm256_add_ps(vz, _mm256_mul_ps(vs, cf));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(vw, d)));
+            i += LANES;
+        }
+        for j in whole..n {
+            y[j] += w * (zero + scale * codes[j] as f32);
+        }
+    }
+
+    /// 16 codes per step: sign-extend i8→i16, `madd` pairs into i32, add.
+    /// Exact — every i32 partial is far below overflow for serving `k`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let whole = n - n % 16;
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < whole {
+            let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+            let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+            i += 16;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut total: i32 = lanes.iter().sum();
+        for j in whole..n {
+            total += a[j] as i32 * b[j] as i32;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_i8(a0: &[i8], a1: &[i8], a2: &[i8], a3: &[i8], b: &[i8]) -> [i32; 4] {
+        let n = b.len();
+        debug_assert!(a0.len() == n && a1.len() == n && a2.len() == n && a3.len() == n);
+        let whole = n - n % 16;
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut acc2 = _mm256_setzero_si256();
+        let mut acc3 = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < whole {
+            let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
+            let v0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(a0.as_ptr().add(i) as *const __m128i));
+            let v1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(a1.as_ptr().add(i) as *const __m128i));
+            let v2 = _mm256_cvtepi8_epi16(_mm_loadu_si128(a2.as_ptr().add(i) as *const __m128i));
+            let v3 = _mm256_cvtepi8_epi16(_mm_loadu_si128(a3.as_ptr().add(i) as *const __m128i));
+            acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(v0, vb));
+            acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(v1, vb));
+            acc2 = _mm256_add_epi32(acc2, _mm256_madd_epi16(v2, vb));
+            acc3 = _mm256_add_epi32(acc3, _mm256_madd_epi16(v3, vb));
+            i += 16;
+        }
+        let accs = [acc0, acc1, acc2, acc3];
+        let rows = [a0, a1, a2, a3];
+        let mut out = [0i32; 4];
+        for r in 0..4 {
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accs[r]);
+            let mut total: i32 = lanes.iter().sum();
+            for j in whole..n {
+                total += rows[r][j] as i32 * b[j] as i32;
+            }
+            out[r] = total;
+        }
+        out
+    }
+}
+
+// ---- NEON backend ------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    //! Two `float32x4_t` registers carry virtual lanes 0–3 and 4–7. Same
+    //! discipline as the AVX2 backend: `vmul` then `vadd` (never the fused
+    //! `vmla`/`fmla`), store lanes, reuse the scalar reduce tree.
+
+    use super::{reduce_add, reduce_max, LANES};
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let whole = n - n % LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < whole {
+            let (ap, bp) = (a.as_ptr().add(i), b.as_ptr().add(i));
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(ap), vld1q_f32(bp)));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(ap.add(4)), vld1q_f32(bp.add(4))));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for j in 0..n - whole {
+            lanes[j] += a[whole + j] * b[whole + j];
+        }
+        reduce_add(&lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+        [dot(a0, b), dot(a1, b), dot(a2, b), dot(a3, b)]
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let whole = n - n % LANES;
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i < whole {
+            let yp = y.as_mut_ptr().add(i);
+            let xp = x.as_ptr().add(i);
+            vst1q_f32(yp, vaddq_f32(vld1q_f32(yp), vmulq_f32(va, vld1q_f32(xp))));
+            vst1q_f32(
+                yp.add(4),
+                vaddq_f32(vld1q_f32(yp.add(4)), vmulq_f32(va, vld1q_f32(xp.add(4)))),
+            );
+            i += LANES;
+        }
+        for j in whole..n {
+            y[j] += a * x[j];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy4(
+        y0: &mut [f32],
+        y1: &mut [f32],
+        y2: &mut [f32],
+        y3: &mut [f32],
+        a: [f32; 4],
+        x: &[f32],
+    ) {
+        axpy(y0, a[0], x);
+        axpy(y1, a[1], x);
+        axpy(y2, a[2], x);
+        axpy(y3, a[3], x);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn vmax(x: &[f32]) -> f32 {
+        let n = x.len();
+        let whole = n - n % LANES;
+        let mut acc0 = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut acc1 = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i < whole {
+            let p = x.as_ptr().add(i);
+            acc0 = vmaxq_f32(acc0, vld1q_f32(p));
+            acc1 = vmaxq_f32(acc1, vld1q_f32(p.add(4)));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for j in 0..n - whole {
+            lanes[j] = lanes[j].max(x[whole + j]);
+        }
+        reduce_max(&lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn vsum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let whole = n - n % LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < whole {
+            let p = x.as_ptr().add(i);
+            acc0 = vaddq_f32(acc0, vld1q_f32(p));
+            acc1 = vaddq_f32(acc1, vld1q_f32(p.add(4)));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for j in 0..n - whole {
+            lanes[j] += x[whole + j];
+        }
+        reduce_add(&lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn absmax(x: &[f32]) -> f32 {
+        let n = x.len();
+        let whole = n - n % LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < whole {
+            let p = x.as_ptr().add(i);
+            acc0 = vmaxq_f32(acc0, vabsq_f32(vld1q_f32(p)));
+            acc1 = vmaxq_f32(acc1, vabsq_f32(vld1q_f32(p.add(4))));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for j in 0..n - whole {
+            lanes[j] = lanes[j].max(x[whole + j].abs());
+        }
+        reduce_max(&lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn widen_u8_f32(p: *const u8) -> (float32x4_t, float32x4_t) {
+        let wide = vmovl_u8(vld1_u8(p));
+        let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+        let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+        (lo, hi)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_dequant(q: &[f32], codes: &[u8], scale: f32, zero: f32) -> f32 {
+        debug_assert_eq!(q.len(), codes.len());
+        let n = q.len();
+        let whole = n - n % LANES;
+        let vs = vdupq_n_f32(scale);
+        let vz = vdupq_n_f32(zero);
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < whole {
+            let (c0, c1) = widen_u8_f32(codes.as_ptr().add(i));
+            let d0 = vaddq_f32(vz, vmulq_f32(vs, c0));
+            let d1 = vaddq_f32(vz, vmulq_f32(vs, c1));
+            let qp = q.as_ptr().add(i);
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(qp), d0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(qp.add(4)), d1));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for j in 0..n - whole {
+            lanes[j] += q[whole + j] * (zero + scale * codes[whole + j] as f32);
+        }
+        reduce_add(&lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_dequant(y: &mut [f32], w: f32, codes: &[u8], scale: f32, zero: f32) {
+        debug_assert_eq!(y.len(), codes.len());
+        let n = y.len();
+        let whole = n - n % LANES;
+        let vs = vdupq_n_f32(scale);
+        let vz = vdupq_n_f32(zero);
+        let vw = vdupq_n_f32(w);
+        let mut i = 0;
+        while i < whole {
+            let (c0, c1) = widen_u8_f32(codes.as_ptr().add(i));
+            let d0 = vaddq_f32(vz, vmulq_f32(vs, c0));
+            let d1 = vaddq_f32(vz, vmulq_f32(vs, c1));
+            let yp = y.as_mut_ptr().add(i);
+            vst1q_f32(yp, vaddq_f32(vld1q_f32(yp), vmulq_f32(vw, d0)));
+            vst1q_f32(yp.add(4), vaddq_f32(vld1q_f32(yp.add(4)), vmulq_f32(vw, d1)));
+            i += LANES;
+        }
+        for j in whole..n {
+            y[j] += w * (zero + scale * codes[j] as f32);
+        }
+    }
+
+    /// 8 codes per step: widening multiply i8×i8→i16, pairwise-accumulate
+    /// into i32 lanes. Exact.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let whole = n - n % 8;
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0;
+        while i < whole {
+            let prod = vmull_s8(vld1_s8(a.as_ptr().add(i)), vld1_s8(b.as_ptr().add(i)));
+            acc = vpadalq_s16(acc, prod);
+            i += 8;
+        }
+        let mut total = vaddvq_s32(acc);
+        for j in whole..n {
+            total += a[j] as i32 * b[j] as i32;
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot4_i8(a0: &[i8], a1: &[i8], a2: &[i8], a3: &[i8], b: &[i8]) -> [i32; 4] {
+        [dot_i8(a0, b), dot_i8(a1, b), dot_i8(a2, b), dot_i8(a3, b)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn randv(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// Lengths straddling the lane width and the i8 chunk width (16).
+    const NS: &[usize] = &[0, 1, 2, 3, 5, 7, 8, 9, 13, 15, 16, 17, 31, 32, 33, 64, 67, 129];
+
+    #[test]
+    fn dispatched_f32_primitives_byte_equal_reference() {
+        let lvl = level();
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for &n in NS {
+            let a = randv(n, &mut rng);
+            let b = randv(n, &mut rng);
+            assert_eq!(dot(lvl, &a, &b).to_bits(), dot_ref(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(vmax(lvl, &a).to_bits(), vmax_ref(&a).to_bits(), "vmax n={n}");
+            assert_eq!(vsum(lvl, &a).to_bits(), vsum_ref(&a).to_bits(), "vsum n={n}");
+            assert_eq!(absmax(lvl, &a).to_bits(), absmax_ref(&a).to_bits(), "absmax n={n}");
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            axpy(lvl, &mut y1, 0.37, &a);
+            axpy_ref(&mut y2, 0.37, &a);
+            assert_eq!(bits(&y1), bits(&y2), "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_dot4_matches_four_dots() {
+        let lvl = level();
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        for &n in NS {
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| randv(n, &mut rng)).collect();
+            let b = randv(n, &mut rng);
+            let got = dot4(lvl, &rows[0], &rows[1], &rows[2], &rows[3], &b);
+            for j in 0..4 {
+                assert_eq!(got[j].to_bits(), dot_ref(&rows[j], &b).to_bits(), "row {j} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_axpy4_matches_four_axpys() {
+        let lvl = level();
+        let mut rng = Xoshiro256::seed_from_u64(44);
+        for &n in NS {
+            let x = randv(n, &mut rng);
+            let a = [0.5f32, -1.25, 0.0, 3.0];
+            let mut ys: Vec<Vec<f32>> = (0..4).map(|_| randv(n, &mut rng)).collect();
+            let mut refs = ys.clone();
+            let (y0, rest) = ys.split_at_mut(1);
+            let (y1, rest) = rest.split_at_mut(1);
+            let (y2, y3) = rest.split_at_mut(1);
+            axpy4(lvl, &mut y0[0], &mut y1[0], &mut y2[0], &mut y3[0], a, &x);
+            for j in 0..4 {
+                axpy_ref(&mut refs[j], a[j], &x);
+            }
+            assert_eq!(bits(&y0[0]), bits(&refs[0]), "n={n}");
+            assert_eq!(bits(&y1[0]), bits(&refs[1]), "n={n}");
+            assert_eq!(bits(&y2[0]), bits(&refs[2]), "n={n}");
+            assert_eq!(bits(&y3[0]), bits(&refs[3]), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_dequant_primitives_byte_equal_reference() {
+        let lvl = level();
+        let mut rng = Xoshiro256::seed_from_u64(45);
+        for &n in NS {
+            let q = randv(n, &mut rng);
+            let codes: Vec<u8> = (0..n).map(|_| rng.next_below(256) as u8).collect();
+            let (scale, zero) = (0.031_f32, -2.17_f32);
+            assert_eq!(
+                dot_dequant(lvl, &q, &codes, scale, zero).to_bits(),
+                dot_dequant_ref(&q, &codes, scale, zero).to_bits(),
+                "dot_dequant n={n}"
+            );
+            let mut y1 = q.clone();
+            let mut y2 = q.clone();
+            axpy_dequant(lvl, &mut y1, 0.73, &codes, scale, zero);
+            axpy_dequant_ref(&mut y2, 0.73, &codes, scale, zero);
+            assert_eq!(bits(&y1), bits(&y2), "axpy_dequant n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_i8_dots_exact() {
+        let lvl = level();
+        let mut rng = Xoshiro256::seed_from_u64(46);
+        for &n in NS {
+            // full i8 range including -128 (raw weight files may carry it)
+            let gen = |rng: &mut Xoshiro256| -> Vec<i8> {
+                (0..n).map(|_| (rng.next_below(256) as i64 - 128) as i8).collect()
+            };
+            let rows: Vec<Vec<i8>> = (0..4).map(|_| gen(&mut rng)).collect();
+            let b = gen(&mut rng);
+            assert_eq!(dot_i8(lvl, &rows[0], &b), dot_i8_ref(&rows[0], &b), "dot_i8 n={n}");
+            let got = dot4_i8(lvl, &rows[0], &rows[1], &rows[2], &rows[3], &b);
+            for j in 0..4 {
+                assert_eq!(got[j], dot_i8_ref(&rows[j], &b), "dot4_i8 row {j} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn vmax_handles_neg_infinity_padding() {
+        // masked-softmax rows carry -inf entries; they must be no-ops
+        let lvl = level();
+        let x = [f32::NEG_INFINITY, 2.5, f32::NEG_INFINITY, -1.0, f32::NEG_INFINITY];
+        assert_eq!(vmax(lvl, &x), 2.5);
+        assert_eq!(vmax_ref(&x), 2.5);
+        assert_eq!(vmax(lvl, &[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn lane_order_is_the_documented_contract() {
+        // an independent spelling of the contract: lanes by i % 8, fixed tree
+        let mut rng = Xoshiro256::seed_from_u64(47);
+        for &n in &[11usize, 24, 40] {
+            let x = randv(n, &mut rng);
+            let mut lanes = [0.0f32; 8];
+            for (i, &v) in x.iter().enumerate() {
+                lanes[i % 8] += v;
+            }
+            let want = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+            assert_eq!(vsum(level(), &x).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    fn bits(x: &[f32]) -> Vec<u32> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+}

@@ -254,6 +254,8 @@ impl Metrics {
             ("tokens_decoded", g(&self.tokens_decoded)),
             ("batches_run", g(&self.batches_run)),
             ("preemptions", g(&self.preemptions)),
+            // process-wide kernel dispatch gauge (avx2/neon/scalar)
+            ("simd_dispatch", Json::str(crate::linalg::simd::level_name())),
             (
                 "prefill",
                 Json::obj(vec![
@@ -378,6 +380,13 @@ mod tests {
         assert_eq!(j.get("requests_admitted").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("tokens_decoded").unwrap().as_u64(), Some(42));
         assert_eq!(j.get("ttft").unwrap().get("count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn simd_dispatch_gauge_in_json() {
+        let j = Metrics::new().to_json();
+        let d = j.get("simd_dispatch").unwrap().as_str().unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&d), "unexpected dispatch name {d:?}");
     }
 
     #[test]

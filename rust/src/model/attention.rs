@@ -7,7 +7,7 @@
 //! the paper's merged variants drop in — an eliminated matrix simply means
 //! the caller passes the block input itself as `q` (or `k`/`v`).
 
-use crate::linalg::{matmul_transb, softmax_rows};
+use crate::linalg::{matmul_transb, simd, softmax_rows};
 use crate::model::rope;
 use crate::tensor::Mat;
 
@@ -119,36 +119,30 @@ pub fn decode_attention(
     let t = pos + 1;
 
     let scale = 1.0 / (hd as f32).sqrt();
+    let lvl = simd::level();
     let mut out = Mat::zeros(1, layout.d());
     let qrow = q.row(0);
     // per query head: scores over t cached positions, softmax, weighted sum
+    // — the same dispatched primitives (and op order) as the engine's paged
+    // kernel, so this oracle stays bit-identical to the serving path
     let mut scores = vec![0.0f32; t];
     for h in 0..layout.n_heads {
         let g = layout.kv_of(h);
         let qh = &qrow[h * hd..(h + 1) * hd];
         for (r, s) in scores.iter_mut().enumerate() {
             let krow = &k_cache[r * e + g * hd..r * e + (g + 1) * hd];
-            let mut acc = 0.0f32;
-            for i in 0..hd {
-                acc += qh[i] * krow[i];
-            }
-            *s = acc * scale;
+            *s = simd::dot(lvl, qh, krow) * scale;
         }
         // softmax over scores[0..t]
-        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-        let mut sum = 0.0f32;
+        let mx = simd::vmax(lvl, &scores);
         for s in scores.iter_mut() {
             *s = (*s - mx).exp();
-            sum += *s;
         }
-        let inv = 1.0 / sum;
+        let inv = 1.0 / simd::vsum(lvl, &scores);
         let oh = &mut out.row_mut(0)[h * hd..(h + 1) * hd];
         for (r, &s) in scores.iter().enumerate() {
-            let w = s * inv;
             let vrow = &v_cache[r * e + g * hd..r * e + (g + 1) * hd];
-            for i in 0..hd {
-                oh[i] += w * vrow[i];
-            }
+            simd::axpy(lvl, oh, s * inv, vrow);
         }
     }
     out

@@ -7,13 +7,17 @@
 //! gather-then-[`attend_gathered`] decode path (DESIGN.md §Paged attention):
 //!
 //! 1. **Accumulation order.** For every (head, position) the kernel
-//!    executes the exact float-op sequence of [`attend_gathered`]: scaled
-//!    dot in element order, running max, exp + sum in position order, then
-//!    `out[i] += w * v[i]` in position order. Block boundaries only decide
-//!    *where* a row is read from, never *when* it is accumulated, and u8
-//!    rows dequantize in-register with the same `zero + scale * code`
-//!    expression `gather` uses — so outputs are **bit-identical** to the
-//!    gathered reference on both f32 and u8 pools.
+//!    executes the exact float-op sequence of [`attend_gathered`], both
+//!    expressed through the virtual-lane contract of [`crate::linalg::simd`]
+//!    (DESIGN.md §Perf): lane-strided scaled dot per position, lane-strided
+//!    max, a scalar exp pass, lane-strided sum, then `out[i] += w * v[i]`
+//!    in position order. The paged kernel runs the dispatched (AVX2/NEON)
+//!    primitives, the gathered oracle runs the scalar `*_ref` spellings —
+//!    byte-equal by the lane contract, not by tolerance. Block boundaries
+//!    only decide *where* a row is read from, never *when* it is
+//!    accumulated, and u8 rows dequantize in-register with the same
+//!    `zero + scale * code` expression `gather` uses — so outputs are
+//!    **bit-identical** to the gathered reference on both f32 and u8 pools.
 //! 2. **Disjoint outputs.** The parallel grid assigns each (item, head)
 //!    cell its own `out[row][h*hd..(h+1)*hd]` slice and shares no
 //!    accumulator, so results do not depend on thread count or schedule —
@@ -25,6 +29,7 @@
 
 use crate::kvcache::BlockView;
 use crate::linalg::gemm::AddrSendMut;
+use crate::linalg::simd::{self, SimdLevel};
 use crate::model::attention::HeadLayout;
 use crate::tensor::Mat;
 use crate::util::threadpool;
@@ -75,9 +80,11 @@ pub struct AttnItem<'a> {
 
 /// The reference kernel: attention of one rotated query row over `t`
 /// gathered, contiguous K/V rows (`t × e` each). This is the old decode
-/// path's `attend_one`, kept verbatim as the bit-identity oracle for the
-/// paged kernel (property tests and benches diff against it) — production
-/// paths read in place via [`attend_paged`]/[`attend_batch`] instead.
+/// path's `attend_one`, restructured as the **scalar oracle** for the paged
+/// kernel: every reduction is the `*_ref` spelling of the virtual-lane
+/// primitives the SIMD path dispatches, so equivalence stays byte-equal
+/// (property tests and benches diff against it) — production paths read in
+/// place via [`attend_paged`]/[`attend_batch`] instead.
 pub fn attend_gathered(
     layout: HeadLayout,
     q_rot: &[f32],
@@ -95,35 +102,28 @@ pub fn attend_gathered(
         let qh = &q_rot[h * hd..(h + 1) * hd];
         for (r, s) in scores.iter_mut().enumerate() {
             let krow = &keys[r * e + g * hd..r * e + (g + 1) * hd];
-            let mut acc = 0.0f32;
-            for i in 0..hd {
-                acc += qh[i] * krow[i];
-            }
-            *s = acc * scale;
+            *s = simd::dot_ref(qh, krow) * scale;
         }
-        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-        let mut sum = 0.0f32;
+        let mx = simd::vmax_ref(&scores);
         for s in scores.iter_mut() {
             *s = (*s - mx).exp();
-            sum += *s;
         }
-        let inv = 1.0 / sum;
+        let inv = 1.0 / simd::vsum_ref(&scores);
         let oh = &mut out[h * hd..(h + 1) * hd];
         oh.fill(0.0);
         for (r, &s) in scores.iter().enumerate() {
-            let w = s * inv;
             let vrow = &vals[r * e + g * hd..r * e + (g + 1) * hd];
-            for i in 0..hd {
-                oh[i] += w * vrow[i];
-            }
+            simd::axpy_ref(oh, s * inv, vrow);
         }
     }
 }
 
 /// One (item, head) cell of the paged kernel. Reads K/V in place from
-/// `views` then `tails`, writing the head's `hd` output floats. See the
-/// module docs for the order-preservation argument.
+/// `views` then `tails`, writing the head's `hd` output floats, with all
+/// reductions dispatched through [`simd`] at `lvl`. See the module docs
+/// for the order-preservation argument.
 fn attend_head(
+    lvl: SimdLevel,
     layout: HeadLayout,
     h: usize,
     q_rot: &[f32],
@@ -148,11 +148,7 @@ fn attend_head(
                 debug_assert_eq!(ve, e);
                 for p in 0..len {
                     let krow = &data[p * stride + g * hd..p * stride + (g + 1) * hd];
-                    let mut acc = 0.0f32;
-                    for i in 0..hd {
-                        acc += qh[i] * krow[i];
-                    }
-                    scores[r] = acc * scale;
+                    scores[r] = simd::dot(lvl, qh, krow) * scale;
                     r += 1;
                 }
             }
@@ -161,13 +157,8 @@ fn attend_head(
                 for p in 0..len {
                     let kc = &data[p * stride + g * hd..p * stride + (g + 1) * hd];
                     let m = &meta[p * meta_stride..p * meta_stride + 4];
-                    let (ks, kz) = (m[0], m[1]);
-                    let mut acc = 0.0f32;
-                    for i in 0..hd {
-                        // in-register dequant: same expression as gather
-                        acc += qh[i] * (kz + ks * kc[i] as f32);
-                    }
-                    scores[r] = acc * scale;
+                    // in-register dequant: same expression as gather
+                    scores[r] = simd::dot_dequant(lvl, qh, kc, m[0], m[1]) * scale;
                     r += 1;
                 }
             }
@@ -176,23 +167,18 @@ fn attend_head(
     for seg in tails {
         for p in 0..seg.n {
             let krow = &seg.k[p * e + g * hd..p * e + (g + 1) * hd];
-            let mut acc = 0.0f32;
-            for i in 0..hd {
-                acc += qh[i] * krow[i];
-            }
-            scores[r] = acc * scale;
+            scores[r] = simd::dot(lvl, qh, krow) * scale;
             r += 1;
         }
     }
     debug_assert_eq!(r, t, "views + tails must cover t positions");
-    // pass 2: softmax, same op order as the gathered reference
-    let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-    let mut sum = 0.0f32;
+    // pass 2: softmax, same op order as the gathered reference (lane-max,
+    // scalar exp pass, lane-sum)
+    let mx = simd::vmax(lvl, scores);
     for s in scores.iter_mut() {
         *s = (*s - mx).exp();
-        sum += *s;
     }
-    let inv = 1.0 / sum;
+    let inv = 1.0 / simd::vsum(lvl, scores);
     // pass 3: weighted V, positions ascending again
     out_head.fill(0.0);
     let mut r = 0usize;
@@ -200,23 +186,16 @@ fn attend_head(
         match *view {
             BlockView::F32 { data, len, stride, .. } => {
                 for p in 0..len {
-                    let w = scores[r] * inv;
                     let vrow = &data[p * stride + e + g * hd..p * stride + e + (g + 1) * hd];
-                    for i in 0..hd {
-                        out_head[i] += w * vrow[i];
-                    }
+                    simd::axpy(lvl, out_head, scores[r] * inv, vrow);
                     r += 1;
                 }
             }
             BlockView::U8 { data, meta, len, stride, meta_stride, .. } => {
                 for p in 0..len {
-                    let w = scores[r] * inv;
                     let vc = &data[p * stride + e + g * hd..p * stride + e + (g + 1) * hd];
                     let m = &meta[p * meta_stride..p * meta_stride + 4];
-                    let (vs, vz) = (m[2], m[3]);
-                    for i in 0..hd {
-                        out_head[i] += w * (vz + vs * vc[i] as f32);
-                    }
+                    simd::axpy_dequant(lvl, out_head, scores[r] * inv, vc, m[2], m[3]);
                     r += 1;
                 }
             }
@@ -224,11 +203,8 @@ fn attend_head(
     }
     for seg in tails {
         for p in 0..seg.n {
-            let w = scores[r] * inv;
             let vrow = &seg.v[p * e + g * hd..p * e + (g + 1) * hd];
-            for i in 0..hd {
-                out_head[i] += w * vrow[i];
-            }
+            simd::axpy(lvl, out_head, scores[r] * inv, vrow);
             r += 1;
         }
     }
@@ -247,13 +223,14 @@ pub fn attend_paged(
     out: &mut [f32],
 ) {
     let hd = layout.head_dim;
+    let lvl = simd::level();
     debug_assert_eq!(out.len(), layout.d());
     debug_assert_eq!(
         views.iter().map(|b| b.len()).sum::<usize>() + tails.iter().map(|s| s.n).sum::<usize>(),
         t
     );
     for h in 0..layout.n_heads {
-        attend_head(layout, h, q_rot, views, tails, t, scores, &mut out[h * hd..(h + 1) * hd]);
+        attend_head(lvl, layout, h, q_rot, views, tails, t, scores, &mut out[h * hd..(h + 1) * hd]);
     }
 }
 
@@ -289,6 +266,7 @@ pub fn attend_batch(layout: HeadLayout, items: &[AttnItem<'_>], out: &mut Mat) {
         });
         return;
     }
+    let lvl = simd::level();
     let out_ptr = AddrSendMut(out as *mut Mat);
     threadpool::global().scope_chunks(grid, 1, move |g0, g1| {
         // SAFETY: each grid cell owns the disjoint output slice
@@ -301,7 +279,7 @@ pub fn attend_batch(layout: HeadLayout, items: &[AttnItem<'_>], out: &mut Mat) {
                 let it = &items[cell / n_heads];
                 let h = cell % n_heads;
                 let out_head = &mut out.row_mut(it.out_row)[h * hd..(h + 1) * hd];
-                attend_head(layout, h, it.q_rot, it.views, &it.tails, it.t, scores, out_head);
+                attend_head(lvl, layout, h, it.q_rot, it.views, &it.tails, it.t, scores, out_head);
             }
         });
     });

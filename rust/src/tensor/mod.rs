@@ -271,11 +271,16 @@ impl QMat {
     /// by `scale / 2` ([`QMat::dequantize`]).
     pub fn quantize_rows(m: &Mat) -> Self {
         let (rows, cols) = m.shape();
+        let lvl = crate::linalg::simd::level();
         let mut data = Vec::with_capacity(rows * cols);
         let mut scales = Vec::with_capacity(rows);
         for r in 0..rows {
             let row = m.row(r);
-            let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            // |x| and max are exact, so the lane-strided amax equals the
+            // sequential fold bit-for-bit at every dispatch level. The code
+            // loop below stays scalar: Rust's `.round()` ties away from
+            // zero, which no AVX2/NEON rounding instruction reproduces.
+            let amax = crate::linalg::simd::absmax(lvl, row);
             if amax > 0.0 {
                 let scale = amax / 127.0;
                 scales.push(scale);

@@ -1,0 +1,386 @@
+//! Kernel-equivalence property suite: SIMD vs scalar-oracle BYTE-equality.
+//!
+//! Every rewritten kernel (`matmul_into`, `matmul_transb`, `matvec`,
+//! `qmatmul`, and the fused paged-attention kernel) must produce output
+//! byte-equal — not tolerance-close — to its restructured scalar oracle
+//! (`matmul_ref` / `matmul_transb_ref` / `matvec_ref` / `qmatmul_ref` /
+//! `attend_gathered`), under BOTH forced-scalar dispatch
+//! (`SimdLevel::Scalar`) and whatever `simd::level()` auto-detects.
+//!
+//! The dimension sweep deliberately straddles the virtual lane width
+//! (LANES = 8) and every cache-tile boundary (MC = 64, NC = 128,
+//! KC = 256, KC_Q = 2048): {1, 3, lane−1, lane, lane+1, tile−1, tile,
+//! tile+1, odd primes}. Integer i8×i8→i32 paths are exact in any
+//! association, so they must match in full; f32 paths match because the
+//! lane-strided accumulation order is fixed by contract.
+//!
+//! Also here: the qGEMM edge-case battery (i8 −128 saturation, all-zero
+//! rows, per-row scale under/overflow, activation-quant roundtrip
+//! determinism) and a seeded fuzz generator in the `sched_fuzz.rs` style.
+
+use skipless::config::ModelConfig;
+use skipless::kvcache::{BlockView, CacheOpts, KvCache, SeqId};
+use skipless::linalg::gemm::{
+    matmul_into_with, matmul_ref, matmul_transb_ref, matmul_transb_with, matvec_ref, matvec_with,
+};
+use skipless::linalg::qgemm::{qmatmul_ref, qmatmul_with};
+use skipless::linalg::simd::{self, SimdLevel, LANES};
+use skipless::model::attention::HeadLayout;
+use skipless::model::paged_attn::{attend_gathered, attend_paged, KvSegment};
+use skipless::tensor::{Mat, QMat};
+use skipless::util::rng::Xoshiro256;
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Both dispatch levels under test: the scalar reference arm and whatever
+/// the host auto-detects (identical when SKIPLESS_SIMD=off — that run of
+/// the suite is still meaningful because it pins oracle == kernel).
+fn levels() -> Vec<SimdLevel> {
+    let mut ls = vec![SimdLevel::Scalar];
+    if simd::level() != SimdLevel::Scalar {
+        ls.push(simd::level());
+    }
+    ls
+}
+
+/// M/N/K values straddling the lane width plus small odd primes.
+const SMALL: &[usize] = &[1, 3, LANES - 1, LANES, LANES + 1, 13];
+
+/// Targeted (m, n, k) shapes straddling the MC=64 / NC=128 / KC=256 tiles
+/// (one below, on, and above each boundary, combined so a single shape
+/// crosses all three at once) plus odd-prime spoilers.
+const TILED: &[(usize, usize, usize)] = &[
+    (63, 127, 255),
+    (64, 128, 256),
+    (65, 129, 257),
+    (67, 131, 263), // odd primes past every tile edge
+    (1, 768, 768),  // skinny batch-1 shape, above 1e6 flops: threaded column path
+    (130, 7, 300),  // deep M, skinny N: serial row-blocked path + tail rows
+];
+
+// ---------------------------------------------------------------------------
+// f32 GEMM family
+// ---------------------------------------------------------------------------
+
+fn check_f32_shape(m: usize, n: usize, k: usize, rng: &mut Xoshiro256) {
+    let a = Mat::randn(m, k, 0.7, rng);
+    let b = Mat::randn(k, n, 0.7, rng);
+    let bt = b.transpose();
+    let x: Vec<f32> = a.row(0).to_vec(); // matvec operand, len k
+
+    let want_mm = matmul_ref(&a, &b);
+    let want_tb = matmul_transb_ref(&a, &bt);
+    let want_mv = matvec_ref(&a, &x);
+
+    for lvl in levels() {
+        let tag = format!("m={m} n={n} k={k} lvl={lvl:?}");
+        let mut got = Mat::zeros(m, n);
+        matmul_into_with(lvl, &a, &b, &mut got);
+        assert_eq!(bits(got.as_slice()), bits(want_mm.as_slice()), "matmul {tag}");
+
+        let got_tb = matmul_transb_with(lvl, &a, &bt);
+        assert_eq!(bits(got_tb.as_slice()), bits(want_tb.as_slice()), "transb {tag}");
+
+        let got_mv = matvec_with(lvl, &a, &x);
+        assert_eq!(bits(&got_mv), bits(&want_mv), "matvec {tag}");
+    }
+}
+
+/// The headline f32 sweep: full SMALL×SMALL×SMALL cross, then the
+/// tile-straddling targeted shapes (which also push past the 1e6-flop
+/// threading threshold, covering the parallel row/column drivers).
+#[test]
+fn f32_kernels_byte_equal_scalar_oracle_across_dim_sweep() {
+    let mut rng = Xoshiro256::seed_from_u64(0x4e11);
+    for &m in SMALL {
+        for &n in SMALL {
+            for &k in SMALL {
+                check_f32_shape(m, n, k, &mut rng);
+            }
+        }
+    }
+    for &(m, n, k) in TILED {
+        check_f32_shape(m, n, k, &mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8 qGEMM
+// ---------------------------------------------------------------------------
+
+fn check_q_shape(m: usize, n: usize, k: usize, rng: &mut Xoshiro256) {
+    let x = Mat::randn(m, k, 0.9, rng);
+    let wf = Mat::randn(n, k, 0.05, rng);
+    let w = QMat::quantize_rows(&wf);
+    let want = qmatmul_ref(&x, &w);
+    for lvl in levels() {
+        let got = qmatmul_with(lvl, &x, &w);
+        assert_eq!(
+            bits(got.as_slice()),
+            bits(want.as_slice()),
+            "qmatmul m={m} n={n} k={k} lvl={lvl:?}"
+        );
+    }
+}
+
+/// qGEMM sweep: lane-straddling smalls plus k straddling the KC_Q = 2048
+/// slab boundary (the i8 dot is exact in any association, so slabbed and
+/// sequential accumulation must agree to the bit, not approximately).
+#[test]
+fn qgemm_byte_equal_sequential_oracle_across_dim_sweep() {
+    let mut rng = Xoshiro256::seed_from_u64(0x9e44);
+    for &m in SMALL {
+        for &n in SMALL {
+            for &k in SMALL {
+                check_q_shape(m, n, k, &mut rng);
+            }
+        }
+    }
+    for (m, n, k) in [(5, 16, 2047), (5, 16, 2048), (5, 16, 2049), (4, 640, 640), (3, 17, 259)] {
+        check_q_shape(m, n, k, &mut rng);
+    }
+}
+
+/// i8 extremes: `QMat::from_raw` can carry −128 codes (activation quant
+/// never emits them, but raw checkpoint loads can). −128 × −128 = 16384
+/// must survive the widening pipelines (AVX2 madd pairs two such products
+/// in i16→i32; NEON vmull_s8 widens first) without saturating.
+#[test]
+fn qgemm_minus_128_codes_exact() {
+    let mut rng = Xoshiro256::seed_from_u64(0x8e);
+    let (n, k) = (9, 67);
+    // weight rows saturated at the extremes, mixed with random codes
+    let mut data = vec![0i8; n * k];
+    for (i, d) in data.iter_mut().enumerate() {
+        *d = match i % 4 {
+            0 => -128,
+            1 => 127,
+            2 => (rng.next_below(256) as i64 - 128) as i8,
+            _ => -128,
+        };
+    }
+    let w = QMat::from_raw(n, k, data, vec![0.013; n]);
+    // activation rows near the quant clip point so x codes hit ±127
+    let mut x = Mat::randn(5, k, 1.0, &mut rng);
+    for v in x.as_mut_slice().iter_mut() {
+        *v = v.signum() * 3.0 + *v;
+    }
+    let want = qmatmul_ref(&x, &w);
+    for lvl in levels() {
+        let got = qmatmul_with(lvl, &x, &w);
+        assert_eq!(bits(got.as_slice()), bits(want.as_slice()), "lvl={lvl:?}");
+    }
+}
+
+/// All-zero activation rows quantize to scale 0.0 + zero codes and must
+/// produce exactly-zero output rows; all-zero weight rows (scale 0.0 via
+/// from_raw) must produce exactly-zero output columns. Both under every
+/// dispatch level.
+#[test]
+fn qgemm_all_zero_rows_exact_zeros() {
+    let mut rng = Xoshiro256::seed_from_u64(0xa0);
+    let (m, n, k) = (6, 10, 33);
+    let mut x = Mat::randn(m, k, 0.8, &mut rng);
+    x.row_mut(2).fill(0.0);
+    x.row_mut(5).fill(0.0);
+    let wf = Mat::randn(n, k, 0.05, &mut rng);
+    let mut w = QMat::quantize_rows(&wf);
+    // zero out weight row 3 the raw way: rebuild with a zeroed row + scale
+    let mut codes = w.data().to_vec();
+    let mut scales = w.scales().to_vec();
+    codes[3 * k..4 * k].fill(0);
+    scales[3] = 0.0;
+    w = QMat::from_raw(n, k, codes, scales);
+
+    let want = qmatmul_ref(&x, &w);
+    for lvl in levels() {
+        let got = qmatmul_with(lvl, &x, &w);
+        assert_eq!(bits(got.as_slice()), bits(want.as_slice()), "lvl={lvl:?}");
+        for r in [2usize, 5] {
+            assert!(got.row(r).iter().all(|v| v.to_bits() == 0), "x row {r} not +0.0");
+        }
+        for r in 0..m {
+            assert_eq!(got.at(r, 3).to_bits(), 0, "w col 3 not +0.0 at row {r}");
+        }
+    }
+}
+
+/// Per-row scale under/overflow: scales at 1e38 push the f32 epilogue to
+/// ±inf, scales at 1e-40 land subnormal. The contract is bit-equality with
+/// the oracle even there — the epilogue expression
+/// `acc as f32 * x_scale * w_scale` is evaluated identically (left-assoc,
+/// no FMA) on every path, so infs and subnormals must agree bitwise.
+#[test]
+fn qgemm_scale_overflow_underflow_bit_equal() {
+    let mut rng = Xoshiro256::seed_from_u64(0xf1);
+    let (n, k) = (8, 40);
+    let mut data = vec![0i8; n * k];
+    for d in data.iter_mut() {
+        *d = (rng.next_below(255) as i64 - 127) as i8;
+    }
+    let mut scales = vec![0.01f32; n];
+    scales[0] = 1e38; // overflow: epilogue product saturates to ±inf
+    scales[1] = 1e-40; // underflow: subnormal weight scale
+    scales[2] = f32::MIN_POSITIVE;
+    let w = QMat::from_raw(n, k, data, scales);
+    let x = Mat::randn(3, k, 2.0, &mut rng);
+    let want = qmatmul_ref(&x, &w);
+    assert!(
+        want.row(0).iter().any(|v| v.is_infinite()),
+        "overflow row failed to produce inf — test shape lost its teeth"
+    );
+    for lvl in levels() {
+        let got = qmatmul_with(lvl, &x, &w);
+        assert_eq!(bits(got.as_slice()), bits(want.as_slice()), "lvl={lvl:?}");
+    }
+}
+
+/// Activation quantization must be a pure function of the row bytes:
+/// quantizing the same matrix twice yields identical codes and scales, and
+/// both match an inline sequential-fold reference (the vectorized absmax
+/// uses exact ops — abs and max — so lane-striding cannot change it).
+#[test]
+fn activation_quant_roundtrip_deterministic() {
+    let mut rng = Xoshiro256::seed_from_u64(0xde7);
+    for k in [1usize, 7, 8, 9, 130, 641] {
+        let x = Mat::randn(4, k, 1.3, &mut rng);
+        let q1 = QMat::quantize_rows(&x);
+        let q2 = QMat::quantize_rows(&x);
+        assert_eq!(q1.data(), q2.data(), "codes differ across runs, k={k}");
+        assert_eq!(bits(q1.scales()), bits(q2.scales()), "scales differ, k={k}");
+        // inline scalar reference: sequential fold, same round/clamp expr
+        for r in 0..x.rows() {
+            let row = x.row(r);
+            let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let scale = amax / 127.0;
+            assert_eq!(q1.scale(r).to_bits(), scale.to_bits(), "scale r={r} k={k}");
+            let inv = if scale == 0.0 { 0.0 } else { 1.0 / scale };
+            for (c, &v) in row.iter().enumerate() {
+                let code = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                assert_eq!(q1.row(r)[c], code, "code r={r} c={c} k={k}");
+            }
+        }
+    }
+}
+
+/// Per-row quantization makes qmatmul batch-invariant: row r of a batched
+/// call must be byte-equal to a single-row call on that row alone.
+#[test]
+fn qgemm_batch_invariant() {
+    let mut rng = Xoshiro256::seed_from_u64(0xb4);
+    let (m, n, k) = (7, 12, 129);
+    let x = Mat::randn(m, k, 0.9, &mut rng);
+    let w = QMat::quantize_rows(&Mat::randn(n, k, 0.04, &mut rng));
+    for lvl in levels() {
+        let batched = qmatmul_with(lvl, &x, &w);
+        for r in 0..m {
+            let one = Mat::from_vec(1, k, x.row(r).to_vec());
+            let solo = qmatmul_with(lvl, &one, &w);
+            assert_eq!(bits(batched.row(r)), bits(solo.row(0)), "row {r} lvl={lvl:?}");
+        }
+    }
+}
+
+/// Seeded fuzz in the `sched_fuzz.rs` style: random shapes and contents,
+/// qmatmul and the f32 kernels checked byte-equal against their oracles.
+/// Failures print the seed; rerun with it to reproduce.
+#[test]
+fn fuzz_random_shapes_byte_equal() {
+    let base: u64 = std::env::var("SKIPLESS_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    for i in 0..24u64 {
+        let seed = base + i;
+        let mut rng = Xoshiro256::seed_from_u64(seed * 7919 + 13);
+        let m = 1 + rng.next_below(33) as usize;
+        let n = 1 + rng.next_below(65) as usize;
+        let k = 1 + rng.next_below(300) as usize;
+        eprintln!("fuzz seed={seed} m={m} n={n} k={k}");
+        check_f32_shape(m, n, k, &mut rng);
+        check_q_shape(m, n, k, &mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paged-attention fused kernel
+// ---------------------------------------------------------------------------
+
+fn layout_of(cfg: &ModelConfig) -> HeadLayout {
+    HeadLayout {
+        n_heads: cfg.n_heads,
+        n_kv_heads: cfg.n_kv_heads,
+        head_dim: cfg.head_dim(),
+    }
+}
+
+fn fill_random(c: &mut KvCache, cfg: &ModelConfig, id: SeqId, n: usize, rng: &mut Xoshiro256) {
+    let e = cfg.e();
+    for _ in 0..n {
+        for layer in 0..cfg.n_layers {
+            let k = Mat::randn(1, e, 0.8, rng);
+            let v = Mat::randn(1, e, 0.8, rng);
+            c.append(id, layer, k.row(0), v.row(0)).unwrap();
+        }
+        c.advance(id).unwrap();
+    }
+}
+
+/// The fused kernel (vectorized QK^T scores, softmax reductions, weighted-V
+/// accumulation, in-register u8 dequant) vs the scalar oracle
+/// `attend_gathered`, over {f32, u8} × {MHA, GQA, MQA} views with history
+/// lengths straddling the lane width and the block boundary. bt = 8 makes
+/// block edges coincide with lane edges — the nastiest alignment.
+#[test]
+fn paged_attention_byte_equal_oracle_across_layouts_and_lengths() {
+    for name in ["tiny-mha", "tiny-gqa", "tiny-mqa"] {
+        for quantized in [false, true] {
+            let cfg = ModelConfig::preset(name).unwrap();
+            let layout = layout_of(&cfg);
+            let e = cfg.e();
+            let mut c = KvCache::with_opts(
+                &cfg,
+                8,
+                512 * 1024,
+                CacheOpts { quantized, ..Default::default() },
+            );
+            let mut rng = Xoshiro256::seed_from_u64(0x5eed);
+            for t in [1usize, 3, LANES - 1, LANES, LANES + 1, 15, 16, 17] {
+                let id = c.alloc_seq(t).unwrap();
+                fill_random(&mut c, &cfg, id, t, &mut rng);
+                let tail = Mat::randn(2, e, 0.5, &mut rng);
+                for (ti, tails) in [
+                    [KvSegment::empty(), KvSegment::empty()],
+                    [KvSegment::rows(tail.row(0), tail.row(1), e), KvSegment::empty()],
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    let q = Mat::randn(1, layout.d(), 0.5, &mut rng);
+                    let n_tail: usize = tails.iter().map(|s| s.n).sum();
+                    let (mut kg, mut vg) = (Vec::new(), Vec::new());
+                    let t_cache = c.gather(id, 0, &mut kg, &mut vg).unwrap();
+                    for seg in &tails {
+                        kg.extend_from_slice(seg.k);
+                        vg.extend_from_slice(seg.v);
+                    }
+                    let tt = t_cache + n_tail;
+                    let mut want = vec![0.0f32; layout.d()];
+                    attend_gathered(layout, q.row(0), &kg, &vg, tt, &mut want);
+                    let views: Vec<BlockView> = c.seq_block_views(id, 0).unwrap().collect();
+                    let mut got = vec![0.0f32; layout.d()];
+                    let mut scores = Vec::new();
+                    attend_paged(layout, q.row(0), &views, &tails, tt, &mut scores, &mut got);
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "{name} kv8={quantized} t={t} tails={ti}: fused != oracle"
+                    );
+                }
+                c.free_seq(id).unwrap();
+            }
+        }
+    }
+}

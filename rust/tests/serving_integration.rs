@@ -166,6 +166,12 @@ fn metrics_expose_kv_and_quant_counters_over_the_wire() {
 
     let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
     let metrics = m.get("metrics").unwrap();
+    // kernel dispatch gauge: present and one of the known backends
+    let dispatch = metrics.get("simd_dispatch").unwrap().as_str().unwrap();
+    assert!(
+        ["scalar", "avx2", "neon"].contains(&dispatch),
+        "unexpected simd_dispatch {dispatch:?}"
+    );
     let kv = metrics.get("kv_cache").unwrap();
     // lifecycle counters present and live
     assert!(kv.get("prefix_tokens_saved").unwrap().as_u64().unwrap() > 0);
