@@ -1,0 +1,276 @@
+//! Serving storm bench: one reactor thread versus a thousand connections.
+//!
+//! The poll-based front-end exists so that idle connections cost a poll
+//! slot instead of a parked thread, and so that a slow reader throttles
+//! only its own stream. This bench opens a large population of idle
+//! connections, parks a few deliberately slow streaming readers behind
+//! them, and then drives a burst of active streaming requests through the
+//! same single reactor, measuring client-observed TTFB (send → first
+//! token frame) and the server's write-queue high-water mark.
+//!
+//! Full mode asserts the serving SLOs: p99 TTFB stays bounded with ≥1k
+//! connections open, the per-connection write queue never exceeds its cap
+//! plus one frame (the backpressure invariant), and every stream —
+//! including the slow readers' — arrives complete and ordered. Emits
+//! `BENCH_serving.json` (schema in EXPERIMENTS.md);
+//! `SKIPLESS_BENCH_QUICK=1` shrinks the population for CI.
+
+use skipless::config::ModelConfig;
+use skipless::coordinator::{Coordinator, CpuEngine, SchedulerCfg};
+use skipless::metrics::Metrics;
+use skipless::model::ModelWeights;
+use skipless::server::{generate_req, Client, Server, ServerCfg};
+use skipless::util::json::Json;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Raise the open-file-descriptor soft limit toward `want` (each
+/// connection costs two descriptors in this single-process bench). Returns
+/// the effective soft limit.
+#[cfg(target_os = "linux")]
+fn raise_nofile(want: u64) -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    let mut r = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut r) } != 0 {
+        return 1024;
+    }
+    if r.cur < want {
+        let bumped = RLimit { cur: want.min(r.max), max: r.max };
+        unsafe { setrlimit(RLIMIT_NOFILE, &bumped) };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut r) } != 0 {
+            return 1024;
+        }
+    }
+    r.cur
+}
+
+#[cfg(not(target_os = "linux"))]
+fn raise_nofile(_want: u64) -> u64 {
+    1024
+}
+
+fn add_stream(req: &mut Json) {
+    if let Json::Obj(o) = req {
+        o.insert("stream".into(), Json::Bool(true));
+    }
+}
+
+fn percentile(xs: &[u64], q: f64) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v[((v.len() as f64 * q).ceil() as usize).saturating_sub(1).min(v.len() - 1)]
+}
+
+/// Drain one streaming reply, optionally throttling between frames.
+/// Returns (ttfb, streamed tokens, final object).
+fn drain_stream(
+    c: &mut Client,
+    sent_at: Instant,
+    frame_delay: Duration,
+) -> (Duration, Vec<u32>, Json) {
+    let mut ttfb = None;
+    let mut streamed = Vec::new();
+    loop {
+        let frame = c.read_reply().expect("stream frame");
+        ttfb.get_or_insert_with(|| sent_at.elapsed());
+        if frame.get("event").and_then(|e| e.as_str()) == Some("token") {
+            streamed.push(frame.get("token").unwrap().as_u64().unwrap() as u32);
+            if !frame_delay.is_zero() {
+                std::thread::sleep(frame_delay);
+            }
+            continue;
+        }
+        return (ttfb.unwrap(), streamed, frame);
+    }
+}
+
+fn main() {
+    println!("# serving_storm — reactor under idle-connection + slow-reader pressure");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let (idle_target, slow_readers, workers, reqs_per_worker, max_new) =
+        if quick { (64usize, 2usize, 4usize, 3usize, 8usize) } else { (1000, 4, 8, 25, 32) };
+
+    // two fds per in-process connection (client + server end) plus headroom
+    let limit = raise_nofile((2 * idle_target + 512) as u64);
+    let idle_n = idle_target.min((limit.saturating_sub(256) / 2) as usize);
+    if idle_n < idle_target {
+        eprintln!("  NOFILE limit {limit} caps idle connections at {idle_n} (wanted {idle_target})");
+    }
+
+    let cfg = ModelConfig::tiny_mha();
+    let w = ModelWeights::init_vanilla(&cfg, 3031);
+    let write_queue_cap = 4096usize;
+    let coord = Coordinator::spawn(CpuEngine::new(w, 8, 64 << 20), SchedulerCfg::default());
+    let metrics: Arc<Metrics> = Arc::clone(coord.metrics());
+    let server = Server::bind_with(
+        "127.0.0.1:0",
+        coord,
+        ServerCfg {
+            max_conns: idle_n + slow_readers + workers + 64,
+            queue_depth: 1024,
+            rate_limit: 0.0,
+            write_queue_cap,
+        },
+    )
+    .expect("bind");
+    let addr = server.local_addr().to_string();
+    std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+
+    // ---- phase 1: a wall of idle connections --------------------------
+    // Paced so the listener backlog never overflows between reactor ticks.
+    eprintln!("  opening {idle_n} idle connections...");
+    let t_idle = Instant::now();
+    let mut idle = Vec::with_capacity(idle_n);
+    for i in 0..idle_n {
+        idle.push(TcpStream::connect(&addr).expect("idle connect"));
+        if i % 32 == 31 {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    // ...and prove they are all registered before the storm starts
+    let mut probe = Client::connect(&addr).expect("probe connect");
+    for _ in 0..400 {
+        if metrics.conns_open.load(Ordering::Relaxed) as usize >= idle_n + 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let open_before = metrics.conns_open.load(Ordering::Relaxed);
+    assert!(
+        open_before as usize >= idle_n + 1,
+        "reactor only registered {open_before} of {} connections",
+        idle_n + 1
+    );
+    eprintln!("  {open_before} connections open after {:.2}s", t_idle.elapsed().as_secs_f64());
+
+    // ---- phase 2: slow readers + active streaming burst ----------------
+    let wall = Instant::now();
+    let slow_handles: Vec<_> = (0..slow_readers)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("slow connect");
+                let mut req = generate_req(&[1, 2, 3], max_new);
+                add_stream(&mut req);
+                let t0 = Instant::now();
+                c.send(&req).expect("slow send");
+                // a reader an order of magnitude slower than generation:
+                // its stream must still arrive complete, throttling no one
+                let (_, streamed, fin) = drain_stream(&mut c, t0, Duration::from_millis(15));
+                assert_eq!(fin.get("finish").unwrap().as_str(), Some("length"));
+                assert_eq!(streamed.len(), max_new, "slow reader lost frames");
+                streamed.len() as u64
+            })
+        })
+        .collect();
+
+    let worker_handles: Vec<_> = (0..workers)
+        .map(|wi| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("worker connect");
+                let mut ttfb_us = Vec::with_capacity(reqs_per_worker);
+                let mut tokens = 0u64;
+                for ri in 0..reqs_per_worker {
+                    let prompt = [1 + wi as u32, 2 + ri as u32, 3];
+                    let mut req = generate_req(&prompt, max_new);
+                    add_stream(&mut req);
+                    let t0 = Instant::now();
+                    c.send(&req).expect("worker send");
+                    let (ttfb, streamed, fin) = drain_stream(&mut c, t0, Duration::ZERO);
+                    assert_eq!(fin.get("finish").unwrap().as_str(), Some("length"));
+                    let final_tokens: Vec<u32> = fin
+                        .get("tokens")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .filter_map(|v| v.as_u64().map(|t| t as u32))
+                        .collect();
+                    assert_eq!(streamed, final_tokens, "stream diverged from final reply");
+                    tokens += streamed.len() as u64;
+                    ttfb_us.push(ttfb.as_micros() as u64);
+                }
+                (ttfb_us, tokens)
+            })
+        })
+        .collect();
+
+    let mut ttfb_us: Vec<u64> = Vec::new();
+    let mut tokens_streamed = 0u64;
+    for h in worker_handles {
+        let (t, n) = h.join().expect("worker");
+        ttfb_us.extend(t);
+        tokens_streamed += n;
+    }
+    for h in slow_handles {
+        tokens_streamed += h.join().expect("slow reader");
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    // the probe still round-trips: the storm never wedged the reactor
+    let pong = probe.call(&Json::obj(vec![("op", Json::str("ping"))])).expect("ping");
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+
+    let total_reqs = (workers * reqs_per_worker) as u64;
+    let p50 = percentile(&ttfb_us, 0.50);
+    let p99 = percentile(&ttfb_us, 0.99);
+    let srv_ttfb_p99_us = metrics.ttfb.quantile(0.99).as_micros() as u64;
+    let peak = metrics.write_queue_peak_bytes.load(Ordering::Relaxed);
+    let residual = metrics.write_queue_bytes.load(Ordering::Relaxed);
+    let shed = metrics.requests_shed.load(Ordering::Relaxed);
+    eprintln!(
+        "  {total_reqs} streamed requests over {} conns: TTFB p50 {p50}µs  p99 {p99}µs  \
+         ({:.1} req/s, {tokens_streamed} tokens)",
+        open_before,
+        total_reqs as f64 / wall_s
+    );
+    eprintln!(
+        "  write-queue peak {peak}B (cap {write_queue_cap}B), residual {residual}B, shed {shed}"
+    );
+    println!(
+        "{{\"suite\":\"serving\",\"case\":\"storm\",\"conns\":{open_before},\"ttfb_p99_us\":{p99},\"write_queue_peak_bytes\":{peak}}}"
+    );
+
+    // the backpressure invariant holds at any scale: cap + one frame
+    assert!(
+        peak <= (write_queue_cap + 1024) as u64,
+        "write queue peak {peak}B exceeded cap {write_queue_cap}B + one frame"
+    );
+    // every stream fully drained → nothing left buffered server-side
+    assert_eq!(residual, 0, "write queues should be empty after the storm");
+    assert_eq!(shed, 0, "no request should shed below the configured depth");
+    if !quick {
+        // SLO: even with 1k+ idle conns and slow readers on the same
+        // reactor, first-token latency stays in interactive territory
+        assert!(
+            p99 < 2_000_000,
+            "client p99 TTFB {p99}µs breached the 2s storm SLO"
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"suite\": \"serving\",\n  \"model\": \"{}\",\n  \"idle_conns\": {idle_n},\n  \"conns_open_peak\": {open_before},\n  \"slow_readers\": {slow_readers},\n  \"workers\": {workers},\n  \"requests\": {total_reqs},\n  \"max_new_tokens\": {max_new},\n  \"tokens_streamed\": {tokens_streamed},\n  \"ttfb_p50_us\": {p50},\n  \"ttfb_p99_us\": {p99},\n  \"server_ttfb_p99_us\": {srv_ttfb_p99_us},\n  \"write_queue_cap_bytes\": {write_queue_cap},\n  \"write_queue_peak_bytes\": {peak},\n  \"requests_shed\": {shed},\n  \"throughput_req_per_s\": {:.2},\n  \"wall_s\": {wall_s:.4}\n}}\n",
+        cfg.name,
+        total_reqs as f64 / wall_s,
+    );
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    eprintln!("  wrote BENCH_serving.json");
+    drop(idle);
+}

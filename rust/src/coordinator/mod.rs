@@ -28,7 +28,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 enum Msg {
-    Submit(Request, Sender<Response>),
+    /// Submit a request. The optional third channel is a *token watcher*:
+    /// every committed token is forwarded on it, in order, before the final
+    /// [`Response`] is sent — so a receiver that sees the response can
+    /// drain the watcher non-blockingly and is guaranteed the full stream.
+    Submit(Request, Sender<Response>, Option<Sender<u32>>),
     Cancel(u64, Sender<bool>),
     Shutdown,
 }
@@ -99,8 +103,26 @@ impl Coordinator {
     /// Submit a request; the response arrives on the returned channel.
     pub fn submit(&self, req: Request) -> Receiver<Response> {
         let (tx, rx) = channel();
-        self.tx.send(Msg::Submit(req, tx)).expect("coordinator alive");
+        self.tx
+            .send(Msg::Submit(req, tx, None))
+            .expect("coordinator alive");
         rx
+    }
+
+    /// Submit a request and watch its tokens as they commit. The first
+    /// receiver yields each generated token in order, the moment the
+    /// scheduler commits it; the second yields the final [`Response`].
+    /// Ordering guarantee: all of a request's tokens are sent on the token
+    /// channel *before* its response is sent, so once the response arrives
+    /// the token channel can be drained without blocking and concatenating
+    /// everything received equals `response.tokens`.
+    pub fn submit_streaming(&self, req: Request) -> (Receiver<u32>, Receiver<Response>) {
+        let (ttx, trx) = channel();
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Submit(req, tx, Some(ttx)))
+            .expect("coordinator alive");
+        (trx, rx)
     }
 
     /// Submit and block for the response. A request whose reply channel is
@@ -153,17 +175,39 @@ fn engine_loop<E: Engine>(
 
 fn sched_loop<E: Engine>(mut sched: Scheduler<E>, rx: Receiver<Msg>) {
     let mut reply_to: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
+    // token watchers for streaming submitters; entries die with the final
+    // response (or silently when the receiver hangs up mid-stream)
+    let mut watch: BTreeMap<u64, Sender<u32>> = BTreeMap::new();
+    // Forward committed tokens to watchers, then deliver any finished
+    // responses. This order (tokens strictly before the response, on the
+    // one coordinator thread) is the Coordinator::submit_streaming
+    // contract.
+    let flush = |sched: &mut Scheduler<E>,
+                 reply_to: &mut BTreeMap<u64, Sender<Response>>,
+                 watch: &mut BTreeMap<u64, Sender<u32>>| {
+        for (id, tok) in sched.take_token_events() {
+            if let Some(tx) = watch.get(&id) {
+                // a gone receiver just means the client stopped listening;
+                // drop the watcher and keep generating
+                if tx.send(tok).is_err() {
+                    watch.remove(&id);
+                }
+            }
+        }
+        for resp in sched.take_done() {
+            watch.remove(&resp.id);
+            if let Some(tx) = reply_to.remove(&resp.id) {
+                let _ = tx.send(resp);
+            }
+        }
+    };
     loop {
         // Drain pending messages; block only when fully idle.
         loop {
             // deliver anything already finished BEFORE potentially
             // blocking — a cancel can retire the last in-flight request
             // without a step ever running again
-            for resp in sched.take_done() {
-                if let Some(tx) = reply_to.remove(&resp.id) {
-                    let _ = tx.send(resp);
-                }
-            }
+            flush(&mut sched, &mut reply_to, &mut watch);
             let msg = if sched.is_idle() {
                 match rx.recv() {
                     Ok(m) => m,
@@ -177,7 +221,7 @@ fn sched_loop<E: Engine>(mut sched: Scheduler<E>, rx: Receiver<Msg>) {
                 }
             };
             match msg {
-                Msg::Submit(req, tx) => {
+                Msg::Submit(req, tx, token_tx) => {
                     // first wins: a duplicate in-flight id is rejected
                     // outright rather than hijacking the earlier
                     // submitter's reply channel
@@ -185,6 +229,9 @@ fn sched_loop<E: Engine>(mut sched: Scheduler<E>, rx: Receiver<Msg>) {
                         let _ = tx.send(Response::empty(req.id, FinishReason::Rejected));
                     } else {
                         reply_to.insert(req.id, tx);
+                        if let Some(ttx) = token_tx {
+                            watch.insert(req.id, ttx);
+                        }
                         sched.submit(req);
                     }
                 }
@@ -197,11 +244,7 @@ fn sched_loop<E: Engine>(mut sched: Scheduler<E>, rx: Receiver<Msg>) {
             }
         }
         sched.step();
-        for resp in sched.take_done() {
-            if let Some(tx) = reply_to.remove(&resp.id) {
-                let _ = tx.send(resp);
-            }
-        }
+        flush(&mut sched, &mut reply_to, &mut watch);
     }
 }
 
@@ -277,6 +320,20 @@ mod tests {
         }
         // cancelling something unknown is a clean false
         assert!(!c.cancel(4242));
+        c.shutdown();
+    }
+
+    #[test]
+    fn streaming_tokens_arrive_before_the_response_and_concatenate() {
+        let (c, w) = coordinator(76);
+        let want = greedy_generate(&w, &[1, 2, 3], 6);
+        let (tokens, resp_rx) = c.submit_streaming(Request::greedy(9, vec![1, 2, 3], 6));
+        let resp = resp_rx.recv().expect("response");
+        // contract: every token is sent before the response, so draining
+        // after recv() never blocks and yields the full stream
+        let streamed: Vec<u32> = tokens.try_iter().collect();
+        assert_eq!(streamed, want);
+        assert_eq!(resp.tokens, streamed);
         c.shutdown();
     }
 

@@ -218,6 +218,12 @@ pub struct Scheduler<E: Engine> {
     /// of the target weights) with its own KV pool. Boxed: the draft may be
     /// a different engine type than the verifying target.
     draft: Option<Box<dyn Engine>>,
+    /// `(request id, token)` pairs in commit order, appended the moment a
+    /// token enters a request's output stream (plain decode rows and
+    /// accepted speculative runs alike). The coordinator drains them every
+    /// loop turn ([`Scheduler::take_token_events`]) to drive incremental
+    /// streaming; unwatched requests cost one `Vec` push per token.
+    token_events: Vec<(u64, u32)>,
     metrics: Arc<Metrics>,
 }
 
@@ -255,6 +261,7 @@ impl<E: Engine> Scheduler<E> {
             swapped: VecDeque::new(),
             done: Vec::new(),
             draft,
+            token_events: Vec::new(),
             metrics,
         };
         // publish the static gauges (weight bytes, cache geometry) before
@@ -328,6 +335,15 @@ impl<E: Engine> Scheduler<E> {
     /// Drain finished responses accumulated so far.
     pub fn take_done(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.done)
+    }
+
+    /// Drain the `(request id, token)` commit log accumulated since the
+    /// last call, in commit order. Pairs appear here the same step the
+    /// token lands in the request's output, so a caller polling between
+    /// [`Scheduler::step`]s sees tokens incrementally rather than all at
+    /// once in the final [`Response`].
+    pub fn take_token_events(&mut self) -> Vec<(u64, u32)> {
+        std::mem::take(&mut self.token_events)
     }
 
     pub fn is_idle(&self) -> bool {
@@ -804,6 +820,7 @@ impl<E: Engine> Scheduler<E> {
                 .collect();
             for &tok in &commit {
                 r.generated.push(tok);
+                self.token_events.push((r.req.id, tok));
                 committed_total += 1;
                 if r.req.eos == Some(tok) {
                     fin = Some(FinishReason::Eos);
@@ -1008,6 +1025,7 @@ impl<E: Engine> Scheduler<E> {
             let r = &mut self.running[i];
             // the token we just consumed becomes output
             r.generated.push(r.next_token);
+            self.token_events.push((r.req.id, r.next_token));
             let is_eos = r.req.eos == Some(r.next_token);
             if is_eos || r.generated.len() >= r.req.max_new_tokens {
                 finished.push((i, if is_eos { FinishReason::Eos } else { FinishReason::Length }));

@@ -16,7 +16,7 @@ use skipless::model::{weights_io, ModelWeights};
 use skipless::params;
 use skipless::runtime::PjrtEngine;
 use skipless::sampler::SamplerCfg;
-use skipless::server::Server;
+use skipless::server::{Server, ServerCfg};
 use skipless::surgery;
 use skipless::util::cli::Command;
 use skipless::util::logging::{self, Level};
@@ -51,6 +51,17 @@ fn cli() -> Command {
                     "speculate",
                     "0",
                     "self-speculative decode: int8 draft proposes k tokens/step (CPU engine)",
+                )
+                .opt_default("max-conns", "1024", "connection ceiling; excess accepts refused")
+                .opt_default(
+                    "rate-limit",
+                    "0",
+                    "per-client-IP generate ops/sec (token bucket; 0 = unlimited)",
+                )
+                .opt_default(
+                    "queue-depth",
+                    "256",
+                    "in-flight generate ceiling; excess sheds with error=overloaded",
                 )
                 .opt_default("log", "info", "log level"),
         )
@@ -272,9 +283,16 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
             )
         }
     };
-    let server = Server::bind(args.get_or("addr", "127.0.0.1:7070"), coordinator)?;
+    let server_cfg = ServerCfg {
+        max_conns: args.num_or("max-conns", 1024)?,
+        rate_limit: args.num_or("rate-limit", 0.0f64)?,
+        queue_depth: args.num_or("queue-depth", 256)?,
+        ..Default::default()
+    };
+    let server = Server::bind_with(args.get_or("addr", "127.0.0.1:7070"), coordinator, server_cfg)?;
     println!(
-        "listening on {} (JSON lines; op=generate|metrics|ping)",
+        "listening on {} (JSON lines; op=generate|metrics|ping; \
+         generate accepts \"stream\":true)",
         server.local_addr()
     );
     server.serve()?;

@@ -189,9 +189,36 @@ pub struct Metrics {
     pub spec_fallbacks: AtomicU64,
     /// Requests whose drafting was turned off for losing (adaptive policy).
     pub spec_disabled: AtomicU64,
+    // -- serving front-end (reactor) -------------------------------------
+    /// Currently-open client connections (gauge).
+    pub conns_open: AtomicU64,
+    /// Connections ever accepted.
+    pub conns_accepted: AtomicU64,
+    /// Connections refused at accept time (`--max-conns` ceiling).
+    pub conns_rejected: AtomicU64,
+    /// Generate requests refused with `{"error":"overloaded"}` because the
+    /// admission queue was at `--queue-depth`.
+    pub requests_shed: AtomicU64,
+    /// Generate requests refused with `{"error":"rate_limited"}` by the
+    /// per-client token bucket (`--rate-limit`).
+    pub requests_rate_limited: AtomicU64,
+    /// Generate requests that asked for `"stream":true`.
+    pub stream_requests: AtomicU64,
+    /// `{"event":"token"}` frames actually enqueued to clients.
+    pub stream_tokens_sent: AtomicU64,
+    /// Bytes currently queued across all per-connection write queues
+    /// (gauge) — the reactor's total buffered-output footprint.
+    pub write_queue_bytes: AtomicU64,
+    /// High-water mark of any single connection's write queue (gauge via
+    /// `fetch_max`); backpressure keeps this ≤ cap + one frame.
+    pub write_queue_peak_bytes: AtomicU64,
     pub ttft: Histogram,
     pub tpot: Histogram,
     pub e2e: Histogram,
+    /// Time-to-first-byte as the *server* observes it: generate accepted →
+    /// first reply frame (token frame or final object) enqueued to the
+    /// connection's write queue.
+    pub ttfb: Histogram,
 }
 
 impl Metrics {
@@ -328,9 +355,24 @@ impl Metrics {
                     ),
                 ]),
             ),
+            (
+                "server",
+                Json::obj(vec![
+                    ("conns_open", g(&self.conns_open)),
+                    ("conns_accepted", g(&self.conns_accepted)),
+                    ("conns_rejected", g(&self.conns_rejected)),
+                    ("requests_shed", g(&self.requests_shed)),
+                    ("requests_rate_limited", g(&self.requests_rate_limited)),
+                    ("stream_requests", g(&self.stream_requests)),
+                    ("stream_tokens_sent", g(&self.stream_tokens_sent)),
+                    ("write_queue_bytes", g(&self.write_queue_bytes)),
+                    ("write_queue_peak_bytes", g(&self.write_queue_peak_bytes)),
+                ]),
+            ),
             ("ttft", self.ttft.to_json()),
             ("tpot", self.tpot.to_json()),
             ("e2e", self.e2e.to_json()),
+            ("ttfb", self.ttfb.to_json()),
         ])
     }
 }
@@ -474,6 +516,26 @@ mod tests {
         assert!((u - 0.25).abs() < 1e-9, "utilization {u}");
         // an idle scheduler reports 0, not NaN
         assert_eq!(Metrics::new().budget_utilization(), 0.0);
+    }
+
+    #[test]
+    fn server_gauges_in_json() {
+        let m = Metrics::new();
+        Metrics::inc(&m.conns_accepted);
+        Metrics::set(&m.conns_open, 1);
+        Metrics::inc(&m.requests_shed);
+        Metrics::add(&m.stream_tokens_sent, 12);
+        m.write_queue_peak_bytes.fetch_max(777, Ordering::Relaxed);
+        m.ttfb.record(Duration::from_millis(2));
+        let j = m.to_json();
+        let s = j.get("server").unwrap();
+        assert_eq!(s.get("conns_accepted").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("conns_open").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("requests_shed").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("requests_rate_limited").unwrap().as_u64(), Some(0));
+        assert_eq!(s.get("stream_tokens_sent").unwrap().as_u64(), Some(12));
+        assert_eq!(s.get("write_queue_peak_bytes").unwrap().as_u64(), Some(777));
+        assert_eq!(j.get("ttfb").unwrap().get("count").unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -1,38 +1,140 @@
-//! Minimal TCP JSON-lines serving front-end (no HTTP stack in the offline
-//! image; the protocol is one JSON object per line, trivially scriptable
-//! with `nc` — see README.md for a worked example).
+//! TCP JSON-lines serving front-end on a poll-based reactor (no HTTP stack
+//! in the offline image; the protocol is one JSON object per line,
+//! trivially scriptable with `nc` — see README.md for a worked example).
+//!
+//! A single reactor thread ([`Server::serve`]) multiplexes every client
+//! connection over [`reactor::wait`] (`poll(2)`): non-blocking accepts,
+//! non-blocking reads into per-connection line buffers, and non-blocking
+//! writes out of **bounded** per-connection write queues. Blocking requests
+//! park in the coordinator, not in a thread — thousands of idle
+//! connections cost file descriptors, not stacks.
 //!
 //! Request:  `{"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
-//!             "temperature":0.0,"top_k":0,"top_p":1.0,"seed":1,"id":7}`
+//!             "temperature":0.0,"top_k":0,"top_p":1.0,"seed":1,"id":7,
+//!             "stream":true}`
 //!           `{"op":"cancel","id":7}`   `{"op":"metrics"}`   `{"op":"ping"}`
 //! Response: `{"ok":true,"id":7,"tokens":[...],"finish":"length",
 //!             "ttft_us":...,"latency_us":...}` (or `{"ok":false,"error":..}`)
 //!
+//! ## Streaming
+//!
+//! `"stream":true` on a generate request turns the reply into a stream:
+//! one `{"event":"token","id":N,"token":T}` frame per committed token (in
+//! commit order, riding [`crate::coordinator::Coordinator::submit_streaming`]),
+//! followed by the **same final object** the blocking form returns — so
+//! concatenating the streamed tokens always equals the final `"tokens"`
+//! array, and a client can treat the first line without an `"event"` key
+//! as end-of-stream. Requests without `"stream":true` are byte-compatible
+//! with the pre-reactor blocking protocol.
+//!
+//! ## Backpressure, admission control, limits
+//!
+//! * Slow readers: output is staged in a per-connection write queue capped
+//!   at [`ServerCfg::write_queue_cap`] bytes. At the cap the reactor stops
+//!   pulling token frames (and stops parsing new requests) for that
+//!   connection instead of buffering unboundedly; the queue may overshoot
+//!   by at most one frame. [`crate::metrics::Metrics::write_queue_peak_bytes`]
+//!   records the high-water mark.
+//! * Load shedding: at most [`ServerCfg::queue_depth`] generate requests
+//!   may be in flight server-wide; beyond that, generate replies
+//!   `{"ok":false,"error":"overloaded"}` immediately (counted in
+//!   `requests_shed`).
+//! * Rate limiting: [`ServerCfg::rate_limit`] > 0 enforces a per-client-IP
+//!   token bucket (that many generates/second, equal burst); over-limit
+//!   requests reply `{"ok":false,"error":"rate_limited"}`.
+//! * Connection cap: accepts beyond [`ServerCfg::max_conns`] get a
+//!   best-effort `{"ok":false,"error":"connection limit reached"}` and are
+//!   closed (counted in `conns_rejected`).
+//! * Disconnects: a socket error or reset tears the connection down and
+//!   cancels its in-flight request, so an abandoned stream frees its
+//!   compute and KV blocks immediately; a clean half-close (EOF) first
+//!   drains replies to requests that were already pipelined.
+//!
+//! ## Ids and determinism
+//!
 //! `generate` normally auto-assigns ids; a client that wants to be able to
 //! cancel from another connection passes its own `"id"` (namespaced apart
-//! from the auto ids server-side, so it can never collide with another
-//! connection's auto-assigned request; uniqueness among cooperating
-//! clients is their responsibility, and a duplicate in-flight id is
-//! rejected, never hijacked) and sends `{"op":"cancel","id":N}` there —
-//! the generate call then returns `"finish":"cancelled"` with whatever
-//! tokens were produced before the cancel landed.
+//! from the auto ids server-side under [`CLIENT_ID_BIT`], so it can never
+//! collide with another connection's auto-assigned request; uniqueness
+//! among cooperating clients is their responsibility, and a duplicate
+//! in-flight id is rejected, never hijacked) and sends
+//! `{"op":"cancel","id":N}` there — the generate call then returns
+//! `"finish":"cancelled"` with whatever tokens were produced before the
+//! cancel landed. Auto-id blocks are allocated strictly below
+//! [`CLIENT_ID_BIT`] and the allocator errors cleanly on exhaustion rather
+//! than bleeding into the client namespace.
 //!
-//! `{"op":"metrics"}` returns the full registry, including the
-//! `kv_cache` object (prefix-hit rate, copy-on-write/eviction counts,
-//! swap-in/out totals, live block occupancy) the scheduler refreshes
-//! every step.
+//! When no `"seed"` is given, sampling seeds default to an FNV-1a hash of
+//! the prompt tokens — NOT to the (connection-dependent) request id — so
+//! replaying the same stochastic request on any connection, with or
+//! without a client-chosen id, reproduces the same tokens.
+//!
+//! `{"op":"metrics"}` returns the full registry, including the `kv_cache`
+//! object the scheduler refreshes every step and the `server` object
+//! (connections, sheds, write-queue gauges) maintained by the reactor.
 
-use crate::coordinator::{Coordinator, FinishReason, Request};
+pub mod reactor;
+
+use crate::coordinator::{Coordinator, FinishReason, Request, Response};
+use crate::metrics::Metrics;
 use crate::sampler::SamplerCfg;
+use crate::util::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{IpAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Client-chosen request ids live in their own namespace so they can never
 /// collide with (or cancel) another connection's auto-assigned ids.
 const CLIENT_ID_BIT: u64 = 1 << 63;
-use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+
+/// Auto-assigned ids are handed to connections in blocks of this size.
+const AUTO_ID_BLOCK: u64 = 1 << 20;
+
+/// Per-connection input buffer cap; a line longer than this is a protocol
+/// abuse and drops the connection.
+const READ_BUF_CAP: usize = 256 << 10;
+
+/// Parsed-but-unserved pipelined requests held per connection before the
+/// reactor stops reading from that socket.
+const MAX_PENDING_LINES: usize = 64;
+
+/// Reactor tick (ms) while any connection has work in flight — bounds the
+/// latency of pumping scheduler token events into write queues.
+const BUSY_TICK_MS: i32 = 1;
+
+/// Reactor tick (ms) when fully idle — bounds stop-flag latency.
+const IDLE_TICK_MS: i32 = 25;
+
+/// Serving limits; every field has a CLI flag on `serve`.
+#[derive(Clone, Debug)]
+pub struct ServerCfg {
+    /// Connection ceiling; accepts beyond it are refused (`--max-conns`).
+    pub max_conns: usize,
+    /// Server-wide in-flight generate ceiling; beyond it requests shed
+    /// with `"error":"overloaded"` (`--queue-depth`).
+    pub queue_depth: usize,
+    /// Per-client-IP generate ops/second, equal burst; 0 disables
+    /// (`--rate-limit`).
+    pub rate_limit: f64,
+    /// Per-connection write-queue cap in bytes; slow readers stall their
+    /// own stream here instead of growing server memory.
+    pub write_queue_cap: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        Self {
+            max_conns: 1024,
+            queue_depth: 256,
+            rate_limit: 0.0,
+            write_queue_cap: 256 << 10,
+        }
+    }
+}
 
 /// Serving front-end bound to a TCP port.
 pub struct Server {
@@ -40,17 +142,29 @@ pub struct Server {
     coordinator: Arc<Coordinator>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
+    cfg: ServerCfg,
 }
 
 impl Server {
-    /// Bind to `addr` (e.g. "127.0.0.1:7070"; port 0 picks a free port).
+    /// Bind to `addr` (e.g. "127.0.0.1:7070"; port 0 picks a free port)
+    /// with default limits.
     pub fn bind(addr: &str, coordinator: Coordinator) -> std::io::Result<Self> {
+        Self::bind_with(addr, coordinator, ServerCfg::default())
+    }
+
+    /// Bind with explicit limits.
+    pub fn bind_with(
+        addr: &str,
+        coordinator: Coordinator,
+        cfg: ServerCfg,
+    ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         Ok(Self {
             listener,
             coordinator: Arc::new(coordinator),
             next_id: AtomicU64::new(1),
             stop: Arc::new(AtomicBool::new(false)),
+            cfg,
         })
     }
 
@@ -58,156 +172,559 @@ impl Server {
         self.listener.local_addr().expect("bound")
     }
 
-    /// A handle that makes `serve` return after the in-flight connection.
+    /// A handle that makes [`Server::serve`] return within one reactor
+    /// tick — including while blocked waiting for connections (the
+    /// pre-reactor server only noticed the flag after the *next* accept).
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.stop)
     }
 
-    /// Accept loop: one thread per connection, each connection handles a
-    /// stream of JSON lines.
+    /// Run the reactor on the calling thread until the stop flag is set.
     pub fn serve(&self) -> std::io::Result<()> {
+        self.listener.set_nonblocking(true)?;
         crate::log_info!("listening on {}", self.local_addr());
-        for conn in self.listener.incoming() {
-            if self.stop.load(Ordering::Relaxed) {
-                break;
-            }
-            let stream = conn?;
-            let coordinator = Arc::clone(&self.coordinator);
-            let next_id = self.next_id.fetch_add(1 << 20, Ordering::Relaxed);
-            std::thread::spawn(move || {
-                if let Err(e) = handle_conn(stream, &coordinator, next_id) {
-                    crate::log_debug!("connection ended: {e}");
-                }
+        let metrics = Arc::clone(self.coordinator.metrics());
+        let shared = Shared {
+            coordinator: &*self.coordinator,
+            cfg: &self.cfg,
+            m: &*metrics,
+        };
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut st = LoopState {
+            buckets: HashMap::new(),
+            queue_depth: 0,
+        };
+        while !self.stop.load(Ordering::Relaxed) {
+            // index 0 = listener, then conns in order
+            let busy = conns.iter().any(Conn::has_work);
+            let mut regs = Vec::with_capacity(conns.len() + 1);
+            regs.push(reactor::Registration {
+                fd: reactor::raw_fd(&self.listener),
+                readable: true,
+                writable: false,
             });
+            for c in &conns {
+                regs.push(reactor::Registration {
+                    fd: reactor::raw_fd(&c.stream),
+                    readable: !c.eof
+                        && c.rbuf.len() < READ_BUF_CAP
+                        && c.pending.len() < MAX_PENDING_LINES,
+                    writable: !c.wq.is_empty(),
+                });
+            }
+            let ready = reactor::wait(&regs, if busy { BUSY_TICK_MS } else { IDLE_TICK_MS });
+            // pump existing connections first (readiness is index-aligned),
+            // accept after so new entries never shift the pairing
+            let mut dead: Vec<usize> = Vec::new();
+            for (i, c) in conns.iter_mut().enumerate() {
+                if !pump_conn(c, ready[i + 1], &shared, &mut st) {
+                    dead.push(i);
+                }
+            }
+            for &i in dead.iter().rev() {
+                close_conn(conns.swap_remove(i), &shared, &mut st);
+            }
+            if ready[0].readable {
+                self.accept_ready(&mut conns, &metrics);
+            }
+        }
+        // teardown: cancel in-flight work so the scheduler frees resources
+        for c in conns.drain(..) {
+            close_conn(c, &shared, &mut st);
         }
         Ok(())
     }
+
+    fn accept_ready(&self, conns: &mut Vec<Conn>, m: &Metrics) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if conns.len() >= self.cfg.max_conns {
+                        Metrics::inc(&m.conns_rejected);
+                        let mut stream = stream;
+                        let _ = stream.set_nonblocking(true);
+                        let mut line = err_json("connection limit reached".into()).to_string();
+                        line.push('\n');
+                        let _ = stream.write_all(line.as_bytes());
+                        continue; // closed on drop
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    Metrics::inc(&m.conns_accepted);
+                    Metrics::inc(&m.conns_open);
+                    conns.push(Conn::new(stream, peer.ip(), alloc_auto_block(&self.next_id)));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    crate::log_debug!("accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
 }
 
-fn handle_conn(
+/// Claim the next auto-id block: `Some((first, end))` with every id in
+/// `first..end` strictly below [`CLIENT_ID_BIT`], or `None` once the
+/// namespace is exhausted. The pre-reactor `fetch_add` allocator could
+/// carry into bit 63 (colliding auto ids with the client namespace) and
+/// overflow-panic in debug builds; this one refuses cleanly instead.
+fn alloc_auto_block(next_id: &AtomicU64) -> Option<(u64, u64)> {
+    let mut cur = next_id.load(Ordering::Relaxed);
+    loop {
+        let end = cur.checked_add(AUTO_ID_BLOCK)?;
+        if end > CLIENT_ID_BIT {
+            return None;
+        }
+        match next_id.compare_exchange_weak(cur, end, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return Some((cur, end)),
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Default sampling seed: FNV-1a over the prompt's little-endian token
+/// bytes. Content-derived, so an identical stochastic request replays
+/// identically on any connection (the pre-reactor default was the
+/// connection-dependent request id — silently nondeterministic).
+fn default_seed(prompt: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in prompt {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// State shared read-only across the reactor's helpers.
+struct Shared<'a> {
+    coordinator: &'a Coordinator,
+    cfg: &'a ServerCfg,
+    m: &'a Metrics,
+}
+
+/// Reactor-local mutable state.
+struct LoopState {
+    /// Per-client-IP rate-limit buckets.
+    buckets: HashMap<IpAddr, Bucket>,
+    /// Generate requests accepted whose final reply is not yet enqueued —
+    /// the admission-control measure behind `--queue-depth`.
+    queue_depth: usize,
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Refill-and-take on the client's token bucket; true = admitted.
+fn admit_rate(buckets: &mut HashMap<IpAddr, Bucket>, ip: IpAddr, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return true;
+    }
+    let burst = rate.max(1.0);
+    let now = Instant::now();
+    let b = buckets.entry(ip).or_insert(Bucket {
+        tokens: burst,
+        last: now,
+    });
+    b.tokens = (b.tokens + now.duration_since(b.last).as_secs_f64() * rate).min(burst);
+    b.last = now;
+    if b.tokens >= 1.0 {
+        b.tokens -= 1.0;
+        true
+    } else {
+        false
+    }
+}
+
+/// One in-flight generate on a connection (the protocol serializes: at
+/// most one per connection, matching the pre-reactor blocking semantics).
+struct Inflight {
+    id: u64,
+    /// `Some` iff the request asked `"stream":true`.
+    tokens: Option<Receiver<u32>>,
+    resp: Receiver<Response>,
+    accepted: Instant,
+    first_frame_sent: bool,
+}
+
+struct Conn {
     stream: TcpStream,
-    coordinator: &Coordinator,
-    id_base: u64,
-) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
-    crate::log_debug!("connection from {peer}");
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    let mut next = id_base;
-    // each connection owns a 2^20 auto-id block; crossing it would bleed
-    // into a later connection's range, so the connection errors out first
-    let id_end = id_base + (1 << 20);
-    for line in reader.lines() {
-        let line = line?;
+    peer: IpAddr,
+    /// Unparsed input bytes (partial line at the tail).
+    rbuf: Vec<u8>,
+    /// Bounded output staging; see module docs §Backpressure.
+    wq: VecDeque<u8>,
+    /// Complete lines parsed out of `rbuf`, not yet served.
+    pending: VecDeque<String>,
+    /// `(next, end)` of this connection's auto-id block; `None` once the
+    /// server-wide space is exhausted (auto-id generates then error).
+    ids: Option<(u64, u64)>,
+    inflight: Option<Inflight>,
+    eof: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: IpAddr, ids: Option<(u64, u64)>) -> Self {
+        Self {
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            wq: VecDeque::new(),
+            pending: VecDeque::new(),
+            ids,
+            inflight: None,
+            eof: false,
+        }
+    }
+
+    /// Anything that wants the fast reactor tick?
+    fn has_work(&self) -> bool {
+        self.inflight.is_some()
+            || !self.wq.is_empty()
+            || !self.pending.is_empty()
+            || !self.rbuf.is_empty()
+    }
+}
+
+/// Append one JSON-lines frame to the connection's write queue and update
+/// the global/byte-peak gauges. Callers gate on `wq.len() <
+/// write_queue_cap` first, so the queue overshoots by at most one frame.
+fn enqueue_frame(c: &mut Conn, frame: &Json, m: &Metrics) {
+    let s = frame.to_string();
+    c.wq.extend(s.as_bytes());
+    c.wq.push_back(b'\n');
+    Metrics::add(&m.write_queue_bytes, s.len() as u64 + 1);
+    m.write_queue_peak_bytes.fetch_max(c.wq.len() as u64, Ordering::Relaxed);
+}
+
+/// Write as much of the queue as the socket accepts; false = fatal error.
+fn flush_wq(c: &mut Conn, m: &Metrics) -> bool {
+    while !c.wq.is_empty() {
+        let (front, _) = c.wq.as_slices();
+        match c.stream.write(front) {
+            Ok(0) => return false,
+            Ok(n) => {
+                c.wq.drain(..n);
+                m.write_queue_bytes.fetch_sub(n as u64, Ordering::Relaxed);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Drive one connection for one tick: read, parse, admit, pump the
+/// in-flight stream, flush. Returns false when the connection is done
+/// (EOF, error, or protocol abuse) and should be closed.
+fn pump_conn(c: &mut Conn, r: reactor::Readiness, sh: &Shared, st: &mut LoopState) -> bool {
+    if r.error {
+        return false;
+    }
+    if r.readable && !c.eof {
+        let mut buf = [0u8; 4096];
+        loop {
+            if c.rbuf.len() >= READ_BUF_CAP || c.pending.len() >= MAX_PENDING_LINES {
+                break;
+            }
+            match c.stream.read(&mut buf) {
+                Ok(0) => {
+                    c.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                    split_lines(c);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if c.rbuf.len() >= READ_BUF_CAP {
+            // a line longer than the cap can never complete
+            return false;
+        }
+    }
+    // serve pipelined requests in order, one at a time, only while the
+    // write queue has room (backpressure propagates to request parsing)
+    while c.inflight.is_none()
+        && !c.pending.is_empty()
+        && c.wq.len() < sh.cfg.write_queue_cap
+    {
+        let line = c.pending.pop_front().unwrap();
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(&line, coordinator, &mut next, id_end);
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        handle_line(c, &line, sh, st);
     }
-    Ok(())
+    pump_inflight(c, sh, st);
+    if !c.wq.is_empty() && !flush_wq(c, sh.m) {
+        return false;
+    }
+    // EOF: the peer is gone; close (cancelling any in-flight work) once
+    // observed — buffered replies get one best-effort flush on close
+    !(c.eof && c.inflight.is_none() && c.pending.is_empty() && c.wq.is_empty())
 }
 
-fn handle_line(line: &str, coordinator: &Coordinator, next_id: &mut u64, id_end: u64) -> Json {
-    let err = |msg: String| {
-        Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
-    };
-    let req = match Json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return err(format!("bad json: {e}")),
-    };
-    match req.get("op").and_then(|o| o.as_str()) {
-        Some("ping") => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
-        Some("metrics") => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("metrics", coordinator.metrics().to_json()),
-        ]),
-        Some("generate") => {
-            let Some(prompt) = req.get("prompt").and_then(|p| p.as_arr()) else {
-                return err("missing 'prompt' array".into());
-            };
-            let mut toks = Vec::with_capacity(prompt.len());
-            for p in prompt {
-                match p.as_u64() {
-                    Some(t) if t <= u32::MAX as u64 => toks.push(t as u32),
-                    _ => return err("prompt tokens must be u32".into()),
+/// Move complete lines out of the read buffer into the pending queue.
+fn split_lines(c: &mut Conn) {
+    while let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') {
+        let rest = c.rbuf.split_off(pos + 1);
+        let mut line = std::mem::replace(&mut c.rbuf, rest);
+        line.pop(); // the newline
+        if line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        c.pending
+            .push_back(String::from_utf8_lossy(&line).into_owned());
+    }
+}
+
+/// Forward committed tokens and (when ready) the final response from the
+/// coordinator channels into the write queue, respecting backpressure.
+fn pump_inflight(c: &mut Conn, sh: &Shared, st: &mut LoopState) {
+    // taken out of the connection so frames can be enqueued while the
+    // channels are borrowed; put back unless the request completed
+    let Some(mut inf) = c.inflight.take() else { return };
+    let cap = sh.cfg.write_queue_cap;
+    let mut drained = true;
+    if let Some(tokens) = &inf.tokens {
+        loop {
+            if c.wq.len() >= cap {
+                // slow reader: leave the rest in the channel (its backlog
+                // is bounded by max_new_tokens) and stop, keeping memory
+                // bounded by the write-queue cap
+                drained = false;
+                break;
+            }
+            match tokens.try_recv() {
+                Ok(tok) => {
+                    enqueue_frame(c, &token_frame(inf.id, tok), sh.m);
+                    Metrics::inc(&sh.m.stream_tokens_sent);
+                    if !inf.first_frame_sent {
+                        inf.first_frame_sent = true;
+                        sh.m.ttfb.record(inf.accepted.elapsed());
+                    }
+                }
+                Err(_) => break, // Empty or (harmlessly) Disconnected
+            }
+        }
+    }
+    // take the final response only once the token channel looked empty and
+    // there is queue room: Coordinator::submit_streaming guarantees every
+    // token is sent before the response, so a post-response drain below
+    // catches at most the handful committed while we were looking
+    if !drained || c.wq.len() >= cap {
+        c.inflight = Some(inf);
+        return;
+    }
+    match inf.resp.try_recv() {
+        Ok(resp) => {
+            if let Some(tokens) = &inf.tokens {
+                while let Ok(tok) = tokens.try_recv() {
+                    enqueue_frame(c, &token_frame(inf.id, tok), sh.m);
+                    Metrics::inc(&sh.m.stream_tokens_sent);
                 }
             }
-            let get_f = |k: &str, d: f32| {
-                req.get(k).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(d)
-            };
-            // auto-assigned per-connection id unless the client picks one
-            // (required for cross-connection {"op":"cancel"})
-            let id = match req.get("id").and_then(|v| v.as_u64()) {
-                Some(id) => CLIENT_ID_BIT | id,
-                None => {
-                    if *next_id >= id_end {
-                        return err(
-                            "connection auto-id space exhausted (2^20 requests); \
-                             reconnect or pass explicit ids"
-                                .into(),
-                        );
-                    }
-                    let id = *next_id;
-                    *next_id += 1;
-                    id
-                }
-            };
-            let request = Request {
-                id,
-                prompt: toks,
-                max_new_tokens: req
-                    .get("max_new_tokens")
-                    .and_then(|v| v.as_usize())
-                    .unwrap_or(16),
-                sampler: SamplerCfg {
-                    temperature: get_f("temperature", 0.0),
-                    top_k: req.get("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
-                    top_p: get_f("top_p", 1.0),
-                },
-                seed: req.get("seed").and_then(|v| v.as_u64()).unwrap_or(id),
-                eos: req
-                    .get("eos")
-                    .and_then(|v| v.as_u64())
-                    .map(|v| v as u32),
-            };
-            let resp = coordinator.generate(request);
-            Json::obj(vec![
-                ("ok", Json::Bool(resp.finish != FinishReason::Rejected)),
-                ("id", Json::num((resp.id & !CLIENT_ID_BIT) as f64)),
-                (
-                    "tokens",
-                    Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
-                ),
-                (
-                    "finish",
-                    Json::str(match resp.finish {
-                        FinishReason::Length => "length",
-                        FinishReason::Eos => "eos",
-                        FinishReason::Rejected => "rejected",
-                        FinishReason::Cancelled => "cancelled",
-                    }),
-                ),
-                ("ttft_us", Json::num(resp.ttft.as_micros() as f64)),
-                ("latency_us", Json::num(resp.latency.as_micros() as f64)),
-            ])
+            enqueue_frame(c, &response_json(&resp), sh.m);
+            if !inf.first_frame_sent {
+                sh.m.ttfb.record(inf.accepted.elapsed());
+            }
+            st.queue_depth -= 1; // request complete; inf drops here
         }
+        Err(TryRecvError::Empty) => c.inflight = Some(inf),
+        Err(TryRecvError::Disconnected) => {
+            // coordinator went away mid-request; fail the request rather
+            // than wedging the connection
+            enqueue_frame(c, &err_json("coordinator unavailable".into()), sh.m);
+            st.queue_depth -= 1;
+        }
+    }
+}
+
+/// Tear a connection down: cancel in-flight work, best-effort flush, and
+/// settle the gauges.
+fn close_conn(mut c: Conn, sh: &Shared, st: &mut LoopState) {
+    if let Some(inf) = c.inflight.take() {
+        let _ = sh.coordinator.cancel(inf.id);
+        st.queue_depth -= 1;
+    }
+    let _ = flush_wq(&mut c, sh.m);
+    sh.m.write_queue_bytes.fetch_sub(c.wq.len() as u64, Ordering::Relaxed);
+    sh.m.conns_open.fetch_sub(1, Ordering::Relaxed);
+}
+
+fn err_json(msg: String) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+}
+
+fn token_frame(id: u64, tok: u32) -> Json {
+    Json::obj(vec![
+        ("event", Json::str("token")),
+        ("id", Json::num((id & !CLIENT_ID_BIT) as f64)),
+        ("token", Json::num(tok as f64)),
+    ])
+}
+
+/// The final generate reply — identical for blocking and streamed
+/// requests, byte-for-byte (object keys serialize sorted).
+fn response_json(resp: &Response) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(resp.finish != FinishReason::Rejected)),
+        ("id", Json::num((resp.id & !CLIENT_ID_BIT) as f64)),
+        (
+            "tokens",
+            Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        (
+            "finish",
+            Json::str(match resp.finish {
+                FinishReason::Length => "length",
+                FinishReason::Eos => "eos",
+                FinishReason::Rejected => "rejected",
+                FinishReason::Cancelled => "cancelled",
+            }),
+        ),
+        ("ttft_us", Json::num(resp.ttft.as_micros() as f64)),
+        ("latency_us", Json::num(resp.latency.as_micros() as f64)),
+    ])
+}
+
+/// Serve one protocol line: control ops reply immediately; an admitted
+/// generate becomes the connection's in-flight request.
+fn handle_line(c: &mut Conn, line: &str, sh: &Shared, st: &mut LoopState) {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return enqueue_frame(c, &err_json(format!("bad json: {e}")), sh.m),
+    };
+    match req.get("op").and_then(|o| o.as_str()) {
+        Some("ping") => enqueue_frame(
+            c,
+            &Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+            sh.m,
+        ),
+        Some("metrics") => enqueue_frame(
+            c,
+            &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("metrics", sh.coordinator.metrics().to_json()),
+            ]),
+            sh.m,
+        ),
+        Some("generate") => handle_generate(c, &req, sh, st),
         Some("cancel") => {
             let Some(id) = req.get("id").and_then(|v| v.as_u64()) else {
-                return err("cancel needs a numeric 'id'".into());
+                return enqueue_frame(c, &err_json("cancel needs a numeric 'id'".into()), sh.m);
             };
             // only client-chosen ids are cancellable (same namespacing as
             // generate), so no one can cancel another connection's
             // auto-assigned request
-            Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("cancelled", Json::Bool(coordinator.cancel(CLIENT_ID_BIT | id))),
-            ])
+            let cancelled = sh.coordinator.cancel(CLIENT_ID_BIT | id);
+            enqueue_frame(
+                c,
+                &Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("cancelled", Json::Bool(cancelled)),
+                ]),
+                sh.m,
+            );
         }
-        _ => err("unknown op (expected generate|cancel|metrics|ping)".into()),
+        _ => enqueue_frame(
+            c,
+            &err_json("unknown op (expected generate|cancel|metrics|ping)".into()),
+            sh.m,
+        ),
     }
+}
+
+fn handle_generate(c: &mut Conn, req: &Json, sh: &Shared, st: &mut LoopState) {
+    let reject = |c: &mut Conn, msg: String| enqueue_frame(c, &err_json(msg), sh.m);
+    let Some(prompt) = req.get("prompt").and_then(|p| p.as_arr()) else {
+        return reject(c, "missing 'prompt' array".into());
+    };
+    let mut toks = Vec::with_capacity(prompt.len());
+    for p in prompt {
+        match p.as_u64() {
+            Some(t) if t <= u32::MAX as u64 => toks.push(t as u32),
+            _ => return reject(c, "prompt tokens must be u32".into()),
+        }
+    }
+    // admission control, cheapest checks first
+    if !admit_rate(&mut st.buckets, c.peer, sh.cfg.rate_limit) {
+        Metrics::inc(&sh.m.requests_rate_limited);
+        return reject(c, "rate_limited".into());
+    }
+    if st.queue_depth >= sh.cfg.queue_depth {
+        Metrics::inc(&sh.m.requests_shed);
+        return reject(c, "overloaded".into());
+    }
+    // auto-assigned per-connection id unless the client picks one
+    // (required for cross-connection {"op":"cancel"})
+    let id = match req.get("id").and_then(|v| v.as_u64()) {
+        Some(id) => CLIENT_ID_BIT | id,
+        None => match &mut c.ids {
+            Some((next, end)) if next < end => {
+                let id = *next;
+                *next += 1;
+                id
+            }
+            _ => {
+                return reject(
+                    c,
+                    "auto-id space exhausted; reconnect or pass explicit ids".into(),
+                )
+            }
+        },
+    };
+    let get_f = |k: &str, d: f32| {
+        req.get(k)
+            .and_then(|v| v.as_f64())
+            .map(|v| v as f32)
+            .unwrap_or(d)
+    };
+    // content-derived default; see default_seed
+    let seed = req
+        .get("seed")
+        .and_then(|v| v.as_u64())
+        .unwrap_or_else(|| default_seed(&toks));
+    let request = Request {
+        id,
+        prompt: toks,
+        max_new_tokens: req
+            .get("max_new_tokens")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(16),
+        sampler: SamplerCfg {
+            temperature: get_f("temperature", 0.0),
+            top_k: req.get("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
+            top_p: get_f("top_p", 1.0),
+        },
+        seed,
+        eos: req.get("eos").and_then(|v| v.as_u64()).map(|v| v as u32),
+    };
+    let streaming = req.get("stream").and_then(|v| v.as_bool()) == Some(true);
+    let (tokens, resp) = if streaming {
+        Metrics::inc(&sh.m.stream_requests);
+        let (trx, rrx) = sh.coordinator.submit_streaming(request);
+        (Some(trx), rrx)
+    } else {
+        (None, sh.coordinator.submit(request))
+    };
+    st.queue_depth += 1;
+    c.inflight = Some(Inflight {
+        id,
+        tokens,
+        resp,
+        accepted: Instant::now(),
+        first_frame_sent: false,
+    });
 }
 
 /// Blocking client for the JSON-lines protocol (used by examples/tests).
@@ -226,25 +743,27 @@ impl Client {
         })
     }
 
-    pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
+    /// Send one request line without waiting for the reply.
+    pub fn send(&mut self, req: &Json) -> std::io::Result<()> {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
+        self.writer.flush()
+    }
+
+    /// Read one reply frame (blocks).
+    pub fn read_reply(&mut self) -> std::io::Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        Json::parse(&line).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+        Json::parse(&line).map_err(|e| std::io::Error::new(ErrorKind::InvalidData, e))
+    }
+
+    pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
+        self.send(req)?;
+        self.read_reply()
     }
 
     pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> std::io::Result<Vec<u32>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("generate")),
-            (
-                "prompt",
-                Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
-            ),
-            ("max_new_tokens", Json::num(max_new as f64)),
-        ]);
-        let resp = self.call(&req)?;
+        let resp = self.call(&generate_req(prompt, max_new))?;
         if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::Other,
@@ -257,6 +776,43 @@ impl Client {
             .map(|a| a.iter().filter_map(|v| v.as_u64().map(|t| t as u32)).collect())
             .unwrap_or_default())
     }
+
+    /// Streamed generate: returns the incrementally-received tokens and
+    /// the final reply object (whose `"tokens"` always equals the stream).
+    pub fn generate_streaming(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> std::io::Result<(Vec<u32>, Json)> {
+        let mut req = generate_req(prompt, max_new);
+        if let Json::Obj(o) = &mut req {
+            o.insert("stream".into(), Json::Bool(true));
+        }
+        self.send(&req)?;
+        let mut streamed = Vec::new();
+        loop {
+            let frame = self.read_reply()?;
+            if frame.get("event").and_then(|e| e.as_str()) == Some("token") {
+                if let Some(t) = frame.get("token").and_then(|t| t.as_u64()) {
+                    streamed.push(t as u32);
+                }
+                continue;
+            }
+            return Ok((streamed, frame));
+        }
+    }
+}
+
+/// A plain generate request line (shared by the client helpers and tests).
+pub fn generate_req(prompt: &[u32], max_new: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("generate")),
+        (
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("max_new_tokens", Json::num(max_new as f64)),
+    ])
 }
 
 #[cfg(test)]
@@ -302,6 +858,10 @@ mod tests {
         assert!(kv.get("prefix_hit_rate").is_some());
         assert!(kv.get("swap_outs").is_some());
         assert!(kv.get("blocks_used").is_some());
+        // ... as do the reactor's connection gauges
+        let srv = m.get("metrics").unwrap().get("server").unwrap();
+        assert_eq!(srv.get("conns_open").unwrap().as_u64(), Some(1));
+        assert_eq!(srv.get("conns_accepted").unwrap().as_u64(), Some(1));
     }
 
     #[test]
@@ -338,5 +898,134 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    /// Regression (pre-reactor bug): the stop flag was only checked after
+    /// the *next* connection arrived, so a server with no incoming
+    /// connections never stopped and tests leaked serve threads.
+    #[test]
+    fn stop_returns_promptly_without_a_connection() {
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 81);
+        let coord = Coordinator::spawn(CpuEngine::new(w, 8, 16 << 20), SchedulerCfg::default());
+        let server = Server::bind("127.0.0.1:0", coord).unwrap();
+        let stop = server.stop_handle();
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = server.serve();
+            let _ = tx.send(());
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        stop.store(true, Ordering::Relaxed);
+        rx.recv_timeout(std::time::Duration::from_secs(5))
+            .expect("serve() did not return promptly after stop — no connection needed");
+    }
+
+    /// Regression (pre-reactor bug): `fetch_add(1 << 20)` block allocation
+    /// eventually carried into bit 63 = CLIENT_ID_BIT, colliding auto ids
+    /// with the client-chosen namespace (and overflow-panicking in debug
+    /// builds near u64::MAX). The allocator must stay strictly below the
+    /// namespace bit and refuse cleanly at the boundary.
+    #[test]
+    fn auto_id_allocator_never_enters_client_namespace() {
+        // last legal block: hands out ids up to CLIENT_ID_BIT - 1
+        let next = AtomicU64::new(CLIENT_ID_BIT - AUTO_ID_BLOCK);
+        let (base, end) = alloc_auto_block(&next).expect("last block is allocatable");
+        assert_eq!(base, CLIENT_ID_BIT - AUTO_ID_BLOCK);
+        assert_eq!(end, CLIENT_ID_BIT);
+        assert_eq!((end - 1) & CLIENT_ID_BIT, 0, "auto ids must not set bit 63");
+        // the very next allocation must refuse, not bleed into bit 63
+        assert!(alloc_auto_block(&next).is_none());
+        // absolute u64 overflow refuses instead of panicking (debug builds)
+        let near_max = AtomicU64::new(u64::MAX - 5);
+        assert!(alloc_auto_block(&near_max).is_none());
+        // a normal allocation still works and advances
+        let fresh = AtomicU64::new(1);
+        assert_eq!(alloc_auto_block(&fresh), Some((1, 1 + AUTO_ID_BLOCK)));
+        assert_eq!(
+            alloc_auto_block(&fresh),
+            Some((1 + AUTO_ID_BLOCK, 1 + 2 * AUTO_ID_BLOCK))
+        );
+    }
+
+    /// Regression (pre-reactor bug): the default sampling seed was the
+    /// namespaced per-connection request id, so replaying an identical
+    /// stochastic request on a new connection (or with vs. without a
+    /// client-chosen id) silently produced different tokens.
+    #[test]
+    fn stochastic_replay_is_deterministic_across_connections() {
+        let (addr, _stop, _) = boot();
+        let req = |client_id: Option<u64>| {
+            let mut r = generate_req(&[5, 6, 7], 8);
+            if let Json::Obj(o) = &mut r {
+                o.insert("temperature".into(), Json::num(0.9));
+                if let Some(id) = client_id {
+                    o.insert("id".into(), Json::num(id as f64));
+                }
+            }
+            r
+        };
+        let tokens = |resp: &Json| -> Vec<u64> {
+            resp.get("tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .filter_map(|v| v.as_u64())
+                .collect()
+        };
+        // same content, three different id situations, three connections
+        let mut a = Client::connect(&addr.to_string()).unwrap();
+        let mut b = Client::connect(&addr.to_string()).unwrap();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let ra = a.call(&req(None)).unwrap();
+        let rb = b.call(&req(None)).unwrap();
+        let rc = c.call(&req(Some(4242))).unwrap();
+        assert_eq!(ra.get("ok"), Some(&Json::Bool(true)), "{ra:?}");
+        assert_eq!(
+            tokens(&ra),
+            tokens(&rb),
+            "identical request must replay identically on a new connection"
+        );
+        assert_eq!(
+            tokens(&ra),
+            tokens(&rc),
+            "client-chosen id must not change the default seed"
+        );
+        // an explicit seed still overrides the content-derived default
+        let mut seeded = generate_req(&[5, 6, 7], 8);
+        if let Json::Obj(o) = &mut seeded {
+            o.insert("temperature".into(), Json::num(0.9));
+            o.insert("seed".into(), Json::num(123.0));
+        }
+        let rs = a.call(&seeded).unwrap();
+        assert_eq!(rs.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    /// The streamed form must deliver exactly the blocking reply's tokens,
+    /// as token frames followed by an identical final object.
+    #[test]
+    fn streamed_tokens_concatenate_to_the_blocking_reply() {
+        let (addr, _stop, w) = boot();
+        let want = greedy_generate(&w, &[3, 1, 4], 6);
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let blocking = c.call(&generate_req(&[3, 1, 4], 6)).unwrap();
+        let (streamed, fin) = c.generate_streaming(&[3, 1, 4], 6).unwrap();
+        assert_eq!(streamed, want);
+        assert_eq!(fin.get("ok"), Some(&Json::Bool(true)));
+        // the tokens array serializes byte-identically in both forms
+        assert_eq!(
+            fin.get("tokens").unwrap().to_string(),
+            blocking.get("tokens").unwrap().to_string()
+        );
+        assert_eq!(fin.get("finish"), blocking.get("finish"));
+    }
+
+    #[test]
+    fn default_seed_is_content_derived_and_stable() {
+        // fixed expectations pin the documented FNV-1a construction
+        assert_eq!(default_seed(&[]), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(default_seed(&[1, 2, 3]), default_seed(&[1, 2, 3]));
+        assert_ne!(default_seed(&[1, 2, 3]), default_seed(&[3, 2, 1]));
     }
 }

@@ -5,8 +5,9 @@
 use skipless::config::{ModelConfig, Variant};
 use skipless::coordinator::{Coordinator, CpuEngine, Request, SchedulerCfg};
 use skipless::kvcache::CacheOpts;
+use skipless::metrics::Metrics;
 use skipless::model::{greedy_generate, quantize, weights_io, ModelWeights};
-use skipless::server::{Client, Server};
+use skipless::server::{generate_req, Client, Server, ServerCfg};
 use skipless::surgery::{transform, Options};
 use skipless::tokenizer::Bpe;
 use skipless::util::json::Json;
@@ -20,6 +21,19 @@ fn boot_engine(eng: CpuEngine) -> std::net::SocketAddr {
         let _ = server.serve();
     });
     addr
+}
+
+/// Boot with explicit server limits; also hands back the metrics registry
+/// so tests can assert server-side gauges without a wire round-trip.
+fn boot_cfg(w: ModelWeights, cfg: ServerCfg) -> (std::net::SocketAddr, Arc<Metrics>) {
+    let coord = Coordinator::spawn(CpuEngine::new(w, 8, 32 << 20), SchedulerCfg::default());
+    let metrics = Arc::clone(coord.metrics());
+    let server = Server::bind_with("127.0.0.1:0", coord, cfg).unwrap();
+    let addr = server.local_addr();
+    std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    (addr, metrics)
 }
 
 fn boot_server(w: ModelWeights) -> std::net::SocketAddr {
@@ -282,4 +296,232 @@ fn concurrent_load_with_metrics() {
     assert_eq!(m.requests_completed.load(Ordering::Relaxed), 12);
     assert_eq!(m.tokens_decoded.load(Ordering::Relaxed), 60);
     assert!(m.e2e.count() == 12);
+}
+
+// ---- reactor concurrency suite -----------------------------------------
+
+fn add_fields(req: &mut Json, fields: Vec<(&str, Json)>) {
+    if let Json::Obj(o) = req {
+        for (k, v) in fields {
+            o.insert(k.to_string(), v);
+        }
+    }
+}
+
+fn wait_until(mut cond: impl FnMut() -> bool, what: &str) {
+    for _ in 0..2000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// A reader that never drains its stream must not grow server memory: the
+/// per-connection write queue stays bounded by its cap (+ at most one
+/// frame), while the scheduler finishes the generation entirely
+/// independently of the slow client.
+#[test]
+fn slow_reader_backpressure_bounds_write_queue_memory() {
+    use std::sync::atomic::Ordering;
+    let cfg = ModelConfig::tiny_mha();
+    let w = ModelWeights::init_vanilla(&cfg, 20);
+    let cap = 512usize;
+    let (addr, m) = boot_cfg(
+        w,
+        ServerCfg {
+            write_queue_cap: cap,
+            ..Default::default()
+        },
+    );
+    let mut slow = Client::connect(&addr.to_string()).unwrap();
+    let mut req = generate_req(&[1, 2, 3], 100);
+    add_fields(&mut req, vec![("stream", Json::Bool(true))]);
+    slow.send(&req).unwrap();
+    // ...and read NOTHING while the whole generation runs server-side
+    wait_until(
+        || m.requests_completed.load(Ordering::Relaxed) >= 1,
+        "scheduler to finish despite the unread stream",
+    );
+    let peak = m.write_queue_peak_bytes.load(Ordering::Relaxed) as usize;
+    assert!(
+        peak <= cap + 1024,
+        "write queue grew past its cap + one frame: peak {peak} bytes (cap {cap})"
+    );
+    assert!(
+        m.stream_tokens_sent.load(Ordering::Relaxed) > 0,
+        "token frames should have been flowing"
+    );
+    // the stream is still complete and ordered once the reader catches up
+    let mut streamed = Vec::new();
+    let fin = loop {
+        let frame = slow.read_reply().unwrap();
+        match frame.get("event").and_then(|e| e.as_str()) {
+            Some("token") => {
+                streamed.push(frame.get("token").unwrap().as_u64().unwrap() as u32)
+            }
+            _ => break frame,
+        }
+    };
+    assert_eq!(fin.get("finish").unwrap().as_str(), Some("length"));
+    let final_tokens: Vec<u32> = fin
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_u64().map(|t| t as u32))
+        .collect();
+    assert_eq!(streamed, final_tokens, "backpressure must never drop frames");
+    assert_eq!(streamed.len(), 100);
+}
+
+/// Cancelling from a second connection mid-stream closes the stream with
+/// `"finish":"cancelled"` and the token frames already emitted match the
+/// final object's tokens exactly.
+#[test]
+fn mid_stream_cancel_closes_the_stream_as_cancelled() {
+    let mut cfg = ModelConfig::tiny_mha();
+    cfg.max_seq_len = 2048; // room for a generation long enough to out-race
+    let w = ModelWeights::init_vanilla(&cfg, 21);
+    let (addr, _m) = boot_cfg(w, ServerCfg::default());
+    let mut a = Client::connect(&addr.to_string()).unwrap();
+    let mut b = Client::connect(&addr.to_string()).unwrap();
+    let mut req = generate_req(&[1, 2, 3], 1500);
+    add_fields(
+        &mut req,
+        vec![("stream", Json::Bool(true)), ("id", Json::num(55.0))],
+    );
+    a.send(&req).unwrap();
+    // guarantee we are mid-stream: at least one token frame arrived
+    let first = a.read_reply().unwrap();
+    assert_eq!(first.get("event").and_then(|e| e.as_str()), Some("token"));
+    let r = b
+        .call(&Json::parse(r#"{"op":"cancel","id":55}"#).unwrap())
+        .unwrap();
+    assert_eq!(r.get("cancelled").unwrap().as_bool(), Some(true));
+    let mut streamed = vec![first.get("token").unwrap().as_u64().unwrap() as u32];
+    let fin = loop {
+        let frame = a.read_reply().unwrap();
+        match frame.get("event").and_then(|e| e.as_str()) {
+            Some("token") => {
+                streamed.push(frame.get("token").unwrap().as_u64().unwrap() as u32)
+            }
+            _ => break frame,
+        }
+    };
+    assert_eq!(fin.get("finish").unwrap().as_str(), Some("cancelled"));
+    assert_eq!(fin.get("id").unwrap().as_u64(), Some(55));
+    let final_tokens: Vec<u32> = fin
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_u64().map(|t| t as u32))
+        .collect();
+    assert_eq!(streamed, final_tokens);
+    assert!(
+        final_tokens.len() < 1500,
+        "the cancel should have landed mid-generation"
+    );
+    // the connection survives the cancelled stream
+    let pong = a.call(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+}
+
+/// With the admission queue at its depth limit, further generates shed
+/// immediately with the structured `{"ok":false,"error":"overloaded"}`
+/// reply instead of queueing without bound.
+#[test]
+fn load_shed_replies_overloaded_at_queue_depth() {
+    use std::sync::atomic::Ordering;
+    let mut cfg = ModelConfig::tiny_mha();
+    cfg.max_seq_len = 2048;
+    let w = ModelWeights::init_vanilla(&cfg, 22);
+    let (addr, m) = boot_cfg(
+        w,
+        ServerCfg {
+            queue_depth: 1,
+            ..Default::default()
+        },
+    );
+    // occupy the single admission slot with a long-running request
+    let mut a = Client::connect(&addr.to_string()).unwrap();
+    let mut long = generate_req(&[1, 2, 3], 1500);
+    add_fields(&mut long, vec![("id", Json::num(66.0))]);
+    a.send(&long).unwrap();
+    wait_until(
+        || m.requests_admitted.load(Ordering::Relaxed) >= 1,
+        "the long request to be admitted",
+    );
+    // a second client's generate now sheds instead of queueing
+    let mut b = Client::connect(&addr.to_string()).unwrap();
+    let shed = b.call(&generate_req(&[4, 5], 3)).unwrap();
+    assert_eq!(shed.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(shed.get("error").unwrap().as_str(), Some("overloaded"));
+    assert!(m.requests_shed.load(Ordering::Relaxed) >= 1);
+    // control ops are never shed
+    let pong = b.call(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+    // free the slot (and the compute) so the test tears down fast
+    let r = b
+        .call(&Json::parse(r#"{"op":"cancel","id":66}"#).unwrap())
+        .unwrap();
+    assert_eq!(r.get("cancelled").unwrap().as_bool(), Some(true));
+    let fin = a.read_reply().unwrap();
+    assert_eq!(fin.get("finish").unwrap().as_str(), Some("cancelled"));
+    // with the slot free again, generates are admitted once more
+    let ok = b.call(&generate_req(&[4, 5], 3)).unwrap();
+    assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+}
+
+/// The per-client token bucket rejects a burst past `--rate-limit` with
+/// the structured `rate_limited` error, without disturbing the connection.
+#[test]
+fn rate_limit_rejects_burst_with_structured_error() {
+    use std::sync::atomic::Ordering;
+    let cfg = ModelConfig::tiny_mha();
+    let w = ModelWeights::init_vanilla(&cfg, 23);
+    // 0.2 ops/sec ⇒ burst of 1; a same-second second request must reject
+    let (addr, m) = boot_cfg(
+        w,
+        ServerCfg {
+            rate_limit: 0.2,
+            ..Default::default()
+        },
+    );
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let first = c.call(&generate_req(&[1, 2], 2)).unwrap();
+    assert_eq!(first.get("ok").unwrap().as_bool(), Some(true));
+    let second = c.call(&generate_req(&[1, 2], 2)).unwrap();
+    assert_eq!(second.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(second.get("error").unwrap().as_str(), Some("rate_limited"));
+    assert!(m.requests_rate_limited.load(Ordering::Relaxed) >= 1);
+    // non-generate ops are not rate limited
+    let pong = c.call(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+}
+
+/// Streaming over the wire is byte-compatible with blocking serving: same
+/// request, same tokens array serialization, tokens identical to a direct
+/// engine run.
+#[test]
+fn streamed_generate_matches_blocking_and_engine() {
+    let cfg = ModelConfig::tiny_gqa();
+    let w = ModelWeights::init_vanilla(&cfg, 24);
+    let want = greedy_generate(&w, &[7, 8, 9], 6);
+    let (addr, _m) = boot_cfg(w, ServerCfg::default());
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let blocking = c.call(&generate_req(&[7, 8, 9], 6)).unwrap();
+    let (streamed, fin) = c.generate_streaming(&[7, 8, 9], 6).unwrap();
+    assert_eq!(streamed, want);
+    assert_eq!(
+        fin.get("tokens").unwrap().to_string(),
+        blocking.get("tokens").unwrap().to_string(),
+        "streamed final object must serialize the same tokens byte-for-byte"
+    );
+    assert_eq!(fin.get("finish"), blocking.get("finish"));
+    assert_eq!(fin.get("ok"), blocking.get("ok"));
 }
