@@ -1,0 +1,242 @@
+//! Stochastic speculative + JSON-constrained decoding bench.
+//!
+//! Two claims, each asserted rather than merely reported:
+//!
+//! 1. **Stochastic speculation pays.** With per-request seeds, the
+//!    speculative run must produce byte-identical streams to the plain
+//!    stochastic run (the RNG-stream-discipline invariant) while taking
+//!    measurably fewer target batched steps per generated token. The
+//!    reduction bar (≥ 1.3x at k=4, full mode) is set at a low sampling
+//!    temperature — the realistic regime for speculation, since acceptance
+//!    probability is the target's probability of the draft's argmax and
+//!    flat distributions make any drafting scheme useless.
+//! 2. **Constrained output always parses.** Every `"constrain":"json"`
+//!    completion — greedy or stochastic, plain or speculative — must parse
+//!    as a JSON document and finish via grammar completion, and the
+//!    speculative streams must equal the plain ones.
+//!
+//! Emits `BENCH_constrained.json` (schema in EXPERIMENTS.md);
+//! `SKIPLESS_BENCH_QUICK=1` shrinks the model and token counts for CI.
+
+use skipless::config::{AttentionKind, BlockLayout, FfnKind, ModelConfig};
+use skipless::coordinator::{CpuEngine, FinishReason, Request, Scheduler, SchedulerCfg};
+use skipless::kvcache::CacheOpts;
+use skipless::metrics::Metrics;
+use skipless::model::{quantize, ModelWeights};
+use skipless::sampler::grammar::Constraint;
+use skipless::sampler::SamplerCfg;
+use skipless::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Same mid-size GQA model as `spec_decode`: big enough that decode is
+/// genuinely weight-streaming-bound, small enough to init in seconds.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        name: "spec-bench-85m".into(),
+        dim: 384,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 2,
+        hidden_dim: 1536,
+        vocab_size: 1024,
+        max_seq_len: 512,
+        attention: AttentionKind::Gqa,
+        layout: BlockLayout::Serial,
+        ffn: FfnKind::Mlp,
+        tied_embeddings: false,
+    }
+}
+
+struct RunStats {
+    tokens: Vec<Vec<u32>>,
+    finishes: Vec<FinishReason>,
+    target_steps: u64,
+    tokens_decoded: u64,
+    drafted: u64,
+    accepted: u64,
+    wall_s: f64,
+}
+
+fn run(w: &ModelWeights, spec_k: usize, reqs: &[Request], budget: usize) -> RunStats {
+    let metrics = Arc::new(Metrics::new());
+    let cfg = SchedulerCfg {
+        spec_k,
+        ..Default::default()
+    };
+    let engine = CpuEngine::new(w.clone(), 16, budget);
+    let mut s = if spec_k > 0 {
+        let draft = CpuEngine::with_cache_opts(
+            quantize(w),
+            16,
+            budget,
+            CacheOpts {
+                quantized: true,
+                ..Default::default()
+            },
+        );
+        Scheduler::with_draft(engine, Box::new(draft), cfg, Arc::clone(&metrics))
+    } else {
+        Scheduler::new(engine, cfg, Arc::clone(&metrics))
+    };
+    for r in reqs {
+        s.submit(r.clone());
+    }
+    let t0 = Instant::now();
+    let mut done = s.run_to_completion();
+    let wall_s = t0.elapsed().as_secs_f64();
+    done.sort_by_key(|r| r.id);
+    RunStats {
+        finishes: done.iter().map(|r| r.finish).collect(),
+        tokens: done.into_iter().map(|r| r.tokens).collect(),
+        target_steps: metrics.batches_run.load(Ordering::Relaxed),
+        tokens_decoded: metrics.tokens_decoded.load(Ordering::Relaxed),
+        drafted: metrics.spec_tokens_drafted.load(Ordering::Relaxed),
+        accepted: metrics.spec_tokens_accepted.load(Ordering::Relaxed),
+        wall_s,
+    }
+}
+
+fn base_reqs(n: usize, max_new: usize, vocab: u32, temperature: f32) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let prompt = (0..6).map(|j| ((i * 131 + j * 17 + 3) as u32) % vocab).collect();
+            let mut r = Request::greedy(i as u64, prompt, max_new);
+            // fixed per-request seeds: what makes spec vs plain comparable
+            // stream-for-stream
+            r.seed = 0xC0FF_EE00 + 7919 * i as u64;
+            if temperature > 0.0 {
+                r.sampler = SamplerCfg {
+                    temperature,
+                    ..Default::default()
+                };
+            }
+            r
+        })
+        .collect()
+}
+
+fn constrained_reqs(n: usize, max_new: usize, vocab: u32, temperature: f32) -> Vec<Request> {
+    base_reqs(n, max_new, vocab, temperature)
+        .into_iter()
+        .map(|mut r| {
+            r.constrain = Some(Constraint::Json);
+            r
+        })
+        .collect()
+}
+
+/// Every constrained stream must decode (byte vocab), parse as JSON, and
+/// have finished via grammar completion.
+fn assert_all_parse(label: &str, stats: &RunStats) {
+    for (i, (t, f)) in stats.tokens.iter().zip(&stats.finishes).enumerate() {
+        assert_eq!(
+            *f,
+            FinishReason::Eos,
+            "{label}: constrained request {i} must finish via grammar completion"
+        );
+        let bytes: Vec<u8> = t
+            .iter()
+            .map(|&x| u8::try_from(x).expect("constrained tokens are byte-vocab"))
+            .collect();
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{label}: request {i} output {text:?} must parse: {e}"));
+    }
+}
+
+fn steps_per_token(s: &RunStats) -> f64 {
+    s.target_steps as f64 / s.tokens_decoded.max(1) as f64
+}
+
+fn main() {
+    println!("# constrained_decode — stochastic speculative + JSON-constrained decoding");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let cfg = if quick { ModelConfig::tiny_gqa() } else { bench_config() };
+    let (n_req, max_new) = if quick { (4, 12) } else { (8, 32) };
+    let k = 4usize;
+    let budget = 64 << 20;
+    // low temperature = the regime where speculation helps: acceptance is
+    // the target's probability of the draft's argmax
+    let spec_temp = 0.2f32;
+
+    eprintln!("  initializing {} (this includes calibration)...", cfg.name);
+    let w = ModelWeights::init_vanilla(&cfg, 2026);
+    let vocab = cfg.vocab_size as u32;
+
+    // ---- part 1: stochastic speculative decoding --------------------
+    let sreqs = base_reqs(n_req, max_new, vocab, spec_temp);
+    let plain = run(&w, 0, &sreqs, budget);
+    let spec = run(&w, k, &sreqs, budget);
+    assert_eq!(
+        plain.tokens, spec.tokens,
+        "stochastic speculative decode diverged from plain stochastic decode \
+         for fixed seeds (RNG stream discipline broken)"
+    );
+    let spt_plain = steps_per_token(&plain);
+    let spt_spec = steps_per_token(&spec);
+    let reduction = spt_plain / spt_spec;
+    let accept_rate = spec.accepted as f64 / spec.drafted.max(1) as f64;
+    eprintln!(
+        "  stochastic t={spec_temp}: plain {:.4} steps/tok vs spec {:.4} steps/tok \
+         → {reduction:.2}x reduction, accept {:.1}% ({}/{})",
+        spt_plain,
+        spt_spec,
+        100.0 * accept_rate,
+        spec.accepted,
+        spec.drafted
+    );
+    println!(
+        "{{\"suite\":\"constrained_decode\",\"case\":\"stochastic_spec_k{k}\",\"temperature\":{spec_temp},\"steps_per_token_plain\":{spt_plain:.4},\"steps_per_token_spec\":{spt_spec:.4},\"target_step_reduction_x\":{reduction:.4},\"accept_rate\":{accept_rate:.4}}}"
+    );
+    // acceptance bar (full mode): ≥ 1.3x fewer target batched steps per
+    // generated token at k=4 under stochastic acceptance
+    if !quick {
+        assert!(
+            reduction >= 1.3,
+            "stochastic target-step reduction only {reduction:.2}x at k={k}"
+        );
+    }
+
+    // ---- part 2: constrained decoding, every mode -------------------
+    let mut cases = Vec::new();
+    for (case, temp) in [("greedy", 0.0f32), ("stochastic", 0.9f32)] {
+        let creqs = constrained_reqs(n_req, max_new.max(16), vocab, temp);
+        let cp = run(&w, 0, &creqs, budget);
+        let cs = run(&w, k, &creqs, budget);
+        assert_eq!(
+            cp.tokens, cs.tokens,
+            "constrained/{case}: speculative decode diverged from plain"
+        );
+        assert_all_parse(&format!("constrained/{case}/plain"), &cp);
+        assert_all_parse(&format!("constrained/{case}/speculative"), &cs);
+        let ar = cs.accepted as f64 / cs.drafted.max(1) as f64;
+        eprintln!(
+            "  constrained/{case}: {} requests, all parse, spec ≡ plain, accept {:.1}%",
+            creqs.len(),
+            100.0 * ar
+        );
+        println!(
+            "{{\"suite\":\"constrained_decode\",\"case\":\"constrained_{case}\",\"all_parse\":true,\"identical_output\":true,\"accept_rate\":{ar:.4}}}"
+        );
+        cases.push(format!(
+            "    {{\n      \"case\": \"{case}\",\n      \"temperature\": {temp},\n      \"requests\": {},\n      \"all_parse\": true,\n      \"identical_output\": true,\n      \"accept_rate\": {ar:.4},\n      \"steps_per_token_plain\": {:.4},\n      \"steps_per_token_spec\": {:.4},\n      \"wall_plain_s\": {:.4},\n      \"wall_spec_s\": {:.4}\n    }}",
+            creqs.len(),
+            steps_per_token(&cp),
+            steps_per_token(&cs),
+            cp.wall_s,
+            cs.wall_s,
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"suite\": \"constrained_decode\",\n  \"model\": \"{}\",\n  \"k\": {k},\n  \"requests\": {n_req},\n  \"max_new_tokens\": {max_new},\n  \"stochastic\": {{\n    \"temperature\": {spec_temp},\n    \"identical_output\": true,\n    \"accept_rate\": {accept_rate:.4},\n    \"steps_per_token_plain\": {spt_plain:.4},\n    \"steps_per_token_spec\": {spt_spec:.4},\n    \"target_step_reduction_x\": {reduction:.4},\n    \"wall_plain_s\": {:.4},\n    \"wall_spec_s\": {:.4}\n  }},\n  \"constrained\": [\n{}\n  ]\n}}\n",
+        cfg.name,
+        plain.wall_s,
+        spec.wall_s,
+        cases.join(",\n"),
+    );
+    std::fs::write("BENCH_constrained.json", &json).expect("write BENCH_constrained.json");
+    eprintln!("  wrote BENCH_constrained.json");
+}

@@ -236,8 +236,12 @@ pub trait Engine {
     /// logits row **per consumed token**, in order — the widened batched
     /// step of speculative decoding. Engines that override this must return
     /// rows bit-identical to what the same tokens fed one at a time through
-    /// [`Engine::decode_batch`] would produce (greedy acceptance turns that
-    /// into token-identical speculative output), and should fail *before*
+    /// [`Engine::decode_batch`] would produce. Each row is the *full* logits
+    /// distribution, not an argmax: greedy acceptance compares argmaxes
+    /// (token-identical speculative output), while stochastic acceptance
+    /// samples from each row with the request's own RNG — bit-identical rows
+    /// are what upgrade that to *stream*-identical output versus plain
+    /// decoding for a fixed seed. Implementations should fail *before*
     /// mutating any sequence state where possible — the scheduler
     /// defensively truncates back to the committed length after a capacity
     /// failure, but only rollback-capable engines can be repaired that way.

@@ -37,19 +37,32 @@
 //!
 //! With [`SchedulerCfg::spec_k`] > 0 and a draft engine
 //! ([`Scheduler::with_draft`]), step 3 splits into a **speculative**
-//! sub-step for greedy requests — the draft proposes `k` tokens per
+//! sub-step for every decoding request — the draft proposes `k` tokens per
 //! sequence, the target verifies them in one widened
-//! [`Engine::verify_batch`] step, the longest agreeing prefix (plus the
+//! [`Engine::verify_batch`] step, the longest accepted prefix (plus the
 //! target's correction/bonus token) commits, and both engines roll back to
-//! the committed length — and a plain sub-step for everything else. Greedy
-//! acceptance makes the output stream token-identical to plain decoding
-//! (DESIGN.md §Speculative); requests whose drafts keep losing fall back
-//! to plain decode permanently.
+//! the committed length — and a plain sub-step for everything else.
+//! Acceptance dispatches on the request's sampler: greedy requests use
+//! [`accept_greedy`], stochastic requests the rejection rule in
+//! [`accept_stochastic`]; both make the output stream byte-identical to
+//! plain decoding for a fixed seed (DESIGN.md §Speculative). Requests
+//! whose drafts keep losing fall back to plain decode permanently.
+//!
+//! Requests with [`Request::constrain`] set carry a [`GrammarState`]
+//! advanced once per committed token; every sampling site first masks the
+//! logits row with [`GrammarState::mask_row`] (budget-aware: a token is
+//! only allowed if the minimal grammar completion still fits in the
+//! remaining `max_new_tokens`), so constrained output always parses and
+//! always finishes by grammar completion (reported as EOS). Constrained +
+//! speculative compose: the draft proposes under the same mask, verify
+//! rows are masked with the grammar state each position would be in, and
+//! the acceptance rules run unchanged on the masked rows.
 
 use crate::coordinator::engine::{ChunkInput, DecodeInput, Engine, EngineError, VerifyInput};
 use crate::kvcache::SeqId;
 use crate::metrics::Metrics;
-use crate::sampler::{accept_greedy, argmax, sample, SamplerCfg};
+use crate::sampler::grammar::{self, Constraint, GrammarState};
+use crate::sampler::{accept_greedy, accept_stochastic, argmax, sample, SamplerCfg};
 use crate::util::rng::Xoshiro256;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -66,6 +79,11 @@ pub struct Request {
     pub seed: u64,
     /// Optional stop token.
     pub eos: Option<u32>,
+    /// Grammar constraint (`"constrain":"json"` on the wire): sampling is
+    /// masked so the output byte stream always parses. Admission requires
+    /// `max_new_tokens >= 2` (the shortest JSON document) and a byte-level
+    /// vocabulary (`vocab_size >= 128`).
+    pub constrain: Option<Constraint>,
 }
 
 impl Request {
@@ -77,6 +95,7 @@ impl Request {
             sampler: SamplerCfg::greedy(),
             seed: id,
             eos: None,
+            constrain: None,
         }
     }
 }
@@ -149,6 +168,10 @@ struct Running {
     spec_accepted: u64,
     /// Drafting turned off for this request (persistently losing).
     spec_off: bool,
+    /// Grammar cursor for constrained requests, advanced exactly once per
+    /// *committed* token (swap-preemption keeps it; recompute-preemption
+    /// rebuilds it deterministically by replaying from the seed).
+    gstate: Option<GrammarState>,
 }
 
 impl Running {
@@ -224,6 +247,10 @@ pub struct Scheduler<E: Engine> {
     /// loop turn ([`Scheduler::take_token_events`]) to drive incremental
     /// streaming; unwatched requests cost one `Vec` push per token.
     token_events: Vec<(u64, u32)>,
+    /// Byte expansion of the vocabulary for grammar masking (ids 0..=255
+    /// are raw bytes, higher ids are never allowed). `Arc` so sub-steps
+    /// can hold it across `&mut self` calls.
+    byte_vocab: Arc<Vec<Vec<u8>>>,
     metrics: Arc<Metrics>,
 }
 
@@ -236,8 +263,9 @@ impl<E: Engine> Scheduler<E> {
     /// tokens per sequence per step and `engine` verifies them in one
     /// widened batched step. The draft must share the target's vocabulary
     /// (self-speculation: same model, cheaper precision); output is
-    /// token-identical to [`Scheduler::new`] for greedy requests, which are
-    /// the only ones that speculate.
+    /// byte-identical to [`Scheduler::new`] for every request — greedy via
+    /// [`accept_greedy`], stochastic via [`accept_stochastic`]'s RNG
+    /// stream discipline.
     pub fn with_draft(
         engine: E,
         draft: Box<dyn Engine>,
@@ -253,6 +281,7 @@ impl<E: Engine> Scheduler<E> {
         cfg: SchedulerCfg,
         metrics: Arc<Metrics>,
     ) -> Self {
+        let byte_vocab = Arc::new(grammar::byte_vocab(engine.cfg().vocab_size));
         let s = Self {
             engine,
             cfg,
@@ -262,6 +291,7 @@ impl<E: Engine> Scheduler<E> {
             done: Vec::new(),
             draft,
             token_events: Vec::new(),
+            byte_vocab,
             metrics,
         };
         // publish the static gauges (weight bytes, cache geometry) before
@@ -464,7 +494,9 @@ impl<E: Engine> Scheduler<E> {
             .iter()
             .filter(|r| r.phase == Phase::Decoding)
             .map(|r| {
-                if spec_on && !r.spec_off && r.req.sampler.is_greedy() {
+                // any decoding request may speculate now — greedy and
+                // stochastic alike (acceptance dispatches per request)
+                if spec_on && !r.spec_off {
                     1 + self.cfg.spec_k
                 } else {
                     1
@@ -508,10 +540,16 @@ impl<E: Engine> Scheduler<E> {
             && self.running.len() < self.cfg.max_running.min(self.engine.max_batch())
         {
             let Some((req, _)) = self.queue.front() else { break };
-            // reject malformed requests outright
+            // reject malformed requests outright. Constrained requests
+            // additionally need room for the shortest document ("{}") and
+            // a byte-level vocab covering structural ASCII — together
+            // these are the induction base that keeps the budget-aware
+            // grammar mask non-empty at every later step.
             if req.prompt.is_empty()
                 || req.prompt.len() + req.max_new_tokens > self.engine.cfg().max_seq_len
                 || req.sampler.validate().is_err()
+                || (req.constrain.is_some()
+                    && (req.max_new_tokens < 2 || self.engine.cfg().vocab_size < 128))
             {
                 let (req, _) = self.queue.pop_front().unwrap();
                 Metrics::inc(&self.metrics.requests_rejected);
@@ -536,6 +574,7 @@ impl<E: Engine> Scheduler<E> {
                     Ok((seq, reused)) => {
                         Metrics::inc(&self.metrics.requests_admitted);
                         let rng = Xoshiro256::seed_from_u64(req.seed);
+                        let gstate = req.constrain.map(GrammarState::new);
                         self.running.push(Running {
                             req,
                             seq,
@@ -549,6 +588,7 @@ impl<E: Engine> Scheduler<E> {
                             spec_rounds: 0,
                             spec_accepted: 0,
                             spec_off: false,
+                            gstate,
                         });
                         let r = self.running.last().expect("just pushed");
                         let n = (r.req.prompt.len() - reused)
@@ -575,7 +615,24 @@ impl<E: Engine> Scheduler<E> {
             match self.engine.prefill_shared(&req.prompt) {
                 Ok((seq, logits, reused)) => {
                     let mut rng = Xoshiro256::seed_from_u64(req.seed);
-                    let first = sample(&logits, &req.sampler, &mut rng);
+                    let gstate = req.constrain.map(GrammarState::new);
+                    let budget_left = req.max_new_tokens.saturating_sub(1);
+                    let Some(first) = sample_next(
+                        &logits,
+                        &req.sampler,
+                        &mut rng,
+                        gstate.as_ref(),
+                        &self.byte_vocab,
+                        budget_left,
+                    ) else {
+                        // the vocab cannot express the grammar at all —
+                        // unreachable past the admission guards, but never
+                        // admit a request that cannot emit a token
+                        self.engine.release(seq);
+                        Metrics::inc(&self.metrics.requests_rejected);
+                        self.done.push(Response::empty(req.id, FinishReason::Rejected));
+                        continue;
+                    };
                     Metrics::inc(&self.metrics.requests_admitted);
                     // only positions actually computed count as prefilled
                     let computed = req.prompt.len() - reused;
@@ -596,6 +653,7 @@ impl<E: Engine> Scheduler<E> {
                         spec_rounds: 0,
                         spec_accepted: 0,
                         spec_off: false,
+                        gstate,
                     });
                 }
                 Err(EngineError::CapacityExhausted(_)) => {
@@ -676,12 +734,19 @@ impl<E: Engine> Scheduler<E> {
     /// length. Sequences served here are recorded in `ran_spec`.
     fn spec_substep(&mut self, ran_spec: &mut Vec<SeqId>) -> usize {
         let max_seq_len = self.engine.cfg().max_seq_len;
-        // (running index, useful draft length): greedy requests that can
-        // still accept at least one draft token within their output and
-        // context budgets
+        let vocab = Arc::clone(&self.byte_vocab);
+        // (running index, useful draft length): decoding requests — greedy
+        // and stochastic alike — that can still accept at least one draft
+        // token within their output and context budgets
         let mut cand: Vec<(usize, usize)> = Vec::new();
+        // committed output length at sub-step entry, per candidate (the
+        // per-position budget arithmetic below needs it)
+        let mut gens: Vec<usize> = Vec::new();
+        // draft-side grammar cursor per candidate: the state *after* the
+        // pending `next_token` — the position drafting starts from
+        let mut gcur: Vec<Option<GrammarState>> = Vec::new();
         for (i, r) in self.running.iter().enumerate() {
-            if r.spec_off || !r.req.sampler.is_greedy() || r.phase != Phase::Decoding {
+            if r.spec_off || r.phase != Phase::Decoding {
                 continue;
             }
             let len = r.req.prompt.len() + r.generated.len();
@@ -692,11 +757,33 @@ impl<E: Engine> Scheduler<E> {
                 .saturating_sub(1);
             let room_ctx = max_seq_len.saturating_sub(len + 1);
             let k = self.cfg.spec_k.min(room_out).min(room_ctx);
-            if k >= 1 {
-                cand.push((i, k));
+            if k < 1 {
+                continue;
+            }
+            let g = r.gstate.as_ref().map(|gs| {
+                let mut g = gs.clone();
+                g.advance_token(r.next_token, &vocab);
+                g
+            });
+            if g.as_ref().is_some_and(|g| g.is_complete()) {
+                // the pending token completes the grammar — the plain
+                // sub-step commits it and finishes; nothing to draft
+                continue;
+            }
+            cand.push((i, k));
+            gens.push(r.generated.len());
+            gcur.push(g);
+        }
+        let mut c = 0;
+        while c < cand.len() {
+            if self.ensure_draft(cand[c].0) {
+                c += 1;
+            } else {
+                cand.remove(c);
+                gens.remove(c);
+                gcur.remove(c);
             }
         }
-        cand.retain(|&(i, _)| self.ensure_draft(i));
         if cand.is_empty() {
             return 0;
         }
@@ -723,10 +810,41 @@ impl<E: Engine> Scheduler<E> {
                 Ok(rows) => {
                     Metrics::inc(&self.metrics.spec_draft_steps);
                     for (&c, row) in active.iter().zip(&rows) {
-                        // the draft's own greedy proposal
-                        let d = argmax(row);
+                        // the draft's own greedy proposal, masked for
+                        // constrained requests so drafted bytes stay on a
+                        // completable grammar path. Drafting consumes no
+                        // request randomness — fall-back to plain decode
+                        // leaves the sampling stream untouched.
+                        let d = match &mut gcur[c] {
+                            None => Some(argmax(row)),
+                            Some(gs) => {
+                                let budget_left = self.running[cand[c].0]
+                                    .req
+                                    .max_new_tokens
+                                    .saturating_sub(gens[c] + j + 2);
+                                gs.mask_row(row, &vocab, budget_left).map(|m| argmax(&m))
+                            }
+                        };
+                        let Some(d) = d else {
+                            // mask admits nothing (unreachable under the
+                            // budget invariant): stop drafting here and
+                            // drop the draft cache — it consumed a step
+                            // this round without a matching draft token,
+                            // so its length no longer lines up
+                            cand[c].1 = drafts[c].len();
+                            self.drop_draft_at(cand[c].0);
+                            continue;
+                        };
                         drafts[c].push(d);
                         last[c] = d;
+                        if let Some(gs) = &mut gcur[c] {
+                            gs.advance_token(d, &vocab);
+                            if gs.is_complete() {
+                                // no point drafting past a complete
+                                // document — cap this candidate's k
+                                cand[c].1 = drafts[c].len();
+                            }
+                        }
                     }
                 }
                 Err(_) => {
@@ -805,29 +923,57 @@ impl<E: Engine> Scheduler<E> {
         for (&c, rows) in vcand.iter().zip(&all_rows) {
             let i = cand[c].0;
             let k_i = drafts[c].len();
-            let (a, next) = accept_greedy(&drafts[c], rows);
+            let r = &mut self.running[i];
+            // For constrained requests, mask each verify row with the
+            // grammar state the stream is in at that position (after
+            // `next_token` and the drafts before it) — exactly the mask
+            // the plain path would apply there, so acceptance and
+            // correction draws see identical distributions. A row past
+            // grammar completion (or past the output budget) masks to a
+            // dead all-(−∞) row: its draw is consumed but never observed,
+            // because the commit loop below finishes the request first.
+            let masked_rows: Option<Vec<Vec<f32>>> = r.gstate.as_ref().map(|gs| {
+                let mut st = gs.clone();
+                st.advance_token(r.next_token, &vocab);
+                let max_new = r.req.max_new_tokens;
+                let g0 = r.generated.len();
+                rows.iter()
+                    .enumerate()
+                    .map(|(j, row)| {
+                        let budget_left = max_new.saturating_sub(g0 + j + 2);
+                        let m = st
+                            .mask_row(row, &vocab, budget_left)
+                            .unwrap_or_else(|| vec![f32::NEG_INFINITY; row.len()]);
+                        if j < k_i {
+                            st.advance_token(drafts[c][j], &vocab);
+                        }
+                        m
+                    })
+                    .collect()
+            });
+            let rows_eff: &[Vec<f32>] = masked_rows.as_deref().unwrap_or(rows);
+            // acceptance dispatch: both rules reproduce the plain stream
+            let (a, next) = if r.req.sampler.is_greedy() {
+                accept_greedy(&drafts[c], rows_eff)
+            } else {
+                accept_stochastic(&drafts[c], rows_eff, &r.req.sampler, &mut r.rng)
+            };
             Metrics::inc(&self.metrics.spec_rounds);
             Metrics::add(&self.metrics.spec_tokens_drafted, k_i as u64);
             Metrics::add(&self.metrics.spec_tokens_accepted, a as u64);
-            let r = &mut self.running[i];
             r.spec_rounds += 1;
             r.spec_accepted += a as u64;
             ran_spec.push(r.seq);
-            // commit consumed tokens in order, stopping at EOS / length
+            // commit consumed tokens in order, stopping at grammar
+            // completion / EOS / length
             let mut fin: Option<FinishReason> = None;
             let commit: Vec<u32> = std::iter::once(r.next_token)
                 .chain(drafts[c][..a].iter().copied())
                 .collect();
             for &tok in &commit {
-                r.generated.push(tok);
-                self.token_events.push((r.req.id, tok));
                 committed_total += 1;
-                if r.req.eos == Some(tok) {
-                    fin = Some(FinishReason::Eos);
-                    break;
-                }
-                if r.generated.len() >= r.req.max_new_tokens {
-                    fin = Some(FinishReason::Length);
+                if let Some(reason) = commit_token(r, tok, &vocab, &mut self.token_events) {
+                    fin = Some(reason);
                     break;
                 }
             }
@@ -983,6 +1129,8 @@ impl<E: Engine> Scheduler<E> {
         Metrics::inc(&self.metrics.batches_run);
 
         // ---- prefill-chunk bookkeeping --------------------------------
+        let vocab = Arc::clone(&self.byte_vocab);
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
         debug_assert_eq!(out.chunk_logits.len(), chunks.len());
         for ((&i, c), logits) in chunk_idx.iter().zip(&chunks).zip(out.chunk_logits) {
             let n = c.tokens.len();
@@ -997,11 +1145,26 @@ impl<E: Engine> Scheduler<E> {
             if let Some(row) = logits {
                 // the chunk completed the prompt: first token, flip phase
                 debug_assert_eq!(done + n, r.req.prompt.len());
-                r.next_token = sample(&row, &r.req.sampler, &mut r.rng);
-                r.phase = Phase::Decoding;
-                let now = Instant::now();
-                r.first_token_at = now;
-                self.metrics.ttft.record(now - r.submitted_at);
+                let budget_left = r.req.max_new_tokens.saturating_sub(1);
+                match sample_next(&row, &r.req.sampler, &mut r.rng, r.gstate.as_ref(), &vocab, budget_left) {
+                    Some(t) => {
+                        r.next_token = t;
+                        r.phase = Phase::Decoding;
+                        let now = Instant::now();
+                        r.first_token_at = now;
+                        self.metrics.ttft.record(now - r.submitted_at);
+                    }
+                    None => {
+                        // unreachable past the admission guards (the vocab
+                        // cannot express the grammar) — retire rather than
+                        // wedge in Prefilling forever
+                        crate::log_error!(
+                            "request {}: constraint mask admitted no first token",
+                            r.req.id
+                        );
+                        finished.push((i, FinishReason::Rejected));
+                    }
+                }
             }
         }
 
@@ -1016,7 +1179,6 @@ impl<E: Engine> Scheduler<E> {
                 self.metrics.tpot.record(dt / (inputs.len() as u32));
             }
         }
-        let mut finished = Vec::new();
         for (pos, row) in out.decode_logits.into_iter().enumerate() {
             let i = idx[pos];
             // advancing outside the speculative path invalidates any draft
@@ -1024,18 +1186,33 @@ impl<E: Engine> Scheduler<E> {
             self.drop_draft_at(i);
             let r = &mut self.running[i];
             // the token we just consumed becomes output
-            r.generated.push(r.next_token);
-            self.token_events.push((r.req.id, r.next_token));
-            let is_eos = r.req.eos == Some(r.next_token);
-            if is_eos || r.generated.len() >= r.req.max_new_tokens {
-                finished.push((i, if is_eos { FinishReason::Eos } else { FinishReason::Length }));
-            } else {
-                r.next_token = sample(&row, &r.req.sampler, &mut r.rng);
+            let tok = r.next_token;
+            if let Some(reason) = commit_token(r, tok, &vocab, &mut self.token_events) {
+                finished.push((i, reason));
+                continue;
+            }
+            let budget_left = r.req.max_new_tokens.saturating_sub(r.generated.len() + 1);
+            match sample_next(&row, &r.req.sampler, &mut r.rng, r.gstate.as_ref(), &vocab, budget_left) {
+                Some(t) => r.next_token = t,
+                None => {
+                    // defensive: budget-aware masking keeps the mask
+                    // non-empty until grammar completion, so this is
+                    // unreachable for admitted requests — finish rather
+                    // than wedge
+                    crate::log_error!(
+                        "request {}: constraint mask admitted no token mid-decode",
+                        r.req.id
+                    );
+                    finished.push((i, FinishReason::Length));
+                }
             }
         }
-        // retire back-to-front so indices stay valid (idx is ascending)
-        for (i, reason) in finished.into_iter().rev() {
-            let r = self.running.remove(i);
+        // retire back-to-front so indices stay valid (chunk-retire indices
+        // can interleave arbitrarily with the ascending decode indices)
+        finished.sort_unstable_by(|x, y| y.0.cmp(&x.0));
+        for (i, reason) in finished {
+            let mut r = self.running.remove(i);
+            self.drop_draft(&mut r);
             self.engine.release(r.seq);
             Metrics::inc(&self.metrics.requests_completed);
             let latency = r.submitted_at.elapsed();
@@ -1129,6 +1306,57 @@ impl<E: Engine> Scheduler<E> {
         );
         Metrics::set(&m.kv_bytes_per_token, s.bytes_per_token as u64);
     }
+}
+
+/// Sample the next token under an optional grammar mask. `budget_left` is
+/// how many more tokens the request may emit *after* this one. Returns
+/// `None` when the mask admits nothing (complete grammar, or a vocab that
+/// cannot express it) — the caller finishes the request. Consumes exactly
+/// the rng draws a plain `sample` would (one for stochastic, none for
+/// greedy), preserving the per-request stream discipline.
+fn sample_next(
+    row: &[f32],
+    cfg: &SamplerCfg,
+    rng: &mut Xoshiro256,
+    gstate: Option<&GrammarState>,
+    vocab: &[Vec<u8>],
+    budget_left: usize,
+) -> Option<u32> {
+    match gstate {
+        None => Some(sample(row, cfg, rng)),
+        Some(gs) => {
+            let masked = gs.mask_row(row, vocab, budget_left)?;
+            Some(sample(&masked, cfg, rng))
+        }
+    }
+}
+
+/// Commit `tok` into `r`'s output stream and the streaming event log,
+/// advancing the grammar state. Shared by the fused decode loop and the
+/// speculative commit loop so finish semantics are identical everywhere.
+/// Returns `Some(reason)` when this token finishes the request; grammar
+/// completion reports as EOS and wins over the literal eos token.
+fn commit_token(
+    r: &mut Running,
+    tok: u32,
+    vocab: &[Vec<u8>],
+    events: &mut Vec<(u64, u32)>,
+) -> Option<FinishReason> {
+    r.generated.push(tok);
+    events.push((r.req.id, tok));
+    if let Some(gs) = r.gstate.as_mut() {
+        gs.advance_token(tok, vocab);
+        if gs.is_complete() {
+            return Some(FinishReason::Eos);
+        }
+    }
+    if r.req.eos == Some(tok) {
+        return Some(FinishReason::Eos);
+    }
+    if r.generated.len() >= r.req.max_new_tokens {
+        return Some(FinishReason::Length);
+    }
+    None
 }
 
 #[cfg(test)]
@@ -1607,18 +1835,27 @@ mod tests {
         assert!(metrics.spec_rounds.load(Ordering::Relaxed) > 0);
     }
 
-    /// Stochastic requests must not speculate — and must still produce the
-    /// same seeded-deterministic stream as a plain scheduler.
+    /// The lifted gate: stochastic requests now speculate, and the
+    /// rejection rule's RNG stream discipline makes the speculative output
+    /// byte-identical to the plain scheduler for a fixed seed.
     #[test]
-    fn speculative_skips_stochastic_requests() {
+    fn speculative_stochastic_stream_identical() {
         let cfg = ModelConfig::tiny_gqa();
         let w = ModelWeights::init_vanilla(&cfg, 82);
-        let mut hot = Request::greedy(7, vec![4, 2], 6);
+        let mut hot = Request::greedy(7, vec![4, 2], 12);
+        hot.seed = 4242;
         hot.sampler = SamplerCfg {
             temperature: 0.9,
             ..Default::default()
         };
-        let run = |spec: bool| -> Vec<Vec<u32>> {
+        let mut nucleus = Request::greedy(8, vec![1, 2, 3], 10);
+        nucleus.seed = 77;
+        nucleus.sampler = SamplerCfg {
+            temperature: 0.7,
+            top_k: 16,
+            top_p: 0.9,
+        };
+        let run = |spec: bool| -> (Vec<Vec<u32>>, u64) {
             let metrics = Arc::new(Metrics::new());
             let mut s = if spec {
                 spec_sched(&w, w.clone(), 4, 8 << 20, &metrics)
@@ -1630,17 +1867,16 @@ mod tests {
                 )
             };
             s.submit(hot.clone());
-            s.submit(Request::greedy(8, vec![1, 2, 3], 6));
+            s.submit(nucleus.clone());
             let mut done = s.run_to_completion();
             done.sort_by_key(|r| r.id);
-            if spec {
-                // only the greedy request may have drafted
-                let drafted = metrics.spec_tokens_drafted.load(Ordering::Relaxed);
-                assert!(drafted <= 4 * 6, "stochastic request drafted");
-            }
-            done.into_iter().map(|r| r.tokens).collect()
+            let drafted = metrics.spec_tokens_drafted.load(Ordering::Relaxed);
+            (done.into_iter().map(|r| r.tokens).collect(), drafted)
         };
-        assert_eq!(run(true), run(false), "speculation changed outputs");
+        let (spec_toks, drafted) = run(true);
+        let (plain_toks, _) = run(false);
+        assert_eq!(spec_toks, plain_toks, "stochastic speculation changed the sampled stream");
+        assert!(drafted > 0, "stochastic requests never drafted");
     }
 
     /// EOS inside an accepted draft run must cut the stream exactly where
@@ -1758,5 +1994,97 @@ mod tests {
         assert_eq!(metrics.tokens_prefilled.load(Ordering::Relaxed), 3);
         assert_eq!(metrics.tokens_decoded.load(Ordering::Relaxed), 5);
         assert!(metrics.ttft.count() > 0);
+    }
+
+    // ---- constrained decoding ------------------------------------------
+
+    fn decode_bytes(tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .map(|&t| u8::try_from(t).expect("constrained output stays in the byte range"))
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn constrained_req(id: u64, prompt: Vec<u32>, max_new: usize, temperature: f32) -> Request {
+        let mut req = Request::greedy(id, prompt, max_new);
+        req.constrain = Some(Constraint::Json);
+        req.seed = 9000 + id;
+        if temperature > 0.0 {
+            req.sampler = SamplerCfg {
+                temperature,
+                ..Default::default()
+            };
+        }
+        req
+    }
+
+    /// Constrained output must parse as JSON, finish by grammar completion
+    /// (reported as EOS), and be byte-identical across plain, speculative,
+    /// and chunked scheduling — for greedy and stochastic sampling alike.
+    #[test]
+    fn constrained_json_parses_and_is_mode_invariant() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 88);
+        let reqs: Vec<Request> = vec![
+            constrained_req(0, vec![5, 6, 7], 24, 0.0),
+            constrained_req(1, vec![1, 2], 40, 0.9),
+            constrained_req(2, vec![9, 4], 2, 0.0), // tightest legal budget
+        ];
+        let run = |mode: &str| -> Vec<Vec<u32>> {
+            let metrics = Arc::new(Metrics::new());
+            let mut s = match mode {
+                "spec" => spec_sched(&w, crate::model::quantize(&w), 3, 8 << 20, &metrics),
+                "chunked" => Scheduler::new(
+                    CpuEngine::new(w.clone(), 8, 8 << 20),
+                    SchedulerCfg {
+                        token_budget_per_step: 8,
+                        chunk_tokens: 2,
+                        ..Default::default()
+                    },
+                    metrics,
+                ),
+                _ => Scheduler::new(
+                    CpuEngine::new(w.clone(), 8, 8 << 20),
+                    SchedulerCfg::default(),
+                    metrics,
+                ),
+            };
+            for r in &reqs {
+                s.submit(r.clone());
+            }
+            let mut done = s.run_to_completion();
+            done.sort_by_key(|r| r.id);
+            assert_eq!(done.len(), reqs.len());
+            for r in &done {
+                assert_eq!(
+                    r.finish,
+                    FinishReason::Eos,
+                    "{mode}: request {} must finish by grammar completion",
+                    r.id
+                );
+                let text = decode_bytes(&r.tokens);
+                assert!(
+                    crate::util::json::Json::parse(&text).is_ok(),
+                    "{mode}: request {} output does not parse: {text}",
+                    r.id
+                );
+                assert!(r.tokens.len() <= reqs[r.id as usize].max_new_tokens);
+            }
+            done.into_iter().map(|r| r.tokens).collect()
+        };
+        let plain = run("plain");
+        assert_eq!(plain, run("spec"), "constrained + speculative diverged");
+        assert_eq!(plain, run("chunked"), "constrained + chunked diverged");
+    }
+
+    /// Admission guards for constrained requests: no room for the minimal
+    /// document, or a vocab too small for byte-level masking.
+    #[test]
+    fn constrained_admission_guards() {
+        let mut s = sched("tiny-mha", 89, 8 << 20);
+        s.submit(constrained_req(1, vec![1, 2], 1, 0.0)); // max_new < 2
+        let done = s.run_to_completion();
+        assert_eq!(done[0].finish, FinishReason::Rejected);
     }
 }

@@ -15,6 +15,7 @@ use skipless::coordinator::{Coordinator, CpuEngine, Request, SchedulerCfg};
 use skipless::model::{weights_io, ModelWeights};
 use skipless::params;
 use skipless::runtime::PjrtEngine;
+use skipless::sampler::grammar::Constraint;
 use skipless::sampler::SamplerCfg;
 use skipless::server::{Server, ServerCfg};
 use skipless::surgery;
@@ -85,6 +86,12 @@ fn cli() -> Command {
                     "speculate",
                     "0",
                     "self-speculative decode: int8 draft proposes k tokens/step (f32 weights)",
+                )
+                .opt_default(
+                    "constrain",
+                    "none",
+                    "grammar-constrain the output: none|json (byte-level mask; \
+                     the completion is guaranteed to parse)",
                 ),
         )
         .subcommand(
@@ -338,6 +345,13 @@ fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
     } else {
         Coordinator::spawn(CpuEngine::with_cache_opts(w, 16, 256 << 20, opts), sched)
     };
+    let constrain = match args.get_or("constrain", "none") {
+        "none" => None,
+        s => match Constraint::parse(s) {
+            Some(g) => Some(g),
+            None => return Err(format!("--constrain {s}: expected none|json").into()),
+        },
+    };
     let req = Request {
         id: 0,
         prompt,
@@ -349,12 +363,18 @@ fn cmd_generate(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
         },
         seed: 0,
         eos: None,
+        constrain,
     };
     let resp = coordinator.generate(req);
     println!(
         "tokens: {:?}\nfinish: {:?}  ttft: {:?}  latency: {:?}",
         resp.tokens, resp.finish, resp.ttft, resp.latency
     );
+    if constrain.is_some() {
+        // byte-vocab: ids <= 255 decode directly to the generated document
+        let bytes: Vec<u8> = resp.tokens.iter().filter_map(|&t| u8::try_from(t).ok()).collect();
+        println!("text: {}", String::from_utf8_lossy(&bytes));
+    }
     if spec_k > 0 {
         use std::sync::atomic::Ordering;
         let m = coordinator.metrics();

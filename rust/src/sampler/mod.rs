@@ -1,13 +1,28 @@
-//! Token sampling: greedy, temperature, top-k, top-p (nucleus).
+//! Token sampling: greedy, temperature, top-k, top-p (nucleus), the two
+//! speculative acceptance rules ([`accept_greedy`], [`accept_stochastic`]),
+//! and grammar-constrained masking ([`grammar`]).
 //!
 //! Deterministic given a seeded [`Xoshiro256`] stream — the serving e2e
 //! example replays identical requests against the vanilla and merged
 //! engines and requires identical outputs, which holds because surgery is
 //! function-preserving and sampling is seed-deterministic.
+//!
+//! Every path here is total over arbitrary `f32` rows: NaN and ±∞ logits
+//! never panic (they reach this code from model output, which the scheduler
+//! thread must survive) — NaN sorts as −∞, +∞ takes the whole mass, and an
+//! all-(−∞/NaN) row falls back to a uniform draw over the candidate set.
+
+pub mod grammar;
 
 use crate::util::rng::Xoshiro256;
 
 /// Sampling configuration for one request.
+///
+/// Contract (enforced by [`SamplerCfg::validate`], which the server calls at
+/// admission): `temperature` is finite and ≥ 0 (0 → greedy argmax);
+/// `top_p` ∈ (0, 1] (1.0 → disabled — a nucleus of zero mass is degenerate,
+/// not greedy, so 0.0 and non-finite values are rejected); `top_k` is
+/// unconstrained (0 → disabled).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SamplerCfg {
     /// 0 → greedy argmax.
@@ -33,52 +48,74 @@ impl SamplerCfg {
         Self::default()
     }
 
-    /// Pure argmax sampling — the regime in which the speculative
-    /// [`accept_greedy`] rule makes drafted output token-identical to plain
-    /// decoding. The scheduler only speculates on greedy requests.
+    /// Pure argmax sampling. The scheduler dispatches speculative
+    /// acceptance on this: greedy requests use [`accept_greedy`], everything
+    /// else uses [`accept_stochastic`] — both reproduce the plain decoding
+    /// stream exactly.
     pub fn is_greedy(&self) -> bool {
         self.temperature == 0.0
     }
 
     pub fn validate(&self) -> Result<(), String> {
         if self.temperature < 0.0 || !self.temperature.is_finite() {
-            return Err(format!("temperature {} invalid", self.temperature));
+            return Err(format!("temperature {} invalid (want finite, >= 0)", self.temperature));
         }
-        if !(0.0..=1.0).contains(&self.top_p) {
-            return Err(format!("top_p {} not in [0,1]", self.top_p));
+        // NaN fails the first comparison, so this single condition rejects
+        // 0.0 (empty nucleus), negatives, >1, and every non-finite value.
+        if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            return Err(format!("top_p {} not in (0,1]", self.top_p));
         }
         Ok(())
     }
 }
 
-/// Sample one token id from a logits row.
-pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Xoshiro256) -> u32 {
-    debug_assert!(!logits.is_empty());
-    if cfg.temperature == 0.0 {
-        return argmax(logits);
-    }
-    // softmax with temperature over candidate set
+/// The candidate distribution `sample` draws from after temperature /
+/// top-k / top-p: token ids and probabilities in inverse-CDF walk order.
+struct Dist {
+    idx: Vec<u32>,
+    probs: Vec<f32>,
+}
+
+/// Build the candidate distribution for a temperature>0 draw.
+///
+/// NaN logits are mapped to −∞ up front so they sort deterministically
+/// (`total_cmp`, never `partial_cmp().unwrap()`) and drop out of the
+/// support; a row whose candidates are all −∞ after that mapping yields a
+/// uniform distribution (panic-free degenerate fallback — grammar masking
+/// guarantees callers a non-empty support, this guards the guarantee); a
+/// row containing +∞ puts the softmax-limit mass uniformly on the +∞
+/// entries. On finite rows this is byte-for-byte the pre-hardening
+/// pipeline: identical sort order, softmax, nucleus cut, and CDF.
+fn dist(logits: &[f32], cfg: &SamplerCfg) -> Dist {
     let inv_t = 1.0 / cfg.temperature;
+    let val = |i: u32| {
+        let v = logits[i as usize];
+        if v.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            v
+        }
+    };
     let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
     // top-k: keep k largest
     if cfg.top_k > 0 && cfg.top_k < logits.len() {
-        idx.sort_unstable_by(|&a, &b| {
-            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
-        });
+        idx.sort_unstable_by(|&a, &b| val(b).total_cmp(&val(a)));
         idx.truncate(cfg.top_k);
     } else if cfg.top_p < 1.0 {
-        idx.sort_unstable_by(|&a, &b| {
-            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
-        });
+        idx.sort_unstable_by(|&a, &b| val(b).total_cmp(&val(a)));
     }
-    let mx = idx
-        .iter()
-        .map(|&i| logits[i as usize])
-        .fold(f32::NEG_INFINITY, f32::max);
-    let mut probs: Vec<f32> = idx
-        .iter()
-        .map(|&i| ((logits[i as usize] - mx) * inv_t).exp())
-        .collect();
+    let mx = idx.iter().map(|&i| val(i)).fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = if mx == f32::INFINITY {
+        idx.iter()
+            .map(|&i| if val(i) == f32::INFINITY { 1.0 } else { 0.0 })
+            .collect()
+    } else if mx == f32::NEG_INFINITY {
+        vec![1.0; idx.len()]
+    } else {
+        // (val − mx) ≤ 0, so exp never overflows and the max entry
+        // contributes exp(0)=1 — the normalizing sum is always ≥ 1.
+        idx.iter().map(|&i| ((val(i) - mx) * inv_t).exp()).collect()
+    };
     let sum: f32 = probs.iter().sum();
     for p in probs.iter_mut() {
         *p /= sum;
@@ -101,20 +138,31 @@ pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Xoshiro256) -> u32 {
             *p /= s;
         }
     }
+    Dist { idx, probs }
+}
+
+/// Sample one token id from a logits row. Consumes exactly one `next_f32`
+/// from `rng` when `temperature > 0`, none when greedy — the scheduler's
+/// RNG stream discipline (see [`accept_stochastic`]) leans on this.
+pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Xoshiro256) -> u32 {
+    debug_assert!(!logits.is_empty());
+    if cfg.temperature == 0.0 {
+        return argmax(logits);
+    }
+    let d = dist(logits, cfg);
     // inverse-CDF draw
     let u = rng.next_f32();
     let mut cum = 0.0f32;
-    for (i, &p) in probs.iter().enumerate() {
+    for (i, &p) in d.probs.iter().enumerate() {
         cum += p;
         if u < cum {
-            return idx[i];
+            return d.idx[i];
         }
     }
-    *idx.last().unwrap()
+    *d.idx.last().unwrap()
 }
 
-/// Greedy speculative acceptance (factored out so a stochastic
-/// rejection-sampling rule can slot in beside it later).
+/// Greedy speculative acceptance.
 ///
 /// `rows` holds the target's verify logits: one row per consumed token for
 /// the input `[committed_next, drafts[0], ..., drafts[k-1]]`, so
@@ -138,12 +186,66 @@ pub fn accept_greedy(drafts: &[u32], rows: &[Vec<f32>]) -> (usize, u32) {
     (a, argmax(&rows[a]))
 }
 
-/// Argmax with lowest-index tie-break.
+/// Stochastic speculative acceptance: the standard rejection rule,
+/// specialized to this scheduler's argmax (point-mass) draft proposals.
+///
+/// The textbook rule accepts draft token `x` with probability
+/// `min(1, p_target(x) / p_draft(x))` and, on rejection, resamples from the
+/// normalized residual `max(0, p_target − p_draft)`. Our draft proposes its
+/// argmax, i.e. `p_draft` is the point mass `δ_x`; for a point mass the
+/// rule reduces *exactly* to: draw `y ~ p_target` at the position — the
+/// same candidate set, nucleus cut, and inverse-CDF walk plain decoding
+/// uses — and accept iff `y == x`. (Acceptance probability is `p_target(x)`
+/// = `min(1, p_target(x)/1)`; conditioned on `y ≠ x`, `y` is distributed as
+/// the normalized residual of `p_target` minus the point mass.) So the
+/// correction token on rejection is `y` itself, and the bonus token after
+/// full acceptance is one more plain draw from the last row.
+///
+/// **RNG stream discipline** — the invariant golden conformance and the
+/// scheduler fuzzer pin: each committed token consumes exactly one
+/// `next_f32` from the request's `Xoshiro256` stream, in commit order, and
+/// the verify `rows` are bit-identical to sequential decode rows
+/// ([`crate::coordinator::engine::Engine::verify_batch`]). The draw plain
+/// decoding would make at a position is therefore the very draw made here,
+/// and **stochastic speculative output is byte-identical to plain
+/// stochastic output for a fixed seed** — not merely equal in
+/// distribution. Draws consumed for rows past an EOS / length / grammar
+/// cut are unobservable: the request finishes and its stream is dropped.
+/// Drafting itself consumes no request randomness (the draft is argmax-
+/// only), so the capacity-failure fallback to plain decoding leaves the
+/// stream untouched.
+///
+/// Same `rows` shape and return convention as [`accept_greedy`].
+pub fn accept_stochastic(
+    drafts: &[u32],
+    rows: &[Vec<f32>],
+    cfg: &SamplerCfg,
+    rng: &mut Xoshiro256,
+) -> (usize, u32) {
+    assert_eq!(
+        rows.len(),
+        drafts.len() + 1,
+        "verify returns one row per consumed token"
+    );
+    debug_assert!(!cfg.is_greedy(), "greedy requests use accept_greedy");
+    for (j, &d) in drafts.iter().enumerate() {
+        let y = sample(&rows[j], cfg, rng);
+        if y != d {
+            return (j, y);
+        }
+    }
+    (drafts.len(), sample(&rows[drafts.len()], cfg, rng))
+}
+
+/// Argmax with lowest-index tie-break. NaN entries are skipped (a row of
+/// only NaN yields token 0) — on finite rows this matches the naive fold.
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
     for (i, &v) in logits.iter().enumerate() {
-        if v > logits[best] {
+        if v > best_v {
             best = i;
+            best_v = v;
         }
     }
     best as u32
@@ -247,6 +349,99 @@ mod tests {
         assert!((p0 - want).abs() < 0.02, "p0={p0} want≈{want}");
     }
 
+    /// The PR-8 regression: a single NaN logit used to panic the scheduler
+    /// thread via `partial_cmp().unwrap()` in the top-k/top-p sorts. Feed
+    /// NaN, +∞, and all-−∞ rows through every cfg combination and require
+    /// (a) no panic and (b) an in-support token wherever support exists.
+    #[test]
+    fn non_finite_logits_never_panic_and_stay_in_support() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![0.5, f32::NAN, 2.0, 1.0],               // NaN mid-row
+            vec![f32::NAN, f32::NAN, 3.0, 1.0],          // NaN prefix
+            vec![0.0, f32::INFINITY, 1.0, f32::NAN],     // +∞ wins, NaN too
+            vec![f32::NEG_INFINITY; 4],                  // empty support
+            vec![f32::NAN; 4],                           // empty support
+            vec![f32::NEG_INFINITY, f32::NAN, f32::NEG_INFINITY, 7.0], // one survivor
+        ];
+        let cfgs: Vec<SamplerCfg> = [0.0f32, 0.7, 2.0]
+            .iter()
+            .flat_map(|&temperature| {
+                [0usize, 2].iter().flat_map(move |&top_k| {
+                    [1.0f32, 0.5].iter().map(move |&top_p| SamplerCfg {
+                        temperature,
+                        top_k,
+                        top_p,
+                    })
+                })
+            })
+            .collect();
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        for cfg in &cfgs {
+            for row in &rows {
+                for _ in 0..50 {
+                    let t = sample(row, cfg, &mut rng) as usize;
+                    assert!(t < row.len(), "token {t} out of range for {cfg:?}");
+                    let has_support = row.iter().any(|v| !v.is_nan() && *v > f32::NEG_INFINITY);
+                    if has_support && cfg.temperature > 0.0 {
+                        assert!(
+                            !row[t].is_nan() && row[t] > f32::NEG_INFINITY,
+                            "sampled masked-out token {t} from {row:?} with {cfg:?}"
+                        );
+                    }
+                    if cfg.temperature == 0.0 && has_support {
+                        assert!(!row[t].is_nan(), "greedy picked NaN at {t} in {row:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plus_infinity_takes_all_mass() {
+        let row = [0.0, f32::INFINITY, 5.0, f32::INFINITY];
+        let cfg = SamplerCfg {
+            temperature: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..100 {
+            let t = sample(&row, &cfg, &mut rng);
+            assert!(t == 1 || t == 3, "finite token {t} drawn despite +inf mass");
+        }
+    }
+
+    #[test]
+    fn nan_hardening_preserves_finite_row_streams() {
+        // total_cmp + the val() mapping must not change what finite rows
+        // sample — replay a long stream against the reference pipeline
+        // (plain softmax inverse-CDF with no truncation).
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.61).cos() * 3.0).collect();
+        let cfg = SamplerCfg {
+            temperature: 0.9,
+            top_k: 0,
+            top_p: 1.0,
+        };
+        let mut r1 = Xoshiro256::seed_from_u64(21);
+        let mut r2 = Xoshiro256::seed_from_u64(21);
+        for _ in 0..200 {
+            let got = sample(&logits, &cfg, &mut r1);
+            let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let probs: Vec<f32> = logits.iter().map(|&v| ((v - mx) / 0.9).exp()).collect();
+            let sum: f32 = probs.iter().sum();
+            let u = r2.next_f32();
+            let mut cum = 0.0;
+            let mut want = logits.len() as u32 - 1;
+            for (i, &p) in probs.iter().enumerate() {
+                cum += p / sum;
+                if u < cum {
+                    want = i as u32;
+                    break;
+                }
+            }
+            assert_eq!(got, want);
+        }
+    }
+
     fn one_hot(vocab: usize, hot: usize) -> Vec<f32> {
         let mut v = vec![0.0f32; vocab];
         v[hot] = 1.0;
@@ -286,6 +481,63 @@ mod tests {
         assert_eq!((a, next), (0, 4));
     }
 
+    /// Rows the plain path would decode, one per position.
+    fn spec_rows() -> Vec<Vec<f32>> {
+        (0..5)
+            .map(|j| (0..16).map(|i| ((i * 7 + j * 3) as f32 * 0.43).sin() * 2.0).collect())
+            .collect()
+    }
+
+    /// The point-mass coupling made concrete: whatever the drafts are, the
+    /// accepted prefix + correction must equal the draws plain decoding
+    /// makes from the same rows with the same stream.
+    #[test]
+    fn accept_stochastic_matches_plain_draws_exactly() {
+        let rows = spec_rows();
+        let cfg = SamplerCfg {
+            temperature: 0.8,
+            top_k: 6,
+            top_p: 0.95,
+        };
+        for seed in 0..50u64 {
+            // plain decode: sample each row in order
+            let mut rp = Xoshiro256::seed_from_u64(seed);
+            let plain: Vec<u32> = rows.iter().map(|r| sample(r, &cfg, &mut rp)).collect();
+            // adversarial drafts: agree with plain for a seed-dependent
+            // prefix, then diverge
+            let k = rows.len() - 1;
+            let mut drafts: Vec<u32> = plain[..k].to_vec();
+            let cut = (seed as usize) % (k + 1);
+            for d in drafts.iter_mut().skip(cut) {
+                *d = (*d + 1) % 16;
+            }
+            let mut rs = Xoshiro256::seed_from_u64(seed);
+            let (a, next) = accept_stochastic(&drafts, &rows, &cfg, &mut rs);
+            // first mismatch between plain draws and drafts decides a
+            let want_a = (0..k).find(|&j| plain[j] != drafts[j]).unwrap_or(k);
+            assert_eq!(a, want_a, "seed {seed}");
+            assert_eq!(next, plain[want_a], "seed {seed}: correction/bonus must be the plain draw");
+        }
+    }
+
+    #[test]
+    fn accept_stochastic_full_acceptance_consumes_bonus_draw() {
+        let rows = spec_rows();
+        let cfg = SamplerCfg {
+            temperature: 1.1,
+            ..Default::default()
+        };
+        let mut rp = Xoshiro256::seed_from_u64(404);
+        let plain: Vec<u32> = rows.iter().map(|r| sample(r, &cfg, &mut rp)).collect();
+        let drafts = plain[..rows.len() - 1].to_vec();
+        let mut rs = Xoshiro256::seed_from_u64(404);
+        let (a, next) = accept_stochastic(&drafts, &rows, &cfg, &mut rs);
+        assert_eq!(a, drafts.len());
+        assert_eq!(next, plain[drafts.len()]);
+        // both streams consumed the same number of uniforms
+        assert_eq!(rp.next_u64(), rs.next_u64());
+    }
+
     #[test]
     fn is_greedy_tracks_temperature() {
         assert!(SamplerCfg::greedy().is_greedy());
@@ -295,18 +547,18 @@ mod tests {
     #[test]
     fn cfg_validation() {
         assert!(SamplerCfg::greedy().validate().is_ok());
-        assert!(SamplerCfg {
-            temperature: -1.0,
-            ..Default::default()
+        assert!(SamplerCfg { temperature: 1.0, top_k: 0, top_p: 0.3 }.validate().is_ok());
+        for bad in [
+            SamplerCfg { temperature: -1.0, ..Default::default() },
+            SamplerCfg { temperature: f32::NAN, ..Default::default() },
+            SamplerCfg { temperature: f32::INFINITY, ..Default::default() },
+            SamplerCfg { temperature: 1.0, top_k: 0, top_p: 1.5 },
+            SamplerCfg { temperature: 1.0, top_k: 0, top_p: 0.0 },
+            SamplerCfg { temperature: 1.0, top_k: 0, top_p: -0.1 },
+            SamplerCfg { temperature: 1.0, top_k: 0, top_p: f32::NAN },
+            SamplerCfg { temperature: 1.0, top_k: 0, top_p: f32::INFINITY },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
         }
-        .validate()
-        .is_err());
-        assert!(SamplerCfg {
-            temperature: 1.0,
-            top_k: 0,
-            top_p: 1.5
-        }
-        .validate()
-        .is_err());
     }
 }

@@ -11,10 +11,19 @@
 //!
 //! Request:  `{"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
 //!             "temperature":0.0,"top_k":0,"top_p":1.0,"seed":1,"id":7,
-//!             "stream":true}`
+//!             "stream":true,"constrain":"json"}`
 //!           `{"op":"cancel","id":7}`   `{"op":"metrics"}`   `{"op":"ping"}`
 //! Response: `{"ok":true,"id":7,"tokens":[...],"finish":"length",
 //!             "ttft_us":...,"latency_us":...}` (or `{"ok":false,"error":..}`)
+//!
+//! Sampler configs are validated **at admission**: a request with an
+//! out-of-contract `temperature`/`top_p` (see [`SamplerCfg::validate`]) or
+//! an unknown `"constrain"` value is refused with the structured frame
+//! `{"ok":false,"error":"bad_request","detail":...}` before it can reach
+//! the scheduler thread — blocking and `"stream":true` requests alike get
+//! that single frame as their entire reply. `"constrain":"json"` forces
+//! the completion to be a parseable JSON document (grammar-masked
+//! sampling; see [`crate::sampler::grammar`]).
 //!
 //! ## Streaming
 //!
@@ -77,6 +86,7 @@ pub mod reactor;
 
 use crate::coordinator::{Coordinator, FinishReason, Request, Response};
 use crate::metrics::Metrics;
+use crate::sampler::grammar::Constraint;
 use crate::sampler::SamplerCfg;
 use crate::util::json::Json;
 use std::collections::{HashMap, VecDeque};
@@ -565,6 +575,19 @@ fn err_json(msg: String) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
 }
 
+/// Structured admission rejection for malformed request *content* (invalid
+/// sampler config, unknown constraint): `"error"` is the stable
+/// machine-readable code `"bad_request"`, `"detail"` the human-readable
+/// cause. Sent as the one and only reply frame whether or not the request
+/// asked for `"stream":true` — a rejected request has no token stream.
+fn bad_request(detail: String) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str("bad_request")),
+        ("detail", Json::str(detail)),
+    ])
+}
+
 fn token_frame(id: u64, tok: u32) -> Json {
     Json::obj(vec![
         ("event", Json::str("token")),
@@ -694,6 +717,31 @@ fn handle_generate(c: &mut Conn, req: &Json, sh: &Shared, st: &mut LoopState) {
         .get("seed")
         .and_then(|v| v.as_u64())
         .unwrap_or_else(|| default_seed(&toks));
+    let sampler = SamplerCfg {
+        temperature: get_f("temperature", 0.0),
+        top_k: req.get("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
+        top_p: get_f("top_p", 1.0),
+    };
+    // Admission-time validation: an out-of-contract cfg must never reach
+    // the scheduler thread (one NaN or negative temperature used to ride
+    // all the way to the sampler). Rejection is the whole reply, streaming
+    // or not.
+    if let Err(detail) = sampler.validate() {
+        return enqueue_frame(c, &bad_request(detail), sh.m);
+    }
+    let constrain = match req.get("constrain") {
+        None => None,
+        Some(v) => match v.as_str().and_then(Constraint::parse) {
+            Some(g) => Some(g),
+            None => {
+                return enqueue_frame(
+                    c,
+                    &bad_request("unknown 'constrain' (expected \"json\")".into()),
+                    sh.m,
+                )
+            }
+        },
+    };
     let request = Request {
         id,
         prompt: toks,
@@ -701,13 +749,10 @@ fn handle_generate(c: &mut Conn, req: &Json, sh: &Shared, st: &mut LoopState) {
             .get("max_new_tokens")
             .and_then(|v| v.as_usize())
             .unwrap_or(16),
-        sampler: SamplerCfg {
-            temperature: get_f("temperature", 0.0),
-            top_k: req.get("top_k").and_then(|v| v.as_usize()).unwrap_or(0),
-            top_p: get_f("top_p", 1.0),
-        },
+        sampler,
         seed,
         eos: req.get("eos").and_then(|v| v.as_u64()).map(|v| v as u32),
+        constrain,
     };
     let streaming = req.get("stream").and_then(|v| v.as_bool()) == Some(true);
     let (tokens, resp) = if streaming {
@@ -1027,5 +1072,93 @@ mod tests {
         assert_eq!(default_seed(&[]), 0xcbf2_9ce4_8422_2325);
         assert_eq!(default_seed(&[1, 2, 3]), default_seed(&[1, 2, 3]));
         assert_ne!(default_seed(&[1, 2, 3]), default_seed(&[3, 2, 1]));
+    }
+
+    /// Regression: the server used to build `SamplerCfg` straight off the
+    /// wire with no `validate()` call, so `"temperature":-1` or
+    /// `"top_p":2.0` was admitted and rode all the way to the sampler on
+    /// the scheduler thread. Admission must refuse with the structured
+    /// `bad_request` frame — for `"stream":true` requests too, where the
+    /// error is the entire stream — and the connection must stay usable.
+    #[test]
+    fn invalid_sampler_cfgs_are_refused_at_admission() {
+        let (addr, _stop, _) = boot();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        for streaming in [false, true] {
+            for (key, val) in [("temperature", -1.0), ("top_p", 2.0), ("top_p", 0.0)] {
+                let mut r = generate_req(&[1, 2], 4);
+                if let Json::Obj(o) = &mut r {
+                    o.insert(key.into(), Json::num(val));
+                    if streaming {
+                        o.insert("stream".into(), Json::Bool(true));
+                    }
+                }
+                let resp = c.call(&r).unwrap();
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+                assert_eq!(
+                    resp.get("error").and_then(|e| e.as_str()),
+                    Some("bad_request"),
+                    "{resp:?}"
+                );
+                assert!(
+                    resp.get("detail")
+                        .and_then(|d| d.as_str())
+                        .map_or(false, |d| d.contains(key)),
+                    "detail must name the offending field: {resp:?}"
+                );
+                assert!(
+                    resp.get("event").is_none(),
+                    "a rejected request must not open a stream: {resp:?}"
+                );
+            }
+        }
+        // an unknown constraint is the same shape of refusal
+        let mut r = generate_req(&[1, 2], 4);
+        if let Json::Obj(o) = &mut r {
+            o.insert("constrain".into(), Json::str("yaml"));
+        }
+        let resp = c.call(&r).unwrap();
+        assert_eq!(
+            resp.get("error").and_then(|e| e.as_str()),
+            Some("bad_request"),
+            "{resp:?}"
+        );
+        // every rejection above left the connection fully usable
+        let ok = c.call(&generate_req(&[1, 2], 3)).unwrap();
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok:?}");
+    }
+
+    /// `"constrain":"json"` end to end over the wire: the completion must
+    /// finish by grammar completion (`"finish":"eos"`) and its bytes must
+    /// parse as a JSON document, greedy and stochastic alike.
+    #[test]
+    fn constrained_generate_always_parses() {
+        let (addr, _stop, _) = boot();
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        for temperature in [0.0, 0.9] {
+            let mut r = generate_req(&[7, 8, 9], 32);
+            if let Json::Obj(o) = &mut r {
+                o.insert("constrain".into(), Json::str("json"));
+                o.insert("temperature".into(), Json::num(temperature));
+            }
+            let resp = c.call(&r).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+            assert_eq!(
+                resp.get("finish").and_then(|f| f.as_str()),
+                Some("eos"),
+                "constrained requests always finish via grammar completion: {resp:?}"
+            );
+            let bytes: Vec<u8> = resp
+                .get("tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| u8::try_from(t.as_u64().unwrap()).expect("byte-vocab token"))
+                .collect();
+            let text = String::from_utf8_lossy(&bytes).into_owned();
+            Json::parse(&text)
+                .unwrap_or_else(|e| panic!("constrained output {text:?} must parse: {e}"));
+        }
     }
 }

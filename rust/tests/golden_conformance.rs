@@ -1,14 +1,19 @@
 //! Golden decode conformance: a tiny seeded model decoded across
 //! {f32, int8} × {vanilla, surgeried} × {plain, speculative, chunked}
-//! engines.
+//! engines, for greedy, stochastic (fixed per-request seeds), and
+//! JSON-constrained request families.
 //!
 //! Two layers of protection:
 //!
 //! 1. **Structural invariants, always checked** — within every
-//!    (dtype, variant) configuration, the speculative greedy stream AND
-//!    the chunked-prefill stream (tiny token budget, multi-chunk prompts)
-//!    must be token-identical to the plain one (the tentpole guarantees,
-//!    enforced without any golden file).
+//!    (dtype, variant) configuration and every request family, the
+//!    speculative stream AND the chunked-prefill stream (tiny token
+//!    budget, multi-chunk prompts) must be token-identical to the plain
+//!    one. For the greedy family that is the original spec ≡ plain
+//!    guarantee; for the stochastic families it is the RNG-stream
+//!    discipline invariant (**stochastic spec ≡ plain stochastic for a
+//!    fixed seed**), and every constrained stream must parse as JSON —
+//!    all enforced without any golden file.
 //! 2. **Committed golden traces** — `tests/golden/decode_traces.json`
 //!    pins every configuration's token streams. A later change that shifts
 //!    any stream (a kernel reorder, a quantizer tweak, an accidental
@@ -20,6 +25,8 @@ use skipless::config::{ModelConfig, Variant};
 use skipless::coordinator::{CpuEngine, Request, Scheduler, SchedulerCfg};
 use skipless::metrics::Metrics;
 use skipless::model::{quantize, ModelWeights};
+use skipless::sampler::grammar::Constraint;
+use skipless::sampler::SamplerCfg;
 use skipless::surgery::{transform, Options};
 use skipless::util::json::Json;
 use std::path::PathBuf;
@@ -45,9 +52,54 @@ fn configurations() -> Vec<(String, ModelWeights)> {
     ]
 }
 
-/// Decode every prompt greedily through a scheduler — plain, speculative,
-/// or with chunked prefill forced into multiple tiny chunks.
-fn traces(w: &ModelWeights, spec_k: usize, chunked: bool) -> Vec<Vec<u32>> {
+/// A mixed-config stochastic request with a fixed per-request seed (the
+/// seed is what lets spec and plain runs be compared stream-for-stream).
+fn stochastic_req(id: u64, prompt: Vec<u32>) -> Request {
+    let mut r = Request::greedy(id, prompt, MAX_NEW);
+    r.seed = 900 + id;
+    r.sampler = match id % 3 {
+        0 => SamplerCfg {
+            temperature: 0.8,
+            ..Default::default()
+        },
+        1 => SamplerCfg {
+            temperature: 0.7,
+            top_k: 16,
+            top_p: 0.9,
+        },
+        _ => SamplerCfg {
+            temperature: 1.0,
+            ..Default::default()
+        },
+    };
+    r
+}
+
+/// A `"constrain":"json"` request (greedy when `temperature == 0.0`); a
+/// roomy `max_new_tokens` lets the grammar close documents of its own
+/// choosing rather than being budget-forced to `{}` immediately.
+fn constrained_req(id: u64, prompt: Vec<u32>, temperature: f32) -> Request {
+    let mut r = Request::greedy(id, prompt, 40);
+    r.constrain = Some(Constraint::Json);
+    r.seed = 7000 + id;
+    if temperature > 0.0 {
+        r.sampler = SamplerCfg {
+            temperature,
+            ..Default::default()
+        };
+    }
+    r
+}
+
+/// Decode every prompt through a scheduler — plain, speculative, or with
+/// chunked prefill forced into multiple tiny chunks — with per-request
+/// construction delegated to `mk` (greedy, stochastic, constrained, ...).
+fn traces_with(
+    w: &ModelWeights,
+    spec_k: usize,
+    chunked: bool,
+    mk: &dyn Fn(u64, Vec<u32>) -> Request,
+) -> Vec<Vec<u32>> {
     let engine = CpuEngine::new(w.clone(), 4, 16 << 20);
     let cfg = if chunked {
         // budget smaller than the longest prompt and chunks that straddle
@@ -73,7 +125,7 @@ fn traces(w: &ModelWeights, spec_k: usize, chunked: bool) -> Vec<Vec<u32>> {
         Scheduler::new(engine, cfg, Arc::new(Metrics::new()))
     };
     for (i, p) in prompts().into_iter().enumerate() {
-        s.submit(Request::greedy(i as u64, p, MAX_NEW));
+        s.submit(mk(i as u64, p));
     }
     let mut done = s.run_to_completion();
     done.sort_by_key(|r| r.id);
@@ -85,17 +137,18 @@ fn golden_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/decode_traces.json")
 }
 
-fn render(all: &[(String, Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<Vec<u32>>)]) -> String {
-    let arr = |t: &[Vec<u32>]| {
-        let rows: Vec<String> = t
-            .iter()
-            .map(|r| {
-                let xs: Vec<String> = r.iter().map(|t| t.to_string()).collect();
-                format!("[{}]", xs.join(", "))
-            })
-            .collect();
-        format!("[{}]", rows.join(", "))
-    };
+fn arr(t: &[Vec<u32>]) -> String {
+    let rows: Vec<String> = t
+        .iter()
+        .map(|r| {
+            let xs: Vec<String> = r.iter().map(|t| t.to_string()).collect();
+            format!("[{}]", xs.join(", "))
+        })
+        .collect();
+    format!("[{}]", rows.join(", "))
+}
+
+fn render(all: &[(String, Vec<(&'static str, Vec<Vec<u32>>)>)]) -> String {
     let mut out = String::from("{\n");
     out.push_str("  \"model\": \"tiny-gqa\",\n");
     out.push_str(&format!("  \"seed\": {SEED},\n"));
@@ -104,12 +157,9 @@ fn render(all: &[(String, Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<Vec<u32>>)]) -> Stri
     out.push_str("  \"traces\": {\n");
     let cells: Vec<String> = all
         .iter()
-        .flat_map(|(name, plain, spec, chunked)| {
-            [
-                format!("    \"{name}/plain\": {}", arr(plain)),
-                format!("    \"{name}/speculative\": {}", arr(spec)),
-                format!("    \"{name}/chunked\": {}", arr(chunked)),
-            ]
+        .flat_map(|(name, fams)| {
+            fams.iter()
+                .map(|(key, t)| format!("    \"{name}/{key}\": {}", arr(t)))
         })
         .collect();
     out.push_str(&cells.join(",\n"));
@@ -135,28 +185,68 @@ fn parse_traces(j: &Json, key: &str) -> Vec<Vec<u32>> {
 
 #[test]
 fn golden_decode_conformance() {
-    // run every configuration all three ways
-    let all: Vec<(String, Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<Vec<u32>>)> = configurations()
-        .into_iter()
-        .map(|(name, w)| {
-            let plain = traces(&w, 0, false);
-            let spec = traces(&w, 4, false);
-            let chunked = traces(&w, 0, true);
-            (name, plain, spec, chunked)
-        })
-        .collect();
+    let greedy: &dyn Fn(u64, Vec<u32>) -> Request = &|id, p| Request::greedy(id, p, MAX_NEW);
+    let stochastic: &dyn Fn(u64, Vec<u32>) -> Request = &stochastic_req;
+    let constrained: &dyn Fn(u64, Vec<u32>) -> Request = &|id, p| constrained_req(id, p, 0.0);
+    let constrained_stochastic: &dyn Fn(u64, Vec<u32>) -> Request =
+        &|id, p| constrained_req(id, p, 0.9);
 
-    // invariant 1 (no golden file needed): chunked ≡ monolithic ≡ spec,
-    // per configuration
-    for (name, plain, spec, chunked) in &all {
+    // run every configuration × family, each all three ways, asserting the
+    // mode-invariance structurally (invariant 1; no golden file needed)
+    let mut all: Vec<(String, Vec<(&'static str, Vec<Vec<u32>>)>)> = Vec::new();
+    for (name, w) in configurations() {
+        let mut cells: Vec<(&'static str, Vec<Vec<u32>>)> = Vec::new();
+        // greedy family: all three modes are pinned individually (the
+        // original golden layout)
+        let plain = traces_with(&w, 0, false, greedy);
+        let spec = traces_with(&w, 4, false, greedy);
+        let chunked = traces_with(&w, 0, true, greedy);
         assert_eq!(
-            plain, spec,
+            &plain, &spec,
             "{name}: speculative greedy decode diverged from plain decode"
         );
         assert_eq!(
-            plain, chunked,
+            &plain, &chunked,
             "{name}: chunked prefill diverged from monolithic decode"
         );
+        cells.push(("plain", plain));
+        cells.push(("speculative", spec));
+        cells.push(("chunked", chunked));
+        // stochastic / constrained families: spec ≡ plain ≡ chunked for
+        // fixed seeds (RNG stream discipline), constrained streams parse;
+        // the plain trace is the one pinned in the golden file
+        for (fam, mk, must_parse) in [
+            ("stochastic", stochastic, false),
+            ("constrained", constrained, true),
+            ("constrained_stochastic", constrained_stochastic, true),
+        ] {
+            let plain = traces_with(&w, 0, false, mk);
+            let spec = traces_with(&w, 4, false, mk);
+            let chunked = traces_with(&w, 0, true, mk);
+            assert_eq!(
+                &plain, &spec,
+                "{name}/{fam}: speculative decode diverged from plain decode \
+                 (RNG stream discipline broken)"
+            );
+            assert_eq!(
+                &plain, &chunked,
+                "{name}/{fam}: chunked prefill diverged from monolithic decode"
+            );
+            if must_parse {
+                for t in &plain {
+                    let bytes: Vec<u8> = t
+                        .iter()
+                        .map(|&x| u8::try_from(x).expect("constrained tokens are byte-vocab"))
+                        .collect();
+                    let text = String::from_utf8_lossy(&bytes).into_owned();
+                    Json::parse(&text).unwrap_or_else(|e| {
+                        panic!("{name}/{fam}: constrained output {text:?} must parse: {e}")
+                    });
+                }
+            }
+            cells.push((fam, plain));
+        }
+        all.push((name, cells));
     }
     // NB: no token-identity is asserted ACROSS variants or dtypes —
     // surgery preserves the function up to f32 roundoff (~1e-2 on logits)
@@ -184,21 +274,13 @@ fn golden_decode_conformance() {
         "golden file was generated for a different seed — regenerate with \
          SKIPLESS_REGEN_GOLDEN=1"
     );
-    for (name, plain, spec, chunked) in &all {
-        let want_plain = parse_traces(&j, &format!("{name}/plain"));
-        let want_spec = parse_traces(&j, &format!("{name}/speculative"));
-        let want_chunked = parse_traces(&j, &format!("{name}/chunked"));
-        assert_eq!(
-            plain, &want_plain,
-            "{name}/plain drifted from the committed golden trace"
-        );
-        assert_eq!(
-            spec, &want_spec,
-            "{name}/speculative drifted from the committed golden trace"
-        );
-        assert_eq!(
-            chunked, &want_chunked,
-            "{name}/chunked drifted from the committed golden trace"
-        );
+    for (name, fams) in &all {
+        for (key, got) in fams {
+            let want = parse_traces(&j, &format!("{name}/{key}"));
+            assert_eq!(
+                got, &want,
+                "{name}/{key} drifted from the committed golden trace"
+            );
+        }
     }
 }

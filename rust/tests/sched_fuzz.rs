@@ -1,11 +1,16 @@
 //! Scheduler interleaving fuzz: seeded random schedules of submit / step /
 //! cancel — admission, chunked prefill under tight token budgets, capacity
 //! preemption, mid-prefill swap-out, and resume all arise from the
-//! deliberately tiny KV pools — with speculative decoding on or off. Every
-//! surviving request's output must be byte-identical to a sequential
+//! deliberately tiny KV pools — with speculative decoding on or off. The
+//! request mix covers greedy, temperature/nucleus-sampled (per-request
+//! seeds), EOS-cut, and `"constrain":"json"` grammar-masked requests.
+//! Every surviving request's output must be byte-identical to a sequential
 //! single-request oracle (a cancelled request may only ever deliver a
-//! prefix of its oracle stream), and no request may ever be dropped or
-//! spuriously rejected.
+//! prefix of its oracle stream) — for stochastic requests that is exactly
+//! the "stochastic spec ≡ plain stochastic for a fixed seed" RNG-stream
+//! invariant — no request may ever be dropped or spuriously rejected, and
+//! every non-cancelled constrained output must parse as JSON and finish
+//! via grammar completion.
 //!
 //! `SKIPLESS_QUANTIZE=int8` (the CI matrix leg) runs the whole fuzz on
 //! INT8 engines: the target, the oracle, and the draft are all quantized,
@@ -16,7 +21,9 @@ use skipless::coordinator::{CpuEngine, FinishReason, Request, Scheduler, Schedul
 use skipless::kvcache::CacheOpts;
 use skipless::metrics::Metrics;
 use skipless::model::{quantize, ModelWeights};
+use skipless::sampler::grammar::Constraint;
 use skipless::sampler::SamplerCfg;
+use skipless::util::json::Json;
 use skipless::util::rng::Xoshiro256;
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::Ordering;
@@ -29,14 +36,24 @@ fn maybe_quantize(w: ModelWeights) -> ModelWeights {
     }
 }
 
-/// Random request mix: mostly greedy (speculation-eligible), some
-/// temperature-sampled (must be skipped by speculation), some with EOS.
-/// `long_prompts` stretches prompts across several KV blocks so tight
-/// token budgets force genuinely multi-chunk prefills. Sizes are bounded
-/// so even the tight pool can always hold one request to completion —
-/// truncation is a *documented* divergence from the oracle and belongs to
-/// other tests.
-fn requests(rng: &mut Xoshiro256, n: usize, vocab: u64, long_prompts: bool) -> Vec<Request> {
+/// Random request mix: greedy, temperature-sampled, nucleus-sampled,
+/// EOS-cut, and JSON-constrained (all of them speculation-eligible; the
+/// acceptance rule dispatches on `is_greedy()` per request). Every request
+/// gets its own random sampling seed, so stochastic streams are
+/// independent and replay-deterministic. `stochastic_only` draws only
+/// `temperature > 0` requests — used to prove speculation engages on the
+/// stochastic path specifically. `long_prompts` stretches prompts across
+/// several KV blocks so tight token budgets force genuinely multi-chunk
+/// prefills. Sizes are bounded so even the tight pool can always hold one
+/// request to completion — truncation is a *documented* divergence from
+/// the oracle and belongs to other tests.
+fn requests(
+    rng: &mut Xoshiro256,
+    n: usize,
+    vocab: u64,
+    long_prompts: bool,
+    stochastic_only: bool,
+) -> Vec<Request> {
     (0..n)
         .map(|i| {
             let plen = if long_prompts {
@@ -47,14 +64,34 @@ fn requests(rng: &mut Xoshiro256, n: usize, vocab: u64, long_prompts: bool) -> V
             let prompt = (0..plen).map(|_| rng.next_below(vocab) as u32).collect();
             let max_new = 2 + rng.next_below(7) as usize;
             let mut req = Request::greedy(i as u64, prompt, max_new);
-            match rng.next_below(5) {
+            req.seed = rng.next_u64();
+            match rng.next_below(if stochastic_only { 2 } else { 6 }) {
                 0 => {
                     req.sampler = SamplerCfg {
                         temperature: 0.8,
                         ..Default::default()
                     }
                 }
-                1 => req.eos = Some(rng.next_below(vocab) as u32),
+                1 => {
+                    req.sampler = SamplerCfg {
+                        temperature: 0.7,
+                        top_k: 40,
+                        top_p: 0.95,
+                    }
+                }
+                2 => req.eos = Some(rng.next_below(vocab) as u32),
+                3 => {
+                    // grammar-constrained; admission needs max_new >= 2
+                    // and the sizes must still fit the tight pools
+                    req.constrain = Some(Constraint::Json);
+                    req.max_new_tokens = 4 + rng.next_below(10) as usize;
+                    if rng.next_below(2) == 0 {
+                        req.sampler = SamplerCfg {
+                            temperature: 0.9,
+                            ..Default::default()
+                        };
+                    }
+                }
                 _ => {}
             }
             req
@@ -88,17 +125,19 @@ struct FuzzCase {
     long_prompts: bool,
     /// Randomly cancel requests mid-flight.
     cancels: bool,
+    /// Draw only `temperature > 0` requests (see [`requests`]).
+    stochastic_only: bool,
 }
 
 /// One fuzzed run: a random submit/step/cancel interleaving against a
 /// scheduler with a random tight token budget and chunk size. Returns the
 /// total speculative verify rounds observed.
 fn fuzz_one(case: FuzzCase) -> u64 {
-    let FuzzCase { seed, spec_k, budget_blocks, long_prompts, cancels } = case;
+    let FuzzCase { seed, spec_k, budget_blocks, long_prompts, cancels, stochastic_only } = case;
     let cfg = ModelConfig::tiny_mha();
     let w = maybe_quantize(ModelWeights::init_vanilla(&cfg, 500 + seed));
     let mut rng = Xoshiro256::seed_from_u64(seed * 7919 + 13);
-    let reqs = requests(&mut rng, 8, cfg.vocab_size as u64, long_prompts);
+    let reqs = requests(&mut rng, 8, cfg.vocab_size as u64, long_prompts, stochastic_only);
     let want = oracle(&w, &reqs);
 
     let bytes_per_block = 2 * cfg.e() * cfg.n_layers * 4 * 4;
@@ -174,6 +213,28 @@ fn fuzz_one(case: FuzzCase) -> u64 {
                 "seed {seed}: request {} diverged from the sequential oracle",
                 r.id
             );
+            if reqs[r.id as usize].constrain.is_some() {
+                assert_eq!(
+                    r.finish,
+                    FinishReason::Eos,
+                    "seed {seed}: constrained request {} must finish via grammar \
+                     completion",
+                    r.id
+                );
+                let bytes: Vec<u8> = r
+                    .tokens
+                    .iter()
+                    .map(|&t| u8::try_from(t).expect("constrained tokens are byte-vocab"))
+                    .collect();
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                Json::parse(&text).unwrap_or_else(|e| {
+                    panic!(
+                        "seed {seed}: constrained request {} produced unparseable \
+                         {text:?}: {e}",
+                        r.id
+                    )
+                });
+            }
         }
     }
     metrics.spec_rounds.load(Ordering::Relaxed)
@@ -190,6 +251,7 @@ fn fuzz_plain_tight_pool() {
             budget_blocks: Some(6),
             long_prompts: false,
             cancels: false,
+            stochastic_only: false,
         });
     }
 }
@@ -205,6 +267,7 @@ fn fuzz_speculative_tight_pool() {
             budget_blocks: Some(6),
             long_prompts: false,
             cancels: false,
+            stochastic_only: false,
         });
     }
 }
@@ -221,6 +284,7 @@ fn fuzz_speculative_roomy_pool() {
             budget_blocks: None,
             long_prompts: false,
             cancels: false,
+            stochastic_only: false,
         });
     }
     assert!(rounds > 0, "speculation never engaged across the roomy runs");
@@ -240,6 +304,7 @@ fn fuzz_chunked_mid_prefill_preempt_swap_cancel() {
             budget_blocks: Some(10),
             long_prompts: true,
             cancels: true,
+            stochastic_only: false,
         });
         fuzz_one(FuzzCase {
             seed: seed + 100,
@@ -247,6 +312,7 @@ fn fuzz_chunked_mid_prefill_preempt_swap_cancel() {
             budget_blocks: Some(10),
             long_prompts: true,
             cancels: true,
+            stochastic_only: false,
         });
     }
 }
@@ -258,7 +324,7 @@ fn fuzz_chunked_runs_really_chunk() {
     let cfg = ModelConfig::tiny_mha();
     let w = maybe_quantize(ModelWeights::init_vanilla(&cfg, 777));
     let mut rng = Xoshiro256::seed_from_u64(777);
-    let reqs = requests(&mut rng, 6, cfg.vocab_size as u64, true);
+    let reqs = requests(&mut rng, 6, cfg.vocab_size as u64, true, false);
     let want = oracle(&w, &reqs);
     let metrics = Arc::new(Metrics::new());
     let mut s = Scheduler::new(
@@ -284,4 +350,25 @@ fn fuzz_chunked_runs_really_chunk() {
         chunks >= longest / 3,
         "expected multi-chunk prefills, saw {chunks} chunks"
     );
+}
+
+/// Stochastic speculative decoding must be *stream*-identical to plain
+/// stochastic decoding for fixed per-request seeds (the oracle comparison
+/// in [`fuzz_one`] asserts exactly that) — and speculation must actually
+/// engage, because a regression back to the old "skip stochastic
+/// requests" gate would pass the identity check trivially.
+#[test]
+fn fuzz_stochastic_spec_identical_and_engaged() {
+    let mut rounds = 0;
+    for seed in 16..20 {
+        rounds += fuzz_one(FuzzCase {
+            seed,
+            spec_k: 3,
+            budget_blocks: None,
+            long_prompts: false,
+            cancels: false,
+            stochastic_only: true,
+        });
+    }
+    assert!(rounds > 0, "speculation never engaged on the stochastic-only runs");
 }
