@@ -1,0 +1,179 @@
+//! Tensor-parallel serving bench: decode throughput at 1/2/4 shard
+//! workers, with BIT-identity against the single engine asserted in every
+//! mode before any timing is trusted.
+//!
+//! Why TP helps on one machine at all: batched decode is GEMV-shaped (a
+//! handful of rows), so the blocked GEMM kernels cannot spread one matrix
+//! over many cores by rows — sharding splits the *columns* (head groups)
+//! across workers with their own thread pools, and the per-shard
+//! attention walks only its own KV slice. The joins are memcpy
+//! concatenations plus a full-width host FFN (see DESIGN.md §Sharding),
+//! so correctness is exact, not approximate — the identity check here is
+//! `assert_eq!` on f32 logits, no tolerance.
+//!
+//! Emits `BENCH_sharding.json` (schema in EXPERIMENTS.md). Full mode
+//! asserts the scaling SLO: ≥1.5x decode throughput at 4 workers versus
+//! 1. `SKIPLESS_BENCH_QUICK=1` shrinks the model and skips the SLO (a
+//! loaded CI box can't promise scaling), keeping the identity checks.
+
+use skipless::config::ModelConfig;
+use skipless::coordinator::{CpuEngine, DecodeInput, Engine, ShardedEngine};
+use skipless::model::ModelWeights;
+use std::time::Instant;
+
+const BLOCK_TOKENS: usize = 16;
+const BUDGET: usize = 256 << 20;
+
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// The bench model: MHA so every worker count in {1, 2, 4} divides the KV
+/// heads. Full mode is sized so a decode step is dominated by the
+/// projections and attention the shards split.
+fn bench_cfg(quick: bool) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny_mha();
+    cfg.name = if quick { "bench-tp-quick".into() } else { "bench-tp".into() };
+    if !quick {
+        cfg.dim = 512;
+        cfg.n_heads = 8;
+        cfg.n_kv_heads = 8;
+        cfg.n_layers = 6;
+        cfg.hidden_dim = 1408;
+        cfg.vocab_size = 1024;
+        cfg.max_seq_len = 512;
+    }
+    cfg
+}
+
+struct RunResult {
+    tok_s: f64,
+    wall_s: f64,
+    logits_trace: Vec<Vec<f32>>,
+    allreduce_calls: u64,
+    allreduce_bytes: u64,
+}
+
+/// Prefill `batch` prompts and greedy-decode `steps` tokens for each,
+/// batched, timing only the decode loop. The first sequence's logits rows
+/// come back as the bit-identity witness.
+fn run(engine: &mut Box<dyn Engine>, batch: usize, prompt_len: usize, steps: usize) -> RunResult {
+    let vocab = engine.cfg().vocab_size as u32;
+    let mut seqs = Vec::with_capacity(batch);
+    let mut toks = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let prompt: Vec<u32> =
+            (0..prompt_len).map(|i| ((i * 13 + b * 29 + 7) as u32) % vocab).collect();
+        let (seq, logits) = engine.prefill(&prompt).expect("prefill");
+        seqs.push(seq);
+        toks.push(argmax(&logits));
+    }
+    let mut logits_trace = Vec::with_capacity(steps);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let inputs: Vec<DecodeInput> = seqs
+            .iter()
+            .zip(&toks)
+            .map(|(&seq, &token)| DecodeInput { seq, token })
+            .collect();
+        let rows = engine.decode_batch(&inputs).expect("decode");
+        logits_trace.push(rows[0].clone());
+        for (t, row) in toks.iter_mut().zip(&rows) {
+            *t = argmax(row);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    for seq in seqs {
+        engine.release(seq);
+    }
+    let (allreduce_calls, allreduce_bytes) = engine
+        .shard_stats()
+        .map(|s| (s.allreduce_calls, s.allreduce_bytes))
+        .unwrap_or((0, 0));
+    RunResult {
+        tok_s: (batch * steps) as f64 / wall_s,
+        wall_s,
+        logits_trace,
+        allreduce_calls,
+        allreduce_bytes,
+    }
+}
+
+fn main() {
+    println!("# sharded_serving — tensor-parallel decode throughput + bit-identity");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let (batch, prompt_len, steps) = if quick { (4usize, 12usize, 8usize) } else { (8, 64, 48) };
+    let cfg = bench_cfg(quick);
+    let w = ModelWeights::init_vanilla(&cfg, 4041);
+    eprintln!(
+        "  model {} (d={}, {} layers, {}/{} heads), batch {batch}, {steps} decode steps",
+        cfg.name, cfg.dim, cfg.n_layers, cfg.n_heads, cfg.n_kv_heads
+    );
+
+    let mut rows = Vec::new();
+    let mut baseline: Option<RunResult> = None;
+    let mut speedup4 = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let mut engine: Box<dyn Engine> = if workers == 1 {
+            Box::new(CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET))
+        } else {
+            Box::new(
+                ShardedEngine::new(w.clone(), workers, BLOCK_TOKENS, BUDGET).expect("shardable"),
+            )
+        };
+        let r = run(&mut engine, batch, prompt_len, steps);
+        let scaling = baseline.as_ref().map(|b| r.tok_s / b.tok_s).unwrap_or(1.0);
+        if workers == 4 {
+            speedup4 = scaling;
+        }
+        // the whole point: every sharded logits row equals the single
+        // engine's, byte for byte, before any throughput number counts
+        if let Some(b) = &baseline {
+            assert_eq!(
+                r.logits_trace, b.logits_trace,
+                "{workers}-way sharded decode diverged from the single engine"
+            );
+        }
+        eprintln!(
+            "  workers {workers}: {:.1} tok/s ({:.3}s wall, {:.2}x vs 1, allreduce {} calls / {} B)",
+            r.tok_s, r.wall_s, scaling, r.allreduce_calls, r.allreduce_bytes
+        );
+        println!(
+            "{{\"suite\":\"sharding\",\"case\":\"decode\",\"workers\":{workers},\"tok_s\":{:.1},\"scaling_x\":{scaling:.3},\"bit_identical\":true}}",
+            r.tok_s
+        );
+        rows.push(format!(
+            "    {{ \"workers\": {workers}, \"tok_s\": {:.2}, \"scaling_x\": {scaling:.4}, \
+             \"allreduce_calls\": {}, \"allreduce_bytes\": {}, \"bit_identical\": true }}",
+            r.tok_s, r.allreduce_calls, r.allreduce_bytes
+        ));
+        if workers == 1 {
+            baseline = Some(r);
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"suite\": \"sharding\",\n  \"model\": \"{}\",\n  \"dim\": {},\n  \"n_layers\": {},\n  \"batch\": {batch},\n  \"prompt_len\": {prompt_len},\n  \"decode_steps\": {steps},\n  \"quick\": {quick},\n  \"speedup_at_4\": {speedup4:.4},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        cfg.name,
+        cfg.dim,
+        cfg.n_layers,
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_sharding.json", &json).expect("write BENCH_sharding.json");
+    eprintln!("  wrote BENCH_sharding.json");
+
+    if !quick {
+        // scaling SLO: 4 shard workers must buy at least 1.5x decode
+        // throughput on the full-size model
+        assert!(
+            speedup4 >= 1.5,
+            "4-worker decode speedup {speedup4:.2}x missed the 1.5x SLO"
+        );
+    }
+}

@@ -76,6 +76,23 @@ pub struct VerifyInput {
     pub tokens: Vec<u32>,
 }
 
+/// Multi-engine parallelism counters, reported by engines that fan work
+/// out across workers ([`super::sharded::ShardedEngine`]). `None` from
+/// everything else; the scheduler mirrors these into metrics gauges only
+/// when present, so the data-parallel router (which sets the gauges itself,
+/// wrapping plain engines) is never clobbered.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardStats {
+    pub workers: usize,
+    /// `"tp"` (tensor-parallel) or `"dp"` (data-parallel replicas).
+    pub mode: &'static str,
+    /// Cumulative fan-in/fan-out synchronizations (2 per layer per step in
+    /// TP: gather attention outputs, broadcast the next block input).
+    pub allreduce_calls: u64,
+    /// Activation bytes crossing the shard boundary in those calls.
+    pub allreduce_bytes: u64,
+}
+
 /// NB: not `Send`-bounded — PJRT client handles are `Rc`-based, so PJRT
 /// engines are built *on* the coordinator thread via
 /// [`crate::coordinator::Coordinator::spawn_with`].
@@ -271,5 +288,11 @@ pub trait Engine {
     /// Speculative decoding requires it to reject draft tokens.
     fn supports_rollback(&self) -> bool {
         false
+    }
+
+    /// Multi-engine parallelism counters ([`ShardStats`]); `None` for
+    /// single-engine backends.
+    fn shard_stats(&self) -> Option<ShardStats> {
+        None
     }
 }

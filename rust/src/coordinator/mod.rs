@@ -16,10 +16,14 @@
 pub mod cpu_engine;
 pub mod engine;
 pub mod scheduler;
+pub mod sharded;
 
 pub use cpu_engine::CpuEngine;
-pub use engine::{ChunkInput, DecodeInput, Engine, EngineError, StepOutput, VerifyInput};
+pub use engine::{
+    ChunkInput, DecodeInput, Engine, EngineError, ShardStats, StepOutput, VerifyInput,
+};
 pub use scheduler::{FinishReason, Request, Response, Scheduler, SchedulerCfg};
+pub use sharded::ShardedEngine;
 
 use crate::metrics::Metrics;
 use std::collections::BTreeMap;
@@ -59,13 +63,72 @@ impl Coordinator {
         E: Engine + 'static,
         F: FnOnce() -> E + Send + 'static,
     {
-        let metrics = Arc::new(Metrics::new());
+        Self::spawn_with_metrics(factory, cfg, Arc::new(Metrics::new()))
+    }
+
+    /// [`Self::spawn_with`] against a caller-supplied metrics sink, so
+    /// several coordinators can aggregate into one `{"op":"metrics"}` view
+    /// — the data-parallel replicas in [`Self::spawn_replicated`] all
+    /// share their router's `Arc<Metrics>`.
+    pub fn spawn_with_metrics<E, F>(factory: F, cfg: SchedulerCfg, metrics: Arc<Metrics>) -> Self
+    where
+        E: Engine + 'static,
+        F: FnOnce() -> E + Send + 'static,
+    {
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = channel::<Msg>();
         let handle = std::thread::Builder::new()
             .name("skipless-coordinator".into())
             .spawn(move || engine_loop(factory(), cfg, rx, m2))
             .expect("spawn coordinator");
+        Self {
+            tx,
+            handle: Some(handle),
+            metrics,
+        }
+    }
+
+    /// Data-parallel serving: `n` replicated engines, each behind its own
+    /// scheduler thread, fronted by a router thread that places every new
+    /// request on ONE replica. Placement is prefix-cache-aware: the router
+    /// hashes the prompt's block-aligned prefixes
+    /// ([`crate::kvcache::prefix_chain_keys`] — the same chain hashes the
+    /// KV pools use for prefix sharing) and routes to the replica that last
+    /// saw the longest matching prefix, so repeated prompts land where
+    /// their KV blocks are already cached; unmatched prompts go to the
+    /// least-loaded replica. All replicas share one [`Metrics`], so the
+    /// external view aggregates naturally. Token streams and cancellation
+    /// work unchanged — the router forwards the submitter's channels to
+    /// the chosen replica and broadcasts cancels to all of them.
+    pub fn spawn_replicated<E, F>(
+        mut factory: F,
+        n: usize,
+        block_tokens: usize,
+        cfg: SchedulerCfg,
+    ) -> Self
+    where
+        E: Engine + Send + 'static,
+        F: FnMut(usize) -> E,
+    {
+        assert!(n >= 1, "need at least one replica");
+        let metrics = Arc::new(Metrics::new());
+        Metrics::set(&metrics.shard_workers, n as u64);
+        Metrics::set(&metrics.shard_mode, 2); // dp
+        // Engines are built on the caller's thread (factory needn't be
+        // Send); each finished engine is moved into its replica's
+        // coordinator thread.
+        let inner: Vec<Coordinator> = (0..n)
+            .map(|i| {
+                let engine = factory(i);
+                Self::spawn_with_metrics(move || engine, cfg.clone(), Arc::clone(&metrics))
+            })
+            .collect();
+        let m2 = Arc::clone(&metrics);
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("skipless-dp-router".into())
+            .spawn(move || router_loop(inner, block_tokens, rx, m2))
+            .expect("spawn dp router");
         Self {
             tx,
             handle: Some(handle),
@@ -160,6 +223,74 @@ impl Drop for Coordinator {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+    }
+}
+
+/// Front thread of [`Coordinator::spawn_replicated`]: owns the replica
+/// coordinators and places each submit on exactly one of them.
+///
+/// The affinity table maps a prompt-prefix chain hash (the same per-block
+/// rolling hash the KV pools key their prefix index on) to the replica
+/// that last served a prompt containing that prefix. Matching walks the
+/// request's chain longest-prefix-first, so a prompt that extends a
+/// previously routed one lands on the replica whose cache already holds
+/// those blocks — that replica's `prefill_shared` then skips them. The
+/// table is advisory only (a stale entry merely costs a cache miss), so
+/// it is cleared wholesale rather than evicted precisely when it grows
+/// past a bound.
+fn router_loop(
+    inner: Vec<Coordinator>,
+    block_tokens: usize,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) {
+    const AFFINITY_CAP: usize = 65_536;
+    let mut affinity: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    let mut dispatched = vec![0u64; inner.len()];
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // all senders gone; dropping `inner` joins the replicas
+        };
+        match msg {
+            Msg::Submit(req, tx, token_tx) => {
+                let keys = crate::kvcache::prefix_chain_keys(&req.prompt, block_tokens);
+                let hit = keys.iter().rev().find_map(|k| affinity.get(k).copied());
+                let r = match hit {
+                    Some(r) => {
+                        Metrics::inc(&metrics.shard_router_prefix_hits);
+                        r
+                    }
+                    None => {
+                        // no cached prefix anywhere: least-dispatched replica
+                        (0..inner.len())
+                            .min_by_key(|&i| dispatched[i])
+                            .unwrap_or(0)
+                    }
+                };
+                dispatched[r] += 1;
+                if affinity.len() + keys.len() > AFFINITY_CAP {
+                    affinity.clear();
+                }
+                for k in keys {
+                    affinity.insert(k, r);
+                }
+                // forward the submitter's channels verbatim; the replica's
+                // sched_loop delivers tokens and the final response
+                let _ = inner[r].tx.send(Msg::Submit(req, tx, token_tx));
+            }
+            Msg::Cancel(id, tx) => {
+                // ids are global, the owner unknown here: broadcast and OR.
+                // `any` short-circuits, so map-then-fold keeps every replica
+                // polled even after the first true.
+                let any = inner
+                    .iter()
+                    .map(|c| c.cancel(id))
+                    .fold(false, |a, b| a | b);
+                let _ = tx.send(any);
+            }
+            Msg::Shutdown => return, // Drop of `inner` shuts each replica down
         }
     }
 }
@@ -342,6 +473,41 @@ mod tests {
         let (c, _) = coordinator(73);
         let _ = c.generate(Request::greedy(1, vec![1], 2));
         drop(c); // must not hang
+    }
+
+    #[test]
+    fn replicated_router_prefers_the_replica_with_the_prefix() {
+        use std::sync::atomic::Ordering;
+        let cfg = ModelConfig::tiny_gqa();
+        let w = ModelWeights::init_vanilla(&cfg, 77);
+        let c = Coordinator::spawn_replicated(
+            |_| CpuEngine::new(w.clone(), 8, 16 << 20),
+            2,
+            8,
+            SchedulerCfg::default(),
+        );
+        assert_eq!(c.metrics().shard_workers.load(Ordering::Relaxed), 2);
+        assert_eq!(c.metrics().shard_mode.load(Ordering::Relaxed), 2);
+        // long enough for a block-aligned prefix key (block_tokens = 8)
+        let prompt: Vec<u32> = (1..=12).collect();
+        let want = greedy_generate(&w, &prompt, 4);
+        let r1 = c.generate(Request::greedy(1, prompt.clone(), 4));
+        assert_eq!(r1.tokens, want);
+        // same prompt again: the router must recognize the prefix and keep
+        // it on the replica that cached it
+        let r2 = c.generate(Request::greedy(2, prompt.clone(), 4));
+        assert_eq!(r2.tokens, want);
+        assert!(
+            c.metrics().shard_router_prefix_hits.load(Ordering::Relaxed) >= 1,
+            "second submit should hit the affinity table"
+        );
+        // a disjoint prompt routes somewhere sane and still generates
+        let other: Vec<u32> = (40..=51).collect();
+        let r3 = c.generate(Request::greedy(3, other.clone(), 3));
+        assert_eq!(r3.tokens, greedy_generate(&w, &other, 3));
+        // cancel broadcast: unknown id is a clean false through the router
+        assert!(!c.cancel(999));
+        c.shutdown();
     }
 
     #[test]

@@ -1283,6 +1283,15 @@ impl<E: Engine> Scheduler<E> {
         let (wf32, wres) = self.engine.weight_bytes();
         Metrics::set(&m.weight_bytes_f32, wf32);
         Metrics::set(&m.weight_bytes_resident, wres);
+        // Mirror only when the engine reports shard stats: under the DP
+        // router the replicas are plain engines (None) and the router owns
+        // these gauges — overwriting with zeros here would clobber them.
+        if let Some(ss) = self.engine.shard_stats() {
+            Metrics::set(&m.shard_workers, ss.workers as u64);
+            Metrics::set(&m.shard_mode, if ss.mode == "tp" { 1 } else { 2 });
+            Metrics::set(&m.shard_allreduce_calls, ss.allreduce_calls);
+            Metrics::set(&m.shard_allreduce_bytes, ss.allreduce_bytes);
+        }
         let Some(s) = self.engine.kv_snapshot() else { return };
         Metrics::set(&m.kv_prefix_hit_blocks, s.stats.prefix_hit_blocks);
         Metrics::set(&m.kv_prefix_tokens_saved, s.stats.prefix_tokens_saved);

@@ -1,0 +1,1145 @@
+//! Tensor-parallel multi-engine serving, sharded by KV-head group.
+//!
+//! [`ShardedEngine`] implements [`Engine`] by fanning each step's attention
+//! work out to `n` workers, each owning one KV-head-group weight slice
+//! ([`crate::model::shard_weights`]) and its own paged [`KvCache`] holding
+//! only that group's K/V rows. The result is **bit-identical** to
+//! [`super::cpu_engine::CpuEngine`] over the same weights, because every
+//! split happens along an axis the single-engine math never mixes:
+//!
+//! * the Q/K/V projections split by **output column** — each output element
+//!   of a GEMM accumulates over the full inner extent in a fixed per-element
+//!   order regardless of which other columns ride in the call (the PR 6
+//!   kernel contract), so a column-sliced projection is byte-equal to
+//!   slicing the full projection;
+//! * RoPE rotates per `(head, position)` and attention reads only its own
+//!   head's Q and its KV group's K/V, so the per-shard `attend_batch` over
+//!   the local head layout writes exactly the columns the full grid would;
+//! * the joins are **order-fixed concatenations, never sums**: the host
+//!   gathers per-shard attention outputs into their column ranges (a
+//!   memcpy, exact) and then runs the post-projection + FFN **full-width on
+//!   the host thread** with the unsharded weights. A Megatron-style
+//!   row-partitioned FFN with a partial-sum allreduce would change f32
+//!   association and break bit-identity — see DESIGN.md §Sharding.
+//!
+//! Per-shard caches run in **lockstep**: every shard sees the same
+//! alloc/append/advance/truncate stream against a pool with `1/n` of the
+//! budget and `1/n` of the row width, so block counts, sequence ids, CoW
+//! and eviction decisions are identical across shards (and identical to a
+//! single engine with the full budget — nested integer division,
+//! `(B/n)/(C/n) == B/C` when `n | C`). Admission asserts the ids agree and
+//! surfaces a `Backend` error if a shard ever diverges.
+//!
+//! Threading: a small fan-out pool dispatches one job per shard; each job
+//! rebinds the thread-local kernel pool ([`threadpool::with_pool`]) to a
+//! per-shard slice of the cores, so `n` workers split the machine instead
+//! of oversubscribing it `n`-fold. The host-side FFN uses the global pool.
+//!
+//! Quantized **KV pools** are rejected: the u8 block layout spans the full
+//! row width with per-(position, layer) scale/zero metadata, so slicing it
+//! per group would requantize and change bits. Quantized **weights** shard
+//! fine (per-output-channel scales travel with their columns), giving the
+//! `{f32, int8} × {mha, gqa}` coverage the equivalence suite locks in.
+
+use crate::config::{BlockLayout, ModelConfig, Variant};
+use crate::coordinator::engine::{
+    ChunkInput, DecodeInput, Engine, EngineError, ShardStats, StepOutput, VerifyInput,
+};
+use crate::kvcache::{BlockView, CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
+use crate::model::attention::{causal_attention_rot, HeadLayout};
+use crate::model::ffn::ffn_forward;
+use crate::model::paged_attn::{self, AttnItem, KvSegment};
+use crate::model::shard::shard_weights;
+use crate::model::{rope, ModelWeights, Weight};
+use crate::tensor::Mat;
+use crate::util::threadpool::{self, ThreadPool};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// In-flight chunked prefill bookkeeping (the f32-pool subset of the cpu
+/// engine's state — sharded pools are never quantized, so no raw tails).
+struct ChunkState {
+    prompt: Vec<u32>,
+    reused: usize,
+    filled: usize,
+    registered: usize,
+}
+
+/// One worker: its weight slice and its slice-width KV pool.
+struct Shard {
+    w: crate::model::ShardWeights,
+    cache: KvCache,
+}
+
+/// Per-shard scratch threaded through the fan-out calls of one step.
+struct Slot {
+    /// This layer's attention output, `(rows, d/n)` — joined by the host.
+    a: Mat,
+    /// Per layer `(rotated-K, V)` rows held back for the position-major
+    /// cache commit after the layer loop (chunk/verify/prefill rows).
+    kv: Vec<(Mat, Mat)>,
+    /// verify only: per-sequence draft tails at the local width.
+    tails: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self {
+            a: Mat::zeros(0, 0),
+            kv: Vec::new(),
+            tails: Vec::new(),
+        }
+    }
+}
+
+fn capacity(e: CacheError) -> EngineError {
+    EngineError::CapacityExhausted(e.to_string())
+}
+
+fn bad_seq(e: CacheError) -> EngineError {
+    EngineError::BadSequence(e.to_string())
+}
+
+/// Column-sliced projection: a present weight is already sliced; an
+/// eliminated one (`None`, the paper's `Q* = 1`) is the identity, whose
+/// column slice is the input's column slice.
+fn proj_slice(x: &Mat, w: &Option<Weight>, c0: usize, c1: usize) -> Mat {
+    match w {
+        Some(w) => w.matmul(x),
+        None => x.col_slice(c0, c1),
+    }
+}
+
+/// Fan one job per shard onto `fan`, each rebinding the kernel pool to its
+/// shard's core slice. Returns the first shard error (shards are
+/// symmetric, so "first" is deterministic enough for callers).
+fn run_shards<F>(
+    fan: &ThreadPool,
+    compute: &[Arc<ThreadPool>],
+    shards: &mut [Shard],
+    slots: &mut [Slot],
+    f: &F,
+) -> Result<(), EngineError>
+where
+    F: Fn(usize, &mut Shard, &mut Slot) -> Result<(), EngineError> + Sync,
+{
+    let mut errs: Vec<Option<EngineError>> = (0..shards.len()).map(|_| None).collect();
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = shards
+        .iter_mut()
+        .zip(slots.iter_mut())
+        .zip(errs.iter_mut())
+        .enumerate()
+        .map(|(i, ((shard, slot), err))| {
+            let pool = &compute[i];
+            Box::new(move || {
+                *err = threadpool::with_pool(pool, || f(i, shard, slot)).err();
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    fan.run_all(jobs);
+    for e in errs {
+        if let Some(e) = e {
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
+/// Run the same admission call on every shard's cache; all shards must
+/// return the same value (the lockstep invariant). On a mid-way failure or
+/// a divergence, every shard that allocated is rolled back.
+fn alloc_lockstep<R>(
+    shards: &mut [Shard],
+    f: impl Fn(&mut KvCache) -> Result<(SeqId, R), CacheError>,
+) -> Result<(SeqId, R), EngineError>
+where
+    R: PartialEq + Copy + std::fmt::Debug,
+{
+    let mut got: Vec<(SeqId, R)> = Vec::with_capacity(shards.len());
+    let mut fail = None;
+    for sh in shards.iter_mut() {
+        match f(&mut sh.cache) {
+            Ok(x) => got.push(x),
+            Err(e) => {
+                fail = Some(e);
+                break;
+            }
+        }
+    }
+    let diverged = fail.is_none() && got.iter().any(|g| *g != got[0]);
+    if fail.is_some() || diverged {
+        for (i, &(id, _)) in got.iter().enumerate() {
+            let _ = shards[i].cache.free_seq(id);
+        }
+        return match fail {
+            Some(e) => Err(capacity(e)),
+            None => Err(EngineError::Backend(format!(
+                "shard caches diverged on admission: {got:?}"
+            ))),
+        };
+    }
+    Ok(got[0])
+}
+
+pub struct ShardedEngine {
+    full: ModelWeights,
+    shards: Vec<Shard>,
+    /// live sequence positions (identical across shards by lockstep)
+    positions: BTreeMap<SeqId, usize>,
+    /// sequences admitted via `prefill_begin`, mid-prompt
+    chunking: BTreeMap<SeqId, ChunkState>,
+    /// one dispatch thread per shard
+    fan: ThreadPool,
+    /// per-shard kernel pools: `default_size / n` threads each, so tensor
+    /// parallelism splits the cores rather than oversubscribing them
+    compute: Vec<Arc<ThreadPool>>,
+    allreduce_calls: u64,
+    allreduce_bytes: u64,
+}
+
+impl ShardedEngine {
+    /// `cache_budget_bytes` is the TOTAL budget across shards (each pool
+    /// gets `1/n`, which holds exactly `1/n`-width rows — same block count
+    /// and admission behavior as a single engine with the full budget).
+    pub fn new(
+        weights: ModelWeights,
+        n_workers: usize,
+        block_tokens: usize,
+        cache_budget_bytes: usize,
+    ) -> Result<Self, EngineError> {
+        Self::with_cache_opts(
+            weights,
+            n_workers,
+            block_tokens,
+            cache_budget_bytes,
+            CacheOpts::default(),
+        )
+    }
+
+    pub fn with_cache_opts(
+        weights: ModelWeights,
+        n_workers: usize,
+        block_tokens: usize,
+        cache_budget_bytes: usize,
+        opts: CacheOpts,
+    ) -> Result<Self, EngineError> {
+        weights.check_shapes().expect("engine weights");
+        if opts.quantized {
+            return Err(EngineError::Backend(
+                "tensor-parallel sharding requires an f32 KV pool: u8 blocks carry \
+                 full-width per-position metadata that cannot be sliced per head \
+                 group without requantizing (drop --quantize-kv or use --parallel dp)"
+                    .into(),
+            ));
+        }
+        crate::linalg::simd::announce();
+        let sliced = shard_weights(&weights, n_workers).map_err(EngineError::Backend)?;
+        let per_budget = cache_budget_bytes / n_workers;
+        let shards: Vec<Shard> = sliced
+            .into_iter()
+            .map(|sw| {
+                let cache = KvCache::with_opts(&sw.cache_cfg, block_tokens, per_budget, opts);
+                Shard { w: sw, cache }
+            })
+            .collect();
+        let per_shard_threads = (ThreadPool::default_size() / n_workers).max(1);
+        let compute = (0..n_workers)
+            .map(|_| Arc::new(ThreadPool::new(per_shard_threads)))
+            .collect();
+        Ok(Self {
+            full: weights,
+            shards,
+            positions: BTreeMap::new(),
+            chunking: BTreeMap::new(),
+            fan: ThreadPool::new(n_workers),
+            compute,
+            allreduce_calls: 0,
+            allreduce_bytes: 0,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        &self.full
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.full.variant
+    }
+
+    /// Forward pass for prompt positions `reused..` of a freshly allocated
+    /// (on every shard) sequence — the sharded mirror of the cpu engine's
+    /// `prefill_into`, with attention fanned out and joined per layer.
+    fn prefill_into(
+        &mut self,
+        id: SeqId,
+        tokens: &[u32],
+        reused: usize,
+    ) -> Result<Vec<f32>, EngineError> {
+        debug_assert!(reused < tokens.len());
+        let Self {
+            full,
+            shards,
+            fan,
+            compute,
+            allreduce_calls,
+            allreduce_bytes,
+            ..
+        } = self;
+        let cfg = &full.cfg;
+        let hd = cfg.head_dim();
+        let d = cfg.dim;
+        let suffix = &tokens[reused..];
+        let s = suffix.len();
+        let mut x = full.embed_tokens(suffix);
+        let mut slots: Vec<Slot> = (0..shards.len()).map(|_| Slot::new()).collect();
+        for li in 0..full.blocks.len() {
+            let xr = &x;
+            run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+                let sw = &sh.w;
+                let layout = sw.layout;
+                let e = layout.e();
+                let b = &sw.blocks[li];
+                let k = proj_slice(xr, &b.k, sw.g0 * hd, sw.g1 * hd);
+                let v = proj_slice(xr, &b.v, sw.g0 * hd, sw.g1 * hd);
+                let mut k_rot = k;
+                rope::apply(&mut k_rot, hd, reused, rope::BASE);
+                let mut q_rot = proj_slice(xr, &b.q, sw.h0 * hd, sw.h1 * hd);
+                rope::apply(&mut q_rot, hd, reused, rope::BASE);
+                let a = if reused == 0 {
+                    causal_attention_rot(&q_rot, &k_rot, &v, layout)
+                } else {
+                    // warm continuation: shared-prefix history in place
+                    // (this shard's pool holds exactly its group's rows)
+                    // plus the in-register rotated suffix — the same
+                    // segment layout as the single engine, at local width
+                    let views: Vec<BlockView> =
+                        sh.cache.seq_block_views(id, li).map_err(bad_seq)?.collect();
+                    let mut a = Mat::zeros(s, layout.d());
+                    let items: Vec<AttnItem> = (0..s)
+                        .map(|r| AttnItem {
+                            q_rot: q_rot.row(r),
+                            views: &views,
+                            cache_len: reused,
+                            tails: [
+                                KvSegment::rows(
+                                    &k_rot.as_slice()[..(r + 1) * e],
+                                    &v.as_slice()[..(r + 1) * e],
+                                    e,
+                                ),
+                                KvSegment::empty(),
+                            ],
+                            t: reused + r + 1,
+                            out_row: r,
+                        })
+                        .collect();
+                    paged_attn::attend_batch(layout, &items, &mut a);
+                    a
+                };
+                slot.kv.push((k_rot, v));
+                slot.a = a;
+                Ok(())
+            })?;
+            // join: concatenate per-shard attention outputs into their
+            // fixed column ranges (exact — no arithmetic), then run the
+            // post-projection + FFN full-width on the host
+            let mut a = Mat::zeros(s, d);
+            for (sh, slot) in shards.iter().zip(&slots) {
+                let (c0, c1) = (sh.w.h0 * hd, sh.w.h1 * hd);
+                for r in 0..s {
+                    a.row_mut(r)[c0..c1].copy_from_slice(slot.a.row(r));
+                }
+            }
+            *allreduce_calls += 2;
+            *allreduce_bytes += 2 * (s * d * 4) as u64;
+            let b = &full.blocks[li];
+            x = match cfg.layout {
+                BlockLayout::Serial => {
+                    let p = Weight::proj(&a, &b.p);
+                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                }
+                BlockLayout::Parallel => {
+                    let post = if b.c.is_some() { &b.c } else { &b.p };
+                    let attn_out = Weight::proj(&a, post);
+                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                }
+            };
+        }
+        let paged = (s * reused * full.blocks.len()) as u64;
+        run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+            for r in 0..s {
+                for (li, (k_rot, v)) in slot.kv.iter().enumerate() {
+                    sh.cache
+                        .append(id, li, k_rot.row(r), v.row(r))
+                        .map_err(capacity)?;
+                }
+                sh.cache.advance(id).map_err(bad_seq)?;
+            }
+            if paged > 0 {
+                sh.cache.note_paged_attn(paged);
+            }
+            Ok(())
+        })?;
+        let logits = full.unembed.matmul(&x.row_slice(s - 1, s));
+        Ok(logits.into_vec())
+    }
+}
+
+impl Engine for ShardedEngine {
+    fn cfg(&self) -> &ModelConfig {
+        &self.full.cfg
+    }
+
+    fn describe(&self) -> String {
+        let dtype = if self.full.is_quantized() { "/int8" } else { "" };
+        format!(
+            "sharded[tp{}]/{}{dtype}",
+            self.shards.len(),
+            self.full.variant.name()
+        )
+    }
+
+    fn weight_bytes(&self) -> (u64, u64) {
+        // stored = the logical model; resident additionally counts the
+        // per-shard Q/K/V slices (each column lives twice: full + shard)
+        let stored = self.full.stored_bytes();
+        let mut resident = self.full.resident_bytes();
+        for sh in &self.shards {
+            for b in &sh.w.blocks {
+                for w in [&b.q, &b.k, &b.v].into_iter().flatten() {
+                    resident += w.resident_bytes();
+                }
+            }
+        }
+        (stored, resident)
+    }
+
+    fn can_admit(&self, prompt_len: usize) -> bool {
+        self.shards[0].cache.can_admit(prompt_len)
+    }
+
+    fn can_admit_tokens(&self, tokens: &[u32]) -> bool {
+        self.shards[0].cache.can_admit_tokens(tokens)
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn shard_stats(&self) -> Option<ShardStats> {
+        Some(ShardStats {
+            workers: self.shards.len(),
+            mode: "tp",
+            allreduce_calls: self.allreduce_calls,
+            allreduce_bytes: self.allreduce_bytes,
+        })
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SeqId, Vec<f32>), EngineError> {
+        if tokens.is_empty() {
+            return Err(EngineError::BadSequence("empty prompt".into()));
+        }
+        let (id, ()) =
+            alloc_lockstep(&mut self.shards, |c| c.alloc_seq(tokens.len()).map(|id| (id, ())))?;
+        let logits = self.prefill_into(id, tokens, 0)?;
+        self.positions.insert(id, tokens.len());
+        Ok((id, logits))
+    }
+
+    fn prefill_shared(&mut self, tokens: &[u32]) -> Result<(SeqId, Vec<f32>, usize), EngineError> {
+        if tokens.is_empty() {
+            return Err(EngineError::BadSequence("empty prompt".into()));
+        }
+        let (id, reused) = alloc_lockstep(&mut self.shards, |c| c.alloc_seq_shared(tokens))?;
+        let logits = self.prefill_into(id, tokens, reused)?;
+        self.positions.insert(id, tokens.len());
+        Ok((id, logits, reused))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_begin(&mut self, tokens: &[u32]) -> Result<(SeqId, usize), EngineError> {
+        if tokens.is_empty() {
+            return Err(EngineError::BadSequence("empty prompt".into()));
+        }
+        let (id, reused) = alloc_lockstep(&mut self.shards, |c| c.alloc_seq_prefix(tokens))?;
+        self.positions.insert(id, reused);
+        self.chunking.insert(
+            id,
+            ChunkState {
+                prompt: tokens.to_vec(),
+                reused,
+                filled: reused,
+                registered: reused,
+            },
+        );
+        Ok((id, reused))
+    }
+
+    fn prefill_pending_prefix(&self, tokens: &[u32]) -> bool {
+        let cache = &self.shards[0].cache;
+        if !cache.prefix_sharing_enabled() {
+            return false;
+        }
+        let bt = cache.block_tokens();
+        if tokens.len() <= bt {
+            return false;
+        }
+        self.chunking.values().any(|st| {
+            let common = tokens
+                .iter()
+                .zip(&st.prompt)
+                .take_while(|(a, b)| a == b)
+                .count();
+            let share_cap = (common.min(tokens.len() - 1) / bt) * bt;
+            share_cap > st.registered
+        })
+    }
+
+    fn decode_batch(&mut self, inputs: &[DecodeInput]) -> Result<Vec<Vec<f32>>, EngineError> {
+        Ok(self.step_batch(inputs, &[])?.decode_logits)
+    }
+
+    /// The fused step, sharded: per layer, Stage A (projections, RoPE,
+    /// decode-row cache writes, attention) fans out per shard at local
+    /// width; the host joins the attention columns and runs the
+    /// post-projection + FFN full-width. Row semantics (decode rows,
+    /// leading chunks, continuation chunks) mirror the cpu engine's f32
+    /// path line for line — see its `step_batch` docs.
+    fn step_batch(
+        &mut self,
+        decodes: &[DecodeInput],
+        chunks: &[ChunkInput],
+    ) -> Result<StepOutput, EngineError> {
+        if decodes.is_empty() && chunks.is_empty() {
+            return Ok(StepOutput::default());
+        }
+        let cfg = self.full.cfg.clone();
+        let hd = cfg.head_dim();
+        let d = cfg.dim;
+
+        // ---- validate + reserve up front on shard 0 (all shards are in
+        // lockstep, so one pool's answer is every pool's answer) ----------
+        let nd = decodes.len();
+        let mut dec_pos = Vec::with_capacity(nd);
+        let mut fresh_needed = 0usize;
+        for i in decodes {
+            if self.chunking.contains_key(&i.seq) {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?} is still prefilling",
+                    i.seq
+                )));
+            }
+            let p = *self
+                .positions
+                .get(&i.seq)
+                .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", i.seq)))?;
+            if p >= cfg.max_seq_len {
+                return Err(EngineError::CapacityExhausted(format!(
+                    "{:?} at max_seq_len {}",
+                    i.seq, cfg.max_seq_len
+                )));
+            }
+            fresh_needed += self.shards[0].cache.blocks_to_grow(i.seq, 1);
+            dec_pos.push(p);
+        }
+        let mut chunk_meta = Vec::with_capacity(chunks.len());
+        for (ci, c) in chunks.iter().enumerate() {
+            if chunks[..ci].iter().any(|o| o.seq == c.seq) {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?} appears twice in one fused step",
+                    c.seq
+                )));
+            }
+            let st = self.chunking.get(&c.seq).ok_or_else(|| {
+                EngineError::BadSequence(format!("{:?} has no chunked prefill in flight", c.seq))
+            })?;
+            if c.tokens.is_empty() {
+                return Err(EngineError::BadSequence("empty prefill chunk".into()));
+            }
+            if st.filled + c.tokens.len() > st.prompt.len() {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?}: chunk overruns the prompt",
+                    c.seq
+                )));
+            }
+            if c.tokens[..] != st.prompt[st.filled..st.filled + c.tokens.len()] {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?}: chunk tokens do not continue the admitted prompt",
+                    c.seq
+                )));
+            }
+            chunk_meta.push((st.filled, st.reused));
+        }
+        if fresh_needed > self.shards[0].cache.free_blocks() {
+            return Err(EngineError::CapacityExhausted(format!(
+                "fused step needs {fresh_needed} blocks, {} free",
+                self.shards[0].cache.free_blocks()
+            )));
+        }
+
+        // ---- flattened row layout: decode rows first, then chunk rows ---
+        let mut toks: Vec<u32> = decodes.iter().map(|i| i.token).collect();
+        let mut chunk_row0 = Vec::with_capacity(chunks.len());
+        for c in chunks {
+            chunk_row0.push(toks.len());
+            toks.extend_from_slice(&c.tokens);
+        }
+        let total_rows = toks.len();
+        let mut rowpos: Vec<usize> = dec_pos.clone();
+        for (c, &(start, _)) in chunks.iter().zip(&chunk_meta) {
+            rowpos.extend((0..c.tokens.len()).map(|j| start + j));
+        }
+
+        let Self {
+            full,
+            shards,
+            fan,
+            compute,
+            allreduce_calls,
+            allreduce_bytes,
+            chunking,
+            positions,
+        } = self;
+        let mut x = full.embed_tokens(&toks);
+        let n_layers = full.blocks.len();
+        // per-layer history reads are position counts, identical on every
+        // shard (each pool multiplies by its own row width internally)
+        let layer_paged: u64 = dec_pos.iter().map(|&p| p as u64).sum::<u64>()
+            + chunks
+                .iter()
+                .zip(&chunk_meta)
+                .map(|(c, &(cs, _))| (c.tokens.len() * cs) as u64)
+                .sum::<u64>();
+        let mut slots: Vec<Slot> = (0..shards.len()).map(|_| Slot::new()).collect();
+        for li in 0..n_layers {
+            let xr = &x;
+            let dec_pos = &dec_pos;
+            let chunk_meta = &chunk_meta;
+            let chunk_row0 = &chunk_row0;
+            run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+                let sw = &sh.w;
+                let layout = sw.layout;
+                let e = layout.e();
+                let b = &sw.blocks[li];
+                let mut q = proj_slice(xr, &b.q, sw.h0 * hd, sw.h1 * hd);
+                let mut k = proj_slice(xr, &b.k, sw.g0 * hd, sw.g1 * hd);
+                let v = proj_slice(xr, &b.v, sw.g0 * hd, sw.g1 * hd);
+                for (r, &p) in rowpos.iter().enumerate() {
+                    for h in 0..layout.n_heads {
+                        rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+                    }
+                    for g in 0..layout.n_kv_heads {
+                        rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                    }
+                }
+                // decode rows write first (CoW/growth against their own
+                // tables; chunk sequences get no writes inside the layer
+                // loop, so the views below stay stable)
+                for (r, inp) in decodes.iter().enumerate() {
+                    sh.cache
+                        .append(inp.seq, li, k.row(r), v.row(r))
+                        .map_err(capacity)?;
+                }
+                let mut views: Vec<BlockView> = Vec::new();
+                let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nd + chunks.len());
+                for inp in decodes {
+                    let start = views.len();
+                    views.extend(sh.cache.seq_block_views(inp.seq, li).map_err(bad_seq)?);
+                    ranges.push((start, views.len()));
+                }
+                for (c, &(cstart, _)) in chunks.iter().zip(chunk_meta.iter()) {
+                    let start = views.len();
+                    views.extend(
+                        sh.cache
+                            .seq_block_views_upto(c.seq, li, cstart)
+                            .map_err(bad_seq)?,
+                    );
+                    ranges.push((start, views.len()));
+                }
+                let mut items: Vec<AttnItem> = Vec::with_capacity(total_rows);
+                items.extend(decodes.iter().enumerate().map(|(r, _)| AttnItem {
+                    q_rot: q.row(r),
+                    views: &views[ranges[r].0..ranges[r].1],
+                    cache_len: dec_pos[r],
+                    tails: [KvSegment::rows(k.row(r), v.row(r), e), KvSegment::empty()],
+                    t: dec_pos[r] + 1,
+                    out_row: r,
+                }));
+                for (ci, c) in chunks.iter().enumerate() {
+                    let (cstart, _) = chunk_meta[ci];
+                    if cstart == 0 {
+                        continue; // leading chunk: causal kernel, below
+                    }
+                    let r0 = chunk_row0[ci];
+                    let s = c.tokens.len();
+                    let range = ranges[nd + ci];
+                    let k_chunk = &k.as_slice()[r0 * e..(r0 + s) * e];
+                    let v_chunk = &v.as_slice()[r0 * e..(r0 + s) * e];
+                    items.extend((0..s).map(|j| AttnItem {
+                        q_rot: q.row(r0 + j),
+                        views: &views[range.0..range.1],
+                        cache_len: cstart,
+                        tails: [
+                            KvSegment::rows(&k_chunk[..(j + 1) * e], &v_chunk[..(j + 1) * e], e),
+                            KvSegment::empty(),
+                        ],
+                        t: cstart + j + 1,
+                        out_row: r0 + j,
+                    }));
+                }
+                let mut a = Mat::zeros(total_rows, layout.d());
+                paged_attn::attend_batch(layout, &items, &mut a);
+                drop(items);
+                drop(views);
+                for (ci, c) in chunks.iter().enumerate() {
+                    if chunk_meta[ci].0 != 0 {
+                        continue;
+                    }
+                    let r0 = chunk_row0[ci];
+                    let s = c.tokens.len();
+                    let a_sub = causal_attention_rot(
+                        &q.row_slice(r0, r0 + s),
+                        &k.row_slice(r0, r0 + s),
+                        &v.row_slice(r0, r0 + s),
+                        layout,
+                    );
+                    for j in 0..s {
+                        a.row_mut(r0 + j).copy_from_slice(a_sub.row(j));
+                    }
+                }
+                if !chunks.is_empty() {
+                    slot.kv.push((k.row_slice(nd, total_rows), v.row_slice(nd, total_rows)));
+                }
+                slot.a = a;
+                Ok(())
+            })?;
+            let mut a = Mat::zeros(total_rows, d);
+            for (sh, slot) in shards.iter().zip(&slots) {
+                let (c0, c1) = (sh.w.h0 * hd, sh.w.h1 * hd);
+                for r in 0..total_rows {
+                    a.row_mut(r)[c0..c1].copy_from_slice(slot.a.row(r));
+                }
+            }
+            *allreduce_calls += 2;
+            *allreduce_bytes += 2 * (total_rows * d * 4) as u64;
+            let b = &full.blocks[li];
+            x = match cfg.layout {
+                BlockLayout::Serial => {
+                    let p = Weight::proj(&a, &b.p);
+                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                }
+                BlockLayout::Parallel => {
+                    let post = if b.c.is_some() { &b.c } else { &b.p };
+                    let attn_out = Weight::proj(&a, post);
+                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                }
+            };
+        }
+
+        // ---- commit: chunk-row cache writes + advances fan out per shard;
+        // each shard registers finished prompt blocks in its own prefix
+        // index (same chain hashes — they are token hashes) --------------
+        let bt = shards[0].cache.block_tokens();
+        let reg_plan: Vec<(usize, usize)> = chunks
+            .iter()
+            .zip(&chunk_meta)
+            .map(|(c, &(cstart, _))| {
+                let st = &chunking[&c.seq];
+                (st.registered, cstart + c.tokens.len())
+            })
+            .collect();
+        let prompts: Vec<&[u32]> = chunks
+            .iter()
+            .map(|c| chunking[&c.seq].prompt.as_slice())
+            .collect();
+        let step_paged = layer_paged * n_layers as u64;
+        let commit = run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+            for (ci, c) in chunks.iter().enumerate() {
+                let r0 = chunk_row0[ci] - nd;
+                let s = c.tokens.len();
+                let (cstart, _) = chunk_meta[ci];
+                for j in 0..s {
+                    for (li, (lk, lv)) in slot.kv.iter().enumerate() {
+                        if let Err(err) =
+                            sh.cache.append(c.seq, li, lk.row(r0 + j), lv.row(r0 + j))
+                        {
+                            let _ = sh.cache.truncate_seq(c.seq, cstart);
+                            return Err(capacity(err));
+                        }
+                    }
+                    sh.cache.advance(c.seq).map_err(bad_seq)?;
+                }
+                let (mut reg, filled_after) = reg_plan[ci];
+                while reg + bt <= filled_after {
+                    sh.cache
+                        .register_prompt_block(c.seq, &prompts[ci][reg..reg + bt])
+                        .map_err(bad_seq)?;
+                    reg += bt;
+                }
+            }
+            for inp in decodes {
+                sh.cache.advance(inp.seq).map_err(bad_seq)?;
+            }
+            if step_paged > 0 {
+                sh.cache.note_paged_attn(step_paged);
+            }
+            Ok(())
+        });
+        if let Err(e) = commit {
+            // unreachable in practice (all blocks were reserved up front);
+            // restore the pre-step lengths on EVERY shard so lockstep holds
+            for (ci, c) in chunks.iter().enumerate() {
+                let (cstart, _) = chunk_meta[ci];
+                for sh in shards.iter_mut() {
+                    let _ = sh.cache.truncate_seq(c.seq, cstart);
+                }
+            }
+            for (i, inp) in decodes.iter().enumerate() {
+                for sh in shards.iter_mut() {
+                    let _ = sh.cache.truncate_seq(inp.seq, dec_pos[i]);
+                }
+            }
+            return Err(e);
+        }
+        let mut chunk_done = vec![false; chunks.len()];
+        for (ci, c) in chunks.iter().enumerate() {
+            let st = chunking.get_mut(&c.seq).expect("validated above");
+            st.filled += c.tokens.len();
+            while st.registered + bt <= st.filled {
+                st.registered += bt;
+            }
+            *positions.get_mut(&c.seq).expect("live") = st.filled;
+            if st.filled == st.prompt.len() {
+                chunk_done[ci] = true;
+                chunking.remove(&c.seq);
+            }
+        }
+        for inp in decodes {
+            *positions.get_mut(&inp.seq).unwrap() += 1;
+        }
+
+        // ---- selective unembed, full-width on the host ------------------
+        let mut sel: Vec<usize> = (0..nd).collect();
+        for (ci, c) in chunks.iter().enumerate() {
+            if chunk_done[ci] {
+                sel.push(chunk_row0[ci] + c.tokens.len() - 1);
+            }
+        }
+        if sel.is_empty() {
+            return Ok(StepOutput {
+                decode_logits: Vec::new(),
+                chunk_logits: vec![None; chunks.len()],
+            });
+        }
+        let mut sub = Mat::zeros(sel.len(), d);
+        for (i, &r) in sel.iter().enumerate() {
+            sub.row_mut(i).copy_from_slice(x.row(r));
+        }
+        let logits = full.unembed.matmul(&sub);
+        let decode_logits = (0..nd).map(|r| logits.row(r).to_vec()).collect();
+        let mut chunk_logits = Vec::with_capacity(chunks.len());
+        let mut next = nd;
+        for done in &chunk_done {
+            if *done {
+                chunk_logits.push(Some(logits.row(next).to_vec()));
+                next += 1;
+            } else {
+                chunk_logits.push(None);
+            }
+        }
+        Ok(StepOutput {
+            decode_logits,
+            chunk_logits,
+        })
+    }
+
+    /// Widened speculative step, sharded: the per-layer wave loop (draft
+    /// position `j+1` must read position `j`'s K/V) runs entirely INSIDE
+    /// each shard's job — shards only synchronize once per layer at the
+    /// attention join, not once per wave. f32 pools store verbatim, so the
+    /// cpu engine's per-row quantize-roundtrip is the identity here and is
+    /// skipped.
+    fn verify_batch(&mut self, inputs: &[VerifyInput]) -> Result<Vec<Vec<Vec<f32>>>, EngineError> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let cfg = self.full.cfg.clone();
+        let hd = cfg.head_dim();
+        let d = cfg.dim;
+        let mut base = Vec::with_capacity(inputs.len());
+        let mut fresh_needed = 0usize;
+        for vi in inputs {
+            if vi.tokens.is_empty() {
+                return Err(EngineError::BadSequence("empty verify input".into()));
+            }
+            if self.chunking.contains_key(&vi.seq) {
+                return Err(EngineError::BadSequence(format!(
+                    "{:?} is still prefilling",
+                    vi.seq
+                )));
+            }
+            let p = *self
+                .positions
+                .get(&vi.seq)
+                .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", vi.seq)))?;
+            if p + vi.tokens.len() > cfg.max_seq_len {
+                return Err(EngineError::CapacityExhausted(format!(
+                    "{:?} would exceed max_seq_len {}",
+                    vi.seq, cfg.max_seq_len
+                )));
+            }
+            fresh_needed += self.shards[0].cache.blocks_to_grow(vi.seq, vi.tokens.len());
+            base.push(p);
+        }
+        if fresh_needed > self.shards[0].cache.free_blocks() {
+            return Err(EngineError::CapacityExhausted(format!(
+                "verify step needs {fresh_needed} blocks, {} free",
+                self.shards[0].cache.free_blocks()
+            )));
+        }
+        let total_rows: usize = inputs.iter().map(|i| i.tokens.len()).sum();
+        let toks: Vec<u32> = inputs.iter().flat_map(|i| i.tokens.iter().copied()).collect();
+        let mut rowpos = Vec::with_capacity(total_rows);
+        let mut row0 = Vec::with_capacity(inputs.len());
+        for (vi, &p) in inputs.iter().zip(&base) {
+            row0.push(rowpos.len());
+            for j in 0..vi.tokens.len() {
+                rowpos.push(p + j);
+            }
+        }
+        let max_s = inputs.iter().map(|i| i.tokens.len()).max().unwrap_or(0);
+        let Self {
+            full,
+            shards,
+            fan,
+            compute,
+            allreduce_calls,
+            allreduce_bytes,
+            positions,
+            ..
+        } = self;
+        let mut x = full.embed_tokens(&toks);
+        let n_layers = full.blocks.len();
+        let mut slots: Vec<Slot> = (0..shards.len())
+            .map(|_| {
+                let mut s = Slot::new();
+                s.tails = inputs.iter().map(|_| (Vec::new(), Vec::new())).collect();
+                s
+            })
+            .collect();
+        for li in 0..n_layers {
+            let xr = &x;
+            let base = &base;
+            let row0 = &row0;
+            run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+                let sw = &sh.w;
+                let layout = sw.layout;
+                let e = layout.e();
+                let b = &sw.blocks[li];
+                let mut q = proj_slice(xr, &b.q, sw.h0 * hd, sw.h1 * hd);
+                let mut k = proj_slice(xr, &b.k, sw.g0 * hd, sw.g1 * hd);
+                let v = proj_slice(xr, &b.v, sw.g0 * hd, sw.g1 * hd);
+                for (r, &p) in rowpos.iter().enumerate() {
+                    for h in 0..layout.n_heads {
+                        rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+                    }
+                    for g in 0..layout.n_kv_heads {
+                        rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                    }
+                }
+                let mut views: Vec<BlockView> = Vec::new();
+                let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(inputs.len());
+                for vi in inputs {
+                    let start = views.len();
+                    views.extend(sh.cache.seq_block_views(vi.seq, li).map_err(bad_seq)?);
+                    ranges.push((start, views.len()));
+                }
+                for (tk, tv) in slot.tails.iter_mut() {
+                    tk.clear();
+                    tv.clear();
+                }
+                let mut a = Mat::zeros(total_rows, layout.d());
+                for j in 0..max_s {
+                    let tails = &slot.tails;
+                    let items: Vec<AttnItem> = inputs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, vi)| vi.tokens.len() > j)
+                        .map(|(i, _)| {
+                            let r = row0[i] + j;
+                            AttnItem {
+                                q_rot: q.row(r),
+                                views: &views[ranges[i].0..ranges[i].1],
+                                cache_len: base[i],
+                                tails: [
+                                    KvSegment::rows(&tails[i].0, &tails[i].1, e),
+                                    KvSegment::rows(k.row(r), v.row(r), e),
+                                ],
+                                t: base[i] + j + 1,
+                                out_row: r,
+                            }
+                        })
+                        .collect();
+                    paged_attn::attend_batch(layout, &items, &mut a);
+                    drop(items);
+                    for (i, vi) in inputs.iter().enumerate() {
+                        if vi.tokens.len() <= j {
+                            continue;
+                        }
+                        let r = row0[i] + j;
+                        let (tk, tv) = &mut slot.tails[i];
+                        tk.extend_from_slice(k.row(r));
+                        tv.extend_from_slice(v.row(r));
+                    }
+                }
+                slot.kv.push((k, v));
+                slot.a = a;
+                Ok(())
+            })?;
+            let mut a = Mat::zeros(total_rows, d);
+            for (sh, slot) in shards.iter().zip(&slots) {
+                let (c0, c1) = (sh.w.h0 * hd, sh.w.h1 * hd);
+                for r in 0..total_rows {
+                    a.row_mut(r)[c0..c1].copy_from_slice(slot.a.row(r));
+                }
+            }
+            *allreduce_calls += 2;
+            *allreduce_bytes += 2 * (total_rows * d * 4) as u64;
+            let b = &full.blocks[li];
+            x = match cfg.layout {
+                BlockLayout::Serial => {
+                    let p = Weight::proj(&a, &b.p);
+                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                }
+                BlockLayout::Parallel => {
+                    let post = if b.c.is_some() { &b.c } else { &b.p };
+                    let attn_out = Weight::proj(&a, post);
+                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                }
+            };
+        }
+        let step_paged: u64 = inputs
+            .iter()
+            .zip(&base)
+            .map(|(vi, &p)| (vi.tokens.len() * p) as u64)
+            .sum::<u64>()
+            * n_layers as u64;
+        run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+            let mut r0 = 0usize;
+            for vi in inputs {
+                for j in 0..vi.tokens.len() {
+                    for (li, (k, v)) in slot.kv.iter().enumerate() {
+                        sh.cache
+                            .append(vi.seq, li, k.row(r0 + j), v.row(r0 + j))
+                            .map_err(capacity)?;
+                    }
+                    sh.cache.advance(vi.seq).map_err(bad_seq)?;
+                }
+                r0 += vi.tokens.len();
+            }
+            if step_paged > 0 {
+                sh.cache.note_paged_attn(step_paged);
+            }
+            Ok(())
+        })?;
+        for vi in inputs {
+            *positions.get_mut(&vi.seq).unwrap() += vi.tokens.len();
+        }
+        let logits = full.unembed.matmul(&x);
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut r0 = 0usize;
+        for vi in inputs {
+            let rows: Vec<Vec<f32>> = (r0..r0 + vi.tokens.len())
+                .map(|r| logits.row(r).to_vec())
+                .collect();
+            out.push(rows);
+            r0 += vi.tokens.len();
+        }
+        Ok(out)
+    }
+
+    fn truncate(&mut self, seq: SeqId, new_len: usize) -> Result<(), EngineError> {
+        for sh in self.shards.iter_mut() {
+            sh.cache
+                .truncate_seq(seq, new_len)
+                .map_err(|e| EngineError::BadSequence(e.to_string()))?;
+        }
+        *self
+            .positions
+            .get_mut(&seq)
+            .ok_or_else(|| EngineError::BadSequence(format!("{seq:?} not live")))? = new_len;
+        Ok(())
+    }
+
+    fn supports_rollback(&self) -> bool {
+        true
+    }
+
+    fn swap_out(&mut self, seq: SeqId) -> Result<(), EngineError> {
+        for (i, sh) in self.shards.iter_mut().enumerate() {
+            sh.cache.swap_out(seq).map(|_| ()).map_err(|e| {
+                if i == 0 {
+                    match e {
+                        CacheError::UnknownSeq(_) => EngineError::BadSequence(e.to_string()),
+                        _ => capacity(e),
+                    }
+                } else {
+                    // shard 0 spilled but this one refused — lockstep broke
+                    EngineError::Backend(format!("shard {i} diverged during swap-out: {e}"))
+                }
+            })?;
+        }
+        Ok(())
+    }
+
+    fn swap_in(&mut self, seq: SeqId) -> Result<(), EngineError> {
+        for (i, sh) in self.shards.iter_mut().enumerate() {
+            sh.cache.swap_in(seq).map(|_| ()).map_err(|e| {
+                if i == 0 {
+                    match e {
+                        CacheError::UnknownSeq(_) => EngineError::BadSequence(e.to_string()),
+                        _ => capacity(e),
+                    }
+                } else {
+                    EngineError::Backend(format!("shard {i} diverged during swap-in: {e}"))
+                }
+            })?;
+        }
+        Ok(())
+    }
+
+    fn can_swap_in(&self, seq: SeqId, headroom_blocks: usize) -> bool {
+        self.shards
+            .iter()
+            .all(|sh| sh.cache.can_swap_in(seq, headroom_blocks))
+    }
+
+    fn kv_snapshot(&self) -> Option<CacheSnapshot> {
+        // shard pools are identical except for width: report shard 0's
+        // block accounting at the FULL per-token width, and sum the
+        // byte-denominated traffic counters across shards
+        let mut s = self.shards[0].cache.snapshot();
+        s.bytes_per_token *= self.shards.len();
+        for sh in &self.shards[1..] {
+            let o = sh.cache.snapshot();
+            s.stats.paged_reads_bytes += o.stats.paged_reads_bytes;
+            s.stats.gather_bytes += o.stats.gather_bytes;
+            s.stats.gather_bytes_avoided += o.stats.gather_bytes_avoided;
+        }
+        Some(s)
+    }
+
+    fn release(&mut self, seq: SeqId) {
+        for sh in self.shards.iter_mut() {
+            let _ = sh.cache.free_seq(seq);
+        }
+        self.positions.remove(&seq);
+        self.chunking.remove(&seq);
+    }
+}

@@ -382,6 +382,28 @@ fn chain_hash(prev: u64, tokens: &[u32]) -> u64 {
     h
 }
 
+/// The chain hashes of every **shareable** full block of `tokens` — capped
+/// at `(len - 1) / block_tokens` blocks because the engine always recomputes
+/// the last prompt position, so the final partial (or exactly-final full)
+/// block never enters the prefix index. These are precisely the keys
+/// [`KvCache::alloc_seq_shared`] probes and `register_prompt_block`
+/// registers, exported so the data-parallel router can use them as a free
+/// affinity key: a prompt routed to the replica that registered its keys
+/// will prefix-hit on that replica's cache.
+pub fn prefix_chain_keys(tokens: &[u32], block_tokens: usize) -> Vec<u64> {
+    if block_tokens == 0 || tokens.is_empty() {
+        return Vec::new();
+    }
+    let cap = (tokens.len() - 1) / block_tokens;
+    let mut keys = Vec::with_capacity(cap);
+    let mut prev = 0u64;
+    for i in 0..cap {
+        prev = chain_hash(prev, &tokens[i * block_tokens..(i + 1) * block_tokens]);
+        keys.push(prev);
+    }
+    keys
+}
+
 impl KvCache {
     /// Build a pool with a total budget of `budget_bytes` and default
     /// lifecycle options (prefix sharing on, spill bounded by pool size).
@@ -1353,6 +1375,32 @@ mod tests {
             }
             c.advance(id).unwrap();
         }
+    }
+
+    /// The exported router keys must be exactly the hashes the prefix index
+    /// probes: a prompt whose keys were registered by an earlier admission
+    /// reuses `keys.len() * block_tokens` positions on a warm cache.
+    #[test]
+    fn prefix_chain_keys_match_index_probe() {
+        let (cfg, mut c) = cache(256);
+        let prompt: Vec<u32> = (0..11).map(|i| (i * 7 + 1) % 250).collect();
+        let keys = prefix_chain_keys(&prompt, 4);
+        assert_eq!(keys.len(), 2, "11 tokens, bt=4: 2 shareable full blocks");
+        let (id, r0) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(r0, 0);
+        fill(&mut c, &cfg, id, 0, prompt.len(), 1.0);
+        let (_, reused) = c.alloc_seq_shared(&prompt).unwrap();
+        assert_eq!(reused, keys.len() * 4, "warm probe reuses exactly the keyed blocks");
+        // chained hashing is position-dependent: a different leading block
+        // changes every downstream key
+        let mut other = prompt.clone();
+        other[0] ^= 1;
+        let other_keys = prefix_chain_keys(&other, 4);
+        assert_ne!(keys[0], other_keys[0]);
+        assert_ne!(keys[1], other_keys[1]);
+        // degenerate shapes are empty, not panics
+        assert!(prefix_chain_keys(&[], 4).is_empty());
+        assert!(prefix_chain_keys(&[1, 2, 3, 4], 4).is_empty(), "last position never shares");
     }
 
     #[test]

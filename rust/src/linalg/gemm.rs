@@ -80,14 +80,15 @@ pub fn matmul_into_with(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat) {
     let out_ptr = AddrSendMut(out as *mut Mat);
     // Threading pays off only when there is enough arithmetic per row.
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
-    let n_threads = threadpool::global().n_threads();
+    let pool = threadpool::current();
+    let n_threads = pool.n_threads();
     if flops < 1.0e6 {
         gemm_rows(lvl, a, b, out, 0, m);
         return;
     }
     if m < n_threads && n >= 2 * n_threads {
         // skinny path: split output columns (§Perf L3 iteration 4)
-        threadpool::global().scope_chunks(n, 64, move |c0, c1| {
+        pool.scope_chunks(n, 64, move |c0, c1| {
             let a = unsafe { &*a_ptr.get() };
             let b = unsafe { &*b_ptr.get() };
             let out = unsafe { &mut *out_ptr.get() };
@@ -95,7 +96,7 @@ pub fn matmul_into_with(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat) {
         });
         return;
     }
-    threadpool::global().scope_chunks(m, MC.min(8), move |r0, r1| {
+    pool.scope_chunks(m, MC.min(8), move |r0, r1| {
         // NB: call methods on the wrappers (not field access) so edition-2021
         // disjoint capture moves the Send+Sync wrapper, not the raw pointer.
         let a = unsafe { &*a_ptr.get() };
@@ -229,14 +230,15 @@ pub fn matmul_transb_with(lvl: SimdLevel, a: &Mat, b: &Mat) -> Mat {
         return out;
     }
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
-    if flops < 1.0e6 || threadpool::global().n_threads() == 1 {
+    let pool = threadpool::current();
+    if flops < 1.0e6 || pool.n_threads() == 1 {
         transb_rows(lvl, a, b, &mut out, 0, m);
         return out;
     }
     let a_ptr = AddrSend(a as *const Mat);
     let b_ptr = AddrSend(b as *const Mat);
     let out_ptr = AddrSendMut(&mut out as *mut Mat);
-    threadpool::global().scope_chunks(m, 4, move |r0, r1| {
+    pool.scope_chunks(m, 4, move |r0, r1| {
         let a = unsafe { &*a_ptr.get() };
         let b = unsafe { &*b_ptr.get() };
         let out = unsafe { &mut *out_ptr.get() };

@@ -57,7 +57,7 @@ pub fn qmatmul_with(lvl: SimdLevel, x: &Mat, w: &QMat) -> Mat {
     }
     let out_ptr = AddrSendMut(&mut out as *mut Mat);
     let xq_ref = &xq;
-    threadpool::global().scope_chunks(n, 32, move |c0, c1| {
+    threadpool::current().scope_chunks(n, 32, move |c0, c1| {
         // SAFETY: chunks write disjoint column ranges of `out`;
         // scope_chunks joins before this function returns.
         let out = unsafe { &mut *out_ptr.get() };

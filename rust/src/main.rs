@@ -53,6 +53,18 @@ fn cli() -> Command {
                     "0",
                     "self-speculative decode: int8 draft proposes k tokens/step (CPU engine)",
                 )
+                .opt_default(
+                    "workers",
+                    "1",
+                    "engines behind the coordinator (CPU engine; see --parallel)",
+                )
+                .opt_default(
+                    "parallel",
+                    "tp",
+                    "multi-engine mode for --workers N: tp = tensor-parallel KV-head-group \
+                     sharding (bit-identical output), dp = replicated engines behind a \
+                     prefix-cache-aware router",
+                )
                 .opt_default("max-conns", "1024", "connection ceiling; excess accepts refused")
                 .opt_default(
                     "rate-limit",
@@ -233,6 +245,33 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
     if spec_k > 0 && args.get("artifacts").is_some() {
         return Err("--speculate requires the CPU engine (drop --artifacts)".into());
     }
+    let workers: usize = args.num_or("workers", 1)?;
+    if workers == 0 {
+        return Err("--workers must be >= 1".into());
+    }
+    let parallel = args.get_or("parallel", "tp");
+    if !matches!(parallel, "tp" | "dp") {
+        return Err(format!("bad --parallel '{parallel}' (expected tp|dp)").into());
+    }
+    if workers > 1 {
+        if args.get("artifacts").is_some() {
+            return Err("--workers > 1 requires the CPU engine (drop --artifacts)".into());
+        }
+        if parallel == "tp" && args.flag("quantize-kv") {
+            return Err(
+                "tensor-parallel sharding needs an f32 KV pool; drop --quantize-kv \
+                 or use --parallel dp"
+                    .into(),
+            );
+        }
+        if parallel == "dp" && spec_k > 0 {
+            return Err(
+                "--parallel dp does not compose with --speculate (each replica would \
+                 need its own draft); use --parallel tp"
+                    .into(),
+            );
+        }
+    }
     let w = apply_quantize(args, load_or_init(args)?)?;
     if spec_k > 0 && w.is_quantized() {
         return Err(
@@ -266,7 +305,46 @@ fn cmd_serve(args: &skipless::util::cli::Args) -> Result<(), AnyError> {
             quantized: args.flag("quantize-kv"),
             ..Default::default()
         };
-        if spec_k > 0 {
+        if workers > 1 && parallel == "dp" {
+            // replicated engines: the budget splits evenly; the router keeps
+            // repeated prompts on the replica whose cache already has them
+            let per_budget = (cache_mb << 20) / workers;
+            skipless::log_info!(
+                "data-parallel: {workers} replicas, {} MiB KV budget each",
+                per_budget >> 20
+            );
+            Coordinator::spawn_replicated(
+                move |_| CpuEngine::with_cache_opts(w.clone(), 16, per_budget, opts),
+                workers,
+                16,
+                sched,
+            )
+        } else if workers > 1 {
+            // tensor-parallel: one engine, weights sharded by KV-head group
+            // — output stays bit-identical to single-engine serving
+            let dw = (spec_k > 0).then(|| skipless::model::quantize(&w));
+            let target = skipless::coordinator::ShardedEngine::with_cache_opts(
+                w,
+                workers,
+                16,
+                cache_mb << 20,
+                opts,
+            )
+            .map_err(|e| format!("--workers {workers} (tensor-parallel): {e}"))?;
+            skipless::log_info!("tensor-parallel: {workers} shard workers");
+            match dw {
+                Some(dw) => {
+                    let draft_opts = skipless::kvcache::CacheOpts {
+                        prefix_sharing: true,
+                        quantized: true,
+                        ..Default::default()
+                    };
+                    let draft = CpuEngine::with_cache_opts(dw, 16, cache_mb << 20, draft_opts);
+                    Coordinator::spawn_speculative(target, draft, sched)
+                }
+                None => Coordinator::spawn(target, sched),
+            }
+        } else if spec_k > 0 {
             // self-speculation: the int8 copy drafts, the f32 target
             // verifies — token-identical greedy output (DESIGN.md
             // §Speculative). The draft gets its own u8-KV pool: draft

@@ -189,6 +189,19 @@ pub struct Metrics {
     pub spec_fallbacks: AtomicU64,
     /// Requests whose drafting was turned off for losing (adaptive policy).
     pub spec_disabled: AtomicU64,
+    // -- multi-engine parallelism ----------------------------------------
+    /// Worker engines behind the coordinator (gauge; 1 when unsharded).
+    pub shard_workers: AtomicU64,
+    /// Parallelism mode (gauge): 0 = off, 1 = tensor-parallel, 2 =
+    /// data-parallel (rendered as a string in the JSON).
+    pub shard_mode: AtomicU64,
+    /// TP fan-in/fan-out synchronizations (2 per layer per step).
+    pub shard_allreduce_calls: AtomicU64,
+    /// Activation bytes crossing the shard boundary in those calls.
+    pub shard_allreduce_bytes: AtomicU64,
+    /// DP router submits placed on a replica that already holds the
+    /// request's longest cached prompt prefix.
+    pub shard_router_prefix_hits: AtomicU64,
     // -- serving front-end (reactor) -------------------------------------
     /// Currently-open client connections (gauge).
     pub conns_open: AtomicU64,
@@ -356,6 +369,23 @@ impl Metrics {
                 ]),
             ),
             (
+                "shard",
+                Json::obj(vec![
+                    ("workers", g(&self.shard_workers)),
+                    (
+                        "mode",
+                        Json::str(match self.shard_mode.load(Ordering::Relaxed) {
+                            1 => "tp",
+                            2 => "dp",
+                            _ => "off",
+                        }),
+                    ),
+                    ("allreduce_calls", g(&self.shard_allreduce_calls)),
+                    ("allreduce_bytes", g(&self.shard_allreduce_bytes)),
+                    ("router_prefix_hits", g(&self.shard_router_prefix_hits)),
+                ]),
+            ),
+            (
                 "server",
                 Json::obj(vec![
                     ("conns_open", g(&self.conns_open)),
@@ -477,6 +507,31 @@ mod tests {
         assert_eq!(a.get("paged_reads_bytes").unwrap().as_u64(), Some(4096));
         assert_eq!(a.get("gather_bytes_avoided").unwrap().as_u64(), Some(8192));
         assert_eq!(a.get("gather_calls").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn shard_gauges_in_json() {
+        let m = Metrics::new();
+        let j = m.to_json();
+        let s = j.get("shard").unwrap();
+        assert_eq!(s.get("workers").unwrap().as_u64(), Some(0));
+        assert_eq!(s.get("mode").unwrap().as_str(), Some("off"));
+        Metrics::set(&m.shard_workers, 4);
+        Metrics::set(&m.shard_mode, 1);
+        Metrics::add(&m.shard_allreduce_calls, 12);
+        Metrics::add(&m.shard_allreduce_bytes, 4096);
+        let j = m.to_json();
+        let s = j.get("shard").unwrap();
+        assert_eq!(s.get("workers").unwrap().as_u64(), Some(4));
+        assert_eq!(s.get("mode").unwrap().as_str(), Some("tp"));
+        assert_eq!(s.get("allreduce_calls").unwrap().as_u64(), Some(12));
+        assert_eq!(s.get("allreduce_bytes").unwrap().as_u64(), Some(4096));
+        Metrics::set(&m.shard_mode, 2);
+        Metrics::inc(&m.shard_router_prefix_hits);
+        let j = m.to_json();
+        let s = j.get("shard").unwrap();
+        assert_eq!(s.get("mode").unwrap().as_str(), Some("dp"));
+        assert_eq!(s.get("router_prefix_hits").unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -22,10 +22,12 @@ pub mod paged_attn;
 pub mod quant;
 pub mod residual;
 pub mod rope;
+pub mod shard;
 pub mod weights_io;
 
 pub use forward::{decode_step, greedy_generate, prefill, DecodeState};
 pub use quant::quantize;
+pub use shard::{shard_weights, ShardWeights};
 
 use crate::config::{BlockLayout, FfnKind, ModelConfig, Variant};
 use crate::linalg;

@@ -256,7 +256,8 @@ pub fn attend_batch(layout: HeadLayout, items: &[AttnItem<'_>], out: &mut Mat) {
     let n_heads = layout.n_heads;
     let grid = items.len() * n_heads;
     let work: usize = items.iter().map(|it| it.t).sum::<usize>() * n_heads * hd;
-    if grid == 1 || work < (1 << 14) || threadpool::global().n_threads() == 1 {
+    let pool = threadpool::current();
+    if grid == 1 || work < (1 << 14) || pool.n_threads() == 1 {
         SCORES.with(|s| {
             let scores = &mut *s.borrow_mut();
             for it in items {
@@ -268,7 +269,7 @@ pub fn attend_batch(layout: HeadLayout, items: &[AttnItem<'_>], out: &mut Mat) {
     }
     let lvl = simd::level();
     let out_ptr = AddrSendMut(out as *mut Mat);
-    threadpool::global().scope_chunks(grid, 1, move |g0, g1| {
+    pool.scope_chunks(grid, 1, move |g0, g1| {
         // SAFETY: each grid cell owns the disjoint output slice
         // (out_row, h*hd..(h+1)*hd); items have distinct out_rows and the
         // pool joins before attend_batch returns (gemm's AddrSendMut rules).

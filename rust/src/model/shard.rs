@@ -1,0 +1,230 @@
+//! KV-head-group weight sharding for the tensor-parallel engine.
+//!
+//! The paper's GQA/MQA-compatible variants organize attention around KV-head
+//! groups, so a head-group slice is a self-contained unit: shard `i` owns
+//! query heads `[h0, h1)` and KV heads `[g0, g1)`, i.e. the **output
+//! columns** `[h0·hd, h1·hd)` of Q and `[g0·hd, g1·hd)` of K/V. Column
+//! slicing is bit-exact: each output element of a GEMM accumulates over the
+//! full `k` extent independently of every other column (the kernels' fixed
+//! per-element accumulation order — see `linalg::gemm` — never mixes
+//! columns), so `proj(x, W).col_slice(c0, c1) == proj(x, W[:, c0..c1])`
+//! byte for byte. RoPE rotates per `(head, position)` and attention reads
+//! only its own head's Q and its KV group's K/V, so everything up to the
+//! attention output is per-head independent. The joins (attention-output
+//! concatenation, then the full-width FFN) happen in
+//! [`crate::coordinator::sharded`].
+//!
+//! Sharding composes after [`crate::surgery::transform`] and
+//! [`crate::model::quantize`]: an eliminated matrix (`None`) stays `None`
+//! (the engine column-slices the identity, i.e. the block input itself),
+//! and an `Int8` weight slices along its transposed storage rows — output
+//! channels are [`QMat`] rows with one scale each, so a head-group slice
+//! carries exactly its own codes and scales, bit-identical to the full
+//! matrix's columns.
+
+use crate::config::ModelConfig;
+use crate::model::attention::HeadLayout;
+use crate::model::{ModelWeights, Weight};
+use crate::tensor::QMat;
+
+/// One block's sharded projections. `None` mirrors the full model's `None`
+/// (matrix eliminated by surgery): the engine takes the corresponding
+/// column slice of the block input directly.
+#[derive(Clone, Debug)]
+pub struct ShardBlock {
+    /// Q columns `[h0·hd, h1·hd)`, logical shape `(d, (h1-h0)·hd)`.
+    pub q: Option<Weight>,
+    /// K columns `[g0·hd, g1·hd)`, logical shape `(d, (g1-g0)·hd)`.
+    pub k: Option<Weight>,
+    /// V columns `[g0·hd, g1·hd)`.
+    pub v: Option<Weight>,
+}
+
+/// Shard `shard` of `n`: the head ranges it owns, its local attention
+/// geometry, and its per-block Q/K/V column slices. P/C/FFN/embed/unembed
+/// are NOT here — the joins run full-width on the host (sharded.rs).
+#[derive(Clone, Debug)]
+pub struct ShardWeights {
+    pub shard: usize,
+    pub n: usize,
+    /// Global query-head range `[h0, h1)`.
+    pub h0: usize,
+    pub h1: usize,
+    /// Global KV-head range `[g0, g1)`.
+    pub g0: usize,
+    pub g1: usize,
+    /// Local attention geometry: `n_heads/n` query heads over
+    /// `n_kv_heads/n` KV heads, same `head_dim` — the same GQA ratio as the
+    /// full model, so `kv_of` maps local head `h - h0` to local group
+    /// `g - g0` exactly as the full layout maps `h` to `g`.
+    pub layout: HeadLayout,
+    /// Config for this shard's KV pool: the full config with
+    /// `dim`/`n_heads`/`n_kv_heads` scaled by `1/n`, so `e()` (and with a
+    /// `1/n` budget, the pool's block count) match the shard's K/V width.
+    pub cache_cfg: ModelConfig,
+    pub blocks: Vec<ShardBlock>,
+}
+
+/// Column slice `[c0, c1)` of a weight in either precision, bit-identical
+/// to slicing the full projection's output columns.
+fn col_slice(w: &Weight, c0: usize, c1: usize) -> Weight {
+    match w {
+        Weight::F32(m) => Weight::F32(m.col_slice(c0, c1)),
+        Weight::Int8(q) => {
+            // transposed storage: logical output channel c is row c, with
+            // its own per-channel scale — a contiguous row-range copy
+            let k = q.cols();
+            Weight::Int8(QMat::from_raw(
+                c1 - c0,
+                k,
+                q.data()[c0 * k..c1 * k].to_vec(),
+                q.scales()[c0..c1].to_vec(),
+            ))
+        }
+    }
+}
+
+/// Split `w` into `n` KV-head-group shards. Fails (with a human-readable
+/// message for the CLI) unless `n` divides `n_kv_heads` — splitting a KV
+/// head would put one head's K/V columns on two shards and break the
+/// per-group independence the bit-identity argument rests on. MQA
+/// (`n_kv_heads == 1`) therefore cannot tensor-parallelize beyond 1; the
+/// data-parallel mode is the escape hatch.
+pub fn shard_weights(w: &ModelWeights, n: usize) -> Result<Vec<ShardWeights>, String> {
+    let cfg = &w.cfg;
+    if n == 0 {
+        return Err("worker count must be >= 1".into());
+    }
+    if cfg.n_kv_heads % n != 0 {
+        return Err(format!(
+            "{} KV head(s) cannot be split across {n} workers: the worker count must \
+             divide n_kv_heads (use fewer workers or --parallel dp)",
+            cfg.n_kv_heads
+        ));
+    }
+    // validate() guarantees n_heads % n_kv_heads == 0, so n | n_heads too
+    debug_assert_eq!(cfg.n_heads % n, 0);
+    let hd = cfg.head_dim();
+    let hps = cfg.n_heads / n; // query heads per shard
+    let gps = cfg.n_kv_heads / n; // KV heads per shard
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let (h0, h1) = (i * hps, (i + 1) * hps);
+        let (g0, g1) = (i * gps, (i + 1) * gps);
+        let blocks = w
+            .blocks
+            .iter()
+            .map(|b| ShardBlock {
+                q: b.q.as_ref().map(|q| col_slice(q, h0 * hd, h1 * hd)),
+                k: b.k.as_ref().map(|k| col_slice(k, g0 * hd, g1 * hd)),
+                v: b.v.as_ref().map(|v| col_slice(v, g0 * hd, g1 * hd)),
+            })
+            .collect();
+        let mut cache_cfg = cfg.clone();
+        cache_cfg.name = format!("{}[shard{i}/{n}]", cfg.name);
+        cache_cfg.dim = hps * hd;
+        cache_cfg.n_heads = hps;
+        cache_cfg.n_kv_heads = gps;
+        out.push(ShardWeights {
+            shard: i,
+            n,
+            h0,
+            h1,
+            g0,
+            g1,
+            layout: HeadLayout {
+                n_heads: hps,
+                n_kv_heads: gps,
+                head_dim: hd,
+            },
+            cache_cfg,
+            blocks,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::quantize;
+    use crate::tensor::Mat;
+    use crate::util::rng::Xoshiro256;
+
+    /// Column-sliced projection must be BIT-identical to slicing the full
+    /// projection's columns — f32 path.
+    #[test]
+    fn f32_shard_projection_bit_identical() {
+        let cfg = ModelConfig::tiny_gqa(); // 8 heads, 2 KV heads, hd=8
+        let w = ModelWeights::init_vanilla(&cfg, 91);
+        let shards = shard_weights(&w, 2).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let x = Mat::randn(3, cfg.dim, 1.0, &mut rng);
+        let hd = cfg.head_dim();
+        for (li, b) in w.blocks.iter().enumerate() {
+            let full_q = Weight::proj(&x, &b.q);
+            let full_k = Weight::proj(&x, &b.k);
+            for sh in &shards {
+                let sb = &sh.blocks[li];
+                let got_q = Weight::proj(&x, &sb.q);
+                assert_eq!(got_q, full_q.col_slice(sh.h0 * hd, sh.h1 * hd), "q layer {li}");
+                let got_k = Weight::proj(&x, &sb.k);
+                assert_eq!(got_k, full_k.col_slice(sh.g0 * hd, sh.g1 * hd), "k layer {li}");
+            }
+        }
+    }
+
+    /// Same bit-identity through the INT8 kernel: a head-group slice of a
+    /// QMat carries its own codes and per-channel scales verbatim.
+    #[test]
+    fn int8_shard_projection_bit_identical() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = quantize(&ModelWeights::init_vanilla(&cfg, 92));
+        let shards = shard_weights(&w, 2).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let x = Mat::randn(4, cfg.dim, 1.0, &mut rng);
+        let hd = cfg.head_dim();
+        let b = &w.blocks[0];
+        let full_v = Weight::proj(&x, &b.v);
+        for sh in &shards {
+            let got = Weight::proj(&x, &sh.blocks[0].v);
+            assert_eq!(got, full_v.col_slice(sh.g0 * hd, sh.g1 * hd), "shard {}", sh.shard);
+        }
+    }
+
+    /// Eliminated matrices stay eliminated, and the shard geometry tiles
+    /// the full head ranges exactly.
+    #[test]
+    fn geometry_and_none_passthrough() {
+        let cfg = ModelConfig::tiny_gqa();
+        let w = crate::surgery::transform(
+            &ModelWeights::init_vanilla(&cfg, 93),
+            crate::config::Variant::MergedQP,
+            crate::surgery::Options::default(),
+        )
+        .unwrap();
+        assert!(w.blocks[1].q.is_none(), "MergedQP eliminates Q");
+        let shards = shard_weights(&w, 2).unwrap();
+        assert!(shards.iter().all(|s| s.blocks[1].q.is_none()));
+        assert_eq!((shards[0].h0, shards[0].h1), (0, 4));
+        assert_eq!((shards[1].h0, shards[1].h1), (4, 8));
+        assert_eq!((shards[1].g0, shards[1].g1), (1, 2));
+        assert_eq!(shards[0].layout.n_heads, 4);
+        assert_eq!(shards[0].layout.n_kv_heads, 1);
+        assert_eq!(shards[0].cache_cfg.e(), cfg.e() / 2);
+    }
+
+    /// A worker count that does not divide the KV heads is a clean error,
+    /// not a panic — MQA cannot tensor-shard at all.
+    #[test]
+    fn non_dividing_worker_count_rejected() {
+        let w = ModelWeights::init_vanilla(&ModelConfig::tiny_mqa(), 94);
+        let err = shard_weights(&w, 2).unwrap_err();
+        assert!(err.contains("divide n_kv_heads"), "{err}");
+        let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 95);
+        assert!(shard_weights(&w, 4).is_err(), "2 KV heads / 4 workers");
+        assert_eq!(shard_weights(&w, 2).unwrap().len(), 2);
+        assert_eq!(shard_weights(&w, 1).unwrap().len(), 1);
+    }
+}

@@ -910,6 +910,33 @@ mod tests {
     }
 
     #[test]
+    fn sharded_engine_serves_and_reports_shard_gauges() {
+        use crate::coordinator::ShardedEngine;
+        let cfg = ModelConfig::tiny_mha();
+        let w = ModelWeights::init_vanilla(&cfg, 81);
+        let coord = Coordinator::spawn(
+            ShardedEngine::new(w.clone(), 2, 8, 16 << 20).unwrap(),
+            SchedulerCfg::default(),
+        );
+        let server = Server::bind("127.0.0.1:0", coord).unwrap();
+        let addr = server.local_addr();
+        std::thread::spawn(move || {
+            let _ = server.serve();
+        });
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        // bit-identical serving through the full TCP stack
+        let want = greedy_generate(&w, &[4, 2, 7], 5);
+        assert_eq!(c.generate(&[4, 2, 7], 5).unwrap(), want);
+        // the shard block is on the wire, with live TP counters
+        let m = c.call(&Json::obj(vec![("op", Json::str("metrics"))])).unwrap();
+        let s = m.get("metrics").unwrap().get("shard").unwrap();
+        assert_eq!(s.get("workers").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("mode").unwrap().as_str(), Some("tp"));
+        assert!(s.get("allreduce_calls").unwrap().as_u64().unwrap() > 0);
+        assert!(s.get("allreduce_bytes").unwrap().as_u64().unwrap() > 0);
+    }
+
+    #[test]
     fn malformed_requests_get_errors_not_disconnects() {
         let (addr, _stop, _) = boot();
         let mut c = Client::connect(&addr.to_string()).unwrap();

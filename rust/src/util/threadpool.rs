@@ -6,36 +6,88 @@
 //! * [`ThreadPool::run_all`] — run a batch of closures to completion,
 //!   used by the coordinator's per-request work.
 //!
-//! Workers are long-lived; jobs are dispatched over an mpsc channel and a
-//! generation barrier joins each scope. Panics in jobs are caught and
-//! re-raised on the submitting thread so test failures stay visible.
+//! Workers are long-lived; jobs are dispatched over an mpsc channel. Each
+//! `run_all`/`scope_chunks` call is a **scope** with its own completion and
+//! panic token ([`ScopeState`]), so any number of threads can drive the
+//! same pool concurrently: a scope's `wait` blocks only on *its own* jobs,
+//! and a panic in one scope is re-raised on that scope's submitting thread,
+//! never on a bystander's. (The pre-sharding pool kept one pool-wide
+//! `pending` counter and one `panicked` flag — two threads driving scopes
+//! concurrently waited on each other's jobs and could steal each other's
+//! panics, exactly what N shard workers would do. See
+//! `concurrent_scopes_do_not_interfere`.)
+//!
+//! ## Pool routing
+//!
+//! Kernel call sites take their pool from [`current`], a thread-local that
+//! defaults to the process-wide [`global`] pool. [`with_pool`] rebinds it
+//! for the duration of a closure, so a shard worker can route every GEMM /
+//! attention kernel it calls onto its own private slice of the cores
+//! without threading a pool handle through every signature. Pool sizing
+//! honors the `SKIPLESS_THREADS` environment variable (see
+//! [`ThreadPool::default_size`]); sharded engines size per-shard compute
+//! pools to `cores / n_shards` so tensor-parallel workers split the
+//! machine instead of stacking 16-thread pools on it.
 
+use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct Shared {
+/// Per-scope completion/panic token: one per `run_all` call, shared by
+/// that call's jobs only.
+struct ScopeState {
     pending: AtomicUsize,
     panicked: AtomicUsize,
     done: Mutex<()>,
     cv: Condvar,
 }
 
+impl ScopeState {
+    fn new(n_jobs: usize) -> Arc<Self> {
+        Arc::new(Self {
+            pending: AtomicUsize::new(n_jobs),
+            panicked: AtomicUsize::new(0),
+            done: Mutex::new(()),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Block until every job of THIS scope has finished, then re-raise if
+    /// any of them panicked. Other scopes' jobs are invisible here.
+    fn wait(&self) {
+        let mut guard = self.done.lock().unwrap();
+        while self.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        drop(guard);
+        if self.panicked.load(Ordering::SeqCst) != 0 {
+            panic!("a threadpool job panicked");
+        }
+    }
+}
+
 /// Fixed-size pool of worker threads.
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    tx: Option<Sender<(Job, Arc<ScopeState>)>>,
     workers: Vec<JoinHandle<()>>,
-    shared: Arc<Shared>,
     n_threads: usize,
 }
 
 impl ThreadPool {
-    /// Pool sized to the machine (`available_parallelism`), capped at 16.
+    /// Pool size for the process-wide [`global`] pool: the
+    /// `SKIPLESS_THREADS` environment variable when set to a positive
+    /// integer, else `available_parallelism` capped at 16. The env
+    /// override is uncapped — it is how deployments (and the sharded
+    /// engine's per-worker pools) state exactly how many cores to use.
     pub fn default_size() -> usize {
+        if let Some(n) = size_from_env(std::env::var("SKIPLESS_THREADS").ok().as_deref()) {
+            return n;
+        }
         std::thread::available_parallelism()
             .map(|n| n.get().min(16))
             .unwrap_or(4)
@@ -43,28 +95,20 @@ impl ThreadPool {
 
     pub fn new(n_threads: usize) -> Self {
         assert!(n_threads > 0);
-        let (tx, rx) = channel::<Job>();
+        let (tx, rx) = channel::<(Job, Arc<ScopeState>)>();
         let rx = Arc::new(Mutex::new(rx));
-        let shared = Arc::new(Shared {
-            pending: AtomicUsize::new(0),
-            panicked: AtomicUsize::new(0),
-            done: Mutex::new(()),
-            cv: Condvar::new(),
-        });
         let workers = (0..n_threads)
             .map(|i| {
                 let rx = Arc::clone(&rx);
-                let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("skipless-worker-{i}"))
-                    .spawn(move || worker_loop(rx, shared))
+                    .spawn(move || worker_loop(rx))
                     .expect("spawn worker")
             })
             .collect();
         Self {
             tx: Some(tx),
             workers,
-            shared,
             n_threads,
         }
     }
@@ -73,35 +117,28 @@ impl ThreadPool {
         self.n_threads
     }
 
-    fn submit(&self, job: Job) {
-        self.shared.pending.fetch_add(1, Ordering::SeqCst);
-        self.tx.as_ref().unwrap().send(job).expect("pool alive");
-    }
-
-    fn wait_all(&self) {
-        let mut guard = self.shared.done.lock().unwrap();
-        while self.shared.pending.load(Ordering::SeqCst) != 0 {
-            guard = self.shared.cv.wait(guard).unwrap();
-        }
-        drop(guard);
-        if self.shared.panicked.swap(0, Ordering::SeqCst) != 0 {
-            panic!("a threadpool job panicked");
-        }
-    }
-
     /// Run all closures to completion (blocking the caller). Jobs may
-    /// borrow from the caller's stack: `wait_all` blocks until every job
-    /// finishes, so nothing outlives this call.
+    /// borrow from the caller's stack: the scope wait below blocks until
+    /// every job finishes, so nothing outlives this call. Concurrent
+    /// `run_all` calls from different threads are independent scopes.
     pub fn run_all<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let scope = ScopeState::new(jobs.len());
         for job in jobs {
             // SAFETY: the lifetime-erasing transmute is sound because
-            // wait_all() below joins all submitted jobs before returning.
+            // scope.wait() below joins all submitted jobs before returning.
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(job)
             };
-            self.submit(job);
+            self.tx
+                .as_ref()
+                .unwrap()
+                .send((job, Arc::clone(&scope)))
+                .expect("pool alive");
         }
-        self.wait_all();
+        scope.wait();
     }
 
     /// Split `0..n` into contiguous chunks (one per worker, at least
@@ -144,7 +181,7 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, shared: Arc<Shared>) {
+fn worker_loop(rx: Arc<Mutex<Receiver<(Job, Arc<ScopeState>)>>>) {
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -152,30 +189,71 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, shared: Arc<Shared>) {
         };
         match job {
             Err(_) => return, // channel closed — pool dropped
-            Ok(job) => {
+            Ok((job, scope)) => {
                 if catch_unwind(AssertUnwindSafe(job)).is_err() {
-                    shared.panicked.fetch_add(1, Ordering::SeqCst);
+                    scope.panicked.fetch_add(1, Ordering::SeqCst);
                 }
-                if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
-                    let _g = shared.done.lock().unwrap();
-                    shared.cv.notify_all();
+                if scope.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = scope.done.lock().unwrap();
+                    scope.cv.notify_all();
                 }
             }
         }
     }
 }
 
-/// Process-wide shared pool, lazily created.
-pub fn global() -> &'static ThreadPool {
-    use std::sync::OnceLock;
-    static POOL: OnceLock<ThreadPool> = OnceLock::new();
-    POOL.get_or_init(|| ThreadPool::new(ThreadPool::default_size()))
+/// Parse a `SKIPLESS_THREADS`-style value: `Some(n)` for a positive
+/// integer, `None` for unset/empty/garbage/zero (fall through to
+/// auto-detection).
+fn size_from_env(val: Option<&str>) -> Option<usize> {
+    val.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// Process-wide shared pool, lazily created (sized per
+/// [`ThreadPool::default_size`]).
+pub fn global() -> &'static Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(ThreadPool::new(ThreadPool::default_size())))
+}
+
+thread_local! {
+    /// The pool kernel call sites on THIS thread should use; `None` means
+    /// the global pool.
+    static CURRENT: RefCell<Option<Arc<ThreadPool>>> = const { RefCell::new(None) };
+}
+
+/// The pool the calling thread's kernels should run on: whatever the
+/// innermost enclosing [`with_pool`] bound, else the [`global`] pool. The
+/// GEMM/qGEMM/paged-attention hot paths all resolve their pool through
+/// here, so an engine can confine its kernel parallelism to a private pool
+/// without any signature changes.
+pub fn current() -> Arc<ThreadPool> {
+    if let Some(p) = CURRENT.with(|c| c.borrow().clone()) {
+        return p;
+    }
+    Arc::clone(global())
+}
+
+/// Run `f` with [`current`] bound to `pool` on this thread, restoring the
+/// previous binding afterwards (on panic too). Bindings nest.
+pub fn with_pool<R>(pool: &Arc<ThreadPool>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<ThreadPool>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            CURRENT.with(|c| *c.borrow_mut() = prev);
+        }
+    }
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(Arc::clone(pool)));
+    let _restore = Restore(prev);
+    f()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::Barrier;
 
     #[test]
     fn run_all_executes_everything() {
@@ -240,5 +318,111 @@ mod tests {
             });
             assert_eq!(c.load(Ordering::SeqCst), 64, "round {round}");
         }
+    }
+
+    /// Regression (pre-sharding bug): `wait_all` blocked on the POOL-wide
+    /// pending counter, so a scope could not complete while another
+    /// thread's scope still had jobs in flight. Here scope A's jobs park on
+    /// a barrier that is released only AFTER scope B completes — under the
+    /// old pool B's wait would also count A's parked jobs and the test
+    /// would deadlock. Per-scope tokens make B independent of A.
+    #[test]
+    fn concurrent_scopes_do_not_interfere() {
+        let pool = Arc::new(ThreadPool::new(4));
+        // 2 A-jobs + this test thread; 2 workers stay free for scope B.
+        let gate = Arc::new(Barrier::new(3));
+        let a = {
+            let pool = Arc::clone(&pool);
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+                    .map(|_| {
+                        let gate = Arc::clone(&gate);
+                        let g: Box<dyn FnOnce() + Send> = Box::new(move || {
+                            gate.wait();
+                        });
+                        g
+                    })
+                    .collect();
+                pool.run_all(jobs);
+            })
+        };
+        // scope B on the same pool must run to completion while A's jobs
+        // are still parked
+        let c = AtomicU64::new(0);
+        pool.scope_chunks(64, 1, |s, e| {
+            c.fetch_add((e - s) as u64, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 64, "scope B blocked behind scope A");
+        gate.wait(); // release A
+        a.join().expect("scope A completed cleanly");
+    }
+
+    /// Regression (pre-sharding bug): `panicked.swap(0)` in `wait_all`
+    /// could hand one scope's panic to whichever scope finished waiting
+    /// first. A panic must surface in ITS OWN scope and nowhere else.
+    #[test]
+    fn panic_is_attributed_to_its_own_scope() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let panicker = {
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || {
+                pool.scope_chunks(8, 1, |s, _| {
+                    if s == 0 {
+                        panic!("boom in scope P");
+                    }
+                });
+            })
+        };
+        // an innocent scope racing the panicking one, many times over
+        for _ in 0..50 {
+            let c = AtomicU64::new(0);
+            pool.scope_chunks(32, 1, |s, e| {
+                c.fetch_add((e - s) as u64, Ordering::SeqCst);
+            });
+            assert_eq!(c.load(Ordering::SeqCst), 32);
+        }
+        let err = panicker.join().expect_err("scope P must observe its panic");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(
+            msg.contains("threadpool job panicked"),
+            "unexpected panic payload: {msg:?}"
+        );
+        // the pool is still healthy afterwards
+        let c = AtomicU64::new(0);
+        pool.scope_chunks(16, 1, |s, e| {
+            c.fetch_add((e - s) as u64, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn with_pool_rebinds_and_restores_current() {
+        let mine = Arc::new(ThreadPool::new(2));
+        let theirs = Arc::new(ThreadPool::new(3));
+        assert_eq!(current().n_threads(), global().n_threads());
+        with_pool(&mine, || {
+            assert_eq!(current().n_threads(), 2);
+            with_pool(&theirs, || assert_eq!(current().n_threads(), 3));
+            assert_eq!(current().n_threads(), 2, "nested binding must restore");
+        });
+        assert_eq!(current().n_threads(), global().n_threads());
+        // restored even when the closure panics
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            with_pool(&mine, || panic!("escape"));
+        }));
+        assert!(r.is_err());
+        assert_eq!(current().n_threads(), global().n_threads());
+    }
+
+    #[test]
+    fn env_size_parsing() {
+        assert_eq!(size_from_env(None), None);
+        assert_eq!(size_from_env(Some("")), None);
+        assert_eq!(size_from_env(Some("0")), None);
+        assert_eq!(size_from_env(Some("-3")), None);
+        assert_eq!(size_from_env(Some("abc")), None);
+        assert_eq!(size_from_env(Some("6")), Some(6));
+        assert_eq!(size_from_env(Some(" 24 ")), Some(24));
     }
 }

@@ -1,0 +1,249 @@
+//! Tensor-parallel sharding must be *invisible*: a `ShardedEngine` over N
+//! workers has to produce logits BYTE-identical (`assert_eq!` on the f32
+//! vectors — no tolerance) to a single `CpuEngine` over the same weights,
+//! across {f32, int8} weights × {MHA, GQA, MQA} head layouts × {plain
+//! decode, speculative verify/rollback, chunked prefill} × {2, 4} workers.
+//!
+//! Why exact equality is attainable at all: the shards own disjoint
+//! KV-head groups, so every GEMM is column-sliced (bit-exact — each output
+//! element's k-accumulation never mixes columns), RoPE and attention are
+//! per-head, and the joins are order-fixed concatenations followed by a
+//! full-width FFN on the host — never a floating-point sum-reduce. See
+//! DESIGN.md §Sharding and `coordinator::sharded`.
+//!
+//! The data-parallel mode trades that strict identity for independence:
+//! replicas are whole engines, so each stream is identical to a
+//! single-engine run by construction; what the test checks there is the
+//! router — repeated prompts must land on the replica that cached their
+//! prefix.
+
+use skipless::config::ModelConfig;
+use skipless::coordinator::{
+    ChunkInput, Coordinator, CpuEngine, DecodeInput, Engine, Request, SchedulerCfg, ShardedEngine,
+    VerifyInput,
+};
+use skipless::kvcache::CacheOpts;
+use skipless::model::{greedy_generate, quantize, ModelWeights};
+use std::sync::atomic::Ordering;
+
+const BLOCK_TOKENS: usize = 8;
+const BUDGET: usize = 16 << 20;
+
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// GQA config that admits 4 TP workers (tiny_gqa has only 2 KV heads).
+fn gqa_8h_4kv() -> ModelConfig {
+    let mut cfg = ModelConfig::tiny_gqa();
+    cfg.name = "tiny-gqa-4kv".into();
+    cfg.n_kv_heads = 4;
+    cfg
+}
+
+/// Prefill + greedy-decode `steps` tokens on a single engine and on an
+/// N-way sharded engine, asserting byte equality at every position.
+fn assert_decode_bit_identical(w: &ModelWeights, n_workers: usize, steps: usize) {
+    let mut single = CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET);
+    let mut sharded =
+        ShardedEngine::new(w.clone(), n_workers, BLOCK_TOKENS, BUDGET).expect("shardable");
+    let prompt: Vec<u32> = (0..11).map(|i| (i * 13 + 5) % w.cfg.vocab_size as u32).collect();
+    let (s0, l0) = single.prefill(&prompt).unwrap();
+    let (s1, l1) = sharded.prefill(&prompt).unwrap();
+    assert_eq!(l0, l1, "prefill logits, {} workers", n_workers);
+    let mut tok = argmax(&l0);
+    for step in 0..steps {
+        let r0 = single.decode_batch(&[DecodeInput { seq: s0, token: tok }]).unwrap();
+        let r1 = sharded.decode_batch(&[DecodeInput { seq: s1, token: tok }]).unwrap();
+        assert_eq!(r0, r1, "decode step {step}, {} workers", n_workers);
+        tok = argmax(&r0[0]);
+    }
+    single.release(s0);
+    sharded.release(s1);
+}
+
+#[test]
+fn f32_decode_bit_identical_across_layouts_and_widths() {
+    // MHA: 4 KV heads — divisible by 2 and 4
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_mha(), 301);
+    assert_decode_bit_identical(&w, 2, 6);
+    assert_decode_bit_identical(&w, 4, 6);
+    // GQA at ratio 4:1 per shard
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 302);
+    assert_decode_bit_identical(&w, 2, 6);
+    // GQA with 4 KV heads takes 4 workers
+    let w = ModelWeights::init_vanilla(&gqa_8h_4kv(), 303);
+    assert_decode_bit_identical(&w, 4, 6);
+}
+
+#[test]
+fn int8_decode_bit_identical() {
+    // per-channel scales travel with their columns, so the int8 kernel
+    // sees exactly the bytes the full matrix would use for those outputs
+    let w = quantize(&ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 304));
+    assert_decode_bit_identical(&w, 2, 6);
+    let w = quantize(&ModelWeights::init_vanilla(&gqa_8h_4kv(), 305));
+    assert_decode_bit_identical(&w, 4, 6);
+}
+
+#[test]
+fn surgeried_weights_shard_bit_identically() {
+    // MergedQP leaves q = None in every block; the shard must column-slice
+    // the block input itself, exactly like the full engine does
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 306);
+    let w = skipless::surgery::transform(
+        &w,
+        skipless::config::Variant::MergedQP,
+        skipless::surgery::Options::default(),
+    )
+    .unwrap();
+    assert_decode_bit_identical(&w, 2, 6);
+}
+
+#[test]
+fn verify_batch_and_rollback_bit_identical() {
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_mha(), 307);
+    let mut single = CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET);
+    let mut sharded = ShardedEngine::new(w.clone(), 2, BLOCK_TOKENS, BUDGET).unwrap();
+    assert!(sharded.supports_rollback());
+    let prompt = vec![3u32, 1, 4, 1, 5, 9, 2, 6];
+    let (s0, _) = single.prefill(&prompt).unwrap();
+    let (s1, _) = sharded.prefill(&prompt).unwrap();
+    // widened verify on the sharded engine vs one-at-a-time on the single
+    let draft = vec![7u32, 8, 9, 10];
+    let rows1 = sharded
+        .verify_batch(&[VerifyInput { seq: s1, tokens: draft.clone() }])
+        .unwrap();
+    let mut rows0 = Vec::new();
+    for &t in &draft {
+        let r = single.decode_batch(&[DecodeInput { seq: s0, token: t }]).unwrap();
+        rows0.push(r.into_iter().next().unwrap());
+    }
+    assert_eq!(rows1[0], rows0, "verify rows vs sequential decode");
+    // reject the tail on both, then re-decode: rollback must be clean
+    single.truncate(s0, prompt.len() + 1).unwrap();
+    sharded.truncate(s1, prompt.len() + 1).unwrap();
+    let r0 = single.decode_batch(&[DecodeInput { seq: s0, token: 42 }]).unwrap();
+    let r1 = sharded.decode_batch(&[DecodeInput { seq: s1, token: 42 }]).unwrap();
+    assert_eq!(r0, r1, "post-rollback decode");
+}
+
+#[test]
+fn chunked_prefill_bit_identical_to_monolithic() {
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 308);
+    let mut single = CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET);
+    let mut sharded = ShardedEngine::new(w.clone(), 2, BLOCK_TOKENS, BUDGET).unwrap();
+    assert!(sharded.supports_chunked_prefill());
+    let prompt: Vec<u32> = (0..11).map(|i| (i * 7 + 2) % 256).collect();
+    let (s0, l0) = single.prefill(&prompt).unwrap();
+    let (s1, filled) = sharded.prefill_begin(&prompt).unwrap();
+    assert_eq!(filled, 0, "cold start");
+    // uneven split exercises mid-block chunk boundaries
+    let mut last = None;
+    for chunk in [&prompt[0..3], &prompt[3..8], &prompt[8..11]] {
+        let out = sharded
+            .step_batch(&[], &[ChunkInput { seq: s1, tokens: chunk.to_vec() }])
+            .unwrap();
+        last = out.chunk_logits.into_iter().next().flatten();
+    }
+    assert_eq!(last.expect("final chunk completes the prompt"), l0);
+    // and the sequences decode identically afterwards
+    let r0 = single.decode_batch(&[DecodeInput { seq: s0, token: 17 }]).unwrap();
+    let r1 = sharded.decode_batch(&[DecodeInput { seq: s1, token: 17 }]).unwrap();
+    assert_eq!(r0, r1);
+}
+
+#[test]
+fn non_dividing_worker_count_is_a_clean_config_error() {
+    // MQA has one KV head: no TP split exists at all
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_mqa(), 309);
+    let err = ShardedEngine::new(w, 2, BLOCK_TOKENS, BUDGET).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("divide n_kv_heads"), "{msg}");
+    // 2 KV heads cannot split 4 ways
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 310);
+    assert!(ShardedEngine::new(w, 4, BLOCK_TOKENS, BUDGET).is_err());
+    // quantized KV pools carry full-width per-position metadata: rejected
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 311);
+    let opts = CacheOpts {
+        quantized: true,
+        ..Default::default()
+    };
+    let err = ShardedEngine::with_cache_opts(w, 2, BLOCK_TOKENS, BUDGET, opts).unwrap_err();
+    assert!(err.to_string().contains("f32 KV pool"), "{err}");
+}
+
+#[test]
+fn sharded_engine_serves_through_the_coordinator() {
+    let cfg = ModelConfig::tiny_mha();
+    let w = ModelWeights::init_vanilla(&cfg, 312);
+    let want = greedy_generate(&w, &[2, 7, 1, 8], 8);
+    let c = Coordinator::spawn(
+        ShardedEngine::new(w.clone(), 2, BLOCK_TOKENS, BUDGET).unwrap(),
+        SchedulerCfg::default(),
+    );
+    let resp = c.generate(Request::greedy(1, vec![2, 7, 1, 8], 8));
+    assert_eq!(resp.tokens, want, "token-identical through the scheduler");
+    // the scheduler mirrors the engine's shard stats into the gauges
+    let m = c.metrics();
+    assert_eq!(m.shard_workers.load(Ordering::Relaxed), 2);
+    assert_eq!(m.shard_mode.load(Ordering::Relaxed), 1, "tp");
+    assert!(m.shard_allreduce_calls.load(Ordering::Relaxed) > 0);
+    assert!(m.shard_allreduce_bytes.load(Ordering::Relaxed) > 0);
+    c.shutdown();
+}
+
+#[test]
+fn sharded_target_with_int8_draft_speculates_token_identically() {
+    let cfg = ModelConfig::tiny_mha();
+    let w = ModelWeights::init_vanilla(&cfg, 313);
+    let want = greedy_generate(&w, &[5, 3, 8], 8);
+    let c = Coordinator::spawn_speculative(
+        ShardedEngine::new(w.clone(), 2, BLOCK_TOKENS, BUDGET).unwrap(),
+        CpuEngine::new(quantize(&w), BLOCK_TOKENS, BUDGET),
+        SchedulerCfg {
+            spec_k: 3,
+            ..Default::default()
+        },
+    );
+    let resp = c.generate(Request::greedy(1, vec![5, 3, 8], 8));
+    assert_eq!(resp.tokens, want);
+    assert!(c.metrics().spec_rounds.load(Ordering::Relaxed) > 0);
+    c.shutdown();
+}
+
+#[test]
+fn dp_router_reuses_the_replica_with_the_cached_prefix() {
+    let cfg = ModelConfig::tiny_gqa();
+    let w = ModelWeights::init_vanilla(&cfg, 314);
+    let c = Coordinator::spawn_replicated(
+        |_| CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET),
+        2,
+        BLOCK_TOKENS,
+        SchedulerCfg::default(),
+    );
+    let prompt: Vec<u32> = (0..20).map(|i| (i * 3 + 1) % 256).collect();
+    let want = greedy_generate(&w, &prompt, 4);
+    for id in 0..3 {
+        let resp = c.generate(Request::greedy(id, prompt.clone(), 4));
+        assert_eq!(resp.tokens, want, "request {id}");
+    }
+    let m = c.metrics();
+    assert_eq!(m.shard_workers.load(Ordering::Relaxed), 2);
+    assert_eq!(m.shard_mode.load(Ordering::Relaxed), 2, "dp");
+    assert!(
+        m.shard_router_prefix_hits.load(Ordering::Relaxed) >= 2,
+        "resubmitted prompts must route by prefix affinity"
+    );
+    assert!(
+        m.kv_prefix_tokens_saved.load(Ordering::Relaxed) > 0,
+        "affinity routing should turn into actual prefix-cache reuse"
+    );
+    c.shutdown();
+}
