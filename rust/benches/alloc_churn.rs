@@ -1,0 +1,351 @@
+//! Allocation-churn bench: the allocating engine API (`step_batch` /
+//! `verify_batch`, fresh output vectors every step) versus the step-arena
+//! API (`step_batch_into` / `verify_batch_into`, caller-owned
+//! capacity-reusing outputs), with a counting global allocator attributing
+//! every heap event to its step.
+//!
+//! Reported per mode — {batch-1 decode, batch-8 decode, speculative
+//! verify, decode after chunked prefill} — are allocs/step and bytes/step
+//! for both APIs and the decode TPOT (time per output token = wall time of
+//! one fused step) p50/p99. The arena API must measure **exactly zero**
+//! allocations per steady-state step in every mode, quick or full — that
+//! is the same contract `tests/alloc_regression.rs` gates, re-checked here
+//! under bench-length runs (hundreds of steps, not four). The batch-8
+//! decode cell additionally asserts a ≥1.1× median-TPOT advantage for the
+//! arena API in full mode (quick CI runs skip the timing bar: timings on
+//! loaded runners are noise, allocation counts are not).
+//!
+//! The model is deliberately allocation-heavy relative to compute (small
+//! dim, large vocab): what this bench isolates is output-buffer churn, and
+//! a wide logits row makes every fresh `Vec<f32>` expensive. Threads are
+//! forced to 1 (`SKIPLESS_THREADS=1`) so both APIs take the same serial
+//! code path and per-step timings are not scheduler noise. Emits
+//! `BENCH_alloc.json` (schema in EXPERIMENTS.md).
+
+use skipless::config::{AttentionKind, BlockLayout, FfnKind, ModelConfig};
+use skipless::coordinator::{
+    ChunkInput, CpuEngine, DecodeInput, Engine, StepOut, VerifyInput, VerifyOut,
+};
+use skipless::model::ModelWeights;
+use skipless::sampler::argmax;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::{Duration, Instant};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// One block per sequence (block size = max_seq_len), so a bench-length
+/// decode run never crosses a block boundary: block grants are admission
+/// work, and letting one leak into the measured window would misattribute
+/// it to the steady state.
+fn bench_config(quick: bool) -> ModelConfig {
+    ModelConfig {
+        name: "alloc-bench".into(),
+        dim: 64,
+        n_layers: 2,
+        n_heads: 8,
+        n_kv_heads: 2,
+        hidden_dim: 112,
+        vocab_size: if quick { 512 } else { 2048 },
+        max_seq_len: if quick { 256 } else { 1024 },
+        attention: AttentionKind::Gqa,
+        layout: BlockLayout::Serial,
+        ffn: FfnKind::SwiGlu,
+        tied_embeddings: false,
+    }
+}
+
+const BUDGET: usize = 64 << 20;
+const WARMUP: usize = 4;
+
+struct CellStats {
+    allocs_per_step: f64,
+    bytes_per_step: f64,
+    p50_us: f64,
+    p99_us: f64,
+    max_step_allocs: u64,
+}
+
+/// Run `n` steps of `f`, attributing allocator and wall-clock deltas to
+/// each. The duration buffer is pre-sized and counters are read before the
+/// push, so the harness itself never contaminates a window.
+fn measure_steps(n: usize, mut f: impl FnMut()) -> CellStats {
+    let mut durs: Vec<Duration> = Vec::with_capacity(n);
+    let (mut allocs, mut bytes, mut max_step) = (0u64, 0u64, 0u64);
+    for _ in 0..n {
+        let a0 = ALLOCS.load(Relaxed);
+        let b0 = ALLOC_BYTES.load(Relaxed);
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        let da = ALLOCS.load(Relaxed) - a0;
+        let db = ALLOC_BYTES.load(Relaxed) - b0;
+        allocs += da;
+        bytes += db;
+        max_step = max_step.max(da);
+        durs.push(dt);
+    }
+    durs.sort_unstable();
+    let pct = |p: f64| durs[((durs.len() as f64 * p) as usize).min(durs.len() - 1)];
+    CellStats {
+        allocs_per_step: allocs as f64 / n as f64,
+        bytes_per_step: bytes as f64 / n as f64,
+        p50_us: pct(0.50).as_secs_f64() * 1e6,
+        p99_us: pct(0.99).as_secs_f64() * 1e6,
+        max_step_allocs: max_step,
+    }
+}
+
+fn report(mode: &str, api: &str, s: &CellStats) {
+    eprintln!(
+        "  {:<16} {:<6} {:>9.1} allocs/step {:>12.0} B/step   TPOT p50 {:>9.2}µs  p99 {:>9.2}µs",
+        mode, api, s.allocs_per_step, s.bytes_per_step, s.p50_us, s.p99_us
+    );
+}
+
+fn json_mode(mode: &str, before: &CellStats, after: &CellStats) -> String {
+    format!(
+        "  \"{mode}\": {{\n    \"allocs_per_step_before\": {:.2},\n    \"bytes_per_step_before\": {:.0},\n    \"allocs_per_step_after\": {:.2},\n    \"bytes_per_step_after\": {:.0},\n    \"tpot_p50_us_before\": {:.3},\n    \"tpot_p99_us_before\": {:.3},\n    \"tpot_p50_us_after\": {:.3},\n    \"tpot_p99_us_after\": {:.3},\n    \"zero_alloc\": {}\n  }}",
+        before.allocs_per_step,
+        before.bytes_per_step,
+        after.allocs_per_step,
+        after.bytes_per_step,
+        before.p50_us,
+        before.p99_us,
+        after.p50_us,
+        after.p99_us,
+        after.max_step_allocs == 0,
+    )
+}
+
+/// Plain-decode cell at the given batch size: `before` drives the
+/// allocating `step_batch`, `after` drives `step_batch_into` on a warmed
+/// arena. Both engines walk the same greedy token streams (bit-identity of
+/// the two APIs is pinned by the test suites; here it keeps the work equal).
+fn decode_cell(w: &ModelWeights, cfg: &ModelConfig, batch: usize, steps: usize) -> (CellStats, CellStats) {
+    let block = cfg.max_seq_len;
+    let vocab = cfg.vocab_size as u32;
+    let mut before = CpuEngine::new(w.clone(), block, BUDGET);
+    let mut after = CpuEngine::new(w.clone(), block, BUDGET);
+    after.plan_alloc(batch, 0);
+    let mut seqs_b = Vec::new();
+    let mut seqs_a = Vec::new();
+    let mut toks = Vec::new();
+    for i in 0..batch {
+        let prompt: Vec<u32> = (0..9).map(|j| (i as u32 * 37 + j * 13 + 5) % vocab).collect();
+        let (sb, lb) = before.prefill(&prompt).unwrap();
+        let (sa, _) = after.prefill(&prompt).unwrap();
+        seqs_b.push(sb);
+        seqs_a.push(sa);
+        toks.push(argmax(&lb));
+    }
+    let mut out = StepOut::default();
+    let mut inputs: Vec<DecodeInput> = Vec::with_capacity(batch);
+    for _ in 0..WARMUP {
+        inputs.clear();
+        inputs.extend(seqs_a.iter().zip(&toks).map(|(&seq, &token)| DecodeInput { seq, token }));
+        after.step_batch_into(&inputs, &[], &mut out).unwrap();
+        before
+            .step_batch(
+                &seqs_b
+                    .iter()
+                    .zip(&toks)
+                    .map(|(&seq, &token)| DecodeInput { seq, token })
+                    .collect::<Vec<_>>(),
+                &[],
+            )
+            .unwrap();
+        for (i, t) in toks.iter_mut().enumerate() {
+            *t = argmax(out.decode_logits.row(i));
+        }
+    }
+    let mut toks_b = toks.clone();
+    let sa = measure_steps(steps, || {
+        inputs.clear();
+        inputs.extend(toks.iter().zip(&seqs_a).map(|(&token, &seq)| DecodeInput { seq, token }));
+        after.step_batch_into(&inputs, &[], &mut out).unwrap();
+        for (i, t) in toks.iter_mut().enumerate() {
+            *t = argmax(out.decode_logits.row(i));
+        }
+    });
+    let mut inputs_b: Vec<DecodeInput> = Vec::with_capacity(batch);
+    let sb = measure_steps(steps, || {
+        inputs_b.clear();
+        inputs_b
+            .extend(toks_b.iter().zip(&seqs_b).map(|(&token, &seq)| DecodeInput { seq, token }));
+        let r = before.step_batch(&inputs_b, &[]).unwrap();
+        for (t, row) in toks_b.iter_mut().zip(&r.decode_logits) {
+            *t = argmax(row);
+        }
+    });
+    (sb, sa)
+}
+
+/// Speculative-verify cell: a fixed 4-token draft verified and rolled back
+/// each round (rollback runs outside the timed/counted window on both
+/// sides — block frees are not steady-state work).
+fn verify_cell(w: &ModelWeights, cfg: &ModelConfig, rounds: usize) -> (CellStats, CellStats) {
+    let block = cfg.max_seq_len;
+    let mut before = CpuEngine::new(w.clone(), block, BUDGET);
+    let mut after = CpuEngine::new(w.clone(), block, BUDGET);
+    after.plan_alloc(2, 4);
+    let prompt = vec![3u32, 1, 4, 1, 5, 9, 2, 6];
+    let (sb, _) = before.prefill(&prompt).unwrap();
+    let (sa, _) = after.prefill(&prompt).unwrap();
+    let inputs_b = [VerifyInput { seq: sb, tokens: vec![7, 8, 9, 10] }];
+    let inputs_a = [VerifyInput { seq: sa, tokens: vec![7, 8, 9, 10] }];
+    let mut out = VerifyOut::default();
+    for _ in 0..WARMUP {
+        after.verify_batch_into(&inputs_a, &mut out).unwrap();
+        after.truncate(sa, prompt.len()).unwrap();
+        before.verify_batch(&inputs_b).unwrap();
+        before.truncate(sb, prompt.len()).unwrap();
+    }
+    // positions must roll back between rounds, so truncate rides inside the
+    // step on both sides symmetrically — it is allocation-free here (one
+    // block per sequence, so no boundary is ever crossed)
+    let stats_a = measure_steps(rounds, || {
+        after.verify_batch_into(&inputs_a, &mut out).unwrap();
+        after.truncate(sa, prompt.len()).unwrap();
+    });
+    let stats_b = measure_steps(rounds, || {
+        before.verify_batch(&inputs_b).unwrap();
+        before.truncate(sb, prompt.len()).unwrap();
+    });
+    (stats_b, stats_a)
+}
+
+/// Chunked-admission cell: feed the prompt in uneven chunks (allocating
+/// admission work on both sides), then measure the pure decode steps that
+/// follow.
+fn chunked_cell(w: &ModelWeights, cfg: &ModelConfig, steps: usize) -> (CellStats, CellStats) {
+    let block = cfg.max_seq_len;
+    let vocab = cfg.vocab_size as u32;
+    let mut before = CpuEngine::new(w.clone(), block, BUDGET);
+    let mut after = CpuEngine::new(w.clone(), block, BUDGET);
+    after.plan_alloc(8, 0);
+    let prompt: Vec<u32> = (0..11).map(|j| (j * 7 + 2) % vocab).collect();
+    let mut admit = |e: &mut CpuEngine| {
+        let (seq, _) = e.prefill_begin(&prompt).unwrap();
+        let mut last = None;
+        for chunk in [&prompt[0..3], &prompt[3..8], &prompt[8..11]] {
+            let out = e.step_batch(&[], &[ChunkInput { seq, tokens: chunk.to_vec() }]).unwrap();
+            if let Some(row) = out.chunk_logits.into_iter().next().flatten() {
+                last = Some(argmax(&row));
+            }
+        }
+        (seq, last.expect("prompt complete"))
+    };
+    let (sb, mut tb) = admit(&mut before);
+    let (sa, mut ta) = admit(&mut after);
+    let mut out = StepOut::default();
+    for _ in 0..WARMUP {
+        after.step_batch_into(&[DecodeInput { seq: sa, token: ta }], &[], &mut out).unwrap();
+        ta = argmax(out.decode_logits.row(0));
+    }
+    let stats_a = measure_steps(steps, || {
+        after.step_batch_into(&[DecodeInput { seq: sa, token: ta }], &[], &mut out).unwrap();
+        ta = argmax(out.decode_logits.row(0));
+    });
+    let stats_b = measure_steps(steps, || {
+        let r = before.step_batch(&[DecodeInput { seq: sb, token: tb }], &[]).unwrap();
+        tb = argmax(&r.decode_logits[0]);
+    });
+    (stats_b, stats_a)
+}
+
+fn main() {
+    println!("# alloc_churn — allocating engine API vs zero-allocation step arena");
+    std::env::set_var("SKIPLESS_THREADS", "1");
+    let quick = std::env::var("SKIPLESS_BENCH_QUICK").is_ok();
+    let cfg = bench_config(quick);
+    let (steps, rounds) = if quick { (60, 40) } else { (300, 200) };
+    eprintln!("  initializing {} (vocab {}, {} measured steps)...", cfg.name, cfg.vocab_size, steps);
+    let w = ModelWeights::init_vanilla(&cfg, 4096);
+
+    let (b1_before, b1_after) = decode_cell(&w, &cfg, 1, steps);
+    report("decode_b1", "before", &b1_before);
+    report("decode_b1", "after", &b1_after);
+    let (b8_before, b8_after) = decode_cell(&w, &cfg, 8, steps);
+    report("decode_b8", "before", &b8_before);
+    report("decode_b8", "after", &b8_after);
+    let (sv_before, sv_after) = verify_cell(&w, &cfg, rounds);
+    report("spec_verify", "before", &sv_before);
+    report("spec_verify", "after", &sv_after);
+    let (ck_before, ck_after) = chunked_cell(&w, &cfg, steps);
+    report("chunked_decode", "before", &ck_before);
+    report("chunked_decode", "after", &ck_after);
+
+    // the contract, re-checked at bench length in EVERY mode: not one
+    // allocation in any measured arena-API step
+    for (mode, s) in [
+        ("decode_b1", &b1_after),
+        ("decode_b8", &b8_after),
+        ("spec_verify", &sv_after),
+        ("chunked_decode", &ck_after),
+    ] {
+        assert_eq!(
+            s.max_step_allocs, 0,
+            "{mode}: arena API allocated in steady state ({:.2}/step)",
+            s.allocs_per_step
+        );
+    }
+    // and the allocating API must actually churn, or `before` stopped
+    // meaning anything
+    assert!(b8_before.allocs_per_step >= 1.0, "allocating API reported no allocations");
+
+    let tpot_ratio = b8_before.p50_us / b8_after.p50_us.max(1e-9);
+    eprintln!("  decode_b8: median-TPOT ratio before/after = {tpot_ratio:.3}x");
+    println!(
+        "{{\"suite\":\"alloc_churn\",\"case\":\"decode_b8\",\"allocs_per_step_before\":{:.2},\"allocs_per_step_after\":{:.2},\"tpot_ratio\":{tpot_ratio:.4}}}",
+        b8_before.allocs_per_step, b8_after.allocs_per_step,
+    );
+    if !quick {
+        assert!(
+            tpot_ratio >= 1.1,
+            "batch-8 decode: arena API is only {tpot_ratio:.3}x faster (bar: 1.1x)"
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"suite\": \"alloc_churn\",\n  \"model\": \"{}\",\n  \"vocab\": {},\n  \"measured_steps\": {steps},\n  \"threads\": 1,\n  \"decode_b8_tpot_ratio\": {tpot_ratio:.4},\n{},\n{},\n{},\n{}\n}}\n",
+        cfg.name,
+        cfg.vocab_size,
+        json_mode("decode_b1", &b1_before, &b1_after),
+        json_mode("decode_b8", &b8_before, &b8_after),
+        json_mode("spec_verify", &sv_before, &sv_after),
+        json_mode("chunked_decode", &ck_before, &ck_after),
+    );
+    std::fs::write("BENCH_alloc.json", &json).expect("write BENCH_alloc.json");
+    eprintln!("  wrote BENCH_alloc.json");
+}

@@ -20,15 +20,18 @@
 
 use crate::config::{BlockLayout, ModelConfig, Variant};
 use crate::coordinator::engine::{
-    ChunkInput, DecodeInput, Engine, EngineError, StepOutput, VerifyInput,
+    AllocStats, ChunkInput, DecodeInput, Engine, EngineError, StepOut, StepOutput, VerifyInput,
+    VerifyOut,
 };
 use crate::kvcache::{BlockView, CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
 use crate::model::attention::{causal_attention_rot, HeadLayout};
-use crate::model::ffn::ffn_forward;
+use crate::model::ffn::{ffn_forward, ffn_forward_into};
 use crate::model::paged_attn::{self, AttnItem, KvSegment};
 use crate::model::{rope, ModelWeights, Weight};
 use crate::tensor::Mat;
+use crate::util::arena::{recycle, StepArena};
 use std::collections::BTreeMap;
+use std::mem;
 
 /// In-flight chunked prefill bookkeeping for one sequence
 /// ([`Engine::prefill_begin`] .. the chunk that completes the prompt).
@@ -63,6 +66,9 @@ pub struct CpuEngine {
     /// sequences admitted via [`Engine::prefill_begin`] whose prompt is not
     /// yet fully prefilled; such sequences cannot decode or verify
     chunking: BTreeMap<SeqId, ChunkState>,
+    /// reusable step scratch — the zero-allocation steady-state backbone
+    /// (`tests/alloc_regression.rs`; DESIGN.md §Memory plan)
+    arena: StepArena,
 }
 
 fn capacity(e: CacheError) -> EngineError {
@@ -92,11 +98,14 @@ impl CpuEngine {
         // log the kernel dispatch (avx2/neon/scalar) once per process
         crate::linalg::simd::announce();
         let cache = KvCache::with_opts(&weights.cfg, block_tokens, cache_budget_bytes, opts);
+        let mut arena = StepArena::new();
+        arena.ensure_layers(weights.blocks.len());
         Self {
             weights,
             cache,
             positions: BTreeMap::new(),
             chunking: BTreeMap::new(),
+            arena,
         }
     }
 
@@ -147,11 +156,10 @@ impl CpuEngine {
         // append/advance protocol is per-position).
         let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(w.blocks.len());
         for (li, b) in w.blocks.iter().enumerate() {
-            let k = Weight::proj(&x, &b.k);
-            let v = Weight::proj(&x, &b.v);
-            let mut k_rot = k;
+            let mut k_rot = Weight::proj(&x, &b.k).into_owned();
+            let v = Weight::proj(&x, &b.v).into_owned();
             rope::apply(&mut k_rot, hd, reused, rope::BASE);
-            let mut q_rot = Weight::proj(&x, &b.q);
+            let mut q_rot = Weight::proj(&x, &b.q).into_owned();
             rope::apply(&mut q_rot, hd, reused, rope::BASE);
             let a = if reused == 0 {
                 causal_attention_rot(&q_rot, &k_rot, &v, layout)
@@ -384,43 +392,96 @@ impl Engine for CpuEngine {
         decodes: &[DecodeInput],
         chunks: &[ChunkInput],
     ) -> Result<StepOutput, EngineError> {
+        // thin wrapper over the arena-native path — bit-identical by
+        // construction (same kernels, same order; only output provenance)
+        let mut out = StepOut::default();
+        self.step_batch_into(decodes, chunks, &mut out)?;
+        Ok(StepOutput {
+            decode_logits: (0..out.decode_logits.rows())
+                .map(|r| out.decode_logits.row(r).to_vec())
+                .collect(),
+            chunk_logits: out.chunk_logits,
+        })
+    }
+
+    /// The native fused step: identical math to the documented
+    /// [`Engine::step_batch`] contract above, with every transient buffer
+    /// drawn from the [`StepArena`] — a steady-state decode step (no chunk
+    /// rows, no block-boundary crossing) performs **zero** heap
+    /// allocations after warmup (`tests/alloc_regression.rs`).
+    fn step_batch_into(
+        &mut self,
+        decodes: &[DecodeInput],
+        chunks: &[ChunkInput],
+        out: &mut StepOut,
+    ) -> Result<(), EngineError> {
+        out.decode_logits.reset(0, 0);
+        out.chunk_logits.clear();
         if decodes.is_empty() && chunks.is_empty() {
-            return Ok(StepOutput::default());
+            return Ok(());
         }
-        let cfg = self.weights.cfg.clone();
-        let hd = cfg.head_dim();
         let layout = self.head_layout();
+        let hd = self.weights.cfg.head_dim();
         let e = layout.e();
-        let layout_kind = cfg.layout;
+        let dim = self.weights.cfg.dim;
+        let n_heads = self.weights.cfg.n_heads;
+        let n_kv_heads = self.weights.cfg.n_kv_heads;
+        let max_seq_len = self.weights.cfg.max_seq_len;
+        let ffn_kind = self.weights.cfg.ffn;
+        let layout_kind = self.weights.cfg.layout;
         let quantized_pool = self.cache.quantized();
+        let Self { weights, cache, positions, chunking, arena } = self;
+        arena.ensure_layers(weights.blocks.len());
+        // disjoint borrows of the arena's buffers (one per purpose)
+        let dec_pos = &mut arena.dec_pos;
+        let chunk_meta = &mut arena.chunk_meta;
+        let toks = &mut arena.toks;
+        let chunk_row0 = &mut arena.chunk_row0;
+        let rowpos = &mut arena.rowpos;
+        let ranges = &mut arena.ranges;
+        let chunk_done = &mut arena.chunk_done;
+        let sel = &mut arena.sel;
+        let x = &mut arena.x;
+        let q = &mut arena.q;
+        let a = &mut arena.a;
+        let pbuf = &mut arena.p;
+        let h = &mut arena.h;
+        let g = &mut arena.g;
+        let f = &mut arena.f;
+        let sub = &mut arena.sub;
+        let logits = &mut arena.logits;
+        let layer_kv = &mut arena.layer_kv;
+        let qs = &mut arena.qs;
+        let scores = &mut arena.scores;
+        let views_slot = &mut arena.views;
+        let items_slot = &mut arena.items;
 
         // ---- validate + reserve up front (fail before any state change) -
         let nd = decodes.len();
-        let mut dec_pos = Vec::with_capacity(nd);
+        dec_pos.clear();
         let mut fresh_needed = 0usize;
         for i in decodes {
-            if self.chunking.contains_key(&i.seq) {
+            if chunking.contains_key(&i.seq) {
                 return Err(EngineError::BadSequence(format!(
                     "{:?} is still prefilling",
                     i.seq
                 )));
             }
-            let p = *self
-                .positions
+            let pos = *positions
                 .get(&i.seq)
                 .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", i.seq)))?;
-            if p >= cfg.max_seq_len {
+            if pos >= max_seq_len {
                 return Err(EngineError::CapacityExhausted(format!(
-                    "{:?} at max_seq_len {}",
-                    i.seq, cfg.max_seq_len
+                    "{:?} at max_seq_len {max_seq_len}",
+                    i.seq
                 )));
             }
-            fresh_needed += self.cache.blocks_to_grow(i.seq, 1);
-            dec_pos.push(p);
+            fresh_needed += cache.blocks_to_grow(i.seq, 1);
+            dec_pos.push(pos);
         }
         // (start, reused) per chunk; the chunk's own blocks were all
         // reserved at prefill_begin, so chunks never need fresh blocks
-        let mut chunk_meta = Vec::with_capacity(chunks.len());
+        chunk_meta.clear();
         for (ci, c) in chunks.iter().enumerate() {
             if chunks[..ci].iter().any(|o| o.seq == c.seq) {
                 return Err(EngineError::BadSequence(format!(
@@ -428,7 +489,7 @@ impl Engine for CpuEngine {
                     c.seq
                 )));
             }
-            let st = self.chunking.get(&c.seq).ok_or_else(|| {
+            let st = chunking.get(&c.seq).ok_or_else(|| {
                 EngineError::BadSequence(format!("{:?} has no chunked prefill in flight", c.seq))
             })?;
             if c.tokens.is_empty() {
@@ -451,33 +512,36 @@ impl Engine for CpuEngine {
             }
             chunk_meta.push((st.filled, st.reused));
         }
-        if fresh_needed > self.cache.free_blocks() {
+        if fresh_needed > cache.free_blocks() {
             return Err(EngineError::CapacityExhausted(format!(
                 "fused step needs {fresh_needed} blocks, {} free",
-                self.cache.free_blocks()
+                cache.free_blocks()
             )));
         }
 
         // ---- flattened row layout: decode rows first, then chunk rows ---
-        let mut toks: Vec<u32> = decodes.iter().map(|i| i.token).collect();
-        let mut chunk_row0 = Vec::with_capacity(chunks.len());
+        toks.clear();
+        toks.extend(decodes.iter().map(|i| i.token));
+        chunk_row0.clear();
         for c in chunks {
             chunk_row0.push(toks.len());
             toks.extend_from_slice(&c.tokens);
         }
         let total_rows = toks.len();
-        let mut x = self.weights.embed_tokens(&toks);
+        weights.embed_tokens_into(toks, x);
         // absolute position of every flattened row
-        let mut rowpos: Vec<usize> = dec_pos.clone();
-        for (c, &(start, _)) in chunks.iter().zip(&chunk_meta) {
+        rowpos.clear();
+        rowpos.extend_from_slice(dec_pos);
+        for (c, &(start, _)) in chunks.iter().zip(chunk_meta.iter()) {
             rowpos.extend((0..c.tokens.len()).map(|j| start + j));
         }
 
         let mut paged_reads = 0u64;
         // view-table scratch: `ranges` is lifetime-free and reused across
-        // layers; `views`/`items` borrow the cache per layer but are
-        // pre-sized — O(blocks) bookkeeping, no O(t·e) buffers.
-        let bt = self.cache.block_tokens().max(1);
+        // layers; `views`/`items` borrow the cache per layer, so their
+        // allocations are parked in the arena between uses ([`recycle`]) —
+        // O(blocks) bookkeeping, no O(t·e) buffers, no per-step churn.
+        let bt = cache.block_tokens().max(1);
         let view_upto = |&(start, reused): &(usize, usize)| -> usize {
             // a u8 pool's views stop at the shared-prefix boundary (later
             // positions re-read raw from ChunkState); f32 pools store
@@ -497,57 +561,59 @@ impl Engine for CpuEngine {
                 .iter()
                 .map(|m| view_upto(m).div_ceil(bt).max(1))
                 .sum::<usize>();
-        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nd + chunks.len());
-        let n_layers = self.weights.blocks.len();
-        // every layer's (rotated-K, V) rows — kept so chunk rows can be
-        // written to the paged cache position-major after the layer loop
-        // (the cache's append/advance protocol is per-position)
-        let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(n_layers);
+        let n_layers = weights.blocks.len();
         for li in 0..n_layers {
-            let b = &self.weights.blocks[li];
+            let b = &weights.blocks[li];
+            // every layer's (rotated-K, V) rows persist in the arena so
+            // chunk rows can be written to the paged cache position-major
+            // after the layer loop (append/advance is per-position)
+            let (k, v) = &mut layer_kv[li];
             // shared projections: each weight matrix streamed ONCE for
             // every decode row AND prefill-chunk row — the fused step's
             // whole point on weight-bandwidth-bound hardware
-            let mut q = Weight::proj(&x, &b.q);
-            let mut k = Weight::proj(&x, &b.k);
-            let v = Weight::proj(&x, &b.v);
+            Weight::proj_into(x, &b.q, qs, q);
+            Weight::proj_into(x, &b.k, qs, k);
+            Weight::proj_into(x, &b.v, qs, v);
             // per-row RoPE at each row's own absolute position
-            for (r, &p) in rowpos.iter().enumerate() {
-                for h in 0..cfg.n_heads {
-                    rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+            for (r, &pos) in rowpos.iter().enumerate() {
+                for hh in 0..n_heads {
+                    rope::rotate_head(&mut q.row_mut(r)[hh * hd..(hh + 1) * hd], pos, rope::BASE);
                 }
-                for g in 0..cfg.n_kv_heads {
-                    rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                for gg in 0..n_kv_heads {
+                    rope::rotate_head(&mut k.row_mut(r)[gg * hd..(gg + 1) * hd], pos, rope::BASE);
                 }
             }
             // decode rows write their K/V first (growth/CoW against each
             // sequence's OWN block table; chunk sequences get no writes
             // inside the layer loop, so every view below stays stable)...
             for (r, inp) in decodes.iter().enumerate() {
-                self.cache
+                cache
                     .append(inp.seq, li, k.row(r), v.row(r))
                     .map_err(capacity)?;
             }
             // ...then ALL attention rows — decode and chunk alike — run as
             // one (row × head) grid over zero-copy views plus register
             // tails.
-            let mut views: Vec<BlockView> = Vec::with_capacity(n_views);
+            let mut views: Vec<BlockView> = recycle(mem::take(views_slot));
+            if views.capacity() < n_views {
+                views.reserve(n_views);
+            }
             ranges.clear();
             for inp in decodes {
                 let start = views.len();
-                views.extend(self.cache.seq_block_views(inp.seq, li).map_err(bad_seq)?);
+                views.extend(cache.seq_block_views(inp.seq, li).map_err(bad_seq)?);
                 ranges.push((start, views.len()));
             }
-            for (c, m) in chunks.iter().zip(&chunk_meta) {
+            for (c, m) in chunks.iter().zip(chunk_meta.iter()) {
                 let start = views.len();
                 views.extend(
-                    self.cache
+                    cache
                         .seq_block_views_upto(c.seq, li, view_upto(m))
                         .map_err(bad_seq)?,
                 );
                 ranges.push((start, views.len()));
             }
-            let mut items: Vec<AttnItem> = Vec::with_capacity(total_rows);
+            let mut items: Vec<AttnItem> = recycle(mem::take(items_slot));
             items.extend(decodes.iter().enumerate().map(|(r, _)| AttnItem {
                 q_rot: q.row(r),
                 views: &views[ranges[r].0..ranges[r].1],
@@ -568,7 +634,7 @@ impl Engine for CpuEngine {
                 let k_chunk = &k.as_slice()[r0 * e..(r0 + s) * e];
                 let v_chunk = &v.as_slice()[r0 * e..(r0 + s) * e];
                 if quantized_pool {
-                    let (rk, rv) = &self.chunking[&c.seq].raw[li];
+                    let (rk, rv) = &chunking[&c.seq].raw[li];
                     items.extend((0..s).map(|j| AttnItem {
                         q_rot: q.row(r0 + j),
                         views: &views[range.0..range.1],
@@ -596,10 +662,12 @@ impl Engine for CpuEngine {
                     }));
                 }
             }
-            let mut a = Mat::zeros(total_rows, cfg.dim);
-            paged_attn::attend_batch(layout, &items, &mut a);
-            drop(items);
-            drop(views);
+            a.reset(total_rows, dim);
+            paged_attn::attend_batch_scratch(layout, &items, a, scores);
+            // park the borrow-carrying tables' allocations back in the
+            // arena (items first: they borrow views)
+            *items_slot = recycle(items);
+            *views_slot = recycle(views);
             // leading chunks (no cached history at all) run the monolithic
             // prefill kernel over their own rows — the exact code path
             // `prefill_shared` takes for a cold prompt
@@ -620,56 +688,55 @@ impl Engine for CpuEngine {
                 }
             }
             paged_reads += dec_pos.iter().map(|&p| p as u64).sum::<u64>();
-            for (c, m) in chunks.iter().zip(&chunk_meta) {
+            for (c, m) in chunks.iter().zip(chunk_meta.iter()) {
                 paged_reads += (c.tokens.len() * view_upto(m)) as u64;
             }
-            if !chunks.is_empty() {
-                // retain only the chunk rows (contiguous tail): the
-                // post-loop commit never reads decode rows, and keeping the
-                // full matrices would scale transient memory with the
-                // decode batch instead of the chunk sizes
-                layer_kv.push((k.row_slice(nd, total_rows), v.row_slice(nd, total_rows)));
-            }
-            // post-attention + FFN, batched over the whole phase mix
-            x = match layout_kind {
+            // post-attention + FFN, batched over the whole phase mix; the
+            // block output lands in a scratch matrix that swaps with `x`
+            match layout_kind {
                 BlockLayout::Serial => {
-                    let p = Weight::proj(&a, &b.p);
-                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                    Weight::proj_into(a, &b.p, qs, pbuf);
+                    ffn_forward_into(pbuf, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    mem::swap(x, f);
                 }
                 BlockLayout::Parallel => {
                     let post = if b.c.is_some() { &b.c } else { &b.p };
-                    let attn_out = Weight::proj(&a, post);
-                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                    Weight::proj_into(a, post, qs, pbuf);
+                    ffn_forward_into(x, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    // attn_out + ffn_out, same operand order as the
+                    // allocating `attn_out.add(&ffn_out)`
+                    pbuf.add_assign(f);
+                    mem::swap(x, pbuf);
                 }
-            };
+            }
         }
-        self.cache.note_paged_attn(paged_reads);
+        cache.note_paged_attn(paged_reads);
 
         // ---- commit chunk rows: position-major cache writes, raw-tail and
         // prefix-registration bookkeeping, completion detection ----------
-        let bt = self.cache.block_tokens();
-        let mut chunk_done = vec![false; chunks.len()];
+        let bt = cache.block_tokens();
+        chunk_done.clear();
+        chunk_done.resize(chunks.len(), false);
         for (ci, c) in chunks.iter().enumerate() {
-            // layer_kv rows are the chunk rows only, so indices shift by nd
-            let r0 = chunk_row0[ci] - nd;
+            // arena layer_kv holds ALL rows, so chunk rows index directly
+            let r0 = chunk_row0[ci];
             let s = c.tokens.len();
             let (cstart, _) = chunk_meta[ci];
             for j in 0..s {
                 for (li, (lk, lv)) in layer_kv.iter().enumerate() {
-                    if let Err(err) = self.cache.append(c.seq, li, lk.row(r0 + j), lv.row(r0 + j))
-                    {
+                    if let Err(err) = cache.append(c.seq, li, lk.row(r0 + j), lv.row(r0 + j)) {
                         // unreachable: the chunk's blocks were reserved at
                         // prefill_begin. Restore the pre-step length so a
                         // retry is clean, then surface the failure.
-                        let _ = self.cache.truncate_seq(c.seq, cstart);
+                        let _ = cache.truncate_seq(c.seq, cstart);
                         return Err(capacity(err));
                     }
                 }
-                self.cache.advance(c.seq).map_err(bad_seq)?;
+                cache.advance(c.seq).map_err(bad_seq)?;
             }
-            let st = self.chunking.get_mut(&c.seq).expect("validated above");
+            let st = chunking.get_mut(&c.seq).expect("validated above");
             st.filled += s;
-            *self.positions.get_mut(&c.seq).expect("live") = st.filled;
+            *positions.get_mut(&c.seq).expect("live") = st.filled;
             if quantized_pool {
                 for (li, (lk, lv)) in layer_kv.iter().enumerate() {
                     let (rk, rv) = &mut st.raw[li];
@@ -681,170 +748,238 @@ impl Engine for CpuEngine {
             // admitted between chunks can already share them
             while st.registered + bt <= st.filled {
                 let block = &st.prompt[st.registered..st.registered + bt];
-                self.cache
+                cache
                     .register_prompt_block(c.seq, block)
                     .map_err(bad_seq)?;
                 st.registered += bt;
             }
             if st.filled == st.prompt.len() {
                 chunk_done[ci] = true;
-                self.chunking.remove(&c.seq);
+                chunking.remove(&c.seq);
             }
         }
         // decode rows: one advance per sequence per token
         for inp in decodes {
-            self.cache.advance(inp.seq).map_err(bad_seq)?;
-            *self.positions.get_mut(&inp.seq).unwrap() += 1;
+            cache.advance(inp.seq).map_err(bad_seq)?;
+            *positions.get_mut(&inp.seq).unwrap() += 1;
         }
 
         // ---- unembed only the rows that need logits: every decode row,
         // plus the last row of each chunk that completed its prompt (a
         // monolithic prefill unembeds only the last position too) ---------
-        let mut sel: Vec<usize> = (0..nd).collect();
+        sel.clear();
+        sel.extend(0..nd);
         for (ci, c) in chunks.iter().enumerate() {
             if chunk_done[ci] {
                 sel.push(chunk_row0[ci] + c.tokens.len() - 1);
             }
         }
         if sel.is_empty() {
-            return Ok(StepOutput {
-                decode_logits: Vec::new(),
-                chunk_logits: vec![None; chunks.len()],
-            });
+            out.chunk_logits.resize(chunks.len(), None);
+            arena.note_step();
+            return Ok(());
         }
-        let mut sub = Mat::zeros(sel.len(), cfg.dim);
+        sub.reset(sel.len(), dim);
         for (i, &r) in sel.iter().enumerate() {
             sub.row_mut(i).copy_from_slice(x.row(r));
         }
-        let logits = self.weights.unembed.matmul(&sub);
-        let decode_logits = (0..nd).map(|r| logits.row(r).to_vec()).collect();
-        let mut chunk_logits = Vec::with_capacity(chunks.len());
-        let mut next = nd;
-        for done in &chunk_done {
-            if *done {
-                chunk_logits.push(Some(logits.row(next).to_vec()));
-                next += 1;
-            } else {
-                chunk_logits.push(None);
+        if sel.len() == nd {
+            // no chunk completed: the unembed rows ARE the decode rows, so
+            // write them straight into the caller's reusable buffer (GEMM
+            // output rows are independent — bit-identical to the staging
+            // path below)
+            weights.unembed.matmul_into(sub, qs, &mut out.decode_logits);
+            out.chunk_logits.resize(chunks.len(), None);
+        } else {
+            weights.unembed.matmul_into(sub, qs, logits);
+            out.decode_logits.reset(nd, logits.cols());
+            for r in 0..nd {
+                out.decode_logits.row_mut(r).copy_from_slice(logits.row(r));
+            }
+            let mut next = nd;
+            for done in chunk_done.iter() {
+                if *done {
+                    out.chunk_logits.push(Some(logits.row(next).to_vec()));
+                    next += 1;
+                } else {
+                    out.chunk_logits.push(None);
+                }
             }
         }
-        Ok(StepOutput {
-            decode_logits,
-            chunk_logits,
-        })
+        arena.note_step();
+        Ok(())
     }
 
     fn verify_batch(&mut self, inputs: &[VerifyInput]) -> Result<Vec<Vec<Vec<f32>>>, EngineError> {
-        if inputs.is_empty() {
-            return Ok(Vec::new());
+        // thin wrapper over the arena-native path — bit-identical by
+        // construction (same kernels, same order; only output provenance)
+        let mut out = VerifyOut::default();
+        self.verify_batch_into(inputs, &mut out)?;
+        let mut nested = Vec::with_capacity(inputs.len());
+        for (i, vi) in inputs.iter().enumerate() {
+            let r0 = out.row0[i];
+            nested.push(
+                (r0..r0 + vi.tokens.len())
+                    .map(|r| out.rows.row(r).to_vec())
+                    .collect(),
+            );
         }
-        let cfg = self.weights.cfg.clone();
-        let hd = cfg.head_dim();
+        Ok(nested)
+    }
+
+    /// The native widened verify step: identical math to the documented
+    /// [`Engine::verify_batch`] contract above, with every transient buffer
+    /// drawn from the [`StepArena`] — a steady-state verify step (no
+    /// block-boundary crossing) performs **zero** heap allocations after
+    /// warmup (`tests/alloc_regression.rs`).
+    fn verify_batch_into(
+        &mut self,
+        inputs: &[VerifyInput],
+        out: &mut VerifyOut,
+    ) -> Result<(), EngineError> {
+        out.rows.reset(0, 0);
+        out.row0.clear();
+        if inputs.is_empty() {
+            return Ok(());
+        }
         let layout = self.head_layout();
+        let hd = self.weights.cfg.head_dim();
+        let dim = self.weights.cfg.dim;
+        let n_heads = self.weights.cfg.n_heads;
+        let n_kv_heads = self.weights.cfg.n_kv_heads;
+        let max_seq_len = self.weights.cfg.max_seq_len;
+        let ffn_kind = self.weights.cfg.ffn;
+        let layout_kind = self.weights.cfg.layout;
+        let Self { weights, cache, positions, chunking, arena } = self;
+        arena.ensure_layers(weights.blocks.len());
+        // disjoint borrows of the arena's buffers; `dec_pos` doubles as the
+        // per-input committed base position here
+        let base = &mut arena.dec_pos;
+        let toks = &mut arena.toks;
+        let rowpos = &mut arena.rowpos;
+        let row0 = &mut arena.row0;
+        let ranges = &mut arena.ranges;
+        let tails = &mut arena.tails;
+        let rt_codes = &mut arena.rt_codes;
+        let rt_vals = &mut arena.rt_vals;
+        let x = &mut arena.x;
+        let q = &mut arena.q;
+        let a = &mut arena.a;
+        let pbuf = &mut arena.p;
+        let h = &mut arena.h;
+        let g = &mut arena.g;
+        let f = &mut arena.f;
+        let layer_kv = &mut arena.layer_kv;
+        let qs = &mut arena.qs;
+        let scores = &mut arena.scores;
+        let views_slot = &mut arena.views;
+        let items_slot = &mut arena.items;
+
         // Up-front validation + capacity reservation (counting worst-case
         // CoW): fail before any state changes, so a rejected widened step
         // needs no cleanup and the scheduler can simply fall back to plain
         // decode.
-        let mut base = Vec::with_capacity(inputs.len());
+        base.clear();
         let mut fresh_needed = 0usize;
         for vi in inputs {
             if vi.tokens.is_empty() {
                 return Err(EngineError::BadSequence("empty verify input".into()));
             }
-            if self.chunking.contains_key(&vi.seq) {
+            if chunking.contains_key(&vi.seq) {
                 return Err(EngineError::BadSequence(format!(
                     "{:?} is still prefilling",
                     vi.seq
                 )));
             }
-            let p = *self
-                .positions
+            let pos = *positions
                 .get(&vi.seq)
                 .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", vi.seq)))?;
-            if p + vi.tokens.len() > cfg.max_seq_len {
+            if pos + vi.tokens.len() > max_seq_len {
                 return Err(EngineError::CapacityExhausted(format!(
-                    "{:?} would exceed max_seq_len {}",
-                    vi.seq, cfg.max_seq_len
+                    "{:?} would exceed max_seq_len {max_seq_len}",
+                    vi.seq
                 )));
             }
-            fresh_needed += self.cache.blocks_to_grow(vi.seq, vi.tokens.len());
-            base.push(p);
+            fresh_needed += cache.blocks_to_grow(vi.seq, vi.tokens.len());
+            base.push(pos);
         }
-        if fresh_needed > self.cache.free_blocks() {
+        if fresh_needed > cache.free_blocks() {
             return Err(EngineError::CapacityExhausted(format!(
                 "verify step needs {fresh_needed} blocks, {} free",
-                self.cache.free_blocks()
+                cache.free_blocks()
             )));
         }
         let total_rows: usize = inputs.iter().map(|i| i.tokens.len()).sum();
-        let toks: Vec<u32> = inputs.iter().flat_map(|i| i.tokens.iter().copied()).collect();
-        let mut x = self.weights.embed_tokens(&toks);
+        toks.clear();
+        toks.extend(inputs.iter().flat_map(|i| i.tokens.iter().copied()));
+        weights.embed_tokens_into(toks, x);
         // absolute position of every flattened row, and each sequence's
         // first flattened row
-        let mut rowpos = Vec::with_capacity(total_rows);
-        let mut row0 = Vec::with_capacity(inputs.len());
-        for (vi, &p) in inputs.iter().zip(&base) {
+        rowpos.clear();
+        row0.clear();
+        for (vi, &pos) in inputs.iter().zip(base.iter()) {
             row0.push(rowpos.len());
             for j in 0..vi.tokens.len() {
-                rowpos.push(p + j);
+                rowpos.push(pos + j);
             }
         }
         let ew = layout.e();
         let max_s = inputs.iter().map(|i| i.tokens.len()).max().unwrap_or(0);
-        // roundtrip scratch for the u8-pool path (reused across all rows)
-        let (mut rt_codes, mut rt_vals) = (Vec::new(), Vec::new());
         // per-sequence draft tails: earlier draft rows of this layer,
         // roundtripped through the pool's quantizer so attention over them
         // reads, bit for bit, what a sequential decode would have gathered
         // back out of the cache
-        let mut tails: Vec<(Vec<f32>, Vec<f32>)> =
-            inputs.iter().map(|_| (Vec::new(), Vec::new())).collect();
+        if tails.len() < inputs.len() {
+            tails.resize_with(inputs.len(), Default::default);
+        }
         let mut paged_reads = 0u64;
         // lifetime-free view-table scratch, reused across layers
-        let bt = self.cache.block_tokens();
+        let bt = cache.block_tokens();
         let n_views: usize = base.iter().map(|&p| p.div_ceil(bt.max(1)).max(1)).sum();
-        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(inputs.len());
-        let n_layers = self.weights.blocks.len();
-        // every layer's (rotated-K, V) rows, written to the paged cache
-        // position-major after the layer loop (the cache's append/advance
-        // protocol is per-position)
-        let mut layer_kv: Vec<(Mat, Mat)> = Vec::with_capacity(n_layers);
+        let n_layers = weights.blocks.len();
         for li in 0..n_layers {
-            let b = &self.weights.blocks[li];
+            let b = &weights.blocks[li];
+            // every layer's (rotated-K, V) rows persist in the arena and
+            // are written to the paged cache position-major after the layer
+            // loop (the cache's append/advance protocol is per-position)
+            let (k, v) = &mut layer_kv[li];
             // the widened step: each weight matrix is streamed ONCE for all
             // (sequence × draft position) rows — k+1 tokens of target
             // compute per sequence at one batched step's weight traffic
-            let mut q = Weight::proj(&x, &b.q);
-            let mut k = Weight::proj(&x, &b.k);
-            let v = Weight::proj(&x, &b.v);
-            for (r, &p) in rowpos.iter().enumerate() {
-                for h in 0..cfg.n_heads {
-                    rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+            Weight::proj_into(x, &b.q, qs, q);
+            Weight::proj_into(x, &b.k, qs, k);
+            Weight::proj_into(x, &b.v, qs, v);
+            for (r, &pos) in rowpos.iter().enumerate() {
+                for hh in 0..n_heads {
+                    rope::rotate_head(&mut q.row_mut(r)[hh * hd..(hh + 1) * hd], pos, rope::BASE);
                 }
-                for g in 0..cfg.n_kv_heads {
-                    rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                for gg in 0..n_kv_heads {
+                    rope::rotate_head(&mut k.row_mut(r)[gg * hd..(gg + 1) * hd], pos, rope::BASE);
                 }
             }
             // zero-copy views over each sequence's cached history — stable
             // for the whole layer (cache writes happen after the layer loop)
-            let mut views: Vec<BlockView> = Vec::with_capacity(n_views);
+            let mut views: Vec<BlockView> = recycle(mem::take(views_slot));
+            if views.capacity() < n_views {
+                views.reserve(n_views);
+            }
             ranges.clear();
             for vi in inputs {
                 let start = views.len();
-                views.extend(self.cache.seq_block_views(vi.seq, li).map_err(bad_seq)?);
+                views.extend(cache.seq_block_views(vi.seq, li).map_err(bad_seq)?);
                 ranges.push((start, views.len()));
             }
-            for (tk, tv) in tails.iter_mut() {
+            for (tk, tv) in tails.iter_mut().take(inputs.len()) {
                 tk.clear();
                 tv.clear();
             }
-            let mut a = Mat::zeros(total_rows, cfg.dim);
+            a.reset(total_rows, dim);
             // draft position j of every sequence runs as one parallel
             // (sequence × head) wave; waves are sequential because row j+1
             // must read row j's ROUNDTRIPPED K/V (sequential-decode
             // semantics), which is written between waves.
             for j in 0..max_s {
-                let mut items: Vec<AttnItem> = Vec::with_capacity(inputs.len());
+                let mut items: Vec<AttnItem> = recycle(mem::take(items_slot));
                 items.extend(
                     inputs
                         .iter()
@@ -868,8 +1003,10 @@ impl Engine for CpuEngine {
                             }
                         }),
                 );
-                paged_attn::attend_batch(layout, &items, &mut a);
-                drop(items);
+                paged_attn::attend_batch_scratch(layout, &items, a, scores);
+                // the tails mutate between waves, so the item table must
+                // release its borrow first — park its allocation back
+                *items_slot = recycle(items);
                 for (i, vi) in inputs.iter().enumerate() {
                     if vi.tokens.len() <= j {
                         continue;
@@ -880,51 +1017,61 @@ impl Engine for CpuEngine {
                     tk.extend_from_slice(k.row(r));
                     tv.extend_from_slice(v.row(r));
                     let last = tk.len() - ew;
-                    self.cache
-                        .quantize_roundtrip(&mut tk[last..], &mut rt_codes, &mut rt_vals);
-                    self.cache
-                        .quantize_roundtrip(&mut tv[last..], &mut rt_codes, &mut rt_vals);
+                    cache.quantize_roundtrip(&mut tk[last..], rt_codes, rt_vals);
+                    cache.quantize_roundtrip(&mut tv[last..], rt_codes, rt_vals);
                 }
             }
-            layer_kv.push((k, v));
-            x = match cfg.layout {
+            *views_slot = recycle(views);
+            match layout_kind {
                 BlockLayout::Serial => {
-                    let p = Weight::proj(&a, &b.p);
-                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                    Weight::proj_into(a, &b.p, qs, pbuf);
+                    ffn_forward_into(pbuf, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    mem::swap(x, f);
                 }
                 BlockLayout::Parallel => {
                     let post = if b.c.is_some() { &b.c } else { &b.p };
-                    let attn_out = Weight::proj(&a, post);
-                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                    Weight::proj_into(a, post, qs, pbuf);
+                    ffn_forward_into(x, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    // attn_out + ffn_out, same operand order as the
+                    // allocating `attn_out.add(&ffn_out)`
+                    pbuf.add_assign(f);
+                    mem::swap(x, pbuf);
                 }
-            };
+            }
         }
-        self.cache.note_paged_attn(paged_reads);
+        cache.note_paged_attn(paged_reads);
         // position-major cache writes: all layers of a position, then advance
         let mut r0 = 0usize;
         for vi in inputs {
             for j in 0..vi.tokens.len() {
                 for (li, (k, v)) in layer_kv.iter().enumerate() {
-                    self.cache
+                    cache
                         .append(vi.seq, li, k.row(r0 + j), v.row(r0 + j))
                         .map_err(capacity)?;
                 }
-                self.cache.advance(vi.seq).map_err(bad_seq)?;
+                cache.advance(vi.seq).map_err(bad_seq)?;
             }
-            *self.positions.get_mut(&vi.seq).unwrap() += vi.tokens.len();
+            *positions.get_mut(&vi.seq).unwrap() += vi.tokens.len();
             r0 += vi.tokens.len();
         }
-        let logits = self.weights.unembed.matmul(&x);
-        let mut out = Vec::with_capacity(inputs.len());
-        let mut r0 = 0usize;
-        for vi in inputs {
-            let rows: Vec<Vec<f32>> = (r0..r0 + vi.tokens.len())
-                .map(|r| logits.row(r).to_vec())
-                .collect();
-            out.push(rows);
-            r0 += vi.tokens.len();
-        }
-        Ok(out)
+        weights.unembed.matmul_into(x, qs, &mut out.rows);
+        out.row0.extend_from_slice(row0);
+        arena.note_step();
+        Ok(())
+    }
+
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        let (arena_bytes, growth_events) = self.arena.stats();
+        Some(AllocStats {
+            arena_bytes,
+            growth_events,
+        })
+    }
+
+    fn plan_alloc(&mut self, max_rows: usize, spec_k: usize) {
+        let cfg = self.weights.cfg.clone();
+        self.arena.ensure_layers(self.weights.blocks.len());
+        self.arena.plan(&cfg, max_rows, spec_k);
     }
 
     fn truncate(&mut self, seq: SeqId, new_len: usize) -> Result<(), EngineError> {

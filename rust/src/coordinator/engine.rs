@@ -12,6 +12,7 @@
 
 use crate::config::ModelConfig;
 use crate::kvcache::{CacheSnapshot, SeqId};
+use crate::tensor::Mat;
 use std::fmt;
 
 #[derive(Debug)]
@@ -63,6 +64,40 @@ pub struct StepOutput {
     /// One entry per chunk input, in order: `Some(last-position logits)`
     /// exactly when that chunk completed its sequence's prompt.
     pub chunk_logits: Vec<Option<Vec<f32>>>,
+}
+
+/// Reusable output of [`Engine::step_batch_into`]: decode logits land in a
+/// caller-owned matrix whose capacity survives across steps, so a
+/// steady-state decode step writes results without touching the heap.
+/// Chunk completions (rare, never steady-state) still allocate their rows.
+#[derive(Debug, Default)]
+pub struct StepOut {
+    /// `(n_decodes, vocab)` — row `r` is decode input `r`'s logits.
+    pub decode_logits: Mat,
+    /// One entry per chunk input, in order: `Some(last-position logits)`
+    /// exactly when that chunk completed its sequence's prompt.
+    pub chunk_logits: Vec<Option<Vec<f32>>>,
+}
+
+/// Reusable output of [`Engine::verify_batch_into`]: all logits rows of the
+/// widened step flattened into one matrix, with `row0[i]` the first row of
+/// input `i` (input `i` owns rows `row0[i]..row0[i] + inputs[i].tokens.len()`).
+#[derive(Debug, Default)]
+pub struct VerifyOut {
+    pub rows: Mat,
+    pub row0: Vec<usize>,
+}
+
+/// Step-arena accounting, for engines that run the zero-allocation
+/// steady-state path (`None` from everything else). Mirrored into the
+/// `alloc.*` metrics gauges by the scheduler.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AllocStats {
+    /// Bytes of reusable scratch the arena currently holds.
+    pub arena_bytes: u64,
+    /// Steps whose end-of-step arena footprint grew past the prior high
+    /// water (expected 0 once warmed up).
+    pub growth_events: u64,
 }
 
 /// One sequence's multi-position input for a widened verify step
@@ -295,4 +330,66 @@ pub trait Engine {
     fn shard_stats(&self) -> Option<ShardStats> {
         None
     }
+
+    // ---- zero-allocation steady state (optional; defaults delegate to
+    // the allocating forms, so every engine stays correct) ----------------
+
+    /// [`Engine::step_batch`] into caller-owned, capacity-reusing output.
+    /// Engines with a step arena override this as the native path (zero
+    /// heap allocations per steady-state decode step after warmup —
+    /// `tests/alloc_regression.rs`); results are bit-identical to
+    /// [`Engine::step_batch`] either way.
+    fn step_batch_into(
+        &mut self,
+        decodes: &[DecodeInput],
+        chunks: &[ChunkInput],
+        out: &mut StepOut,
+    ) -> Result<(), EngineError> {
+        let r = self.step_batch(decodes, chunks)?;
+        let vocab = r.decode_logits.first().map_or(0, Vec::len);
+        out.decode_logits.reset(r.decode_logits.len(), vocab);
+        for (i, row) in r.decode_logits.iter().enumerate() {
+            out.decode_logits.row_mut(i).copy_from_slice(row);
+        }
+        out.chunk_logits = r.chunk_logits;
+        Ok(())
+    }
+
+    /// [`Engine::verify_batch`] into caller-owned, capacity-reusing output
+    /// (flattened rows + per-input start offsets). Bit-identical rows.
+    fn verify_batch_into(
+        &mut self,
+        inputs: &[VerifyInput],
+        out: &mut VerifyOut,
+    ) -> Result<(), EngineError> {
+        let nested = self.verify_batch(inputs)?;
+        let total: usize = nested.iter().map(Vec::len).sum();
+        let vocab = nested
+            .iter()
+            .find_map(|rows| rows.first().map(Vec::len))
+            .unwrap_or(0);
+        out.rows.reset(total, vocab);
+        out.row0.clear();
+        let mut r = 0usize;
+        for rows in &nested {
+            out.row0.push(r);
+            for row in rows {
+                out.rows.row_mut(r).copy_from_slice(row);
+                r += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Step-arena accounting ([`AllocStats`]); `None` for engines without
+    /// a zero-allocation steady-state path.
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        None
+    }
+
+    /// Pre-reserve step-arena capacity for up to `max_rows` flattened rows
+    /// per step (scheduler max batch × widest per-sequence row count) and
+    /// `spec_k` draft tokens. Best-effort; a warmup step completes the
+    /// sizing. No-op for engines without an arena.
+    fn plan_alloc(&mut self, _max_rows: usize, _spec_k: usize) {}
 }

@@ -20,7 +20,8 @@ pub mod sharded;
 
 pub use cpu_engine::CpuEngine;
 pub use engine::{
-    ChunkInput, DecodeInput, Engine, EngineError, ShardStats, StepOutput, VerifyInput,
+    AllocStats, ChunkInput, DecodeInput, Engine, EngineError, ShardStats, StepOut, StepOutput,
+    VerifyInput, VerifyOut,
 };
 pub use scheduler::{FinishReason, Request, Response, Scheduler, SchedulerCfg};
 pub use sharded::ShardedEngine;

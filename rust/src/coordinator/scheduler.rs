@@ -44,7 +44,7 @@
 //! the committed length — and a plain sub-step for everything else.
 //! Acceptance dispatches on the request's sampler: greedy requests use
 //! [`accept_greedy`], stochastic requests the rejection rule in
-//! [`accept_stochastic`]; both make the output stream byte-identical to
+//! [`crate::sampler::accept_stochastic`]; both make the output stream byte-identical to
 //! plain decoding for a fixed seed (DESIGN.md §Speculative). Requests
 //! whose drafts keep losing fall back to plain decode permanently.
 //!
@@ -58,11 +58,13 @@
 //! rows are masked with the grammar state each position would be in, and
 //! the acceptance rules run unchanged on the masked rows.
 
-use crate::coordinator::engine::{ChunkInput, DecodeInput, Engine, EngineError, VerifyInput};
+use crate::coordinator::engine::{ChunkInput, DecodeInput, Engine, EngineError, StepOut, VerifyInput};
 use crate::kvcache::SeqId;
 use crate::metrics::Metrics;
 use crate::sampler::grammar::{self, Constraint, GrammarState};
-use crate::sampler::{accept_greedy, accept_stochastic, argmax, sample, SamplerCfg};
+use crate::sampler::{
+    accept_greedy, accept_stochastic_with, argmax, sample_with, SamplerCfg, SamplerScratch,
+};
 use crate::util::rng::Xoshiro256;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -252,6 +254,13 @@ pub struct Scheduler<E: Engine> {
     /// can hold it across `&mut self` calls.
     byte_vocab: Arc<Vec<Vec<u8>>>,
     metrics: Arc<Metrics>,
+    /// Reusable fused-step output (capacity survives across steps — the
+    /// scheduler half of the zero-allocation decode path).
+    step_out: StepOut,
+    /// Reusable sampling scratch shared by every request's draws (draws are
+    /// sequential within a step, and the scratch carries no cross-draw
+    /// state).
+    scratch: SamplerScratch,
 }
 
 impl<E: Engine> Scheduler<E> {
@@ -264,7 +273,7 @@ impl<E: Engine> Scheduler<E> {
     /// widened batched step. The draft must share the target's vocabulary
     /// (self-speculation: same model, cheaper precision); output is
     /// byte-identical to [`Scheduler::new`] for every request — greedy via
-    /// [`accept_greedy`], stochastic via [`accept_stochastic`]'s RNG
+    /// [`accept_greedy`], stochastic via [`crate::sampler::accept_stochastic`]'s RNG
     /// stream discipline.
     pub fn with_draft(
         engine: E,
@@ -276,12 +285,18 @@ impl<E: Engine> Scheduler<E> {
     }
 
     fn build(
-        engine: E,
-        draft: Option<Box<dyn Engine>>,
+        mut engine: E,
+        mut draft: Option<Box<dyn Engine>>,
         cfg: SchedulerCfg,
         metrics: Arc<Metrics>,
     ) -> Self {
         let byte_vocab = Arc::new(grammar::byte_vocab(engine.cfg().vocab_size));
+        // pre-reserve step-arena capacity for the widest step this config
+        // can build (best-effort; the first warmup step completes sizing)
+        engine.plan_alloc(cfg.max_running, cfg.spec_k);
+        if let Some(d) = draft.as_mut() {
+            d.plan_alloc(cfg.max_running, cfg.spec_k);
+        }
         let s = Self {
             engine,
             cfg,
@@ -293,6 +308,8 @@ impl<E: Engine> Scheduler<E> {
             token_events: Vec::new(),
             byte_vocab,
             metrics,
+            step_out: StepOut::default(),
+            scratch: SamplerScratch::new(),
         };
         // publish the static gauges (weight bytes, cache geometry) before
         // the first step so a freshly-booted server reports them
@@ -624,6 +641,7 @@ impl<E: Engine> Scheduler<E> {
                         gstate.as_ref(),
                         &self.byte_vocab,
                         budget_left,
+                        &mut self.scratch,
                     ) else {
                         // the vocab cannot express the grammar at all —
                         // unreachable past the admission guards, but never
@@ -956,7 +974,7 @@ impl<E: Engine> Scheduler<E> {
             let (a, next) = if r.req.sampler.is_greedy() {
                 accept_greedy(&drafts[c], rows_eff)
             } else {
-                accept_stochastic(&drafts[c], rows_eff, &r.req.sampler, &mut r.rng)
+                accept_stochastic_with(&drafts[c], rows_eff, &r.req.sampler, &mut r.rng, &mut self.scratch)
             };
             Metrics::inc(&self.metrics.spec_rounds);
             Metrics::add(&self.metrics.spec_tokens_drafted, k_i as u64);
@@ -1103,13 +1121,18 @@ impl<E: Engine> Scheduler<E> {
                 }
             })
             .collect();
-        let out = match self.engine.step_batch(&inputs, &chunks) {
-            Ok(o) => o,
+        // borrow the persistent output buffer out of self for the duration
+        // of this sub-step (its capacity is preserved either way)
+        let mut out = std::mem::take(&mut self.step_out);
+        match self.engine.step_batch_into(&inputs, &chunks, &mut out) {
+            Ok(()) => {}
             Err(EngineError::CapacityExhausted(_)) => {
+                self.step_out = out;
                 self.preempt_one();
                 return 0;
             }
             Err(e) => {
+                self.step_out = out;
                 // Fail every running request rather than wedging the loop.
                 crate::log_error!("step_batch failed: {e}");
                 for mut r in self
@@ -1125,14 +1148,14 @@ impl<E: Engine> Scheduler<E> {
                 }
                 return 0;
             }
-        };
+        }
         Metrics::inc(&self.metrics.batches_run);
 
         // ---- prefill-chunk bookkeeping --------------------------------
         let vocab = Arc::clone(&self.byte_vocab);
         let mut finished: Vec<(usize, FinishReason)> = Vec::new();
         debug_assert_eq!(out.chunk_logits.len(), chunks.len());
-        for ((&i, c), logits) in chunk_idx.iter().zip(&chunks).zip(out.chunk_logits) {
+        for ((&i, c), logits) in chunk_idx.iter().zip(&chunks).zip(out.chunk_logits.iter()) {
             let n = c.tokens.len();
             Metrics::inc(&self.metrics.prefill_chunks);
             Metrics::add(&self.metrics.prefill_chunk_tokens, n as u64);
@@ -1146,7 +1169,7 @@ impl<E: Engine> Scheduler<E> {
                 // the chunk completed the prompt: first token, flip phase
                 debug_assert_eq!(done + n, r.req.prompt.len());
                 let budget_left = r.req.max_new_tokens.saturating_sub(1);
-                match sample_next(&row, &r.req.sampler, &mut r.rng, r.gstate.as_ref(), &vocab, budget_left) {
+                match sample_next(row, &r.req.sampler, &mut r.rng, r.gstate.as_ref(), &vocab, budget_left, &mut self.scratch) {
                     Some(t) => {
                         r.next_token = t;
                         r.phase = Phase::Decoding;
@@ -1179,8 +1202,8 @@ impl<E: Engine> Scheduler<E> {
                 self.metrics.tpot.record(dt / (inputs.len() as u32));
             }
         }
-        for (pos, row) in out.decode_logits.into_iter().enumerate() {
-            let i = idx[pos];
+        for (pos, &i) in idx.iter().enumerate() {
+            let row = out.decode_logits.row(pos);
             // advancing outside the speculative path invalidates any draft
             // sequence (its cache no longer mirrors the committed history)
             self.drop_draft_at(i);
@@ -1192,7 +1215,7 @@ impl<E: Engine> Scheduler<E> {
                 continue;
             }
             let budget_left = r.req.max_new_tokens.saturating_sub(r.generated.len() + 1);
-            match sample_next(&row, &r.req.sampler, &mut r.rng, r.gstate.as_ref(), &vocab, budget_left) {
+            match sample_next(row, &r.req.sampler, &mut r.rng, r.gstate.as_ref(), &vocab, budget_left, &mut self.scratch) {
                 Some(t) => r.next_token = t,
                 None => {
                     // defensive: budget-aware masking keeps the mask
@@ -1207,6 +1230,7 @@ impl<E: Engine> Scheduler<E> {
                 }
             }
         }
+        self.step_out = out;
         // retire back-to-front so indices stay valid (chunk-retire indices
         // can interleave arbitrarily with the ascending decode indices)
         finished.sort_unstable_by(|x, y| y.0.cmp(&x.0));
@@ -1292,6 +1316,12 @@ impl<E: Engine> Scheduler<E> {
             Metrics::set(&m.shard_allreduce_calls, ss.allreduce_calls);
             Metrics::set(&m.shard_allreduce_bytes, ss.allreduce_bytes);
         }
+        // Same guard as above: only engines with a step arena report, so
+        // wrapped/plain engines never clobber the gauges with zeros.
+        if let Some(a) = self.engine.alloc_stats() {
+            Metrics::set(&m.alloc_arena_bytes, a.arena_bytes);
+            Metrics::set(&m.alloc_steady_state_allocs, a.growth_events);
+        }
         let Some(s) = self.engine.kv_snapshot() else { return };
         Metrics::set(&m.kv_prefix_hit_blocks, s.stats.prefix_hit_blocks);
         Metrics::set(&m.kv_prefix_tokens_saved, s.stats.prefix_tokens_saved);
@@ -1330,12 +1360,15 @@ fn sample_next(
     gstate: Option<&GrammarState>,
     vocab: &[Vec<u8>],
     budget_left: usize,
+    scratch: &mut SamplerScratch,
 ) -> Option<u32> {
     match gstate {
-        None => Some(sample(row, cfg, rng)),
+        None => Some(sample_with(row, cfg, rng, scratch)),
         Some(gs) => {
+            // grammar masking builds a masked row copy — constrained
+            // requests are outside the zero-allocation steady-state claim
             let masked = gs.mask_row(row, vocab, budget_left)?;
-            Some(sample(&masked, cfg, rng))
+            Some(sample_with(&masked, cfg, rng, scratch))
         }
     }
 }

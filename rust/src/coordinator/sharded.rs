@@ -43,17 +43,21 @@
 
 use crate::config::{BlockLayout, ModelConfig, Variant};
 use crate::coordinator::engine::{
-    ChunkInput, DecodeInput, Engine, EngineError, ShardStats, StepOutput, VerifyInput,
+    AllocStats, ChunkInput, DecodeInput, Engine, EngineError, ShardStats, StepOut, StepOutput,
+    VerifyInput, VerifyOut,
 };
 use crate::kvcache::{BlockView, CacheError, CacheOpts, CacheSnapshot, KvCache, SeqId};
-use crate::model::attention::{causal_attention_rot, HeadLayout};
-use crate::model::ffn::ffn_forward;
+use crate::linalg::QuantScratch;
+use crate::model::attention::causal_attention_rot;
+use crate::model::ffn::{ffn_forward, ffn_forward_into};
 use crate::model::paged_attn::{self, AttnItem, KvSegment};
 use crate::model::shard::shard_weights;
 use crate::model::{rope, ModelWeights, Weight};
 use crate::tensor::Mat;
+use crate::util::arena::{recycle, StepArena};
 use crate::util::threadpool::{self, ThreadPool};
 use std::collections::BTreeMap;
+use std::mem;
 use std::sync::Arc;
 
 /// In-flight chunked prefill bookkeeping (the f32-pool subset of the cpu
@@ -72,23 +76,72 @@ struct Shard {
 }
 
 /// Per-shard scratch threaded through the fan-out calls of one step.
+/// Persistent on the engine (one per shard) so a steady-state step reuses
+/// every buffer — the sharded half of the zero-allocation arena plan
+/// (`tests/alloc_regression.rs`; DESIGN.md §Memory plan).
 struct Slot {
     /// This layer's attention output, `(rows, d/n)` — joined by the host.
     a: Mat,
-    /// Per layer `(rotated-K, V)` rows held back for the position-major
-    /// cache commit after the layer loop (chunk/verify/prefill rows).
+    /// Rotated-query projection at local width `(rows, (h1-h0)·hd)`.
+    q: Mat,
+    /// Per layer `(rotated-K, V)` rows — one entry per layer, written every
+    /// step and held for the position-major cache commit after the layer
+    /// loop (the cache's append/advance protocol is per-position).
     kv: Vec<(Mat, Mat)>,
     /// verify only: per-sequence draft tails at the local width.
     tails: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Recycled block-view table (capacity only; emptied between layers).
+    views: Vec<BlockView<'static>>,
+    /// Recycled attention-item table (capacity only).
+    items: Vec<AttnItem<'static>>,
+    /// `views` sub-range per attention item group.
+    ranges: Vec<(usize, usize)>,
+    /// Paged-attention score scratch for the inline kernel path.
+    scores: Vec<f32>,
+    /// Activation-quant scratch for INT8 weight slices.
+    qs: QuantScratch,
 }
 
 impl Slot {
     fn new() -> Self {
         Self {
             a: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
             kv: Vec::new(),
             tails: Vec::new(),
+            views: Vec::new(),
+            items: Vec::new(),
+            ranges: Vec::new(),
+            scores: Vec::new(),
+            qs: QuantScratch::new(),
         }
+    }
+
+    fn ensure_layers(&mut self, n_layers: usize) {
+        while self.kv.len() < n_layers {
+            self.kv.push((Mat::zeros(0, 0), Mat::zeros(0, 0)));
+        }
+    }
+
+    /// Bytes of backing storage held — rolled into `alloc.arena_bytes`.
+    fn resident_bytes(&self) -> usize {
+        let mut b = self.a.capacity_bytes() + self.q.capacity_bytes();
+        b += self
+            .kv
+            .iter()
+            .map(|(k, v)| k.capacity_bytes() + v.capacity_bytes())
+            .sum::<usize>();
+        b += self
+            .tails
+            .iter()
+            .map(|(k, v)| (k.capacity() + v.capacity()) * 4)
+            .sum::<usize>();
+        b += self.views.capacity() * core::mem::size_of::<BlockView<'static>>();
+        b += self.items.capacity() * core::mem::size_of::<AttnItem<'static>>();
+        b += self.ranges.capacity() * core::mem::size_of::<(usize, usize)>();
+        b += self.scores.capacity() * 4;
+        b += self.qs.resident_bytes();
+        b
     }
 }
 
@@ -100,13 +153,22 @@ fn bad_seq(e: CacheError) -> EngineError {
     EngineError::BadSequence(e.to_string())
 }
 
-/// Column-sliced projection: a present weight is already sliced; an
-/// eliminated one (`None`, the paper's `Q* = 1`) is the identity, whose
-/// column slice is the input's column slice.
-fn proj_slice(x: &Mat, w: &Option<Weight>, c0: usize, c1: usize) -> Mat {
+/// Column-sliced projection into caller-owned scratch: a present weight is
+/// already sliced; an eliminated one (`None`, the paper's `Q* = 1`) is the
+/// identity, whose column slice is the input's column slice. Bit-identical
+/// to the allocating `w.matmul(x)` / `x.col_slice(c0, c1)` it replaces —
+/// both `_into` twins reset `out` before writing.
+fn proj_slice_into(
+    x: &Mat,
+    w: &Option<Weight>,
+    c0: usize,
+    c1: usize,
+    qs: &mut QuantScratch,
+    out: &mut Mat,
+) {
     match w {
-        Some(w) => w.matmul(x),
-        None => x.col_slice(c0, c1),
+        Some(w) => w.matmul_into(x, qs, out),
+        None => x.col_slice_into(c0, c1, out),
     }
 }
 
@@ -123,6 +185,25 @@ fn run_shards<F>(
 where
     F: Fn(usize, &mut Shard, &mut Slot) -> Result<(), EngineError> + Sync,
 {
+    if fan.n_threads() == 1 {
+        // serial fan-out: every shard job runs on the caller's thread, in
+        // shard order, with the kernel pool rebound per shard — no boxed
+        // jobs, no channel traffic, zero heap allocations in dispatch.
+        // Like the threaded path, every shard runs even after a failure
+        // (lockstep cache streams must stay aligned); the first error wins.
+        let mut first_err = None;
+        for (i, (shard, slot)) in shards.iter_mut().zip(slots.iter_mut()).enumerate() {
+            if let Err(e) = threadpool::with_pool(&compute[i], || f(i, shard, slot)) {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        return match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        };
+    }
     let mut errs: Vec<Option<EngineError>> = (0..shards.len()).map(|_| None).collect();
     let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = shards
         .iter_mut()
@@ -188,11 +269,16 @@ pub struct ShardedEngine {
     positions: BTreeMap<SeqId, usize>,
     /// sequences admitted via `prefill_begin`, mid-prompt
     chunking: BTreeMap<SeqId, ChunkState>,
-    /// one dispatch thread per shard
+    /// one dispatch thread per shard (capped at the configured core budget;
+    /// a 1-thread fan dispatches serially and allocation-free)
     fan: ThreadPool,
     /// per-shard kernel pools: `default_size / n` threads each, so tensor
     /// parallelism splits the cores rather than oversubscribing them
     compute: Vec<Arc<ThreadPool>>,
+    /// persistent per-shard step scratch (parallel to `shards`)
+    slots: Vec<Slot>,
+    /// host-side step scratch: embed/join/FFN/unembed buffers
+    arena: StepArena,
     allreduce_calls: u64,
     allreduce_bytes: u64,
 }
@@ -246,13 +332,25 @@ impl ShardedEngine {
         let compute = (0..n_workers)
             .map(|_| Arc::new(ThreadPool::new(per_shard_threads)))
             .collect();
+        let n_layers = shards.first().map_or(0, |sh| sh.w.blocks.len());
+        let slots = (0..n_workers)
+            .map(|_| {
+                let mut s = Slot::new();
+                s.ensure_layers(n_layers);
+                s
+            })
+            .collect();
         Ok(Self {
             full: weights,
             shards,
             positions: BTreeMap::new(),
             chunking: BTreeMap::new(),
-            fan: ThreadPool::new(n_workers),
+            // never more dispatch threads than the configured core budget —
+            // under SKIPLESS_THREADS=1 the fan collapses to serial dispatch
+            fan: ThreadPool::new(n_workers.min(ThreadPool::default_size())),
             compute,
+            slots,
+            arena: StepArena::new(),
             allreduce_calls: 0,
             allreduce_bytes: 0,
         })
@@ -285,6 +383,7 @@ impl ShardedEngine {
             shards,
             fan,
             compute,
+            slots,
             allreduce_calls,
             allreduce_bytes,
             ..
@@ -294,23 +393,27 @@ impl ShardedEngine {
         let d = cfg.dim;
         let suffix = &tokens[reused..];
         let s = suffix.len();
+        let n_layers = full.blocks.len();
         let mut x = full.embed_tokens(suffix);
-        let mut slots: Vec<Slot> = (0..shards.len()).map(|_| Slot::new()).collect();
-        for li in 0..full.blocks.len() {
+        for slot in slots.iter_mut() {
+            slot.ensure_layers(n_layers);
+        }
+        for li in 0..n_layers {
             let xr = &x;
-            run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+            run_shards(fan, compute, shards, slots, &|_, sh, slot| {
                 let sw = &sh.w;
                 let layout = sw.layout;
                 let e = layout.e();
                 let b = &sw.blocks[li];
-                let k = proj_slice(xr, &b.k, sw.g0 * hd, sw.g1 * hd);
-                let v = proj_slice(xr, &b.v, sw.g0 * hd, sw.g1 * hd);
-                let mut k_rot = k;
-                rope::apply(&mut k_rot, hd, reused, rope::BASE);
-                let mut q_rot = proj_slice(xr, &b.q, sw.h0 * hd, sw.h1 * hd);
-                rope::apply(&mut q_rot, hd, reused, rope::BASE);
-                let a = if reused == 0 {
-                    causal_attention_rot(&q_rot, &k_rot, &v, layout)
+                let (k_rot, v) = &mut slot.kv[li];
+                proj_slice_into(xr, &b.k, sw.g0 * hd, sw.g1 * hd, &mut slot.qs, k_rot);
+                proj_slice_into(xr, &b.v, sw.g0 * hd, sw.g1 * hd, &mut slot.qs, v);
+                rope::apply(k_rot, hd, reused, rope::BASE);
+                let q_rot = &mut slot.q;
+                proj_slice_into(xr, &b.q, sw.h0 * hd, sw.h1 * hd, &mut slot.qs, q_rot);
+                rope::apply(q_rot, hd, reused, rope::BASE);
+                if reused == 0 {
+                    slot.a = causal_attention_rot(q_rot, k_rot, v, layout);
                 } else {
                     // warm continuation: shared-prefix history in place
                     // (this shard's pool holds exactly its group's rows)
@@ -337,17 +440,15 @@ impl ShardedEngine {
                         })
                         .collect();
                     paged_attn::attend_batch(layout, &items, &mut a);
-                    a
-                };
-                slot.kv.push((k_rot, v));
-                slot.a = a;
+                    slot.a = a;
+                }
                 Ok(())
             })?;
             // join: concatenate per-shard attention outputs into their
             // fixed column ranges (exact — no arithmetic), then run the
             // post-projection + FFN full-width on the host
             let mut a = Mat::zeros(s, d);
-            for (sh, slot) in shards.iter().zip(&slots) {
+            for (sh, slot) in shards.iter().zip(slots.iter()) {
                 let (c0, c1) = (sh.w.h0 * hd, sh.w.h1 * hd);
                 for r in 0..s {
                     a.row_mut(r)[c0..c1].copy_from_slice(slot.a.row(r));
@@ -369,7 +470,7 @@ impl ShardedEngine {
             };
         }
         let paged = (s * reused * full.blocks.len()) as u64;
-        run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+        run_shards(fan, compute, shards, slots, &|_, sh, slot| {
             for r in 0..s {
                 for (li, (k_rot, v)) in slot.kv.iter().enumerate() {
                     sh.cache
@@ -516,39 +617,99 @@ impl Engine for ShardedEngine {
         decodes: &[DecodeInput],
         chunks: &[ChunkInput],
     ) -> Result<StepOutput, EngineError> {
+        // thin wrapper over the arena-native path — bit-identical by
+        // construction (same kernels, same order; only output provenance)
+        let mut out = StepOut::default();
+        self.step_batch_into(decodes, chunks, &mut out)?;
+        Ok(StepOutput {
+            decode_logits: (0..out.decode_logits.rows())
+                .map(|r| out.decode_logits.row(r).to_vec())
+                .collect(),
+            chunk_logits: out.chunk_logits,
+        })
+    }
+
+    /// The native fused step: identical math to [`ShardedEngine::step_batch`]
+    /// (whose docs describe the sharded row semantics), with host buffers
+    /// drawn from the [`StepArena`] and per-shard buffers from each
+    /// persistent [`Slot`]. With a 1-thread fan (serial dispatch) a
+    /// steady-state decode step performs **zero** heap allocations after
+    /// warmup (`tests/alloc_regression.rs`).
+    fn step_batch_into(
+        &mut self,
+        decodes: &[DecodeInput],
+        chunks: &[ChunkInput],
+        out: &mut StepOut,
+    ) -> Result<(), EngineError> {
+        out.decode_logits.reset(0, 0);
+        out.chunk_logits.clear();
         if decodes.is_empty() && chunks.is_empty() {
-            return Ok(StepOutput::default());
+            return Ok(());
         }
-        let cfg = self.full.cfg.clone();
-        let hd = cfg.head_dim();
-        let d = cfg.dim;
+        let hd = self.full.cfg.head_dim();
+        let d = self.full.cfg.dim;
+        let max_seq_len = self.full.cfg.max_seq_len;
+        let ffn_kind = self.full.cfg.ffn;
+        let layout_kind = self.full.cfg.layout;
+        let Self {
+            full,
+            shards,
+            fan,
+            compute,
+            slots,
+            arena,
+            allreduce_calls,
+            allreduce_bytes,
+            chunking,
+            positions,
+        } = self;
+        let n_layers = full.blocks.len();
+        for slot in slots.iter_mut() {
+            slot.ensure_layers(n_layers);
+        }
+        // disjoint borrows of the host arena's buffers
+        let dec_pos = &mut arena.dec_pos;
+        let chunk_meta = &mut arena.chunk_meta;
+        let toks = &mut arena.toks;
+        let chunk_row0 = &mut arena.chunk_row0;
+        let rowpos = &mut arena.rowpos;
+        let chunk_done = &mut arena.chunk_done;
+        let sel = &mut arena.sel;
+        let x = &mut arena.x;
+        let a = &mut arena.a;
+        let pbuf = &mut arena.p;
+        let h = &mut arena.h;
+        let g = &mut arena.g;
+        let f = &mut arena.f;
+        let sub = &mut arena.sub;
+        let logits = &mut arena.logits;
+        let qs = &mut arena.qs;
 
         // ---- validate + reserve up front on shard 0 (all shards are in
         // lockstep, so one pool's answer is every pool's answer) ----------
         let nd = decodes.len();
-        let mut dec_pos = Vec::with_capacity(nd);
+        dec_pos.clear();
         let mut fresh_needed = 0usize;
         for i in decodes {
-            if self.chunking.contains_key(&i.seq) {
+            if chunking.contains_key(&i.seq) {
                 return Err(EngineError::BadSequence(format!(
                     "{:?} is still prefilling",
                     i.seq
                 )));
             }
-            let p = *self
-                .positions
+            let pos = *positions
                 .get(&i.seq)
                 .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", i.seq)))?;
-            if p >= cfg.max_seq_len {
+            if pos >= max_seq_len {
                 return Err(EngineError::CapacityExhausted(format!(
-                    "{:?} at max_seq_len {}",
-                    i.seq, cfg.max_seq_len
+                    "{:?} at max_seq_len {max_seq_len}",
+                    i.seq
                 )));
             }
-            fresh_needed += self.shards[0].cache.blocks_to_grow(i.seq, 1);
-            dec_pos.push(p);
+            fresh_needed += shards[0].cache.blocks_to_grow(i.seq, 1);
+            dec_pos.push(pos);
         }
-        let mut chunk_meta = Vec::with_capacity(chunks.len());
+        chunk_meta.clear();
         for (ci, c) in chunks.iter().enumerate() {
             if chunks[..ci].iter().any(|o| o.seq == c.seq) {
                 return Err(EngineError::BadSequence(format!(
@@ -556,7 +717,7 @@ impl Engine for ShardedEngine {
                     c.seq
                 )));
             }
-            let st = self.chunking.get(&c.seq).ok_or_else(|| {
+            let st = chunking.get(&c.seq).ok_or_else(|| {
                 EngineError::BadSequence(format!("{:?} has no chunked prefill in flight", c.seq))
             })?;
             if c.tokens.is_empty() {
@@ -576,66 +737,60 @@ impl Engine for ShardedEngine {
             }
             chunk_meta.push((st.filled, st.reused));
         }
-        if fresh_needed > self.shards[0].cache.free_blocks() {
+        if fresh_needed > shards[0].cache.free_blocks() {
             return Err(EngineError::CapacityExhausted(format!(
                 "fused step needs {fresh_needed} blocks, {} free",
-                self.shards[0].cache.free_blocks()
+                shards[0].cache.free_blocks()
             )));
         }
 
         // ---- flattened row layout: decode rows first, then chunk rows ---
-        let mut toks: Vec<u32> = decodes.iter().map(|i| i.token).collect();
-        let mut chunk_row0 = Vec::with_capacity(chunks.len());
+        toks.clear();
+        toks.extend(decodes.iter().map(|i| i.token));
+        chunk_row0.clear();
         for c in chunks {
             chunk_row0.push(toks.len());
             toks.extend_from_slice(&c.tokens);
         }
         let total_rows = toks.len();
-        let mut rowpos: Vec<usize> = dec_pos.clone();
-        for (c, &(start, _)) in chunks.iter().zip(&chunk_meta) {
+        full.embed_tokens_into(toks, x);
+        rowpos.clear();
+        rowpos.extend_from_slice(dec_pos);
+        for (c, &(start, _)) in chunks.iter().zip(chunk_meta.iter()) {
             rowpos.extend((0..c.tokens.len()).map(|j| start + j));
         }
 
-        let Self {
-            full,
-            shards,
-            fan,
-            compute,
-            allreduce_calls,
-            allreduce_bytes,
-            chunking,
-            positions,
-        } = self;
-        let mut x = full.embed_tokens(&toks);
-        let n_layers = full.blocks.len();
         // per-layer history reads are position counts, identical on every
         // shard (each pool multiplies by its own row width internally)
         let layer_paged: u64 = dec_pos.iter().map(|&p| p as u64).sum::<u64>()
             + chunks
                 .iter()
-                .zip(&chunk_meta)
+                .zip(chunk_meta.iter())
                 .map(|(c, &(cs, _))| (c.tokens.len() * cs) as u64)
                 .sum::<u64>();
-        let mut slots: Vec<Slot> = (0..shards.len()).map(|_| Slot::new()).collect();
+        // read-only from here on: reborrow shared for the shard closures
+        let dec_pos = &*dec_pos;
+        let chunk_meta = &*chunk_meta;
+        let chunk_row0 = &*chunk_row0;
+        let rowpos = &*rowpos;
         for li in 0..n_layers {
-            let xr = &x;
-            let dec_pos = &dec_pos;
-            let chunk_meta = &chunk_meta;
-            let chunk_row0 = &chunk_row0;
-            run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+            let xr = &*x;
+            run_shards(fan, compute, shards, slots, &|_, sh, slot| {
                 let sw = &sh.w;
                 let layout = sw.layout;
                 let e = layout.e();
                 let b = &sw.blocks[li];
-                let mut q = proj_slice(xr, &b.q, sw.h0 * hd, sw.h1 * hd);
-                let mut k = proj_slice(xr, &b.k, sw.g0 * hd, sw.g1 * hd);
-                let v = proj_slice(xr, &b.v, sw.g0 * hd, sw.g1 * hd);
+                let (k, v) = &mut slot.kv[li];
+                proj_slice_into(xr, &b.q, sw.h0 * hd, sw.h1 * hd, &mut slot.qs, &mut slot.q);
+                proj_slice_into(xr, &b.k, sw.g0 * hd, sw.g1 * hd, &mut slot.qs, k);
+                proj_slice_into(xr, &b.v, sw.g0 * hd, sw.g1 * hd, &mut slot.qs, v);
+                let q = &mut slot.q;
                 for (r, &p) in rowpos.iter().enumerate() {
-                    for h in 0..layout.n_heads {
-                        rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+                    for hh in 0..layout.n_heads {
+                        rope::rotate_head(&mut q.row_mut(r)[hh * hd..(hh + 1) * hd], p, rope::BASE);
                     }
-                    for g in 0..layout.n_kv_heads {
-                        rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                    for gg in 0..layout.n_kv_heads {
+                        rope::rotate_head(&mut k.row_mut(r)[gg * hd..(gg + 1) * hd], p, rope::BASE);
                     }
                 }
                 // decode rows write first (CoW/growth against their own
@@ -646,12 +801,12 @@ impl Engine for ShardedEngine {
                         .append(inp.seq, li, k.row(r), v.row(r))
                         .map_err(capacity)?;
                 }
-                let mut views: Vec<BlockView> = Vec::new();
-                let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nd + chunks.len());
+                let mut views: Vec<BlockView> = recycle(mem::take(&mut slot.views));
+                slot.ranges.clear();
                 for inp in decodes {
                     let start = views.len();
                     views.extend(sh.cache.seq_block_views(inp.seq, li).map_err(bad_seq)?);
-                    ranges.push((start, views.len()));
+                    slot.ranges.push((start, views.len()));
                 }
                 for (c, &(cstart, _)) in chunks.iter().zip(chunk_meta.iter()) {
                     let start = views.len();
@@ -660,9 +815,10 @@ impl Engine for ShardedEngine {
                             .seq_block_views_upto(c.seq, li, cstart)
                             .map_err(bad_seq)?,
                     );
-                    ranges.push((start, views.len()));
+                    slot.ranges.push((start, views.len()));
                 }
-                let mut items: Vec<AttnItem> = Vec::with_capacity(total_rows);
+                let ranges = &slot.ranges;
+                let mut items: Vec<AttnItem> = recycle(mem::take(&mut slot.items));
                 items.extend(decodes.iter().enumerate().map(|(r, _)| AttnItem {
                     q_rot: q.row(r),
                     views: &views[ranges[r].0..ranges[r].1],
@@ -693,10 +849,12 @@ impl Engine for ShardedEngine {
                         out_row: r0 + j,
                     }));
                 }
-                let mut a = Mat::zeros(total_rows, layout.d());
-                paged_attn::attend_batch(layout, &items, &mut a);
-                drop(items);
-                drop(views);
+                slot.a.reset(total_rows, layout.d());
+                paged_attn::attend_batch_scratch(layout, &items, &mut slot.a, &mut slot.scores);
+                // park the borrow-carrying tables back (items first: they
+                // borrow views)
+                slot.items = recycle(items);
+                slot.views = recycle(views);
                 for (ci, c) in chunks.iter().enumerate() {
                     if chunk_meta[ci].0 != 0 {
                         continue;
@@ -710,17 +868,16 @@ impl Engine for ShardedEngine {
                         layout,
                     );
                     for j in 0..s {
-                        a.row_mut(r0 + j).copy_from_slice(a_sub.row(j));
+                        slot.a.row_mut(r0 + j).copy_from_slice(a_sub.row(j));
                     }
                 }
-                if !chunks.is_empty() {
-                    slot.kv.push((k.row_slice(nd, total_rows), v.row_slice(nd, total_rows)));
-                }
-                slot.a = a;
                 Ok(())
             })?;
-            let mut a = Mat::zeros(total_rows, d);
-            for (sh, slot) in shards.iter().zip(&slots) {
+            // join: concatenate per-shard attention outputs into their
+            // fixed column ranges (exact — no arithmetic), then run the
+            // post-projection + FFN full-width on the host
+            a.reset(total_rows, d);
+            for (sh, slot) in shards.iter().zip(slots.iter()) {
                 let (c0, c1) = (sh.w.h0 * hd, sh.w.h1 * hd);
                 for r in 0..total_rows {
                     a.row_mut(r)[c0..c1].copy_from_slice(slot.a.row(r));
@@ -729,26 +886,33 @@ impl Engine for ShardedEngine {
             *allreduce_calls += 2;
             *allreduce_bytes += 2 * (total_rows * d * 4) as u64;
             let b = &full.blocks[li];
-            x = match cfg.layout {
+            match layout_kind {
                 BlockLayout::Serial => {
-                    let p = Weight::proj(&a, &b.p);
-                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                    Weight::proj_into(a, &b.p, qs, pbuf);
+                    ffn_forward_into(pbuf, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    mem::swap(x, f);
                 }
                 BlockLayout::Parallel => {
                     let post = if b.c.is_some() { &b.c } else { &b.p };
-                    let attn_out = Weight::proj(&a, post);
-                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                    Weight::proj_into(a, post, qs, pbuf);
+                    ffn_forward_into(x, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    // attn_out + ffn_out, same operand order as the
+                    // allocating `attn_out.add(&ffn_out)`
+                    pbuf.add_assign(f);
+                    mem::swap(x, pbuf);
                 }
-            };
+            }
         }
 
         // ---- commit: chunk-row cache writes + advances fan out per shard;
         // each shard registers finished prompt blocks in its own prefix
         // index (same chain hashes — they are token hashes) --------------
         let bt = shards[0].cache.block_tokens();
+        // chunk-only bookkeeping: both collects are empty (no allocation)
+        // on pure decode steps
         let reg_plan: Vec<(usize, usize)> = chunks
             .iter()
-            .zip(&chunk_meta)
+            .zip(chunk_meta.iter())
             .map(|(c, &(cstart, _))| {
                 let st = &chunking[&c.seq];
                 (st.registered, cstart + c.tokens.len())
@@ -759,9 +923,9 @@ impl Engine for ShardedEngine {
             .map(|c| chunking[&c.seq].prompt.as_slice())
             .collect();
         let step_paged = layer_paged * n_layers as u64;
-        let commit = run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+        let commit = run_shards(fan, compute, shards, slots, &|_, sh, slot| {
             for (ci, c) in chunks.iter().enumerate() {
-                let r0 = chunk_row0[ci] - nd;
+                let r0 = chunk_row0[ci];
                 let s = c.tokens.len();
                 let (cstart, _) = chunk_meta[ci];
                 for j in 0..s {
@@ -807,7 +971,8 @@ impl Engine for ShardedEngine {
             }
             return Err(e);
         }
-        let mut chunk_done = vec![false; chunks.len()];
+        chunk_done.clear();
+        chunk_done.resize(chunks.len(), false);
         for (ci, c) in chunks.iter().enumerate() {
             let st = chunking.get_mut(&c.seq).expect("validated above");
             st.filled += c.tokens.len();
@@ -825,38 +990,46 @@ impl Engine for ShardedEngine {
         }
 
         // ---- selective unembed, full-width on the host ------------------
-        let mut sel: Vec<usize> = (0..nd).collect();
+        sel.clear();
+        sel.extend(0..nd);
         for (ci, c) in chunks.iter().enumerate() {
             if chunk_done[ci] {
                 sel.push(chunk_row0[ci] + c.tokens.len() - 1);
             }
         }
         if sel.is_empty() {
-            return Ok(StepOutput {
-                decode_logits: Vec::new(),
-                chunk_logits: vec![None; chunks.len()],
-            });
+            out.chunk_logits.resize(chunks.len(), None);
+            arena.note_step();
+            return Ok(());
         }
-        let mut sub = Mat::zeros(sel.len(), d);
+        sub.reset(sel.len(), d);
         for (i, &r) in sel.iter().enumerate() {
             sub.row_mut(i).copy_from_slice(x.row(r));
         }
-        let logits = full.unembed.matmul(&sub);
-        let decode_logits = (0..nd).map(|r| logits.row(r).to_vec()).collect();
-        let mut chunk_logits = Vec::with_capacity(chunks.len());
-        let mut next = nd;
-        for done in &chunk_done {
-            if *done {
-                chunk_logits.push(Some(logits.row(next).to_vec()));
-                next += 1;
-            } else {
-                chunk_logits.push(None);
+        if sel.len() == nd {
+            // decode-only selection: unembed straight into the caller's
+            // buffer (GEMM rows are independent, so skipping the staging
+            // copy is bit-identical)
+            full.unembed.matmul_into(sub, qs, &mut out.decode_logits);
+            out.chunk_logits.resize(chunks.len(), None);
+        } else {
+            full.unembed.matmul_into(sub, qs, logits);
+            out.decode_logits.reset(nd, logits.cols());
+            for r in 0..nd {
+                out.decode_logits.row_mut(r).copy_from_slice(logits.row(r));
+            }
+            let mut next = nd;
+            for done in chunk_done.iter() {
+                if *done {
+                    out.chunk_logits.push(Some(logits.row(next).to_vec()));
+                    next += 1;
+                } else {
+                    out.chunk_logits.push(None);
+                }
             }
         }
-        Ok(StepOutput {
-            decode_logits,
-            chunk_logits,
-        })
+        arena.note_step();
+        Ok(())
     }
 
     /// Widened speculative step, sharded: the per-layer wave loop (draft
@@ -866,128 +1039,180 @@ impl Engine for ShardedEngine {
     /// cpu engine's per-row quantize-roundtrip is the identity here and is
     /// skipped.
     fn verify_batch(&mut self, inputs: &[VerifyInput]) -> Result<Vec<Vec<Vec<f32>>>, EngineError> {
-        if inputs.is_empty() {
-            return Ok(Vec::new());
+        // thin wrapper over the arena-native path — bit-identical by
+        // construction (only the output container changes)
+        let mut out = VerifyOut::default();
+        self.verify_batch_into(inputs, &mut out)?;
+        let mut nested = Vec::with_capacity(inputs.len());
+        for (i, vi) in inputs.iter().enumerate() {
+            let r0 = out.row0[i];
+            let rows: Vec<Vec<f32>> = (r0..r0 + vi.tokens.len())
+                .map(|r| out.rows.row(r).to_vec())
+                .collect();
+            nested.push(rows);
         }
-        let cfg = self.full.cfg.clone();
-        let hd = cfg.head_dim();
-        let d = cfg.dim;
-        let mut base = Vec::with_capacity(inputs.len());
+        Ok(nested)
+    }
+
+    /// Arena-native widened verify (see [`ShardedEngine::verify_batch`]'s
+    /// docs for the wave semantics). f32 pools store verbatim, so the cpu
+    /// engine's per-row quantize-roundtrip is the identity here and is
+    /// skipped. With a 1-thread fan this performs zero heap allocations
+    /// after warmup.
+    fn verify_batch_into(
+        &mut self,
+        inputs: &[VerifyInput],
+        out: &mut VerifyOut,
+    ) -> Result<(), EngineError> {
+        out.rows.reset(0, 0);
+        out.row0.clear();
+        if inputs.is_empty() {
+            return Ok(());
+        }
+        let hd = self.full.cfg.head_dim();
+        let d = self.full.cfg.dim;
+        let max_seq_len = self.full.cfg.max_seq_len;
+        let ffn_kind = self.full.cfg.ffn;
+        let layout_kind = self.full.cfg.layout;
+        let Self {
+            full,
+            shards,
+            fan,
+            compute,
+            slots,
+            arena,
+            allreduce_calls,
+            allreduce_bytes,
+            chunking,
+            positions,
+        } = self;
+        let n_layers = full.blocks.len();
+        for slot in slots.iter_mut() {
+            slot.ensure_layers(n_layers);
+            if slot.tails.len() < inputs.len() {
+                slot.tails.resize_with(inputs.len(), Default::default);
+            }
+        }
+        let base = &mut arena.dec_pos;
+        let rowpos = &mut arena.rowpos;
+        let row0 = &mut arena.row0;
+        let toks = &mut arena.toks;
+        let x = &mut arena.x;
+        let a = &mut arena.a;
+        let pbuf = &mut arena.p;
+        let h = &mut arena.h;
+        let g = &mut arena.g;
+        let f = &mut arena.f;
+        let qs = &mut arena.qs;
+
+        base.clear();
         let mut fresh_needed = 0usize;
         for vi in inputs {
             if vi.tokens.is_empty() {
                 return Err(EngineError::BadSequence("empty verify input".into()));
             }
-            if self.chunking.contains_key(&vi.seq) {
+            if chunking.contains_key(&vi.seq) {
                 return Err(EngineError::BadSequence(format!(
                     "{:?} is still prefilling",
                     vi.seq
                 )));
             }
-            let p = *self
-                .positions
+            let pos = *positions
                 .get(&vi.seq)
                 .ok_or_else(|| EngineError::BadSequence(format!("{:?} not live", vi.seq)))?;
-            if p + vi.tokens.len() > cfg.max_seq_len {
+            if pos + vi.tokens.len() > max_seq_len {
                 return Err(EngineError::CapacityExhausted(format!(
-                    "{:?} would exceed max_seq_len {}",
-                    vi.seq, cfg.max_seq_len
+                    "{:?} would exceed max_seq_len {max_seq_len}",
+                    vi.seq
                 )));
             }
-            fresh_needed += self.shards[0].cache.blocks_to_grow(vi.seq, vi.tokens.len());
-            base.push(p);
+            fresh_needed += shards[0].cache.blocks_to_grow(vi.seq, vi.tokens.len());
+            base.push(pos);
         }
-        if fresh_needed > self.shards[0].cache.free_blocks() {
+        if fresh_needed > shards[0].cache.free_blocks() {
             return Err(EngineError::CapacityExhausted(format!(
                 "verify step needs {fresh_needed} blocks, {} free",
-                self.shards[0].cache.free_blocks()
+                shards[0].cache.free_blocks()
             )));
         }
         let total_rows: usize = inputs.iter().map(|i| i.tokens.len()).sum();
-        let toks: Vec<u32> = inputs.iter().flat_map(|i| i.tokens.iter().copied()).collect();
-        let mut rowpos = Vec::with_capacity(total_rows);
-        let mut row0 = Vec::with_capacity(inputs.len());
-        for (vi, &p) in inputs.iter().zip(&base) {
+        toks.clear();
+        toks.extend(inputs.iter().flat_map(|i| i.tokens.iter().copied()));
+        rowpos.clear();
+        row0.clear();
+        for (vi, &p) in inputs.iter().zip(base.iter()) {
             row0.push(rowpos.len());
             for j in 0..vi.tokens.len() {
                 rowpos.push(p + j);
             }
         }
         let max_s = inputs.iter().map(|i| i.tokens.len()).max().unwrap_or(0);
-        let Self {
-            full,
-            shards,
-            fan,
-            compute,
-            allreduce_calls,
-            allreduce_bytes,
-            positions,
-            ..
-        } = self;
-        let mut x = full.embed_tokens(&toks);
-        let n_layers = full.blocks.len();
-        let mut slots: Vec<Slot> = (0..shards.len())
-            .map(|_| {
-                let mut s = Slot::new();
-                s.tails = inputs.iter().map(|_| (Vec::new(), Vec::new())).collect();
-                s
-            })
-            .collect();
+        full.embed_tokens_into(toks, x);
+        // read-only from here on
+        let base = &*base;
+        let rowpos = &*rowpos;
+        let row0 = &*row0;
         for li in 0..n_layers {
-            let xr = &x;
-            let base = &base;
-            let row0 = &row0;
-            run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+            let xr = &*x;
+            run_shards(fan, compute, shards, slots, &|_, sh, slot| {
                 let sw = &sh.w;
                 let layout = sw.layout;
                 let e = layout.e();
                 let b = &sw.blocks[li];
-                let mut q = proj_slice(xr, &b.q, sw.h0 * hd, sw.h1 * hd);
-                let mut k = proj_slice(xr, &b.k, sw.g0 * hd, sw.g1 * hd);
-                let v = proj_slice(xr, &b.v, sw.g0 * hd, sw.g1 * hd);
+                let (k, v) = &mut slot.kv[li];
+                proj_slice_into(xr, &b.q, sw.h0 * hd, sw.h1 * hd, &mut slot.qs, &mut slot.q);
+                proj_slice_into(xr, &b.k, sw.g0 * hd, sw.g1 * hd, &mut slot.qs, k);
+                proj_slice_into(xr, &b.v, sw.g0 * hd, sw.g1 * hd, &mut slot.qs, v);
+                let q = &mut slot.q;
                 for (r, &p) in rowpos.iter().enumerate() {
-                    for h in 0..layout.n_heads {
-                        rope::rotate_head(&mut q.row_mut(r)[h * hd..(h + 1) * hd], p, rope::BASE);
+                    for hh in 0..layout.n_heads {
+                        rope::rotate_head(&mut q.row_mut(r)[hh * hd..(hh + 1) * hd], p, rope::BASE);
                     }
-                    for g in 0..layout.n_kv_heads {
-                        rope::rotate_head(&mut k.row_mut(r)[g * hd..(g + 1) * hd], p, rope::BASE);
+                    for gg in 0..layout.n_kv_heads {
+                        rope::rotate_head(&mut k.row_mut(r)[gg * hd..(gg + 1) * hd], p, rope::BASE);
                     }
                 }
-                let mut views: Vec<BlockView> = Vec::new();
-                let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(inputs.len());
+                let mut views: Vec<BlockView> = recycle(mem::take(&mut slot.views));
+                slot.ranges.clear();
                 for vi in inputs {
                     let start = views.len();
                     views.extend(sh.cache.seq_block_views(vi.seq, li).map_err(bad_seq)?);
-                    ranges.push((start, views.len()));
+                    slot.ranges.push((start, views.len()));
                 }
-                for (tk, tv) in slot.tails.iter_mut() {
+                for (tk, tv) in slot.tails.iter_mut().take(inputs.len()) {
                     tk.clear();
                     tv.clear();
                 }
-                let mut a = Mat::zeros(total_rows, layout.d());
+                slot.a.reset(total_rows, layout.d());
                 for j in 0..max_s {
-                    let tails = &slot.tails;
-                    let items: Vec<AttnItem> = inputs
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, vi)| vi.tokens.len() > j)
-                        .map(|(i, _)| {
-                            let r = row0[i] + j;
-                            AttnItem {
-                                q_rot: q.row(r),
-                                views: &views[ranges[i].0..ranges[i].1],
-                                cache_len: base[i],
-                                tails: [
-                                    KvSegment::rows(&tails[i].0, &tails[i].1, e),
-                                    KvSegment::rows(k.row(r), v.row(r), e),
-                                ],
-                                t: base[i] + j + 1,
-                                out_row: r,
-                            }
-                        })
-                        .collect();
-                    paged_attn::attend_batch(layout, &items, &mut a);
-                    drop(items);
+                    let mut items: Vec<AttnItem> = recycle(mem::take(&mut slot.items));
+                    {
+                        let tails = &slot.tails;
+                        let ranges = &slot.ranges;
+                        items.extend(
+                            inputs
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, vi)| vi.tokens.len() > j)
+                                .map(|(i, _)| {
+                                    let r = row0[i] + j;
+                                    AttnItem {
+                                        q_rot: q.row(r),
+                                        views: &views[ranges[i].0..ranges[i].1],
+                                        cache_len: base[i],
+                                        tails: [
+                                            KvSegment::rows(&tails[i].0, &tails[i].1, e),
+                                            KvSegment::rows(k.row(r), v.row(r), e),
+                                        ],
+                                        t: base[i] + j + 1,
+                                        out_row: r,
+                                    }
+                                }),
+                        );
+                    }
+                    paged_attn::attend_batch_scratch(layout, &items, &mut slot.a, &mut slot.scores);
+                    // recycle before mutating tails: the items borrow them
+                    slot.items = recycle(items);
                     for (i, vi) in inputs.iter().enumerate() {
                         if vi.tokens.len() <= j {
                             continue;
@@ -998,12 +1223,11 @@ impl Engine for ShardedEngine {
                         tv.extend_from_slice(v.row(r));
                     }
                 }
-                slot.kv.push((k, v));
-                slot.a = a;
+                slot.views = recycle(views);
                 Ok(())
             })?;
-            let mut a = Mat::zeros(total_rows, d);
-            for (sh, slot) in shards.iter().zip(&slots) {
+            a.reset(total_rows, d);
+            for (sh, slot) in shards.iter().zip(slots.iter()) {
                 let (c0, c1) = (sh.w.h0 * hd, sh.w.h1 * hd);
                 for r in 0..total_rows {
                     a.row_mut(r)[c0..c1].copy_from_slice(slot.a.row(r));
@@ -1012,25 +1236,28 @@ impl Engine for ShardedEngine {
             *allreduce_calls += 2;
             *allreduce_bytes += 2 * (total_rows * d * 4) as u64;
             let b = &full.blocks[li];
-            x = match cfg.layout {
+            match layout_kind {
                 BlockLayout::Serial => {
-                    let p = Weight::proj(&a, &b.p);
-                    ffn_forward(&p, &b.m, &b.o, cfg.ffn)
+                    Weight::proj_into(a, &b.p, qs, pbuf);
+                    ffn_forward_into(pbuf, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    mem::swap(x, f);
                 }
                 BlockLayout::Parallel => {
                     let post = if b.c.is_some() { &b.c } else { &b.p };
-                    let attn_out = Weight::proj(&a, post);
-                    attn_out.add(&ffn_forward(&x, &b.m, &b.o, cfg.ffn))
+                    Weight::proj_into(a, post, qs, pbuf);
+                    ffn_forward_into(x, &b.m, &b.o, ffn_kind, qs, h, g, f);
+                    pbuf.add_assign(f);
+                    mem::swap(x, pbuf);
                 }
-            };
+            }
         }
         let step_paged: u64 = inputs
             .iter()
-            .zip(&base)
+            .zip(base.iter())
             .map(|(vi, &p)| (vi.tokens.len() * p) as u64)
             .sum::<u64>()
             * n_layers as u64;
-        run_shards(fan, compute, shards, &mut slots, &|_, sh, slot| {
+        run_shards(fan, compute, shards, slots, &|_, sh, slot| {
             let mut r0 = 0usize;
             for vi in inputs {
                 for j in 0..vi.tokens.len() {
@@ -1051,17 +1278,26 @@ impl Engine for ShardedEngine {
         for vi in inputs {
             *positions.get_mut(&vi.seq).unwrap() += vi.tokens.len();
         }
-        let logits = full.unembed.matmul(&x);
-        let mut out = Vec::with_capacity(inputs.len());
-        let mut r0 = 0usize;
-        for vi in inputs {
-            let rows: Vec<Vec<f32>> = (r0..r0 + vi.tokens.len())
-                .map(|r| logits.row(r).to_vec())
-                .collect();
-            out.push(rows);
-            r0 += vi.tokens.len();
-        }
-        Ok(out)
+        full.unembed.matmul_into(x, qs, &mut out.rows);
+        out.row0.extend_from_slice(row0);
+        arena.note_step();
+        Ok(())
+    }
+
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        let (host_bytes, growth_events) = self.arena.stats();
+        let slot_bytes: usize = self.slots.iter().map(Slot::resident_bytes).sum();
+        Some(AllocStats {
+            arena_bytes: host_bytes + slot_bytes as u64,
+            growth_events,
+        })
+    }
+
+    fn plan_alloc(&mut self, max_rows: usize, spec_k: usize) {
+        let cfg = self.full.cfg.clone();
+        self.arena.plan(&cfg, max_rows, spec_k);
+        // per-shard slots warm lazily on the first step: their widths are
+        // shard-local and the first pass sizes them exactly
     }
 
     fn truncate(&mut self, seq: SeqId, new_len: usize) -> Result<(), EngineError> {

@@ -52,8 +52,11 @@ pub fn matmul_bias(a: &Mat, b: &Mat, bias: Option<&[f32]>) -> Mat {
     out
 }
 
-/// Write `a @ b` into a preallocated `out` (zeroed first). The decode hot
-/// loop reuses buffers through this to avoid per-token allocation.
+/// Write `a @ b` into a caller-owned `out`, reshaped and zeroed in place
+/// ([`Mat::reset`] — the allocation is reused whenever capacity suffices).
+/// The decode hot loop reuses arena buffers through this to avoid
+/// per-token allocation; dirty scratch from a previous step cannot change
+/// bits because every element is zeroed before accumulation.
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
     matmul_into_with(simd::level(), a, b, out);
 }
@@ -64,8 +67,7 @@ pub fn matmul_into_with(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat) {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
-    assert_eq!(out.shape(), (m, n), "matmul out shape mismatch");
-    out.as_mut_slice().fill(0.0);
+    out.reset(m, n);
     if m == 0 || n == 0 || k == 0 {
         return;
     }
@@ -220,31 +222,47 @@ pub fn matmul_transb(a: &Mat, b: &Mat) -> Mat {
     matmul_transb_with(simd::level(), a, b)
 }
 
-/// [`matmul_transb`] at an explicit dispatch level.
+/// [`matmul_transb`] at an explicit dispatch level. A thin wrapper over
+/// [`matmul_transb_into_with`] — allocating and `_into` paths are
+/// bit-identical by construction, not by parallel maintenance.
 pub fn matmul_transb_with(lvl: SimdLevel, a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows(), b.rows());
+    matmul_transb_into_with(lvl, a, b, &mut out);
+    out
+}
+
+/// [`matmul_transb`] into caller-owned storage (reshaped + zeroed via
+/// [`Mat::reset`], allocation reused).
+pub fn matmul_transb_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    matmul_transb_into_with(simd::level(), a, b, out);
+}
+
+/// [`matmul_transb_into`] at an explicit dispatch level. Same serial /
+/// threaded split and the same per-element lane-strided dot as always —
+/// only the output buffer's provenance changes.
+pub fn matmul_transb_into_with(lvl: SimdLevel, a: &Mat, b: &Mat, out: &mut Mat) {
     let (m, k) = a.shape();
     let (n, k2) = b.shape();
     assert_eq!(k, k2, "matmul_transb inner-dim mismatch");
-    let mut out = Mat::zeros(m, n);
+    out.reset(m, n);
     if m == 0 || n == 0 || k == 0 {
-        return out;
+        return;
     }
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     let pool = threadpool::current();
     if flops < 1.0e6 || pool.n_threads() == 1 {
-        transb_rows(lvl, a, b, &mut out, 0, m);
-        return out;
+        transb_rows(lvl, a, b, out, 0, m);
+        return;
     }
     let a_ptr = AddrSend(a as *const Mat);
     let b_ptr = AddrSend(b as *const Mat);
-    let out_ptr = AddrSendMut(&mut out as *mut Mat);
+    let out_ptr = AddrSendMut(out as *mut Mat);
     pool.scope_chunks(m, 4, move |r0, r1| {
         let a = unsafe { &*a_ptr.get() };
         let b = unsafe { &*b_ptr.get() };
         let out = unsafe { &mut *out_ptr.get() };
         transb_rows(lvl, a, b, out, r0, r1);
     });
-    out
 }
 
 /// Serial `a @ b^T` kernel over rows `[r0, r1)` of the output.
@@ -282,14 +300,29 @@ pub fn matvec(m: &Mat, v: &[f32]) -> Vec<f32> {
     matvec_with(simd::level(), m, v)
 }
 
-/// [`matvec`] at an explicit dispatch level.
+/// [`matvec`] at an explicit dispatch level — a wrapper over
+/// [`matvec_into_with`], bit-identical by construction.
 pub fn matvec_with(lvl: SimdLevel, m: &Mat, v: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    matvec_into_with(lvl, m, v, &mut out);
+    out
+}
+
+/// [`matvec`] into a caller-owned vector (cleared + resized, capacity
+/// reused).
+pub fn matvec_into(m: &Mat, v: &[f32], out: &mut Vec<f32>) {
+    matvec_into_with(simd::level(), m, v, out);
+}
+
+/// [`matvec_into`] at an explicit dispatch level. Each element is the
+/// fixed lane-strided dot regardless of where `out` came from.
+pub fn matvec_into_with(lvl: SimdLevel, m: &Mat, v: &[f32], out: &mut Vec<f32>) {
     assert_eq!(m.cols(), v.len(), "matvec dim mismatch");
-    let mut out = vec![0.0f32; m.rows()];
+    out.clear();
+    out.resize(m.rows(), 0.0);
     for r in 0..m.rows() {
         out[r] = simd::dot(lvl, m.row(r), v);
     }
-    out
 }
 
 // ---- restructured scalar oracles (kernel-equivalence suite) ------------

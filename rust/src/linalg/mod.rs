@@ -14,9 +14,11 @@ pub mod lu;
 pub mod qgemm;
 pub mod simd;
 
-pub use gemm::{matmul, matmul_bias, matmul_into, matvec, matmul_transb};
+pub use gemm::{
+    matmul, matmul_bias, matmul_into, matmul_transb, matmul_transb_into, matvec, matvec_into,
+};
 pub use lu::{cond_estimate, inverse, solve, Lu, LuError};
-pub use qgemm::qmatmul;
+pub use qgemm::{qmatmul, qmatmul_into, QuantScratch};
 
 use crate::tensor::Mat;
 

@@ -32,6 +32,27 @@ use crate::util::threadpool;
 /// slabbing never changes bits). Serving k ≤ 2688 spans at most two slabs.
 const KC_Q: usize = 2048;
 
+/// Reusable per-row activation-quant scratch: the i8 codes + scales that
+/// [`qmatmul`] historically allocated per call. One lives in each step
+/// arena; after a warmup pass at the step's widest activation shape,
+/// re-quantizing through it touches no allocator
+/// ([`QMat::quantize_rows_into`] reuses the buffers).
+#[derive(Default)]
+pub struct QuantScratch {
+    xq: QMat,
+}
+
+impl QuantScratch {
+    pub fn new() -> Self {
+        Self { xq: QMat::empty() }
+    }
+
+    /// Bytes currently held (codes + scales), for arena accounting.
+    pub fn resident_bytes(&self) -> usize {
+        self.xq.resident_bytes()
+    }
+}
+
 /// `x (m,k) @ W (k,n) -> (m,n)` where `W` arrives pre-quantized and
 /// transposed as a `(n, k)` [`QMat`].
 pub fn qmatmul(x: &Mat, w: &QMat) -> Mat {
@@ -39,31 +60,49 @@ pub fn qmatmul(x: &Mat, w: &QMat) -> Mat {
 }
 
 /// [`qmatmul`] at an explicit dispatch level (benches and the
-/// kernel-equivalence suite pin `Scalar` vs auto with identical threading).
+/// kernel-equivalence suite pin `Scalar` vs auto with identical
+/// threading). A wrapper over [`qmatmul_into_with`] with throwaway
+/// scratch — allocating and `_into` paths are bit-identical by
+/// construction.
 pub fn qmatmul_with(lvl: SimdLevel, x: &Mat, w: &QMat) -> Mat {
+    let mut out = Mat::zeros(x.rows(), w.rows());
+    let mut qs = QuantScratch::new();
+    qmatmul_into_with(lvl, x, w, &mut qs, &mut out);
+    out
+}
+
+/// [`qmatmul`] into caller-owned output and quant scratch.
+pub fn qmatmul_into(x: &Mat, w: &QMat, qs: &mut QuantScratch, out: &mut Mat) {
+    qmatmul_into_with(simd::level(), x, w, qs, out);
+}
+
+/// [`qmatmul_into`] at an explicit dispatch level. Activation quant runs
+/// through the scratch's reusable buffers (identical codes/scales —
+/// [`QMat::quantize_rows_into`]); the integer kernel and the f32 epilogue
+/// are untouched, so output bits match the allocating path exactly.
+pub fn qmatmul_into_with(lvl: SimdLevel, x: &Mat, w: &QMat, qs: &mut QuantScratch, out: &mut Mat) {
     let (m, k) = x.shape();
     assert_eq!(w.cols(), k, "qmatmul inner-dim mismatch: {} vs {}", k, w.cols());
     let n = w.rows();
-    let mut out = Mat::zeros(m, n);
+    out.reset(m, n);
     if m == 0 || n == 0 || k == 0 {
-        return out;
+        return;
     }
-    let xq = QMat::quantize_rows(x);
+    QMat::quantize_rows_into(x, &mut qs.xq);
+    let xq = &qs.xq;
     // Threading pays off only with enough arithmetic (same policy as gemm).
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     if flops < 1.0e6 {
-        qgemm_cols(lvl, &xq, w, &mut out, 0, n);
-        return out;
+        qgemm_cols(lvl, xq, w, out, 0, n);
+        return;
     }
-    let out_ptr = AddrSendMut(&mut out as *mut Mat);
-    let xq_ref = &xq;
+    let out_ptr = AddrSendMut(out as *mut Mat);
     threadpool::current().scope_chunks(n, 32, move |c0, c1| {
         // SAFETY: chunks write disjoint column ranges of `out`;
         // scope_chunks joins before this function returns.
         let out = unsafe { &mut *out_ptr.get() };
-        qgemm_cols(lvl, xq_ref, w, out, c0, c1);
+        qgemm_cols(lvl, xq, w, out, c0, c1);
     });
-    out
 }
 
 /// Serial kernel over output columns `[c0, c1)`.

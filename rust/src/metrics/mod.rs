@@ -202,6 +202,13 @@ pub struct Metrics {
     /// DP router submits placed on a replica that already holds the
     /// request's longest cached prompt prefix.
     pub shard_router_prefix_hits: AtomicU64,
+    // -- step-arena allocation discipline ---------------------------------
+    /// Bytes of reusable step-arena scratch the engine holds (gauge,
+    /// mirrored from [`crate::coordinator::engine::Engine::alloc_stats`]).
+    pub alloc_arena_bytes: AtomicU64,
+    /// Steps whose arena grew past its warmed-up high water (gauge;
+    /// expected 0 in steady state — the warmup-then-zero invariant).
+    pub alloc_steady_state_allocs: AtomicU64,
     // -- serving front-end (reactor) -------------------------------------
     /// Currently-open client connections (gauge).
     pub conns_open: AtomicU64,
@@ -386,6 +393,13 @@ impl Metrics {
                 ]),
             ),
             (
+                "alloc",
+                Json::obj(vec![
+                    ("arena_bytes", g(&self.alloc_arena_bytes)),
+                    ("steady_state_allocs", g(&self.alloc_steady_state_allocs)),
+                ]),
+            ),
+            (
                 "server",
                 Json::obj(vec![
                     ("conns_open", g(&self.conns_open)),
@@ -532,6 +546,21 @@ mod tests {
         let s = j.get("shard").unwrap();
         assert_eq!(s.get("mode").unwrap().as_str(), Some("dp"));
         assert_eq!(s.get("router_prefix_hits").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn alloc_gauges_in_json() {
+        let m = Metrics::new();
+        let j = m.to_json();
+        let a = j.get("alloc").unwrap();
+        assert_eq!(a.get("arena_bytes").unwrap().as_u64(), Some(0));
+        assert_eq!(a.get("steady_state_allocs").unwrap().as_u64(), Some(0));
+        Metrics::set(&m.alloc_arena_bytes, 1 << 20);
+        Metrics::set(&m.alloc_steady_state_allocs, 3);
+        let j = m.to_json();
+        let a = j.get("alloc").unwrap();
+        assert_eq!(a.get("arena_bytes").unwrap().as_u64(), Some(1 << 20));
+        assert_eq!(a.get("steady_state_allocs").unwrap().as_u64(), Some(3));
     }
 
     #[test]

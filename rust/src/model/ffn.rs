@@ -6,6 +6,7 @@
 //! model is the same program over fewer matrices.
 
 use crate::config::FfnKind;
+use crate::linalg::QuantScratch;
 use crate::model::{gelu, silu, Weight};
 use crate::tensor::Mat;
 
@@ -14,28 +15,53 @@ use crate::tensor::Mat;
 ///
 /// MLP: `gelu(x·M)·O` with `M: d×f`, `O: f×d`.
 /// SwiGLU: `M = [G ‖ U]: d×2f`; `(silu(x·G) ⊙ (x·U))·O`.
+///
+/// Thin wrapper over [`ffn_forward_into`] with fresh buffers — bit-identical
+/// by construction.
 pub fn ffn_forward(x: &Mat, m: &Weight, o: &Weight, kind: FfnKind) -> Mat {
+    let mut qs = QuantScratch::new();
+    let mut h = Mat::zeros(0, 0);
+    let mut g = Mat::zeros(0, 0);
+    let mut out = Mat::zeros(0, 0);
+    ffn_forward_into(x, m, o, kind, &mut qs, &mut h, &mut g, &mut out);
+    out
+}
+
+/// [`ffn_forward`] into caller-owned scratch: `h` holds the FFN hidden
+/// `(t, f')`, `g` the SwiGLU gated product `(t, f)` (untouched for MLP),
+/// `out` the result `(t, d)`. All three are `reset` here, so arena reuse
+/// across steps changes no bits.
+pub fn ffn_forward_into(
+    x: &Mat,
+    m: &Weight,
+    o: &Weight,
+    kind: FfnKind,
+    qs: &mut QuantScratch,
+    h: &mut Mat,
+    g: &mut Mat,
+    out: &mut Mat,
+) {
     match kind {
         FfnKind::Mlp => {
-            let mut h = m.matmul(x);
+            m.matmul_into(x, qs, h);
             for v in h.as_mut_slice() {
                 *v = gelu(*v);
             }
-            o.matmul(&h)
+            o.matmul_into(h, qs, out);
         }
         FfnKind::SwiGlu => {
             let f = o.rows();
             assert_eq!(m.cols(), 2 * f, "SwiGLU M must be d×2f");
-            let h = m.matmul(x); // (t, 2f): gate ‖ up
-            let mut gated = Mat::zeros(x.rows(), f);
+            m.matmul_into(x, qs, h); // (t, 2f): gate ‖ up
+            g.reset(x.rows(), f);
             for r in 0..x.rows() {
                 let hrow = h.row(r);
-                let grow = gated.row_mut(r);
+                let grow = g.row_mut(r);
                 for c in 0..f {
                     grow[c] = silu(hrow[c]) * hrow[f + c];
                 }
             }
-            o.matmul(&gated)
+            o.matmul_into(g, qs, out);
         }
     }
 }

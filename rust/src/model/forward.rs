@@ -96,7 +96,7 @@ pub fn prefill(w: &ModelWeights, tokens: &[u32]) -> (Mat, DecodeState) {
         // decode can continue the sequence.
         let k = Weight::proj(&x, &b.k);
         let v = Weight::proj(&x, &b.v);
-        let mut k_rot = k.clone();
+        let mut k_rot = k.as_ref().clone();
         rope::apply(&mut k_rot, hd, 0, rope::BASE);
         let (kc, vc) = &mut state.caches[li];
         kc.extend_from_slice(k_rot.as_slice());

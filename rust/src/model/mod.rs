@@ -30,9 +30,10 @@ pub use quant::quantize;
 pub use shard::{shard_weights, ShardWeights};
 
 use crate::config::{BlockLayout, FfnKind, ModelConfig, Variant};
-use crate::linalg;
+use crate::linalg::{self, QuantScratch};
 use crate::tensor::{Mat, QMat};
 use crate::util::rng::Xoshiro256;
+use std::borrow::Cow;
 
 /// One weight matrix in either precision. The forward pass only ever
 /// multiplies activations *by* a weight, so [`Weight::matmul`] is the whole
@@ -92,14 +93,39 @@ impl Weight {
         }
     }
 
+    /// [`Weight::matmul`] into a caller-owned output whose capacity is
+    /// reused (`Mat::reset`). Bit-identical: the allocating form routes
+    /// through the same `_into` kernels with a fresh buffer.
+    pub fn matmul_into(&self, x: &Mat, qs: &mut QuantScratch, out: &mut Mat) {
+        match self {
+            Weight::F32(m) => linalg::matmul_into(x, m, out),
+            Weight::Int8(q) => linalg::qmatmul_into(x, q, qs, out),
+        }
+    }
+
     /// Project `x` through an optional weight: `None` is the identity —
     /// an eliminated matrix, the paper's `Q* = 1` notation. The single
     /// projection helper every forward path (model, engine, residual
-    /// ablation) shares.
-    pub fn proj(x: &Mat, m: &Option<Weight>) -> Mat {
+    /// ablation) shares. An eliminated matrix **borrows** `x` (the old
+    /// spelling cloned the whole activation matrix per call — pure
+    /// hot-path waste); only a real projection allocates an output.
+    pub fn proj<'a>(x: &'a Mat, m: &Option<Weight>) -> Cow<'a, Mat> {
         match m {
-            Some(m) => m.matmul(x),
-            None => x.clone(),
+            Some(m) => Cow::Owned(m.matmul(x)),
+            None => Cow::Borrowed(x),
+        }
+    }
+
+    /// [`Weight::proj`] into a caller-owned output: `Some` runs the
+    /// `_into` kernel, `None` materializes the identity as a copy (same
+    /// values the borrowing form yields, in reusable storage).
+    pub fn proj_into(x: &Mat, m: &Option<Weight>, qs: &mut QuantScratch, out: &mut Mat) {
+        match m {
+            Some(m) => m.matmul_into(x, qs, out),
+            None => {
+                out.reset(x.rows(), x.cols());
+                out.as_mut_slice().copy_from_slice(x.as_slice());
+            }
         }
     }
 
@@ -120,12 +146,13 @@ impl Weight {
         }
     }
 
-    /// Materialize as f32 in the logical orientation (dequantizing if
-    /// needed).
-    pub fn to_f32(&self) -> Mat {
+    /// The f32 matrix in the logical orientation: a **borrow** when the
+    /// weight is already f32 (the old spelling cloned the full matrix per
+    /// call), an owned dequantization for INT8.
+    pub fn to_f32(&self) -> Cow<'_, Mat> {
         match self {
-            Weight::F32(m) => m.clone(),
-            Weight::Int8(q) => q.to_weight(),
+            Weight::F32(m) => Cow::Borrowed(m),
+            Weight::Int8(q) => Cow::Owned(q.to_weight()),
         }
     }
 
@@ -316,13 +343,19 @@ impl ModelWeights {
 
     /// Embed a token sequence to a `(t, d)` activation matrix.
     pub fn embed_tokens(&self, tokens: &[u32]) -> Mat {
-        let d = self.cfg.dim;
-        let mut x = Mat::zeros(tokens.len(), d);
+        let mut x = Mat::zeros(0, 0);
+        self.embed_tokens_into(tokens, &mut x);
+        x
+    }
+
+    /// [`ModelWeights::embed_tokens`] into a caller-owned matrix whose
+    /// capacity is reused across steps.
+    pub fn embed_tokens_into(&self, tokens: &[u32], out: &mut Mat) {
+        out.reset(tokens.len(), self.cfg.dim);
         for (r, &t) in tokens.iter().enumerate() {
             assert!((t as usize) < self.cfg.vocab_size, "token {t} out of vocab");
-            x.row_mut(r).copy_from_slice(self.embed.row(t as usize));
+            out.row_mut(r).copy_from_slice(self.embed.row(t as usize));
         }
-        x
     }
 
     /// Structural sanity check: shapes of every matrix against the config

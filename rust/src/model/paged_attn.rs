@@ -240,6 +240,31 @@ pub fn attend_paged(
 /// run inline: the grid dispatch costs more than the math below ~16k
 /// multiply-adds.
 pub fn attend_batch(layout: HeadLayout, items: &[AttnItem<'_>], out: &mut Mat) {
+    attend_batch_inner(layout, items, out, None)
+}
+
+/// [`attend_batch`] with **caller-owned** score scratch for the inline
+/// (serial) path — the step arena passes a capacity-planned buffer here so
+/// a steady-state decode step touches the heap nowhere, independent of how
+/// the per-thread scratch happens to have grown. The threaded path still
+/// uses each worker's persistent thread-local. Bit-identical to
+/// [`attend_batch`] (same dispatch, same kernels): scratch provenance
+/// never feeds the math — scores are fully overwritten per (item, head).
+pub fn attend_batch_scratch(
+    layout: HeadLayout,
+    items: &[AttnItem<'_>],
+    out: &mut Mat,
+    scores: &mut Vec<f32>,
+) {
+    attend_batch_inner(layout, items, out, Some(scores))
+}
+
+fn attend_batch_inner(
+    layout: HeadLayout,
+    items: &[AttnItem<'_>],
+    out: &mut Mat,
+    caller_scores: Option<&mut Vec<f32>>,
+) {
     if items.is_empty() {
         return;
     }
@@ -258,13 +283,16 @@ pub fn attend_batch(layout: HeadLayout, items: &[AttnItem<'_>], out: &mut Mat) {
     let work: usize = items.iter().map(|it| it.t).sum::<usize>() * n_heads * hd;
     let pool = threadpool::current();
     if grid == 1 || work < (1 << 14) || pool.n_threads() == 1 {
-        SCORES.with(|s| {
-            let scores = &mut *s.borrow_mut();
+        let serial = |scores: &mut Vec<f32>, out: &mut Mat| {
             for it in items {
                 let row = out.row_mut(it.out_row);
                 attend_paged(layout, it.q_rot, it.views, &it.tails, it.t, scores, row);
             }
-        });
+        };
+        match caller_scores {
+            Some(scores) => serial(scores, out),
+            None => SCORES.with(|s| serial(&mut s.borrow_mut(), out)),
+        }
         return;
     }
     let lvl = simd::level();

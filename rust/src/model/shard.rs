@@ -168,9 +168,9 @@ mod tests {
             for sh in &shards {
                 let sb = &sh.blocks[li];
                 let got_q = Weight::proj(&x, &sb.q);
-                assert_eq!(got_q, full_q.col_slice(sh.h0 * hd, sh.h1 * hd), "q layer {li}");
+                assert_eq!(*got_q, full_q.col_slice(sh.h0 * hd, sh.h1 * hd), "q layer {li}");
                 let got_k = Weight::proj(&x, &sb.k);
-                assert_eq!(got_k, full_k.col_slice(sh.g0 * hd, sh.g1 * hd), "k layer {li}");
+                assert_eq!(*got_k, full_k.col_slice(sh.g0 * hd, sh.g1 * hd), "k layer {li}");
             }
         }
     }
@@ -189,7 +189,7 @@ mod tests {
         let full_v = Weight::proj(&x, &b.v);
         for sh in &shards {
             let got = Weight::proj(&x, &sh.blocks[0].v);
-            assert_eq!(got, full_v.col_slice(sh.g0 * hd, sh.g1 * hd), "shard {}", sh.shard);
+            assert_eq!(*got, full_v.col_slice(sh.g0 * hd, sh.g1 * hd), "shard {}", sh.shard);
         }
     }
 

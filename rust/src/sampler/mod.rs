@@ -69,24 +69,41 @@ impl SamplerCfg {
     }
 }
 
-/// The candidate distribution `sample` draws from after temperature /
-/// top-k / top-p: token ids and probabilities in inverse-CDF walk order.
-struct Dist {
+/// Reusable sampling scratch: the candidate id / probability tables the
+/// temperature path builds per draw. Capacity is retained across draws, so
+/// a scheduler holding one of these samples without heap allocation in the
+/// steady state (`tests/alloc_regression.rs`).
+#[derive(Debug, Default)]
+pub struct SamplerScratch {
     idx: Vec<u32>,
     probs: Vec<f32>,
 }
 
-/// Build the candidate distribution for a temperature>0 draw.
+impl SamplerScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Build the candidate distribution for a temperature>0 draw into `s`
+/// (`s.idx` / `s.probs` in inverse-CDF walk order).
 ///
-/// NaN logits are mapped to −∞ up front so they sort deterministically
+/// NaN logits are mapped to −∞ up front so they order deterministically
 /// (`total_cmp`, never `partial_cmp().unwrap()`) and drop out of the
 /// support; a row whose candidates are all −∞ after that mapping yields a
 /// uniform distribution (panic-free degenerate fallback — grammar masking
 /// guarantees callers a non-empty support, this guards the guarantee); a
 /// row containing +∞ puts the softmax-limit mass uniformly on the +∞
 /// entries. On finite rows this is byte-for-byte the pre-hardening
-/// pipeline: identical sort order, softmax, nucleus cut, and CDF.
-fn dist(logits: &[f32], cfg: &SamplerCfg) -> Dist {
+/// pipeline: identical candidate order, softmax, nucleus cut, and CDF.
+///
+/// The comparator is a strict total order — descending value with
+/// ascending-index tie-break — so the sorted sequence is *unique*. That is
+/// what lets top-k run as an O(n) `select_nth_unstable_by` partition
+/// followed by a sort of only the k survivors: with no comparator ties,
+/// partition-then-sort provably equals the first k of a full sort (pinned
+/// by `top_k_partition_matches_full_sort`).
+fn dist_into(logits: &[f32], cfg: &SamplerCfg, s: &mut SamplerScratch) {
     let inv_t = 1.0 / cfg.temperature;
     let val = |i: u32| {
         let v = logits[i as usize];
@@ -96,26 +113,33 @@ fn dist(logits: &[f32], cfg: &SamplerCfg) -> Dist {
             v
         }
     };
-    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
-    // top-k: keep k largest
+    let by_desc = |a: &u32, b: &u32| val(*b).total_cmp(&val(*a)).then(a.cmp(b));
+    let idx = &mut s.idx;
+    let probs = &mut s.probs;
+    idx.clear();
+    idx.extend(0..logits.len() as u32);
+    // top-k: keep k largest — partition, drop the tail, order the keepers
     if cfg.top_k > 0 && cfg.top_k < logits.len() {
-        idx.sort_unstable_by(|&a, &b| val(b).total_cmp(&val(a)));
+        idx.select_nth_unstable_by(cfg.top_k - 1, by_desc);
         idx.truncate(cfg.top_k);
+        idx.sort_unstable_by(by_desc);
     } else if cfg.top_p < 1.0 {
-        idx.sort_unstable_by(|&a, &b| val(b).total_cmp(&val(a)));
+        idx.sort_unstable_by(by_desc);
     }
     let mx = idx.iter().map(|&i| val(i)).fold(f32::NEG_INFINITY, f32::max);
-    let mut probs: Vec<f32> = if mx == f32::INFINITY {
-        idx.iter()
-            .map(|&i| if val(i) == f32::INFINITY { 1.0 } else { 0.0 })
-            .collect()
+    probs.clear();
+    if mx == f32::INFINITY {
+        probs.extend(
+            idx.iter()
+                .map(|&i| if val(i) == f32::INFINITY { 1.0 } else { 0.0 }),
+        );
     } else if mx == f32::NEG_INFINITY {
-        vec![1.0; idx.len()]
+        probs.extend(idx.iter().map(|_| 1.0f32));
     } else {
         // (val − mx) ≤ 0, so exp never overflows and the max entry
         // contributes exp(0)=1 — the normalizing sum is always ≥ 1.
-        idx.iter().map(|&i| ((val(i) - mx) * inv_t).exp()).collect()
-    };
+        probs.extend(idx.iter().map(|&i| ((val(i) - mx) * inv_t).exp()));
+    }
     let sum: f32 = probs.iter().sum();
     for p in probs.iter_mut() {
         *p /= sum;
@@ -138,28 +162,43 @@ fn dist(logits: &[f32], cfg: &SamplerCfg) -> Dist {
             *p /= s;
         }
     }
-    Dist { idx, probs }
 }
 
 /// Sample one token id from a logits row. Consumes exactly one `next_f32`
 /// from `rng` when `temperature > 0`, none when greedy — the scheduler's
 /// RNG stream discipline (see [`accept_stochastic`]) leans on this.
+///
+/// Thin wrapper over [`sample_with`] with fresh scratch; callers on the
+/// decode hot path should hold a [`SamplerScratch`] and call `sample_with`.
 pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Xoshiro256) -> u32 {
+    let mut scratch = SamplerScratch::new();
+    sample_with(logits, cfg, rng, &mut scratch)
+}
+
+/// [`sample`] with caller-owned scratch: identical draw (same candidate
+/// order, same single `next_f32`), zero heap allocations once the scratch
+/// has warmed to the row's vocab size.
+pub fn sample_with(
+    logits: &[f32],
+    cfg: &SamplerCfg,
+    rng: &mut Xoshiro256,
+    scratch: &mut SamplerScratch,
+) -> u32 {
     debug_assert!(!logits.is_empty());
     if cfg.temperature == 0.0 {
         return argmax(logits);
     }
-    let d = dist(logits, cfg);
+    dist_into(logits, cfg, scratch);
     // inverse-CDF draw
     let u = rng.next_f32();
     let mut cum = 0.0f32;
-    for (i, &p) in d.probs.iter().enumerate() {
+    for (i, &p) in scratch.probs.iter().enumerate() {
         cum += p;
         if u < cum {
-            return d.idx[i];
+            return scratch.idx[i];
         }
     }
-    *d.idx.last().unwrap()
+    *scratch.idx.last().unwrap()
 }
 
 /// Greedy speculative acceptance.
@@ -222,6 +261,19 @@ pub fn accept_stochastic(
     cfg: &SamplerCfg,
     rng: &mut Xoshiro256,
 ) -> (usize, u32) {
+    let mut scratch = SamplerScratch::new();
+    accept_stochastic_with(drafts, rows, cfg, rng, &mut scratch)
+}
+
+/// [`accept_stochastic`] with caller-owned sampling scratch — same draws,
+/// same stream discipline, no per-call heap allocation.
+pub fn accept_stochastic_with(
+    drafts: &[u32],
+    rows: &[Vec<f32>],
+    cfg: &SamplerCfg,
+    rng: &mut Xoshiro256,
+    scratch: &mut SamplerScratch,
+) -> (usize, u32) {
     assert_eq!(
         rows.len(),
         drafts.len() + 1,
@@ -229,12 +281,15 @@ pub fn accept_stochastic(
     );
     debug_assert!(!cfg.is_greedy(), "greedy requests use accept_greedy");
     for (j, &d) in drafts.iter().enumerate() {
-        let y = sample(&rows[j], cfg, rng);
+        let y = sample_with(&rows[j], cfg, rng, scratch);
         if y != d {
             return (j, y);
         }
     }
-    (drafts.len(), sample(&rows[drafts.len()], cfg, rng))
+    (
+        drafts.len(),
+        sample_with(&rows[drafts.len()], cfg, rng, scratch),
+    )
 }
 
 /// Argmax with lowest-index tie-break. NaN entries are skipped (a row of
@@ -536,6 +591,125 @@ mod tests {
         assert_eq!(next, plain[drafts.len()]);
         // both streams consumed the same number of uniforms
         assert_eq!(rp.next_u64(), rs.next_u64());
+    }
+
+    /// Full-sort oracle for the candidate pipeline: the pre-partition
+    /// implementation (sort the whole vocab descending, truncate to k),
+    /// sharing the exact comparator. `dist_into` must reproduce its output
+    /// bit-for-bit.
+    fn dist_oracle(logits: &[f32], cfg: &SamplerCfg) -> (Vec<u32>, Vec<f32>) {
+        let inv_t = 1.0 / cfg.temperature;
+        let val = |i: u32| {
+            let v = logits[i as usize];
+            if v.is_nan() {
+                f32::NEG_INFINITY
+            } else {
+                v
+            }
+        };
+        let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+        if cfg.top_k > 0 && cfg.top_k < logits.len() {
+            idx.sort_unstable_by(|&a, &b| val(b).total_cmp(&val(a)).then(a.cmp(&b)));
+            idx.truncate(cfg.top_k);
+        } else if cfg.top_p < 1.0 {
+            idx.sort_unstable_by(|&a, &b| val(b).total_cmp(&val(a)).then(a.cmp(&b)));
+        }
+        let mx = idx.iter().map(|&i| val(i)).fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<f32> = if mx == f32::INFINITY {
+            idx.iter()
+                .map(|&i| if val(i) == f32::INFINITY { 1.0 } else { 0.0 })
+                .collect()
+        } else if mx == f32::NEG_INFINITY {
+            vec![1.0; idx.len()]
+        } else {
+            idx.iter().map(|&i| ((val(i) - mx) * inv_t).exp()).collect()
+        };
+        let sum: f32 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+        if cfg.top_p < 1.0 {
+            let mut cum = 0.0f32;
+            let mut cut = probs.len();
+            for (i, &p) in probs.iter().enumerate() {
+                cum += p;
+                if cum >= cfg.top_p {
+                    cut = i + 1;
+                    break;
+                }
+            }
+            probs.truncate(cut);
+            idx.truncate(cut);
+            let s: f32 = probs.iter().sum();
+            for p in probs.iter_mut() {
+                *p /= s;
+            }
+        }
+        (idx, probs)
+    }
+
+    /// Property test for the O(n) top-k partition: across adversarial rows
+    /// (duplicate values for tie-break coverage, NaN, ±∞) and the full cfg
+    /// grid, the partitioned pipeline must match the full-sort oracle
+    /// bit-for-bit — ids equal, probabilities equal as bits. Scratch is
+    /// deliberately reused dirty across cases: stale contents must not leak.
+    #[test]
+    fn top_k_partition_matches_full_sort() {
+        let mut rng = Xoshiro256::seed_from_u64(2024);
+        let mut scratch = SamplerScratch::new();
+        for case in 0..200 {
+            let n = 2 + (rng.next_u64() % 48) as usize;
+            let mut row: Vec<f32> = (0..n)
+                // coarse quantization forces plenty of exact ties
+                .map(|_| ((rng.next_u64() % 7) as f32) - 3.0)
+                .collect();
+            if case % 3 == 0 {
+                row[(rng.next_u64() as usize) % n] = f32::NAN;
+            }
+            if case % 5 == 0 {
+                row[(rng.next_u64() as usize) % n] = f32::INFINITY;
+            }
+            if case % 7 == 0 {
+                row[(rng.next_u64() as usize) % n] = f32::NEG_INFINITY;
+            }
+            for &top_k in &[0usize, 1, 2, n / 2, n - 1, n, n + 3] {
+                for &top_p in &[1.0f32, 0.9, 0.5] {
+                    let cfg = SamplerCfg {
+                        temperature: 0.8,
+                        top_k,
+                        top_p,
+                    };
+                    let (want_idx, want_probs) = dist_oracle(&row, &cfg);
+                    dist_into(&row, &cfg, &mut scratch);
+                    assert_eq!(scratch.idx, want_idx, "case {case} k={top_k} p={top_p}");
+                    let got_bits: Vec<u32> =
+                        scratch.probs.iter().map(|p| p.to_bits()).collect();
+                    let want_bits: Vec<u32> = want_probs.iter().map(|p| p.to_bits()).collect();
+                    assert_eq!(got_bits, want_bits, "case {case} k={top_k} p={top_p}");
+                }
+            }
+        }
+    }
+
+    /// `sample_with` over a dirty, reused scratch must replay the exact
+    /// stream `sample` (fresh scratch every call) produces.
+    #[test]
+    fn sample_with_reused_scratch_matches_sample() {
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.61).cos() * 3.0).collect();
+        let cfg = SamplerCfg {
+            temperature: 0.9,
+            top_k: 10,
+            top_p: 0.95,
+        };
+        let mut r1 = Xoshiro256::seed_from_u64(33);
+        let mut r2 = Xoshiro256::seed_from_u64(33);
+        let mut scratch = SamplerScratch::new();
+        for _ in 0..200 {
+            assert_eq!(
+                sample(&logits, &cfg, &mut r1),
+                sample_with(&logits, &cfg, &mut r2, &mut scratch)
+            );
+        }
     }
 
     #[test]

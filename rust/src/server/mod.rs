@@ -907,6 +907,14 @@ mod tests {
         let srv = m.get("metrics").unwrap().get("server").unwrap();
         assert_eq!(srv.get("conns_open").unwrap().as_u64(), Some(1));
         assert_eq!(srv.get("conns_accepted").unwrap().as_u64(), Some(1));
+        // ... and the step-arena allocation gauges: after serving a request
+        // the engine holds warmed scratch, and steady state never regrew
+        let alloc = m.get("metrics").unwrap().get("alloc").unwrap();
+        assert!(
+            alloc.get("arena_bytes").unwrap().as_u64().unwrap() > 0,
+            "arena should be warm after a served request"
+        );
+        assert!(alloc.get("steady_state_allocs").is_some());
     }
 
     #[test]

@@ -320,7 +320,7 @@ pub fn audit(w: &ModelWeights) -> Vec<AuditRow> {
             let m = match m.as_f32() {
                 Some(m) => m,
                 None => {
-                    dequantized = m.to_f32();
+                    dequantized = m.to_f32().into_owned();
                     &dequantized
                 }
             };

@@ -63,6 +63,24 @@ impl Mat {
         m
     }
 
+    /// Reshape to `(rows, cols)` and zero-fill, **reusing the existing
+    /// allocation** whenever capacity suffices. After a warmup pass at the
+    /// largest shape a step can produce, subsequent `reset` calls never
+    /// touch the heap — the backbone of the step-arena zero-alloc
+    /// invariant (DESIGN.md §Memory plan).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Bytes of backing storage held (capacity, not length) — arena
+    /// accounting for the `alloc.arena_bytes` gauge.
+    pub fn capacity_bytes(&self) -> usize {
+        self.data.capacity() * core::mem::size_of::<f32>()
+    }
+
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
@@ -132,12 +150,19 @@ impl Mat {
 
     /// Copy of columns `[c0, c1)` as a new matrix.
     pub fn col_slice(&self, c0: usize, c1: usize) -> Mat {
-        assert!(c0 <= c1 && c1 <= self.cols, "col_slice out of range");
         let mut out = Mat::zeros(self.rows, c1 - c0);
+        self.col_slice_into(c0, c1, &mut out);
+        out
+    }
+
+    /// [`Mat::col_slice`] into caller-owned storage (same bytes — a row
+    /// memcpy either way; only the output's provenance changes).
+    pub fn col_slice_into(&self, c0: usize, c1: usize, out: &mut Mat) {
+        assert!(c0 <= c1 && c1 <= self.cols, "col_slice out of range");
+        out.reset(self.rows, c1 - c0);
         for r in 0..self.rows {
             out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
         }
-        out
     }
 
     /// Copy of rows `[r0, r1)` as a new matrix.
@@ -270,10 +295,35 @@ impl QMat {
     /// so it dequantizes exactly. Per-element round-trip error is bounded
     /// by `scale / 2` ([`QMat::dequantize`]).
     pub fn quantize_rows(m: &Mat) -> Self {
+        let mut q = Self::empty();
+        Self::quantize_rows_into(m, &mut q);
+        q
+    }
+
+    /// A 0×0 placeholder to be filled by [`QMat::quantize_rows_into`]
+    /// (arena slots start here and grow once, during warmup).
+    pub fn empty() -> Self {
+        Self {
+            data: Vec::new(),
+            rows: 0,
+            cols: 0,
+            scales: Vec::new(),
+        }
+    }
+
+    /// [`QMat::quantize_rows`] into caller-owned storage, reusing `q`'s
+    /// code/scale buffers. Exactly the same per-row fold and round/clamp
+    /// expressions, so codes and scales are identical bit-for-bit; the
+    /// allocating constructor is a thin wrapper over this.
+    pub fn quantize_rows_into(m: &Mat, q: &mut QMat) {
         let (rows, cols) = m.shape();
         let lvl = crate::linalg::simd::level();
-        let mut data = Vec::with_capacity(rows * cols);
-        let mut scales = Vec::with_capacity(rows);
+        q.rows = rows;
+        q.cols = cols;
+        q.data.clear();
+        q.data.reserve(rows * cols);
+        q.scales.clear();
+        q.scales.reserve(rows);
         for r in 0..rows {
             let row = m.row(r);
             // |x| and max are exact, so the lane-strided amax equals the
@@ -283,21 +333,15 @@ impl QMat {
             let amax = crate::linalg::simd::absmax(lvl, row);
             if amax > 0.0 {
                 let scale = amax / 127.0;
-                scales.push(scale);
+                q.scales.push(scale);
                 let inv = 1.0 / scale;
                 for &x in row {
-                    data.push((x * inv).round().clamp(-127.0, 127.0) as i8);
+                    q.data.push((x * inv).round().clamp(-127.0, 127.0) as i8);
                 }
             } else {
-                scales.push(0.0);
-                data.extend(std::iter::repeat(0i8).take(cols));
+                q.scales.push(0.0);
+                q.data.extend(std::iter::repeat(0i8).take(cols));
             }
-        }
-        Self {
-            data,
-            rows,
-            cols,
-            scales,
         }
     }
 
@@ -511,6 +555,41 @@ mod tests {
         let mut want = before;
         want.scale(0.5);
         assert_eq!(q.dequantize(), want);
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zero_fills() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0; 6]);
+        m.reset(3, 2);
+        assert_eq!(m.shape(), (3, 2));
+        assert!(m.as_slice().iter().all(|v| v.to_bits() == 0));
+        // shrinking then re-growing within capacity must not reallocate
+        let cap_probe = m.as_slice().as_ptr();
+        m.reset(1, 2);
+        m.reset(3, 2);
+        assert_eq!(m.as_slice().as_ptr(), cap_probe);
+    }
+
+    #[test]
+    fn col_slice_into_matches_col_slice_with_dirty_scratch() {
+        let m = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        let mut out = Mat::from_vec(2, 2, vec![9.0; 4]); // dirty, wrong shape
+        m.col_slice_into(1, 4, &mut out);
+        assert_eq!(out, m.col_slice(1, 4));
+    }
+
+    #[test]
+    fn quantize_rows_into_matches_allocating_with_dirty_scratch() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let a = Mat::randn(5, 9, 1.1, &mut rng);
+        let b = Mat::randn(3, 17, 0.7, &mut rng);
+        let mut q = QMat::empty();
+        QMat::quantize_rows_into(&a, &mut q); // dirty it at another shape
+        QMat::quantize_rows_into(&b, &mut q);
+        let want = QMat::quantize_rows(&b);
+        assert_eq!(q.data(), want.data());
+        assert_eq!(q.scales(), want.scales());
+        assert_eq!((q.rows(), q.cols()), (want.rows(), want.cols()));
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Capacity-planned scratch for the steady-state decode hot path.
+//!
+//! Every buffer a fused decode / verify step needs lives here exactly once
+//! and is **reused across steps**: activation ping-pong matrices, per-layer
+//! K/V rows, paged-attention score scratch, activation-quant scratch, the
+//! lifetime-free index vectors, and (via [`recycle`]) the borrow-carrying
+//! view/item tables. Buffers are `reset`/`clear`ed at each use — never
+//! shrunk — so after a warmup pass at the largest shape the workload can
+//! produce, a steady-state step performs **zero heap allocations**
+//! (asserted forever by `tests/alloc_regression.rs` with a counting
+//! global allocator; DESIGN.md §Memory plan).
+//!
+//! [`StepArena::plan`] pre-reserves from the model config and a row bound
+//! (scheduler max batch × widest phase mix), so even the first step avoids
+//! most growth; warmup remains the authoritative guarantee because view
+//! tables scale with the paged cache's block count at runtime.
+
+use crate::config::ModelConfig;
+use crate::kvcache::BlockView;
+use crate::linalg::QuantScratch;
+use crate::model::paged_attn::AttnItem;
+use crate::tensor::Mat;
+
+/// Move a `Vec`'s allocation between element types of identical layout.
+///
+/// The decode step's view/item tables (`Vec<BlockView<'a>>`,
+/// `Vec<AttnItem<'a>>`) borrow the KV cache for one layer only, so they
+/// cannot be *stored* across steps at their in-use lifetime. This helper
+/// clears the vector (dropping every borrow) and re-types the now-empty
+/// allocation — typically `'a` ⇄ `'static` on the same element type — so
+/// its capacity survives in the arena between steps.
+pub fn recycle<T, U>(mut v: Vec<T>) -> Vec<U> {
+    assert_eq!(
+        core::mem::size_of::<T>(),
+        core::mem::size_of::<U>(),
+        "recycle: element size mismatch"
+    );
+    assert_eq!(
+        core::mem::align_of::<T>(),
+        core::mem::align_of::<U>(),
+        "recycle: element align mismatch"
+    );
+    v.clear();
+    let cap = v.capacity();
+    let ptr = v.as_mut_ptr();
+    core::mem::forget(v);
+    // SAFETY: the buffer was allocated by a Vec<T> with Layout::array::<T>
+    // of `cap` elements, which is byte-identical to Layout::array::<U> of
+    // `cap` elements (size and align asserted above). Length 0 means no U
+    // is ever read uninitialized; the returned Vec frees with the same
+    // layout it was allocated with.
+    unsafe { Vec::from_raw_parts(ptr.cast::<U>(), 0, cap) }
+}
+
+/// All reusable scratch of one engine's fused step (`step_batch` /
+/// `verify_batch`). Fields are deliberately public: engines destructure
+/// the arena so disjoint buffers can be borrowed simultaneously.
+pub struct StepArena {
+    /// Activation ping-pong: layer input `(rows, d)`.
+    pub x: Mat,
+    /// Rotated-query projection `(rows, d)`.
+    pub q: Mat,
+    /// Attention output `(rows, d)`.
+    pub a: Mat,
+    /// Post-attention projection `(rows, d)`.
+    pub p: Mat,
+    /// FFN hidden `(rows, f')`.
+    pub h: Mat,
+    /// SwiGLU gated product `(rows, f)`.
+    pub g: Mat,
+    /// FFN / block output `(rows, d)` (swapped with `x` per layer).
+    pub f: Mat,
+    /// Rows selected for the unembed `(sel, d)`.
+    pub sub: Mat,
+    /// Unembed output `(sel, vocab)`.
+    pub logits: Mat,
+    /// Per-layer (rotated-K, V) rows `(rows, e)` each, held until the
+    /// position-major cache commit after the layer loop.
+    pub layer_kv: Vec<(Mat, Mat)>,
+    /// Per-row activation-quant scratch for INT8 weights.
+    pub qs: QuantScratch,
+    /// Paged-attention score scratch for the inline (serial) kernel path.
+    pub scores: Vec<f32>,
+    /// Flattened step tokens.
+    pub toks: Vec<u32>,
+    /// Absolute position of every flattened row.
+    pub rowpos: Vec<usize>,
+    /// Pre-step position per decode input.
+    pub dec_pos: Vec<usize>,
+    /// First flattened row per verify input.
+    pub row0: Vec<usize>,
+    /// Row indices selected for the unembed.
+    pub sel: Vec<usize>,
+    /// First flattened row per prefill chunk.
+    pub chunk_row0: Vec<usize>,
+    /// `(start, reused)` per prefill chunk.
+    pub chunk_meta: Vec<(usize, usize)>,
+    /// Completion flag per prefill chunk.
+    pub chunk_done: Vec<bool>,
+    /// `views` sub-range per attention item group.
+    pub ranges: Vec<(usize, usize)>,
+    /// Verify draft tails (roundtripped K/V rows) per input.
+    pub tails: Vec<(Vec<f32>, Vec<f32>)>,
+    /// KV-quantizer roundtrip scratch (codes).
+    pub rt_codes: Vec<u8>,
+    /// KV-quantizer roundtrip scratch (values).
+    pub rt_vals: Vec<f32>,
+    /// Recycled block-view table (capacity only; emptied between layers).
+    pub views: Vec<BlockView<'static>>,
+    /// Recycled attention-item table (capacity only).
+    pub items: Vec<AttnItem<'static>>,
+    /// High-water resident bytes at the last `note_step`.
+    baseline: usize,
+    /// Whether at least one step has been observed (warmup growth up to the
+    /// first observation is free).
+    primed: bool,
+    /// Steps whose end-of-step footprint exceeded the prior high water —
+    /// 0 in steady state; surfaced as `alloc.steady_state_allocs`.
+    growth_events: u64,
+}
+
+impl Default for StepArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StepArena {
+    pub fn new() -> Self {
+        Self {
+            x: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            a: Mat::zeros(0, 0),
+            p: Mat::zeros(0, 0),
+            h: Mat::zeros(0, 0),
+            g: Mat::zeros(0, 0),
+            f: Mat::zeros(0, 0),
+            sub: Mat::zeros(0, 0),
+            logits: Mat::zeros(0, 0),
+            layer_kv: Vec::new(),
+            qs: QuantScratch::new(),
+            scores: Vec::new(),
+            toks: Vec::new(),
+            rowpos: Vec::new(),
+            dec_pos: Vec::new(),
+            row0: Vec::new(),
+            sel: Vec::new(),
+            chunk_row0: Vec::new(),
+            chunk_meta: Vec::new(),
+            chunk_done: Vec::new(),
+            ranges: Vec::new(),
+            tails: Vec::new(),
+            rt_codes: Vec::new(),
+            rt_vals: Vec::new(),
+            views: Vec::new(),
+            items: Vec::new(),
+            baseline: 0,
+            primed: false,
+            growth_events: 0,
+        }
+    }
+
+    /// Ensure `layer_kv` has one (K, V) pair per layer (capacity kept).
+    pub fn ensure_layers(&mut self, n_layers: usize) {
+        while self.layer_kv.len() < n_layers {
+            self.layer_kv.push((Mat::zeros(0, 0), Mat::zeros(0, 0)));
+        }
+    }
+
+    /// Pre-reserve from the model config and a flattened-row bound
+    /// (`max_rows` ≈ scheduler max batch × widest per-sequence row count:
+    /// `1 + spec_k` for a speculative step, chunk token budget for chunked
+    /// prefill). Sizing formula in DESIGN.md §Memory plan. Idempotent;
+    /// never shrinks.
+    pub fn plan(&mut self, cfg: &ModelConfig, max_rows: usize, spec_k: usize) {
+        let d = cfg.dim;
+        let e = cfg.e();
+        let fp = cfg.f_prime();
+        let f = cfg.hidden_dim;
+        let grow = |m: &mut Mat, r: usize, c: usize| {
+            if m.capacity_bytes() < r * c * 4 {
+                m.reset(r, c);
+            }
+        };
+        grow(&mut self.x, max_rows, d);
+        grow(&mut self.q, max_rows, d);
+        grow(&mut self.a, max_rows, d);
+        grow(&mut self.p, max_rows, d);
+        grow(&mut self.h, max_rows, fp);
+        grow(&mut self.g, max_rows, f);
+        grow(&mut self.f, max_rows, d);
+        grow(&mut self.sub, max_rows, d);
+        grow(&mut self.logits, max_rows, cfg.vocab_size);
+        self.ensure_layers(cfg.n_layers);
+        for (k, v) in self.layer_kv.iter_mut() {
+            grow(k, max_rows, e);
+            grow(v, max_rows, e);
+        }
+        let reserve_to = |v: &mut Vec<usize>, n: usize| {
+            if v.capacity() < n {
+                v.reserve(n - v.len());
+            }
+        };
+        self.scores.reserve(cfg.max_seq_len.saturating_sub(self.scores.capacity()));
+        self.toks.reserve(max_rows.saturating_sub(self.toks.capacity()));
+        reserve_to(&mut self.rowpos, max_rows);
+        reserve_to(&mut self.dec_pos, max_rows);
+        reserve_to(&mut self.row0, max_rows);
+        reserve_to(&mut self.sel, max_rows);
+        reserve_to(&mut self.chunk_row0, max_rows);
+        if self.chunk_meta.capacity() < max_rows {
+            self.chunk_meta.reserve(max_rows - self.chunk_meta.len());
+        }
+        if self.ranges.capacity() < max_rows {
+            self.ranges.reserve(max_rows - self.ranges.len());
+        }
+        if self.tails.len() < max_rows {
+            self.tails.resize_with(max_rows, Default::default);
+        }
+        for (tk, tv) in self.tails.iter_mut() {
+            let want = (spec_k + 1) * e;
+            tk.reserve(want.saturating_sub(tk.capacity()));
+            tv.reserve(want.saturating_sub(tv.capacity()));
+        }
+    }
+
+    /// Total bytes of backing storage currently held (capacities, not
+    /// lengths) — the `alloc.arena_bytes` gauge.
+    pub fn resident_bytes(&self) -> usize {
+        let mats = [
+            &self.x, &self.q, &self.a, &self.p, &self.h, &self.g, &self.f, &self.sub,
+            &self.logits,
+        ];
+        let mut b: usize = mats.iter().map(|m| m.capacity_bytes()).sum();
+        b += self
+            .layer_kv
+            .iter()
+            .map(|(k, v)| k.capacity_bytes() + v.capacity_bytes())
+            .sum::<usize>();
+        b += self.qs.resident_bytes();
+        b += (self.scores.capacity() + self.rt_vals.capacity()) * 4;
+        b += self.toks.capacity() * 4;
+        let us = core::mem::size_of::<usize>();
+        b += (self.rowpos.capacity()
+            + self.dec_pos.capacity()
+            + self.row0.capacity()
+            + self.sel.capacity()
+            + self.chunk_row0.capacity())
+            * us;
+        b += (self.chunk_meta.capacity() + self.ranges.capacity()) * 2 * us;
+        b += self.chunk_done.capacity();
+        b += self
+            .tails
+            .iter()
+            .map(|(k, v)| (k.capacity() + v.capacity()) * 4)
+            .sum::<usize>();
+        b += self.tails.capacity() * core::mem::size_of::<(Vec<f32>, Vec<f32>)>();
+        b += self.rt_codes.capacity();
+        b += self.views.capacity() * core::mem::size_of::<BlockView<'static>>();
+        b += self.items.capacity() * core::mem::size_of::<AttnItem<'static>>();
+        b
+    }
+
+    /// Record end-of-step footprint: growth past the prior high-water mark
+    /// after the first observed step counts as a growth event (0 in steady
+    /// state — warmup growth is expected and free).
+    pub fn note_step(&mut self) {
+        let b = self.resident_bytes();
+        if self.primed && b > self.baseline {
+            self.growth_events += 1;
+        }
+        self.baseline = self.baseline.max(b);
+        self.primed = true;
+    }
+
+    /// `(arena_bytes, growth_events)` for [`AllocStats`]-style reporting.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.resident_bytes() as u64, self.growth_events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycle_keeps_capacity_and_empties() {
+        let mut v: Vec<u64> = Vec::with_capacity(37);
+        v.extend(0..10);
+        let ptr = v.as_ptr() as usize;
+        let r: Vec<u64> = recycle(v);
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.capacity(), 37);
+        assert_eq!(r.as_ptr() as usize, ptr, "allocation must be reused");
+    }
+
+    #[test]
+    fn recycle_across_lifetimes_of_block_view() {
+        // the real use: Vec<BlockView<'a>> parked as Vec<BlockView<'static>>
+        let data: Vec<f32> = vec![0.0; 8];
+        let mut v: Vec<BlockView<'_>> = Vec::with_capacity(5);
+        v.push(BlockView::F32 { data: &data, len: 1, stride: 8, e: 4 });
+        let parked: Vec<BlockView<'static>> = recycle(v);
+        assert_eq!(parked.capacity(), 5);
+        let back: Vec<BlockView<'_>> = recycle(parked);
+        assert_eq!(back.capacity(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn recycle_rejects_layout_mismatch() {
+        let v: Vec<u8> = Vec::with_capacity(4);
+        let _: Vec<u32> = recycle(v);
+    }
+
+    #[test]
+    fn note_step_counts_growth_only_after_first_step() {
+        let mut a = StepArena::new();
+        a.scores.reserve(100);
+        a.note_step(); // warmup observation: primes the baseline
+        let (_, g0) = a.stats();
+        assert_eq!(g0, 0);
+        a.note_step(); // no growth
+        assert_eq!(a.stats().1, 0);
+        a.toks.reserve(1000);
+        a.note_step(); // grew past high water after warmup
+        assert_eq!(a.stats().1, 1);
+        a.note_step();
+        assert_eq!(a.stats().1, 1);
+    }
+
+    #[test]
+    fn plan_is_idempotent_and_reserves() {
+        let cfg = crate::config::ModelConfig::tiny_gqa();
+        let mut a = StepArena::new();
+        a.plan(&cfg, 16, 3);
+        let b1 = a.resident_bytes();
+        assert!(b1 > 0);
+        assert!(a.x.capacity_bytes() >= 16 * cfg.dim * 4);
+        assert_eq!(a.layer_kv.len(), cfg.n_layers);
+        assert!(a.scores.capacity() >= cfg.max_seq_len);
+        a.plan(&cfg, 16, 3);
+        assert_eq!(a.resident_bytes(), b1, "re-planning must not grow");
+    }
+}

@@ -3,6 +3,7 @@
 //! parser, a JSON codec, PRNGs, a leveled logger, a scoped thread pool, and
 //! a micro-benchmark harness.
 
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod json;

@@ -1,0 +1,401 @@
+//! The zero-allocation steady-state contract, asserted forever.
+//!
+//! A counting `#[global_allocator]` wraps `System` and tallies every
+//! allocation in the process. After a short warmup (which is allowed — and
+//! expected — to grow the step arena to the workload's high-water shape),
+//! every steady-state engine step must perform **exactly zero** heap
+//! allocations: plain batched decode, speculative verify, and decode after
+//! chunked prefill, across {f32, int8} weights × {CpuEngine, 2-way
+//! tensor-parallel ShardedEngine}, with sampling (`sample_with` on warmed
+//! [`SamplerScratch`]) measured inside the same window.
+//!
+//! Also pinned here, as allocation regressions rather than output checks:
+//! the former hot-path clones — `Weight::proj` with an absent projection
+//! used to clone the whole input, `Weight::to_f32` on an f32 weight used to
+//! clone the matrix — must stay borrow-only (`Cow::Borrowed`).
+//!
+//! Harness notes: the counters are process-global, so every test takes one
+//! mutex (`gate`) — a measured window overlapping another test's
+//! allocations would count them. `SKIPLESS_THREADS=1` is set before any
+//! engine exists so both engines take their inline serial paths (worker
+//! threads would otherwise allocate stack/channel state out of band; the
+//! serial path is also the one whose scratch the arena owns). Block size is
+//! 64 tokens and prompts are short, so measured steps never cross a KV
+//! block boundary — block *grants* are prefill-time work, not steady state.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, MutexGuard};
+
+use skipless::config::ModelConfig;
+use skipless::coordinator::{
+    ChunkInput, CpuEngine, DecodeInput, Engine, ShardedEngine, StepOut, VerifyInput, VerifyOut,
+};
+use skipless::model::{quantize, ModelWeights, Weight};
+use skipless::sampler::{argmax, sample_with, SamplerCfg, SamplerScratch};
+use skipless::tensor::Mat;
+use skipless::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------------
+// Counting allocator
+// ---------------------------------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(l.size() as u64, Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        // a growing realloc is an allocation event for this contract
+        ALLOCS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Serialize tests (global counters) and force the serial compute paths.
+fn gate() -> MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("SKIPLESS_THREADS", "1");
+    g
+}
+
+/// `(allocations, bytes, result)` attributable to `f`.
+fn count<R>(f: impl FnOnce() -> R) -> (u64, u64, R) {
+    let a0 = ALLOCS.load(Relaxed);
+    let b0 = ALLOC_BYTES.load(Relaxed);
+    let r = f();
+    (ALLOCS.load(Relaxed) - a0, ALLOC_BYTES.load(Relaxed) - b0, r)
+}
+
+/// The harness must be able to see allocations at all, or every zero below
+/// is vacuous.
+#[test]
+fn counting_allocator_is_wired() {
+    let _g = gate();
+    let (a, b, v) = count(|| Vec::<u64>::with_capacity(100));
+    assert!(a >= 1, "allocation not observed");
+    assert!(b >= 800, "allocation bytes not observed (got {b})");
+    drop(v);
+}
+
+// ---------------------------------------------------------------------------
+// Matrix cells
+// ---------------------------------------------------------------------------
+
+const BLOCK_TOKENS: usize = 64;
+const BUDGET: usize = 16 << 20;
+const WARMUP: usize = 3;
+const MEASURE: usize = 4;
+
+fn weights(int8: bool) -> ModelWeights {
+    let w = ModelWeights::init_vanilla(&ModelConfig::tiny_gqa(), 4242);
+    if int8 {
+        quantize(&w)
+    } else {
+        w
+    }
+}
+
+fn sampler_cfg() -> SamplerCfg {
+    // temperature + top-k + top-p: the full dist_into pipeline, including
+    // the partition-based top-k path, runs inside the measured window
+    SamplerCfg { temperature: 0.9, top_k: 16, top_p: 0.95 }
+}
+
+/// Batched plain decode: prefill two prompts, warm up, then assert every
+/// further fused step AND both sampler draws allocate nothing. A twin
+/// engine stepping through the allocating `step_batch` API pins
+/// bit-identity of the `_into` path on the same token stream.
+fn plain_decode_cell<E: Engine, T: Engine>(mut engine: E, mut twin: T, tag: &str) {
+    engine.plan_alloc(4, 3);
+    let vocab = 256u32;
+    let p0: Vec<u32> = (0..9).map(|i| (i * 13 + 5) % vocab).collect();
+    let p1: Vec<u32> = (0..7).map(|i| (i * 29 + 3) % vocab).collect();
+    let (s0, l0) = engine.prefill(&p0).unwrap();
+    let (s1, l1) = engine.prefill(&p1).unwrap();
+    let (t0, tl0) = twin.prefill(&p0).unwrap();
+    let (t1, tl1) = twin.prefill(&p1).unwrap();
+    assert_eq!(l0, tl0, "{tag}: prefill logits diverge");
+    assert_eq!(l1, tl1, "{tag}: prefill logits diverge");
+
+    let cfg = sampler_cfg();
+    let mut rng = Xoshiro256::seed_from_u64(0xa110c);
+    let mut scratch = SamplerScratch::new();
+    let mut out = StepOut::default();
+    let mut toks = [argmax(&l0), argmax(&l1)];
+
+    for step in 0..WARMUP + MEASURE {
+        let inputs =
+            [DecodeInput { seq: s0, token: toks[0] }, DecodeInput { seq: s1, token: toks[1] }];
+        if step < WARMUP {
+            engine.step_batch_into(&inputs, &[], &mut out).unwrap();
+        } else {
+            let (a, b, r) = count(|| engine.step_batch_into(&inputs, &[], &mut out));
+            r.unwrap();
+            assert_eq!(
+                (a, b),
+                (0, 0),
+                "{tag}: step {step} allocated {a} times / {b} bytes in steady state"
+            );
+        }
+        // allocating twin on the same tokens: rows must match to the bit
+        let twin_inputs =
+            [DecodeInput { seq: t0, token: toks[0] }, DecodeInput { seq: t1, token: toks[1] }];
+        let tr = twin.step_batch(&twin_inputs, &[]).unwrap();
+        for (r, row) in tr.decode_logits.iter().enumerate() {
+            let bits: Vec<u32> = out.decode_logits.row(r).iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits, want, "{tag}: step {step} row {r} diverges from step_batch");
+        }
+        for (r, t) in toks.iter_mut().enumerate() {
+            let row = out.decode_logits.row(r);
+            if step < WARMUP {
+                *t = sample_with(row, &cfg, &mut rng, &mut scratch);
+            } else {
+                let (a, _, tok) = count(|| sample_with(row, &cfg, &mut rng, &mut scratch));
+                assert_eq!(a, 0, "{tag}: sampler allocated at step {step} row {r}");
+                *t = tok;
+            }
+        }
+    }
+
+    let stats = engine.alloc_stats().expect("arena engines report alloc stats");
+    assert!(stats.arena_bytes > 0, "{tag}: arena not warm after decode");
+    engine.release(s0);
+    engine.release(s1);
+    twin.release(t0);
+    twin.release(t1);
+}
+
+#[test]
+fn plain_decode_steady_state_allocates_zero() {
+    let _g = gate();
+    for int8 in [false, true] {
+        let w = weights(int8);
+        plain_decode_cell(
+            CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET),
+            CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET),
+            if int8 { "cpu/int8" } else { "cpu/f32" },
+        );
+        plain_decode_cell(
+            ShardedEngine::new(w.clone(), 2, BLOCK_TOKENS, BUDGET).unwrap(),
+            ShardedEngine::new(w, 2, BLOCK_TOKENS, BUDGET).unwrap(),
+            if int8 { "tp2/int8" } else { "tp2/f32" },
+        );
+    }
+}
+
+/// Speculative steady state: a widened verify step over a fixed draft,
+/// rolled back each round (the reject-everything worst case, so positions
+/// never advance and every round replays the same shapes). After warmup the
+/// verify step itself must allocate nothing; the rollback `truncate` runs
+/// outside the window (block frees are not steady-state decode work).
+fn spec_verify_cell<E: Engine>(mut engine: E, tag: &str) {
+    engine.plan_alloc(4, 3);
+    let prompt = vec![3u32, 1, 4, 1, 5, 9, 2, 6];
+    let (seq, _) = engine.prefill(&prompt).unwrap();
+    let base_len = prompt.len();
+    let inputs = [VerifyInput { seq, tokens: vec![7, 8, 9, 10] }];
+    let mut out = VerifyOut::default();
+
+    let mut golden: Vec<Vec<u32>> = Vec::new();
+    for round in 0..WARMUP + MEASURE {
+        if round < WARMUP {
+            engine.verify_batch_into(&inputs, &mut out).unwrap();
+        } else {
+            let (a, b, r) = count(|| engine.verify_batch_into(&inputs, &mut out));
+            r.unwrap();
+            assert_eq!(
+                (a, b),
+                (0, 0),
+                "{tag}: verify round {round} allocated {a} times / {b} bytes"
+            );
+        }
+        // every round replays the same positions with the same tokens, so
+        // the rows must be byte-stable across rounds — rollback is clean
+        let rows: Vec<Vec<u32>> = (0..inputs[0].tokens.len())
+            .map(|r| out.rows.row(out.row0[0] + r).iter().map(|v| v.to_bits()).collect())
+            .collect();
+        if round == 0 {
+            golden = rows;
+        } else {
+            assert_eq!(golden, rows, "{tag}: verify rows drifted at round {round}");
+        }
+        engine.truncate(seq, base_len).unwrap();
+    }
+    engine.release(seq);
+}
+
+#[test]
+fn speculative_verify_steady_state_allocates_zero() {
+    let _g = gate();
+    for int8 in [false, true] {
+        let w = weights(int8);
+        spec_verify_cell(
+            CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET),
+            if int8 { "cpu/int8" } else { "cpu/f32" },
+        );
+        spec_verify_cell(
+            ShardedEngine::new(w, 2, BLOCK_TOKENS, BUDGET).unwrap(),
+            if int8 { "tp2/int8" } else { "tp2/f32" },
+        );
+    }
+}
+
+/// Chunked-prefill admission, then steady decode: the chunk-carrying steps
+/// may allocate (chunk completions return owned rows by contract — they are
+/// admission work, not steady state); the pure decode steps that follow
+/// must not.
+fn chunked_then_decode_cell<E: Engine>(mut engine: E, tag: &str) {
+    engine.plan_alloc(8, 0);
+    let vocab = 256u32;
+    let prompt: Vec<u32> = (0..11).map(|i| (i * 7 + 2) % vocab).collect();
+    let (seq, filled) = engine.prefill_begin(&prompt).unwrap();
+    assert_eq!(filled, 0, "{tag}: cold start");
+    let mut out = StepOut::default();
+    let mut last = None;
+    for chunk in [&prompt[0..3], &prompt[3..8], &prompt[8..11]] {
+        let chunks = [ChunkInput { seq, tokens: chunk.to_vec() }];
+        engine.step_batch_into(&[], &chunks, &mut out).unwrap();
+        if let Some(row) = out.chunk_logits.first().and_then(|c| c.as_deref()) {
+            last = Some(argmax(row));
+        }
+    }
+    let mut tok = last.expect("final chunk completes the prompt");
+
+    for step in 0..WARMUP + MEASURE {
+        let inputs = [DecodeInput { seq, token: tok }];
+        if step < WARMUP {
+            engine.step_batch_into(&inputs, &[], &mut out).unwrap();
+        } else {
+            let (a, b, r) = count(|| engine.step_batch_into(&inputs, &[], &mut out));
+            r.unwrap();
+            assert_eq!(
+                (a, b),
+                (0, 0),
+                "{tag}: post-chunk decode step {step} allocated {a} times / {b} bytes"
+            );
+        }
+        tok = argmax(out.decode_logits.row(0));
+    }
+    engine.release(seq);
+}
+
+#[test]
+fn decode_after_chunked_prefill_allocates_zero() {
+    let _g = gate();
+    for int8 in [false, true] {
+        let w = weights(int8);
+        chunked_then_decode_cell(
+            CpuEngine::new(w.clone(), BLOCK_TOKENS, BUDGET),
+            if int8 { "cpu/int8" } else { "cpu/f32" },
+        );
+        chunked_then_decode_cell(
+            ShardedEngine::new(w, 2, BLOCK_TOKENS, BUDGET).unwrap(),
+            if int8 { "tp2/int8" } else { "tp2/f32" },
+        );
+    }
+}
+
+/// The arena's growth gauge must agree with the allocator: once warmed, a
+/// long decode run records zero growth events past the warmup high water.
+#[test]
+fn growth_gauge_stays_flat_in_steady_state() {
+    let _g = gate();
+    let w = weights(false);
+    let mut engine = CpuEngine::new(w, BLOCK_TOKENS, BUDGET);
+    engine.plan_alloc(2, 0);
+    let (seq, l0) = engine.prefill(&[5, 3, 8, 250, 11]).unwrap();
+    let mut tok = argmax(&l0);
+    let mut out = StepOut::default();
+    for _ in 0..WARMUP {
+        engine.step_batch_into(&[DecodeInput { seq, token: tok }], &[], &mut out).unwrap();
+        tok = argmax(out.decode_logits.row(0));
+    }
+    let g0 = engine.alloc_stats().unwrap().growth_events;
+    for _ in 0..2 * MEASURE {
+        engine.step_batch_into(&[DecodeInput { seq, token: tok }], &[], &mut out).unwrap();
+        tok = argmax(out.decode_logits.row(0));
+    }
+    let s1 = engine.alloc_stats().unwrap();
+    assert_eq!(s1.growth_events, g0, "arena grew after warmup");
+    assert!(s1.arena_bytes > 0);
+    engine.release(seq);
+}
+
+// ---------------------------------------------------------------------------
+// Satellite regressions: the former hot-path clones
+// ---------------------------------------------------------------------------
+
+/// `Weight::proj` with an absent projection used to clone the entire input
+/// matrix (and `Weight::to_f32` on f32 weights cloned the weight). Both are
+/// borrow-only now; this pins it at the allocator level.
+#[test]
+fn weight_proj_identity_and_f32_view_do_not_allocate() {
+    let _g = gate();
+    let mut rng = Xoshiro256::seed_from_u64(0xc10e);
+    let x = Mat::randn(6, 64, 0.5, &mut rng);
+    let wf = Weight::F32(Mat::randn(64, 64, 0.05, &mut rng));
+
+    let (a, b, cow) = count(|| Weight::proj(&x, &None));
+    assert!(matches!(cow, std::borrow::Cow::Borrowed(_)), "identity proj must borrow");
+    assert_eq!((a, b), (0, 0), "identity proj allocated ({a} allocs, {b} bytes)");
+    assert_eq!(cow.as_slice().as_ptr(), x.as_slice().as_ptr(), "borrow must alias the input");
+
+    let (a, b, cow) = count(|| wf.to_f32());
+    assert!(matches!(cow, std::borrow::Cow::Borrowed(_)), "f32 view must borrow");
+    assert_eq!((a, b), (0, 0), "to_f32 on F32 allocated ({a} allocs, {b} bytes)");
+}
+
+/// `sample_with` on a warmed scratch is allocation-free across every
+/// sampler mode (greedy short-circuit, plain temperature, top-k partition,
+/// nucleus truncation, combined).
+#[test]
+fn sampler_modes_allocate_zero_after_warmup() {
+    let _g = gate();
+    let mut rng = Xoshiro256::seed_from_u64(0x5a3);
+    let logits = Mat::randn(1, 256, 1.2, &mut rng);
+    let row = logits.row(0);
+    let modes = [
+        SamplerCfg { temperature: 0.0, top_k: 0, top_p: 1.0 },
+        SamplerCfg { temperature: 1.0, top_k: 0, top_p: 1.0 },
+        SamplerCfg { temperature: 0.8, top_k: 12, top_p: 1.0 },
+        SamplerCfg { temperature: 0.8, top_k: 0, top_p: 0.7 },
+        SamplerCfg { temperature: 0.8, top_k: 40, top_p: 0.9 },
+    ];
+    let mut scratch = SamplerScratch::new();
+    // warmup: largest candidate table first, then every mode once
+    sample_with(row, &modes[1], &mut rng, &mut scratch);
+    for cfg in &modes {
+        sample_with(row, cfg, &mut rng, &mut scratch);
+    }
+    for (i, cfg) in modes.iter().enumerate() {
+        for draw in 0..8 {
+            let (a, _, _) = count(|| sample_with(row, cfg, &mut rng, &mut scratch));
+            assert_eq!(a, 0, "mode {i} draw {draw} allocated");
+        }
+    }
+}

@@ -21,9 +21,10 @@
 use skipless::config::ModelConfig;
 use skipless::kvcache::{BlockView, CacheOpts, KvCache, SeqId};
 use skipless::linalg::gemm::{
-    matmul_into_with, matmul_ref, matmul_transb_ref, matmul_transb_with, matvec_ref, matvec_with,
+    matmul, matmul_into, matmul_into_with, matmul_ref, matmul_transb, matmul_transb_into,
+    matmul_transb_ref, matmul_transb_with, matvec, matvec_into, matvec_ref, matvec_with,
 };
-use skipless::linalg::qgemm::{qmatmul_ref, qmatmul_with};
+use skipless::linalg::qgemm::{qmatmul, qmatmul_into, qmatmul_ref, qmatmul_with, QuantScratch};
 use skipless::linalg::simd::{self, SimdLevel, LANES};
 use skipless::model::attention::HeadLayout;
 use skipless::model::paged_attn::{attend_gathered, attend_paged, KvSegment};
@@ -301,6 +302,65 @@ fn fuzz_random_shapes_byte_equal() {
         eprintln!("fuzz seed={seed} m={m} n={n} k={k}");
         check_f32_shape(m, n, k, &mut rng);
         check_q_shape(m, n, k, &mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `_into` twins: the arena-facing kernels vs their allocating forms
+// ---------------------------------------------------------------------------
+
+/// Every `_into` kernel must be byte-equal to its allocating twin across
+/// the full dimension sweep — with ONE persistent output/scratch set reused
+/// for the whole sweep. The buffers start poisoned with NaN and then carry
+/// whatever the previous (differently-shaped) iteration left behind, so any
+/// read-before-write, stale-shape, or accumulate-into-garbage bug in the
+/// reuse path changes bits and fails. This is exactly the step arena's
+/// aliasing-adjacent reuse pattern (`util::arena`).
+#[test]
+fn into_variants_byte_equal_allocating_twins_on_dirty_scratch() {
+    let mut rng = Xoshiro256::seed_from_u64(0x17e0);
+    let mut o_mm = Mat::zeros(2, 2);
+    let mut o_tb = Mat::zeros(2, 2);
+    let mut o_q = Mat::zeros(2, 2);
+    let mut o_mv: Vec<f32> = vec![f32::NAN; 7];
+    let mut qs = QuantScratch::new();
+    for o in [&mut o_mm, &mut o_tb, &mut o_q] {
+        o.as_mut_slice().fill(f32::NAN);
+    }
+
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
+    for &m in SMALL {
+        for &n in SMALL {
+            for &k in SMALL {
+                shapes.push((m, n, k));
+            }
+        }
+    }
+    shapes.extend_from_slice(TILED);
+
+    for (m, n, k) in shapes {
+        let tag = format!("m={m} n={n} k={k}");
+        let a = Mat::randn(m, k, 0.7, &mut rng);
+        let b = Mat::randn(k, n, 0.7, &mut rng);
+        let bt = b.transpose();
+        let x: Vec<f32> = a.row(0).to_vec();
+        let w = QMat::quantize_rows(&Mat::randn(n, k, 0.05, &mut rng));
+
+        matmul_into(&a, &b, &mut o_mm);
+        assert_eq!(bits(o_mm.as_slice()), bits(matmul(&a, &b).as_slice()), "matmul_into {tag}");
+
+        matmul_transb_into(&a, &bt, &mut o_tb);
+        assert_eq!(
+            bits(o_tb.as_slice()),
+            bits(matmul_transb(&a, &bt).as_slice()),
+            "matmul_transb_into {tag}"
+        );
+
+        matvec_into(&a, &x, &mut o_mv);
+        assert_eq!(bits(&o_mv), bits(&matvec(&a, &x)), "matvec_into {tag}");
+
+        qmatmul_into(&a, &w, &mut qs, &mut o_q);
+        assert_eq!(bits(o_q.as_slice()), bits(qmatmul(&a, &w).as_slice()), "qmatmul_into {tag}");
     }
 }
 
